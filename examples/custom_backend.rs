@@ -1,0 +1,84 @@
+//! Paper §5.2.4 reproduced as a runnable artifact: swap the **source of
+//! truth for `add`** behind the small backend API and watch every derived
+//! operator, model, and baseline in the framework pick it up with zero
+//! call-site changes — then do the same with the deferred (lazy) and
+//! AOT (XLA) backends to demonstrate Figure 2's computation-mode freedom.
+//!
+//! Run: `cargo run --release --example custom_backend`
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use flashlight::autograd::Variable;
+use flashlight::models::mlp;
+use flashlight::nn::Module;
+use flashlight::tensor::cpu::CpuBackend;
+use flashlight::tensor::delegate::DelegateBackend;
+use flashlight::tensor::lazy::{pending_ops, LazyBackend};
+use flashlight::tensor::{BackendGuard, Tensor, TensorBackend};
+
+/// A research backend that replaces `add` (here: counting + delegating;
+/// a real project would plug in its novel element-wise implementation).
+struct CustomAdd {
+    inner: Arc<dyn TensorBackend>,
+    adds: AtomicU64,
+}
+
+impl DelegateBackend for CustomAdd {
+    fn inner(&self) -> Arc<dyn TensorBackend> {
+        self.inner.clone()
+    }
+    fn wrapper_name(&self) -> &str {
+        "custom-add"
+    }
+    fn add(&self, a: &Tensor, b: &Tensor) -> Tensor {
+        self.adds.fetch_add(1, Ordering::Relaxed);
+        // ... novel element-wise implementation goes here ...
+        self.inner.add(a, b)
+    }
+}
+
+fn main() {
+    // 1) swap the default backend — one line, whole framework retargets
+    let be = Arc::new(CustomAdd { inner: CpuBackend::shared(), adds: AtomicU64::new(0) });
+    {
+        let _guard = BackendGuard::install(be.clone());
+        // an existing model, untouched: every add (bias adds, residuals,
+        // gelu composition, autograd accumulation) hits the custom op
+        let model = mlp(&[32, 64, 64, 10]);
+        let x = Variable::constant(Tensor::rand([8, 32], -1.0, 1.0));
+        let y = model.forward(&x);
+        flashlight::autograd::ops::sum(&y, &[], false).backward();
+        let n = be.adds.load(Ordering::Relaxed);
+        println!("custom `add` dispatched {n} times through an unmodified MLP fwd+bwd");
+        // 3 bias adds forward + gradient accumulation on the backward pass
+        assert!(n >= 3, "custom add was bypassed (n={n})");
+    }
+
+    // 2) same model on the deferred backend: ops queue until materialized
+    {
+        let _guard = BackendGuard::install(LazyBackend::shared());
+        let a = Tensor::rand([64, 64], -1.0, 1.0);
+        let expr = a.add(&a).tanh().mul(&a).sub(&a).exp();
+        println!("lazy backend: {} ops pending before materialization", pending_ops(&expr));
+        assert!(pending_ops(&expr) >= 5);
+        let v = expr.to_vec(); // forces fused evaluation
+        println!("materialized {} values in one fused pass", v.len());
+    }
+
+    // 3) and on the AOT/XLA backend: hot matmuls run as PJRT executables
+    match flashlight::tensor::xla_backend::XlaBackend::from_global_runtime() {
+        Some(xla) => {
+            let _guard = BackendGuard::install(xla.clone());
+            let x = Tensor::rand([32, 256], -1.0, 1.0);
+            let w = Tensor::rand([256, 256], -1.0, 1.0);
+            let _ = x.matmul(&w);
+            let (off, fall) = xla.counts();
+            println!("xla-aot backend: {off} ops offloaded to PJRT, {fall} fell back");
+            assert!(off >= 1);
+        }
+        None => println!("(artifacts/ not built — skipping the AOT backend demo)"),
+    }
+
+    println!("custom_backend OK — three computation modes behind one API");
+}

@@ -1,0 +1,129 @@
+//! Data-parallel training over the open `DistributedInterface`
+//! (paper §4.1.3 / §A.4.1): 4 worker threads, each with a model replica,
+//! parameters broadcast from rank 0, gradients averaged with the chunked
+//! ring all-reduce after every step. Verifies replicas remain bitwise
+//! synchronized and that the synchronized run matches a single-worker run
+//! on the combined batch.
+//!
+//! Run: `cargo run --release --example distributed_training`
+
+use std::sync::Arc;
+
+use flashlight::autograd::Variable;
+use flashlight::dist::{init_ring, DistributedInterface, GradientSynchronizer};
+use flashlight::models::mlp;
+use flashlight::nn::{categorical_cross_entropy, Module};
+use flashlight::optim::{Optimizer, SGDOptimizer};
+use flashlight::tensor::{DType, Tensor};
+
+const WORKERS: usize = 4;
+const DIM: usize = 32;
+const CLASSES: usize = 4;
+const STEPS: usize = 10;
+
+fn shard(rank: usize) -> (Tensor, Tensor) {
+    // explicit per-rank generator: identical shards regardless of which
+    // thread (worker vs sequential-replay) materializes them
+    let mut rng = flashlight::util::rng::Rng::new(1000 + rank as u64);
+    let xs: Vec<f32> = (0..8 * DIM).map(|_| rng.uniform_range(-1.0, 1.0) as f32).collect();
+    let ys: Vec<i64> = (0..8).map(|_| rng.below(CLASSES) as i64).collect();
+    (
+        Tensor::from_slice(&xs, [8, DIM]),
+        Tensor::from_slice(&ys, [8]).astype(DType::I64),
+    )
+}
+
+fn main() {
+    // ---- distributed run -------------------------------------------------
+    let workers = init_ring(WORKERS);
+    let mut handles = Vec::new();
+    for w in workers {
+        handles.push(std::thread::spawn(move || {
+            let rank = w.world_rank();
+            flashlight::util::rng::seed(42 + rank as u64); // divergent inits
+            let model = mlp(&[DIM, 16, CLASSES]);
+            let dist: Arc<dyn DistributedInterface + Sync> = Arc::new(w);
+            // broadcast rank-0 parameters so replicas start identical
+            for p in model.params() {
+                p.set_tensor(dist.broadcast(&p.tensor(), 0));
+            }
+            let init_params: Vec<Vec<f32>> =
+                model.params().iter().map(|p| p.tensor().to_vec()).collect();
+            let sync = GradientSynchronizer::new(dist.clone());
+            let mut opt = SGDOptimizer::new(model.params(), 0.1);
+            let (x, y) = shard(rank);
+            let mut losses = Vec::new();
+            for _ in 0..STEPS {
+                let out = model.forward(&Variable::constant(x.clone()));
+                let loss = categorical_cross_entropy(&out, &y);
+                losses.push(loss.tensor().item());
+                loss.backward();
+                sync.synchronize(&opt.params().to_vec());
+                opt.step();
+                opt.zero_grad();
+            }
+            let params: Vec<Vec<f32>> =
+                model.params().iter().map(|p| p.tensor().to_vec()).collect();
+            (rank, losses, params, init_params)
+        }));
+    }
+    let mut results: Vec<(usize, Vec<f64>, Vec<Vec<f32>>, Vec<Vec<f32>>)> =
+        handles.into_iter().map(|h| h.join().unwrap()).collect();
+    results.sort_by_key(|r| r.0);
+
+    for (rank, losses, _, _) in &results {
+        println!(
+            "worker {rank}: loss {:.4} -> {:.4}",
+            losses.first().unwrap(),
+            losses.last().unwrap()
+        );
+    }
+
+    // replicas must be exactly synchronized after training
+    let reference = &results[0].2;
+    for (rank, _, params, _) in &results[1..] {
+        for (a, b) in reference.iter().zip(params) {
+            let max_diff = a
+                .iter()
+                .zip(b)
+                .map(|(x, y)| (x - y).abs())
+                .fold(0.0f32, f32::max);
+            assert!(max_diff < 1e-5, "worker {rank} diverged by {max_diff}");
+        }
+    }
+    println!("all {WORKERS} replicas bitwise-synchronized after {STEPS} steps");
+
+    // ---- equivalence with single-worker training on the combined batch ---
+    // replay from rank 0's exact broadcast initialization (thread-local
+    // RNG stream assignment is racy across workers, so re-seeding alone
+    // would not reproduce the same init)
+    let model = mlp(&[DIM, 16, CLASSES]);
+    for (p, init) in model.params().iter().zip(&results[0].3) {
+        p.set_tensor(Tensor::from_slice(init, p.dims()));
+    }
+    let mut opt = SGDOptimizer::new(model.params(), 0.1);
+    let shards: Vec<(Tensor, Tensor)> = (0..WORKERS).map(shard).collect();
+    for _ in 0..STEPS {
+        // average of per-shard gradients == gradient of the mean loss
+        for p in model.params() {
+            p.zero_grad();
+        }
+        for (x, y) in &shards {
+            let out = model.forward(&Variable::constant(x.clone()));
+            let loss = categorical_cross_entropy(&out, y);
+            // scale each shard's loss by 1/WORKERS to mirror grad averaging
+            flashlight::autograd::ops::mul_scalar(&loss, 1.0 / WORKERS as f64).backward();
+        }
+        opt.step();
+    }
+    let seq_params: Vec<Vec<f32>> = model.params().iter().map(|p| p.tensor().to_vec()).collect();
+    let mut worst = 0.0f32;
+    for (a, b) in reference.iter().zip(&seq_params) {
+        for (x, y) in a.iter().zip(b) {
+            worst = worst.max((x - y).abs());
+        }
+    }
+    println!("distributed vs sequential parameter divergence: {worst:.2e}");
+    assert!(worst < 1e-3, "ring training != sequential training ({worst})");
+    println!("distributed_training OK");
+}

@@ -1,0 +1,139 @@
+//! Paper §5.2.2 reproduced: install a telemetry-wrapped caching memory
+//! manager, run real model training to capture an op-attributed allocation
+//! trace, then replay the identical trace through the unrestricted vs
+//! split-restricted caching managers and report the fragmentation delta
+//! (the paper's researchers saw >20% internal-fragmentation reduction).
+//!
+//! Run: `cargo run --release --example fragmentation`
+
+use std::sync::Arc;
+
+use flashlight::autograd::Variable;
+use flashlight::memory::{
+    self, CachingMemoryManager, DefaultMemoryManager, TelemetryMemoryManager,
+};
+use flashlight::models::{alexnet, BertLike};
+use flashlight::nn::{categorical_cross_entropy, Module};
+use flashlight::optim::{AdamOptimizer, Optimizer};
+use flashlight::tensor::{DType, Tensor};
+
+fn capture_trace(label: &str, steps: usize, mut run_step: impl FnMut()) -> Vec<memory::AllocEvent> {
+    let telemetry = Arc::new(TelemetryMemoryManager::new(Arc::new(DefaultMemoryManager::new())));
+    let prev = memory::install(telemetry.clone());
+    for _ in 0..steps {
+        run_step();
+    }
+    if let Some(p) = prev {
+        memory::install(p);
+    }
+    let trace = telemetry.trace();
+    println!("{label}: captured {} allocator events", trace.len());
+    println!("  top ops by allocated bytes:");
+    for (op, n, bytes) in telemetry.by_op().into_iter().take(5) {
+        println!("    {op:<16} {n:>6} allocs  {:>10.1} KiB", bytes as f64 / 1024.0);
+    }
+    trace
+}
+
+fn replay_and_report(label: &str, trace: &[memory::AllocEvent]) -> (f64, f64) {
+    let unrestricted = CachingMemoryManager::unrestricted();
+    let (_, frag_u) = memory::telemetry::replay(trace, &unrestricted);
+    let restricted = CachingMemoryManager::split_restricted(4 << 20); // 4 MiB
+    let (_, frag_r) = memory::telemetry::replay(trace, &restricted);
+    let delta = (frag_u - frag_r) / frag_u.max(1e-9) * 100.0;
+    println!(
+        "{label}: peak fragmentation {:.1}% (unrestricted) -> {:.1}% (split<=4MiB), reduction {delta:.0}%",
+        frag_u * 100.0,
+        frag_r * 100.0
+    );
+    (frag_u, frag_r)
+}
+
+/// Large-activation churn trace (GPU-scale buffer sizes — the regime the
+/// paper's case study targets; our CPU-scaled models only allocate a few
+/// MB, which stay in the small pool where splitting is always safe).
+fn large_activation_trace(steps: usize) -> Vec<memory::AllocEvent> {
+    use flashlight::util::rng::Rng;
+    let mut rng = Rng::new(42);
+    let (mut events, mut id) = (Vec::new(), 0u64);
+    let mut retained: Vec<u64> = Vec::new();
+    for _ in 0..steps {
+        let mut step_ids = Vec::new();
+        for _ in 0..6 {
+            let mb = 8 + rng.below(56);
+            events.push(memory::AllocEvent {
+                kind: memory::EventKind::Alloc,
+                bytes: mb << 20,
+                id,
+                op: "activation",
+            });
+            step_ids.push(id);
+            id += 1;
+        }
+        let keep = step_ids[rng.below(step_ids.len())];
+        for s in step_ids {
+            if s != keep {
+                events.push(memory::AllocEvent {
+                    kind: memory::EventKind::Free,
+                    bytes: 0,
+                    id: s,
+                    op: "activation",
+                });
+            } else {
+                retained.push(s);
+            }
+        }
+        if retained.len() > 3 {
+            let victim = retained.remove(0);
+            events.push(memory::AllocEvent {
+                kind: memory::EventKind::Free,
+                bytes: 0,
+                id: victim,
+                op: "activation",
+            });
+        }
+    }
+    events
+}
+
+fn main() {
+    flashlight::util::rng::seed(11);
+
+    // 1) transformer training trace
+    let bert = BertLike::new(200, 64, 4, 1, 17);
+    let ids = Tensor::rand([4, 17], 0.0, 200.0).astype(DType::I64);
+    let mut opt = AdamOptimizer::new(bert.params(), 1e-3);
+    let t1 = capture_trace("bert-like training", 3, || {
+        let loss = flashlight::models::bert::lm_loss(&bert, &ids);
+        loss.backward();
+        opt.step();
+        opt.zero_grad();
+    });
+
+    // 2) CNN training trace
+    let cnn = alexnet(10);
+    let x = Tensor::rand([4, 3, 32, 32], -1.0, 1.0);
+    let y = Tensor::rand([4], 0.0, 10.0).astype(DType::I64);
+    let mut copt = AdamOptimizer::new(cnn.params(), 1e-3);
+    let t2 = capture_trace("alexnet training", 2, || {
+        let out = cnn.forward(&Variable::constant(x.clone()));
+        let loss = categorical_cross_entropy(&out, &y);
+        loss.backward();
+        copt.step();
+        copt.zero_grad();
+    });
+
+    println!();
+    let (u1, r1) = replay_and_report("bert-like", &t1);
+    let (u2, r2) = replay_and_report("alexnet ", &t2);
+    let t3 = large_activation_trace(40);
+    let (u3, r3) = replay_and_report("large-activation churn", &t3);
+    assert!(r1 <= u1 + 1e-9 && r2 <= u2 + 1e-9 && r3 <= u3 + 1e-9);
+
+    let reduction = (u3 - r3) / u3.max(1e-9) * 100.0;
+    println!(
+        "\nlarge-pool fragmentation reduction: {reduction:.0}% (paper reports >20%; \
+         the scaled models' traces live in the always-splittable small pool)"
+    );
+    println!("fragmentation OK");
+}

@@ -1,0 +1,90 @@
+//! Paper §5.2.3: "tensors can follow any preordained allocation schedule
+//! or rules ... sharded or computations dispatched to arbitrary devices".
+//!
+//! This demo builds a ZeRO-style optimizer-state sharding schedule over the
+//! open memory + distributed interfaces: each of 4 workers *owns* 1/4 of
+//! the parameters' optimizer state, updates its shard locally, and
+//! broadcasts the refreshed parameters — cutting per-worker optimizer-state
+//! memory 4× while producing updates identical to the unsharded run.
+//!
+//! Run: `cargo run --release --example offload_schedule`
+
+use flashlight::dist::{init_ring, DistributedInterface};
+use flashlight::tensor::Tensor;
+
+const WORLD: usize = 4;
+const N_PARAMS: usize = 8;
+const DIM: usize = 64;
+
+fn main() {
+    flashlight::util::rng::seed(31);
+    // shared "model": N parameter tensors + fixed per-step gradients
+    let init: Vec<Vec<f32>> = (0..N_PARAMS).map(|_| Tensor::rand([DIM], -1.0, 1.0).to_vec()).collect();
+    let grads: Vec<Vec<f32>> = (0..N_PARAMS).map(|_| Tensor::rand([DIM], -0.1, 0.1).to_vec()).collect();
+
+    // ---- unsharded reference: every worker keeps full momentum state ----
+    let lr = 0.1f32;
+    let beta = 0.9f32;
+    let mut ref_params = init.clone();
+    let mut momentum = vec![vec![0.0f32; DIM]; N_PARAMS];
+    for _step in 0..5 {
+        for p in 0..N_PARAMS {
+            for i in 0..DIM {
+                momentum[p][i] = beta * momentum[p][i] + grads[p][i];
+                ref_params[p][i] -= lr * momentum[p][i];
+            }
+        }
+    }
+
+    // ---- ZeRO-style sharded run over the distributed interface ----------
+    let workers = init_ring(WORLD);
+    let mut handles = Vec::new();
+    for w in workers {
+        let init = init.clone();
+        let grads = grads.clone();
+        handles.push(std::thread::spawn(move || {
+            let rank = w.world_rank();
+            let mut params = init;
+            // preordained schedule: worker r owns optimizer state for
+            // params p with p % WORLD == r (the paper's "any preordained
+            // allocation schedule")
+            let owned: Vec<usize> = (0..N_PARAMS).filter(|p| p % WORLD == rank).collect();
+            let mut my_momentum: Vec<Vec<f32>> = owned.iter().map(|_| vec![0.0; DIM]).collect();
+            let state_bytes = my_momentum.len() * DIM * 4;
+            for _step in 0..5 {
+                // each worker updates only its owned shard...
+                for (slot, &p) in owned.iter().enumerate() {
+                    for i in 0..DIM {
+                        my_momentum[slot][i] = 0.9 * my_momentum[slot][i] + grads[p][i];
+                        params[p][i] -= 0.1 * my_momentum[slot][i];
+                    }
+                }
+                // ...then every param is broadcast from its owner
+                for p in 0..N_PARAMS {
+                    let owner = p % WORLD;
+                    let t = Tensor::from_slice(&params[p], [DIM]);
+                    params[p] = w.broadcast(&t, owner).to_vec();
+                }
+            }
+            (rank, state_bytes, params)
+        }));
+    }
+    let results: Vec<(usize, usize, Vec<Vec<f32>>)> =
+        handles.into_iter().map(|h| h.join().unwrap()).collect();
+
+    let full_state = N_PARAMS * DIM * 4;
+    for (rank, bytes, params) in &results {
+        let mut worst = 0.0f32;
+        for (a, b) in params.iter().zip(&ref_params) {
+            for (x, y) in a.iter().zip(b) {
+                worst = worst.max((x - y).abs());
+            }
+        }
+        println!(
+            "worker {rank}: optimizer state {bytes} B ({}x reduction), divergence {worst:.2e}",
+            full_state / bytes
+        );
+        assert!(worst < 1e-5, "sharded update diverged");
+    }
+    println!("offload_schedule OK — sharded schedule matches unsharded updates exactly");
+}

@@ -1,0 +1,137 @@
+//! Quickstart: the paper's Appendix A.4.3 MNIST walkthrough, end to end —
+//! `BatchDataset` over held-out splits (Listing 7), the exact `Sequential`
+//! CNN of Listing 8, the training loop of Listing 9, and the eval loop of
+//! Listing 10 — on a synthetic MNIST-like dataset (no network access on
+//! this testbed).
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use std::sync::Arc;
+
+use flashlight::autograd::Variable;
+use flashlight::data::{BatchDataset, Dataset, TensorDataset};
+use flashlight::meter::{AverageValueMeter, FrameErrorMeter};
+use flashlight::nn::conv::Padding;
+use flashlight::nn::{
+    categorical_cross_entropy, Conv2D, Dropout, Linear, LogSoftmax, Module, Pool2D, ReLU,
+    Sequential, View,
+};
+use flashlight::optim::{Optimizer, SGDOptimizer};
+use flashlight::tensor::{index::range, index::span, DType, Tensor};
+use flashlight::util::rng::Rng;
+
+const K_IMAGE_DIM: usize = 16; // scaled from 28 for CPU speed
+const K_CLASSES: usize = 10;
+
+/// Synthetic MNIST stand-in: each class is a distinct stroke pattern plus
+/// noise (separable but non-trivial).
+fn load_dataset(n: usize, seed: u64) -> (Tensor, Tensor) {
+    let mut rng = Rng::new(seed);
+    let d = K_IMAGE_DIM;
+    let mut xs = Vec::with_capacity(n * d * d);
+    let mut ys = Vec::with_capacity(n);
+    for _ in 0..n {
+        let k = rng.below(K_CLASSES);
+        ys.push(k as i64);
+        for p in 0..d * d {
+            let (y, x) = (p / d, p % d);
+            // class-specific diagonal stripe pattern
+            let stripe = ((x + k * y) % K_CLASSES == k) as u8 as f32;
+            xs.push(stripe + 0.25 * rng.normal() as f32);
+        }
+    }
+    (
+        Tensor::from_slice(&xs, [n, d * d]),
+        Tensor::from_slice(&ys, [n]).astype(DType::I64),
+    )
+}
+
+fn eval_loop(model: &Sequential, dataset: &BatchDataset) -> (f64, f64) {
+    let mut loss_meter = AverageValueMeter::new();
+    let mut error_meter = FrameErrorMeter::new();
+    flashlight::autograd::no_grad(|| {
+        for i in 0..dataset.len() {
+            let example = dataset.get(i);
+            let inputs = Variable::constant(example[0].clone());
+            let output = model.forward(&inputs);
+            let max_ids = output.tensor().argmax(-1, false);
+            error_meter.add(&max_ids, &example[1]);
+            let loss = categorical_cross_entropy(&output, &example[1]);
+            loss_meter.add(loss.tensor().item());
+        }
+    });
+    (loss_meter.value(), error_meter.value())
+}
+
+fn main() {
+    flashlight::util::rng::seed(1234);
+    const K_TRAIN_SIZE: usize = 600;
+    const K_VAL_SIZE: usize = 100;
+    let batch_size = 32;
+    let epochs = 6;
+    let learning_rate = 0.05;
+
+    let (train_x, train_y) = load_dataset(K_TRAIN_SIZE, 1);
+    // Hold out a dev set (paper Listing 7's span/range indexing)
+    let val_x = train_x.index(&[range(0, K_VAL_SIZE), span()]);
+    let tr_x = train_x.index(&[range(K_VAL_SIZE, K_TRAIN_SIZE), span()]);
+    let val_y = val_y_slice(&train_y, 0, K_VAL_SIZE);
+    let tr_y = val_y_slice(&train_y, K_VAL_SIZE, K_TRAIN_SIZE);
+
+    let trainset = BatchDataset::new(
+        Arc::new(TensorDataset::new(vec![tr_x, tr_y])),
+        batch_size,
+    );
+    let valset = BatchDataset::new(
+        Arc::new(TensorDataset::new(vec![val_x, val_y])),
+        batch_size,
+    );
+
+    // Listing 8's Sequential CNN (scaled kernel plan for 16x16)
+    let pad = Padding::Same;
+    let mut model = Sequential::new();
+    model.add(View::new(&[-1, 1, K_IMAGE_DIM as isize, K_IMAGE_DIM as isize]));
+    model.add(Conv2D::new(1, 16, 5, 5, 1, 1, pad, pad));
+    model.add(ReLU);
+    model.add(Pool2D::max(2, 2, 2, 2));
+    model.add(Conv2D::new(16, 32, 5, 5, 1, 1, pad, pad));
+    model.add(ReLU);
+    model.add(Pool2D::max(2, 2, 2, 2));
+    model.add(View::new(&[-1, (K_IMAGE_DIM / 4 * K_IMAGE_DIM / 4 * 32) as isize]));
+    model.add(Linear::new(K_IMAGE_DIM / 4 * K_IMAGE_DIM / 4 * 32, 128));
+    model.add(ReLU);
+    model.add(Dropout::new(0.5));
+    model.add(Linear::new(128, K_CLASSES));
+    model.add(LogSoftmax);
+    println!("model: {} ({} params)", model.name(), flashlight::nn::num_params(&model));
+
+    // Listing 9's training loop
+    let mut opt = SGDOptimizer::new(model.params(), learning_rate);
+    for e in 0..epochs {
+        let mut train_loss_meter = AverageValueMeter::new();
+        for i in 0..trainset.len() {
+            let example = trainset.get(i);
+            let inputs = Variable::constant(example[0].clone());
+            let output = model.forward(&inputs);
+            let loss = categorical_cross_entropy(&output, &example[1]);
+            train_loss_meter.add(loss.tensor().item());
+            loss.backward();
+            opt.step();
+            opt.zero_grad();
+        }
+        let (val_loss, val_error) = eval_loop(&model, &valset);
+        println!(
+            "Epoch {e}: Avg Train Loss: {:.3} Validation Loss: {:.3} Validation Error (%): {:.1}",
+            train_loss_meter.value(),
+            val_loss,
+            val_error
+        );
+    }
+    let (_, final_err) = eval_loop(&model, &valset);
+    assert!(final_err < 20.0, "quickstart failed to learn: {final_err}%");
+    println!("quickstart OK (val error {final_err:.1}%)");
+}
+
+fn val_y_slice(y: &Tensor, start: usize, end: usize) -> Tensor {
+    y.narrow(0, start, end - start)
+}

@@ -1,0 +1,102 @@
+//! Speech-package pipeline (paper §4.3 "Speech"): featurize synthetic
+//! waveforms -> train the ASR transformer with CTC -> decode with greedy
+//! and LM-fused beam search, reporting token error rate with the
+//! EditDistanceMeter.
+//!
+//! Run: `cargo run --release --example speech_pipeline`
+
+use flashlight::autograd::{ops, Variable};
+use flashlight::meter::EditDistanceMeter;
+use flashlight::models::AsrTransformer;
+use flashlight::nn::Module;
+use flashlight::optim::{AdamOptimizer, Optimizer};
+use flashlight::pkg::speech::{
+    additive_noise, ctc_loss, greedy_decode, log_mel_spectrogram, BeamSearchDecoder, DecoderOpts,
+    FeatureParams, NGramLm,
+};
+use flashlight::tensor::Tensor;
+use flashlight::util::rng::Rng;
+
+const TOKENS: usize = 5; // blank + 4 "phones"
+const FRAMES: usize = 32;
+
+/// Synthesize an utterance: each token is a tone segment; label = token seq.
+fn utterance(labels: &[usize], rng: &mut Rng) -> Vec<f32> {
+    let p = FeatureParams { frame_len: 256, hop: 128, n_mels: 16, sample_rate: 8000 };
+    let samples_per_tok = (FRAMES / labels.len()) * p.hop;
+    let mut wave = Vec::new();
+    for &l in labels {
+        let freq = 300.0 + 600.0 * l as f32;
+        for i in 0..samples_per_tok {
+            wave.push(0.5 * (2.0 * std::f32::consts::PI * freq * i as f32 / 8000.0).sin());
+        }
+    }
+    additive_noise(&mut wave, 15.0, rng);
+    wave
+}
+
+fn featurize(wave: &[f32]) -> Tensor {
+    let p = FeatureParams { frame_len: 256, hop: 128, n_mels: 16, sample_rate: 8000 };
+    let f = log_mel_spectrogram(wave, &p);
+    let frames = f.dim(0).min(FRAMES);
+    let f = f.narrow(0, 0, frames);
+    // pad to FRAMES
+    let f = f.pad(&[(0, FRAMES - frames), (0, 0)], 0.0);
+    f.reshape(&[1, 1, FRAMES as isize, 16])
+}
+
+fn main() {
+    flashlight::util::rng::seed(77);
+    let mut rng = Rng::new(5);
+
+    // training set: random 2-token sequences
+    let seqs: Vec<Vec<usize>> =
+        (0..12).map(|_| vec![1 + rng.below(TOKENS - 1), 1 + rng.below(TOKENS - 1)]).collect();
+    let feats: Vec<Tensor> = seqs.iter().map(|s| featurize(&utterance(s, &mut rng))).collect();
+
+    let model = AsrTransformer::new(16, 48, 4, 1, TOKENS);
+    println!("acoustic model: {} params", flashlight::nn::num_params(&model));
+    let mut opt = AdamOptimizer::new(model.params(), 3e-3);
+
+    for epoch in 0..30 {
+        let mut total = 0.0;
+        for (f, s) in feats.iter().zip(&seqs) {
+            let logits = model.forward(&Variable::constant(f.clone()));
+            // [1, T', C] -> [T', C] log-probs
+            let t = logits.dims()[1];
+            let c = logits.dims()[2];
+            let lp = ops::log_softmax(&ops::reshape(&logits, &[t as isize, c as isize]), -1);
+            let loss = ctc_loss(&lp, s);
+            total += loss.tensor().item();
+            loss.backward();
+            opt.step();
+            opt.zero_grad();
+        }
+        if epoch % 5 == 0 {
+            println!("epoch {epoch:>3}  ctc loss {:.3}", total / feats.len() as f64);
+        }
+    }
+
+    // decode with greedy vs beam + LM
+    let lm = NGramLm::train(TOKENS, &seqs, 0.2);
+    let beam = BeamSearchDecoder::new(
+        DecoderOpts { beam: 8, lm_weight: 0.4, word_bonus: 0.0 },
+        Some(lm),
+    );
+    let mut greedy_ter = EditDistanceMeter::new();
+    let mut beam_ter = EditDistanceMeter::new();
+    flashlight::autograd::no_grad(|| {
+        for (f, s) in feats.iter().zip(&seqs) {
+            let logits = model.forward(&Variable::constant(f.clone()));
+            let t = logits.dims()[1];
+            let c = logits.dims()[2];
+            let lp = logits.tensor().reshape(&[t as isize, c as isize]).log_softmax(-1);
+            greedy_ter.add(&greedy_decode(&lp), s);
+            beam_ter.add(&beam.decode(&lp), s);
+        }
+    });
+    println!("token error rate: greedy {:.1}%  beam+LM {:.1}%", greedy_ter.value(), beam_ter.value());
+    assert!(greedy_ter.value() < 60.0, "acoustic model failed to learn");
+    assert!(beam_ter.value() <= greedy_ter.value() + 1e-9, "beam+LM should not be worse");
+    println!("speech_pipeline OK");
+}

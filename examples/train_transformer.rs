@@ -1,0 +1,117 @@
+//! End-to-end validation driver (DESIGN.md E2E mandate): train a
+//! transformer language model for a few hundred steps on a tiny synthetic
+//! corpus with bigram structure, logging the loss curve; then sample from
+//! the model to show it learned the structure. All layers compose: data
+//! pipeline -> model zoo -> autograd -> optimizer -> trainer -> meters.
+//!
+//! Run: `cargo run --release --example train_transformer [steps]`
+//! Results are recorded in EXPERIMENTS.md.
+
+use std::sync::Arc;
+
+use flashlight::coordinator::{train_lm, TrainConfig};
+use flashlight::models::BertLike;
+use flashlight::nn::num_params;
+use flashlight::data::Dataset;
+use flashlight::pkg::text::AutoregressiveLmDataset;
+use flashlight::util::rng::Rng;
+
+const VOCAB: usize = 256;
+const SEQ: usize = 32;
+
+/// Corpus with strong deterministic bigram structure: 85% of transitions
+/// follow `next = (prev * 7 + 3) % VOCAB`, the rest are uniform noise.
+/// Cross-entropy of the true process ≈ 0.15·ln(V) + H(0.15) ≈ 1.3 nats.
+fn corpus(len: usize, seed: u64) -> Vec<usize> {
+    let mut rng = Rng::new(seed);
+    let mut toks = vec![1usize];
+    for _ in 0..len {
+        let prev = *toks.last().unwrap();
+        let next =
+            if rng.uniform() < 0.85 { (prev * 7 + 3) % VOCAB } else { rng.below(VOCAB) };
+        toks.push(next);
+    }
+    toks
+}
+
+fn main() {
+    let steps: usize =
+        std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(300);
+    flashlight::util::rng::seed(7);
+
+    let train_ds = Arc::new(AutoregressiveLmDataset::new(corpus(30_000, 1), SEQ, 7));
+    let model = BertLike::new(VOCAB, 128, 4, 2, SEQ + 1);
+    println!(
+        "model: {} — {} parameters, {} train windows",
+        flashlight::nn::Module::name(&model),
+        num_params(&model),
+        train_ds.len()
+    );
+
+    let cfg = TrainConfig {
+        model: "bert".into(),
+        optimizer: "adam".into(),
+        lr: 1e-3,
+        steps,
+        batch_size: 16,
+        grad_clip: 1.0,
+        seed: 7,
+        log_every: 20,
+        ..Default::default()
+    };
+
+    let uniform = (VOCAB as f64).ln();
+    println!("uniform baseline loss: {uniform:.3} nats");
+    let report = train_lm(&model, train_ds, &cfg, |step, loss| {
+        println!("step {step:>5}  loss {loss:.4}");
+    })
+    .expect("training failed");
+
+    println!("\nloss curve (step, avg loss):");
+    for (s, l) in &report.loss_curve {
+        println!("  {s:>5}  {l:.4}");
+    }
+    println!("throughput: {:.1} sequences/s", report.throughput);
+
+    // held-out evaluation
+    let eval_ds = AutoregressiveLmDataset::new(corpus(2_000, 99), SEQ, SEQ);
+    let mut eval_loss = 0.0;
+    let n_eval = eval_ds.len().min(16);
+    flashlight::autograd::no_grad(|| {
+        for i in 0..n_eval {
+            let w = flashlight::data::Dataset::get(&eval_ds, i);
+            eval_loss +=
+                flashlight::models::bert::lm_loss(&model, &w[0]).tensor().item() / n_eval as f64;
+        }
+    });
+    println!("held-out loss: {eval_loss:.4} nats (uniform {uniform:.3})");
+
+    // the model must beat the uniform baseline decisively
+    assert!(
+        report.final_loss < 0.6 * uniform,
+        "LM failed to learn: {:.3} vs uniform {:.3}",
+        report.final_loss,
+        uniform
+    );
+
+    // greedy continuation follows the bigram rule most of the time
+    let prompt: Vec<i64> = corpus(SEQ, 3).iter().map(|&t| t as i64).collect();
+    let mut seq = prompt[..SEQ].to_vec();
+    let mut rule_hits = 0;
+    let total = 12;
+    flashlight::autograd::no_grad(|| {
+        for _ in 0..total {
+            let ids =
+                flashlight::tensor::Tensor::from_slice(&seq[seq.len() - SEQ..], [1, SEQ]);
+            let logits = model.logits(&ids).tensor();
+            let last = logits.narrow(1, SEQ - 1, 1);
+            let next = last.argmax(-1, false).to_vec_i64()[0];
+            let want = ((*seq.last().unwrap() as usize * 7 + 3) % VOCAB) as i64;
+            rule_hits += i64::from(next == want);
+            seq.push(next);
+        }
+    });
+    println!("greedy continuation follows the bigram rule {rule_hits}/{total} steps");
+    assert!(rule_hits as f64 >= total as f64 * 0.5, "sampling diverged from learned rule");
+    println!("train_transformer OK");
+}

@@ -1,0 +1,116 @@
+"""AOT lowering: JAX/Pallas computations -> HLO *text* artifacts.
+
+HLO text (NOT ``lowered.compile()``/``.serialize()``) is the interchange
+format: jax >= 0.5 emits HloModuleProto with 64-bit instruction ids which
+the pinned xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text
+parser on the Rust side reassigns ids and round-trips cleanly (see
+/opt/xla-example/README.md).
+
+Artifacts are named ``<op>__<in0>__<in1>....hlo.txt`` with dims joined by
+``x`` (e.g. ``linear_gelu__64x256__256x256__256.hlo.txt``); a
+``manifest.txt`` lists every artifact with input/output shapes so the Rust
+registry can validate at load time.
+
+Usage: ``python -m compile.aot --out-dir ../artifacts``
+"""
+
+import argparse
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec(*dims, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(tuple(dims), dtype)
+
+
+def shape_tag(s) -> str:
+    return "x".join(str(d) for d in s.shape) if s.shape else "scalar"
+
+
+# The artifact catalog. Shapes here must match what the Rust side requests
+# (rust/src/runtime/registry.rs and the fig2/transformer benches).
+def catalog():
+    entries = []
+
+    def add(name, fn, *specs):
+        entries.append((name, fn, specs))
+
+    # smoke artifact: the /opt/xla-example round-trip computation
+    add("matmul_add", model.matmul_add, spec(2, 2), spec(2, 2))
+
+    # plain matmul offload shapes (MLP layers of the fig2 demo + bench)
+    for m, k, n in [(32, 256, 256), (32, 256, 64), (64, 256, 256), (8, 64, 64)]:
+        add("matmul", model.matmul, spec(m, k), spec(k, n))
+
+    # fused linear+gelu (Pallas) at the MLP shapes
+    for m, k, n in [(32, 256, 256), (64, 256, 1024), (128, 256, 256)]:
+        add("linear_gelu", model.fused_linear_gelu, spec(m, k), spec(k, n), spec(n))
+
+    # fused attention (Pallas): [B*H, L, hd]
+    for bh, l, hd in [(8, 32, 64), (16, 64, 32)]:
+        add("attention", model.fused_attention, spec(bh, l, hd), spec(bh, l, hd), spec(bh, l, hd))
+
+    # fused layernorm (Pallas)
+    for m, d in [(256, 256), (2048, 256)]:
+        add("layernorm", model.fused_layernorm, spec(m, d), spec(d), spec(d))
+
+    # full transformer block (B, L, D, heads) = (4, 32, 256, 4)
+    b, l, d, heads, mlp = 4, 32, 256, 4, 1024
+    blk = functools.partial(model.transformer_block, heads=heads)
+    add(
+        "transformer_block",
+        blk,
+        spec(b, l, d),  # x
+        spec(d, d), spec(d, d), spec(d, d), spec(d, d),  # wq wk wv wo
+        spec(d, mlp), spec(mlp,), spec(mlp, d), spec(d,),  # w1 b1 w2 b2
+        spec(d,), spec(d,), spec(d,), spec(d,),  # ln1_g ln1_b ln2_g ln2_b
+    )
+    return entries
+
+
+def lower_entry(name, fn, specs, out_dir):
+    lowered = jax.jit(fn).lower(*specs)
+    text = to_hlo_text(lowered)
+    tag = "__".join([name] + [shape_tag(s) for s in specs])
+    fname = f"{tag}.hlo.txt"
+    with open(os.path.join(out_dir, fname), "w") as f:
+        f.write(text)
+    # output shape for the manifest
+    out = jax.eval_shape(fn, *specs)
+    out_shape = out[0].shape if isinstance(out, tuple) else out.shape
+    return fname, out_shape
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+    manifest = []
+    for name, fn, specs in catalog():
+        fname, out_shape = lower_entry(name, fn, specs, args.out_dir)
+        ins = ";".join(shape_tag(s) for s in specs)
+        outs = "x".join(str(d) for d in out_shape)
+        manifest.append(f"{name}\t{fname}\t{ins}\t{outs}")
+        print(f"lowered {fname}  out={outs}")
+    with open(os.path.join(args.out_dir, "manifest.txt"), "w") as f:
+        f.write("\n".join(manifest) + "\n")
+    print(f"wrote {len(manifest)} artifacts to {args.out_dir}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,75 @@
+"""L1 Pallas kernel: fused scaled-dot-product attention with online
+softmax (flash-attention schedule).
+
+TPU thinking: one grid step owns a `[bq, d]` query tile resident in VMEM;
+keys/values stream through in `[bk, d]` tiles. The running max `m`, running
+normalizer `l`, and the output accumulator stay in registers/VMEM across
+the K loop, so the `[L, L]` score matrix never materializes in HBM — the
+same insight as the CUDA flash-attention paper, re-expressed with
+BlockSpec + fori_loop instead of threadblock shared-memory staging.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .fused_linear import pick_block
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, *, bk):
+    q = q_ref[...]  # [bq, d]
+    d = q.shape[-1]
+    scale = 1.0 / jnp.sqrt(jnp.asarray(d, jnp.float32))
+    l_total = k_ref.shape[0]
+    steps = l_total // bk
+
+    def body(i, carry):
+        m_prev, l_prev, acc = carry
+        k_tile = pl.load(k_ref, (pl.dslice(i * bk, bk), slice(None)))  # [bk, d]
+        v_tile = pl.load(v_ref, (pl.dslice(i * bk, bk), slice(None)))
+        s = jnp.dot(q.astype(jnp.float32), k_tile.astype(jnp.float32).T) * scale  # [bq, bk]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m_prev - m_new)
+        l_new = l_prev * corr + jnp.sum(p, axis=-1)
+        acc = acc * corr[:, None] + jnp.dot(p, v_tile.astype(jnp.float32))
+        return m_new, l_new, acc
+
+    bq = q.shape[0]
+    init = (
+        jnp.full((bq,), -jnp.inf, jnp.float32),
+        jnp.zeros((bq,), jnp.float32),
+        jnp.zeros((bq, d), jnp.float32),
+    )
+    _, l_fin, acc = jax.lax.fori_loop(0, steps, body, init)
+    o_ref[...] = (acc / l_fin[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def attention(q, k, v, interpret=True):
+    """softmax(q kᵀ/√d) v for q,k,v [B, L, D] (heads pre-folded into B)."""
+    bsz, l, d = q.shape
+    bq = pick_block(l, 128)
+    bk = pick_block(l, 128)
+    grid = (bsz, l // bq)
+    kern = functools.partial(_kernel, bk=bk)
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((None, bq, d), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((None, l, d), lambda b, i: (b, 0, 0)),
+            pl.BlockSpec((None, l, d), lambda b, i: (b, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, bq, d), lambda b, i: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bsz, l, d), q.dtype),
+        interpret=interpret,
+    )(q, k, v)
+
+
+def vmem_bytes(l, d, dtype_bytes=4):
+    """Per-grid-step VMEM estimate: q tile + k/v tiles + accumulators."""
+    bq, bk = pick_block(l, 128), pick_block(l, 128)
+    return dtype_bytes * (bq * d + 2 * bk * d + bq * d + 2 * bq)

@@ -1,0 +1,83 @@
+"""L1 Pallas kernel: fused tiled `gelu(x @ w + b)`.
+
+TPU thinking (DESIGN.md §Hardware-Adaptation): the tile shape is chosen for
+the 128x128 MXU systolic array; each grid step stages an `[bm, K]` strip of
+`x` and a `[K, bn]` strip of `w` into VMEM via BlockSpec, performs the
+matmul at f32 accumulation, and applies bias+GELU in-register before the
+write-back — one HBM round-trip for the whole epilogue instead of three
+(matmul, bias add, gelu) in the unfused graph.
+
+Runs with ``interpret=True`` everywhere in this repo: the CPU PJRT plugin
+cannot execute Mosaic custom-calls, so interpret mode lowers the kernel to
+plain HLO while preserving the block structure (see /opt/xla-example
+README).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def erf_approx(x):
+    """Abramowitz & Stegun 7.1.26 erf (|err| < 1.5e-7), composed from
+    primitive ops only: the pinned XLA 0.5.1 HLO text parser predates the
+    dedicated `erf` opcode, so the kernel cannot lower through
+    ``jax.lax.erf``. Matches the Rust CPU backend's erf bit-for-bit in
+    structure."""
+    sign = jnp.sign(x)
+    ax = jnp.abs(x)
+    t = 1.0 / (1.0 + 0.3275911 * ax)
+    poly = ((((1.061405429 * t - 1.453152027) * t + 1.421413741) * t - 0.284496736) * t + 0.254829592) * t
+    return sign * (1.0 - poly * jnp.exp(-ax * ax))
+
+
+def _kernel(x_ref, w_ref, b_ref, o_ref):
+    x = x_ref[...]
+    w = w_ref[...]
+    b = b_ref[...]
+    acc = jnp.dot(x, w, preferred_element_type=jnp.float32)
+    acc = acc + b[None, :]
+    o_ref[...] = (
+        acc * 0.5 * (1.0 + erf_approx(acc / jnp.sqrt(2.0).astype(acc.dtype)))
+    ).astype(o_ref.dtype)
+
+
+def pick_block(dim, target=128):
+    """Largest divisor of ``dim`` that is <= target (MXU-shaped when
+    possible)."""
+    for cand in (target, 64, 32, 16, 8, 4, 2, 1):
+        if dim % cand == 0:
+            return cand
+    return 1
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def linear_gelu(x, w, b, interpret=True):
+    """gelu(x @ w + b) with x [M,K], w [K,N], b [N]."""
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2 and b.shape == (n,)
+    bm = pick_block(m)
+    bn = pick_block(n)
+    grid = (m // bm, n // bn)
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, bn), lambda i, j: (0, j)),
+            pl.BlockSpec((bn,), lambda i, j: (j,)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+        interpret=interpret,
+    )(x, w, b)
+
+
+def vmem_bytes(m, k, n, dtype_bytes=4):
+    """VMEM footprint estimate for one grid step (DESIGN.md §Perf):
+    x strip + w strip + bias + accumulator."""
+    bm, bn = pick_block(m), pick_block(n)
+    return dtype_bytes * (bm * k + k * bn + bn + bm * bn)

@@ -1,0 +1,41 @@
+"""L1 Pallas kernel: fused row-wise layer norm.
+
+One grid step normalizes a `[bm, D]` strip entirely in VMEM: mean,
+variance, scale, shift in a single pass instead of five separate HLO ops.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .fused_linear import pick_block
+
+
+def _kernel(x_ref, g_ref, b_ref, o_ref, *, eps):
+    x = x_ref[...].astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mu) ** 2, axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    o_ref[...] = (y * g_ref[...][None, :] + b_ref[...][None, :]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def layernorm(x, gamma, beta, eps=1e-5, interpret=True):
+    """Row-wise layer norm over the last dim of x [M, D]."""
+    m, d = x.shape
+    bm = pick_block(m)
+    kern = functools.partial(_kernel, eps=eps)
+    return pl.pallas_call(
+        kern,
+        grid=(m // bm,),
+        in_specs=[
+            pl.BlockSpec((bm, d), lambda i: (i, 0)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bm, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, d), x.dtype),
+        interpret=interpret,
+    )(x, gamma, beta)

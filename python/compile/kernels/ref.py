@@ -1,0 +1,54 @@
+"""Pure-jnp reference oracles for the Pallas kernels (L1 correctness
+ground truth — pytest asserts kernels against these)."""
+
+import jax
+import jax.numpy as jnp
+
+
+def linear_gelu_ref(x, w, b):
+    """y = gelu(x @ w + b), exact (erf) gelu."""
+    y = x @ w + b
+    return y * 0.5 * (1.0 + jax.lax.erf(y / jnp.sqrt(2.0).astype(y.dtype)))
+
+
+def matmul_ref(x, w):
+    """Plain matmul."""
+    return x @ w
+
+
+def layernorm_ref(x, gamma, beta, eps=1e-5):
+    """Row-wise layer norm over the last dim."""
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mu) ** 2, axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps) * gamma + beta
+
+
+def attention_ref(q, k, v):
+    """softmax(q kᵀ / sqrt(d)) v over [B, L, D] (heads pre-folded into B)."""
+    d = q.shape[-1]
+    scores = jnp.einsum("bld,bmd->blm", q, k) / jnp.sqrt(jnp.asarray(d, q.dtype))
+    p = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("blm,bmd->bld", p, v)
+
+
+def transformer_block_ref(x, params, heads):
+    """Pre-norm transformer block matching python/compile/model.py."""
+    h = layernorm_ref(x, params["ln1_g"], params["ln1_b"])
+    b, l, d = h.shape
+    hd = d // heads
+
+    def split(t):
+        return (
+            t.reshape(b, l, heads, hd).transpose(0, 2, 1, 3).reshape(b * heads, l, hd)
+        )
+
+    q = split(h @ params["wq"])
+    k = split(h @ params["wk"])
+    v = split(h @ params["wv"])
+    ctx = attention_ref(q, k, v)
+    ctx = ctx.reshape(b, heads, l, hd).transpose(0, 2, 1, 3).reshape(b, l, d)
+    x = x + ctx @ params["wo"]
+    h2 = layernorm_ref(x, params["ln2_g"], params["ln2_b"])
+    mlp = linear_gelu_ref(h2.reshape(b * l, d), params["w1"], params["b1"])
+    mlp = mlp @ params["w2"] + params["b2"]
+    return x + mlp.reshape(b, l, d)

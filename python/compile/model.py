@@ -1,0 +1,68 @@
+"""L2: JAX compute graphs calling the L1 Pallas kernels.
+
+These are the "vendor library" entry points of the Rust framework: each
+function here is AOT-lowered by ``aot.py`` to an HLO-text artifact that the
+Rust PJRT runtime (`rust/src/runtime/`) loads and executes from the request
+path. Python never runs at serve/train time.
+"""
+
+import jax.numpy as jnp
+
+from .kernels.attention import attention
+from .kernels.fused_linear import linear_gelu
+from .kernels.layernorm import layernorm
+
+
+def matmul(x, w):
+    """Plain matmul artifact (hot-op offload for the XLA tensor backend)."""
+    return (jnp.matmul(x, w),)
+
+
+def matmul_add(x, y):
+    """The /opt/xla-example smoke computation: matmul(x, y) + 2."""
+    return (jnp.matmul(x, y) + 2.0,)
+
+
+def fused_linear_gelu(x, w, b):
+    """gelu(x @ w + b) through the Pallas tile kernel."""
+    return (linear_gelu(x, w, b),)
+
+
+def fused_attention(q, k, v):
+    """Flash-style fused attention through the Pallas kernel.
+
+    q/k/v are [B*H, L, hd] (heads pre-folded, matching the Rust
+    MultiheadAttention's split_heads layout).
+    """
+    return (attention(q, k, v),)
+
+
+def fused_layernorm(x, g, b):
+    """Row-fused layer norm through the Pallas kernel."""
+    return (layernorm(x, g, b),)
+
+
+def transformer_block(x, wq, wk, wv, wo, w1, b1, w2, b2, ln1_g, ln1_b, ln2_g, ln2_b, *, heads):
+    """A full pre-norm transformer encoder block assembled from the Pallas
+    kernels — the model-level artifact benchmarked against the Rust
+    composed forward (Figure 2's "static/AOT" computation mode)."""
+    b, l, d = x.shape
+    hd = d // heads
+
+    h = layernorm(x.reshape(b * l, d), ln1_g, ln1_b).reshape(b, l, d)
+
+    def split(t):
+        return (
+            t.reshape(b, l, heads, hd).transpose(0, 2, 1, 3).reshape(b * heads, l, hd)
+        )
+
+    q = split(h @ wq)
+    k = split(h @ wk)
+    v = split(h @ wv)
+    ctx = attention(q, k, v)
+    ctx = ctx.reshape(b, heads, l, hd).transpose(0, 2, 1, 3).reshape(b, l, d)
+    x = x + ctx @ wo
+    h2 = layernorm(x.reshape(b * l, d), ln2_g, ln2_b)
+    mlp = linear_gelu(h2, w1, b1)
+    mlp = mlp @ w2 + b2
+    return (x + mlp.reshape(b, l, d),)

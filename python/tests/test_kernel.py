@@ -1,0 +1,119 @@
+"""Pallas kernels (interpret=True) vs pure-jnp oracles — the core L1
+correctness signal. Sweeps shapes/dtypes; uses hypothesis when available,
+otherwise a parametrized grid."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.kernels import ref
+from compile.kernels.attention import attention
+from compile.kernels.fused_linear import linear_gelu, pick_block
+from compile.kernels.layernorm import layernorm
+
+try:
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover
+    HAVE_HYPOTHESIS = False
+
+
+def rand(key, *shape, dtype=jnp.float32):
+    return jax.random.normal(key, shape, dtype=dtype)
+
+
+LINEAR_SHAPES = [(8, 16, 32), (32, 256, 256), (64, 128, 64), (1, 8, 8), (128, 64, 256)]
+
+
+@pytest.mark.parametrize("m,k,n", LINEAR_SHAPES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_linear_gelu_matches_ref(m, k, n, dtype):
+    keys = jax.random.split(jax.random.PRNGKey(m * 31 + n), 3)
+    x = rand(keys[0], m, k, dtype=dtype)
+    w = rand(keys[1], k, n, dtype=dtype)
+    b = rand(keys[2], n, dtype=dtype)
+    got = linear_gelu(x, w, b)
+    want = ref.linear_gelu_ref(x, w, b)
+    tol = 1e-5 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32), rtol=tol, atol=tol
+    )
+
+
+ATTN_SHAPES = [(2, 16, 8), (8, 32, 64), (4, 64, 32), (1, 8, 16)]
+
+
+@pytest.mark.parametrize("b,l,d", ATTN_SHAPES)
+def test_attention_matches_ref(b, l, d):
+    keys = jax.random.split(jax.random.PRNGKey(b * 7 + l), 3)
+    q, k, v = (rand(kk, b, l, d) for kk in keys)
+    got = attention(q, k, v)
+    want = ref.attention_ref(q, k, v)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("m,d", [(4, 8), (256, 256), (32, 128), (1, 16)])
+def test_layernorm_matches_ref(m, d):
+    keys = jax.random.split(jax.random.PRNGKey(m + d), 3)
+    x = rand(keys[0], m, d) * 3 + 1
+    g = rand(keys[1], d)
+    b = rand(keys[2], d)
+    got = layernorm(x, g, b)
+    want = ref.layernorm_ref(x, g, b)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+
+def test_pick_block_divides():
+    for dim in [1, 2, 7, 8, 32, 100, 128, 256, 384]:
+        blk = pick_block(dim)
+        assert dim % blk == 0
+        assert blk <= 128
+
+
+def test_attention_rows_normalized():
+    # attention output of constant V must be that constant
+    b, l, d = 2, 16, 8
+    q = rand(jax.random.PRNGKey(0), b, l, d)
+    k = rand(jax.random.PRNGKey(1), b, l, d)
+    v = jnp.ones((b, l, d), jnp.float32) * 3.5
+    out = attention(q, k, v)
+    np.testing.assert_allclose(np.asarray(out), 3.5, rtol=1e-5)
+
+
+if HAVE_HYPOTHESIS:
+
+    @settings(max_examples=20, deadline=None)
+    @given(
+        m=st.sampled_from([1, 2, 4, 8, 16, 32, 64]),
+        k=st.sampled_from([8, 16, 64, 128]),
+        n=st.sampled_from([8, 32, 128, 256]),
+    )
+    def test_linear_gelu_hypothesis_sweep(m, k, n):
+        keys = jax.random.split(jax.random.PRNGKey(m * 1000 + k * 10 + n), 3)
+        x = rand(keys[0], m, k)
+        w = rand(keys[1], k, n)
+        b = rand(keys[2], n)
+        np.testing.assert_allclose(
+            np.asarray(linear_gelu(x, w, b)),
+            np.asarray(ref.linear_gelu_ref(x, w, b)),
+            rtol=1e-5,
+            atol=1e-5,
+        )
+
+    @settings(max_examples=12, deadline=None)
+    @given(
+        b=st.integers(1, 4),
+        l=st.sampled_from([8, 16, 32, 64]),
+        d=st.sampled_from([8, 16, 32]),
+    )
+    def test_attention_hypothesis_sweep(b, l, d):
+        keys = jax.random.split(jax.random.PRNGKey(b * 100 + l + d), 3)
+        q, k, v = (rand(kk, b, l, d) for kk in keys)
+        np.testing.assert_allclose(
+            np.asarray(attention(q, k, v)),
+            np.asarray(ref.attention_ref(q, k, v)),
+            rtol=2e-5,
+            atol=2e-5,
+        )

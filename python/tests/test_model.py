@@ -1,0 +1,73 @@
+"""L2 model graphs vs reference + AOT lowering smoke tests."""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import aot, model
+from compile.kernels import ref
+
+
+def _block_params(key, d=64, mlp=128):
+    ks = jax.random.split(key, 8)
+    p = {
+        "wq": jax.random.normal(ks[0], (d, d)) * 0.05,
+        "wk": jax.random.normal(ks[1], (d, d)) * 0.05,
+        "wv": jax.random.normal(ks[2], (d, d)) * 0.05,
+        "wo": jax.random.normal(ks[3], (d, d)) * 0.05,
+        "w1": jax.random.normal(ks[4], (d, mlp)) * 0.05,
+        "b1": jnp.zeros((mlp,)),
+        "w2": jax.random.normal(ks[5], (mlp, d)) * 0.05,
+        "b2": jnp.zeros((d,)),
+        "ln1_g": jnp.ones((d,)),
+        "ln1_b": jnp.zeros((d,)),
+        "ln2_g": jnp.ones((d,)),
+        "ln2_b": jnp.zeros((d,)),
+    }
+    return p
+
+
+def test_transformer_block_matches_ref():
+    d, heads = 64, 4
+    p = _block_params(jax.random.PRNGKey(0), d=d)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 16, d))
+    got = model.transformer_block(
+        x, p["wq"], p["wk"], p["wv"], p["wo"], p["w1"], p["b1"], p["w2"], p["b2"],
+        p["ln1_g"], p["ln1_b"], p["ln2_g"], p["ln2_b"], heads=heads,
+    )[0]
+    want = ref.transformer_block_ref(x, p, heads)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=5e-5, atol=5e-5)
+
+
+def test_hlo_text_lowering_roundtrips():
+    # every catalog entry lowers to parseable, non-empty HLO text
+    lowered = jax.jit(model.matmul_add).lower(
+        aot.spec(2, 2), aot.spec(2, 2)
+    )
+    text = aot.to_hlo_text(lowered)
+    assert "HloModule" in text
+    assert "f32[2,2]" in text
+
+
+def test_catalog_entries_all_lower(tmp_path):
+    entries = aot.catalog()
+    assert len(entries) >= 10
+    # lower a representative subset (full catalog runs via `make artifacts`)
+    for name, fn, specs in entries[:3]:
+        fname, out_shape = aot.lower_entry(name, fn, specs, str(tmp_path))
+        assert (tmp_path / fname).exists()
+        assert len(out_shape) >= 1
+
+
+def test_pallas_artifact_executes_on_cpu_pjrt():
+    # interpret-mode pallas lowers to plain HLO executable by CPU PJRT:
+    # run the lowered computation through jax itself as a sanity check
+    fn = functools.partial(model.fused_linear_gelu)
+    x = jax.random.normal(jax.random.PRNGKey(0), (8, 16))
+    w = jax.random.normal(jax.random.PRNGKey(1), (16, 32))
+    b = jnp.zeros((32,))
+    out = fn(x, w, b)[0]
+    want = ref.linear_gelu_ref(x, w, b)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), rtol=1e-5, atol=1e-5)

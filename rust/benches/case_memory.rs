@@ -1,0 +1,171 @@
+//! §5.2.2 case-study bench: caching-allocator fragmentation under real
+//! training traces, ablating the split-restriction knob (the paper's
+//! researchers reduced fragmentation "by over 20%" by restricting
+//! splitting of large cache blocks).
+//!
+//! Captures op-attributed allocation traces from live transformer and CNN
+//! training via the telemetry manager, then replays each identical trace
+//! through caching-allocator configurations and reports peak fragmentation
+//! and allocator hit rates.
+//!
+//! Run: `cargo bench --bench case_memory`
+
+use std::sync::Arc;
+
+use flashlight::autograd::Variable;
+use flashlight::memory::{
+    self, AllocEvent, CachingMemoryManager, DefaultMemoryManager, MemoryManagerAdapter,
+    TelemetryMemoryManager,
+};
+use flashlight::models::{alexnet, BertLike};
+use flashlight::nn::{categorical_cross_entropy, Module};
+use flashlight::optim::{AdamOptimizer, Optimizer};
+use flashlight::tensor::{DType, Tensor};
+
+fn capture(steps: usize, mut step: impl FnMut()) -> Vec<AllocEvent> {
+    let tm = Arc::new(TelemetryMemoryManager::new(Arc::new(DefaultMemoryManager::new())));
+    let prev = memory::install(tm.clone());
+    for _ in 0..steps {
+        step();
+    }
+    if let Some(p) = prev {
+        memory::install(p);
+    }
+    tm.trace()
+}
+
+struct Row {
+    config: String,
+    peak_frag: f64,
+    peak_reserved_mb: f64,
+    hit_rate: f64,
+    native: u64,
+}
+
+fn replay(trace: &[AllocEvent], mgr: CachingMemoryManager) -> Row {
+    let config = mgr.name().to_string();
+    let (stats, peak) = memory::telemetry::replay(trace, &mgr);
+    Row {
+        config,
+        peak_frag: peak * 100.0,
+        peak_reserved_mb: stats.peak_reserved_bytes as f64 / (1 << 20) as f64,
+        hit_rate: stats.cache_hit_count as f64 / stats.alloc_count.max(1) as f64 * 100.0,
+        native: stats.native_alloc_count,
+    }
+}
+
+fn report(label: &str, trace: &[AllocEvent]) -> (f64, f64) {
+    println!("\n-- {label}: {} allocator events --", trace.len());
+    println!(
+        "{:<26} {:>10} {:>13} {:>9} {:>8}",
+        "ALLOCATOR", "peak frag", "peak reserved", "hit rate", "native"
+    );
+    let rows = vec![
+        replay(trace, CachingMemoryManager::unrestricted()),
+        replay(trace, CachingMemoryManager::split_restricted(4 << 20)),
+        replay(trace, CachingMemoryManager::split_restricted(1 << 20)),
+        replay(trace, CachingMemoryManager::split_restricted(256 << 10)),
+    ];
+    for r in &rows {
+        println!(
+            "{:<26} {:>9.1}% {:>10.1} MB {:>8.1}% {:>8}",
+            r.config, r.peak_frag, r.peak_reserved_mb, r.hit_rate, r.native
+        );
+    }
+    let base = rows[0].peak_frag;
+    let best = rows[1..].iter().map(|r| r.peak_frag).fold(f64::INFINITY, f64::min);
+    (base, best)
+}
+
+/// Synthetic large-activation churn modeled after big-model training (the
+/// paper's case study ran GPU-scale models; our CPU-scaled models only
+/// allocate megabytes, so the large-pool behavior the restriction targets
+/// is exercised with a trace shaped like large-model activations: varied
+/// 8–64 MiB buffers allocated per step, most freed, some retained).
+fn large_activation_trace(steps: usize) -> Vec<AllocEvent> {
+    use flashlight::util::rng::Rng;
+    let mut rng = Rng::new(42);
+    let mut events = Vec::new();
+    let mut id = 0u64;
+    let mut retained: Vec<u64> = Vec::new();
+    for _ in 0..steps {
+        let mut step_ids = Vec::new();
+        for _ in 0..6 {
+            let mb = 8 + rng.below(56);
+            events.push(AllocEvent {
+                kind: memory::EventKind::Alloc,
+                bytes: mb << 20,
+                id,
+                op: "activation",
+            });
+            step_ids.push(id);
+            id += 1;
+        }
+        // free everything from this step except one retained buffer
+        let keep = step_ids[rng.below(step_ids.len())];
+        for s in step_ids {
+            if s != keep {
+                events.push(AllocEvent { kind: memory::EventKind::Free, bytes: 0, id: s, op: "activation" });
+            } else {
+                retained.push(s);
+            }
+        }
+        // occasionally drop an old retained buffer
+        if retained.len() > 3 {
+            let victim = retained.remove(0);
+            events.push(AllocEvent { kind: memory::EventKind::Free, bytes: 0, id: victim, op: "activation" });
+        }
+    }
+    events
+}
+
+fn main() {
+    flashlight::util::rng::seed(3);
+
+    // transformer training trace
+    let bert = BertLike::new(300, 64, 4, 2, 25);
+    let ids = Tensor::rand([4, 25], 0.0, 300.0).astype(DType::I64);
+    let mut opt = AdamOptimizer::new(bert.params(), 1e-3);
+    let t_bert = capture(3, || {
+        let loss = flashlight::models::bert::lm_loss(&bert, &ids);
+        loss.backward();
+        opt.step();
+        opt.zero_grad();
+    });
+
+    // CNN training trace
+    let cnn = alexnet(10);
+    let x = Tensor::rand([4, 3, 32, 32], -1.0, 1.0);
+    let y = Tensor::rand([4], 0.0, 10.0).astype(DType::I64);
+    let mut copt = AdamOptimizer::new(cnn.params(), 1e-3);
+    let t_cnn = capture(2, || {
+        let out = cnn.forward(&Variable::constant(x.clone()));
+        let loss = categorical_cross_entropy(&out, &y);
+        loss.backward();
+        copt.step();
+        copt.zero_grad();
+    });
+
+    let t_large = large_activation_trace(40);
+
+    println!("== §5.2.2: allocator fragmentation under training traces ==");
+    let (b1, r1) = report("bert-like training", &t_bert);
+    let (b2, r2) = report("alexnet training", &t_cnn);
+    let (b3, r3) = report("large-activation churn (GPU-scale shape)", &t_large);
+
+    let reduction = (b3 - r3) / b3.max(1e-9) * 100.0;
+    println!(
+        "\nlarge-model trace: best split-restriction reduces peak fragmentation \
+         {b3:.1}% -> {r3:.1}% ({reduction:.0}% relative; paper: >20% for most models)"
+    );
+    println!(
+        "scaled-model traces fit in the small pool (restriction inert): \
+         bert {b1:.1}%->{r1:.1}%, alexnet {b2:.1}%->{r2:.1}%"
+    );
+    assert!(
+        r1 <= b1 + 1e-9 && r2 <= b2 + 1e-9 && r3 <= b3 + 1e-9,
+        "best split restriction should not worsen peak fragmentation"
+    );
+    assert!(reduction > 10.0, "restriction should help the large-pool trace ({reduction:.0}%)");
+    println!("case_memory OK");
+}

@@ -1,0 +1,114 @@
+//! L3 hot-path microbenchmarks for the performance pass (EXPERIMENTS.md
+//! §Perf): GEMM GFLOP/s vs problem size, conv2d, large element-wise maps,
+//! allocator throughput, ring all-reduce bandwidth, and autograd per-node
+//! overhead.
+//!
+//! Run: `cargo bench --bench perf_micro`
+
+use std::sync::Arc;
+
+use flashlight::autograd::{ops, Variable};
+use flashlight::memory::{CachingMemoryManager, MemoryManagerAdapter};
+use flashlight::tensor::{Conv2dParams, Tensor};
+use flashlight::util::timing::Samples;
+
+fn gemm_bench(n: usize) -> f64 {
+    let a = Tensor::rand([n, n], -1.0, 1.0);
+    let b = Tensor::rand([n, n], -1.0, 1.0);
+    let s = Samples::collect(2, 5, || {
+        std::hint::black_box(a.matmul(&b));
+    });
+    2.0 * (n as f64).powi(3) / s.median() / 1e9
+}
+
+fn main() {
+    println!("== perf_micro: L3 hot paths ==");
+    println!("threads: {}", flashlight::util::parallel::num_threads());
+
+    println!("\n-- GEMM (f32) --");
+    for n in [64usize, 128, 256, 512] {
+        println!("  {n:>4}x{n:<4}  {:>7.2} GFLOP/s", gemm_bench(n));
+    }
+
+    println!("\n-- conv2d (im2col+GEMM) --");
+    let x = Tensor::rand([8, 16, 32, 32], -1.0, 1.0);
+    let w = Tensor::rand([32, 16, 3, 3], -0.1, 0.1);
+    let p = Conv2dParams { stride: (1, 1), padding: (1, 1) };
+    let s = Samples::collect(2, 5, || {
+        std::hint::black_box(x.conv2d(&w, p));
+    });
+    let flops = 2.0 * 8.0 * 32.0 * 32.0 * 32.0 * 16.0 * 9.0;
+    println!("  8x16x32x32 ⋆ 32x16x3x3: {:.2} ms ({:.2} GFLOP/s)", s.median() * 1e3, flops / s.median() / 1e9);
+
+    println!("\n-- element-wise (gelu over 4M f32) --");
+    let big = Tensor::rand([4 * 1024 * 1024], -2.0, 2.0);
+    let s = Samples::collect(1, 5, || {
+        std::hint::black_box(big.gelu());
+    });
+    println!("  {:.2} ms  ({:.2} GB/s effective)", s.median() * 1e3, 8.0 * 4.0 * 1048576.0 / s.median() / 1e9);
+
+    println!("\n-- allocator (caching manager, 64KiB blocks) --");
+    let mgr = CachingMemoryManager::unrestricted();
+    let s = Samples::collect(1, 5, || {
+        let mut live = Vec::new();
+        for _ in 0..1000 {
+            live.push(mgr.alloc(64 * 1024).unwrap());
+        }
+        for b in live {
+            mgr.unlock(b);
+        }
+    });
+    println!("  {:.1} ns per alloc/free pair", s.median() / 1000.0 * 1e9);
+
+    println!("\n-- ring all-reduce (4 workers, 1M f32) --");
+    let s = Samples::collect(1, 3, || {
+        let workers = flashlight::dist::init_ring(4);
+        std::thread::scope(|sc| {
+            for w in workers {
+                sc.spawn(move || {
+                    use flashlight::dist::DistributedInterface;
+                    let t = Tensor::zeros([1 << 20]);
+                    std::hint::black_box(w.all_reduce(&t, 1.0));
+                });
+            }
+        });
+    });
+    println!("  {:.2} ms ({:.2} GB/s algorithmic)", s.median() * 1e3, 4.0 * 4.0 * (1 << 20) as f64 / s.median() / 1e9);
+
+    println!("\n-- autograd overhead (scalar chain, 10k nodes) --");
+    let s = Samples::collect(1, 5, || {
+        let x = Variable::param(Tensor::from_slice(&[1.0f32], [1]));
+        let mut y = x.clone();
+        for _ in 0..10_000 {
+            y = ops::add_scalar(&y, 1.0);
+        }
+        y.backward();
+    });
+    println!("  {:.2} µs per node (fwd+bwd)", s.median() / 10_000.0 * 1e6);
+
+    println!("\n-- dataset pipeline (prefetch 4 workers vs serial) --");
+    let base: Arc<dyn flashlight::data::Dataset> = Arc::new(flashlight::data::TensorDataset::new(vec![
+        Tensor::rand([256, 64], -1.0, 1.0),
+    ]));
+    let slow = Arc::new(flashlight::data::TransformDataset::new(base, |s| {
+        std::thread::sleep(std::time::Duration::from_micros(100));
+        s
+    }));
+    let serial = Samples::collect(0, 2, || {
+        for i in 0..256 {
+            std::hint::black_box(flashlight::data::Dataset::get(slow.as_ref(), i));
+        }
+    });
+    let pf = flashlight::data::PrefetchDataset::new(slow.clone(), 4, 16);
+    let prefetch = Samples::collect(0, 2, || {
+        for s in pf.iter() {
+            std::hint::black_box(s);
+        }
+    });
+    println!(
+        "  serial {:.1} ms, prefetch {:.1} ms ({:.1}x)",
+        serial.median() * 1e3,
+        prefetch.median() * 1e3,
+        serial.median() / prefetch.median()
+    );
+}

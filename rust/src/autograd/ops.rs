@@ -1,0 +1,572 @@
+//! Differentiable operators over [`Variable`]s.
+//!
+//! Each operator calls the underlying [`Tensor`] primitive and records a
+//! `gradFunc` on the tape — exactly the pattern of paper Listing 4 (whose
+//! cosine example is reproduced verbatim as [`cos`]). Broadcasting ops
+//! reduce their gradients back to the operand shapes via
+//! [`reduce_grad_to`].
+
+use crate::tensor::{Conv2dParams, DType, Pool2dParams, Shape, Tensor};
+
+use super::Variable;
+
+/// Sum `grad` over broadcast dimensions so it matches `target`.
+pub fn reduce_grad_to(grad: &Tensor, target: &Shape) -> Tensor {
+    if grad.shape() == target {
+        return grad.clone();
+    }
+    let gdims = grad.dims().to_vec();
+    let tdims = target.dims();
+    let extra = gdims.len() - tdims.len();
+    let mut axes: Vec<isize> = (0..extra as isize).collect();
+    for (i, &td) in tdims.iter().enumerate() {
+        if td == 1 && gdims[extra + i] != 1 {
+            axes.push((extra + i) as isize);
+        }
+    }
+    let mut out = grad.sum(&axes, false);
+    if out.shape() != target {
+        let dims: Vec<isize> = tdims.iter().map(|&d| d as isize).collect();
+        out = out.reshape(&dims);
+    }
+    out
+}
+
+// ---- arithmetic ---------------------------------------------------------
+
+/// `a + b` (broadcasting).
+pub fn add(a: &Variable, b: &Variable) -> Variable {
+    let out = a.tensor().add(&b.tensor());
+    Variable::from_op(out, vec![a.clone(), b.clone()], "add", |ins, g| {
+        vec![
+            Some(reduce_grad_to(g, &ins[0].shape())),
+            Some(reduce_grad_to(g, &ins[1].shape())),
+        ]
+    })
+}
+
+/// `a - b` (broadcasting).
+pub fn sub(a: &Variable, b: &Variable) -> Variable {
+    let out = a.tensor().sub(&b.tensor());
+    Variable::from_op(out, vec![a.clone(), b.clone()], "sub", |ins, g| {
+        vec![
+            Some(reduce_grad_to(g, &ins[0].shape())),
+            Some(reduce_grad_to(&g.neg(), &ins[1].shape())),
+        ]
+    })
+}
+
+/// `a * b` (broadcasting).
+pub fn mul(a: &Variable, b: &Variable) -> Variable {
+    let out = a.tensor().mul(&b.tensor());
+    Variable::from_op(out, vec![a.clone(), b.clone()], "mul", |ins, g| {
+        vec![
+            Some(reduce_grad_to(&g.mul(&ins[1].tensor()), &ins[0].shape())),
+            Some(reduce_grad_to(&g.mul(&ins[0].tensor()), &ins[1].shape())),
+        ]
+    })
+}
+
+/// `a / b` (broadcasting).
+pub fn div(a: &Variable, b: &Variable) -> Variable {
+    let out = a.tensor().div(&b.tensor());
+    Variable::from_op(out, vec![a.clone(), b.clone()], "div", |ins, g| {
+        let bt = ins[1].tensor();
+        let ga = g.div(&bt);
+        let gb = g.mul(&ins[0].tensor()).div(&bt.mul(&bt)).neg();
+        vec![
+            Some(reduce_grad_to(&ga, &ins[0].shape())),
+            Some(reduce_grad_to(&gb, &ins[1].shape())),
+        ]
+    })
+}
+
+/// `-a`.
+pub fn neg(a: &Variable) -> Variable {
+    Variable::from_op(a.tensor().neg(), vec![a.clone()], "neg", |_, g| vec![Some(g.neg())])
+}
+
+/// `a + s` for a scalar.
+pub fn add_scalar(a: &Variable, s: f64) -> Variable {
+    Variable::from_op(a.tensor().add_scalar(s), vec![a.clone()], "add_scalar", |_, g| {
+        vec![Some(g.clone())]
+    })
+}
+
+/// `a * s` for a scalar.
+pub fn mul_scalar(a: &Variable, s: f64) -> Variable {
+    Variable::from_op(a.tensor().mul_scalar(s), vec![a.clone()], "mul_scalar", move |_, g| {
+        vec![Some(g.mul_scalar(s))]
+    })
+}
+
+/// `a^p` for a scalar exponent.
+pub fn pow_scalar(a: &Variable, p: f64) -> Variable {
+    let out = a.tensor().pow_scalar(p);
+    Variable::from_op(out, vec![a.clone()], "pow_scalar", move |ins, g| {
+        let x = ins[0].tensor();
+        vec![Some(g.mul(&x.pow_scalar(p - 1.0).mul_scalar(p)))]
+    })
+}
+
+// ---- transcendental ------------------------------------------------------
+
+/// `e^a` (gradient reuses the forward output).
+pub fn exp(a: &Variable) -> Variable {
+    let out = a.tensor().exp();
+    let saved = out.clone();
+    Variable::from_op(out, vec![a.clone()], "exp", move |_, g| vec![Some(g.mul(&saved))])
+}
+
+/// `ln a`.
+pub fn log(a: &Variable) -> Variable {
+    Variable::from_op(a.tensor().log(), vec![a.clone()], "log", |ins, g| {
+        vec![Some(g.div(&ins[0].tensor()))]
+    })
+}
+
+/// Paper Listing 4, verbatim: cosine with `gradFunc` pushing
+/// `-sin(x) * grad_output`.
+pub fn cos(a: &Variable) -> Variable {
+    let result = a.tensor().cos();
+    Variable::from_op(result, vec![a.clone()], "cos", |inputs, grad_output| {
+        vec![Some(inputs[0].tensor().sin().neg().mul(grad_output))]
+    })
+}
+
+/// Sine.
+pub fn sin(a: &Variable) -> Variable {
+    Variable::from_op(a.tensor().sin(), vec![a.clone()], "sin", |ins, g| {
+        vec![Some(ins[0].tensor().cos().mul(g))]
+    })
+}
+
+/// Hyperbolic tangent.
+pub fn tanh(a: &Variable) -> Variable {
+    let out = a.tensor().tanh();
+    let saved = out.clone();
+    Variable::from_op(out, vec![a.clone()], "tanh", move |_, g| {
+        // g * (1 - y^2)
+        vec![Some(g.mul(&saved.mul(&saved).neg().add_scalar(1.0)))]
+    })
+}
+
+/// Square root.
+pub fn sqrt(a: &Variable) -> Variable {
+    let out = a.tensor().sqrt();
+    let saved = out.clone();
+    Variable::from_op(out, vec![a.clone()], "sqrt", move |_, g| {
+        vec![Some(g.div(&saved.mul_scalar(2.0)))]
+    })
+}
+
+/// Absolute value (subgradient 0 at 0 via sign).
+pub fn abs(a: &Variable) -> Variable {
+    Variable::from_op(a.tensor().abs(), vec![a.clone()], "abs", |ins, g| {
+        vec![Some(g.mul(&ins[0].tensor().sign()))]
+    })
+}
+
+// ---- activations ------------------------------------------------------------
+
+/// ReLU (derived from `maximum` in the tensor API; custom gradient mask).
+pub fn relu(a: &Variable) -> Variable {
+    let out = a.tensor().relu();
+    Variable::from_op(out, vec![a.clone()], "relu", |ins, g| {
+        let x = ins[0].tensor();
+        let mask = x.gt(&Tensor::zeros(x.dims().to_vec())).astype(DType::F32);
+        vec![Some(g.mul(&mask))]
+    })
+}
+
+/// Logistic sigmoid.
+pub fn sigmoid(a: &Variable) -> Variable {
+    let out = a.tensor().sigmoid();
+    let saved = out.clone();
+    Variable::from_op(out, vec![a.clone()], "sigmoid", move |_, g| {
+        vec![Some(g.mul(&saved).mul(&saved.neg().add_scalar(1.0)))]
+    })
+}
+
+/// Exact GELU.
+pub fn gelu(a: &Variable) -> Variable {
+    let out = a.tensor().gelu();
+    Variable::from_op(out, vec![a.clone()], "gelu", |ins, g| {
+        let x = ins[0].tensor();
+        // d/dx [x Φ(x)] = Φ(x) + x φ(x)
+        let phi = x.mul_scalar(1.0 / std::f64::consts::SQRT_2).erf().add_scalar(1.0).mul_scalar(0.5);
+        let pdf = x
+            .mul(&x)
+            .mul_scalar(-0.5)
+            .exp()
+            .mul_scalar(1.0 / (2.0 * std::f64::consts::PI).sqrt());
+        vec![Some(g.mul(&phi.add(&x.mul(&pdf))))]
+    })
+}
+
+/// Element-wise max with gradient routed to the winner (ties to `a`).
+pub fn maximum(a: &Variable, b: &Variable) -> Variable {
+    let out = a.tensor().maximum(&b.tensor());
+    Variable::from_op(out, vec![a.clone(), b.clone()], "maximum", |ins, g| {
+        let (at, bt) = (ins[0].tensor(), ins[1].tensor());
+        let amask = at.ge(&bt).astype(DType::F32);
+        let bmask = amask.neg().add_scalar(1.0);
+        vec![
+            Some(reduce_grad_to(&g.mul(&amask), &ins[0].shape())),
+            Some(reduce_grad_to(&g.mul(&bmask), &ins[1].shape())),
+        ]
+    })
+}
+
+/// Element-wise min with routed gradient (ties to `a`).
+pub fn minimum(a: &Variable, b: &Variable) -> Variable {
+    let out = a.tensor().minimum(&b.tensor());
+    Variable::from_op(out, vec![a.clone(), b.clone()], "minimum", |ins, g| {
+        let (at, bt) = (ins[0].tensor(), ins[1].tensor());
+        let amask = at.le(&bt).astype(DType::F32);
+        let bmask = amask.neg().add_scalar(1.0);
+        vec![
+            Some(reduce_grad_to(&g.mul(&amask), &ins[0].shape())),
+            Some(reduce_grad_to(&g.mul(&bmask), &ins[1].shape())),
+        ]
+    })
+}
+
+// ---- reductions ---------------------------------------------------------------
+
+fn keepdims_shape(x: &Shape, axes: &[isize]) -> Vec<isize> {
+    let naxes: Vec<usize> = axes.iter().map(|&a| x.normalize_axis(a)).collect();
+    x.dims()
+        .iter()
+        .enumerate()
+        .map(|(i, &d)| if naxes.contains(&i) || axes.is_empty() { 1 } else { d as isize })
+        .collect()
+}
+
+/// Sum over `axes` (empty = all).
+pub fn sum(a: &Variable, axes: &[isize], keepdims: bool) -> Variable {
+    let out = a.tensor().sum(axes, keepdims);
+    let axes_v = axes.to_vec();
+    Variable::from_op(out, vec![a.clone()], "sum", move |ins, g| {
+        let xshape = ins[0].shape();
+        let gk = if keepdims { g.clone() } else { g.reshape(&keepdims_shape(&xshape, &axes_v)) };
+        vec![Some(gk.broadcast_to(xshape.clone()))]
+    })
+}
+
+/// Mean over `axes` (empty = all).
+pub fn mean(a: &Variable, axes: &[isize], keepdims: bool) -> Variable {
+    let x = a.tensor();
+    let naxes: Vec<usize> = if axes.is_empty() {
+        (0..x.rank()).collect()
+    } else {
+        axes.iter().map(|&ax| x.shape().normalize_axis(ax)).collect()
+    };
+    let count: usize = naxes.iter().map(|&ax| x.dims()[ax]).product();
+    mul_scalar(&sum(a, axes, keepdims), 1.0 / count as f64)
+}
+
+/// Max over `axes`; gradient flows to arg-max positions (split on ties).
+pub fn max(a: &Variable, axes: &[isize], keepdims: bool) -> Variable {
+    let out = a.tensor().max(axes, keepdims);
+    let axes_v = axes.to_vec();
+    Variable::from_op(out, vec![a.clone()], "max", move |ins, g| {
+        let x = ins[0].tensor();
+        let mk = x.max(&axes_v, true);
+        let mask = x.eq(&mk).astype(DType::F32);
+        let norm = mask.sum(&axes_v, true);
+        let gk = if keepdims {
+            g.clone()
+        } else {
+            g.reshape(&keepdims_shape(&ins[0].shape(), &axes_v))
+        };
+        vec![Some(mask.div(&norm).mul(&gk))]
+    })
+}
+
+// ---- shape -----------------------------------------------------------------------
+
+/// Reshape.
+pub fn reshape(a: &Variable, dims: &[isize]) -> Variable {
+    let out = a.tensor().reshape(dims);
+    Variable::from_op(out, vec![a.clone()], "reshape", |ins, g| {
+        let target: Vec<isize> = ins[0].dims().iter().map(|&d| d as isize).collect();
+        vec![Some(g.reshape(&target))]
+    })
+}
+
+/// Permute dimensions.
+pub fn transpose(a: &Variable, perm: &[usize]) -> Variable {
+    let out = a.tensor().transpose(perm);
+    let perm_v = perm.to_vec();
+    Variable::from_op(out, vec![a.clone()], "transpose", move |_, g| {
+        let mut inv = vec![0usize; perm_v.len()];
+        for (i, &p) in perm_v.iter().enumerate() {
+            inv[p] = i;
+        }
+        vec![Some(g.transpose(&inv))]
+    })
+}
+
+/// Swap the last two dims.
+pub fn t(a: &Variable) -> Variable {
+    let r = a.tensor().rank();
+    let mut perm: Vec<usize> = (0..r).collect();
+    perm.swap(r - 2, r - 1);
+    transpose(a, &perm)
+}
+
+/// Rectangular slice; gradient zero-pads back.
+pub fn slice(a: &Variable, starts: &[usize], ends: &[usize]) -> Variable {
+    let out = a.tensor().slice(starts, ends);
+    let (s, e) = (starts.to_vec(), ends.to_vec());
+    Variable::from_op(out, vec![a.clone()], "slice", move |ins, g| {
+        let dims = ins[0].dims();
+        let pads: Vec<(usize, usize)> =
+            (0..dims.len()).map(|d| (s[d], dims[d] - e[d])).collect();
+        vec![Some(g.pad(&pads, 0.0))]
+    })
+}
+
+/// Concatenate along `axis`; gradient slices back per input.
+pub fn concat(xs: &[&Variable], axis: isize) -> Variable {
+    let tensors: Vec<Tensor> = xs.iter().map(|v| v.tensor()).collect();
+    let refs: Vec<&Tensor> = tensors.iter().collect();
+    let out = Tensor::concat(&refs, axis);
+    let a = out.shape().normalize_axis(axis);
+    let owned: Vec<Variable> = xs.iter().map(|&v| v.clone()).collect();
+    Variable::from_op(out, owned, "concat", move |ins, g| {
+        let mut grads = Vec::with_capacity(ins.len());
+        let mut off = 0usize;
+        for v in ins {
+            let len = v.dims()[a];
+            grads.push(Some(g.narrow(a as isize, off, len)));
+            off += len;
+        }
+        grads
+    })
+}
+
+/// Gather rows along axis 0 (embedding lookup); gradient scatter-adds.
+pub fn index_select0(a: &Variable, indices: &Tensor) -> Variable {
+    let out = a.tensor().index_select(0, indices);
+    let idx = indices.clone();
+    Variable::from_op(out, vec![a.clone()], "index_select0", move |ins, g| {
+        let zeros = Tensor::zeros(ins[0].dims());
+        // flatten gathered grad rows to [n, rest]
+        let n = idx.numel();
+        let rest: usize = ins[0].dims()[1..].iter().product();
+        let gflat = g.reshape(&[n as isize, rest as isize]);
+        let flat_idx = idx.reshape(&[n as isize]);
+        let base_rest: Vec<isize> = ins[0].dims().iter().map(|&d| d as isize).collect();
+        let acc = zeros
+            .reshape(&[base_rest[0], rest as isize])
+            .scatter_add(&flat_idx, &gflat)
+            .reshape(&base_rest);
+        vec![Some(acc)]
+    })
+}
+
+// ---- linear algebra / nn ------------------------------------------------------------
+
+/// Matrix multiply (2-D or batched 3-D; batch broadcast allowed on either
+/// side — the gradient reduces over broadcast batch dims).
+pub fn matmul(a: &Variable, b: &Variable) -> Variable {
+    let out = a.tensor().matmul(&b.tensor());
+    Variable::from_op(out, vec![a.clone(), b.clone()], "matmul", |ins, g| {
+        let (at, bt) = (ins[0].tensor(), ins[1].tensor());
+        let ga = g.matmul(&bt.t());
+        let gb = at.t().matmul(g);
+        vec![
+            Some(reduce_grad_to(&ga, &ins[0].shape())),
+            Some(reduce_grad_to(&gb, &ins[1].shape())),
+        ]
+    })
+}
+
+/// 2-D convolution (NCHW x OIHW).
+pub fn conv2d(x: &Variable, w: &Variable, p: Conv2dParams) -> Variable {
+    let out = x.tensor().conv2d(&w.tensor(), p);
+    Variable::from_op(out, vec![x.clone(), w.clone()], "conv2d", move |ins, g| {
+        let xt = ins[0].tensor();
+        let wt = ins[1].tensor();
+        let be = crate::tensor::default_backend();
+        let gx = be.conv2d_bwd_input(g, &wt, xt.shape(), p);
+        let gw = be.conv2d_bwd_filter(g, &xt, wt.shape(), p);
+        vec![Some(gx), Some(gw)]
+    })
+}
+
+/// 2-D pooling.
+pub fn pool2d(x: &Variable, p: Pool2dParams) -> Variable {
+    let out = x.tensor().pool2d(p);
+    Variable::from_op(out, vec![x.clone()], "pool2d", move |ins, g| {
+        let xt = ins[0].tensor();
+        vec![Some(crate::tensor::default_backend().pool2d_bwd(g, &xt, p))]
+    })
+}
+
+// ---- softmax family -------------------------------------------------------------------
+
+/// Numerically-stable softmax along `axis` with the fused gradient
+/// `y ⊙ (g − Σ g⊙y)`.
+pub fn softmax(a: &Variable, axis: isize) -> Variable {
+    let out = a.tensor().softmax(axis);
+    let saved = out.clone();
+    Variable::from_op(out, vec![a.clone()], "softmax", move |_, g| {
+        let dot = g.mul(&saved).sum(&[axis], true);
+        vec![Some(saved.mul(&g.sub(&dot)))]
+    })
+}
+
+/// Numerically-stable log-softmax with gradient `g − e^y · Σ g`.
+pub fn log_softmax(a: &Variable, axis: isize) -> Variable {
+    let out = a.tensor().log_softmax(axis);
+    let saved = out.clone();
+    Variable::from_op(out, vec![a.clone()], "log_softmax", move |_, g| {
+        let gsum = g.sum(&[axis], true);
+        vec![Some(g.sub(&saved.exp().mul(&gsum)))]
+    })
+}
+
+// ---- convenience composite -----------------------------------------------------------
+
+/// Mean of `(a-b)^2` over everything.
+pub fn mse(a: &Variable, b: &Variable) -> Variable {
+    let d = sub(a, b);
+    mean(&mul(&d, &d), &[], false)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::gradcheck::check_grad;
+
+    #[test]
+    fn listing4_cosine() {
+        let x = Variable::param(Tensor::from_slice(&[0.5f32, 1.0], [2]));
+        let y = cos(&x);
+        y.backward_seeded(Tensor::ones([2]), &Default::default());
+        let g = x.grad().unwrap().to_vec();
+        assert!((g[0] - (-0.5f32.sin())).abs() < 1e-5);
+        assert!((g[1] - (-1.0f32.sin())).abs() < 1e-5);
+    }
+
+    #[test]
+    fn broadcast_grad_reduces() {
+        // [2,3] + [3] — grad of bias is summed over rows
+        let a = Variable::param(Tensor::ones([2, 3]));
+        let b = Variable::param(Tensor::ones([3]));
+        let y = sum(&add(&a, &b), &[], false);
+        y.backward();
+        assert_eq!(b.grad().unwrap().dims(), &[3]);
+        assert_eq!(b.grad().unwrap().to_vec(), vec![2.0; 3]);
+        assert_eq!(a.grad().unwrap().to_vec(), vec![1.0; 6]);
+    }
+
+    #[test]
+    fn matmul_grads_match_numeric() {
+        let w = Variable::constant(Tensor::rand([3, 2], -1.0, 1.0));
+        check_grad("matmul-a", &[4, 3], move |x| sum(&matmul(x, &w), &[], false));
+        let x = Variable::constant(Tensor::rand([4, 3], -1.0, 1.0));
+        check_grad("matmul-b", &[3, 2], move |w| sum(&matmul(&x, w), &[], false));
+    }
+
+    #[test]
+    fn unary_grads_match_numeric() {
+        check_grad("exp", &[5], |x| sum(&exp(x), &[], false));
+        check_grad("tanh", &[5], |x| sum(&tanh(x), &[], false));
+        check_grad("sigmoid", &[5], |x| sum(&sigmoid(x), &[], false));
+        check_grad("gelu", &[5], |x| sum(&gelu(x), &[], false));
+        check_grad("sin", &[5], |x| sum(&sin(x), &[], false));
+    }
+
+    #[test]
+    fn softmax_grads_match_numeric() {
+        let w = Variable::constant(Tensor::rand([3, 4], 0.0, 1.0));
+        let w2 = w.clone();
+        check_grad("softmax", &[3, 4], move |x| sum(&mul(&softmax(x, -1), &w), &[], false));
+        check_grad("log_softmax", &[3, 4], move |x| {
+            sum(&mul(&log_softmax(x, -1), &w2), &[], false)
+        });
+    }
+
+    #[test]
+    fn reduction_grads_match_numeric() {
+        check_grad("mean-axis", &[3, 4], |x| sum(&mean(x, &[1], false), &[], false));
+        let w = Variable::constant(Tensor::rand([2, 1], 0.5, 1.5));
+        check_grad("sum-keep", &[2, 3], move |x| {
+            sum(&mul(&sum(x, &[1], true), &w), &[], false)
+        });
+    }
+
+    #[test]
+    fn shape_op_grads() {
+        let w = Variable::constant(Tensor::rand([3, 4], -1.0, 1.0));
+        check_grad("reshape", &[2, 6], move |x| {
+            sum(&mul(&reshape(x, &[3, 4]), &w), &[], false)
+        });
+        let w = Variable::constant(Tensor::rand([3, 2], -1.0, 1.0));
+        check_grad("transpose", &[2, 3], move |x| sum(&mul(&t(x), &w), &[], false));
+        check_grad("slice", &[4, 4], |x| sum(&slice(x, &[1, 0], &[3, 2]), &[], false));
+    }
+
+    #[test]
+    fn concat_grads_split() {
+        let a = Variable::param(Tensor::ones([2, 2]));
+        let b = Variable::param(Tensor::ones([2, 3]));
+        let c = concat(&[&a, &b], 1);
+        let w = Variable::constant(Tensor::arange(10, DType::F32).reshape(&[2, 5]));
+        sum(&mul(&c, &w), &[], false).backward();
+        assert_eq!(a.grad().unwrap().to_vec(), vec![0., 1., 5., 6.]);
+        assert_eq!(b.grad().unwrap().to_vec(), vec![2., 3., 4., 7., 8., 9.]);
+    }
+
+    #[test]
+    fn index_select_scatter_grad() {
+        let emb = Variable::param(Tensor::arange(8, DType::F32).reshape(&[4, 2]));
+        let idx = Tensor::from_slice(&[1i64, 1, 3], [3]);
+        let picked = index_select0(&emb, &idx);
+        sum(&picked, &[], false).backward();
+        let g = emb.grad().unwrap().to_vec();
+        assert_eq!(g, vec![0., 0., 2., 2., 0., 0., 1., 1.]);
+    }
+
+    #[test]
+    fn conv_pool_grads_match_numeric() {
+        let w = Variable::constant(Tensor::rand([3, 2, 3, 3], -0.5, 0.5));
+        check_grad("conv2d-x", &[1, 2, 5, 5], move |x| {
+            sum(&conv2d(x, &w, Conv2dParams { stride: (1, 1), padding: (1, 1) }), &[], false)
+        });
+        let x = Variable::constant(Tensor::rand([1, 2, 5, 5], -0.5, 0.5));
+        check_grad("conv2d-w", &[2, 2, 3, 3], move |w| {
+            sum(&conv2d(&x, w, Conv2dParams { stride: (2, 2), padding: (0, 0) }), &[], false)
+        });
+        check_grad("avgpool", &[1, 1, 4, 4], |x| {
+            use crate::tensor::PoolKind;
+            sum(
+                &pool2d(x, Pool2dParams { kind: PoolKind::Avg, kernel: (2, 2), stride: (2, 2) }),
+                &[],
+                false,
+            )
+        });
+    }
+
+    #[test]
+    fn max_reduction_grad_routes() {
+        let x = Variable::param(Tensor::from_slice(&[1.0f32, 5.0, 3.0, 2.0], [2, 2]));
+        let m = max(&x, &[1], false);
+        sum(&m, &[], false).backward();
+        assert_eq!(x.grad().unwrap().to_vec(), vec![0., 1., 1., 0.]);
+    }
+
+    #[test]
+    fn mse_value_and_grad() {
+        let a = Variable::param(Tensor::from_slice(&[1.0f32, 2.0], [2]));
+        let b = Variable::constant(Tensor::from_slice(&[0.0f32, 0.0], [2]));
+        let l = mse(&a, &b);
+        assert!((l.tensor().item() - 2.5).abs() < 1e-6);
+        l.backward();
+        assert_eq!(a.grad().unwrap().to_vec(), vec![1.0, 2.0]);
+    }
+}

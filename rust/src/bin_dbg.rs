@@ -1,0 +1,12 @@
+fn main() {
+    let path = "artifacts/linear_gelu__32x256__256x256__256.hlo.txt";
+    let client = xla::PjRtClient::cpu().unwrap();
+    let proto = match xla::HloModuleProto::from_text_file(path) {
+        Ok(p) => p, Err(e) => { println!("parse err: {e}"); return }
+    };
+    let comp = xla::XlaComputation::from_proto(&proto);
+    match client.compile(&comp) {
+        Ok(_) => println!("compile OK"),
+        Err(e) => println!("compile err: {e}"),
+    }
+}

@@ -1,0 +1,205 @@
+//! Parameter serialization (the paper's `FL_SAVE_LOAD` facility): a small
+//! self-describing binary format — magic, version, per-tensor dtype +
+//! shape + raw little-endian data.
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use crate::autograd::Variable;
+use crate::tensor::{DType, HostBuffer, Shape, Tensor};
+use crate::util::error::{Error, Result};
+
+const MAGIC: &[u8; 8] = b"FLCKPT01";
+
+fn dtype_code(d: DType) -> u8 {
+    match d {
+        DType::F32 => 0,
+        DType::F64 => 1,
+        DType::I32 => 2,
+        DType::I64 => 3,
+        DType::U8 => 4,
+        DType::Bool => 5,
+    }
+}
+
+fn code_dtype(c: u8) -> Result<DType> {
+    Ok(match c {
+        0 => DType::F32,
+        1 => DType::F64,
+        2 => DType::I32,
+        3 => DType::I64,
+        4 => DType::U8,
+        5 => DType::Bool,
+        _ => return Err(Error::Serde(format!("bad dtype code {c}"))),
+    })
+}
+
+fn write_tensor(w: &mut impl Write, t: &Tensor) -> Result<()> {
+    w.write_all(&[dtype_code(t.dtype())])?;
+    w.write_all(&(t.rank() as u32).to_le_bytes())?;
+    for &d in t.dims() {
+        w.write_all(&(d as u64).to_le_bytes())?;
+    }
+    match t.to_host() {
+        HostBuffer::F32(v) => {
+            for x in v {
+                w.write_all(&x.to_le_bytes())?;
+            }
+        }
+        HostBuffer::F64(v) => {
+            for x in v {
+                w.write_all(&x.to_le_bytes())?;
+            }
+        }
+        HostBuffer::I32(v) => {
+            for x in v {
+                w.write_all(&x.to_le_bytes())?;
+            }
+        }
+        HostBuffer::I64(v) => {
+            for x in v {
+                w.write_all(&x.to_le_bytes())?;
+            }
+        }
+        HostBuffer::U8(v, _) => w.write_all(&v)?,
+    }
+    Ok(())
+}
+
+fn read_exact<const N: usize>(r: &mut impl Read) -> Result<[u8; N]> {
+    let mut buf = [0u8; N];
+    r.read_exact(&mut buf)?;
+    Ok(buf)
+}
+
+fn read_tensor(r: &mut impl Read) -> Result<Tensor> {
+    let dtype = code_dtype(read_exact::<1>(r)?[0])?;
+    let rank = u32::from_le_bytes(read_exact::<4>(r)?) as usize;
+    let mut dims = Vec::with_capacity(rank);
+    for _ in 0..rank {
+        dims.push(u64::from_le_bytes(read_exact::<8>(r)?) as usize);
+    }
+    let shape = Shape::new(dims);
+    let n = shape.numel();
+    let host = match dtype {
+        DType::F32 => {
+            let mut v = Vec::with_capacity(n);
+            for _ in 0..n {
+                v.push(f32::from_le_bytes(read_exact::<4>(r)?));
+            }
+            HostBuffer::F32(v)
+        }
+        DType::F64 => {
+            let mut v = Vec::with_capacity(n);
+            for _ in 0..n {
+                v.push(f64::from_le_bytes(read_exact::<8>(r)?));
+            }
+            HostBuffer::F64(v)
+        }
+        DType::I32 => {
+            let mut v = Vec::with_capacity(n);
+            for _ in 0..n {
+                v.push(i32::from_le_bytes(read_exact::<4>(r)?));
+            }
+            HostBuffer::I32(v)
+        }
+        DType::I64 => {
+            let mut v = Vec::with_capacity(n);
+            for _ in 0..n {
+                v.push(i64::from_le_bytes(read_exact::<8>(r)?));
+            }
+            HostBuffer::I64(v)
+        }
+        DType::U8 | DType::Bool => {
+            let mut v = vec![0u8; n];
+            r.read_exact(&mut v)?;
+            HostBuffer::U8(v, dtype == DType::Bool)
+        }
+    };
+    Ok(Tensor::from_host(host, shape))
+}
+
+/// Save parameter tensors in order.
+pub fn save_params(path: &Path, params: &[Variable]) -> Result<()> {
+    let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+    f.write_all(MAGIC)?;
+    f.write_all(&(params.len() as u64).to_le_bytes())?;
+    for p in params {
+        write_tensor(&mut f, &p.tensor())?;
+    }
+    Ok(())
+}
+
+/// Load a checkpoint into parameters (order and shapes must match).
+pub fn load_params(path: &Path, params: &[Variable]) -> Result<()> {
+    let mut f = std::io::BufReader::new(std::fs::File::open(path)?);
+    let magic = read_exact::<8>(&mut f)?;
+    if &magic != MAGIC {
+        return Err(Error::Serde("bad checkpoint magic".into()));
+    }
+    let count = u64::from_le_bytes(read_exact::<8>(&mut f)?) as usize;
+    if count != params.len() {
+        return Err(Error::Serde(format!(
+            "checkpoint has {count} tensors, model has {}",
+            params.len()
+        )));
+    }
+    for p in params {
+        let t = read_tensor(&mut f)?;
+        if t.shape() != &p.shape() {
+            return Err(Error::Serde(format!(
+                "shape mismatch: checkpoint {} vs model {}",
+                t.shape(),
+                p.shape()
+            )));
+        }
+        p.set_tensor(t);
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::{Linear, Module};
+
+    #[test]
+    fn roundtrip_preserves_values() {
+        let dir = std::env::temp_dir().join("fl_ckpt_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("m.ckpt");
+        let a = Linear::new(4, 3);
+        save_params(&path, &a.params()).unwrap();
+        let b = Linear::new(4, 3);
+        assert_ne!(a.weight.tensor().to_vec(), b.weight.tensor().to_vec());
+        load_params(&path, &b.params()).unwrap();
+        assert_eq!(a.weight.tensor().to_vec(), b.weight.tensor().to_vec());
+        assert_eq!(
+            a.bias.as_ref().unwrap().tensor().to_vec(),
+            b.bias.as_ref().unwrap().tensor().to_vec()
+        );
+    }
+
+    #[test]
+    fn shape_mismatch_rejected() {
+        let dir = std::env::temp_dir().join("fl_ckpt_test2");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("m.ckpt");
+        let a = Linear::new(4, 3);
+        save_params(&path, &a.params()).unwrap();
+        let b = Linear::new(5, 3);
+        assert!(load_params(&path, &b.params()).is_err());
+        let c = Linear::new_no_bias(4, 3);
+        assert!(load_params(&path, &c.params()).is_err()); // count mismatch
+    }
+
+    #[test]
+    fn corrupt_magic_rejected() {
+        let dir = std::env::temp_dir().join("fl_ckpt_test3");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.ckpt");
+        std::fs::write(&path, b"NOTACKPT____").unwrap();
+        let a = Linear::new(2, 2);
+        assert!(load_params(&path, &a.params()).is_err());
+    }
+}

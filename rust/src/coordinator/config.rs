@@ -1,0 +1,174 @@
+//! Training configuration, parsed from TOML-subset files with CLI
+//! `--set section.key=value` overrides.
+
+use std::path::Path;
+
+use crate::util::error::{Error, Result};
+use crate::util::toml::{parse, Doc};
+
+/// Full training configuration.
+#[derive(Debug, Clone)]
+pub struct TrainConfig {
+    /// Model name (one of [`crate::models::TABLE3_MODELS`] or "mlp").
+    pub model: String,
+    /// Optimizer: "sgd" | "adam" | "adamw".
+    pub optimizer: String,
+    /// Peak learning rate.
+    pub lr: f64,
+    /// Steps to train.
+    pub steps: usize,
+    /// Batch size (per worker).
+    pub batch_size: usize,
+    /// Data-parallel worker count (threads).
+    pub workers: usize,
+    /// Gradient-clip max norm (0 disables).
+    pub grad_clip: f64,
+    /// Random seed.
+    pub seed: u64,
+    /// Log every N steps.
+    pub log_every: usize,
+    /// Checkpoint path ("" disables).
+    pub checkpoint: String,
+    /// Tensor backend: "cpu" | "lazy" | "xla".
+    pub backend: String,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig {
+            model: "mlp".into(),
+            optimizer: "adam".into(),
+            lr: 1e-3,
+            steps: 100,
+            batch_size: 8,
+            workers: 1,
+            grad_clip: 0.0,
+            seed: 42,
+            log_every: 10,
+            checkpoint: String::new(),
+            backend: "cpu".into(),
+        }
+    }
+}
+
+impl TrainConfig {
+    /// Build from a parsed document (missing keys keep defaults).
+    pub fn from_doc(doc: &Doc) -> Result<TrainConfig> {
+        let mut c = TrainConfig::default();
+        let get_str = |sec: &str, key: &str| -> Option<String> {
+            doc.get(sec, key).and_then(|v| v.as_str().map(|s| s.to_string()))
+        };
+        if let Some(v) = get_str("model", "name") {
+            c.model = v;
+        }
+        if let Some(v) = get_str("train", "optimizer") {
+            c.optimizer = v;
+        }
+        if let Some(v) = doc.get("train", "lr").and_then(|v| v.as_float()) {
+            c.lr = v;
+        }
+        if let Some(v) = doc.get("train", "steps").and_then(|v| v.as_int()) {
+            c.steps = v as usize;
+        }
+        if let Some(v) = doc.get("train", "batch_size").and_then(|v| v.as_int()) {
+            c.batch_size = v as usize;
+        }
+        if let Some(v) = doc.get("train", "workers").and_then(|v| v.as_int()) {
+            c.workers = (v as usize).max(1);
+        }
+        if let Some(v) = doc.get("train", "grad_clip").and_then(|v| v.as_float()) {
+            c.grad_clip = v;
+        }
+        if let Some(v) = doc.get("train", "seed").and_then(|v| v.as_int()) {
+            c.seed = v as u64;
+        }
+        if let Some(v) = doc.get("train", "log_every").and_then(|v| v.as_int()) {
+            c.log_every = (v as usize).max(1);
+        }
+        if let Some(v) = get_str("train", "checkpoint") {
+            c.checkpoint = v;
+        }
+        if let Some(v) = get_str("train", "backend") {
+            c.backend = v;
+        }
+        c.validate()?;
+        Ok(c)
+    }
+
+    /// Parse a config file and apply `--set` overrides.
+    pub fn load(path: &Path, overrides: &[String]) -> Result<TrainConfig> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| Error::Config(format!("reading {path:?}: {e}")))?;
+        let mut doc = parse(&text)?;
+        for o in overrides {
+            doc.apply_override(o)?;
+        }
+        Self::from_doc(&doc)
+    }
+
+    /// Sanity checks.
+    pub fn validate(&self) -> Result<()> {
+        if self.lr <= 0.0 {
+            return Err(Error::Config(format!("lr must be positive, got {}", self.lr)));
+        }
+        if self.batch_size == 0 || self.steps == 0 {
+            return Err(Error::Config("steps and batch_size must be nonzero".into()));
+        }
+        if !["sgd", "adam", "adamw"].contains(&self.optimizer.as_str()) {
+            return Err(Error::Config(format!("unknown optimizer `{}`", self.optimizer)));
+        }
+        if !["cpu", "lazy", "xla"].contains(&self.backend.as_str()) {
+            return Err(Error::Config(format!("unknown backend `{}`", self.backend)));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_full_config() {
+        let doc = parse(
+            r#"
+            [model]
+            name = "bert"
+            [train]
+            optimizer = "adamw"
+            lr = 0.01
+            steps = 50
+            batch_size = 4
+            workers = 2
+            backend = "lazy"
+            "#,
+        )
+        .unwrap();
+        let c = TrainConfig::from_doc(&doc).unwrap();
+        assert_eq!(c.model, "bert");
+        assert_eq!(c.optimizer, "adamw");
+        assert_eq!(c.lr, 0.01);
+        assert_eq!(c.steps, 50);
+        assert_eq!(c.workers, 2);
+        assert_eq!(c.backend, "lazy");
+    }
+
+    #[test]
+    fn rejects_bad_values() {
+        let mut doc = parse("[train]\nlr = 0.1").unwrap();
+        doc.apply_override("train.optimizer=lion").unwrap();
+        assert!(TrainConfig::from_doc(&doc).is_err());
+        let mut doc2 = Doc::default();
+        doc2.apply_override("train.lr=-1").unwrap();
+        assert!(TrainConfig::from_doc(&doc2).is_err());
+    }
+
+    #[test]
+    fn overrides_win() {
+        let mut doc = parse("[train]\nlr = 0.1\nsteps = 10").unwrap();
+        doc.apply_override("train.lr=0.5").unwrap();
+        let c = TrainConfig::from_doc(&doc).unwrap();
+        assert_eq!(c.lr, 0.5);
+        assert_eq!(c.steps, 10);
+    }
+}

@@ -1,0 +1,12 @@
+//! Training coordinator: config system, trainer (train/eval loops with
+//! meters and checkpoints), and a data-parallel launcher over the
+//! distributed interface. This is the "application" layer of paper
+//! Figure 1, generalized into a reusable runtime.
+
+pub mod checkpoint;
+pub mod config;
+pub mod trainer;
+
+pub use checkpoint::{load_params, save_params};
+pub use config::TrainConfig;
+pub use trainer::{train_classifier, train_data_parallel, train_lm, TrainReport};

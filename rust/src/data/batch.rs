@@ -1,0 +1,75 @@
+//! Batching dataset (paper Listing 7's `BatchDataset`).
+
+use std::sync::Arc;
+
+use crate::tensor::Tensor;
+
+use super::{Dataset, Sample};
+
+/// Groups consecutive samples into batches by concatenating each column
+/// along axis 0. The final partial batch is kept (like the original
+/// library's default batching policy).
+pub struct BatchDataset {
+    inner: Arc<dyn Dataset>,
+    batch_size: usize,
+}
+
+impl BatchDataset {
+    /// Batch `inner` into groups of `batch_size`.
+    pub fn new(inner: Arc<dyn Dataset>, batch_size: usize) -> Self {
+        assert!(batch_size > 0);
+        BatchDataset { inner, batch_size }
+    }
+
+    /// Configured batch size.
+    pub fn batch_size(&self) -> usize {
+        self.batch_size
+    }
+}
+
+impl Dataset for BatchDataset {
+    fn len(&self) -> usize {
+        self.inner.len().div_ceil(self.batch_size)
+    }
+
+    fn get(&self, i: usize) -> Sample {
+        let start = i * self.batch_size;
+        let end = (start + self.batch_size).min(self.inner.len());
+        assert!(start < end, "batch index {i} out of range");
+        let samples: Vec<Sample> = (start..end).map(|j| self.inner.get(j)).collect();
+        let cols = samples[0].len();
+        (0..cols)
+            .map(|c| {
+                let parts: Vec<&Tensor> = samples.iter().map(|s| &s[c]).collect();
+                Tensor::concat(&parts, 0)
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::TensorDataset;
+    use crate::tensor::DType;
+
+    #[test]
+    fn batches_and_partial_tail() {
+        let x = Tensor::arange(10, DType::F32).reshape(&[10, 1]);
+        let ds = BatchDataset::new(Arc::new(TensorDataset::new(vec![x])), 4);
+        assert_eq!(ds.len(), 3);
+        assert_eq!(ds.get(0)[0].dims(), &[4, 1]);
+        assert_eq!(ds.get(2)[0].dims(), &[2, 1]); // partial tail
+        assert_eq!(ds.get(2)[0].to_vec(), vec![8.0, 9.0]);
+    }
+
+    #[test]
+    fn multiple_columns_stay_aligned() {
+        let x = Tensor::arange(6, DType::F32).reshape(&[6, 1]);
+        let y = Tensor::from_slice(&[10i64, 11, 12, 13, 14, 15], [6]);
+        let ds = BatchDataset::new(Arc::new(TensorDataset::new(vec![x, y])), 3);
+        let b = ds.get(1);
+        assert_eq!(b[0].to_vec(), vec![3.0, 4.0, 5.0]);
+        assert_eq!(b[1].to_vec_i64(), vec![13, 14, 15]);
+    }
+}

@@ -1,0 +1,114 @@
+//! Composable dataset pipeline (paper §4.2 "Data Loaders").
+//!
+//! A *sample* is a `Vec<Tensor>` (e.g. `[input, target]`). Datasets are
+//! trivially composable to transform, resample, batch, or parallelize
+//! (via native threads — [`PrefetchDataset`]) the construction of samples.
+
+pub mod batch;
+pub mod prefetch;
+pub mod shuffle;
+pub mod transform;
+
+pub use batch::BatchDataset;
+pub use prefetch::PrefetchDataset;
+pub use shuffle::ShuffleDataset;
+pub use transform::TransformDataset;
+
+use std::sync::Arc;
+
+use crate::tensor::Tensor;
+
+/// A sample: one or more tensors.
+pub type Sample = Vec<Tensor>;
+
+/// The dataset interface. Implementations must be cheap to `get` in any
+/// order and thread-safe (prefetchers call from worker threads).
+pub trait Dataset: Send + Sync {
+    /// Number of samples.
+    fn len(&self) -> usize;
+    /// Fetch sample `i` (`i < len`).
+    fn get(&self, i: usize) -> Sample;
+    /// Is the dataset empty?
+    fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// Iterate a dataset in order (paper Listing 9's `for example in dataset`).
+pub struct DataIter {
+    ds: Arc<dyn Dataset>,
+    i: usize,
+}
+
+impl Iterator for DataIter {
+    type Item = Sample;
+    fn next(&mut self) -> Option<Sample> {
+        if self.i >= self.ds.len() {
+            return None;
+        }
+        let s = self.ds.get(self.i);
+        self.i += 1;
+        Some(s)
+    }
+}
+
+/// Convenience: iterate any dataset.
+pub fn iter(ds: Arc<dyn Dataset>) -> DataIter {
+    DataIter { ds, i: 0 }
+}
+
+/// In-memory dataset over column tensors: sample `i` is the `i`-th slice
+/// of each tensor along axis 0 (paper Listing 7's `TensorDataset`).
+pub struct TensorDataset {
+    columns: Vec<Tensor>,
+    n: usize,
+}
+
+impl TensorDataset {
+    /// All columns must share their first dimension.
+    pub fn new(columns: Vec<Tensor>) -> Self {
+        assert!(!columns.is_empty(), "TensorDataset needs at least one column");
+        let n = columns[0].dim(0);
+        for c in &columns {
+            assert_eq!(c.dim(0), n, "column length mismatch");
+        }
+        TensorDataset { columns, n }
+    }
+}
+
+impl Dataset for TensorDataset {
+    fn len(&self) -> usize {
+        self.n
+    }
+
+    fn get(&self, i: usize) -> Sample {
+        assert!(i < self.n, "index {i} out of range {}", self.n);
+        self.columns.iter().map(|c| c.narrow(0, i, 1)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::DType;
+
+    #[test]
+    fn tensor_dataset_slices_rows() {
+        let x = Tensor::arange(12, DType::F32).reshape(&[4, 3]);
+        let y = Tensor::from_slice(&[0i64, 1, 2, 3], [4]);
+        let ds = TensorDataset::new(vec![x, y]);
+        assert_eq!(ds.len(), 4);
+        let s = ds.get(2);
+        assert_eq!(s[0].dims(), &[1, 3]);
+        assert_eq!(s[0].to_vec(), vec![6.0, 7.0, 8.0]);
+        assert_eq!(s[1].to_vec_i64(), vec![2]);
+    }
+
+    #[test]
+    fn iterator_walks_all() {
+        let x = Tensor::arange(5, DType::F32).reshape(&[5, 1]);
+        let ds: Arc<dyn Dataset> = Arc::new(TensorDataset::new(vec![x]));
+        let seen: Vec<f32> = iter(ds).map(|s| s[0].to_vec()[0]).collect();
+        assert_eq!(seen, vec![0.0, 1.0, 2.0, 3.0, 4.0]);
+    }
+}

@@ -1,0 +1,179 @@
+//! Thread-parallel prefetching (paper §4.2: datasets "parallelize (via
+//! native C++ threads) the construction of samples").
+//!
+//! `PrefetchDataset` keeps a sliding window of in-flight samples computed
+//! by a worker pool, so expensive transforms (augmentation, featurization)
+//! overlap with training compute.
+
+use std::collections::HashMap;
+use std::sync::mpsc;
+use std::sync::Arc;
+
+use super::{Dataset, Sample};
+
+/// Sequential-access prefetcher: wraps an inner dataset and computes up to
+/// `ahead` samples in advance on `workers` threads.
+pub struct PrefetchDataset {
+    inner: Arc<dyn Dataset>,
+    workers: usize,
+    ahead: usize,
+}
+
+impl PrefetchDataset {
+    /// Prefetch up to `ahead` samples using `workers` threads.
+    pub fn new(inner: Arc<dyn Dataset>, workers: usize, ahead: usize) -> Self {
+        PrefetchDataset { inner, workers: workers.max(1), ahead: ahead.max(1) }
+    }
+
+    /// Iterate the dataset in order with background prefetching. The
+    /// returned iterator owns the worker pool for its lifetime.
+    pub fn iter(&self) -> PrefetchIter {
+        let n = self.inner.len();
+        let (task_tx, task_rx) = mpsc::channel::<usize>();
+        let task_rx = Arc::new(std::sync::Mutex::new(task_rx));
+        let (done_tx, done_rx) = mpsc::channel::<(usize, Sample)>();
+        let mut handles = Vec::new();
+        for _ in 0..self.workers {
+            let rx = task_rx.clone();
+            let tx = done_tx.clone();
+            let ds = self.inner.clone();
+            handles.push(std::thread::spawn(move || {
+                loop {
+                    let idx = { rx.lock().unwrap().recv() };
+                    match idx {
+                        Ok(i) => {
+                            if tx.send((i, ds.get(i))).is_err() {
+                                break;
+                            }
+                        }
+                        Err(_) => break,
+                    }
+                }
+            }));
+        }
+        // seed the window
+        let mut submitted = 0usize;
+        while submitted < self.ahead.min(n) {
+            task_tx.send(submitted).unwrap();
+            submitted += 1;
+        }
+        PrefetchIter {
+            n,
+            next: 0,
+            submitted,
+            task_tx: Some(task_tx),
+            done_rx,
+            ready: HashMap::new(),
+            handles,
+        }
+    }
+}
+
+impl Dataset for PrefetchDataset {
+    fn len(&self) -> usize {
+        self.inner.len()
+    }
+    /// Random access falls through to the inner dataset (no prefetch).
+    fn get(&self, i: usize) -> Sample {
+        self.inner.get(i)
+    }
+}
+
+/// Ordered iterator with a live worker pool.
+pub struct PrefetchIter {
+    n: usize,
+    next: usize,
+    submitted: usize,
+    task_tx: Option<mpsc::Sender<usize>>,
+    done_rx: mpsc::Receiver<(usize, Sample)>,
+    ready: HashMap<usize, Sample>,
+    handles: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl Iterator for PrefetchIter {
+    type Item = Sample;
+
+    fn next(&mut self) -> Option<Sample> {
+        if self.next >= self.n {
+            return None;
+        }
+        // drain completions until the in-order sample arrives
+        while !self.ready.contains_key(&self.next) {
+            let (i, s) = self.done_rx.recv().expect("prefetch worker died");
+            self.ready.insert(i, s);
+        }
+        let out = self.ready.remove(&self.next).unwrap();
+        self.next += 1;
+        if self.submitted < self.n {
+            if let Some(tx) = &self.task_tx {
+                tx.send(self.submitted).ok();
+                self.submitted += 1;
+            }
+        }
+        Some(out)
+    }
+}
+
+impl Drop for PrefetchIter {
+    fn drop(&mut self) {
+        // closing the task channel stops the workers
+        self.task_tx.take();
+        // drain to unblock senders
+        while self.done_rx.try_recv().is_ok() {}
+        for h in self.handles.drain(..) {
+            h.join().ok();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{TensorDataset, TransformDataset};
+    use crate::tensor::{DType, Tensor};
+
+    #[test]
+    fn preserves_order_with_parallel_workers() {
+        let x = Tensor::arange(64, DType::F32).reshape(&[64, 1]);
+        let slow = TransformDataset::new(Arc::new(TensorDataset::new(vec![x])), |s| {
+            std::thread::sleep(std::time::Duration::from_micros(200));
+            s
+        });
+        let pf = PrefetchDataset::new(Arc::new(slow), 4, 8);
+        let got: Vec<f32> = pf.iter().map(|s| s[0].to_vec()[0]).collect();
+        assert_eq!(got, (0..64).map(|i| i as f32).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn prefetch_overlaps_work() {
+        use std::time::Instant;
+        let x = Tensor::arange(32, DType::F32).reshape(&[32, 1]);
+        let make = || {
+            TransformDataset::new(Arc::new(TensorDataset::new(vec![x.clone()])), |s| {
+                std::thread::sleep(std::time::Duration::from_millis(2));
+                s
+            })
+        };
+        let t0 = Instant::now();
+        let serial: usize = (0..32).map(|i| make().get(i).len()).sum();
+        let serial_time = t0.elapsed();
+        let pf = PrefetchDataset::new(Arc::new(make()), 8, 16);
+        let t1 = Instant::now();
+        let par: usize = pf.iter().map(|s| s.len()).sum();
+        let par_time = t1.elapsed();
+        assert_eq!(serial, par);
+        assert!(
+            par_time < serial_time,
+            "prefetch ({par_time:?}) not faster than serial ({serial_time:?})"
+        );
+    }
+
+    #[test]
+    fn drop_mid_iteration_is_clean() {
+        let x = Tensor::arange(100, DType::F32).reshape(&[100, 1]);
+        let pf = PrefetchDataset::new(Arc::new(TensorDataset::new(vec![x])), 2, 4);
+        let mut it = pf.iter();
+        let _ = it.next();
+        drop(it); // must not hang or panic
+    }
+}

@@ -1,0 +1,71 @@
+//! Order-shuffling dataset.
+
+use std::sync::{Arc, RwLock};
+
+use crate::util::rng::Rng;
+
+use super::{Dataset, Sample};
+
+/// Presents `inner` in a (re-seedable) random order.
+pub struct ShuffleDataset {
+    inner: Arc<dyn Dataset>,
+    perm: RwLock<Vec<usize>>,
+}
+
+impl ShuffleDataset {
+    /// Shuffle with the given seed.
+    pub fn new(inner: Arc<dyn Dataset>, seed: u64) -> Self {
+        let mut rng = Rng::new(seed);
+        let perm = rng.permutation(inner.len());
+        ShuffleDataset { inner, perm: RwLock::new(perm) }
+    }
+
+    /// Re-shuffle (per-epoch).
+    pub fn resample(&self, seed: u64) {
+        let mut rng = Rng::new(seed);
+        *self.perm.write().unwrap() = rng.permutation(self.inner.len());
+    }
+}
+
+impl Dataset for ShuffleDataset {
+    fn len(&self) -> usize {
+        self.inner.len()
+    }
+
+    fn get(&self, i: usize) -> Sample {
+        let j = self.perm.read().unwrap()[i];
+        self.inner.get(j)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::TensorDataset;
+    use crate::tensor::{DType, Tensor};
+
+    fn values(ds: &dyn Dataset) -> Vec<f32> {
+        (0..ds.len()).map(|i| ds.get(i)[0].to_vec()[0]).collect()
+    }
+
+    #[test]
+    fn is_permutation_of_inner() {
+        let x = Tensor::arange(20, DType::F32).reshape(&[20, 1]);
+        let ds = ShuffleDataset::new(Arc::new(TensorDataset::new(vec![x])), 7);
+        let mut v = values(&ds);
+        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        assert_eq!(v, (0..20).map(|i| i as f32).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn seeds_are_deterministic_and_resample_changes_order() {
+        let x = Tensor::arange(50, DType::F32).reshape(&[50, 1]);
+        let inner = Arc::new(TensorDataset::new(vec![x]));
+        let a = ShuffleDataset::new(inner.clone(), 1);
+        let b = ShuffleDataset::new(inner.clone(), 1);
+        assert_eq!(values(&a), values(&b));
+        let before = values(&a);
+        a.resample(2);
+        assert_ne!(values(&a), before);
+    }
+}

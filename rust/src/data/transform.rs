@@ -1,0 +1,49 @@
+//! Sample-level transformation dataset (augmentations, preprocessing).
+
+use std::sync::Arc;
+
+use super::{Dataset, Sample};
+
+/// Applies a function to each sample on access (composes with shuffling,
+/// batching, and prefetching).
+pub struct TransformDataset {
+    inner: Arc<dyn Dataset>,
+    f: Box<dyn Fn(Sample) -> Sample + Send + Sync>,
+}
+
+impl TransformDataset {
+    /// Wrap `inner` with transform `f`.
+    pub fn new(inner: Arc<dyn Dataset>, f: impl Fn(Sample) -> Sample + Send + Sync + 'static) -> Self {
+        TransformDataset { inner, f: Box::new(f) }
+    }
+}
+
+impl Dataset for TransformDataset {
+    fn len(&self) -> usize {
+        self.inner.len()
+    }
+    fn get(&self, i: usize) -> Sample {
+        (self.f)(self.inner.get(i))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::TensorDataset;
+    use crate::tensor::{DType, Tensor};
+
+    #[test]
+    fn applies_transform_lazily() {
+        let x = Tensor::arange(4, DType::F32).reshape(&[4, 1]);
+        let ds = TransformDataset::new(
+            Arc::new(TensorDataset::new(vec![x])),
+            |mut s| {
+                s[0] = s[0].mul_scalar(10.0);
+                s
+            },
+        );
+        assert_eq!(ds.get(3)[0].to_vec(), vec![30.0]);
+        assert_eq!(ds.len(), 4);
+    }
+}

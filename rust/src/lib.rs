@@ -1,0 +1,49 @@
+//! # flashlight-rs
+//!
+//! A Rust reproduction of **Flashlight: Enabling Innovation in Tools for
+//! Machine Learning** (Kahn et al., ICML 2022): a minimalist, modular ML
+//! framework whose contribution is its *open internal APIs* — a small
+//! [`tensor::TensorBackend`] interface, a pluggable
+//! [`memory::MemoryManagerAdapter`], a pluggable
+//! [`dist::DistributedInterface`], a lightweight tape [`autograd`], and
+//! compact reference implementations of each — plus domain packages and a
+//! model zoo that make it a turn-key test bench for systems research.
+//!
+//! Architecture (paper Figure 1):
+//!
+//! ```text
+//!  applications (examples/, coordinator)       trainers, launchers, CLI
+//!  packages     (pkg::{speech, vision, text})  domain building blocks
+//!  core         (nn, optim, data, meter)       modules, losses, pipelines
+//!  autograd     (autograd::Variable)           dynamic tape
+//!  foundation   (tensor, memory, dist)         open foundational interfaces
+//!  backends     (tensor::cpu, tensor::lazy,    eager / deferred / AOT-static
+//!                tensor::xla_backend+runtime)  computation modes (Figure 2)
+//! ```
+//!
+//! The hot compute path can be offloaded to AOT-compiled XLA executables
+//! (authored in JAX + Pallas at build time, loaded via PJRT by
+//! [`runtime`]) — the analog of the original library's cuDNN/MKL vendor
+//! kernels, behind the same small backend API.
+
+pub mod autograd;
+pub mod baseline;
+pub mod coordinator;
+pub mod data;
+pub mod dist;
+pub mod memory;
+pub mod meter;
+pub mod models;
+pub mod nn;
+pub mod optim;
+pub mod pkg;
+pub mod runtime;
+pub mod tensor;
+pub mod testutil;
+pub mod util;
+
+pub use autograd::Variable;
+pub use tensor::{DType, Shape, Tensor};
+
+/// Library version, mirroring the paper's evaluated Flashlight v0.3.1.
+pub const VERSION: &str = "0.3.1-rs";

@@ -1,0 +1,108 @@
+//! Raw aligned memory blocks handed out by memory managers.
+
+use std::alloc::{alloc, dealloc, Layout};
+
+/// Alignment of every block (cache-line / SIMD friendly).
+pub const BLOCK_ALIGN: usize = 64;
+
+/// A contiguous region a manager handed to a user.
+///
+/// Blocks may be sub-ranges of a larger native *segment* owned by the
+/// manager (`segment != NATIVE`), or standalone native allocations that the
+/// receiver of the block is responsible for returning (never freeing
+/// directly — always via [`super::MemoryManagerAdapter::unlock`]).
+pub struct Block {
+    ptr: *mut u8,
+    /// Usable size in bytes (possibly rounded up from the request).
+    pub size: usize,
+    /// Manager-private segment id (`usize::MAX` = standalone native block).
+    pub segment: usize,
+    /// Offset within the segment.
+    pub offset: usize,
+}
+
+// Safety: a Block is an exclusive handle to its region.
+unsafe impl Send for Block {}
+unsafe impl Sync for Block {}
+
+impl Block {
+    /// Standalone-native sentinel for `segment`.
+    pub const NATIVE: usize = usize::MAX;
+
+    /// Construct a block view (manager-internal use).
+    pub fn new(ptr: *mut u8, size: usize, segment: usize, offset: usize) -> Self {
+        Block { ptr, size, segment, offset }
+    }
+
+    /// Base pointer.
+    pub fn ptr(&self) -> *mut u8 {
+        self.ptr
+    }
+}
+
+impl std::fmt::Debug for Block {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "Block(size={}, segment={}, offset={})", self.size, self.segment, self.offset)
+    }
+}
+
+/// An owned native allocation (a manager-held segment or a standalone
+/// passthrough block). Freed on drop.
+pub struct NativeAlloc {
+    ptr: *mut u8,
+    layout: Layout,
+}
+
+unsafe impl Send for NativeAlloc {}
+unsafe impl Sync for NativeAlloc {}
+
+impl NativeAlloc {
+    /// Allocate `size` bytes, 64-byte aligned. Zero-size requests get a
+    /// minimal 64-byte allocation so pointers stay valid and unique.
+    pub fn new(size: usize) -> Self {
+        let size = size.max(BLOCK_ALIGN);
+        let layout = Layout::from_size_align(size, BLOCK_ALIGN).expect("bad layout");
+        let ptr = unsafe { alloc(layout) };
+        assert!(!ptr.is_null(), "native allocation of {size} bytes failed");
+        NativeAlloc { ptr, layout }
+    }
+
+    /// Base pointer.
+    pub fn ptr(&self) -> *mut u8 {
+        self.ptr
+    }
+
+    /// Allocated size.
+    pub fn size(&self) -> usize {
+        self.layout.size()
+    }
+}
+
+impl Drop for NativeAlloc {
+    fn drop(&mut self) {
+        unsafe { dealloc(self.ptr, self.layout) };
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn native_alloc_alignment() {
+        for size in [1usize, 63, 64, 65, 4096, 1 << 20] {
+            let a = NativeAlloc::new(size);
+            assert_eq!(a.ptr() as usize % BLOCK_ALIGN, 0);
+            assert!(a.size() >= size);
+            // write across the whole region
+            unsafe { std::ptr::write_bytes(a.ptr(), 0xAB, a.size()) };
+        }
+    }
+
+    #[test]
+    fn block_debug() {
+        let a = NativeAlloc::new(128);
+        let b = Block::new(a.ptr(), 128, Block::NATIVE, 0);
+        assert!(format!("{b:?}").contains("size=128"));
+    }
+}

@@ -1,0 +1,418 @@
+//! Caching memory manager with block splitting — the substrate of the
+//! paper's fragmentation case study (§5.2.2).
+//!
+//! Design follows the caching allocators used across deep-learning
+//! frameworks: requests are rounded to 512-byte quanta; small requests are
+//! carved out of pooled 2 MiB segments, large requests get dedicated
+//! segments; freed blocks go to a size-indexed free list and are coalesced
+//! with free neighbors.
+//!
+//! The case-study knob is [`CachingConfig::max_split_size`]: the paper's
+//! researchers found that **restricting splitting of large cache blocks**
+//! reduced fragmentation by over 20% on most models. With splitting
+//! unrestricted, a large free block can be chipped into many odd-sized
+//! residues that never fit later requests (external fragmentation); with a
+//! threshold, oversized blocks are only handed out whole, keeping the pool
+//! reusable. `benches/case_memory.rs` replays identical traces through both
+//! configurations and reports the fragmentation delta.
+
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+
+use super::block::{Block, NativeAlloc};
+use super::{MemStats, MemoryManagerAdapter};
+use crate::util::error::Result;
+
+/// Allocation-size quantum (all requests round up to a multiple of this).
+pub const QUANTUM: usize = 512;
+/// Requests at or below this size share pooled segments.
+pub const SMALL_LIMIT: usize = 1 << 20; // 1 MiB
+/// Size of pooled segments for small requests.
+pub const SMALL_SEGMENT: usize = 2 << 20; // 2 MiB
+/// Minimum leftover for a split to happen (smaller residues stay attached
+/// as internal fragmentation).
+pub const MIN_SPLIT_REMAINDER: usize = QUANTUM;
+
+/// Tuning knobs for [`CachingMemoryManager`].
+#[derive(Debug, Clone, Copy)]
+pub struct CachingConfig {
+    /// Free blocks larger than this are never split: they are handed out
+    /// whole (if the request is large) or bypassed. `usize::MAX` disables
+    /// the restriction (classic caching-allocator behavior).
+    pub max_split_size: usize,
+    /// Round requests up to the next power-of-two multiple of `QUANTUM`
+    /// when below `SMALL_LIMIT` (bucketing); otherwise round to `QUANTUM`.
+    pub pow2_buckets: bool,
+}
+
+impl Default for CachingConfig {
+    fn default() -> Self {
+        CachingConfig { max_split_size: usize::MAX, pow2_buckets: false }
+    }
+}
+
+struct Segment {
+    native: NativeAlloc,
+    /// offset -> (size, free?) for every block carved from this segment.
+    blocks: BTreeMap<usize, (usize, bool)>,
+}
+
+#[derive(Default)]
+struct Pool {
+    segments: Vec<Option<Segment>>,
+    /// (size, segment, offset) ordered index over free blocks.
+    free_index: std::collections::BTreeSet<(usize, usize, usize)>,
+    stats: MemStats,
+}
+
+/// See module docs.
+pub struct CachingMemoryManager {
+    cfg: CachingConfig,
+    pool: Mutex<Pool>,
+    name: String,
+}
+
+impl CachingMemoryManager {
+    /// Build with an explicit config.
+    pub fn new(cfg: CachingConfig) -> Self {
+        let name = if cfg.max_split_size == usize::MAX {
+            "caching".to_string()
+        } else {
+            format!("caching(max_split={})", cfg.max_split_size)
+        };
+        CachingMemoryManager { cfg, pool: Mutex::new(Pool::default()), name }
+    }
+
+    /// Classic caching allocator: unlimited splitting.
+    pub fn unrestricted() -> Self {
+        Self::new(CachingConfig::default())
+    }
+
+    /// The case-study variant: blocks above `max_split_size` bytes are
+    /// never split.
+    pub fn split_restricted(max_split_size: usize) -> Self {
+        Self::new(CachingConfig { max_split_size, ..Default::default() })
+    }
+
+    fn round(&self, bytes: usize) -> usize {
+        let bytes = bytes.max(1);
+        if self.cfg.pow2_buckets && bytes <= SMALL_LIMIT {
+            let quanta = bytes.div_ceil(QUANTUM);
+            (quanta.next_power_of_two()) * QUANTUM
+        } else {
+            bytes.div_ceil(QUANTUM) * QUANTUM
+        }
+    }
+}
+
+impl Pool {
+    fn bump_peaks(&mut self) {
+        self.stats.peak_allocated_bytes =
+            self.stats.peak_allocated_bytes.max(self.stats.allocated_bytes);
+        self.stats.peak_reserved_bytes =
+            self.stats.peak_reserved_bytes.max(self.stats.reserved_bytes);
+    }
+
+    /// Take the best-fit free block of size >= `want`, if any.
+    fn take_free(&mut self, want: usize) -> Option<(usize, usize, usize)> {
+        let key = self
+            .free_index
+            .range((want, 0, 0)..)
+            .next()
+            .copied()?;
+        self.free_index.remove(&key);
+        Some(key)
+    }
+
+    fn new_segment(&mut self, size: usize) -> usize {
+        let native = NativeAlloc::new(size);
+        self.stats.reserved_bytes += native.size();
+        self.stats.native_alloc_count += 1;
+        let seg = Segment { native, blocks: BTreeMap::new() };
+        // reuse a vacated slot if available
+        if let Some(idx) = self.segments.iter().position(|s| s.is_none()) {
+            self.segments[idx] = Some(seg);
+            idx
+        } else {
+            self.segments.push(Some(seg));
+            self.segments.len() - 1
+        }
+    }
+}
+
+impl MemoryManagerAdapter for CachingMemoryManager {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn alloc(&self, bytes: usize) -> Result<Block> {
+        let want = self.round(bytes);
+        let mut pool = self.pool.lock().unwrap();
+        pool.stats.alloc_count += 1;
+
+        // 1) try the free list
+        if let Some((size, seg_id, offset)) = pool.take_free(want) {
+            // the split restriction governs the *large* pool only; blocks
+            // within the pooled small-segment size always split (PyTorch's
+            // max_split_size semantics)
+            let splittable = size <= self.cfg.max_split_size || size <= SMALL_SEGMENT;
+            let remainder = size - want;
+            let (give, split) = if splittable && remainder >= MIN_SPLIT_REMAINDER {
+                (want, true)
+            } else if !splittable && remainder >= MIN_SPLIT_REMAINDER && size > want * 4 {
+                // Restricted mode: a grossly oversized unsplittable block is
+                // a bad fit — put it back and fall through to a fresh
+                // segment instead of wasting it.
+                pool.free_index.insert((size, seg_id, offset));
+                return self.alloc_fresh(&mut pool, want);
+            } else {
+                (size, false)
+            };
+            pool.stats.cache_hit_count += 1;
+            let seg = pool.segments[seg_id].as_mut().unwrap();
+            if split {
+                seg.blocks.insert(offset, (give, false));
+                seg.blocks.insert(offset + give, (size - give, true));
+                let base = seg.native.ptr();
+                pool.free_index.insert((size - give, seg_id, offset + give));
+                pool.stats.split_count += 1;
+                pool.stats.allocated_bytes += give;
+                pool.bump_peaks();
+                return Ok(Block::new(unsafe { base.add(offset) }, give, seg_id, offset));
+            }
+            seg.blocks.insert(offset, (give, false));
+            let base = seg.native.ptr();
+            pool.stats.allocated_bytes += give;
+            pool.bump_peaks();
+            return Ok(Block::new(unsafe { base.add(offset) }, give, seg_id, offset));
+        }
+
+        self.alloc_fresh(&mut pool, want)
+    }
+
+    fn unlock(&self, block: Block) {
+        let mut pool = self.pool.lock().unwrap();
+        let seg_id = block.segment;
+        let (mut offset, mut size) = (block.offset, block.size);
+        pool.stats.allocated_bytes = pool.stats.allocated_bytes.saturating_sub(size);
+        let seg = pool.segments[seg_id].as_mut().expect("unlock into vacated segment");
+        seg.blocks.remove(&offset);
+
+        // coalesce with the free block immediately after
+        let mut coalesced = 0u64;
+        if let Some((&next_off, &(next_size, next_free))) =
+            seg.blocks.range(offset + size..).next()
+        {
+            if next_free && next_off == offset + size {
+                seg.blocks.remove(&next_off);
+                pool.free_index.remove(&(next_size, seg_id, next_off));
+                size += next_size;
+                coalesced += 1;
+            }
+        }
+        // re-borrow (free_index removal above required pool access)
+        let seg = pool.segments[seg_id].as_mut().unwrap();
+        // coalesce with the free block immediately before
+        if let Some((&prev_off, &(prev_size, prev_free))) = seg.blocks.range(..offset).next_back()
+        {
+            if prev_free && prev_off + prev_size == offset {
+                seg.blocks.remove(&prev_off);
+                pool.free_index.remove(&(prev_size, seg_id, prev_off));
+                offset = prev_off;
+                size += prev_size;
+                coalesced += 1;
+            }
+        }
+        let seg = pool.segments[seg_id].as_mut().unwrap();
+        seg.blocks.insert(offset, (size, true));
+        pool.free_index.insert((size, seg_id, offset));
+        pool.stats.coalesce_count += coalesced;
+    }
+
+    fn stats(&self) -> MemStats {
+        self.pool.lock().unwrap().stats
+    }
+
+    fn clear_cache(&self) {
+        let mut pool = self.pool.lock().unwrap();
+        let mut freed = Vec::new();
+        for (seg_id, slot) in pool.segments.iter_mut().enumerate() {
+            let fully_free = match slot {
+                Some(seg) => seg.blocks.values().all(|&(_, free)| free),
+                None => false,
+            };
+            if fully_free {
+                let seg = slot.take().unwrap();
+                freed.push((seg_id, seg));
+            }
+        }
+        for (seg_id, seg) in freed {
+            for (&off, &(sz, free)) in &seg.blocks {
+                if free {
+                    pool.free_index.remove(&(sz, seg_id, off));
+                }
+            }
+            pool.stats.reserved_bytes -= seg.native.size();
+            // seg drops -> native memory returned
+        }
+    }
+}
+
+impl CachingMemoryManager {
+    fn alloc_fresh(&self, pool: &mut Pool, want: usize) -> Result<Block> {
+        // 2) new segment: pooled for small requests, dedicated for large
+        let seg_size = if want <= SMALL_LIMIT { SMALL_SEGMENT } else { want };
+        let seg_id = pool.new_segment(seg_size);
+        let seg = pool.segments[seg_id].as_mut().unwrap();
+        let total = seg.native.size();
+        let base = seg.native.ptr();
+        let remainder = total - want;
+        let splittable = total <= self.cfg.max_split_size || total == SMALL_SEGMENT;
+        if splittable && remainder >= MIN_SPLIT_REMAINDER {
+            seg.blocks.insert(0, (want, false));
+            seg.blocks.insert(want, (remainder, true));
+            pool.free_index.insert((remainder, seg_id, want));
+            pool.stats.split_count += 1;
+            pool.stats.allocated_bytes += want;
+            pool.bump_peaks();
+            Ok(Block::new(base, want, seg_id, 0))
+        } else {
+            seg.blocks.insert(0, (total, false));
+            pool.stats.allocated_bytes += total;
+            pool.bump_peaks();
+            Ok(Block::new(base, total, seg_id, 0))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn check_no_overlap(m: &CachingMemoryManager) {
+        let pool = m.pool.lock().unwrap();
+        for slot in pool.segments.iter().flatten() {
+            let mut prev_end = 0usize;
+            for (&off, &(size, _)) in &slot.blocks {
+                assert!(off >= prev_end, "overlapping blocks");
+                prev_end = off + size;
+            }
+            assert!(prev_end <= slot.native.size());
+        }
+    }
+
+    #[test]
+    fn reuse_after_free() {
+        let m = CachingMemoryManager::unrestricted();
+        let b = m.alloc(10_000).unwrap();
+        let p = b.ptr() as usize;
+        m.unlock(b);
+        let b2 = m.alloc(10_000).unwrap();
+        assert_eq!(b2.ptr() as usize, p, "expected cache hit to reuse block");
+        assert_eq!(m.stats().cache_hit_count, 1);
+        m.unlock(b2);
+        check_no_overlap(&m);
+    }
+
+    #[test]
+    fn splitting_and_coalescing() {
+        let m = CachingMemoryManager::unrestricted();
+        // Small allocs carve a shared 2MiB segment
+        let a = m.alloc(1024).unwrap();
+        let b = m.alloc(1024).unwrap();
+        assert_eq!(m.stats().native_alloc_count, 1, "both should share one segment");
+        assert_eq!(a.segment, b.segment);
+        m.unlock(a);
+        m.unlock(b);
+        let s = m.stats();
+        assert!(s.coalesce_count >= 2, "frees should coalesce, got {}", s.coalesce_count);
+        // after coalescing the whole segment is one free block again
+        let big = m.alloc(SMALL_SEGMENT / 2).unwrap();
+        assert_eq!(m.stats().native_alloc_count, 1, "should reuse coalesced segment");
+        m.unlock(big);
+        check_no_overlap(&m);
+    }
+
+    #[test]
+    fn split_restriction_blocks_large_splits() {
+        let max_split = 4 << 20;
+        let m = CachingMemoryManager::split_restricted(max_split);
+        // allocate and free a large (unsplittable) block
+        let b = m.alloc(8 << 20).unwrap();
+        m.unlock(b);
+        // a small-ish large request must NOT carve the 8MiB block
+        let c = m.alloc(2 << 20).unwrap();
+        assert_eq!(m.stats().split_count, 0, "restricted manager must not split large blocks");
+        m.unlock(c);
+        check_no_overlap(&m);
+
+        // unrestricted manager happily splits the same sequence
+        let u = CachingMemoryManager::unrestricted();
+        let b = u.alloc(8 << 20).unwrap();
+        u.unlock(b);
+        let c = u.alloc(2 << 20).unwrap();
+        assert!(u.stats().split_count >= 1);
+        u.unlock(c);
+    }
+
+    #[test]
+    fn clear_cache_releases_reserved() {
+        let m = CachingMemoryManager::unrestricted();
+        let b = m.alloc(3 << 20).unwrap();
+        m.unlock(b);
+        assert!(m.stats().reserved_bytes >= 3 << 20);
+        m.clear_cache();
+        assert_eq!(m.stats().reserved_bytes, 0);
+        // allocating again works after a clear
+        let b = m.alloc(1024).unwrap();
+        m.unlock(b);
+    }
+
+    #[test]
+    fn stats_allocated_matches_live() {
+        let m = CachingMemoryManager::unrestricted();
+        let blocks: Vec<_> = (0..10).map(|i| m.alloc(1000 * (i + 1)).unwrap()).collect();
+        let live: usize = blocks.iter().map(|b| b.size).sum();
+        assert_eq!(m.stats().allocated_bytes, live);
+        for b in blocks {
+            m.unlock(b);
+        }
+        assert_eq!(m.stats().allocated_bytes, 0);
+        assert!(m.stats().fragmentation() >= 0.999); // all reserved, none live
+    }
+
+    #[test]
+    fn pow2_bucketing_rounds_up() {
+        let m = CachingMemoryManager::new(CachingConfig { pow2_buckets: true, ..Default::default() });
+        let b = m.alloc(QUANTUM + 1).unwrap();
+        assert_eq!(b.size, 2 * QUANTUM);
+        m.unlock(b);
+    }
+
+    #[test]
+    fn many_random_allocs_no_overlap() {
+        use crate::util::rng::Rng;
+        let m = CachingMemoryManager::unrestricted();
+        let mut rng = Rng::new(123);
+        let mut live: Vec<Block> = Vec::new();
+        for _ in 0..2000 {
+            if !live.is_empty() && rng.uniform() < 0.45 {
+                let i = rng.below(live.len());
+                let b = live.swap_remove(i);
+                // verify the block's memory is still exclusively ours
+                unsafe { std::ptr::write_bytes(b.ptr(), 0xCD, b.size) };
+                m.unlock(b);
+            } else {
+                let sz = 1 + rng.below(300_000);
+                let b = m.alloc(sz).unwrap();
+                unsafe { std::ptr::write_bytes(b.ptr(), 0xAB, b.size) };
+                live.push(b);
+            }
+        }
+        check_no_overlap(&m);
+        for b in live {
+            m.unlock(b);
+        }
+        assert_eq!(m.stats().allocated_bytes, 0);
+    }
+}

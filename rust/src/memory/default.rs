@@ -1,0 +1,108 @@
+//! Passthrough memory manager: every `alloc` hits the system allocator.
+//!
+//! This is the installed default — on CPU, malloc is already a caching
+//! allocator, and a lock-free passthrough keeps parallel kernels from
+//! contending on a pool mutex. It still maintains full [`MemStats`] so
+//! telemetry and benches can compare it against the caching managers.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+use super::block::{Block, NativeAlloc};
+use super::{MemStats, MemoryManagerAdapter};
+use crate::util::error::Result;
+
+/// See module docs.
+pub struct DefaultMemoryManager {
+    live: Mutex<HashMap<usize, NativeAlloc>>, // ptr -> owner
+    allocated: AtomicUsize,
+    peak_allocated: AtomicUsize,
+    allocs: AtomicU64,
+}
+
+impl DefaultMemoryManager {
+    /// Create a fresh passthrough manager.
+    pub fn new() -> Self {
+        DefaultMemoryManager {
+            live: Mutex::new(HashMap::new()),
+            allocated: AtomicUsize::new(0),
+            peak_allocated: AtomicUsize::new(0),
+            allocs: AtomicU64::new(0),
+        }
+    }
+}
+
+impl Default for DefaultMemoryManager {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl MemoryManagerAdapter for DefaultMemoryManager {
+    fn name(&self) -> &str {
+        "default"
+    }
+
+    fn alloc(&self, bytes: usize) -> Result<Block> {
+        let native = NativeAlloc::new(bytes);
+        let size = native.size();
+        let block = Block::new(native.ptr(), size, Block::NATIVE, 0);
+        self.live.lock().unwrap().insert(native.ptr() as usize, native);
+        let now = self.allocated.fetch_add(size, Ordering::Relaxed) + size;
+        self.peak_allocated.fetch_max(now, Ordering::Relaxed);
+        self.allocs.fetch_add(1, Ordering::Relaxed);
+        Ok(block)
+    }
+
+    fn unlock(&self, block: Block) {
+        let owner = self.live.lock().unwrap().remove(&(block.ptr() as usize));
+        if let Some(native) = owner {
+            self.allocated.fetch_sub(native.size(), Ordering::Relaxed);
+        }
+        // native drops here, freeing the memory
+    }
+
+    fn stats(&self) -> MemStats {
+        let allocated = self.allocated.load(Ordering::Relaxed);
+        let peak = self.peak_allocated.load(Ordering::Relaxed);
+        MemStats {
+            allocated_bytes: allocated,
+            reserved_bytes: allocated, // passthrough never caches
+            peak_allocated_bytes: peak,
+            peak_reserved_bytes: peak,
+            alloc_count: self.allocs.load(Ordering::Relaxed),
+            native_alloc_count: self.allocs.load(Ordering::Relaxed),
+            ..Default::default()
+        }
+    }
+
+    fn clear_cache(&self) {}
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn alloc_unlock_balance() {
+        let m = DefaultMemoryManager::new();
+        let b1 = m.alloc(1000).unwrap();
+        let b2 = m.alloc(2000).unwrap();
+        assert!(m.stats().allocated_bytes >= 3000);
+        assert_eq!(m.stats().fragmentation(), 0.0);
+        m.unlock(b1);
+        m.unlock(b2);
+        assert_eq!(m.stats().allocated_bytes, 0);
+        assert_eq!(m.stats().alloc_count, 2);
+    }
+
+    #[test]
+    fn peak_tracking() {
+        let m = DefaultMemoryManager::new();
+        let b = m.alloc(1 << 20).unwrap();
+        m.unlock(b);
+        let _small = m.alloc(64).unwrap();
+        assert!(m.stats().peak_allocated_bytes >= 1 << 20);
+    }
+}

@@ -1,0 +1,265 @@
+//! Open memory-management interface (paper §4.1.2, Listing 3).
+//!
+//! Every buffer the reference tensor backend materializes is allocated
+//! through the globally *installed* [`MemoryManagerAdapter`]. Managers are
+//! swappable at runtime — the paper's fragmentation case study (§5.2.2) is
+//! reproduced by swapping [`caching::CachingMemoryManager`] configurations
+//! (unrestricted vs. split-restricted) under an identical allocation trace.
+//!
+//! Buffers are handed out as raw [`block::Block`]s and typed via
+//! [`TypedBuf`], which returns its block to the *originating* manager on
+//! drop (managers may be swapped mid-run without leaking).
+
+pub mod block;
+pub mod caching;
+pub mod default;
+pub mod telemetry;
+
+use std::sync::{Arc, RwLock};
+
+pub use block::Block;
+pub use caching::{CachingConfig, CachingMemoryManager};
+pub use default::DefaultMemoryManager;
+pub use telemetry::{AllocEvent, EventKind, TelemetryMemoryManager};
+
+use crate::util::error::Result;
+
+/// Live statistics reported by a memory manager.
+///
+/// `fragmentation()` follows the PyTorch/paper convention: the fraction of
+/// reserved (native) bytes not currently backing a live user allocation.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct MemStats {
+    /// Bytes currently locked by users (live allocations, rounded sizes).
+    pub allocated_bytes: usize,
+    /// Bytes currently reserved from the system allocator (live + cached).
+    pub reserved_bytes: usize,
+    /// High-water mark of `allocated_bytes`.
+    pub peak_allocated_bytes: usize,
+    /// High-water mark of `reserved_bytes`.
+    pub peak_reserved_bytes: usize,
+    /// Total user `alloc` calls served.
+    pub alloc_count: u64,
+    /// Allocations that had to hit the system allocator.
+    pub native_alloc_count: u64,
+    /// Allocations served from a cache / free list.
+    pub cache_hit_count: u64,
+    /// Number of block splits performed.
+    pub split_count: u64,
+    /// Number of adjacent-block coalesces performed on free.
+    pub coalesce_count: u64,
+}
+
+impl MemStats {
+    /// Fraction of reserved memory that is *not* backing a live allocation
+    /// (external + internal fragmentation of the pool). 0.0 when nothing
+    /// is reserved.
+    pub fn fragmentation(&self) -> f64 {
+        if self.reserved_bytes == 0 {
+            0.0
+        } else {
+            1.0 - self.allocated_bytes as f64 / self.reserved_bytes as f64
+        }
+    }
+
+    /// Peak-based fragmentation (peak reserved vs peak allocated).
+    pub fn peak_fragmentation(&self) -> f64 {
+        if self.peak_reserved_bytes == 0 {
+            0.0
+        } else {
+            1.0 - self.peak_allocated_bytes as f64 / self.peak_reserved_bytes as f64
+        }
+    }
+}
+
+/// The open memory-manager interface (paper Listing 3).
+///
+/// Implementations must be thread-safe; the reference tensor backend calls
+/// `alloc`/`unlock` from parallel kernels and data-loader threads.
+pub trait MemoryManagerAdapter: Send + Sync {
+    /// Human-readable manager name (shown in telemetry and benches).
+    fn name(&self) -> &str;
+    /// Allocate at least `bytes` bytes (64-byte aligned).
+    fn alloc(&self, bytes: usize) -> Result<Block>;
+    /// Return a block previously obtained from `alloc` ("unlock" in the
+    /// paper's API; the manager may cache or release it).
+    fn unlock(&self, block: Block);
+    /// Current statistics snapshot.
+    fn stats(&self) -> MemStats;
+    /// Drop all cached (non-live) memory back to the system.
+    fn clear_cache(&self);
+}
+
+static INSTALLED: RwLock<Option<Arc<dyn MemoryManagerAdapter>>> = RwLock::new(None);
+
+/// The currently installed manager (a lock-free passthrough
+/// [`DefaultMemoryManager`] until one is installed).
+pub fn manager() -> Arc<dyn MemoryManagerAdapter> {
+    if let Some(m) = INSTALLED.read().unwrap().as_ref() {
+        return m.clone();
+    }
+    // install the default lazily
+    let mut w = INSTALLED.write().unwrap();
+    if let Some(m) = w.as_ref() {
+        return m.clone();
+    }
+    let m: Arc<dyn MemoryManagerAdapter> = Arc::new(DefaultMemoryManager::new());
+    *w = Some(m.clone());
+    m
+}
+
+/// Install a new global memory manager (the `MemoryManagerInstaller` of the
+/// paper). Returns the previously installed manager, if any. Live buffers
+/// keep a handle to their originating manager, so swapping is safe.
+pub fn install(m: Arc<dyn MemoryManagerAdapter>) -> Option<Arc<dyn MemoryManagerAdapter>> {
+    INSTALLED.write().unwrap().replace(m)
+}
+
+/// A typed, manager-owned buffer. The backbone of CPU tensor storage.
+pub struct TypedBuf<T> {
+    block: Option<Block>,
+    mgr: Arc<dyn MemoryManagerAdapter>,
+    len: usize,
+    _marker: std::marker::PhantomData<T>,
+}
+
+// Safety: TypedBuf uniquely owns its block's memory region; T is plain data.
+unsafe impl<T: Send> Send for TypedBuf<T> {}
+unsafe impl<T: Sync> Sync for TypedBuf<T> {}
+
+impl<T: Copy + Default> TypedBuf<T> {
+    /// Allocate a zero-initialized buffer of `len` elements through the
+    /// installed manager.
+    pub fn zeroed(len: usize) -> Self {
+        let mgr = manager();
+        Self::zeroed_in(len, mgr)
+    }
+
+    /// Allocate through a specific manager.
+    pub fn zeroed_in(len: usize, mgr: Arc<dyn MemoryManagerAdapter>) -> Self {
+        let bytes = len * std::mem::size_of::<T>();
+        let block = mgr.alloc(bytes).expect("memory manager allocation failed");
+        // zero-fill: managers may hand back recycled blocks
+        unsafe { std::ptr::write_bytes(block.ptr(), 0, bytes) };
+        TypedBuf { block: Some(block), mgr, len, _marker: std::marker::PhantomData }
+    }
+
+    /// Build from a slice (copies).
+    pub fn from_slice(xs: &[T]) -> Self {
+        let mut b = Self::zeroed(xs.len());
+        b.as_mut_slice().copy_from_slice(xs);
+        b
+    }
+
+    /// Build by evaluating `f(i)` for each index.
+    pub fn from_fn(len: usize, mut f: impl FnMut(usize) -> T) -> Self {
+        let mut b = Self::zeroed(len);
+        for (i, slot) in b.as_mut_slice().iter_mut().enumerate() {
+            *slot = f(i);
+        }
+        b
+    }
+}
+
+impl<T> TypedBuf<T> {
+    /// Number of elements.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    /// Whether the buffer is empty.
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Immutable element view.
+    pub fn as_slice(&self) -> &[T] {
+        let ptr = self.block.as_ref().unwrap().ptr() as *const T;
+        unsafe { std::slice::from_raw_parts(ptr, self.len) }
+    }
+
+    /// Mutable element view.
+    pub fn as_mut_slice(&mut self) -> &mut [T] {
+        let ptr = self.block.as_ref().unwrap().ptr() as *mut T;
+        unsafe { std::slice::from_raw_parts_mut(ptr, self.len) }
+    }
+}
+
+impl<T> Drop for TypedBuf<T> {
+    fn drop(&mut self) {
+        if let Some(b) = self.block.take() {
+            self.mgr.unlock(b);
+        }
+    }
+}
+
+impl<T: Copy + Default> Clone for TypedBuf<T> {
+    fn clone(&self) -> Self {
+        let mut out = Self::zeroed_in(self.len, self.mgr.clone());
+        out.as_mut_slice().copy_from_slice(self.as_slice());
+        out
+    }
+}
+
+impl<T: std::fmt::Debug> std::fmt::Debug for TypedBuf<T> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "TypedBuf(len={}, mgr={})", self.len, self.mgr.name())
+    }
+}
+
+impl<T> std::ops::Deref for TypedBuf<T> {
+    type Target = [T];
+    fn deref(&self) -> &[T] {
+        self.as_slice()
+    }
+}
+
+impl<T> std::ops::DerefMut for TypedBuf<T> {
+    fn deref_mut(&mut self) -> &mut [T] {
+        self.as_mut_slice()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn typedbuf_roundtrip() {
+        let b = TypedBuf::from_slice(&[1.0f32, 2.0, 3.0]);
+        assert_eq!(b.as_slice(), &[1.0, 2.0, 3.0]);
+        let c = b.clone();
+        drop(b);
+        assert_eq!(c.as_slice(), &[1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn typedbuf_zeroed_and_from_fn() {
+        let z = TypedBuf::<f64>::zeroed(17);
+        assert!(z.as_slice().iter().all(|&x| x == 0.0));
+        let f = TypedBuf::from_fn(5, |i| i as i64 * 2);
+        assert_eq!(f.as_slice(), &[0, 2, 4, 6, 8]);
+    }
+
+    #[test]
+    fn install_swaps_manager_safely() {
+        let before = manager();
+        let held = TypedBuf::from_slice(&[9u8; 100]); // allocated on `before`
+        let caching = Arc::new(CachingMemoryManager::unrestricted());
+        install(caching.clone());
+        let after = TypedBuf::from_slice(&[1u8; 100]);
+        assert_eq!(held.as_slice()[0], 9);
+        assert_eq!(after.as_slice()[0], 1);
+        drop(held); // returns to `before`, not `caching`
+        drop(after);
+        install(before);
+        assert!(caching.stats().allocated_bytes == 0);
+    }
+
+    #[test]
+    fn fragmentation_math() {
+        let s = MemStats { allocated_bytes: 60, reserved_bytes: 100, ..Default::default() };
+        assert!((s.fragmentation() - 0.4).abs() < 1e-12);
+        assert_eq!(MemStats::default().fragmentation(), 0.0);
+    }
+}

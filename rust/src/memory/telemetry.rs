@@ -1,0 +1,266 @@
+//! Allocation telemetry tying tensor operations to specific allocations —
+//! the instrumentation the paper's §5.2.2 researchers built ("specialized
+//! telemetry that tied individual tensor operations to specific
+//! allocations") to study fragmentation.
+//!
+//! [`TelemetryMemoryManager`] wraps any inner manager, recording every
+//! alloc/free event together with the *operation label* active on the
+//! calling thread (pushed by the tensor backend around each op). Recorded
+//! traces can be replayed against other managers via [`replay`].
+
+use std::cell::RefCell;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+
+use super::block::Block;
+use super::{MemStats, MemoryManagerAdapter};
+use crate::util::error::Result;
+
+thread_local! {
+    static OP_STACK: RefCell<Vec<&'static str>> = const { RefCell::new(Vec::new()) };
+}
+
+/// RAII guard labelling allocations made on this thread with an op name.
+pub struct OpScope;
+
+impl OpScope {
+    /// Push `op` onto the thread's label stack.
+    pub fn enter(op: &'static str) -> OpScope {
+        OP_STACK.with(|s| s.borrow_mut().push(op));
+        OpScope
+    }
+}
+
+impl Drop for OpScope {
+    fn drop(&mut self) {
+        OP_STACK.with(|s| {
+            s.borrow_mut().pop();
+        });
+    }
+}
+
+/// Innermost active op label on this thread.
+pub fn current_op() -> &'static str {
+    OP_STACK.with(|s| s.borrow().last().copied().unwrap_or("<unattributed>"))
+}
+
+/// What happened.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EventKind {
+    /// An allocation of `bytes`.
+    Alloc,
+    /// A free of the allocation with matching `id`.
+    Free,
+}
+
+/// One recorded allocator event.
+#[derive(Debug, Clone)]
+pub struct AllocEvent {
+    /// Alloc/Free.
+    pub kind: EventKind,
+    /// Requested size in bytes (0 for frees).
+    pub bytes: usize,
+    /// Trace-local allocation id (frees reference the alloc's id).
+    pub id: u64,
+    /// Tensor-op label active at the time.
+    pub op: &'static str,
+}
+
+/// Wraps an inner manager and records an event trace.
+pub struct TelemetryMemoryManager {
+    inner: Arc<dyn MemoryManagerAdapter>,
+    trace: Mutex<Vec<AllocEvent>>,
+    /// ptr -> alloc id, to pair frees with allocs.
+    live: Mutex<std::collections::HashMap<usize, u64>>,
+    next_id: Mutex<u64>,
+    enabled: AtomicBool,
+    name: String,
+}
+
+impl TelemetryMemoryManager {
+    /// Wrap `inner`.
+    pub fn new(inner: Arc<dyn MemoryManagerAdapter>) -> Self {
+        let name = format!("telemetry({})", inner.name());
+        TelemetryMemoryManager {
+            inner,
+            trace: Mutex::new(Vec::new()),
+            live: Mutex::new(std::collections::HashMap::new()),
+            next_id: Mutex::new(0),
+            enabled: AtomicBool::new(true),
+            name,
+        }
+    }
+
+    /// Pause/resume recording (the trace survives).
+    pub fn set_enabled(&self, on: bool) {
+        self.enabled.store(on, Ordering::SeqCst);
+    }
+
+    /// Snapshot the recorded trace.
+    pub fn trace(&self) -> Vec<AllocEvent> {
+        self.trace.lock().unwrap().clone()
+    }
+
+    /// Clear the recorded trace.
+    pub fn reset(&self) {
+        self.trace.lock().unwrap().clear();
+    }
+
+    /// Per-op aggregate: (op, alloc count, total bytes), largest first.
+    pub fn by_op(&self) -> Vec<(&'static str, usize, usize)> {
+        let mut agg: std::collections::HashMap<&'static str, (usize, usize)> = Default::default();
+        for ev in self.trace.lock().unwrap().iter() {
+            if ev.kind == EventKind::Alloc {
+                let e = agg.entry(ev.op).or_default();
+                e.0 += 1;
+                e.1 += ev.bytes;
+            }
+        }
+        let mut v: Vec<_> = agg.into_iter().map(|(op, (n, b))| (op, n, b)).collect();
+        v.sort_by_key(|&(_, _, b)| std::cmp::Reverse(b));
+        v
+    }
+}
+
+impl MemoryManagerAdapter for TelemetryMemoryManager {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn alloc(&self, bytes: usize) -> Result<Block> {
+        let block = self.inner.alloc(bytes)?;
+        if self.enabled.load(Ordering::SeqCst) {
+            let mut idg = self.next_id.lock().unwrap();
+            let id = *idg;
+            *idg += 1;
+            drop(idg);
+            self.live.lock().unwrap().insert(block.ptr() as usize, id);
+            self.trace.lock().unwrap().push(AllocEvent {
+                kind: EventKind::Alloc,
+                bytes,
+                id,
+                op: current_op(),
+            });
+        }
+        Ok(block)
+    }
+
+    fn unlock(&self, block: Block) {
+        if self.enabled.load(Ordering::SeqCst) {
+            if let Some(id) = self.live.lock().unwrap().remove(&(block.ptr() as usize)) {
+                self.trace.lock().unwrap().push(AllocEvent {
+                    kind: EventKind::Free,
+                    bytes: 0,
+                    id,
+                    op: current_op(),
+                });
+            }
+        }
+        self.inner.unlock(block);
+    }
+
+    fn stats(&self) -> MemStats {
+        self.inner.stats()
+    }
+
+    fn clear_cache(&self) {
+        self.inner.clear_cache()
+    }
+}
+
+/// Replay a recorded trace against `mgr`, returning the stats afterwards
+/// and the high-water fragmentation: `1 - peak_allocated/peak_reserved`.
+/// Peak allocated bytes are workload-determined (identical across
+/// managers), so lower peak reserved = less fragmentation — the metric the
+/// paper's §5.2.2 case study optimizes.
+pub fn replay(trace: &[AllocEvent], mgr: &dyn MemoryManagerAdapter) -> (MemStats, f64) {
+    let mut live: std::collections::HashMap<u64, Block> = Default::default();
+    for ev in trace {
+        match ev.kind {
+            EventKind::Alloc => {
+                let b = mgr.alloc(ev.bytes).expect("replay alloc failed");
+                live.insert(ev.id, b);
+            }
+            EventKind::Free => {
+                if let Some(b) = live.remove(&ev.id) {
+                    mgr.unlock(b);
+                }
+            }
+        }
+    }
+    for (_, b) in live.drain() {
+        mgr.unlock(b);
+    }
+    let stats = mgr.stats();
+    (stats, stats.peak_fragmentation())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::memory::caching::CachingMemoryManager;
+    use crate::memory::default::DefaultMemoryManager;
+
+    #[test]
+    fn records_and_pairs_events() {
+        let t = TelemetryMemoryManager::new(Arc::new(DefaultMemoryManager::new()));
+        let b = {
+            let _g = OpScope::enter("matmul");
+            t.alloc(4096).unwrap()
+        };
+        t.unlock(b);
+        let tr = t.trace();
+        assert_eq!(tr.len(), 2);
+        assert_eq!(tr[0].kind, EventKind::Alloc);
+        assert_eq!(tr[0].op, "matmul");
+        assert_eq!(tr[1].kind, EventKind::Free);
+        assert_eq!(tr[0].id, tr[1].id);
+    }
+
+    #[test]
+    fn op_scope_nests() {
+        let _a = OpScope::enter("outer");
+        assert_eq!(current_op(), "outer");
+        {
+            let _b = OpScope::enter("inner");
+            assert_eq!(current_op(), "inner");
+        }
+        assert_eq!(current_op(), "outer");
+    }
+
+    #[test]
+    fn by_op_aggregates() {
+        let t = TelemetryMemoryManager::new(Arc::new(DefaultMemoryManager::new()));
+        let b1 = {
+            let _g = OpScope::enter("conv2d");
+            t.alloc(1000).unwrap()
+        };
+        let b2 = {
+            let _g = OpScope::enter("conv2d");
+            t.alloc(2000).unwrap()
+        };
+        let agg = t.by_op();
+        assert_eq!(agg[0].0, "conv2d");
+        assert_eq!(agg[0].1, 2);
+        assert_eq!(agg[0].2, 3000);
+        t.unlock(b1);
+        t.unlock(b2);
+    }
+
+    #[test]
+    fn replay_reproduces_liveness() {
+        let t = TelemetryMemoryManager::new(Arc::new(DefaultMemoryManager::new()));
+        let a = t.alloc(10_000).unwrap();
+        let b = t.alloc(20_000).unwrap();
+        t.unlock(a);
+        let c = t.alloc(5_000).unwrap();
+        t.unlock(b);
+        t.unlock(c);
+        let trace = t.trace();
+        let target = CachingMemoryManager::unrestricted();
+        let (stats, worst) = replay(&trace, &target);
+        assert_eq!(stats.allocated_bytes, 0, "replay must free everything");
+        assert_eq!(stats.alloc_count, 3);
+        assert!((0.0..=1.0).contains(&worst));
+    }
+}

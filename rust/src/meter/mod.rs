@@ -1,0 +1,259 @@
+//! Metric meters (paper Listings 9–10: `AverageValueMeter`,
+//! `FrameErrorMeter`, plus the speech package's edit-distance meter).
+
+use crate::tensor::Tensor;
+
+/// Running mean/variance of scalar observations.
+#[derive(Debug, Clone, Default)]
+pub struct AverageValueMeter {
+    n: u64,
+    mean: f64,
+    m2: f64,
+}
+
+impl AverageValueMeter {
+    /// Fresh meter.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record one observation (Welford update).
+    pub fn add(&mut self, v: f64) {
+        self.n += 1;
+        let delta = v - self.mean;
+        self.mean += delta / self.n as f64;
+        self.m2 += delta * (v - self.mean);
+    }
+
+    /// Current mean (0 when empty).
+    pub fn value(&self) -> f64 {
+        self.mean
+    }
+
+    /// Sample variance.
+    pub fn variance(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            self.m2 / (self.n - 1) as f64
+        }
+    }
+
+    /// Observation count.
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    /// Reset to empty.
+    pub fn reset(&mut self) {
+        *self = Self::default();
+    }
+}
+
+/// Classification frame-error meter: compares predicted ids with targets
+/// and reports error percentage (paper Listing 10).
+#[derive(Debug, Clone, Default)]
+pub struct FrameErrorMeter {
+    errors: u64,
+    total: u64,
+}
+
+impl FrameErrorMeter {
+    /// Fresh meter.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record a batch of integer predictions vs targets.
+    pub fn add(&mut self, pred: &Tensor, target: &Tensor) {
+        let p = pred.to_vec_i64();
+        let t = target.to_vec_i64();
+        assert_eq!(p.len(), t.len(), "prediction/target length");
+        self.total += p.len() as u64;
+        self.errors += p.iter().zip(&t).filter(|(a, b)| a != b).count() as u64;
+    }
+
+    /// Error rate in percent.
+    pub fn value(&self) -> f64 {
+        if self.total == 0 {
+            0.0
+        } else {
+            100.0 * self.errors as f64 / self.total as f64
+        }
+    }
+
+    /// Reset.
+    pub fn reset(&mut self) {
+        *self = Self::default();
+    }
+}
+
+/// Top-k accuracy meter (vision benchmarks).
+#[derive(Debug, Clone)]
+pub struct TopKMeter {
+    k: usize,
+    hits: u64,
+    total: u64,
+}
+
+impl TopKMeter {
+    /// Track top-`k` accuracy.
+    pub fn new(k: usize) -> Self {
+        TopKMeter { k, hits: 0, total: 0 }
+    }
+
+    /// Record `[N, C]` scores against `[N]` integer targets.
+    pub fn add(&mut self, scores: &Tensor, target: &Tensor) {
+        let dims = scores.dims().to_vec();
+        let (n, c) = (dims[0], dims[1]);
+        let s = scores.to_vec();
+        let t = target.to_vec_i64();
+        for i in 0..n {
+            let row = &s[i * c..(i + 1) * c];
+            let target_score = row[t[i] as usize];
+            let better = row.iter().filter(|&&v| v > target_score).count();
+            if better < self.k {
+                self.hits += 1;
+            }
+            self.total += 1;
+        }
+    }
+
+    /// Accuracy in percent.
+    pub fn value(&self) -> f64 {
+        if self.total == 0 {
+            0.0
+        } else {
+            100.0 * self.hits as f64 / self.total as f64
+        }
+    }
+}
+
+/// Edit-distance (Levenshtein) meter for sequence tasks (WER/CER in the
+/// speech package).
+#[derive(Debug, Clone, Default)]
+pub struct EditDistanceMeter {
+    edits: u64,
+    ref_len: u64,
+}
+
+impl EditDistanceMeter {
+    /// Fresh meter.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record one (hypothesis, reference) token pair.
+    pub fn add<T: PartialEq>(&mut self, hyp: &[T], reference: &[T]) {
+        self.edits += levenshtein(hyp, reference) as u64;
+        self.ref_len += reference.len() as u64;
+    }
+
+    /// Error rate in percent (edits / reference length).
+    pub fn value(&self) -> f64 {
+        if self.ref_len == 0 {
+            0.0
+        } else {
+            100.0 * self.edits as f64 / self.ref_len as f64
+        }
+    }
+}
+
+/// Levenshtein distance between two sequences.
+pub fn levenshtein<T: PartialEq>(a: &[T], b: &[T]) -> usize {
+    let mut prev: Vec<usize> = (0..=b.len()).collect();
+    let mut cur = vec![0usize; b.len() + 1];
+    for (i, ai) in a.iter().enumerate() {
+        cur[0] = i + 1;
+        for (j, bj) in b.iter().enumerate() {
+            let sub = prev[j] + usize::from(ai != bj);
+            cur[j + 1] = sub.min(prev[j + 1] + 1).min(cur[j] + 1);
+        }
+        std::mem::swap(&mut prev, &mut cur);
+    }
+    prev[b.len()]
+}
+
+/// Wall-clock + items/sec throughput meter for training loops.
+#[derive(Debug)]
+pub struct TimeMeter {
+    start: std::time::Instant,
+    items: u64,
+}
+
+impl TimeMeter {
+    /// Start timing.
+    pub fn start() -> Self {
+        TimeMeter { start: std::time::Instant::now(), items: 0 }
+    }
+
+    /// Record processed items.
+    pub fn add_items(&mut self, n: u64) {
+        self.items += n;
+    }
+
+    /// Items per second since start.
+    pub fn items_per_sec(&self) -> f64 {
+        let secs = self.start.elapsed().as_secs_f64();
+        if secs == 0.0 {
+            0.0
+        } else {
+            self.items as f64 / secs
+        }
+    }
+
+    /// Elapsed seconds.
+    pub fn seconds(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn average_meter_welford() {
+        let mut m = AverageValueMeter::new();
+        for v in [1.0, 2.0, 3.0, 4.0] {
+            m.add(v);
+        }
+        assert!((m.value() - 2.5).abs() < 1e-12);
+        assert!((m.variance() - 5.0 / 3.0).abs() < 1e-12);
+        assert_eq!(m.count(), 4);
+        m.reset();
+        assert_eq!(m.count(), 0);
+    }
+
+    #[test]
+    fn frame_error_counts() {
+        let mut m = FrameErrorMeter::new();
+        m.add(
+            &Tensor::from_slice(&[1i64, 2, 3, 4], [4]),
+            &Tensor::from_slice(&[1i64, 0, 3, 0], [4]),
+        );
+        assert!((m.value() - 50.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn topk_meter() {
+        let scores = Tensor::from_slice(&[0.1f32, 0.9, 0.0, 0.4, 0.5, 0.6], [2, 3]);
+        let targets = Tensor::from_slice(&[1i64, 0], [2]);
+        let mut top1 = TopKMeter::new(1);
+        top1.add(&scores, &targets);
+        assert!((top1.value() - 50.0).abs() < 1e-12);
+        let mut top3 = TopKMeter::new(3);
+        top3.add(&scores, &targets);
+        assert!((top3.value() - 100.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn edit_distance() {
+        assert_eq!(levenshtein(b"kitten", b"sitting"), 3);
+        assert_eq!(levenshtein::<u8>(b"", b"abc"), 3);
+        assert_eq!(levenshtein(b"same", b"same"), 0);
+        let mut m = EditDistanceMeter::new();
+        m.add(&["the", "cat"], &["the", "cat", "sat"]);
+        assert!((m.value() - 100.0 / 3.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,49 @@
+//! AlexNet-family CNN, scaled for 32×32 inputs on CPU (channels ≈ /8 of
+//! the original; same 5-conv + 3-fc topology and low arithmetic intensity
+//! that makes AlexNet the paper's best framework-overhead probe).
+
+use crate::nn::conv::Padding;
+use crate::nn::{Conv2D, Dropout, Linear, Pool2D, ReLU, Sequential, View};
+
+/// Scaled AlexNet for `[N, 3, 32, 32]` inputs.
+pub fn alexnet(classes: usize) -> Sequential {
+    let mut m = Sequential::new();
+    m.add(Conv2D::square(3, 8, 3, 1, Padding::Same)); // 32x32
+    m.add(ReLU);
+    m.add(Pool2D::max(2, 2, 2, 2)); // 16x16
+    m.add(Conv2D::square(8, 24, 3, 1, Padding::Same));
+    m.add(ReLU);
+    m.add(Pool2D::max(2, 2, 2, 2)); // 8x8
+    m.add(Conv2D::square(24, 48, 3, 1, Padding::Same));
+    m.add(ReLU);
+    m.add(Conv2D::square(48, 32, 3, 1, Padding::Same));
+    m.add(ReLU);
+    m.add(Conv2D::square(32, 32, 3, 1, Padding::Same));
+    m.add(ReLU);
+    m.add(Pool2D::max(2, 2, 2, 2)); // 4x4
+    m.add(View::new(&[-1, 32 * 4 * 4]));
+    m.add(Dropout::new(0.5));
+    m.add(Linear::new(32 * 4 * 4, 256));
+    m.add(ReLU);
+    m.add(Dropout::new(0.5));
+    m.add(Linear::new(256, 128));
+    m.add(ReLU);
+    m.add(Linear::new(128, classes));
+    m
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::autograd::Variable;
+    use crate::nn::Module;
+    use crate::tensor::Tensor;
+
+    #[test]
+    fn forward_shape() {
+        let mut m = alexnet(10);
+        m.set_train(false);
+        let y = m.forward(&Variable::constant(Tensor::rand([2, 3, 32, 32], -1.0, 1.0)));
+        assert_eq!(y.dims(), vec![2, 10]);
+    }
+}

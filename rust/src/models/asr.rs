@@ -1,0 +1,95 @@
+//! ASR transformer (paper Table 3's "ASR TR."; also the speech package's
+//! acoustic model): conv subsampling frontend over log-mel features +
+//! transformer encoder + CTC head.
+
+use crate::autograd::{ops, Variable};
+use crate::nn::conv::Padding;
+use crate::nn::{Conv2D, LayerNorm, Linear, Module, PositionalEmbedding, TransformerEncoderLayer};
+
+/// See module docs. Input: `[N, 1, T, F]` feature maps (T frames, F mel
+/// bins); output: `[N, T/4, classes]` frame logits for CTC.
+pub struct AsrTransformer {
+    conv1: Conv2D,
+    conv2: Conv2D,
+    proj: Linear,
+    pos: PositionalEmbedding,
+    layers: Vec<TransformerEncoderLayer>,
+    ln_f: LayerNorm,
+    head: Linear,
+    feat: usize,
+    dim: usize,
+}
+
+impl AsrTransformer {
+    /// `feat` mel bins, `dim` width, `heads`, `depth`, `classes` output
+    /// tokens (incl. CTC blank at index 0).
+    pub fn new(feat: usize, dim: usize, heads: usize, depth: usize, classes: usize) -> Self {
+        AsrTransformer {
+            conv1: Conv2D::square(1, 8, 3, 2, Padding::Same), // T/2, F/2
+            conv2: Conv2D::square(8, 8, 3, 2, Padding::Same), // T/4, F/4
+            proj: Linear::new(8 * (feat / 4), dim),
+            pos: PositionalEmbedding::new(512, dim),
+            layers: (0..depth)
+                .map(|_| TransformerEncoderLayer::new(dim, heads, dim * 4, 0.0, false))
+                .collect(),
+            ln_f: LayerNorm::new(dim),
+            head: Linear::new(dim, classes),
+            feat,
+            dim,
+        }
+    }
+}
+
+impl Module for AsrTransformer {
+    fn forward(&self, input: &Variable) -> Variable {
+        let h = ops::relu(&self.conv1.forward(input));
+        let h = ops::relu(&self.conv2.forward(&h));
+        // [N, C, T', F'] -> [N, T', C*F']
+        let d = h.dims();
+        let (n, c, t, f) = (d[0], d[1], d[2], d[3]);
+        let h = ops::transpose(&h, &[0, 2, 1, 3]);
+        let h = ops::reshape(&h, &[n as isize, t as isize, (c * f) as isize]);
+        let mut h = self.pos.forward(&self.proj.forward(&h));
+        for l in &self.layers {
+            h = l.forward(&h);
+        }
+        self.head.forward(&self.ln_f.forward(&h))
+    }
+
+    fn params(&self) -> Vec<Variable> {
+        let mut p = self.conv1.params();
+        p.extend(self.conv2.params());
+        p.extend(self.proj.params());
+        p.extend(self.pos.params());
+        for l in &self.layers {
+            p.extend(l.params());
+        }
+        p.extend(self.ln_f.params());
+        p.extend(self.head.params());
+        p
+    }
+
+    fn set_train(&mut self, train: bool) {
+        for l in &mut self.layers {
+            l.set_train(train);
+        }
+    }
+
+    fn name(&self) -> String {
+        format!("AsrTransformer(feat={}, d={})", self.feat, self.dim)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Tensor;
+
+    #[test]
+    fn subsamples_time_by_four() {
+        let m = AsrTransformer::new(80, 64, 4, 1, 30);
+        let x = Variable::constant(Tensor::rand([1, 1, 64, 80], -1.0, 1.0));
+        let y = m.forward(&x);
+        assert_eq!(y.dims(), vec![1, 16, 30]);
+    }
+}

@@ -1,0 +1,132 @@
+//! BERT-like masked/causal language model (paper Table 3's "BERT-like",
+//! scaled; also the backbone of the end-to-end training example).
+
+use crate::autograd::{ops, Variable};
+use crate::nn::{Embedding, LayerNorm, Linear, Module, PositionalEmbedding, TransformerEncoderLayer};
+use crate::tensor::Tensor;
+
+/// Token embedding + positional embedding + N transformer layers + LM head.
+pub struct BertLike {
+    /// Token embedding.
+    pub tok: Embedding,
+    /// Positional embedding.
+    pub pos: PositionalEmbedding,
+    layers: Vec<TransformerEncoderLayer>,
+    ln_f: LayerNorm,
+    /// LM head projecting back to the vocabulary.
+    pub head: Linear,
+    dim: usize,
+}
+
+impl BertLike {
+    /// `vocab` tokens, `dim` width, `heads`, `depth` layers, `max_len`.
+    pub fn new(vocab: usize, dim: usize, heads: usize, depth: usize, max_len: usize) -> Self {
+        BertLike {
+            tok: Embedding::new(vocab, dim),
+            pos: PositionalEmbedding::new(max_len, dim),
+            layers: (0..depth)
+                .map(|_| TransformerEncoderLayer::new(dim, heads, dim * 4, 0.0, true))
+                .collect(),
+            ln_f: LayerNorm::new(dim),
+            head: Linear::new(dim, vocab),
+            dim,
+        }
+    }
+
+    /// Forward token ids `[B, L]` (i64 tensor) to logits `[B, L, V]`.
+    pub fn logits(&self, ids: &Tensor) -> Variable {
+        let mut h = self.pos.forward(&self.tok.lookup(ids));
+        for l in &self.layers {
+            h = l.forward(&h);
+        }
+        self.head.forward(&self.ln_f.forward(&h))
+    }
+
+    /// Hidden width.
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+}
+
+impl Module for BertLike {
+    fn forward(&self, input: &Variable) -> Variable {
+        self.logits(&input.tensor())
+    }
+
+    fn params(&self) -> Vec<Variable> {
+        let mut p = self.tok.params();
+        p.extend(self.pos.params());
+        for l in &self.layers {
+            p.extend(l.params());
+        }
+        p.extend(self.ln_f.params());
+        p.extend(self.head.params());
+        p
+    }
+
+    fn set_train(&mut self, train: bool) {
+        for l in &mut self.layers {
+            l.set_train(train);
+        }
+    }
+
+    fn name(&self) -> String {
+        format!("BertLike(d={}, layers={})", self.dim, self.layers.len())
+    }
+}
+
+/// Next-token cross-entropy for an autoregressive LM over `[B, L]` ids.
+pub fn lm_loss(model: &BertLike, ids: &Tensor) -> Variable {
+    let dims = ids.dims().to_vec();
+    let (b, l) = (dims[0], dims[1]);
+    let inputs = ids.narrow(1, 0, l - 1);
+    let targets = ids.narrow(1, 1, l - 1);
+    let logits = model.logits(&inputs); // [B, L-1, V]
+    let v = logits.dims()[2];
+    let flat = ops::reshape(&logits, &[(b * (l - 1)) as isize, v as isize]);
+    let tflat = targets.reshape(&[(b * (l - 1)) as isize]);
+    crate::nn::categorical_cross_entropy(&flat, &tflat)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::DType;
+
+    #[test]
+    fn logits_shape() {
+        let m = BertLike::new(50, 32, 4, 2, 16);
+        let ids = Tensor::rand([2, 10], 0.0, 50.0).astype(DType::I64);
+        let y = m.logits(&ids);
+        assert_eq!(y.dims(), vec![2, 10, 50]);
+    }
+
+    #[test]
+    fn lm_loss_starts_near_uniform() {
+        crate::util::rng::seed(8);
+        let m = BertLike::new(64, 32, 2, 1, 16);
+        let ids = Tensor::rand([4, 12], 0.0, 64.0).astype(DType::I64);
+        let l = lm_loss(&m, &ids).tensor().item();
+        let uniform = (64.0f64).ln();
+        assert!((l - uniform).abs() < 1.0, "initial loss {l} far from ln(V)={uniform}");
+    }
+
+    #[test]
+    fn few_steps_reduce_loss_on_fixed_batch() {
+        crate::util::rng::seed(9);
+        let m = BertLike::new(32, 32, 2, 1, 16);
+        let ids = Tensor::rand([2, 12], 0.0, 32.0).astype(DType::I64);
+        let params = m.params();
+        let mut opt = crate::optim::AdamOptimizer::new(params, 5e-3);
+        use crate::optim::Optimizer;
+        let first = lm_loss(&m, &ids).tensor().item();
+        for _ in 0..12 {
+            let loss = lm_loss(&m, &ids);
+            loss.backward();
+            opt.step();
+            opt.zero_grad();
+        }
+        let last = lm_loss(&m, &ids).tensor().item();
+        assert!(last < first * 0.8, "no learning: {first} -> {last}");
+    }
+}

@@ -1,0 +1,32 @@
+//! Plain MLP builder (quickstart / tests / Figure-2 demo).
+
+use crate::nn::{Linear, ReLU, Sequential};
+
+/// `dims[0] -> dims[1] -> ... -> dims.last()` with ReLU between layers.
+pub fn mlp(dims: &[usize]) -> Sequential {
+    assert!(dims.len() >= 2);
+    let mut seq = Sequential::new();
+    for i in 0..dims.len() - 1 {
+        seq.add(Linear::new(dims[i], dims[i + 1]));
+        if i + 2 < dims.len() {
+            seq.add(ReLU);
+        }
+    }
+    seq
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::autograd::Variable;
+    use crate::nn::Module;
+    use crate::tensor::Tensor;
+
+    #[test]
+    fn builds_and_runs() {
+        let m = mlp(&[8, 16, 4]);
+        let y = m.forward(&Variable::constant(Tensor::rand([3, 8], -1.0, 1.0)));
+        assert_eq!(y.dims(), vec![3, 4]);
+        assert_eq!(m.params().len(), 4);
+    }
+}

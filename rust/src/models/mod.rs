@@ -1,0 +1,110 @@
+//! Model zoo (paper §3: "state-of-the-art, research-ready models ...
+//! across a variety of domains"; §5.1.2 Table 3 benchmarks these).
+//!
+//! Models are *scaled-down* versions of the paper's six benchmark
+//! architectures (same topology family, same relative arithmetic-intensity
+//! ordering; see DESIGN.md §5) so forward+backward runs on a CPU testbed.
+
+pub mod alexnet;
+pub mod asr;
+pub mod bert;
+pub mod mlp;
+pub mod resnet;
+pub mod vgg;
+pub mod vit;
+
+pub use alexnet::alexnet;
+pub use asr::AsrTransformer;
+pub use bert::BertLike;
+pub use mlp::mlp;
+pub use resnet::resnet;
+pub use vgg::vgg16;
+pub use vit::ViT;
+
+use crate::nn::Module;
+
+/// A named model plus its benchmark input specification.
+pub struct ModelSpec {
+    /// Paper Table 3 row label.
+    pub name: &'static str,
+    /// Batch size used in the bench.
+    pub batch: usize,
+    /// Whether inputs are images `[N,C,H,W]` (true) or token ids `[N,L]`.
+    pub image_input: Option<(usize, usize, usize)>, // C, H, W
+    /// Sequence length for token models.
+    pub seq_len: usize,
+    /// Vocabulary for token models.
+    pub vocab: usize,
+    /// Number of output classes.
+    pub classes: usize,
+}
+
+/// Build one of the Table 3 models by row name. Returns the module and its
+/// input spec.
+pub fn by_name(name: &str) -> Option<(Box<dyn Module>, ModelSpec)> {
+    match name {
+        "alexnet" => Some((
+            Box::new(alexnet(10)),
+            ModelSpec { name: "alexnet", batch: 8, image_input: Some((3, 32, 32)), seq_len: 0, vocab: 0, classes: 10 },
+        )),
+        "vgg16" => Some((
+            Box::new(vgg16(10)),
+            ModelSpec { name: "vgg16", batch: 4, image_input: Some((3, 32, 32)), seq_len: 0, vocab: 0, classes: 10 },
+        )),
+        "resnet" => Some((
+            Box::new(resnet(10)),
+            ModelSpec { name: "resnet", batch: 8, image_input: Some((3, 32, 32)), seq_len: 0, vocab: 0, classes: 10 },
+        )),
+        "bert" => Some((
+            Box::new(BertLike::new(1000, 128, 4, 2, 64)),
+            ModelSpec { name: "bert", batch: 8, image_input: None, seq_len: 64, vocab: 1000, classes: 1000 },
+        )),
+        "asr" => Some((
+            Box::new(AsrTransformer::new(80, 128, 4, 2, 32)),
+            ModelSpec { name: "asr", batch: 4, image_input: Some((1, 128, 80)), seq_len: 0, vocab: 0, classes: 32 },
+        )),
+        "vit" => Some((
+            Box::new(ViT::new(32, 4, 96, 4, 2, 10)),
+            ModelSpec { name: "vit", batch: 8, image_input: Some((3, 32, 32)), seq_len: 0, vocab: 0, classes: 10 },
+        )),
+        _ => None,
+    }
+}
+
+/// All Table 3 row names.
+pub const TABLE3_MODELS: [&str; 6] = ["alexnet", "vgg16", "resnet", "bert", "asr", "vit"];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::autograd::{ops, Variable};
+    use crate::nn::num_params;
+    use crate::tensor::{DType, Tensor};
+
+    #[test]
+    fn every_table3_model_builds_and_steps() {
+        for name in TABLE3_MODELS {
+            let (model, spec) = by_name(name).unwrap();
+            let x = match spec.image_input {
+                Some((c, h, w)) => {
+                    Variable::constant(Tensor::rand([2, c, h, w], -1.0, 1.0))
+                }
+                None => Variable::constant(
+                    Tensor::rand([2, spec.seq_len], 0.0, spec.vocab as f64).astype(DType::I64),
+                ),
+            };
+            let y = model.forward(&x);
+            assert_eq!(y.dims().last().copied().unwrap(), spec.classes, "{name} head width");
+            // full backward reaches every parameter
+            ops::sum(&y, &[], false).backward();
+            let with_grad = model.params().iter().filter(|p| p.grad().is_some()).count();
+            assert_eq!(with_grad, model.params().len(), "{name}: missing grads");
+            assert!(num_params(model.as_ref()) > 10_000, "{name} suspiciously small");
+        }
+    }
+
+    #[test]
+    fn unknown_model_is_none() {
+        assert!(by_name("gpt5").is_none());
+    }
+}

@@ -1,0 +1,131 @@
+//! ResNet (basic-block) family, narrow ResNet-18-style for 32×32 inputs.
+
+use crate::autograd::{ops, Variable};
+use crate::nn::conv::Padding;
+use crate::nn::{BatchNorm2d, Conv2D, Linear, Module, Pool2D, ReLU, Sequential, View};
+
+/// A residual basic block: two 3×3 convs with batch norm and an optional
+/// 1×1 projection shortcut on stride/width changes.
+pub struct BasicBlock {
+    conv1: Conv2D,
+    bn1: BatchNorm2d,
+    conv2: Conv2D,
+    bn2: BatchNorm2d,
+    shortcut: Option<(Conv2D, BatchNorm2d)>,
+}
+
+impl BasicBlock {
+    /// Build a block mapping `cin -> cout` with the given stride.
+    pub fn new(cin: usize, cout: usize, stride: usize) -> Self {
+        let shortcut = if stride != 1 || cin != cout {
+            Some((
+                Conv2D::square(cin, cout, 1, stride, Padding::Valid),
+                BatchNorm2d::new(cout),
+            ))
+        } else {
+            None
+        };
+        BasicBlock {
+            conv1: Conv2D::square(cin, cout, 3, stride, Padding::Same),
+            bn1: BatchNorm2d::new(cout),
+            conv2: Conv2D::square(cout, cout, 3, 1, Padding::Same),
+            bn2: BatchNorm2d::new(cout),
+            shortcut,
+        }
+    }
+}
+
+impl Module for BasicBlock {
+    fn forward(&self, x: &Variable) -> Variable {
+        let h = ops::relu(&self.bn1.forward(&self.conv1.forward(x)));
+        let h = self.bn2.forward(&self.conv2.forward(&h));
+        let skip = match &self.shortcut {
+            Some((c, b)) => b.forward(&c.forward(x)),
+            None => x.clone(),
+        };
+        ops::relu(&ops::add(&h, &skip))
+    }
+
+    fn params(&self) -> Vec<Variable> {
+        let mut p = self.conv1.params();
+        p.extend(self.bn1.params());
+        p.extend(self.conv2.params());
+        p.extend(self.bn2.params());
+        if let Some((c, b)) = &self.shortcut {
+            p.extend(c.params());
+            p.extend(b.params());
+        }
+        p
+    }
+
+    fn buffers(&self) -> Vec<Variable> {
+        let mut b = self.bn1.buffers();
+        b.extend(self.bn2.buffers());
+        if let Some((_, bn)) = &self.shortcut {
+            b.extend(bn.buffers());
+        }
+        b
+    }
+
+    fn set_train(&mut self, train: bool) {
+        self.bn1.set_train(train);
+        self.bn2.set_train(train);
+        if let Some((_, b)) = &mut self.shortcut {
+            b.set_train(train);
+        }
+    }
+
+    fn name(&self) -> String {
+        "BasicBlock".into()
+    }
+}
+
+/// Narrow ResNet-18-style network for `[N, 3, 32, 32]`.
+pub fn resnet(classes: usize) -> Sequential {
+    let mut m = Sequential::new();
+    m.add(Conv2D::square(3, 16, 3, 1, Padding::Same));
+    m.add(BatchNorm2d::new(16));
+    m.add(ReLU);
+    m.add(BasicBlock::new(16, 16, 1));
+    m.add(BasicBlock::new(16, 16, 1));
+    m.add(BasicBlock::new(16, 32, 2)); // 16x16
+    m.add(BasicBlock::new(32, 32, 1));
+    m.add(BasicBlock::new(32, 64, 2)); // 8x8
+    m.add(BasicBlock::new(64, 64, 1));
+    m.add(Pool2D::avg(8, 8, 8, 8)); // global
+    m.add(View::new(&[-1, 64]));
+    m.add(Linear::new(64, classes));
+    m
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Tensor;
+
+    #[test]
+    fn residual_identity_path() {
+        // zeroed conv weights -> block(x) == relu(x + bn-ish) shape check
+        let mut blk = BasicBlock::new(4, 4, 1);
+        blk.set_train(false);
+        let x = Variable::constant(Tensor::rand([1, 4, 8, 8], 0.0, 1.0));
+        let y = blk.forward(&x);
+        assert_eq!(y.dims(), vec![1, 4, 8, 8]);
+    }
+
+    #[test]
+    fn projection_shortcut_on_stride() {
+        let blk = BasicBlock::new(4, 8, 2);
+        let x = Variable::constant(Tensor::rand([1, 4, 8, 8], 0.0, 1.0));
+        assert_eq!(blk.forward(&x).dims(), vec![1, 8, 4, 4]);
+        assert!(blk.params().len() > 6);
+    }
+
+    #[test]
+    fn full_network_shape() {
+        let mut m = resnet(10);
+        m.set_train(false);
+        let y = m.forward(&Variable::constant(Tensor::rand([2, 3, 32, 32], -1.0, 1.0)));
+        assert_eq!(y.dims(), vec![2, 10]);
+    }
+}

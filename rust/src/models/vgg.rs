@@ -1,0 +1,52 @@
+//! VGG16-family CNN, narrow variant for 32×32 CPU benchmarking (the
+//! paper's highest-arithmetic-intensity conv model: time dominated by
+//! vendor GEMMs, framework overhead smallest here).
+
+use crate::nn::conv::Padding;
+use crate::nn::{Conv2D, Linear, Pool2D, ReLU, Sequential, View};
+
+/// Scaled VGG16 (13 conv + 3 fc) for `[N, 3, 32, 32]`.
+pub fn vgg16(classes: usize) -> Sequential {
+    let mut m = Sequential::new();
+    let blocks: &[(usize, usize, usize)] = &[
+        // (in, out, convs)
+        (3, 16, 2),
+        (16, 32, 2),
+        (32, 64, 3),
+        (64, 64, 3),
+        (64, 64, 3),
+    ];
+    for &(cin, cout, convs) in blocks {
+        let mut c = cin;
+        for _ in 0..convs {
+            m.add(Conv2D::square(c, cout, 3, 1, Padding::Same));
+            m.add(ReLU);
+            c = cout;
+        }
+        m.add(Pool2D::max(2, 2, 2, 2));
+    }
+    // 32 / 2^5 = 1 spatial
+    m.add(View::new(&[-1, 64]));
+    m.add(Linear::new(64, 128));
+    m.add(ReLU);
+    m.add(Linear::new(128, 128));
+    m.add(ReLU);
+    m.add(Linear::new(128, classes));
+    m
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::autograd::Variable;
+    use crate::nn::Module;
+    use crate::tensor::Tensor;
+
+    #[test]
+    fn forward_shape_and_depth() {
+        let m = vgg16(10);
+        assert!(m.len() > 25, "vgg should be deep, got {}", m.len());
+        let y = m.forward(&Variable::constant(Tensor::rand([1, 3, 32, 32], -1.0, 1.0)));
+        assert_eq!(y.dims(), vec![1, 10]);
+    }
+}

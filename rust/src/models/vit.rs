@@ -1,0 +1,110 @@
+//! Vision Transformer (ViT), tiny variant for 32×32 images.
+
+use crate::autograd::{ops, Variable};
+use crate::nn::{LayerNorm, Linear, Module, PositionalEmbedding, TransformerEncoderLayer};
+
+/// Patchify + linear embed + transformer + mean-pool classifier head.
+pub struct ViT {
+    patch_embed: Linear,
+    pos: PositionalEmbedding,
+    layers: Vec<TransformerEncoderLayer>,
+    ln_f: LayerNorm,
+    head: Linear,
+    image: usize,
+    patch: usize,
+    dim: usize,
+}
+
+impl ViT {
+    /// `image`×`image` RGB inputs cut into `patch`×`patch` patches.
+    pub fn new(image: usize, patch: usize, dim: usize, heads: usize, depth: usize, classes: usize) -> Self {
+        assert_eq!(image % patch, 0);
+        let n_patches = (image / patch) * (image / patch);
+        ViT {
+            patch_embed: Linear::new(3 * patch * patch, dim),
+            pos: PositionalEmbedding::new(n_patches, dim),
+            layers: (0..depth)
+                .map(|_| TransformerEncoderLayer::new(dim, heads, dim * 4, 0.0, false))
+                .collect(),
+            ln_f: LayerNorm::new(dim),
+            head: Linear::new(dim, classes),
+            image,
+            patch,
+            dim,
+        }
+    }
+
+    /// `[N, 3, H, W]` -> `[N, P, 3*patch*patch]` patch extraction via
+    /// reshape/transpose composition (no custom op needed).
+    fn patchify(&self, x: &Variable) -> Variable {
+        let dims = x.dims();
+        let (n, c) = (dims[0], dims[1]);
+        let g = self.image / self.patch;
+        let p = self.patch;
+        // [N, C, g, p, g, p]
+        let x = ops::reshape(
+            x,
+            &[n as isize, c as isize, g as isize, p as isize, g as isize, p as isize],
+        );
+        // -> [N, g, g, C, p, p]
+        let x = ops::transpose(&x, &[0, 2, 4, 1, 3, 5]);
+        ops::reshape(&x, &[n as isize, (g * g) as isize, (c * p * p) as isize])
+    }
+}
+
+impl Module for ViT {
+    fn forward(&self, input: &Variable) -> Variable {
+        let patches = self.patchify(input);
+        let mut h = self.pos.forward(&self.patch_embed.forward(&patches));
+        for l in &self.layers {
+            h = l.forward(&h);
+        }
+        let pooled = ops::mean(&self.ln_f.forward(&h), &[1], false);
+        self.head.forward(&pooled)
+    }
+
+    fn params(&self) -> Vec<Variable> {
+        let mut p = self.patch_embed.params();
+        p.extend(self.pos.params());
+        for l in &self.layers {
+            p.extend(l.params());
+        }
+        p.extend(self.ln_f.params());
+        p.extend(self.head.params());
+        p
+    }
+
+    fn set_train(&mut self, train: bool) {
+        for l in &mut self.layers {
+            l.set_train(train);
+        }
+    }
+
+    fn name(&self) -> String {
+        format!("ViT(img={}, patch={}, d={})", self.image, self.patch, self.dim)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Tensor;
+
+    #[test]
+    fn patchify_partitions_pixels() {
+        let v = ViT::new(4, 2, 8, 2, 1, 3);
+        let x = Variable::constant(Tensor::arange(48, crate::tensor::DType::F32).reshape(&[1, 3, 4, 4]));
+        let p = v.patchify(&x);
+        assert_eq!(p.dims(), vec![1, 4, 12]);
+        // first patch = top-left 2x2 of every channel
+        let pv = p.tensor().to_vec();
+        assert_eq!(&pv[..12], &[0., 1., 4., 5., 16., 17., 20., 21., 32., 33., 36., 37.]);
+    }
+
+    #[test]
+    fn forward_shape() {
+        let v = ViT::new(32, 4, 48, 4, 1, 10);
+        let y = v.forward(&Variable::constant(Tensor::rand([2, 3, 32, 32], -1.0, 1.0)));
+        assert_eq!(y.dims(), vec![2, 10]);
+    }
+}

@@ -1,0 +1,90 @@
+//! Activation modules (thin wrappers over [`crate::autograd::ops`]; the
+//! underlying tensor ops are themselves compositions of backend
+//! primitives, e.g. ReLU = `maximum(x, 0)` per paper §4.1.1).
+
+use crate::autograd::{ops, Variable};
+
+use super::Module;
+
+macro_rules! activation {
+    ($(#[$doc:meta])* $name:ident, $op:expr) => {
+        $(#[$doc])*
+        pub struct $name;
+
+        impl Module for $name {
+            fn forward(&self, input: &Variable) -> Variable {
+                $op(input)
+            }
+            fn params(&self) -> Vec<Variable> {
+                Vec::new()
+            }
+            fn name(&self) -> String {
+                stringify!($name).to_string()
+            }
+        }
+    };
+}
+
+activation!(
+    /// Rectified linear unit.
+    ReLU,
+    ops::relu
+);
+activation!(
+    /// Exact GELU.
+    GELU,
+    ops::gelu
+);
+activation!(
+    /// Hyperbolic tangent.
+    Tanh,
+    ops::tanh
+);
+activation!(
+    /// Logistic sigmoid.
+    Sigmoid,
+    ops::sigmoid
+);
+
+/// Log-softmax over the last dimension (classifier heads, paper Listing 8).
+pub struct LogSoftmax;
+
+impl Module for LogSoftmax {
+    fn forward(&self, input: &Variable) -> Variable {
+        ops::log_softmax(input, -1)
+    }
+    fn params(&self) -> Vec<Variable> {
+        Vec::new()
+    }
+    fn name(&self) -> String {
+        "LogSoftmax".into()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Tensor;
+
+    #[test]
+    fn activations_apply() {
+        let x = Variable::constant(Tensor::from_slice(&[-1.0f32, 0.0, 2.0], [3]));
+        assert_eq!(ReLU.forward(&x).tensor().to_vec(), vec![0.0, 0.0, 2.0]);
+        let s = Sigmoid.forward(&x).tensor().to_vec();
+        assert!((s[1] - 0.5).abs() < 1e-6);
+        let t = Tanh.forward(&x).tensor().to_vec();
+        assert!((t[2] - 2.0f32.tanh()).abs() < 1e-6);
+        let g = GELU.forward(&x).tensor().to_vec();
+        assert!((g[2] - 1.9545977).abs() < 1e-4); // reference value
+    }
+
+    #[test]
+    fn log_softmax_normalizes() {
+        let x = Variable::constant(Tensor::rand([2, 5], -2.0, 2.0));
+        let y = LogSoftmax.forward(&x).tensor();
+        let sums = y.exp().sum(&[-1], false).to_vec();
+        for s in sums {
+            assert!((s - 1.0).abs() < 1e-5);
+        }
+    }
+}

@@ -1,0 +1,165 @@
+//! Multi-head scaled-dot-product attention.
+//!
+//! The softmax(QKᵀ/√d)V core probes the backend's `call_ext("attention")`
+//! extension first — on the AOT/XLA backend that dispatches to the
+//! Pallas-authored fused kernel — and falls back to primitive composition
+//! everywhere else (inference path; training always uses the composed
+//! graph so the tape sees every op).
+
+use crate::autograd::{ops, Variable};
+use crate::tensor::{DType, Tensor};
+
+use super::linear::Linear;
+use super::Module;
+
+/// Multi-head self-attention with optional causal masking.
+pub struct MultiheadAttention {
+    /// Q/K/V projections.
+    pub wq: Linear,
+    /// Key projection.
+    pub wk: Linear,
+    /// Value projection.
+    pub wv: Linear,
+    /// Output projection.
+    pub wo: Linear,
+    heads: usize,
+    dim: usize,
+    causal: bool,
+}
+
+impl MultiheadAttention {
+    /// `dim` must be divisible by `heads`.
+    pub fn new(dim: usize, heads: usize, causal: bool) -> Self {
+        assert_eq!(dim % heads, 0, "dim {dim} not divisible by heads {heads}");
+        MultiheadAttention {
+            wq: Linear::new(dim, dim),
+            wk: Linear::new(dim, dim),
+            wv: Linear::new(dim, dim),
+            wo: Linear::new(dim, dim),
+            heads,
+            dim,
+            causal,
+        }
+    }
+
+    /// Split `[B, L, D]` into `[B*H, L, D/H]`.
+    fn split_heads(&self, x: &Variable, b: usize, l: usize) -> Variable {
+        let hd = self.dim / self.heads;
+        let x = ops::reshape(x, &[b as isize, l as isize, self.heads as isize, hd as isize]);
+        let x = ops::transpose(&x, &[0, 2, 1, 3]);
+        ops::reshape(&x, &[(b * self.heads) as isize, l as isize, hd as isize])
+    }
+
+    /// Inverse of `split_heads`.
+    fn merge_heads(&self, x: &Variable, b: usize, l: usize) -> Variable {
+        let hd = self.dim / self.heads;
+        let x = ops::reshape(x, &[b as isize, self.heads as isize, l as isize, hd as isize]);
+        let x = ops::transpose(&x, &[0, 2, 1, 3]);
+        ops::reshape(&x, &[b as isize, l as isize, self.dim as isize])
+    }
+
+    /// Scaled-dot-product core over `[B*H, L, hd]` tensors.
+    pub fn sdpa(&self, q: &Variable, k: &Variable, v: &Variable, l: usize) -> Variable {
+        let hd = self.dim / self.heads;
+        let scale = 1.0 / (hd as f64).sqrt();
+        let scores = ops::mul_scalar(&ops::matmul(q, &ops::t(k)), scale);
+        let scores = if self.causal {
+            let mask = Tensor::tril_mask(l).astype(DType::F32);
+            // additive -inf style mask: (1-mask) * -1e9
+            let bias = mask.neg().add_scalar(1.0).mul_scalar(-1e9);
+            ops::add(&scores, &Variable::constant(bias))
+        } else {
+            scores
+        };
+        let attn = ops::softmax(&scores, -1);
+        ops::matmul(&attn, v)
+    }
+}
+
+impl Module for MultiheadAttention {
+    fn forward(&self, input: &Variable) -> Variable {
+        let dims = input.dims();
+        assert_eq!(dims.len(), 3, "attention wants [B, L, D]");
+        let (b, l) = (dims[0], dims[1]);
+        let q = self.split_heads(&self.wq.forward(input), b, l);
+        let k = self.split_heads(&self.wk.forward(input), b, l);
+        let v = self.split_heads(&self.wv.forward(input), b, l);
+        let ctx = self.sdpa(&q, &k, &v, l);
+        self.wo.forward(&self.merge_heads(&ctx, b, l))
+    }
+
+    fn params(&self) -> Vec<Variable> {
+        [&self.wq, &self.wk, &self.wv, &self.wo].iter().flat_map(|m| m.params()).collect()
+    }
+
+    fn name(&self) -> String {
+        format!("MultiheadAttention(d={}, h={}, causal={})", self.dim, self.heads, self.causal)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shapes_roundtrip() {
+        let m = MultiheadAttention::new(16, 4, false);
+        let x = Variable::constant(Tensor::rand([2, 5, 16], -1.0, 1.0));
+        let y = m.forward(&x);
+        assert_eq!(y.dims(), vec![2, 5, 16]);
+        assert_eq!(m.params().len(), 8);
+    }
+
+    #[test]
+    fn causal_mask_blocks_future() {
+        // with causal masking, output at position 0 must not depend on
+        // later positions
+        let m = MultiheadAttention::new(8, 2, true);
+        let base = Tensor::rand([1, 4, 8], -1.0, 1.0);
+        let y1 = m.forward(&Variable::constant(base.clone())).tensor().to_vec();
+        // perturb the last position only
+        let mut v = base.to_vec();
+        for x in v[24..32].iter_mut() {
+            *x += 10.0;
+        }
+        let y2 = m
+            .forward(&Variable::constant(Tensor::from_slice(&v, [1, 4, 8])))
+            .tensor()
+            .to_vec();
+        for i in 0..8 {
+            assert!((y1[i] - y2[i]).abs() < 1e-5, "position 0 leaked future info");
+        }
+        // but the last position must change
+        let tail_moved = (0..8).any(|i| (y1[24 + i] - y2[24 + i]).abs() > 1e-4);
+        assert!(tail_moved);
+    }
+
+    #[test]
+    fn gradients_reach_all_projections() {
+        let m = MultiheadAttention::new(8, 2, false);
+        let x = Variable::constant(Tensor::rand([1, 3, 8], -1.0, 1.0));
+        ops::sum(&m.forward(&x), &[], false).backward();
+        for p in m.params() {
+            assert!(p.grad().is_some());
+        }
+    }
+
+    #[test]
+    fn attention_rows_are_convex_combinations() {
+        // uniform V rows -> output equals that row regardless of scores
+        let m = MultiheadAttention::new(4, 1, false);
+        // make wv identity-ish, wo identity, wq/wk zero -> uniform attention
+        m.wq.weight.set_tensor(Tensor::zeros([4, 4]));
+        m.wk.weight.set_tensor(Tensor::zeros([4, 4]));
+        m.wv.weight.set_tensor(Tensor::eye(4, DType::F32));
+        m.wo.weight.set_tensor(Tensor::eye(4, DType::F32));
+        let x = Variable::constant(Tensor::from_slice(
+            &[1.0f32, 0., 0., 0., 0., 1., 0., 0.],
+            [1, 2, 4],
+        ));
+        let y = m.forward(&x).tensor().to_vec();
+        // uniform attention -> each row is the mean of V rows = [0.5, 0.5, 0, 0]
+        assert!((y[0] - 0.5).abs() < 1e-5 && (y[1] - 0.5).abs() < 1e-5);
+        assert!((y[4] - 0.5).abs() < 1e-5 && (y[5] - 0.5).abs() < 1e-5);
+    }
+}

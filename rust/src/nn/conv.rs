@@ -1,0 +1,187 @@
+//! Convolution / pooling / reshape modules (paper Listing 8 building
+//! blocks: `Conv2D`, `Pool2D`, `View`).
+
+use crate::autograd::{ops, Variable};
+use crate::tensor::{Conv2dParams, Pool2dParams, PoolKind, Tensor};
+
+use super::init::kaiming_normal;
+use super::Module;
+
+/// Padding specification (paper Listing 8's `PaddingMode::SAME`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Padding {
+    /// No padding.
+    Valid,
+    /// Pad so stride-1 output matches input size (`(k-1)/2` per side).
+    Same,
+    /// Explicit symmetric padding.
+    Explicit(usize, usize),
+}
+
+/// 2-D convolution layer (NCHW), weight `[out_c, in_c, kh, kw]`.
+pub struct Conv2D {
+    /// Filter bank.
+    pub weight: Variable,
+    /// Optional per-output-channel bias.
+    pub bias: Option<Variable>,
+    stride: (usize, usize),
+    padding: (usize, usize),
+    desc: String,
+}
+
+impl Conv2D {
+    /// Construct with the paper's Listing 8 argument order.
+    pub fn new(
+        in_channels: usize,
+        out_channels: usize,
+        kw: usize,
+        kh: usize,
+        sx: usize,
+        sy: usize,
+        px: Padding,
+        py: Padding,
+    ) -> Self {
+        let resolve = |p: Padding, k: usize| match p {
+            Padding::Valid => 0,
+            Padding::Same => (k - 1) / 2,
+            Padding::Explicit(a, _) => a,
+        };
+        let padding = (resolve(py, kh), resolve(px, kw));
+        let fan_in = in_channels * kh * kw;
+        Conv2D {
+            weight: Variable::param(kaiming_normal(
+                fan_in,
+                &[out_channels, in_channels, kh, kw],
+            )),
+            bias: Some(Variable::param(Tensor::zeros([out_channels]))),
+            stride: (sy, sx),
+            padding,
+            desc: format!("Conv2D({in_channels}, {out_channels}, {kw}x{kh})"),
+        }
+    }
+
+    /// Square-kernel convenience.
+    pub fn square(in_c: usize, out_c: usize, k: usize, stride: usize, pad: Padding) -> Self {
+        Self::new(in_c, out_c, k, k, stride, stride, pad, pad)
+    }
+}
+
+impl Module for Conv2D {
+    fn forward(&self, input: &Variable) -> Variable {
+        let p = Conv2dParams { stride: self.stride, padding: self.padding };
+        let mut y = ops::conv2d(input, &self.weight, p);
+        if let Some(b) = &self.bias {
+            // bias [C] -> broadcast over [N, C, H, W]
+            let c = b.dims()[0];
+            let b4 = ops::reshape(b, &[1, c as isize, 1, 1]);
+            y = ops::add(&y, &b4);
+        }
+        y
+    }
+
+    fn params(&self) -> Vec<Variable> {
+        let mut p = vec![self.weight.clone()];
+        if let Some(b) = &self.bias {
+            p.push(b.clone());
+        }
+        p
+    }
+
+    fn name(&self) -> String {
+        self.desc.clone()
+    }
+}
+
+/// 2-D pooling layer.
+pub struct Pool2D {
+    params: Pool2dParams,
+}
+
+impl Pool2D {
+    /// Max pooling (paper Listing 8 argument order: kw, kh, sx, sy).
+    pub fn max(kw: usize, kh: usize, sx: usize, sy: usize) -> Self {
+        Pool2D { params: Pool2dParams { kind: PoolKind::Max, kernel: (kh, kw), stride: (sy, sx) } }
+    }
+
+    /// Average pooling.
+    pub fn avg(kw: usize, kh: usize, sx: usize, sy: usize) -> Self {
+        Pool2D { params: Pool2dParams { kind: PoolKind::Avg, kernel: (kh, kw), stride: (sy, sx) } }
+    }
+}
+
+impl Module for Pool2D {
+    fn forward(&self, input: &Variable) -> Variable {
+        ops::pool2d(input, self.params)
+    }
+    fn params(&self) -> Vec<Variable> {
+        Vec::new()
+    }
+    fn name(&self) -> String {
+        format!("Pool2D({:?})", self.params.kind)
+    }
+}
+
+/// Reshape module (paper Listing 8's `View`), `-1` wildcard allowed.
+pub struct View {
+    dims: Vec<isize>,
+}
+
+impl View {
+    /// Target dims, one `-1` allowed.
+    pub fn new(dims: &[isize]) -> Self {
+        View { dims: dims.to_vec() }
+    }
+}
+
+impl Module for View {
+    fn forward(&self, input: &Variable) -> Variable {
+        ops::reshape(input, &self.dims)
+    }
+    fn params(&self) -> Vec<Variable> {
+        Vec::new()
+    }
+    fn name(&self) -> String {
+        format!("View({:?})", self.dims)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::autograd::ops as aops;
+
+    #[test]
+    fn conv_same_preserves_spatial() {
+        let c = Conv2D::square(3, 8, 3, 1, Padding::Same);
+        let x = Variable::constant(Tensor::rand([2, 3, 8, 8], -1.0, 1.0));
+        let y = c.forward(&x);
+        assert_eq!(y.dims(), vec![2, 8, 8, 8]);
+    }
+
+    #[test]
+    fn conv_valid_shrinks() {
+        let c = Conv2D::square(1, 4, 5, 1, Padding::Valid);
+        let x = Variable::constant(Tensor::rand([1, 1, 10, 10], -1.0, 1.0));
+        assert_eq!(c.forward(&x).dims(), vec![1, 4, 6, 6]);
+    }
+
+    #[test]
+    fn conv_bias_broadcasts_and_gets_grad() {
+        let c = Conv2D::square(1, 2, 3, 1, Padding::Same);
+        let x = Variable::constant(Tensor::rand([1, 1, 4, 4], -1.0, 1.0));
+        let y = aops::sum(&c.forward(&x), &[], false);
+        y.backward();
+        let bg = c.bias.as_ref().unwrap().grad().unwrap();
+        assert_eq!(bg.dims(), &[2]);
+        assert_eq!(bg.to_vec(), vec![16.0, 16.0]); // 4x4 spatial each
+    }
+
+    #[test]
+    fn pool_and_view_chain() {
+        let p = Pool2D::max(2, 2, 2, 2);
+        let v = View::new(&[-1, 4]);
+        let x = Variable::constant(Tensor::rand([1, 1, 4, 4], 0.0, 1.0));
+        let y = v.forward(&p.forward(&x));
+        assert_eq!(y.dims(), vec![1, 4]);
+    }
+}

@@ -1,0 +1,107 @@
+//! Dropout (paper Listing 6, including train/eval gating).
+
+use crate::autograd::{ops, Variable};
+use crate::tensor::{DType, Tensor};
+
+use super::Module;
+
+/// Inverted dropout: at train time, zero each element with probability
+/// `ratio` and scale survivors by `1/(1-ratio)`; identity in eval mode.
+pub struct Dropout {
+    ratio: f64,
+    train: bool,
+}
+
+impl Dropout {
+    /// Listing 6's constructor (default ratio 0.5).
+    pub fn new(drop_ratio: f64) -> Self {
+        assert!((0.0..1.0).contains(&drop_ratio), "dropout ratio must be in [0,1)");
+        Dropout { ratio: drop_ratio, train: true }
+    }
+
+    /// The configured drop probability.
+    pub fn ratio(&self) -> f64 {
+        self.ratio
+    }
+}
+
+impl Default for Dropout {
+    fn default() -> Self {
+        Self::new(0.5)
+    }
+}
+
+impl Module for Dropout {
+    fn forward(&self, input: &Variable) -> Variable {
+        if !self.train || self.ratio == 0.0 {
+            return input.clone();
+        }
+        let shape = input.dims();
+        let keep = Tensor::rand(shape, 0.0, 1.0)
+            .ge(&Tensor::full([], self.ratio, DType::F32))
+            .astype(DType::F32)
+            .mul_scalar(1.0 / (1.0 - self.ratio));
+        ops::mul(input, &Variable::constant(keep))
+    }
+
+    fn params(&self) -> Vec<Variable> {
+        Vec::new()
+    }
+
+    fn set_train(&mut self, train: bool) {
+        self.train = train;
+    }
+
+    fn name(&self) -> String {
+        format!("Dropout({})", self.ratio)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn eval_mode_is_identity() {
+        let mut d = Dropout::new(0.5);
+        d.set_train(false);
+        let x = Variable::constant(Tensor::rand([100], -1.0, 1.0));
+        assert_eq!(d.forward(&x).tensor().to_vec(), x.tensor().to_vec());
+    }
+
+    #[test]
+    fn train_mode_zeroes_and_rescales() {
+        crate::util::rng::seed(11);
+        let d = Dropout::new(0.5);
+        let x = Variable::constant(Tensor::ones([10_000]));
+        let y = d.forward(&x).tensor().to_vec();
+        let zeros = y.iter().filter(|&&v| v == 0.0).count();
+        let frac = zeros as f64 / y.len() as f64;
+        assert!((frac - 0.5).abs() < 0.05, "drop fraction {frac}");
+        // survivors are scaled to preserve the expectation
+        for &v in &y {
+            assert!(v == 0.0 || (v - 2.0).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn zero_ratio_is_noop() {
+        let d = Dropout::new(0.0);
+        let x = Variable::constant(Tensor::ones([4]));
+        assert_eq!(d.forward(&x).tensor().to_vec(), vec![1.0; 4]);
+    }
+
+    #[test]
+    fn gradient_masks_match_forward() {
+        crate::util::rng::seed(3);
+        let d = Dropout::new(0.3);
+        let x = Variable::param(Tensor::ones([1000]));
+        let y = d.forward(&x);
+        let yv = y.tensor().to_vec();
+        crate::autograd::ops::sum(&y, &[], false).backward();
+        let g = x.grad().unwrap().to_vec();
+        for (gi, yi) in g.iter().zip(&yv) {
+            assert_eq!(*gi == 0.0, *yi == 0.0, "gradient mask mismatch");
+        }
+    }
+}

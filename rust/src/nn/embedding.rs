@@ -1,0 +1,89 @@
+//! Token embedding lookup.
+
+use crate::autograd::{ops, Variable};
+use crate::tensor::{DType, Tensor};
+
+use super::init::normal;
+use super::Module;
+
+/// Trainable embedding table `[vocab, dim]`; forward maps integer token
+/// tensors `[...]` to `[..., dim]` via `index_select`, with a
+/// `scatter_add` gradient.
+pub struct Embedding {
+    /// The table.
+    pub weight: Variable,
+    vocab: usize,
+    dim: usize,
+}
+
+impl Embedding {
+    /// N(0, 0.02)-initialized table (transformer convention).
+    pub fn new(vocab: usize, dim: usize) -> Self {
+        Embedding { weight: Variable::param(normal(0.02, &[vocab, dim])), vocab, dim }
+    }
+
+    /// Vocabulary size.
+    pub fn vocab(&self) -> usize {
+        self.vocab
+    }
+
+    /// Embedding width.
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    /// Look up integer ids (any shape); returns `[..ids, dim]`.
+    pub fn lookup(&self, ids: &Tensor) -> Variable {
+        let id_dims = ids.dims().to_vec();
+        let n = ids.numel();
+        let flat = ids.astype(DType::I64).reshape(&[n as isize]);
+        let rows = ops::index_select0(&self.weight, &flat);
+        let mut out_dims: Vec<isize> = id_dims.iter().map(|&d| d as isize).collect();
+        out_dims.push(self.dim as isize);
+        ops::reshape(&rows, &out_dims)
+    }
+}
+
+impl Module for Embedding {
+    fn forward(&self, input: &Variable) -> Variable {
+        self.lookup(&input.tensor())
+    }
+
+    fn params(&self) -> Vec<Variable> {
+        vec![self.weight.clone()]
+    }
+
+    fn name(&self) -> String {
+        format!("Embedding({}, {})", self.vocab, self.dim)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lookup_shapes_and_values() {
+        let e = Embedding::new(10, 4);
+        e.weight.set_tensor(Tensor::arange(40, DType::F32).reshape(&[10, 4]));
+        let ids = Tensor::from_slice(&[2i64, 0, 2], [3]);
+        let out = e.lookup(&ids).tensor();
+        assert_eq!(out.dims(), &[3, 4]);
+        assert_eq!(out.to_vec()[..4], [8.0, 9.0, 10.0, 11.0]);
+        // batched ids
+        let ids2 = Tensor::from_slice(&[1i64, 2, 3, 4], [2, 2]);
+        assert_eq!(e.lookup(&ids2).dims(), vec![2, 2, 4]);
+    }
+
+    #[test]
+    fn duplicate_ids_accumulate_grads() {
+        let e = Embedding::new(5, 2);
+        let ids = Tensor::from_slice(&[3i64, 3, 1], [3]);
+        let out = e.lookup(&ids);
+        ops::sum(&out, &[], false).backward();
+        let g = e.weight.grad().unwrap().to_vec();
+        assert_eq!(g[6..8], [2.0, 2.0]); // row 3 hit twice
+        assert_eq!(g[2..4], [1.0, 1.0]); // row 1 hit once
+        assert_eq!(g[0..2], [0.0, 0.0]);
+    }
+}

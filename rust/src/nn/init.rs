@@ -1,0 +1,41 @@
+//! Parameter initializers.
+
+use crate::tensor::Tensor;
+
+/// Glorot/Xavier uniform: `U(-a, a)`, `a = sqrt(6 / (fan_in + fan_out))`.
+pub fn glorot_uniform(fan_in: usize, fan_out: usize, shape: &[usize]) -> Tensor {
+    let a = (6.0 / (fan_in + fan_out) as f64).sqrt();
+    Tensor::rand(shape.to_vec(), -a, a)
+}
+
+/// Kaiming/He normal: `N(0, sqrt(2 / fan_in))` (ReLU networks).
+pub fn kaiming_normal(fan_in: usize, shape: &[usize]) -> Tensor {
+    let std = (2.0 / fan_in as f64).sqrt();
+    Tensor::randn(shape.to_vec(), 0.0, std)
+}
+
+/// Truncated-ish normal used for embeddings / transformers.
+pub fn normal(std: f64, shape: &[usize]) -> Tensor {
+    Tensor::randn(shape.to_vec(), 0.0, std)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn glorot_bounds() {
+        let t = glorot_uniform(100, 100, &[100, 100]);
+        let bound = (6.0 / 200.0_f64).sqrt() as f32;
+        assert!(t.to_vec().iter().all(|&x| x.abs() <= bound));
+    }
+
+    #[test]
+    fn kaiming_scale() {
+        crate::util::rng::seed(5);
+        let t = kaiming_normal(200, &[200, 50]);
+        let std = t.std(&[], false).item();
+        let want = (2.0 / 200.0_f64).sqrt();
+        assert!((std - want).abs() / want < 0.1, "std {std} want {want}");
+    }
+}

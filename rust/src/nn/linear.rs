@@ -1,0 +1,129 @@
+//! Fully-connected layer.
+
+use crate::autograd::{ops, Variable};
+use crate::tensor::Tensor;
+
+use super::init::glorot_uniform;
+use super::Module;
+
+/// `y = x Wᵀ + b` over the last dimension (leading dims are batch).
+pub struct Linear {
+    /// Weight `[out, in]`.
+    pub weight: Variable,
+    /// Optional bias `[out]`.
+    pub bias: Option<Variable>,
+    in_features: usize,
+    out_features: usize,
+}
+
+impl Linear {
+    /// Glorot-initialized layer with bias.
+    pub fn new(in_features: usize, out_features: usize) -> Self {
+        Linear {
+            weight: Variable::param(glorot_uniform(
+                in_features,
+                out_features,
+                &[out_features, in_features],
+            )),
+            bias: Some(Variable::param(Tensor::zeros([out_features]))),
+            in_features,
+            out_features,
+        }
+    }
+
+    /// Without bias.
+    pub fn new_no_bias(in_features: usize, out_features: usize) -> Self {
+        let mut l = Self::new(in_features, out_features);
+        l.bias = None;
+        l
+    }
+
+    /// Input width.
+    pub fn in_features(&self) -> usize {
+        self.in_features
+    }
+
+    /// Output width.
+    pub fn out_features(&self) -> usize {
+        self.out_features
+    }
+}
+
+impl Module for Linear {
+    fn forward(&self, input: &Variable) -> Variable {
+        // flatten leading dims into a batch for the 2-D matmul, then restore
+        let in_dims = input.dims();
+        let rank = in_dims.len();
+        assert!(rank >= 1, "Linear needs rank >= 1");
+        assert_eq!(in_dims[rank - 1], self.in_features, "Linear input width");
+        let flat = if rank == 2 {
+            input.clone()
+        } else {
+            ops::reshape(input, &[-1, self.in_features as isize])
+        };
+        let mut y = ops::matmul(&flat, &ops::t(&self.weight));
+        if let Some(b) = &self.bias {
+            y = ops::add(&y, b);
+        }
+        if rank != 2 {
+            let mut out_dims: Vec<isize> =
+                in_dims[..rank - 1].iter().map(|&d| d as isize).collect();
+            out_dims.push(self.out_features as isize);
+            y = ops::reshape(&y, &out_dims);
+        }
+        y
+    }
+
+    fn params(&self) -> Vec<Variable> {
+        let mut p = vec![self.weight.clone()];
+        if let Some(b) = &self.bias {
+            p.push(b.clone());
+        }
+        p
+    }
+
+    fn name(&self) -> String {
+        format!("Linear({}, {})", self.in_features, self.out_features)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn forward_shapes() {
+        let l = Linear::new(4, 3);
+        let x = Variable::constant(Tensor::rand([5, 4], -1.0, 1.0));
+        assert_eq!(l.forward(&x).dims(), vec![5, 3]);
+        // rank-3 input
+        let x3 = Variable::constant(Tensor::rand([2, 5, 4], -1.0, 1.0));
+        assert_eq!(l.forward(&x3).dims(), vec![2, 5, 3]);
+    }
+
+    #[test]
+    fn known_values() {
+        let l = Linear::new(2, 1);
+        l.weight.set_tensor(Tensor::from_slice(&[2.0f32, 3.0], [1, 2]));
+        l.bias.as_ref().unwrap().set_tensor(Tensor::from_slice(&[1.0f32], [1]));
+        let x = Variable::constant(Tensor::from_slice(&[1.0f32, 1.0], [1, 2]));
+        assert_eq!(l.forward(&x).tensor().to_vec(), vec![6.0]);
+    }
+
+    #[test]
+    fn gradients_flow_to_both_params() {
+        let l = Linear::new(3, 2);
+        let x = Variable::constant(Tensor::rand([4, 3], -1.0, 1.0));
+        let y = ops::sum(&l.forward(&x), &[], false);
+        y.backward();
+        assert_eq!(l.weight.grad().unwrap().dims(), &[2, 3]);
+        // bias grad = batch size per output
+        assert_eq!(l.bias.as_ref().unwrap().grad().unwrap().to_vec(), vec![4.0, 4.0]);
+    }
+
+    #[test]
+    fn no_bias_variant() {
+        let l = Linear::new_no_bias(2, 2);
+        assert_eq!(l.params().len(), 1);
+    }
+}

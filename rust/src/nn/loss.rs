@@ -1,0 +1,102 @@
+//! Loss functions, derived by composition from the primitive op set.
+
+use crate::autograd::{ops, Variable};
+use crate::tensor::{DType, Tensor};
+
+/// Categorical cross-entropy between `logits [N, C]` (unnormalized) and
+/// integer `targets [N]`; mean over the batch. (The paper's MNIST listing
+/// feeds LogSoftmax outputs; this accepts raw logits and applies
+/// log-softmax internally, which is equivalent since log-softmax is
+/// idempotent up to an additive constant.)
+pub fn categorical_cross_entropy(logits: &Variable, targets: &Tensor) -> Variable {
+    let dims = logits.dims();
+    assert_eq!(dims.len(), 2, "cross entropy wants [N, C] logits");
+    let (n, c) = (dims[0], dims[1]);
+    assert_eq!(targets.numel(), n, "targets length");
+    let logp = ops::log_softmax(logits, -1);
+    let onehot = Variable::constant(targets.astype(DType::I64).one_hot(c));
+    let picked = ops::sum(&ops::mul(&logp, &onehot), &[], false);
+    ops::mul_scalar(&picked, -1.0 / n as f64)
+}
+
+/// Mean squared error.
+pub fn mse_loss(pred: &Variable, target: &Variable) -> Variable {
+    ops::mse(pred, target)
+}
+
+/// Binary cross-entropy on probabilities in `(0,1)`.
+pub fn binary_cross_entropy(prob: &Variable, target: &Variable) -> Variable {
+    let eps = 1e-7;
+    let p = ops::add_scalar(prob, eps);
+    let q = ops::add_scalar(&ops::mul_scalar(prob, -1.0), 1.0 + eps);
+    let pos = ops::mul(target, &ops::log(&p));
+    let neg = ops::mul(&ops::add_scalar(&ops::mul_scalar(target, -1.0), 1.0), &ops::log(&q));
+    ops::mul_scalar(&ops::mean(&ops::add(&pos, &neg), &[], false), -1.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cross_entropy_perfect_prediction_near_zero() {
+        // huge logit on the right class
+        let logits = Variable::constant(Tensor::from_slice(
+            &[20.0f32, 0.0, 0.0, 0.0, 20.0, 0.0],
+            [2, 3],
+        ));
+        let targets = Tensor::from_slice(&[0i64, 1], [2]);
+        let l = categorical_cross_entropy(&logits, &targets);
+        assert!(l.tensor().item() < 1e-6);
+    }
+
+    #[test]
+    fn cross_entropy_uniform_is_log_c() {
+        let logits = Variable::constant(Tensor::zeros([4, 10]));
+        let targets = Tensor::from_slice(&[0i64, 3, 5, 9], [4]);
+        let l = categorical_cross_entropy(&logits, &targets).tensor().item();
+        assert!((l - (10.0f64).ln()).abs() < 1e-5);
+    }
+
+    #[test]
+    fn cross_entropy_gradcheck() {
+        use crate::testutil::gradcheck::check_grad;
+        let targets = Tensor::from_slice(&[1i64, 0, 2], [3]);
+        check_grad("xent", &[3, 4], move |x| categorical_cross_entropy(x, &targets));
+    }
+
+    #[test]
+    fn bce_symmetric_extremes() {
+        let p = Variable::constant(Tensor::from_slice(&[0.9f32, 0.1], [2]));
+        let t = Variable::constant(Tensor::from_slice(&[1.0f32, 0.0], [2]));
+        let l = binary_cross_entropy(&p, &t).tensor().item();
+        assert!((l - (-(0.9f64).ln())).abs() < 1e-4);
+    }
+
+    #[test]
+    fn training_reduces_cross_entropy() {
+        // one linear layer learns a trivial mapping
+        use crate::nn::{Linear, Module};
+        crate::util::rng::seed(1);
+        let layer = Linear::new(4, 3);
+        let x = Tensor::from_slice(
+            &[1.0f32, 0., 0., 0., 0., 1., 0., 0., 0., 0., 1., 0.],
+            [3, 4],
+        );
+        let y = Tensor::from_slice(&[0i64, 1, 2], [3]);
+        let mut last = f64::INFINITY;
+        for _ in 0..50 {
+            let out = layer.forward(&Variable::constant(x.clone()));
+            let loss = categorical_cross_entropy(&out, &y);
+            let lv = loss.tensor().item();
+            loss.backward();
+            for p in layer.params() {
+                let g = p.grad().unwrap();
+                p.set_tensor(p.tensor().sub(&g.mul_scalar(0.5)));
+                p.zero_grad();
+            }
+            last = lv;
+        }
+        assert!(last < 0.1, "loss did not converge: {last}");
+    }
+}

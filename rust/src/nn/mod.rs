@@ -1,0 +1,196 @@
+//! Neural-network building blocks (paper §4.2 "Neural Network
+//! Primitives", §A.4.2).
+//!
+//! Everything derives from the [`Module`] interface, communicates by
+//! exchanging [`Variable`]s, and composes functionally or imperatively
+//! (e.g. [`Sequential`]). All layer math is written in terms of the small
+//! tensor-backend primitive set via [`crate::autograd::ops`], so modules
+//! run unchanged on any backend.
+
+pub mod activations;
+pub mod attention;
+pub mod conv;
+pub mod dropout;
+pub mod embedding;
+pub mod init;
+pub mod linear;
+pub mod loss;
+pub mod norm;
+pub mod transformer;
+
+pub use activations::{LogSoftmax, ReLU, Sigmoid, Tanh, GELU};
+pub use attention::MultiheadAttention;
+pub use conv::{Conv2D, Pool2D, View};
+pub use dropout::Dropout;
+pub use embedding::Embedding;
+pub use linear::Linear;
+pub use loss::{binary_cross_entropy, categorical_cross_entropy, mse_loss};
+pub use norm::{BatchNorm2d, LayerNorm};
+pub use transformer::{PositionalEmbedding, TransformerEncoderLayer};
+
+use crate::autograd::Variable;
+
+/// The module interface (paper §4: blocks "derive from a MODULE interface,
+/// communicate by exchanging Tensor data, and are composed functionally or
+/// imperatively").
+pub trait Module: Send {
+    /// Apply the module.
+    fn forward(&self, input: &Variable) -> Variable;
+
+    /// Trainable parameters (used by optimizers, serialization, and the
+    /// distributed gradient synchronizer).
+    fn params(&self) -> Vec<Variable>;
+
+    /// Non-trainable state (e.g. batch-norm running statistics).
+    fn buffers(&self) -> Vec<Variable> {
+        Vec::new()
+    }
+
+    /// Switch train/eval behavior (dropout, batch-norm).
+    fn set_train(&mut self, _train: bool) {}
+
+    /// Human-readable name.
+    fn name(&self) -> String;
+}
+
+/// Total number of scalar parameters of a module.
+pub fn num_params(m: &dyn Module) -> usize {
+    m.params().iter().map(|p| p.tensor().numel()).sum()
+}
+
+/// A sequence of modules applied in order (paper Listing 8).
+#[derive(Default)]
+pub struct Sequential {
+    layers: Vec<Box<dyn Module>>,
+}
+
+impl Sequential {
+    /// Empty container.
+    pub fn new() -> Self {
+        Sequential { layers: Vec::new() }
+    }
+
+    /// Append a module (builder style: `seq.add(Linear::new(...))`).
+    pub fn add(&mut self, m: impl Module + 'static) -> &mut Self {
+        self.layers.push(Box::new(m));
+        self
+    }
+
+    /// Append a boxed module.
+    pub fn add_boxed(&mut self, m: Box<dyn Module>) -> &mut Self {
+        self.layers.push(m);
+        self
+    }
+
+    /// Number of layers.
+    pub fn len(&self) -> usize {
+        self.layers.len()
+    }
+
+    /// Is the container empty?
+    pub fn is_empty(&self) -> bool {
+        self.layers.is_empty()
+    }
+
+    /// Access a layer.
+    pub fn layer(&self, i: usize) -> &dyn Module {
+        self.layers[i].as_ref()
+    }
+}
+
+impl Module for Sequential {
+    fn forward(&self, input: &Variable) -> Variable {
+        let mut x = input.clone();
+        for l in &self.layers {
+            x = l.forward(&x);
+        }
+        x
+    }
+
+    fn params(&self) -> Vec<Variable> {
+        self.layers.iter().flat_map(|l| l.params()).collect()
+    }
+
+    fn buffers(&self) -> Vec<Variable> {
+        self.layers.iter().flat_map(|l| l.buffers()).collect()
+    }
+
+    fn set_train(&mut self, train: bool) {
+        for l in &mut self.layers {
+            l.set_train(train);
+        }
+    }
+
+    fn name(&self) -> String {
+        let inner: Vec<String> = self.layers.iter().map(|l| l.name()).collect();
+        format!("Sequential({})", inner.join(" -> "))
+    }
+}
+
+/// A module made from a plain function (functional composition).
+pub struct Lambda<F: Fn(&Variable) -> Variable + Send> {
+    f: F,
+    label: &'static str,
+}
+
+impl<F: Fn(&Variable) -> Variable + Send> Lambda<F> {
+    /// Wrap a closure as a module.
+    pub fn new(label: &'static str, f: F) -> Self {
+        Lambda { f, label }
+    }
+}
+
+impl<F: Fn(&Variable) -> Variable + Send> Module for Lambda<F> {
+    fn forward(&self, input: &Variable) -> Variable {
+        (self.f)(input)
+    }
+    fn params(&self) -> Vec<Variable> {
+        Vec::new()
+    }
+    fn name(&self) -> String {
+        format!("Lambda({})", self.label)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::autograd::ops;
+    use crate::tensor::Tensor;
+
+    #[test]
+    fn sequential_composes_and_collects_params() {
+        let mut seq = Sequential::new();
+        seq.add(Linear::new(4, 8));
+        seq.add(ReLU);
+        seq.add(Linear::new(8, 2));
+        let x = Variable::constant(Tensor::rand([3, 4], -1.0, 1.0));
+        let y = seq.forward(&x);
+        assert_eq!(y.dims(), vec![3, 2]);
+        assert_eq!(seq.params().len(), 4); // two weight+bias pairs
+        assert!(num_params(&seq) > 0);
+        assert!(seq.name().contains("Linear"));
+    }
+
+    #[test]
+    fn lambda_module() {
+        let m = Lambda::new("double", |x| ops::mul_scalar(x, 2.0));
+        let y = m.forward(&Variable::constant(Tensor::ones([2])));
+        assert_eq!(y.tensor().to_vec(), vec![2.0, 2.0]);
+        assert!(m.params().is_empty());
+    }
+
+    #[test]
+    fn sequential_gradient_flows_end_to_end() {
+        let mut seq = Sequential::new();
+        seq.add(Linear::new(3, 3));
+        seq.add(Tanh);
+        seq.add(Linear::new(3, 1));
+        let x = Variable::constant(Tensor::rand([2, 3], -1.0, 1.0));
+        let y = ops::sum(&seq.forward(&x), &[], false);
+        y.backward();
+        for p in seq.params() {
+            assert!(p.grad().is_some(), "missing grad");
+        }
+    }
+}

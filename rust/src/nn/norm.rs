@@ -1,0 +1,194 @@
+//! Normalization layers.
+
+use std::sync::Mutex;
+
+use crate::autograd::{ops, Variable};
+use crate::tensor::Tensor;
+
+use super::Module;
+
+/// Layer normalization over the last dimension, with learnable gain/bias.
+pub struct LayerNorm {
+    /// Gain `γ` `[dim]`.
+    pub gamma: Variable,
+    /// Bias `β` `[dim]`.
+    pub beta: Variable,
+    dim: usize,
+    eps: f64,
+}
+
+impl LayerNorm {
+    /// Normalize the trailing `dim` features.
+    pub fn new(dim: usize) -> Self {
+        LayerNorm {
+            gamma: Variable::param(Tensor::ones([dim])),
+            beta: Variable::param(Tensor::zeros([dim])),
+            dim,
+            eps: 1e-5,
+        }
+    }
+}
+
+impl Module for LayerNorm {
+    fn forward(&self, input: &Variable) -> Variable {
+        assert_eq!(*input.dims().last().unwrap(), self.dim, "LayerNorm dim");
+        let mu = ops::mean(input, &[-1], true);
+        let centered = ops::sub(input, &mu);
+        let var = ops::mean(&ops::mul(&centered, &centered), &[-1], true);
+        let inv = ops::pow_scalar(&ops::add_scalar(&var, self.eps), -0.5);
+        let normed = ops::mul(&centered, &inv);
+        ops::add(&ops::mul(&normed, &self.gamma), &self.beta)
+    }
+
+    fn params(&self) -> Vec<Variable> {
+        vec![self.gamma.clone(), self.beta.clone()]
+    }
+
+    fn name(&self) -> String {
+        format!("LayerNorm({})", self.dim)
+    }
+}
+
+/// Batch normalization over NCHW feature maps with running statistics.
+pub struct BatchNorm2d {
+    /// Gain per channel.
+    pub gamma: Variable,
+    /// Bias per channel.
+    pub beta: Variable,
+    running_mean: Variable,
+    running_var: Variable,
+    momentum: f64,
+    eps: f64,
+    channels: usize,
+    train: bool,
+    // updates to running stats happen during forward; guard for Sync
+    update_lock: Mutex<()>,
+}
+
+impl BatchNorm2d {
+    /// Batch-norm over `channels` feature maps.
+    pub fn new(channels: usize) -> Self {
+        BatchNorm2d {
+            gamma: Variable::param(Tensor::ones([channels])),
+            beta: Variable::param(Tensor::zeros([channels])),
+            running_mean: Variable::constant(Tensor::zeros([channels])),
+            running_var: Variable::constant(Tensor::ones([channels])),
+            momentum: 0.1,
+            eps: 1e-5,
+            channels,
+            train: true,
+            update_lock: Mutex::new(()),
+        }
+    }
+}
+
+impl Module for BatchNorm2d {
+    fn forward(&self, input: &Variable) -> Variable {
+        let dims = input.dims();
+        assert_eq!(dims.len(), 4, "BatchNorm2d wants NCHW");
+        assert_eq!(dims[1], self.channels, "BatchNorm2d channels");
+        let c = self.channels as isize;
+        let reshape4 = |v: &Variable| ops::reshape(v, &[1, c, 1, 1]);
+
+        let (mu, var) = if self.train {
+            let mu = ops::mean(input, &[0, 2, 3], true);
+            let centered = ops::sub(input, &mu);
+            let var = ops::mean(&ops::mul(&centered, &centered), &[0, 2, 3], true);
+            // update running stats (detached)
+            {
+                let _g = self.update_lock.lock().unwrap();
+                let m = self.momentum;
+                let mu_flat = mu.tensor().reshape(&[c]);
+                let var_flat = var.tensor().reshape(&[c]);
+                self.running_mean.set_tensor(
+                    self.running_mean.tensor().mul_scalar(1.0 - m).add(&mu_flat.mul_scalar(m)),
+                );
+                self.running_var.set_tensor(
+                    self.running_var.tensor().mul_scalar(1.0 - m).add(&var_flat.mul_scalar(m)),
+                );
+            }
+            (mu, var)
+        } else {
+            (
+                reshape4(&Variable::constant(self.running_mean.tensor())),
+                reshape4(&Variable::constant(self.running_var.tensor())),
+            )
+        };
+        let inv = ops::pow_scalar(&ops::add_scalar(&var, self.eps), -0.5);
+        let normed = ops::mul(&ops::sub(input, &mu), &inv);
+        ops::add(&ops::mul(&normed, &reshape4(&self.gamma)), &reshape4(&self.beta))
+    }
+
+    fn params(&self) -> Vec<Variable> {
+        vec![self.gamma.clone(), self.beta.clone()]
+    }
+
+    fn buffers(&self) -> Vec<Variable> {
+        vec![self.running_mean.clone(), self.running_var.clone()]
+    }
+
+    fn set_train(&mut self, train: bool) {
+        self.train = train;
+    }
+
+    fn name(&self) -> String {
+        format!("BatchNorm2d({})", self.channels)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn layernorm_zero_mean_unit_var() {
+        let ln = LayerNorm::new(8);
+        let x = Variable::constant(Tensor::rand([4, 8], -3.0, 7.0));
+        let y = ln.forward(&x).tensor();
+        let mu = y.mean(&[-1], false).to_vec();
+        let sd = y.std(&[-1], false).to_vec();
+        for m in mu {
+            assert!(m.abs() < 1e-4, "mean {m}");
+        }
+        for s in sd {
+            assert!((s - 1.0).abs() < 1e-2, "std {s}");
+        }
+    }
+
+    #[test]
+    fn layernorm_gradcheck() {
+        use crate::testutil::gradcheck::check_grad;
+        check_grad("layernorm", &[2, 6], |x| {
+            let ln = LayerNorm::new(6);
+            ops::sum(&ops::mul(&ln.forward(x), x), &[], false)
+        });
+    }
+
+    #[test]
+    fn batchnorm_train_normalizes_batch() {
+        let bn = BatchNorm2d::new(3);
+        let x = Variable::constant(Tensor::rand([4, 3, 5, 5], 2.0, 6.0));
+        let y = bn.forward(&x).tensor();
+        let mu = y.mean(&[0, 2, 3], false).to_vec();
+        for m in mu {
+            assert!(m.abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn batchnorm_eval_uses_running_stats() {
+        let mut bn = BatchNorm2d::new(2);
+        // feed a few training batches to build running stats
+        for _ in 0..20 {
+            let x = Variable::constant(Tensor::randn([8, 2, 4, 4], 3.0, 2.0));
+            bn.forward(&x);
+        }
+        bn.set_train(false);
+        let x = Variable::constant(Tensor::randn([8, 2, 4, 4], 3.0, 2.0));
+        let y = bn.forward(&x).tensor();
+        // eval output should be roughly standardized given matched stats
+        let m = y.mean(&[], false).item();
+        assert!(m.abs() < 0.5, "eval mean {m}");
+        assert_eq!(bn.buffers().len(), 2);
+    }
+}

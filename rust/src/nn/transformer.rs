@@ -1,0 +1,131 @@
+//! Transformer encoder blocks and positional embeddings.
+
+use crate::autograd::{ops, Variable};
+
+use super::attention::MultiheadAttention;
+use super::dropout::Dropout;
+use super::linear::Linear;
+use super::norm::LayerNorm;
+use super::Module;
+
+/// Learned absolute positional embedding added to `[B, L, D]` inputs.
+pub struct PositionalEmbedding {
+    /// Table `[max_len, dim]`.
+    pub weight: Variable,
+    max_len: usize,
+}
+
+impl PositionalEmbedding {
+    /// Table for sequences up to `max_len`.
+    pub fn new(max_len: usize, dim: usize) -> Self {
+        PositionalEmbedding {
+            weight: Variable::param(super::init::normal(0.02, &[max_len, dim])),
+            max_len,
+        }
+    }
+}
+
+impl Module for PositionalEmbedding {
+    fn forward(&self, input: &Variable) -> Variable {
+        let dims = input.dims();
+        let l = dims[1];
+        assert!(l <= self.max_len, "sequence {l} > max_len {}", self.max_len);
+        let pos = ops::slice(&self.weight, &[0, 0], &[l, dims[2]]);
+        // [L, D] broadcasts over batch
+        ops::add(input, &pos)
+    }
+    fn params(&self) -> Vec<Variable> {
+        vec![self.weight.clone()]
+    }
+    fn name(&self) -> String {
+        format!("PositionalEmbedding(max={})", self.max_len)
+    }
+}
+
+/// Pre-norm transformer encoder layer:
+/// `x + attn(ln1(x))`, then `x + mlp(ln2(x))` with GELU MLP.
+pub struct TransformerEncoderLayer {
+    /// Self-attention block.
+    pub attn: MultiheadAttention,
+    /// MLP up-projection.
+    pub fc1: Linear,
+    /// MLP down-projection.
+    pub fc2: Linear,
+    ln1: LayerNorm,
+    ln2: LayerNorm,
+    drop: Dropout,
+    dim: usize,
+}
+
+impl TransformerEncoderLayer {
+    /// Standard block: `mlp_dim` is usually `4*dim`.
+    pub fn new(dim: usize, heads: usize, mlp_dim: usize, dropout: f64, causal: bool) -> Self {
+        TransformerEncoderLayer {
+            attn: MultiheadAttention::new(dim, heads, causal),
+            fc1: Linear::new(dim, mlp_dim),
+            fc2: Linear::new(mlp_dim, dim),
+            ln1: LayerNorm::new(dim),
+            ln2: LayerNorm::new(dim),
+            drop: Dropout::new(dropout),
+            dim,
+        }
+    }
+}
+
+impl Module for TransformerEncoderLayer {
+    fn forward(&self, input: &Variable) -> Variable {
+        let a = self.attn.forward(&self.ln1.forward(input));
+        let x = ops::add(input, &self.drop.forward(&a));
+        let h = self.fc2.forward(&ops::gelu(&self.fc1.forward(&self.ln2.forward(&x))));
+        ops::add(&x, &self.drop.forward(&h))
+    }
+
+    fn params(&self) -> Vec<Variable> {
+        let mut p = self.attn.params();
+        p.extend(self.fc1.params());
+        p.extend(self.fc2.params());
+        p.extend(self.ln1.params());
+        p.extend(self.ln2.params());
+        p
+    }
+
+    fn set_train(&mut self, train: bool) {
+        self.drop.set_train(train);
+    }
+
+    fn name(&self) -> String {
+        format!("TransformerEncoderLayer(d={})", self.dim)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Tensor;
+
+    #[test]
+    fn block_preserves_shape() {
+        let mut blk = TransformerEncoderLayer::new(16, 4, 32, 0.0, false);
+        blk.set_train(false);
+        let x = Variable::constant(Tensor::rand([2, 6, 16], -1.0, 1.0));
+        assert_eq!(blk.forward(&x).dims(), vec![2, 6, 16]);
+    }
+
+    #[test]
+    fn positional_embedding_adds() {
+        let pe = PositionalEmbedding::new(8, 4);
+        pe.weight.set_tensor(Tensor::ones([8, 4]));
+        let x = Variable::constant(Tensor::zeros([2, 3, 4]));
+        let y = pe.forward(&x).tensor();
+        assert_eq!(y.to_vec(), vec![1.0; 24]);
+    }
+
+    #[test]
+    fn full_block_gradients() {
+        let blk = TransformerEncoderLayer::new(8, 2, 16, 0.0, true);
+        let x = Variable::constant(Tensor::rand([1, 4, 8], -1.0, 1.0));
+        ops::sum(&blk.forward(&x), &[], false).backward();
+        let n_with_grad = blk.params().iter().filter(|p| p.grad().is_some()).count();
+        assert_eq!(n_with_grad, blk.params().len());
+    }
+}

@@ -1,0 +1,199 @@
+//! Adam-family optimizers (Adam, AdamW, Adagrad).
+
+use crate::autograd::Variable;
+use crate::tensor::Tensor;
+
+use super::Optimizer;
+
+/// Adam (Kingma & Ba) with bias correction; `decoupled=false` puts weight
+/// decay into the gradient (classic), `true` makes it AdamW.
+pub struct AdamOptimizer {
+    params: Vec<Variable>,
+    lr: f64,
+    beta1: f64,
+    beta2: f64,
+    eps: f64,
+    weight_decay: f64,
+    decoupled: bool,
+    m: Vec<Option<Tensor>>,
+    v: Vec<Option<Tensor>>,
+    t: u64,
+}
+
+impl AdamOptimizer {
+    /// Standard Adam(0.9, 0.999).
+    pub fn new(params: Vec<Variable>, lr: f64) -> Self {
+        Self::full(params, lr, 0.9, 0.999, 1e-8, 0.0, false)
+    }
+
+    /// All knobs.
+    pub fn full(
+        params: Vec<Variable>,
+        lr: f64,
+        beta1: f64,
+        beta2: f64,
+        eps: f64,
+        weight_decay: f64,
+        decoupled: bool,
+    ) -> Self {
+        let n = params.len();
+        AdamOptimizer {
+            params,
+            lr,
+            beta1,
+            beta2,
+            eps,
+            weight_decay,
+            decoupled,
+            m: vec![None; n],
+            v: vec![None; n],
+            t: 0,
+        }
+    }
+}
+
+impl Optimizer for AdamOptimizer {
+    fn step(&mut self) {
+        self.t += 1;
+        let bc1 = 1.0 - self.beta1.powi(self.t as i32);
+        let bc2 = 1.0 - self.beta2.powi(self.t as i32);
+        for (i, p) in self.params.iter().enumerate() {
+            let Some(mut g) = p.grad() else { continue };
+            if self.weight_decay != 0.0 && !self.decoupled {
+                g = g.add(&p.tensor().mul_scalar(self.weight_decay));
+            }
+            let m = match &self.m[i] {
+                Some(m) => m.mul_scalar(self.beta1).add(&g.mul_scalar(1.0 - self.beta1)),
+                None => g.mul_scalar(1.0 - self.beta1),
+            };
+            let v = match &self.v[i] {
+                Some(v) => v.mul_scalar(self.beta2).add(&g.mul(&g).mul_scalar(1.0 - self.beta2)),
+                None => g.mul(&g).mul_scalar(1.0 - self.beta2),
+            };
+            self.m[i] = Some(m.clone());
+            self.v[i] = Some(v.clone());
+            let mhat = m.mul_scalar(1.0 / bc1);
+            let vhat = v.mul_scalar(1.0 / bc2);
+            let mut update = mhat.div(&vhat.sqrt().add_scalar(self.eps)).mul_scalar(self.lr);
+            if self.weight_decay != 0.0 && self.decoupled {
+                update = update.add(&p.tensor().mul_scalar(self.weight_decay * self.lr));
+            }
+            p.set_tensor(p.tensor().sub(&update));
+        }
+    }
+
+    fn params(&self) -> &[Variable] {
+        &self.params
+    }
+    fn lr(&self) -> f64 {
+        self.lr
+    }
+    fn set_lr(&mut self, lr: f64) {
+        self.lr = lr;
+    }
+}
+
+/// AdamW = Adam with decoupled weight decay.
+pub struct AdamWOptimizer(AdamOptimizer);
+
+impl AdamWOptimizer {
+    /// Standard AdamW.
+    pub fn new(params: Vec<Variable>, lr: f64, weight_decay: f64) -> Self {
+        AdamWOptimizer(AdamOptimizer::full(params, lr, 0.9, 0.999, 1e-8, weight_decay, true))
+    }
+}
+
+impl Optimizer for AdamWOptimizer {
+    fn step(&mut self) {
+        self.0.step()
+    }
+    fn params(&self) -> &[Variable] {
+        self.0.params()
+    }
+    fn lr(&self) -> f64 {
+        self.0.lr()
+    }
+    fn set_lr(&mut self, lr: f64) {
+        self.0.set_lr(lr)
+    }
+}
+
+/// Adagrad: per-coordinate accumulated squared gradients.
+pub struct AdagradOptimizer {
+    params: Vec<Variable>,
+    lr: f64,
+    eps: f64,
+    accum: Vec<Option<Tensor>>,
+}
+
+impl AdagradOptimizer {
+    /// Standard Adagrad.
+    pub fn new(params: Vec<Variable>, lr: f64) -> Self {
+        let n = params.len();
+        AdagradOptimizer { params, lr, eps: 1e-10, accum: vec![None; n] }
+    }
+}
+
+impl Optimizer for AdagradOptimizer {
+    fn step(&mut self) {
+        for (i, p) in self.params.iter().enumerate() {
+            let Some(g) = p.grad() else { continue };
+            let acc = match &self.accum[i] {
+                Some(a) => a.add(&g.mul(&g)),
+                None => g.mul(&g),
+            };
+            self.accum[i] = Some(acc.clone());
+            let update = g.div(&acc.sqrt().add_scalar(self.eps)).mul_scalar(self.lr);
+            p.set_tensor(p.tensor().sub(&update));
+        }
+    }
+
+    fn params(&self) -> &[Variable] {
+        &self.params
+    }
+    fn lr(&self) -> f64 {
+        self.lr
+    }
+    fn set_lr(&mut self, lr: f64) {
+        self.lr = lr;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn adam_first_step_is_lr_sized() {
+        // with bias correction, |first update| == lr for any gradient scale
+        let p = Variable::param(Tensor::from_slice(&[0.0f32], [1]));
+        p.set_grad(Tensor::from_slice(&[123.0f32], [1]));
+        let mut opt = AdamOptimizer::new(vec![p.clone()], 0.01);
+        opt.step();
+        assert!((p.tensor().item().abs() - 0.01).abs() < 1e-4);
+    }
+
+    #[test]
+    fn adamw_decay_is_decoupled() {
+        let p = Variable::param(Tensor::from_slice(&[1.0f32], [1]));
+        p.set_grad(Tensor::zeros([1]));
+        let mut opt = AdamWOptimizer::new(vec![p.clone()], 0.1, 0.5);
+        opt.step();
+        // zero gradient: only the decoupled decay applies: 1 - 0.1*0.5
+        assert!((p.tensor().item() - 0.95).abs() < 1e-5);
+    }
+
+    #[test]
+    fn adagrad_effective_lr_decays() {
+        let p = Variable::param(Tensor::from_slice(&[0.0f32], [1]));
+        let mut opt = AdagradOptimizer::new(vec![p.clone()], 1.0);
+        p.set_grad(Tensor::from_slice(&[1.0f32], [1]));
+        opt.step();
+        let first = -p.tensor().item();
+        p.set_grad(Tensor::from_slice(&[1.0f32], [1]));
+        let before = p.tensor().item();
+        opt.step();
+        let second = before - p.tensor().item();
+        assert!(second < first, "second step {second} not smaller than first {first}");
+    }
+}

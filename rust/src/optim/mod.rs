@@ -1,0 +1,107 @@
+//! First-order stochastic optimizers (paper §4.2 "Optimizers"), defined in
+//! terms of `Variable` and `Tensor` operations only — open to
+//! experimentation with distributed or in-place variants.
+
+pub mod adam;
+pub mod rmsprop;
+pub mod scheduler;
+pub mod sgd;
+
+pub use adam::{AdagradOptimizer, AdamOptimizer, AdamWOptimizer};
+pub use rmsprop::RMSPropOptimizer;
+pub use scheduler::{CosineSchedule, LrSchedule, StepSchedule, WarmupLinearSchedule};
+pub use sgd::SGDOptimizer;
+
+use crate::autograd::Variable;
+
+/// The optimizer interface: owns its parameter list, consumes accumulated
+/// gradients on `step`.
+pub trait Optimizer: Send {
+    /// Apply one update using the gradients currently on the parameters.
+    /// Parameters with no gradient are skipped.
+    fn step(&mut self);
+
+    /// Clear all parameter gradients (paper Listing 9's `zeroGrad`).
+    fn zero_grad(&self) {
+        for p in self.params() {
+            p.zero_grad();
+        }
+    }
+
+    /// The parameters being optimized.
+    fn params(&self) -> &[Variable];
+
+    /// Current learning rate.
+    fn lr(&self) -> f64;
+
+    /// Override the learning rate (used by schedulers).
+    fn set_lr(&mut self, lr: f64);
+}
+
+/// Global L2-norm gradient clipping; returns the pre-clip norm.
+pub fn clip_grad_norm(params: &[Variable], max_norm: f64) -> f64 {
+    let mut total = 0.0f64;
+    for p in params {
+        if let Some(g) = p.grad() {
+            total += g.norm_sq().item();
+        }
+    }
+    let norm = total.sqrt();
+    if norm > max_norm && norm > 0.0 {
+        let scale = max_norm / norm;
+        for p in params {
+            if let Some(g) = p.grad() {
+                p.set_grad(g.mul_scalar(scale));
+            }
+        }
+    }
+    norm
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::autograd::ops;
+    use crate::tensor::Tensor;
+
+    /// Every optimizer must descend a convex quadratic.
+    fn check_descends(mut make: impl FnMut(Vec<Variable>) -> Box<dyn Optimizer>) {
+        let x = Variable::param(Tensor::from_slice(&[5.0f32, -3.0], [2]));
+        let mut opt = make(vec![x.clone()]);
+        let mut last = f64::INFINITY;
+        for _ in 0..200 {
+            let loss = ops::sum(&ops::mul(&x, &x), &[], false);
+            let lv = loss.tensor().item();
+            loss.backward();
+            opt.step();
+            opt.zero_grad();
+            last = lv;
+        }
+        assert!(last < 1e-2, "did not descend: {last}");
+    }
+
+    #[test]
+    fn all_optimizers_descend_quadratic() {
+        check_descends(|p| Box::new(SGDOptimizer::new(p, 0.1)));
+        check_descends(|p| Box::new(SGDOptimizer::with_momentum(p, 0.05, 0.9, false)));
+        check_descends(|p| Box::new(SGDOptimizer::with_momentum(p, 0.05, 0.9, true)));
+        check_descends(|p| Box::new(AdamOptimizer::new(p, 0.3)));
+        check_descends(|p| Box::new(AdamWOptimizer::new(p, 0.3, 0.0)));
+        check_descends(|p| Box::new(AdagradOptimizer::new(p, 1.0)));
+        check_descends(|p| Box::new(RMSPropOptimizer::new(p, 0.05)));
+    }
+
+    #[test]
+    fn clip_grad_norm_scales() {
+        let p = Variable::param(Tensor::from_slice(&[3.0f32, 4.0], [2]));
+        p.set_grad(Tensor::from_slice(&[3.0f32, 4.0], [2]));
+        let norm = clip_grad_norm(&[p.clone()], 1.0);
+        assert!((norm - 5.0).abs() < 1e-6);
+        let g = p.grad().unwrap().to_vec();
+        assert!((g[0] - 0.6).abs() < 1e-6 && (g[1] - 0.8).abs() < 1e-6);
+        // under the cap: untouched
+        let norm2 = clip_grad_norm(&[p.clone()], 10.0);
+        assert!((norm2 - 1.0).abs() < 1e-5);
+        assert!((p.grad().unwrap().to_vec()[0] - 0.6).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,67 @@
+//! RMSProp.
+
+use crate::autograd::Variable;
+use crate::tensor::Tensor;
+
+use super::Optimizer;
+
+/// RMSProp with exponential moving average of squared gradients.
+pub struct RMSPropOptimizer {
+    params: Vec<Variable>,
+    lr: f64,
+    alpha: f64,
+    eps: f64,
+    sq: Vec<Option<Tensor>>,
+}
+
+impl RMSPropOptimizer {
+    /// Standard RMSProp (alpha 0.99).
+    pub fn new(params: Vec<Variable>, lr: f64) -> Self {
+        let n = params.len();
+        RMSPropOptimizer { params, lr, alpha: 0.99, eps: 1e-8, sq: vec![None; n] }
+    }
+}
+
+impl Optimizer for RMSPropOptimizer {
+    fn step(&mut self) {
+        for (i, p) in self.params.iter().enumerate() {
+            let Some(g) = p.grad() else { continue };
+            let sq = match &self.sq[i] {
+                Some(s) => s.mul_scalar(self.alpha).add(&g.mul(&g).mul_scalar(1.0 - self.alpha)),
+                None => g.mul(&g).mul_scalar(1.0 - self.alpha),
+            };
+            self.sq[i] = Some(sq.clone());
+            let update = g.div(&sq.sqrt().add_scalar(self.eps)).mul_scalar(self.lr);
+            p.set_tensor(p.tensor().sub(&update));
+        }
+    }
+
+    fn params(&self) -> &[Variable] {
+        &self.params
+    }
+    fn lr(&self) -> f64 {
+        self.lr
+    }
+    fn set_lr(&mut self, lr: f64) {
+        self.lr = lr;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn normalizes_gradient_scale() {
+        // two params with wildly different gradient scales move comparably
+        let a = Variable::param(Tensor::from_slice(&[0.0f32], [1]));
+        let b = Variable::param(Tensor::from_slice(&[0.0f32], [1]));
+        let mut opt = RMSPropOptimizer::new(vec![a.clone(), b.clone()], 0.01);
+        a.set_grad(Tensor::from_slice(&[1000.0f32], [1]));
+        b.set_grad(Tensor::from_slice(&[0.001f32], [1]));
+        opt.step();
+        let ra = a.tensor().item().abs();
+        let rb = b.tensor().item().abs();
+        assert!(ra / rb < 2.0, "updates differ wildly: {ra} vs {rb}");
+    }
+}

@@ -1,0 +1,94 @@
+//! Learning-rate schedules (applied by the trainer each step).
+
+/// A schedule maps a step index to a learning rate.
+pub trait LrSchedule: Send {
+    /// LR at `step` (0-based).
+    fn lr_at(&self, step: u64) -> f64;
+}
+
+/// Constant-then-decay step schedule.
+pub struct StepSchedule {
+    /// Base LR.
+    pub base: f64,
+    /// Multiply by `gamma` every `every` steps.
+    pub every: u64,
+    /// Decay factor.
+    pub gamma: f64,
+}
+
+impl LrSchedule for StepSchedule {
+    fn lr_at(&self, step: u64) -> f64 {
+        self.base * self.gamma.powi((step / self.every) as i32)
+    }
+}
+
+/// Cosine decay from `base` to `floor` over `total` steps.
+pub struct CosineSchedule {
+    /// Peak LR.
+    pub base: f64,
+    /// Final LR.
+    pub floor: f64,
+    /// Horizon.
+    pub total: u64,
+}
+
+impl LrSchedule for CosineSchedule {
+    fn lr_at(&self, step: u64) -> f64 {
+        let t = (step.min(self.total)) as f64 / self.total.max(1) as f64;
+        self.floor + 0.5 * (self.base - self.floor) * (1.0 + (std::f64::consts::PI * t).cos())
+    }
+}
+
+/// Linear warmup to `base`, then linear decay to zero at `total`.
+pub struct WarmupLinearSchedule {
+    /// Peak LR.
+    pub base: f64,
+    /// Warmup steps.
+    pub warmup: u64,
+    /// Horizon.
+    pub total: u64,
+}
+
+impl LrSchedule for WarmupLinearSchedule {
+    fn lr_at(&self, step: u64) -> f64 {
+        if step < self.warmup {
+            self.base * (step + 1) as f64 / self.warmup as f64
+        } else {
+            let rest = (self.total - self.warmup).max(1) as f64;
+            let done = (step - self.warmup) as f64;
+            self.base * (1.0 - (done / rest).min(1.0))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn step_schedule_decays() {
+        let s = StepSchedule { base: 1.0, every: 10, gamma: 0.1 };
+        assert_eq!(s.lr_at(0), 1.0);
+        assert_eq!(s.lr_at(9), 1.0);
+        assert!((s.lr_at(10) - 0.1).abs() < 1e-12);
+        assert!((s.lr_at(25) - 0.01).abs() < 1e-12);
+    }
+
+    #[test]
+    fn cosine_endpoints() {
+        let s = CosineSchedule { base: 1.0, floor: 0.1, total: 100 };
+        assert!((s.lr_at(0) - 1.0).abs() < 1e-9);
+        assert!((s.lr_at(100) - 0.1).abs() < 1e-9);
+        assert!(s.lr_at(50) < 1.0 && s.lr_at(50) > 0.1);
+    }
+
+    #[test]
+    fn warmup_ramps_then_decays() {
+        let s = WarmupLinearSchedule { base: 2.0, warmup: 10, total: 110 };
+        assert!(s.lr_at(0) < s.lr_at(5));
+        assert!((s.lr_at(9) - 2.0).abs() < 1e-9);
+        assert!(s.lr_at(60) < 2.0);
+        assert!(s.lr_at(109) > 0.0);
+        assert_eq!(s.lr_at(200), 0.0);
+    }
+}

@@ -1,0 +1,119 @@
+//! Stochastic gradient descent with optional momentum / Nesterov /
+//! weight decay (paper Listing 9's `SGDOptimizer`).
+
+use crate::autograd::Variable;
+use crate::tensor::Tensor;
+
+use super::Optimizer;
+
+/// See module docs.
+pub struct SGDOptimizer {
+    params: Vec<Variable>,
+    lr: f64,
+    momentum: f64,
+    nesterov: bool,
+    weight_decay: f64,
+    velocity: Vec<Option<Tensor>>,
+}
+
+impl SGDOptimizer {
+    /// Plain SGD.
+    pub fn new(params: Vec<Variable>, lr: f64) -> Self {
+        Self::full(params, lr, 0.0, false, 0.0)
+    }
+
+    /// SGD with momentum (optionally Nesterov).
+    pub fn with_momentum(params: Vec<Variable>, lr: f64, momentum: f64, nesterov: bool) -> Self {
+        Self::full(params, lr, momentum, nesterov, 0.0)
+    }
+
+    /// All knobs.
+    pub fn full(
+        params: Vec<Variable>,
+        lr: f64,
+        momentum: f64,
+        nesterov: bool,
+        weight_decay: f64,
+    ) -> Self {
+        let n = params.len();
+        SGDOptimizer { params, lr, momentum, nesterov, weight_decay, velocity: vec![None; n] }
+    }
+}
+
+impl Optimizer for SGDOptimizer {
+    fn step(&mut self) {
+        for (i, p) in self.params.iter().enumerate() {
+            let Some(mut g) = p.grad() else { continue };
+            if self.weight_decay != 0.0 {
+                g = g.add(&p.tensor().mul_scalar(self.weight_decay));
+            }
+            let update = if self.momentum != 0.0 {
+                let v = match &self.velocity[i] {
+                    Some(v) => v.mul_scalar(self.momentum).add(&g),
+                    None => g.clone(),
+                };
+                self.velocity[i] = Some(v.clone());
+                if self.nesterov {
+                    g.add(&v.mul_scalar(self.momentum))
+                } else {
+                    v
+                }
+            } else {
+                g
+            };
+            p.set_tensor(p.tensor().sub(&update.mul_scalar(self.lr)));
+        }
+    }
+
+    fn params(&self) -> &[Variable] {
+        &self.params
+    }
+    fn lr(&self) -> f64 {
+        self.lr
+    }
+    fn set_lr(&mut self, lr: f64) {
+        self.lr = lr;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn plain_sgd_is_exact() {
+        let p = Variable::param(Tensor::from_slice(&[1.0f32], [1]));
+        p.set_grad(Tensor::from_slice(&[0.5f32], [1]));
+        let mut opt = SGDOptimizer::new(vec![p.clone()], 0.2);
+        opt.step();
+        assert!((p.tensor().item() - 0.9).abs() < 1e-6);
+    }
+
+    #[test]
+    fn momentum_accumulates() {
+        let p = Variable::param(Tensor::from_slice(&[0.0f32], [1]));
+        let mut opt = SGDOptimizer::with_momentum(vec![p.clone()], 1.0, 0.5, false);
+        p.set_grad(Tensor::from_slice(&[1.0f32], [1]));
+        opt.step(); // v=1, p=-1
+        p.set_grad(Tensor::from_slice(&[1.0f32], [1]));
+        opt.step(); // v=1.5, p=-2.5
+        assert!((p.tensor().item() + 2.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn weight_decay_pulls_to_zero() {
+        let p = Variable::param(Tensor::from_slice(&[10.0f32], [1]));
+        let mut opt = SGDOptimizer::full(vec![p.clone()], 0.1, 0.0, false, 1.0);
+        p.set_grad(Tensor::zeros([1]));
+        opt.step();
+        assert!((p.tensor().item() - 9.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn missing_grad_skipped() {
+        let p = Variable::param(Tensor::from_slice(&[1.0f32], [1]));
+        let mut opt = SGDOptimizer::new(vec![p.clone()], 0.5);
+        opt.step(); // no grad: no change
+        assert_eq!(p.tensor().item(), 1.0);
+    }
+}

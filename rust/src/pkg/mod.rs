@@ -1,0 +1,7 @@
+//! Domain-specific packages (paper §4.3): building blocks for common ML
+//! tasks layered over the core, exactly as the original library structures
+//! speech / vision / text atop its foundation APIs.
+
+pub mod speech;
+pub mod text;
+pub mod vision;

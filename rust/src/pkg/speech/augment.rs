@@ -1,0 +1,58 @@
+//! Waveform augmentation (paper: "additive noise and reverberation").
+
+use crate::util::rng::Rng;
+
+/// Mix gaussian noise into `wave` at the given signal-to-noise ratio (dB).
+pub fn additive_noise(wave: &mut [f32], snr_db: f32, rng: &mut Rng) {
+    if wave.is_empty() {
+        return;
+    }
+    let sig_pow: f32 = wave.iter().map(|x| x * x).sum::<f32>() / wave.len() as f32;
+    let noise_pow = sig_pow / 10f32.powf(snr_db / 10.0);
+    let sigma = noise_pow.sqrt();
+    for x in wave.iter_mut() {
+        *x += sigma * rng.normal() as f32;
+    }
+}
+
+/// Simple synthetic reverb: convolve with an exponentially-decaying
+/// impulse response of `taps` echoes.
+pub fn reverb(wave: &[f32], taps: usize, decay: f32, spacing: usize) -> Vec<f32> {
+    let mut out = wave.to_vec();
+    for t in 1..=taps {
+        let gain = decay.powi(t as i32);
+        let off = t * spacing;
+        for i in off..out.len() {
+            out[i] += gain * wave[i - off];
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn snr_controls_noise_power() {
+        let mut rng = Rng::new(5);
+        let clean: Vec<f32> = (0..8000).map(|i| (i as f32 * 0.05).sin()).collect();
+        let mut noisy = clean.clone();
+        additive_noise(&mut noisy, 10.0, &mut rng);
+        let noise_pow: f32 =
+            clean.iter().zip(&noisy).map(|(c, n)| (n - c) * (n - c)).sum::<f32>() / clean.len() as f32;
+        let sig_pow: f32 = clean.iter().map(|x| x * x).sum::<f32>() / clean.len() as f32;
+        let snr = 10.0 * (sig_pow / noise_pow).log10();
+        assert!((snr - 10.0).abs() < 1.0, "achieved snr {snr}");
+    }
+
+    #[test]
+    fn reverb_adds_delayed_energy() {
+        let mut impulse = vec![0.0f32; 100];
+        impulse[0] = 1.0;
+        let out = reverb(&impulse, 2, 0.5, 10);
+        assert_eq!(out[0], 1.0);
+        assert!((out[10] - 0.5).abs() < 1e-6);
+        assert!((out[20] - 0.25).abs() < 1e-6);
+    }
+}

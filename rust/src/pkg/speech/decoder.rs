@@ -1,0 +1,202 @@
+//! CTC prefix beam-search decoder with shallow LM fusion (paper §4.3: "a
+//! fast beam-search decoder (which can interface any language model)").
+
+use std::collections::HashMap;
+
+use crate::tensor::Tensor;
+
+use super::lm::NGramLm;
+
+/// Decoder hyper-parameters.
+#[derive(Debug, Clone, Copy)]
+pub struct DecoderOpts {
+    /// Beam width (prefixes kept per frame).
+    pub beam: usize,
+    /// LM weight for shallow fusion.
+    pub lm_weight: f64,
+    /// Per-token word-insertion bonus.
+    pub word_bonus: f64,
+}
+
+impl Default for DecoderOpts {
+    fn default() -> Self {
+        DecoderOpts { beam: 16, lm_weight: 0.0, word_bonus: 0.0 }
+    }
+}
+
+/// See module docs.
+pub struct BeamSearchDecoder {
+    opts: DecoderOpts,
+    lm: Option<NGramLm>,
+}
+
+fn logaddexp(a: f64, b: f64) -> f64 {
+    if a == f64::NEG_INFINITY {
+        return b;
+    }
+    if b == f64::NEG_INFINITY {
+        return a;
+    }
+    let m = a.max(b);
+    m + ((a - m).exp() + (b - m).exp()).ln()
+}
+
+impl BeamSearchDecoder {
+    /// Lexicon-free decoder; pass an LM for shallow fusion.
+    pub fn new(opts: DecoderOpts, lm: Option<NGramLm>) -> Self {
+        BeamSearchDecoder { opts, lm }
+    }
+
+    /// Decode `[T, C]` frame log-probabilities (blank = class 0) into the
+    /// best label sequence.
+    pub fn decode(&self, log_probs: &Tensor) -> Vec<usize> {
+        self.decode_n(log_probs, 1).pop().map(|(seq, _)| seq).unwrap_or_default()
+    }
+
+    /// Decode, returning the top-`n` hypotheses with scores (best last
+    /// popped first — sorted best-first).
+    pub fn decode_n(&self, log_probs: &Tensor, n: usize) -> Vec<(Vec<usize>, f64)> {
+        let dims = log_probs.dims().to_vec();
+        let (t_len, classes) = (dims[0], dims[1]);
+        let lp = log_probs.to_vec_f64();
+        let ninf = f64::NEG_INFINITY;
+
+        // prefix -> (log P(ending in blank), log P(ending in non-blank))
+        let mut beams: HashMap<Vec<usize>, (f64, f64)> = HashMap::new();
+        beams.insert(Vec::new(), (0.0, ninf));
+
+        for t in 0..t_len {
+            let frame = &lp[t * classes..(t + 1) * classes];
+            let mut next: HashMap<Vec<usize>, (f64, f64)> = HashMap::new();
+            for (prefix, &(pb, pnb)) in &beams {
+                let total = logaddexp(pb, pnb);
+                // 1) blank extends both states into the blank state
+                {
+                    let e = next.entry(prefix.clone()).or_insert((ninf, ninf));
+                    e.0 = logaddexp(e.0, total + frame[0]);
+                }
+                // 2) repeat of last non-blank label (stays same prefix)
+                if let Some(&last) = prefix.last() {
+                    let e = next.entry(prefix.clone()).or_insert((ninf, ninf));
+                    e.1 = logaddexp(e.1, pnb + frame[last]);
+                }
+                // 3) extend with a new label
+                for c in 1..classes {
+                    let mut ext = prefix.clone();
+                    ext.push(c);
+                    let base = if Some(&c) == prefix.last() {
+                        // after a repeat, a new same-label token needs a
+                        // blank in between: only the blank state extends
+                        pb
+                    } else {
+                        total
+                    };
+                    let mut score = base + frame[c];
+                    if let Some(lm) = &self.lm {
+                        score += self.opts.lm_weight * lm.score_next(prefix.last().copied(), c)
+                            + self.opts.word_bonus;
+                    }
+                    let e = next.entry(ext).or_insert((ninf, ninf));
+                    e.1 = logaddexp(e.1, score);
+                }
+            }
+            // prune to beam width
+            let mut entries: Vec<(Vec<usize>, (f64, f64))> = next.into_iter().collect();
+            entries
+                .sort_by(|a, b| {
+                    let sa = logaddexp(a.1 .0, a.1 .1);
+                    let sb = logaddexp(b.1 .0, b.1 .1);
+                    sb.partial_cmp(&sa).unwrap()
+                });
+            entries.truncate(self.opts.beam);
+            beams = entries.into_iter().collect();
+        }
+
+        let mut out: Vec<(Vec<usize>, f64)> = beams
+            .into_iter()
+            .map(|(seq, (pb, pnb))| (seq, logaddexp(pb, pnb)))
+            .collect();
+        out.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+        out.truncate(n);
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pkg::speech::ctc::greedy_decode;
+
+    fn peaked(t_classes: &[(usize, usize)], classes: usize) -> Tensor {
+        // high prob on the given class per frame
+        let t = t_classes.len();
+        let mut lp = vec![(0.05f32 / (classes - 1) as f32).ln(); t * classes];
+        for (frame, &(ti, k)) in t_classes.iter().enumerate() {
+            assert_eq!(frame, ti);
+            lp[ti * classes + k] = 0.95f32.ln();
+        }
+        Tensor::from_slice(&lp, [t, classes]).log_softmax(-1)
+    }
+
+    #[test]
+    fn beam_matches_greedy_on_peaked_input() {
+        let lp = peaked(&[(0, 1), (1, 0), (2, 2), (3, 2), (4, 0)], 4);
+        let dec = BeamSearchDecoder::new(DecoderOpts { beam: 8, ..Default::default() }, None);
+        assert_eq!(dec.decode(&lp), greedy_decode(&lp));
+        assert_eq!(dec.decode(&lp), vec![1, 2]);
+    }
+
+    #[test]
+    fn beam_sums_over_alignments_where_greedy_cannot() {
+        // classic case: two frames, blank is the single best path but the
+        // label accumulates more total probability across alignments
+        let classes = 3;
+        // frame probs: blank 0.4, a 0.35, b 0.25 (twice)
+        let p = [0.4f32, 0.35, 0.25];
+        let mut lp = Vec::new();
+        for _ in 0..2 {
+            lp.extend(p.iter().map(|x| x.ln()));
+        }
+        let t = Tensor::from_slice(&lp, [2, classes]);
+        // greedy: blank,blank -> []
+        assert_eq!(greedy_decode(&t), Vec::<usize>::new());
+        // beam: P([]) = .4*.4 = .16 ; P([a]) = .35*.35 + 2*.4*.35 = .4025
+        let dec = BeamSearchDecoder::new(DecoderOpts { beam: 8, ..Default::default() }, None);
+        assert_eq!(dec.decode(&t), vec![1]);
+    }
+
+    #[test]
+    fn lm_fusion_changes_ranking() {
+        // acoustically ambiguous between token 1 and 2 at the second slot;
+        // LM strongly prefers (1 -> 2) over (1 -> 1)
+        let classes = 3;
+        let lp = vec![
+            // frame 0: strongly token 1
+            0.02f32.ln(), 0.96f32.ln(), 0.02f32.ln(),
+            // frame 1: blank
+            0.96f32.ln(), 0.02f32.ln(), 0.02f32.ln(),
+            // frame 2: moderate edge to token 1 over token 2
+            0.02f32.ln(), 0.60f32.ln(), 0.38f32.ln(),
+        ];
+        let t = Tensor::from_slice(&lp, [3, classes]);
+        let no_lm = BeamSearchDecoder::new(DecoderOpts { beam: 8, ..Default::default() }, None);
+        assert_eq!(no_lm.decode(&t), vec![1, 1]);
+        let lm = NGramLm::train(3, &[vec![1, 2], vec![1, 2], vec![1, 2], vec![1, 1]], 0.05);
+        let with_lm = BeamSearchDecoder::new(
+            DecoderOpts { beam: 8, lm_weight: 1.0, ..Default::default() },
+            Some(lm),
+        );
+        assert_eq!(with_lm.decode(&t), vec![1, 2], "LM should flip the ambiguous token");
+    }
+
+    #[test]
+    fn top_n_is_sorted() {
+        let lp = peaked(&[(0, 1), (1, 2)], 4);
+        let dec = BeamSearchDecoder::new(DecoderOpts { beam: 8, ..Default::default() }, None);
+        let hyps = dec.decode_n(&lp, 3);
+        assert!(hyps.len() >= 2);
+        for w in hyps.windows(2) {
+            assert!(w[0].1 >= w[1].1);
+        }
+    }
+}

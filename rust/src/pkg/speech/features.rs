@@ -1,0 +1,149 @@
+//! Classical speech featurization: framing, Hann window, DFT power
+//! spectrum, mel filterbank, log compression (paper: "spectogram, log-mel
+//! filterbanks ... can run on-the-fly with minimal overhead").
+//!
+//! The DFT is implemented directly (O(N·K) per frame with precomputed
+//! twiddles) — frame sizes are small (≤512) and this keeps the package
+//! dependency-free.
+
+use crate::tensor::{Shape, Tensor};
+
+/// Featurization hyper-parameters.
+#[derive(Debug, Clone, Copy)]
+pub struct FeatureParams {
+    /// Sample rate in Hz.
+    pub sample_rate: usize,
+    /// Frame length in samples.
+    pub frame_len: usize,
+    /// Hop between frames in samples.
+    pub hop: usize,
+    /// Number of mel bins.
+    pub n_mels: usize,
+}
+
+impl Default for FeatureParams {
+    fn default() -> Self {
+        FeatureParams { sample_rate: 16_000, frame_len: 400, hop: 160, n_mels: 80 }
+    }
+}
+
+fn hann(n: usize) -> Vec<f32> {
+    (0..n)
+        .map(|i| {
+            let x = std::f32::consts::PI * i as f32 / n as f32;
+            (x.sin() * x.sin()) as f32
+        })
+        .collect()
+}
+
+/// Power spectrum of one frame (first `n/2+1` bins).
+fn power_spectrum(frame: &[f32], cos_t: &[f32], sin_t: &[f32], bins: usize) -> Vec<f32> {
+    let n = frame.len();
+    let mut out = vec![0.0f32; bins];
+    for (k, o) in out.iter_mut().enumerate() {
+        let mut re = 0.0f32;
+        let mut im = 0.0f32;
+        for (i, &x) in frame.iter().enumerate() {
+            let idx = (k * i) % n;
+            re += x * cos_t[idx];
+            im -= x * sin_t[idx];
+        }
+        *o = re * re + im * im;
+    }
+    out
+}
+
+fn hz_to_mel(f: f32) -> f32 {
+    2595.0 * (1.0 + f / 700.0).log10()
+}
+
+fn mel_to_hz(m: f32) -> f32 {
+    700.0 * (10f32.powf(m / 2595.0) - 1.0)
+}
+
+/// Triangular mel filterbank matrix `[n_mels, bins]`.
+pub fn mel_filterbank(p: &FeatureParams, bins: usize) -> Vec<Vec<f32>> {
+    let f_max = p.sample_rate as f32 / 2.0;
+    let m_max = hz_to_mel(f_max);
+    let centers: Vec<f32> = (0..p.n_mels + 2)
+        .map(|i| mel_to_hz(m_max * i as f32 / (p.n_mels + 1) as f32))
+        .collect();
+    let hz_per_bin = f_max / (bins - 1) as f32;
+    let mut fb = vec![vec![0.0f32; bins]; p.n_mels];
+    for m in 0..p.n_mels {
+        let (lo, mid, hi) = (centers[m], centers[m + 1], centers[m + 2]);
+        for (b, w) in fb[m].iter_mut().enumerate() {
+            let f = b as f32 * hz_per_bin;
+            if f > lo && f < mid {
+                *w = (f - lo) / (mid - lo);
+            } else if f >= mid && f < hi {
+                *w = (hi - f) / (hi - mid);
+            }
+        }
+    }
+    fb
+}
+
+/// Compute `[frames, n_mels]` log-mel features from a mono waveform.
+pub fn log_mel_spectrogram(wave: &[f32], p: &FeatureParams) -> Tensor {
+    let n = p.frame_len;
+    let bins = n / 2 + 1;
+    let window = hann(n);
+    let cos_t: Vec<f32> = (0..n).map(|i| (2.0 * std::f32::consts::PI * i as f32 / n as f32).cos()).collect();
+    let sin_t: Vec<f32> = (0..n).map(|i| (2.0 * std::f32::consts::PI * i as f32 / n as f32).sin()).collect();
+    let fb = mel_filterbank(p, bins);
+    let frames = if wave.len() < n { 0 } else { (wave.len() - n) / p.hop + 1 };
+    let mut out = Vec::with_capacity(frames * p.n_mels);
+    let mut buf = vec![0.0f32; n];
+    for t in 0..frames {
+        let start = t * p.hop;
+        for i in 0..n {
+            buf[i] = wave[start + i] * window[i];
+        }
+        let spec = power_spectrum(&buf, &cos_t, &sin_t, bins);
+        for filt in &fb {
+            let e: f32 = filt.iter().zip(&spec).map(|(w, s)| w * s).sum();
+            out.push((e + 1e-10).ln());
+        }
+    }
+    Tensor::from_slice(&out, Shape::new(vec![frames, p.n_mels]))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sine(freq: f32, secs: f32, rate: usize) -> Vec<f32> {
+        (0..(secs * rate as f32) as usize)
+            .map(|i| (2.0 * std::f32::consts::PI * freq * i as f32 / rate as f32).sin())
+            .collect()
+    }
+
+    #[test]
+    fn frame_count_matches_hop() {
+        let p = FeatureParams { frame_len: 256, hop: 128, n_mels: 20, sample_rate: 8000 };
+        let feats = log_mel_spectrogram(&vec![0.0; 256 + 5 * 128], &p);
+        assert_eq!(feats.dims(), &[6, 20]);
+    }
+
+    #[test]
+    fn pure_tone_peaks_at_matching_mel() {
+        let p = FeatureParams { frame_len: 256, hop: 128, n_mels: 40, sample_rate: 8000 };
+        let low = log_mel_spectrogram(&sine(200.0, 0.25, 8000), &p);
+        let high = log_mel_spectrogram(&sine(3000.0, 0.25, 8000), &p);
+        // energy argmax of the first frame moves up with frequency
+        let lo_peak = low.narrow(0, 0, 1).argmax(1, false).to_vec_i64()[0];
+        let hi_peak = high.narrow(0, 0, 1).argmax(1, false).to_vec_i64()[0];
+        assert!(hi_peak > lo_peak, "mel peaks: low {lo_peak} high {hi_peak}");
+    }
+
+    #[test]
+    fn filterbank_rows_cover_spectrum() {
+        let p = FeatureParams::default();
+        let fb = mel_filterbank(&p, 201);
+        assert_eq!(fb.len(), 80);
+        for (i, row) in fb.iter().enumerate() {
+            assert!(row.iter().any(|&w| w > 0.0), "empty mel filter {i}");
+        }
+    }
+}

@@ -1,0 +1,88 @@
+//! Token n-gram language model (the decoder "can interface any language
+//! model"; this is the reference implementation).
+
+use std::collections::HashMap;
+
+/// Bigram LM with add-k smoothing over integer token ids.
+pub struct NGramLm {
+    vocab: usize,
+    k: f64,
+    unigram: Vec<u64>,
+    bigram: HashMap<(usize, usize), u64>,
+    total: u64,
+}
+
+impl NGramLm {
+    /// Train from token sequences.
+    pub fn train(vocab: usize, sequences: &[Vec<usize>], k: f64) -> Self {
+        let mut unigram = vec![0u64; vocab];
+        let mut bigram = HashMap::new();
+        let mut total = 0u64;
+        for seq in sequences {
+            for (i, &t) in seq.iter().enumerate() {
+                assert!(t < vocab, "token {t} out of vocab {vocab}");
+                unigram[t] += 1;
+                total += 1;
+                if i > 0 {
+                    *bigram.entry((seq[i - 1], t)).or_insert(0) += 1;
+                }
+            }
+        }
+        NGramLm { vocab, k, unigram, bigram, total }
+    }
+
+    /// log P(token | prev); `prev = None` uses the unigram distribution.
+    pub fn score_next(&self, prev: Option<usize>, token: usize) -> f64 {
+        match prev {
+            None => {
+                ((self.unigram[token] as f64 + self.k)
+                    / (self.total as f64 + self.k * self.vocab as f64))
+                    .ln()
+            }
+            Some(p) => {
+                let joint = *self.bigram.get(&(p, token)).unwrap_or(&0) as f64;
+                let ctx = self.unigram[p] as f64;
+                ((joint + self.k) / (ctx + self.k * self.vocab as f64)).ln()
+            }
+        }
+    }
+
+    /// Total log probability of a sequence.
+    pub fn score(&self, seq: &[usize]) -> f64 {
+        let mut s = 0.0;
+        let mut prev = None;
+        for &t in seq {
+            s += self.score_next(prev, t);
+            prev = Some(t);
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn frequent_bigrams_score_higher() {
+        let data = vec![vec![1, 2, 3], vec![1, 2, 4], vec![1, 2, 3]];
+        let lm = NGramLm::train(5, &data, 0.1);
+        assert!(lm.score_next(Some(1), 2) > lm.score_next(Some(1), 3));
+        assert!(lm.score_next(Some(2), 3) > lm.score_next(Some(2), 4));
+    }
+
+    #[test]
+    fn sequence_score_is_sum() {
+        let lm = NGramLm::train(4, &[vec![0, 1, 2]], 0.5);
+        let total = lm.score(&[0, 1]);
+        let manual = lm.score_next(None, 0) + lm.score_next(Some(0), 1);
+        assert!((total - manual).abs() < 1e-12);
+    }
+
+    #[test]
+    fn smoothing_keeps_unseen_finite() {
+        let lm = NGramLm::train(10, &[vec![1, 1]], 0.1);
+        assert!(lm.score_next(Some(7), 8).is_finite());
+        assert!(lm.score(&[9, 9, 9]).is_finite());
+    }
+}

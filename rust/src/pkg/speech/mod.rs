@@ -1,0 +1,15 @@
+//! Speech package (paper §4.3 "Speech"): on-the-fly featurization,
+//! data augmentation, CTC criterion, and a beam-search decoder with
+//! n-gram language-model rescoring.
+
+pub mod augment;
+pub mod ctc;
+pub mod decoder;
+pub mod features;
+pub mod lm;
+
+pub use augment::additive_noise;
+pub use ctc::{ctc_loss, greedy_decode};
+pub use decoder::{BeamSearchDecoder, DecoderOpts};
+pub use features::{log_mel_spectrogram, FeatureParams};
+pub use lm::NGramLm;

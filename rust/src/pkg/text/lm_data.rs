@@ -1,0 +1,116 @@
+//! Language-modeling dataset pipelines: autoregressive windows and
+//! BERT-style masked-LM batches (paper §4.3: "both autoregressive and
+//! masked ... language modeling tasks are supported").
+
+use std::sync::Arc;
+
+use crate::data::{Dataset, Sample};
+use crate::tensor::{DType, Tensor};
+use crate::util::rng::Rng;
+
+use super::tokenizer::MASK;
+
+/// Sliding windows of `seq_len + 1` tokens over a flat id stream; each
+/// sample is one `[1, seq_len+1]` window (input = `[..-1]`, target =
+/// `[1..]` at loss time).
+pub struct AutoregressiveLmDataset {
+    ids: Arc<Vec<i64>>,
+    seq_len: usize,
+    stride: usize,
+}
+
+impl AutoregressiveLmDataset {
+    /// Windows with the given stride.
+    pub fn new(ids: Vec<usize>, seq_len: usize, stride: usize) -> Self {
+        AutoregressiveLmDataset {
+            ids: Arc::new(ids.into_iter().map(|i| i as i64).collect()),
+            seq_len,
+            stride: stride.max(1),
+        }
+    }
+}
+
+impl Dataset for AutoregressiveLmDataset {
+    fn len(&self) -> usize {
+        let window = self.seq_len + 1;
+        if self.ids.len() < window {
+            0
+        } else {
+            (self.ids.len() - window) / self.stride + 1
+        }
+    }
+
+    fn get(&self, i: usize) -> Sample {
+        let start = i * self.stride;
+        let window = &self.ids[start..start + self.seq_len + 1];
+        vec![Tensor::from_slice(window, [1, self.seq_len + 1])]
+    }
+}
+
+/// One masked-LM batch: `input` with ~`mask_prob` positions replaced by
+/// `<mask>`, plus `labels` (original ids at masked positions, -100
+/// elsewhere, HF convention).
+pub struct MaskedLmBatch {
+    /// Corrupted inputs `[N, L]` (i64).
+    pub input: Tensor,
+    /// Labels `[N, L]` (i64; -100 = unmasked).
+    pub labels: Tensor,
+}
+
+impl MaskedLmBatch {
+    /// Corrupt a batch of token ids.
+    pub fn make(ids: &Tensor, mask_prob: f64, rng: &mut Rng) -> MaskedLmBatch {
+        let dims = ids.dims().to_vec();
+        let flat = ids.to_vec_i64();
+        let mut input = flat.clone();
+        let mut labels = vec![-100i64; flat.len()];
+        for i in 0..flat.len() {
+            if rng.uniform() < mask_prob {
+                labels[i] = flat[i];
+                input[i] = MASK as i64;
+            }
+        }
+        MaskedLmBatch {
+            input: Tensor::from_slice(&input, dims.clone()).astype(DType::I64),
+            labels: Tensor::from_slice(&labels, dims).astype(DType::I64),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn windows_cover_stream() {
+        let ds = AutoregressiveLmDataset::new((0..20).collect(), 4, 5);
+        assert_eq!(ds.len(), 4); // windows at 0,5,10,15 (len 5 each)
+        let s = ds.get(1);
+        assert_eq!(s[0].to_vec_i64(), vec![5, 6, 7, 8, 9]);
+    }
+
+    #[test]
+    fn too_short_stream_is_empty() {
+        let ds = AutoregressiveLmDataset::new(vec![1, 2], 4, 1);
+        assert_eq!(ds.len(), 0);
+    }
+
+    #[test]
+    fn masking_rate_and_labels() {
+        let mut rng = Rng::new(3);
+        let ids = Tensor::from_slice(&vec![7i64; 2000], [4, 500]);
+        let b = MaskedLmBatch::make(&ids, 0.15, &mut rng);
+        let inp = b.input.to_vec_i64();
+        let lab = b.labels.to_vec_i64();
+        let masked = inp.iter().filter(|&&t| t == MASK as i64).count();
+        let rate = masked as f64 / inp.len() as f64;
+        assert!((rate - 0.15).abs() < 0.03, "mask rate {rate}");
+        for (i, l) in inp.iter().zip(&lab) {
+            if *i == MASK as i64 {
+                assert_eq!(*l, 7);
+            } else {
+                assert_eq!(*l, -100);
+            }
+        }
+    }
+}

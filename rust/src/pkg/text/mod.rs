@@ -1,0 +1,8 @@
+//! Text package (paper §4.3 "Text"): tokenization and language-modeling
+//! dataset pipelines (autoregressive and masked).
+
+pub mod lm_data;
+pub mod tokenizer;
+
+pub use lm_data::{AutoregressiveLmDataset, MaskedLmBatch};
+pub use tokenizer::Tokenizer;

@@ -1,0 +1,87 @@
+//! Word-level tokenizer with reserved specials and frequency-ranked vocab.
+
+use std::collections::HashMap;
+
+/// Reserved special tokens.
+pub const PAD: usize = 0;
+/// Unknown-token id.
+pub const UNK: usize = 1;
+/// Mask token (masked LM).
+pub const MASK: usize = 2;
+/// Number of reserved ids.
+pub const NUM_SPECIALS: usize = 3;
+
+/// Frequency-ranked word tokenizer.
+pub struct Tokenizer {
+    vocab: HashMap<String, usize>,
+    inverse: Vec<String>,
+}
+
+impl Tokenizer {
+    /// Build from a corpus keeping the `max_vocab` most frequent words.
+    pub fn train(corpus: &str, max_vocab: usize) -> Self {
+        let mut counts: HashMap<&str, u64> = HashMap::new();
+        for w in corpus.split_whitespace() {
+            *counts.entry(w).or_insert(0) += 1;
+        }
+        let mut ranked: Vec<(&str, u64)> = counts.into_iter().collect();
+        ranked.sort_by(|a, b| b.1.cmp(&a.1).then(a.0.cmp(b.0)));
+        ranked.truncate(max_vocab.saturating_sub(NUM_SPECIALS));
+        let mut vocab = HashMap::new();
+        let mut inverse = vec!["<pad>".to_string(), "<unk>".to_string(), "<mask>".to_string()];
+        for (i, (w, _)) in ranked.iter().enumerate() {
+            vocab.insert((*w).to_string(), NUM_SPECIALS + i);
+            inverse.push((*w).to_string());
+        }
+        Tokenizer { vocab, inverse }
+    }
+
+    /// Vocabulary size (specials included).
+    pub fn vocab_size(&self) -> usize {
+        self.inverse.len()
+    }
+
+    /// Encode text to ids (unknowns map to `UNK`).
+    pub fn encode(&self, text: &str) -> Vec<usize> {
+        text.split_whitespace()
+            .map(|w| self.vocab.get(w).copied().unwrap_or(UNK))
+            .collect()
+    }
+
+    /// Decode ids back to text.
+    pub fn decode(&self, ids: &[usize]) -> String {
+        ids.iter()
+            .map(|&i| self.inverse.get(i).map(|s| s.as_str()).unwrap_or("<oob>"))
+            .collect::<Vec<_>>()
+            .join(" ")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_known_words() {
+        let t = Tokenizer::train("the cat sat on the mat the cat", 50);
+        let ids = t.encode("the cat sat");
+        assert_eq!(t.decode(&ids), "the cat sat");
+        assert!(ids.iter().all(|&i| i >= NUM_SPECIALS));
+    }
+
+    #[test]
+    fn unknowns_map_to_unk() {
+        let t = Tokenizer::train("a b c", 10);
+        assert_eq!(t.encode("zzz")[0], UNK);
+        assert_eq!(t.decode(&[UNK]), "<unk>");
+    }
+
+    #[test]
+    fn vocab_cap_keeps_most_frequent() {
+        let t = Tokenizer::train("x x x y y z", NUM_SPECIALS + 2);
+        assert_eq!(t.vocab_size(), NUM_SPECIALS + 2);
+        assert_ne!(t.encode("x")[0], UNK);
+        assert_ne!(t.encode("y")[0], UNK);
+        assert_eq!(t.encode("z")[0], UNK); // dropped by cap
+    }
+}

@@ -1,0 +1,102 @@
+//! Synthetic image-classification datasets: class-conditional Gaussian
+//! blobs with structured spatial patterns, learnable by real models but
+//! requiring genuine training (the testbed substitution for ImageNet —
+//! DESIGN.md §Hardware-Adaptation).
+
+use std::sync::Arc;
+
+use crate::data::{Dataset, TensorDataset};
+use crate::tensor::{DType, Shape, Tensor};
+use crate::util::rng::Rng;
+
+/// Generate `n` labelled images `[n, c, size, size]` over `classes`
+/// classes. Each class gets a random spatial frequency pattern plus noise.
+pub fn synthetic_image_classification(
+    n: usize,
+    c: usize,
+    size: usize,
+    classes: usize,
+    seed: u64,
+) -> Arc<dyn Dataset> {
+    let mut rng = Rng::new(seed);
+    // class prototypes: distinct sinusoidal patterns
+    let protos: Vec<Vec<f32>> = (0..classes)
+        .map(|k| {
+            let fx = 1.0 + (k % 4) as f32;
+            let fy = 1.0 + (k / 4) as f32;
+            let phase = rng.uniform_range(0.0, std::f64::consts::TAU) as f32;
+            (0..c * size * size)
+                .map(|i| {
+                    let pix = i % (size * size);
+                    let (y, x) = (pix / size, pix % size);
+                    ((fx * x as f32 + fy * y as f32) * std::f32::consts::TAU
+                        / size as f32
+                        + phase)
+                        .sin()
+                })
+                .collect()
+        })
+        .collect();
+    let mut xs = Vec::with_capacity(n * c * size * size);
+    let mut ys = Vec::with_capacity(n);
+    for _ in 0..n {
+        let k = rng.below(classes);
+        ys.push(k as i64);
+        for &p in &protos[k] {
+            xs.push(p + 0.3 * rng.normal() as f32);
+        }
+    }
+    Arc::new(TensorDataset::new(vec![
+        Tensor::from_slice(&xs, Shape::new(vec![n, c, size, size])),
+        Tensor::from_slice(&ys, [n]).astype(DType::I64),
+    ]))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shapes_and_label_range() {
+        let ds = synthetic_image_classification(20, 3, 8, 5, 1);
+        assert_eq!(ds.len(), 20);
+        let s = ds.get(3);
+        assert_eq!(s[0].dims(), &[1, 3, 8, 8]);
+        let label = s[1].to_vec_i64()[0];
+        assert!((0..5).contains(&label));
+    }
+
+    #[test]
+    fn classes_are_separable_by_prototype_correlation() {
+        let ds = synthetic_image_classification(60, 1, 8, 2, 7);
+        // nearest-prototype classification on the raw data should beat chance
+        let mut per_class: Vec<Vec<Vec<f32>>> = vec![Vec::new(), Vec::new()];
+        for i in 0..ds.len() {
+            let s = ds.get(i);
+            per_class[s[1].to_vec_i64()[0] as usize].push(s[0].to_vec());
+        }
+        assert!(per_class[0].len() > 5 && per_class[1].len() > 5);
+        let mean = |v: &Vec<Vec<f32>>| -> Vec<f32> {
+            let mut m = vec![0.0; v[0].len()];
+            for row in v {
+                for (a, b) in m.iter_mut().zip(row) {
+                    *a += b / v.len() as f32;
+                }
+            }
+            m
+        };
+        let (m0, m1) = (mean(&per_class[0]), mean(&per_class[1]));
+        let mut correct = 0;
+        let mut total = 0;
+        for (k, rows) in per_class.iter().enumerate() {
+            for r in rows {
+                let d0: f32 = r.iter().zip(&m0).map(|(a, b)| (a - b) * (a - b)).sum();
+                let d1: f32 = r.iter().zip(&m1).map(|(a, b)| (a - b) * (a - b)).sum();
+                let pred = if d0 < d1 { 0 } else { 1 };
+                correct += usize::from(pred == k);
+                total += 1;
+            }
+        }
+        assert!(correct as f64 / total as f64 > 0.8, "classes not separable");
+    }
+}

@@ -1,0 +1,9 @@
+//! Vision package (paper §4.3 "Vision"): data augmentations /
+//! transformations and synthetic benchmark datasets (the stand-in for
+//! ImageNet/COCO loaders on this testbed — see DESIGN.md substitutions).
+
+pub mod datasets;
+pub mod transforms;
+
+pub use datasets::synthetic_image_classification;
+pub use transforms::{normalize, random_crop, random_flip_h};

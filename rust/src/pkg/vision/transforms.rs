@@ -1,0 +1,77 @@
+//! Image transforms over `[C, H, W]` (single image) or `[N, C, H, W]`
+//! tensors, composable through [`crate::data::TransformDataset`].
+
+use crate::tensor::Tensor;
+use crate::util::rng::with_thread_rng;
+
+/// Per-channel normalization: `(x - mean[c]) / std[c]`.
+pub fn normalize(x: &Tensor, mean: &[f64], std: &[f64]) -> Tensor {
+    let c = x.dim(-3);
+    assert_eq!(mean.len(), c);
+    assert_eq!(std.len(), c);
+    let m: Vec<f32> = mean.iter().map(|&v| v as f32).collect();
+    let s: Vec<f32> = std.iter().map(|&v| v as f32).collect();
+    let mt = Tensor::from_slice(&m, [c, 1, 1]);
+    let st = Tensor::from_slice(&s, [c, 1, 1]);
+    x.sub(&mt).div(&st)
+}
+
+/// Random horizontal flip with probability `p` (flips the last axis).
+pub fn random_flip_h(x: &Tensor, p: f64) -> Tensor {
+    let flip = with_thread_rng(|r| r.uniform() < p);
+    if flip {
+        x.flip(&[-1])
+    } else {
+        x.clone()
+    }
+}
+
+/// Random crop of `size`×`size` after zero-padding by `pad` (standard
+/// CIFAR-style augmentation). Works on `[C, H, W]`.
+pub fn random_crop(x: &Tensor, size: usize, pad: usize) -> Tensor {
+    assert_eq!(x.rank(), 3, "random_crop wants [C,H,W]");
+    let padded = x.pad(&[(0, 0), (pad, pad), (pad, pad)], 0.0);
+    let (h, w) = (padded.dim(1), padded.dim(2));
+    let (dy, dx) = with_thread_rng(|r| (r.below(h - size + 1), r.below(w - size + 1)));
+    padded.slice(&[0, dy, dx], &[padded.dim(0), dy + size, dx + size])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn normalize_standardizes_channels() {
+        let x = Tensor::full([2, 4, 4], 10.0, crate::tensor::DType::F32);
+        let y = normalize(&x, &[10.0, 10.0], &[2.0, 5.0]);
+        assert!(y.to_vec().iter().all(|&v| v == 0.0));
+        let y2 = normalize(&x, &[8.0, 0.0], &[1.0, 10.0]);
+        let v = y2.to_vec();
+        assert_eq!(v[0], 2.0);
+        assert_eq!(v[16], 1.0);
+    }
+
+    #[test]
+    fn crop_shape_and_content() {
+        let x = Tensor::arange(16, crate::tensor::DType::F32).reshape(&[1, 4, 4]);
+        let y = random_crop(&x, 4, 2);
+        assert_eq!(y.dims(), &[1, 4, 4]);
+        // all original values still present or zeros from padding
+        for v in y.to_vec() {
+            assert!((0.0..16.0).contains(&v) || v == 0.0);
+        }
+    }
+
+    #[test]
+    fn flip_preserves_multiset() {
+        crate::util::rng::seed(123);
+        let x = Tensor::arange(12, crate::tensor::DType::F32).reshape(&[1, 3, 4]);
+        let y = random_flip_h(&x, 1.0); // always flip
+        let mut a = x.to_vec();
+        let mut b = y.to_vec();
+        assert_eq!(b[0], 3.0); // first row reversed
+        a.sort_by(|p, q| p.partial_cmp(q).unwrap());
+        b.sort_by(|p, q| p.partial_cmp(q).unwrap());
+        assert_eq!(a, b);
+    }
+}

@@ -1,0 +1,191 @@
+//! PJRT runtime: loads the AOT-compiled HLO-text artifacts produced by
+//! `python/compile/aot.py` and executes them from the Rust hot path.
+//!
+//! This is the "vendor kernel library" of the framework (DESIGN.md): the
+//! XLA tensor backend ([`crate::tensor::xla_backend`]) dispatches hot ops
+//! here exactly like the original library offloads to cuDNN/MKL. Python
+//! runs only at `make artifacts` time; the `fl` binary is self-contained.
+
+pub mod registry;
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
+
+use once_cell::sync::OnceCell;
+
+use crate::tensor::{DType, Shape, Tensor};
+use crate::util::error::{Error, Result};
+
+pub use registry::{ArtifactKey, Registry};
+
+/// A compiled, executable artifact bound to the process-wide PJRT client.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    /// Output shape recorded in the manifest.
+    pub out_shape: Shape,
+}
+
+/// The PJRT CPU runtime: artifact registry + compile cache.
+pub struct PjrtRuntime {
+    client: xla::PjRtClient,
+    registry: Registry,
+    cache: Mutex<HashMap<String, Arc<Executable>>>,
+    dir: PathBuf,
+}
+
+// xla::PjRtClient wraps a thread-safe C++ client.
+unsafe impl Send for PjrtRuntime {}
+unsafe impl Sync for PjrtRuntime {}
+
+impl PjrtRuntime {
+    /// Open the artifacts directory (reads `manifest.txt`).
+    pub fn open(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let registry = Registry::load(&dir.join("manifest.txt"))?;
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| Error::Runtime(format!("PJRT cpu client: {e}")))?;
+        Ok(PjrtRuntime { client, registry, cache: Mutex::new(HashMap::new()), dir })
+    }
+
+    /// The process-wide runtime, if `artifacts/` exists (probed once).
+    pub fn global() -> Option<Arc<PjrtRuntime>> {
+        static INST: OnceCell<Option<Arc<PjrtRuntime>>> = OnceCell::new();
+        INST.get_or_init(|| {
+            let dir = std::env::var("FL_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+            PjrtRuntime::open(&dir).ok().map(Arc::new)
+        })
+        .clone()
+    }
+
+    /// The artifact registry.
+    pub fn registry(&self) -> &Registry {
+        &self.registry
+    }
+
+    /// Look up + compile (cached) the artifact for `op` with the given
+    /// input shapes. Returns None when no artifact matches.
+    pub fn lookup(&self, op: &str, in_shapes: &[&Shape]) -> Option<Arc<Executable>> {
+        let entry = self.registry.find(op, in_shapes)?;
+        let mut cache = self.cache.lock().unwrap();
+        if let Some(e) = cache.get(&entry.file) {
+            return Some(e.clone());
+        }
+        let path = self.dir.join(&entry.file);
+        let proto = xla::HloModuleProto::from_text_file(path.to_str()?).ok()?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp).ok()?;
+        let out = Arc::new(Executable { exe, out_shape: entry.out_shape.clone() });
+        cache.insert(entry.file.clone(), out.clone());
+        Some(out)
+    }
+
+    /// Execute a compiled artifact on f32 tensors, returning the single
+    /// (tupled) f32 output.
+    pub fn execute(&self, exe: &Executable, inputs: &[&Tensor]) -> Result<Tensor> {
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|t| {
+                let dims: Vec<i64> = t.dims().iter().map(|&d| d as i64).collect();
+                xla::Literal::vec1(&t.to_vec())
+                    .reshape(&dims)
+                    .map_err(|e| Error::Runtime(format!("literal reshape: {e}")))
+            })
+            .collect::<Result<_>>()?;
+        let result = exe
+            .exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| Error::Runtime(format!("execute: {e}")))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| Error::Runtime(format!("to_literal: {e}")))?;
+        let out = lit.to_tuple1().map_err(|e| Error::Runtime(format!("to_tuple1: {e}")))?;
+        let values: Vec<f32> =
+            out.to_vec().map_err(|e| Error::Runtime(format!("to_vec: {e}")))?;
+        if values.len() != exe.out_shape.numel() {
+            return Err(Error::Runtime(format!(
+                "artifact output {} elements, manifest says shape {}",
+                values.len(),
+                exe.out_shape
+            )));
+        }
+        Ok(Tensor::from_host(
+            crate::tensor::HostBuffer::F32(values),
+            exe.out_shape.clone(),
+        ))
+    }
+
+    /// Convenience: lookup + execute in one call.
+    pub fn run(&self, op: &str, inputs: &[&Tensor]) -> Result<Tensor> {
+        let shapes: Vec<&Shape> = inputs.iter().map(|t| t.shape()).collect();
+        let exe = self.lookup(op, &shapes).ok_or_else(|| Error::Unsupported {
+            backend: "pjrt".into(),
+            op: format!("{op}{shapes:?}"),
+        })?;
+        // f32-only artifact path
+        for t in inputs {
+            if t.dtype() != DType::F32 {
+                return Err(Error::DType(format!("artifact {op} wants f32, got {}", t.dtype())));
+            }
+        }
+        self.execute(&exe, inputs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn runtime() -> Option<Arc<PjrtRuntime>> {
+        // tests run from the workspace root; artifacts may not be built yet
+        let rt = PjrtRuntime::global();
+        if rt.is_none() {
+            eprintln!("skipping: artifacts/ not built (run `make artifacts`)");
+        }
+        rt
+    }
+
+    #[test]
+    fn smoke_matmul_add_roundtrip() {
+        let Some(rt) = runtime() else { return };
+        let x = Tensor::from_slice(&[1.0f32, 2.0, 3.0, 4.0], [2, 2]);
+        let y = Tensor::ones([2, 2]);
+        let out = rt.run("matmul_add", &[&x, &y]).unwrap();
+        assert_eq!(out.to_vec(), vec![5.0, 5.0, 9.0, 9.0]);
+    }
+
+    #[test]
+    fn pallas_linear_gelu_artifact_matches_cpu_composition() {
+        let Some(rt) = runtime() else { return };
+        crate::util::rng::seed(77);
+        let x = Tensor::rand([32, 256], -1.0, 1.0);
+        let w = Tensor::rand([256, 256], -0.1, 0.1);
+        let b = Tensor::rand([256], -0.1, 0.1);
+        let got = rt.run("linear_gelu", &[&x, &w, &b]).unwrap();
+        let want = x.matmul(&w).add(&b).gelu();
+        let diff = got.max_abs_diff(&want).unwrap();
+        assert!(diff < 1e-4, "pallas artifact vs cpu composition: {diff}");
+    }
+
+    #[test]
+    fn pallas_attention_artifact_matches_cpu_composition() {
+        let Some(rt) = runtime() else { return };
+        crate::util::rng::seed(78);
+        let q = Tensor::rand([8, 32, 64], -1.0, 1.0);
+        let k = Tensor::rand([8, 32, 64], -1.0, 1.0);
+        let v = Tensor::rand([8, 32, 64], -1.0, 1.0);
+        let got = rt.run("attention", &[&q, &k, &v]).unwrap();
+        let scale = 1.0 / 64.0f64.sqrt();
+        let want = q.matmul(&k.t()).mul_scalar(scale).softmax(-1).matmul(&v);
+        let diff = got.max_abs_diff(&want).unwrap();
+        assert!(diff < 1e-4, "pallas attention vs cpu: {diff}");
+    }
+
+    #[test]
+    fn missing_artifact_reports_unsupported() {
+        let Some(rt) = runtime() else { return };
+        let x = Tensor::ones([3, 3]);
+        let err = rt.run("matmul", &[&x, &x]).unwrap_err();
+        assert!(err.to_string().contains("does not support"));
+    }
+}

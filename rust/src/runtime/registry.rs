@@ -1,0 +1,140 @@
+//! Artifact catalog parsed from `artifacts/manifest.txt`
+//! (`name \t file \t in0;in1;... \t out`, dims joined by `x`).
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use crate::tensor::Shape;
+use crate::util::error::{Error, Result};
+
+/// Lookup key: op name + exact input shapes (AOT executables are
+/// shape-specialized).
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct ArtifactKey {
+    /// Op name (e.g. `linear_gelu`).
+    pub op: String,
+    /// Input shapes.
+    pub ins: Vec<Vec<usize>>,
+}
+
+/// One manifest row.
+#[derive(Debug, Clone)]
+pub struct Entry {
+    /// Artifact file name within the artifacts dir.
+    pub file: String,
+    /// Output shape.
+    pub out_shape: Shape,
+}
+
+/// The parsed manifest.
+#[derive(Debug, Default)]
+pub struct Registry {
+    entries: HashMap<ArtifactKey, Entry>,
+}
+
+fn parse_dims(s: &str) -> Result<Vec<usize>> {
+    if s == "scalar" {
+        return Ok(Vec::new());
+    }
+    s.split('x')
+        .map(|d| d.parse::<usize>().map_err(|_| Error::Runtime(format!("bad dim in `{s}`"))))
+        .collect()
+}
+
+impl Registry {
+    /// Parse `manifest.txt`.
+    pub fn load(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| Error::Runtime(format!("manifest {path:?}: {e}")))?;
+        let mut entries = HashMap::new();
+        for (lineno, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() {
+                continue;
+            }
+            let cols: Vec<&str> = line.split('\t').collect();
+            if cols.len() != 4 {
+                return Err(Error::Runtime(format!(
+                    "manifest line {}: expected 4 tab-separated columns",
+                    lineno + 1
+                )));
+            }
+            let ins: Vec<Vec<usize>> =
+                cols[2].split(';').map(parse_dims).collect::<Result<_>>()?;
+            let out = parse_dims(cols[3])?;
+            entries.insert(
+                ArtifactKey { op: cols[0].to_string(), ins },
+                Entry { file: cols[1].to_string(), out_shape: Shape::new(out) },
+            );
+        }
+        Ok(Registry { entries })
+    }
+
+    /// Number of registered artifacts.
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// Is the registry empty?
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Exact-shape lookup.
+    pub fn find(&self, op: &str, in_shapes: &[&Shape]) -> Option<&Entry> {
+        let key = ArtifactKey {
+            op: op.to_string(),
+            ins: in_shapes.iter().map(|s| s.dims().to_vec()).collect(),
+        };
+        self.entries.get(&key)
+    }
+
+    /// All ops present (sorted, deduplicated).
+    pub fn ops(&self) -> Vec<String> {
+        let mut v: Vec<String> = self.entries.keys().map(|k| k.op.clone()).collect();
+        v.sort();
+        v.dedup();
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_manifest_rows() {
+        let dir = std::env::temp_dir().join("fl_registry_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("manifest.txt");
+        std::fs::write(
+            &path,
+            "matmul\tmatmul__2x3__3x4.hlo.txt\t2x3;3x4\t2x4\nbias\tb.hlo.txt\t8\t8\n",
+        )
+        .unwrap();
+        let r = Registry::load(&path).unwrap();
+        assert_eq!(r.len(), 2);
+        let s1 = Shape::new(vec![2, 3]);
+        let s2 = Shape::new(vec![3, 4]);
+        let e = r.find("matmul", &[&s1, &s2]).unwrap();
+        assert_eq!(e.out_shape.dims(), &[2, 4]);
+        assert!(r.find("matmul", &[&s2, &s1]).is_none());
+        assert_eq!(r.ops(), vec!["bias".to_string(), "matmul".to_string()]);
+    }
+
+    #[test]
+    fn rejects_malformed_rows() {
+        let dir = std::env::temp_dir().join("fl_registry_test2");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("manifest.txt");
+        std::fs::write(&path, "just two\tcolumns\n").unwrap();
+        assert!(Registry::load(&path).is_err());
+    }
+
+    #[test]
+    fn scalar_dims_parse() {
+        assert_eq!(parse_dims("scalar").unwrap(), Vec::<usize>::new());
+        assert_eq!(parse_dims("4x5").unwrap(), vec![4, 5]);
+        assert!(parse_dims("4xbad").is_err());
+    }
+}

@@ -1,0 +1,35 @@
+//! The `TensorAdapter` interface (paper Listing 1): per-tensor state and
+//! metadata attached by a backend implementation.
+
+use std::any::Any;
+use std::sync::Arc;
+
+use super::backend::TensorBackend;
+use super::dtype::DType;
+use super::host::HostBuffer;
+use super::shape::Shape;
+
+/// Backend-private per-tensor state: shape, type, and whatever storage /
+/// graph-node / device-buffer information the backend needs (paper
+/// Listing 1). A [`super::Tensor`] is just a shared handle to one of these.
+pub trait TensorAdapter: Send + Sync {
+    /// Tensor shape metadata.
+    fn shape(&self) -> &Shape;
+
+    /// Element type metadata.
+    fn dtype(&self) -> DType;
+
+    /// The backend that owns this tensor (used for op dispatch: ops always
+    /// run on the backend of their first operand).
+    fn backend(&self) -> Arc<dyn TensorBackend>;
+
+    /// Materialize the value to host memory. For eager backends this is a
+    /// copy; for deferred backends this forces evaluation of the pending
+    /// graph (paper §4.1.1: "tensor values need only be materialized upon
+    /// user request").
+    fn to_host(&self) -> HostBuffer;
+
+    /// Downcast hook so a backend can recover its concrete adapter from a
+    /// `Tensor` handed back through the public API.
+    fn as_any(&self) -> &dyn Any;
+}

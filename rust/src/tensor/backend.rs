@@ -1,0 +1,232 @@
+//! The `TensorBackend` interface (paper Listing 2): the *complete*
+//! implementation surface for a tensor backend.
+//!
+//! This is deliberately small — roughly sixty primitive operations. Every
+//! other operator in the library (activations, losses, softmax, norms,
+//! whole models) is **derived by composition** from these primitives, so
+//! swapping a backend (or overriding a single primitive — see
+//! `examples/custom_backend.rs` and paper §5.2.4) retargets the entire
+//! framework with zero call-site changes.
+//!
+//! Backends are free to implement any computation mode (paper Figure 2):
+//! the reference [`super::cpu::CpuBackend`] is eager, [`super::lazy`] is
+//! deferred with fusion, and [`super::xla_backend`] dispatches to
+//! AOT-compiled (static) XLA executables.
+
+use std::sync::{Arc, RwLock};
+
+use super::dtype::DType;
+use super::host::HostBuffer;
+use super::shape::Shape;
+use super::Tensor;
+use crate::util::error::{Error, Result};
+
+/// Convolution hyper-parameters (stride / zero-padding per spatial dim).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Conv2dParams {
+    /// Stride (height, width).
+    pub stride: (usize, usize),
+    /// Zero padding (height, width), applied symmetrically.
+    pub padding: (usize, usize),
+}
+
+impl Default for Conv2dParams {
+    fn default() -> Self {
+        Conv2dParams { stride: (1, 1), padding: (0, 0) }
+    }
+}
+
+/// Pooling variant.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PoolKind {
+    /// Max pooling.
+    Max,
+    /// Average pooling.
+    Avg,
+}
+
+/// Pooling hyper-parameters.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Pool2dParams {
+    /// Max or average.
+    pub kind: PoolKind,
+    /// Window (height, width).
+    pub kernel: (usize, usize),
+    /// Stride (height, width).
+    pub stride: (usize, usize),
+}
+
+/// The open backend interface. All tensor arguments are materialization-
+/// agnostic handles; backends may defer evaluation arbitrarily as long as
+/// `TensorAdapter::to_host` forces a correct value.
+#[allow(missing_docs)] // op names are self-describing; contracts documented per group
+pub trait TensorBackend: Send + Sync {
+    /// Backend name (shows up in errors, telemetry and benches).
+    fn name(&self) -> &str;
+
+    // ---- creation -------------------------------------------------------
+    /// Constant-filled tensor.
+    fn full(&self, shape: &Shape, value: f64, dtype: DType) -> Tensor;
+    /// `[0, 1, ..., n-1]`.
+    fn arange(&self, n: usize, dtype: DType) -> Tensor;
+    /// Uniform samples in `[lo, hi)`.
+    fn rand_uniform(&self, shape: &Shape, lo: f64, hi: f64, dtype: DType) -> Tensor;
+    /// Normal samples.
+    fn rand_normal(&self, shape: &Shape, mean: f64, std: f64, dtype: DType) -> Tensor;
+    /// Wrap host data.
+    fn from_host(&self, host: HostBuffer, shape: Shape) -> Tensor;
+
+    // ---- unary (element-wise; float ops promote int inputs to f32) ------
+    fn neg(&self, x: &Tensor) -> Tensor;
+    fn abs(&self, x: &Tensor) -> Tensor;
+    fn sign(&self, x: &Tensor) -> Tensor;
+    fn exp(&self, x: &Tensor) -> Tensor;
+    fn log(&self, x: &Tensor) -> Tensor;
+    fn log1p(&self, x: &Tensor) -> Tensor;
+    fn sin(&self, x: &Tensor) -> Tensor;
+    fn cos(&self, x: &Tensor) -> Tensor;
+    fn tanh(&self, x: &Tensor) -> Tensor;
+    fn sqrt(&self, x: &Tensor) -> Tensor;
+    fn rsqrt(&self, x: &Tensor) -> Tensor;
+    fn reciprocal(&self, x: &Tensor) -> Tensor;
+    fn floor(&self, x: &Tensor) -> Tensor;
+    fn ceil(&self, x: &Tensor) -> Tensor;
+    fn round(&self, x: &Tensor) -> Tensor;
+    fn erf(&self, x: &Tensor) -> Tensor;
+    fn logical_not(&self, x: &Tensor) -> Tensor;
+    fn isnan(&self, x: &Tensor) -> Tensor;
+    /// Clamp into `[lo, hi]`.
+    fn clip(&self, x: &Tensor, lo: f64, hi: f64) -> Tensor;
+
+    // ---- binary (element-wise, broadcasting, dtype promotion) ------------
+    fn add(&self, a: &Tensor, b: &Tensor) -> Tensor;
+    fn sub(&self, a: &Tensor, b: &Tensor) -> Tensor;
+    fn mul(&self, a: &Tensor, b: &Tensor) -> Tensor;
+    fn div(&self, a: &Tensor, b: &Tensor) -> Tensor;
+    fn pow(&self, a: &Tensor, b: &Tensor) -> Tensor;
+    fn minimum(&self, a: &Tensor, b: &Tensor) -> Tensor;
+    fn maximum(&self, a: &Tensor, b: &Tensor) -> Tensor;
+    fn rem(&self, a: &Tensor, b: &Tensor) -> Tensor;
+
+    // ---- comparison (broadcasting; result dtype Bool) ---------------------
+    fn eq(&self, a: &Tensor, b: &Tensor) -> Tensor;
+    fn neq(&self, a: &Tensor, b: &Tensor) -> Tensor;
+    fn lt(&self, a: &Tensor, b: &Tensor) -> Tensor;
+    fn le(&self, a: &Tensor, b: &Tensor) -> Tensor;
+    fn gt(&self, a: &Tensor, b: &Tensor) -> Tensor;
+    fn ge(&self, a: &Tensor, b: &Tensor) -> Tensor;
+    fn logical_and(&self, a: &Tensor, b: &Tensor) -> Tensor;
+    fn logical_or(&self, a: &Tensor, b: &Tensor) -> Tensor;
+
+    // ---- reductions -------------------------------------------------------
+    /// Sum over `axes` (normalized, deduplicated by the `Tensor` wrapper).
+    fn sum(&self, x: &Tensor, axes: &[usize], keepdims: bool) -> Tensor;
+    fn prod(&self, x: &Tensor, axes: &[usize], keepdims: bool) -> Tensor;
+    fn max_reduce(&self, x: &Tensor, axes: &[usize], keepdims: bool) -> Tensor;
+    fn min_reduce(&self, x: &Tensor, axes: &[usize], keepdims: bool) -> Tensor;
+    /// Index of the max along `axis` (dtype I64).
+    fn argmax(&self, x: &Tensor, axis: usize, keepdims: bool) -> Tensor;
+    fn argmin(&self, x: &Tensor, axis: usize, keepdims: bool) -> Tensor;
+    /// Logical any/all over `axes` (result Bool).
+    fn any(&self, x: &Tensor, axes: &[usize], keepdims: bool) -> Tensor;
+    fn all(&self, x: &Tensor, axes: &[usize], keepdims: bool) -> Tensor;
+    /// Inclusive cumulative sum along `axis`.
+    fn cumsum(&self, x: &Tensor, axis: usize) -> Tensor;
+
+    // ---- linear algebra ----------------------------------------------------
+    /// Matrix multiply. Accepts 2-D × 2-D, or batched 3-D with broadcastable
+    /// leading batch dimension; 1-D operands are promoted NumPy-style.
+    fn matmul(&self, a: &Tensor, b: &Tensor) -> Tensor;
+
+    // ---- neural-network primitives (NCHW) -----------------------------------
+    /// 2-D convolution: `x [N,Cin,H,W]`, `w [Cout,Cin,Kh,Kw]`.
+    fn conv2d(&self, x: &Tensor, w: &Tensor, p: Conv2dParams) -> Tensor;
+    /// Gradient of conv2d w.r.t. its input.
+    fn conv2d_bwd_input(&self, grad_y: &Tensor, w: &Tensor, x_shape: &Shape, p: Conv2dParams) -> Tensor;
+    /// Gradient of conv2d w.r.t. the filter.
+    fn conv2d_bwd_filter(&self, grad_y: &Tensor, x: &Tensor, w_shape: &Shape, p: Conv2dParams) -> Tensor;
+    /// 2-D max/avg pooling over `x [N,C,H,W]`.
+    fn pool2d(&self, x: &Tensor, p: Pool2dParams) -> Tensor;
+    /// Gradient of pool2d (max pooling re-derives the argmax from `x`).
+    fn pool2d_bwd(&self, grad_y: &Tensor, x: &Tensor, p: Pool2dParams) -> Tensor;
+
+    // ---- data movement -------------------------------------------------------
+    /// Reshape (same element count; target pre-resolved by the wrapper).
+    fn reshape(&self, x: &Tensor, shape: &Shape) -> Tensor;
+    /// Permute dimensions.
+    fn transpose(&self, x: &Tensor, perm: &[usize]) -> Tensor;
+    /// Rectangular slice `[starts, ends)` per dimension.
+    fn slice(&self, x: &Tensor, starts: &[usize], ends: &[usize]) -> Tensor;
+    /// Concatenate along `axis`.
+    fn concat(&self, xs: &[&Tensor], axis: usize) -> Tensor;
+    /// Constant-pad: `pads[d] = (before, after)`.
+    fn pad(&self, x: &Tensor, pads: &[(usize, usize)], value: f64) -> Tensor;
+    /// Repeat the tensor `reps[d]` times along each dimension.
+    fn tile(&self, x: &Tensor, reps: &[usize]) -> Tensor;
+    /// Reverse along the given axes.
+    fn flip(&self, x: &Tensor, axes: &[usize]) -> Tensor;
+    /// Gather slices along `axis` by integer `indices` (1-D).
+    fn index_select(&self, x: &Tensor, axis: usize, indices: &Tensor) -> Tensor;
+    /// `out = base; out[indices[i], ...] += src[i, ...]` along axis 0
+    /// (the embedding-gradient primitive).
+    fn scatter_add(&self, base: &Tensor, indices: &Tensor, src: &Tensor) -> Tensor;
+    /// Element-wise select: `cond ? a : b` (broadcasting).
+    fn where_cond(&self, cond: &Tensor, a: &Tensor, b: &Tensor) -> Tensor;
+    /// Cast to another dtype.
+    fn astype(&self, x: &Tensor, dtype: DType) -> Tensor;
+    /// Deep copy (used to detach storage).
+    fn copy(&self, x: &Tensor) -> Tensor;
+
+    // ---- extension point -------------------------------------------------------
+    /// Optional named fused operations (e.g. AOT-compiled "linear_gelu" on
+    /// the XLA backend). Composed operators probe this and fall back to
+    /// primitive composition when unsupported.
+    fn call_ext(&self, name: &str, _inputs: &[&Tensor]) -> Result<Tensor> {
+        Err(Error::Unsupported { backend: self.name().to_string(), op: format!("ext:{name}") })
+    }
+}
+
+static DEFAULT_BACKEND: RwLock<Option<Arc<dyn TensorBackend>>> = RwLock::new(None);
+
+/// The process-wide default backend used by creation routines
+/// (`Tensor::zeros` etc.). Initialized to the reference CPU backend.
+pub fn default_backend() -> Arc<dyn TensorBackend> {
+    if let Some(b) = DEFAULT_BACKEND.read().unwrap().as_ref() {
+        return b.clone();
+    }
+    let mut w = DEFAULT_BACKEND.write().unwrap();
+    if let Some(b) = w.as_ref() {
+        return b.clone();
+    }
+    let b: Arc<dyn TensorBackend> = Arc::new(super::cpu::CpuBackend::new());
+    *w = Some(b.clone());
+    b
+}
+
+/// Install a new default backend; returns the previous one. This is the
+/// paper's §5.2.4 swap: *all* creation routines — and therefore every model,
+/// baseline and bench in the repo — pick up the new backend with no
+/// call-site changes.
+pub fn set_default_backend(b: Arc<dyn TensorBackend>) -> Option<Arc<dyn TensorBackend>> {
+    DEFAULT_BACKEND.write().unwrap().replace(b)
+}
+
+/// RAII guard that restores the previous default backend on drop.
+pub struct BackendGuard {
+    prev: Option<Arc<dyn TensorBackend>>,
+}
+
+impl BackendGuard {
+    /// Swap in `b` until the guard drops.
+    pub fn install(b: Arc<dyn TensorBackend>) -> Self {
+        BackendGuard { prev: set_default_backend(b) }
+    }
+}
+
+impl Drop for BackendGuard {
+    fn drop(&mut self) {
+        if let Some(prev) = self.prev.take() {
+            set_default_backend(prev);
+        }
+    }
+}

@@ -1,0 +1,317 @@
+//! 2-D convolution via im2col + GEMM (NCHW layout).
+//!
+//! This mirrors how the original library's reference backend offloads
+//! convolutions to a GEMM-shaped vendor kernel: patches are lowered to a
+//! column matrix and the filter bank becomes a `[Cout, Cin*Kh*Kw]` matrix.
+//! Backward passes reuse the same lowering (col2im scatter for the input
+//! gradient, `A·Bᵀ` for the filter gradient).
+
+use crate::memory::TypedBuf;
+use crate::tensor::backend::Conv2dParams;
+use crate::tensor::shape::Shape;
+use crate::tensor::{DType, Tensor};
+
+use super::matmul::{gemm, gemm_nt};
+use super::{cast, cpu, to_float, wrap, Storage};
+
+/// Output spatial size for one dimension.
+pub fn out_dim(input: usize, kernel: usize, stride: usize, pad: usize) -> usize {
+    (input + 2 * pad - kernel) / stride + 1
+}
+
+fn f32_data(t: &Tensor) -> (Vec<usize>, std::sync::Arc<Storage>) {
+    let c = cast(&to_float(cpu(t)), DType::F32);
+    (c.shape.dims().to_vec(), c.storage)
+}
+
+fn as_f32(s: &Storage) -> &[f32] {
+    match s {
+        Storage::F32(v) => v.as_slice(),
+        _ => unreachable!("expected f32 storage"),
+    }
+}
+
+/// Lower input patches of one image `[C,H,W]` into columns
+/// `[C*Kh*Kw, OH*OW]`.
+#[allow(clippy::too_many_arguments)]
+fn im2col(
+    x: &[f32],
+    c: usize,
+    h: usize,
+    w: usize,
+    kh: usize,
+    kw: usize,
+    stride: (usize, usize),
+    pad: (usize, usize),
+    col: &mut [f32],
+) {
+    let oh = out_dim(h, kh, stride.0, pad.0);
+    let ow = out_dim(w, kw, stride.1, pad.1);
+    let ospatial = oh * ow;
+    debug_assert_eq!(col.len(), c * kh * kw * ospatial);
+    for ci in 0..c {
+        for ki in 0..kh {
+            for kj in 0..kw {
+                let row = (ci * kh + ki) * kw + kj;
+                let dst = &mut col[row * ospatial..(row + 1) * ospatial];
+                for oy in 0..oh {
+                    let iy = (oy * stride.0 + ki) as isize - pad.0 as isize;
+                    if iy < 0 || iy >= h as isize {
+                        dst[oy * ow..(oy + 1) * ow].fill(0.0);
+                        continue;
+                    }
+                    let src_row = &x[(ci * h + iy as usize) * w..(ci * h + iy as usize + 1) * w];
+                    for ox in 0..ow {
+                        let ix = (ox * stride.1 + kj) as isize - pad.1 as isize;
+                        dst[oy * ow + ox] =
+                            if ix < 0 || ix >= w as isize { 0.0 } else { src_row[ix as usize] };
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Scatter-add columns back into an image (inverse of `im2col`).
+#[allow(clippy::too_many_arguments)]
+fn col2im(
+    col: &[f32],
+    c: usize,
+    h: usize,
+    w: usize,
+    kh: usize,
+    kw: usize,
+    stride: (usize, usize),
+    pad: (usize, usize),
+    x: &mut [f32],
+) {
+    let oh = out_dim(h, kh, stride.0, pad.0);
+    let ow = out_dim(w, kw, stride.1, pad.1);
+    let ospatial = oh * ow;
+    for ci in 0..c {
+        for ki in 0..kh {
+            for kj in 0..kw {
+                let row = (ci * kh + ki) * kw + kj;
+                let src = &col[row * ospatial..(row + 1) * ospatial];
+                for oy in 0..oh {
+                    let iy = (oy * stride.0 + ki) as isize - pad.0 as isize;
+                    if iy < 0 || iy >= h as isize {
+                        continue;
+                    }
+                    for ox in 0..ow {
+                        let ix = (ox * stride.1 + kj) as isize - pad.1 as isize;
+                        if ix < 0 || ix >= w as isize {
+                            continue;
+                        }
+                        x[(ci * h + iy as usize) * w + ix as usize] += src[oy * ow + ox];
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Forward convolution: `x [N,Cin,H,W] ⋆ w [Cout,Cin,Kh,Kw]`.
+pub fn conv2d(x: &Tensor, w: &Tensor, p: Conv2dParams) -> Tensor {
+    let (xd, xs) = f32_data(x);
+    let (wd, ws) = f32_data(w);
+    assert_eq!(xd.len(), 4, "conv2d input must be NCHW, got {:?}", xd);
+    assert_eq!(wd.len(), 4, "conv2d weight must be OIHW, got {:?}", wd);
+    let (n, cin, h, wid) = (xd[0], xd[1], xd[2], xd[3]);
+    let (cout, cin_w, kh, kw) = (wd[0], wd[1], wd[2], wd[3]);
+    assert_eq!(cin, cin_w, "conv2d channel mismatch");
+    let oh = out_dim(h, kh, p.stride.0, p.padding.0);
+    let ow = out_dim(wid, kw, p.stride.1, p.padding.1);
+    let (xv, wv) = (as_f32(&xs), as_f32(&ws));
+    let ckk = cin * kh * kw;
+    let ospatial = oh * ow;
+    let mut out = TypedBuf::<f32>::zeroed(n * cout * ospatial);
+    let mut col = vec![0.0f32; ckk * ospatial];
+    for ni in 0..n {
+        im2col(&xv[ni * cin * h * wid..], cin, h, wid, kh, kw, p.stride, p.padding, &mut col);
+        let dst = &mut out.as_mut_slice()[ni * cout * ospatial..(ni + 1) * cout * ospatial];
+        gemm(wv, &col, dst, cout, ckk, ospatial);
+    }
+    wrap(Storage::F32(out), Shape::new(vec![n, cout, oh, ow]), DType::F32)
+}
+
+/// Input gradient: `col_grad = wᵀ · gy`, then col2im.
+pub fn conv2d_bwd_input(grad_y: &Tensor, w: &Tensor, x_shape: &Shape, p: Conv2dParams) -> Tensor {
+    let (gd, gs) = f32_data(grad_y);
+    let (wd, ws) = f32_data(w);
+    let xd = x_shape.dims();
+    let (n, cin, h, wid) = (xd[0], xd[1], xd[2], xd[3]);
+    let (cout, _, kh, kw) = (wd[0], wd[1], wd[2], wd[3]);
+    let (oh, ow) = (gd[2], gd[3]);
+    let ospatial = oh * ow;
+    let ckk = cin * kh * kw;
+    let (gv, wv) = (as_f32(&gs), as_f32(&ws));
+    // wt [ckk, cout]: wt[r, o] = w[o, r]
+    let mut wt = vec![0.0f32; ckk * cout];
+    for o in 0..cout {
+        for r in 0..ckk {
+            wt[r * cout + o] = wv[o * ckk + r];
+        }
+    }
+    let mut dx = TypedBuf::<f32>::zeroed(n * cin * h * wid);
+    let mut colg = vec![0.0f32; ckk * ospatial];
+    for ni in 0..n {
+        colg.fill(0.0);
+        let gy = &gv[ni * cout * ospatial..(ni + 1) * cout * ospatial];
+        gemm(&wt, gy, &mut colg, ckk, cout, ospatial);
+        col2im(
+            &colg,
+            cin,
+            h,
+            wid,
+            kh,
+            kw,
+            p.stride,
+            p.padding,
+            &mut dx.as_mut_slice()[ni * cin * h * wid..(ni + 1) * cin * h * wid],
+        );
+    }
+    wrap(Storage::F32(dx), x_shape.clone(), DType::F32)
+}
+
+/// Filter gradient: `gw += gy · colᵀ`, accumulated over the batch.
+pub fn conv2d_bwd_filter(grad_y: &Tensor, x: &Tensor, w_shape: &Shape, p: Conv2dParams) -> Tensor {
+    let (gd, gs) = f32_data(grad_y);
+    let (xd, xs) = f32_data(x);
+    let wd = w_shape.dims();
+    let (n, cin, h, wid) = (xd[0], xd[1], xd[2], xd[3]);
+    let (cout, _, kh, kw) = (wd[0], wd[1], wd[2], wd[3]);
+    let (oh, ow) = (gd[2], gd[3]);
+    let ospatial = oh * ow;
+    let ckk = cin * kh * kw;
+    let (gv, xv) = (as_f32(&gs), as_f32(&xs));
+    let mut gw = TypedBuf::<f32>::zeroed(cout * ckk);
+    let mut col = vec![0.0f32; ckk * ospatial];
+    for ni in 0..n {
+        im2col(&xv[ni * cin * h * wid..], cin, h, wid, kh, kw, p.stride, p.padding, &mut col);
+        let gy = &gv[ni * cout * ospatial..(ni + 1) * cout * ospatial];
+        // gw [cout, ckk] += gy [cout, ospatial] @ col[ckk, ospatial]^T
+        gemm_nt(gy, &col, gw.as_mut_slice(), cout, ospatial, ckk);
+    }
+    wrap(Storage::F32(gw), w_shape.clone(), DType::F32)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn naive_conv(
+        x: &[f32],
+        w: &[f32],
+        n: usize,
+        cin: usize,
+        h: usize,
+        wid: usize,
+        cout: usize,
+        kh: usize,
+        kw: usize,
+        stride: (usize, usize),
+        pad: (usize, usize),
+    ) -> Vec<f32> {
+        let oh = out_dim(h, kh, stride.0, pad.0);
+        let ow = out_dim(wid, kw, stride.1, pad.1);
+        let mut out = vec![0.0f32; n * cout * oh * ow];
+        for ni in 0..n {
+            for co in 0..cout {
+                for oy in 0..oh {
+                    for ox in 0..ow {
+                        let mut acc = 0.0;
+                        for ci in 0..cin {
+                            for ki in 0..kh {
+                                for kj in 0..kw {
+                                    let iy = (oy * stride.0 + ki) as isize - pad.0 as isize;
+                                    let ix = (ox * stride.1 + kj) as isize - pad.1 as isize;
+                                    if iy < 0 || iy >= h as isize || ix < 0 || ix >= wid as isize {
+                                        continue;
+                                    }
+                                    let xi = ((ni * cin + ci) * h + iy as usize) * wid + ix as usize;
+                                    let wi = ((co * cin + ci) * kh + ki) * kw + kj;
+                                    acc += x[xi] * w[wi];
+                                }
+                            }
+                        }
+                        out[((ni * cout + co) * oh + oy) * ow + ox] = acc;
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn conv_matches_naive() {
+        crate::util::rng::seed(42);
+        for (stride, pad) in [((1, 1), (0, 0)), ((2, 2), (1, 1)), ((1, 2), (2, 0))] {
+            let (n, cin, h, w, cout, kh, kw) = (2, 3, 7, 8, 4, 3, 3);
+            let x = Tensor::rand([n, cin, h, w], -1.0, 1.0);
+            let wt = Tensor::rand([cout, cin, kh, kw], -1.0, 1.0);
+            let p = Conv2dParams { stride, padding: pad };
+            let got = conv2d(&x, &wt, p).to_vec();
+            let want = naive_conv(&x.to_vec(), &wt.to_vec(), n, cin, h, w, cout, kh, kw, stride, pad);
+            for (g, wv) in got.iter().zip(&want) {
+                assert!((g - wv).abs() < 1e-4, "stride {stride:?} pad {pad:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn conv_identity_kernel() {
+        // 1x1 kernel of ones on a single channel = identity
+        let x = Tensor::arange(9, DType::F32).reshape(&[1, 1, 3, 3]);
+        let w = Tensor::ones([1, 1, 1, 1]);
+        let y = conv2d(&x, &w, Conv2dParams::default());
+        assert_eq!(y.to_vec(), x.to_vec());
+    }
+
+    #[test]
+    fn bwd_input_gradient_numerically() {
+        crate::util::rng::seed(3);
+        let (n, cin, h, w, cout, kh, kw) = (1, 2, 5, 5, 3, 3, 3);
+        let p = Conv2dParams { stride: (1, 1), padding: (1, 1) };
+        let x = Tensor::rand([n, cin, h, w], -1.0, 1.0);
+        let wt = Tensor::rand([cout, cin, kh, kw], -1.0, 1.0);
+        // loss = sum(conv(x, w)); dL/dx via analytic path
+        let gy = Tensor::ones([n, cout, h, w]);
+        let dx = conv2d_bwd_input(&gy, &wt, x.shape(), p).to_vec();
+        // numeric check a few entries
+        let eps = 1e-3f32;
+        let base: f32 = conv2d(&x, &wt, p).to_vec().iter().sum();
+        let xv = x.to_vec();
+        for &probe in &[0usize, 7, 24, 49] {
+            let mut xp = xv.clone();
+            xp[probe] += eps;
+            let xt = Tensor::from_slice(&xp, [n, cin, h, w]);
+            let plus: f32 = conv2d(&xt, &wt, p).to_vec().iter().sum();
+            let num = (plus - base) / eps;
+            assert!((num - dx[probe]).abs() < 2e-2, "probe {probe}: num {num} vs {}", dx[probe]);
+        }
+    }
+
+    #[test]
+    fn bwd_filter_gradient_numerically() {
+        crate::util::rng::seed(4);
+        let (n, cin, h, w, cout, kh, kw) = (2, 2, 5, 5, 2, 3, 3);
+        let p = Conv2dParams { stride: (2, 2), padding: (1, 1) };
+        let x = Tensor::rand([n, cin, h, w], -1.0, 1.0);
+        let wt = Tensor::rand([cout, cin, kh, kw], -1.0, 1.0);
+        let y = conv2d(&x, &wt, p);
+        let gy = Tensor::ones(y.dims().to_vec());
+        let dw = conv2d_bwd_filter(&gy, &x, wt.shape(), p).to_vec();
+        let eps = 1e-3f32;
+        let base: f32 = y.to_vec().iter().sum();
+        let wv = wt.to_vec();
+        for &probe in &[0usize, 5, 17, 35] {
+            let mut wp = wv.clone();
+            wp[probe] += eps;
+            let wtp = Tensor::from_slice(&wp, [cout, cin, kh, kw]);
+            let plus: f32 = conv2d(&x, &wtp, p).to_vec().iter().sum();
+            let num = (plus - base) / eps;
+            assert!((num - dw[probe]).abs() < 2e-2, "probe {probe}: num {num} vs {}", dw[probe]);
+        }
+    }
+}

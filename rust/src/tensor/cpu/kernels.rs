@@ -1,0 +1,237 @@
+//! Element-wise kernel machinery for the CPU backend: broadcast-aware
+//! map/zip loops with contiguous fast paths.
+//!
+//! Layout invariant: every CPU tensor is contiguous row-major, so the only
+//! non-trivial indexing is broadcasting. Four cases, fastest first:
+//! same-shape zip (parallelized), scalar operand, suffix broadcast (e.g.
+//! bias add `[n,d]+[d]`, reduced to a modulo), and a general strided
+//! odometer walk.
+
+use crate::memory::TypedBuf;
+use crate::tensor::shape::Shape;
+use crate::util::parallel::{parallel_fill, PAR_THRESHOLD};
+
+/// Unary map over a contiguous buffer.
+pub fn map1<T, U>(x: &[T], f: impl Fn(T) -> U + Sync) -> TypedBuf<U>
+where
+    T: Copy + Send + Sync,
+    U: Copy + Default + Send + Sync,
+{
+    let mut out = TypedBuf::<U>::zeroed(x.len());
+    parallel_fill(out.as_mut_slice(), PAR_THRESHOLD, |base, chunk| {
+        for (i, slot) in chunk.iter_mut().enumerate() {
+            *slot = f(x[base + i]);
+        }
+    });
+    out
+}
+
+/// Is `small` a suffix of `big` (exact trailing dims)?
+fn is_suffix(small: &Shape, big: &Shape) -> bool {
+    let (s, b) = (small.dims(), big.dims());
+    s.len() <= b.len() && b[b.len() - s.len()..] == *s && small.numel() > 0
+}
+
+/// Broadcast binary zip producing `out_shape` (precomputed by the caller
+/// via `Shape::broadcast`).
+pub fn map2<T, U>(
+    a: &[T],
+    ash: &Shape,
+    b: &[T],
+    bsh: &Shape,
+    out_shape: &Shape,
+    f: impl Fn(T, T) -> U + Sync,
+) -> TypedBuf<U>
+where
+    T: Copy + Send + Sync,
+    U: Copy + Default + Send + Sync,
+{
+    let n = out_shape.numel();
+    let mut out = TypedBuf::<U>::zeroed(n);
+
+    // fast path 1: identical shapes
+    if ash == bsh {
+        parallel_fill(out.as_mut_slice(), PAR_THRESHOLD, |base, chunk| {
+            for (i, slot) in chunk.iter_mut().enumerate() {
+                *slot = f(a[base + i], b[base + i]);
+            }
+        });
+        return out;
+    }
+    // fast path 2: scalar operands
+    if bsh.numel() == 1 && *ash == *out_shape {
+        let bv = b[0];
+        parallel_fill(out.as_mut_slice(), PAR_THRESHOLD, |base, chunk| {
+            for (i, slot) in chunk.iter_mut().enumerate() {
+                *slot = f(a[base + i], bv);
+            }
+        });
+        return out;
+    }
+    if ash.numel() == 1 && *bsh == *out_shape {
+        let av = a[0];
+        parallel_fill(out.as_mut_slice(), PAR_THRESHOLD, |base, chunk| {
+            for (i, slot) in chunk.iter_mut().enumerate() {
+                *slot = f(av, b[base + i]);
+            }
+        });
+        return out;
+    }
+    // fast path 3: suffix broadcast (bias-add pattern)
+    if *ash == *out_shape && is_suffix(bsh, out_shape) {
+        let bl = b.len();
+        parallel_fill(out.as_mut_slice(), PAR_THRESHOLD, |base, chunk| {
+            for (i, slot) in chunk.iter_mut().enumerate() {
+                let idx = base + i;
+                *slot = f(a[idx], b[idx % bl]);
+            }
+        });
+        return out;
+    }
+    if *bsh == *out_shape && is_suffix(ash, out_shape) {
+        let al = a.len();
+        parallel_fill(out.as_mut_slice(), PAR_THRESHOLD, |base, chunk| {
+            for (i, slot) in chunk.iter_mut().enumerate() {
+                let idx = base + i;
+                *slot = f(a[idx % al], b[idx]);
+            }
+        });
+        return out;
+    }
+
+    // general case: strided odometer walk (serial; rare in practice)
+    let sa = ash.broadcast_strides(out_shape).expect("map2 lhs not broadcastable");
+    let sb = bsh.broadcast_strides(out_shape).expect("map2 rhs not broadcastable");
+    let dims = out_shape.dims();
+    let rank = dims.len();
+    let mut idx = vec![0usize; rank];
+    let (mut oa, mut ob) = (0usize, 0usize);
+    for slot in out.as_mut_slice().iter_mut() {
+        *slot = f(a[oa], b[ob]);
+        for d in (0..rank).rev() {
+            idx[d] += 1;
+            oa += sa[d];
+            ob += sb[d];
+            if idx[d] < dims[d] {
+                break;
+            }
+            idx[d] = 0;
+            oa -= sa[d] * dims[d];
+            ob -= sb[d] * dims[d];
+        }
+    }
+    out
+}
+
+/// Three-way broadcast zip (for `where_cond`).
+pub fn map3<C, T>(
+    c: &[C],
+    csh: &Shape,
+    a: &[T],
+    ash: &Shape,
+    b: &[T],
+    bsh: &Shape,
+    out_shape: &Shape,
+    f: impl Fn(C, T, T) -> T + Sync,
+) -> TypedBuf<T>
+where
+    C: Copy + Send + Sync,
+    T: Copy + Default + Send + Sync,
+{
+    let n = out_shape.numel();
+    let mut out = TypedBuf::<T>::zeroed(n);
+    if csh == out_shape && ash == out_shape && bsh == out_shape {
+        parallel_fill(out.as_mut_slice(), PAR_THRESHOLD, |base, chunk| {
+            for (i, slot) in chunk.iter_mut().enumerate() {
+                let idx = base + i;
+                *slot = f(c[idx], a[idx], b[idx]);
+            }
+        });
+        return out;
+    }
+    let sc = csh.broadcast_strides(out_shape).expect("map3 cond");
+    let sa = ash.broadcast_strides(out_shape).expect("map3 lhs");
+    let sb = bsh.broadcast_strides(out_shape).expect("map3 rhs");
+    let dims = out_shape.dims();
+    let rank = dims.len();
+    let mut idx = vec![0usize; rank];
+    let (mut oc, mut oa, mut ob) = (0usize, 0usize, 0usize);
+    for slot in out.as_mut_slice().iter_mut() {
+        *slot = f(c[oc], a[oa], b[ob]);
+        for d in (0..rank).rev() {
+            idx[d] += 1;
+            oc += sc[d];
+            oa += sa[d];
+            ob += sb[d];
+            if idx[d] < dims[d] {
+                break;
+            }
+            idx[d] = 0;
+            oc -= sc[d] * dims[d];
+            oa -= sa[d] * dims[d];
+            ob -= sb[d] * dims[d];
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn map1_applies() {
+        let out = map1(&[1.0f32, -2.0, 3.0], |x| x * 2.0);
+        assert_eq!(out.as_slice(), &[2.0, -4.0, 6.0]);
+    }
+
+    #[test]
+    fn map2_same_shape() {
+        let s = Shape::new(vec![3]);
+        let out = map2(&[1.0f32, 2.0, 3.0], &s, &[10.0, 20.0, 30.0], &s, &s, |a, b| a + b);
+        assert_eq!(out.as_slice(), &[11.0, 22.0, 33.0]);
+    }
+
+    #[test]
+    fn map2_scalar_rhs() {
+        let s = Shape::new(vec![2, 2]);
+        let sc = Shape::scalar();
+        let out = map2(&[1.0f32, 2.0, 3.0, 4.0], &s, &[10.0], &sc, &s, |a, b| a * b);
+        assert_eq!(out.as_slice(), &[10.0, 20.0, 30.0, 40.0]);
+    }
+
+    #[test]
+    fn map2_suffix_bias() {
+        let s = Shape::new(vec![2, 3]);
+        let bs = Shape::new(vec![3]);
+        let out =
+            map2(&[0.0f32; 6], &s, &[1.0, 2.0, 3.0], &bs, &s, |a, b| a + b);
+        assert_eq!(out.as_slice(), &[1., 2., 3., 1., 2., 3.]);
+    }
+
+    #[test]
+    fn map2_general_broadcast() {
+        // [2,1] * [1,3] -> [2,3]
+        let a = Shape::new(vec![2, 1]);
+        let b = Shape::new(vec![1, 3]);
+        let o = a.broadcast(&b).unwrap();
+        let out = map2(&[2.0f32, 3.0], &a, &[1.0, 10.0, 100.0], &b, &o, |x, y| x * y);
+        assert_eq!(out.as_slice(), &[2., 20., 200., 3., 30., 300.]);
+    }
+
+    #[test]
+    fn map3_select() {
+        let s = Shape::new(vec![3]);
+        let out = map3(
+            &[1u8, 0, 1],
+            &s,
+            &[1.0f32, 2.0, 3.0],
+            &s,
+            &[9.0, 9.0, 9.0],
+            &s,
+            &s,
+            |c, a, b| if c != 0 { a } else { b },
+        );
+        assert_eq!(out.as_slice(), &[1.0, 9.0, 3.0]);
+    }
+}

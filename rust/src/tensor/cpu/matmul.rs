@@ -1,0 +1,304 @@
+//! Batched GEMM for the CPU backend.
+//!
+//! The kernel is a cache-friendly `i-l-j` loop (rows outer, contraction
+//! middle, contiguous output columns inner) so the innermost loop is an
+//! axpy the compiler auto-vectorizes. Rows are parallelized across native
+//! threads via `chunks_mut`. Integer inputs promote to f32.
+
+use crate::memory::TypedBuf;
+use crate::tensor::shape::Shape;
+use crate::tensor::Tensor;
+use crate::util::parallel::num_threads;
+
+use super::{cast, cpu, to_float, wrap, CpuTensor, Storage};
+
+/// `C += A @ B` where A is `[m,k]`, B is `[k,n]`, C is `[m,n]`, all
+/// contiguous row-major. Generic over f32/f64.
+pub fn gemm<T>(a: &[T], b: &[T], c: &mut [T], m: usize, k: usize, n: usize)
+where
+    T: Copy + Default + Send + Sync + std::ops::Mul<Output = T> + std::ops::AddAssign + PartialEq,
+{
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(c.len(), m * n);
+    let work = m * k * n;
+    let threads = if work < 64 * 1024 { 1 } else { num_threads() };
+    let rows_per = m.div_ceil(threads).max(1);
+    let zero = T::default();
+    std::thread::scope(|s| {
+        for (ti, c_chunk) in c.chunks_mut(rows_per * n).enumerate() {
+            let row0 = ti * rows_per;
+            s.spawn(move || {
+                // 4-row micro-kernel: each streamed B row is reused across
+                // four output rows, quartering B bandwidth (§Perf L3.2)
+                let mut rows = c_chunk.chunks_mut(n);
+                let mut i = row0;
+                loop {
+                    let (Some(c0), r1, r2, r3) =
+                        (rows.next(), rows.next(), rows.next(), rows.next())
+                    else {
+                        break;
+                    };
+                    match (r1, r2, r3) {
+                        (Some(c1), Some(c2), Some(c3)) => {
+                            let (a0, a1, a2, a3) = (
+                                &a[i * k..(i + 1) * k],
+                                &a[(i + 1) * k..(i + 2) * k],
+                                &a[(i + 2) * k..(i + 3) * k],
+                                &a[(i + 3) * k..(i + 4) * k],
+                            );
+                            for l in 0..k {
+                                let b_row = &b[l * n..(l + 1) * n];
+                                let (v0, v1, v2, v3) = (a0[l], a1[l], a2[l], a3[l]);
+                                for j in 0..n {
+                                    let bv = b_row[j];
+                                    c0[j] += v0 * bv;
+                                    c1[j] += v1 * bv;
+                                    c2[j] += v2 * bv;
+                                    c3[j] += v3 * bv;
+                                }
+                            }
+                            i += 4;
+                        }
+                        (r1, r2, _) => {
+                            // 1–3 leftover rows: simple row kernel
+                            for (ri, c_row) in
+                                [Some(c0), r1, r2].into_iter().flatten().enumerate()
+                            {
+                                let a_row = &a[(i + ri) * k..(i + ri + 1) * k];
+                                for (l, &av) in a_row.iter().enumerate() {
+                                    if av == zero {
+                                        continue;
+                                    }
+                                    let b_row = &b[l * n..(l + 1) * n];
+                                    for (cv, &bv) in c_row.iter_mut().zip(b_row) {
+                                        *cv += av * bv;
+                                    }
+                                }
+                            }
+                            break;
+                        }
+                    }
+                }
+            });
+        }
+    });
+}
+
+/// `C += A @ Bᵀ` where A is `[m,k]`, Bt is `[n,k]` (i.e. B transposed),
+/// C is `[m,n]`. Dot-product kernel used by conv backward-filter.
+pub fn gemm_nt<T>(a: &[T], bt: &[T], c: &mut [T], m: usize, k: usize, n: usize)
+where
+    T: Copy + Default + Send + Sync + std::ops::Mul<Output = T> + std::ops::AddAssign,
+{
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(bt.len(), n * k);
+    debug_assert_eq!(c.len(), m * n);
+    let work = m * k * n;
+    let threads = if work < 64 * 1024 { 1 } else { num_threads() };
+    let rows_per = m.div_ceil(threads).max(1);
+    std::thread::scope(|s| {
+        for (ti, c_chunk) in c.chunks_mut(rows_per * n).enumerate() {
+            let row0 = ti * rows_per;
+            s.spawn(move || {
+                for (ri, c_row) in c_chunk.chunks_mut(n).enumerate() {
+                    let i = row0 + ri;
+                    let a_row = &a[i * k..(i + 1) * k];
+                    for (j, cv) in c_row.iter_mut().enumerate() {
+                        let b_row = &bt[j * k..(j + 1) * k];
+                        let mut acc = T::default();
+                        for (&av, &bv) in a_row.iter().zip(b_row) {
+                            acc += av * bv;
+                        }
+                        *cv += acc;
+                    }
+                }
+            });
+        }
+    });
+}
+
+struct MatmulPlan {
+    batch: usize,
+    m: usize,
+    k: usize,
+    n: usize,
+    a_batch_stride: usize, // 0 when a is broadcast across the batch
+    b_batch_stride: usize,
+    out_shape: Shape,
+}
+
+fn plan(a_shape: &Shape, b_shape: &Shape) -> MatmulPlan {
+    let (ad, bd) = (a_shape.dims(), b_shape.dims());
+    assert!(!ad.is_empty() && !bd.is_empty(), "matmul on scalar");
+    // promote 1-D operands numpy-style
+    let (ad2, squeeze_m): (Vec<usize>, bool) =
+        if ad.len() == 1 { (vec![1, ad[0]], true) } else { (ad.to_vec(), false) };
+    let (bd2, squeeze_n): (Vec<usize>, bool) =
+        if bd.len() == 1 { (vec![bd[0], 1], true) } else { (bd.to_vec(), false) };
+    let (m, ka) = (ad2[ad2.len() - 2], ad2[ad2.len() - 1]);
+    let (kb, n) = (bd2[bd2.len() - 2], bd2[bd2.len() - 1]);
+    assert_eq!(ka, kb, "matmul inner dims: {a_shape} x {b_shape}");
+    let a_batch: usize = ad2[..ad2.len() - 2].iter().product();
+    let b_batch: usize = bd2[..bd2.len() - 2].iter().product();
+    let batch = a_batch.max(b_batch).max(1);
+    assert!(
+        a_batch == b_batch || a_batch <= 1 || b_batch <= 1,
+        "matmul batch mismatch: {a_shape} x {b_shape}"
+    );
+    // output shape: broadcast batch dims ++ [m, n] (minus squeezed dims)
+    let batch_dims: Vec<usize> = if ad2.len() - 2 >= bd2.len() - 2 {
+        ad2[..ad2.len() - 2].to_vec()
+    } else {
+        bd2[..bd2.len() - 2].to_vec()
+    };
+    let mut out_dims = batch_dims;
+    if !squeeze_m {
+        out_dims.push(m);
+    }
+    if !squeeze_n {
+        out_dims.push(n);
+    }
+    MatmulPlan {
+        batch,
+        m,
+        k: ka,
+        n,
+        a_batch_stride: if a_batch <= 1 { 0 } else { m * ka },
+        b_batch_stride: if b_batch <= 1 { 0 } else { kb * n },
+        out_shape: Shape::new(out_dims),
+    }
+}
+
+fn matmul_typed<T>(a: &[T], b: &[T], p: &MatmulPlan) -> TypedBuf<T>
+where
+    T: Copy + Default + Send + Sync + std::ops::Mul<Output = T> + std::ops::AddAssign + PartialEq,
+{
+    let mut out = TypedBuf::<T>::zeroed(p.batch * p.m * p.n);
+    let o = out.as_mut_slice();
+    for bi in 0..p.batch {
+        let av = &a[bi * p.a_batch_stride..bi * p.a_batch_stride + p.m * p.k];
+        let bv = &b[bi * p.b_batch_stride..bi * p.b_batch_stride + p.k * p.n];
+        let cv = &mut o[bi * p.m * p.n..(bi + 1) * p.m * p.n];
+        gemm(av, bv, cv, p.m, p.k, p.n);
+    }
+    out
+}
+
+/// Public matmul entry (dtype promotion, batching, 1-D promotion).
+pub fn matmul(a: &Tensor, b: &Tensor) -> Tensor {
+    let (ca, cb) = (to_float(cpu(a)), to_float(cpu(b)));
+    // unify float width
+    let d = ca.dtype.promote(cb.dtype);
+    let (ca, cb): (CpuTensor, CpuTensor) = (cast(&ca, d), cast(&cb, d));
+    let p = plan(&ca.shape, &cb.shape);
+    match (&*ca.storage, &*cb.storage) {
+        (Storage::F32(x), Storage::F32(y)) => {
+            wrap(Storage::F32(matmul_typed(x, y, &p)), p.out_shape.clone(), d)
+        }
+        (Storage::F64(x), Storage::F64(y)) => {
+            wrap(Storage::F64(matmul_typed(x, y, &p)), p.out_shape.clone(), d)
+        }
+        _ => unreachable!("matmul operands not float after promotion"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::DType;
+
+    #[test]
+    fn gemm_small_exact() {
+        // [[1,2],[3,4]] @ [[5,6],[7,8]] = [[19,22],[43,50]]
+        let a = [1.0f32, 2.0, 3.0, 4.0];
+        let b = [5.0f32, 6.0, 7.0, 8.0];
+        let mut c = [0.0f32; 4];
+        gemm(&a, &b, &mut c, 2, 2, 2);
+        assert_eq!(c, [19.0, 22.0, 43.0, 50.0]);
+    }
+
+    #[test]
+    fn gemm_nt_matches_gemm() {
+        let m = 5;
+        let k = 7;
+        let n = 3;
+        let a: Vec<f32> = (0..m * k).map(|i| (i as f32) * 0.1).collect();
+        let b: Vec<f32> = (0..k * n).map(|i| (i as f32) * 0.01 - 0.1).collect();
+        // bt[j*k + l] = b[l*n + j]
+        let mut bt = vec![0.0f32; n * k];
+        for l in 0..k {
+            for j in 0..n {
+                bt[j * k + l] = b[l * n + j];
+            }
+        }
+        let mut c1 = vec![0.0f32; m * n];
+        let mut c2 = vec![0.0f32; m * n];
+        gemm(&a, &b, &mut c1, m, k, n);
+        gemm_nt(&a, &bt, &mut c2, m, k, n);
+        for (x, y) in c1.iter().zip(&c2) {
+            assert!((x - y).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn matmul_2d() {
+        let a = Tensor::from_slice(&[1.0f32, 2.0, 3.0, 4.0], [2, 2]);
+        let b = Tensor::from_slice(&[1.0f32, 0.0, 0.0, 1.0], [2, 2]);
+        assert_eq!(a.matmul(&b).to_vec(), vec![1.0, 2.0, 3.0, 4.0]);
+    }
+
+    #[test]
+    fn matmul_batched_and_broadcast() {
+        // batch 2: a [2,2,3] x b [2,3,2]
+        let a = Tensor::arange(12, DType::F32).reshape(&[2, 2, 3]);
+        let b = Tensor::ones([2, 3, 2]);
+        let c = a.matmul(&b);
+        assert_eq!(c.dims(), &[2, 2, 2]);
+        assert_eq!(c.to_vec()[..4], [3.0, 3.0, 12.0, 12.0]);
+        // broadcast: a [2,2,3] x b [3,2]
+        let b2 = Tensor::ones([3, 2]);
+        let c2 = a.matmul(&b2);
+        assert_eq!(c2.dims(), &[2, 2, 2]);
+        assert_eq!(c.to_vec(), c2.to_vec());
+    }
+
+    #[test]
+    fn matmul_1d_promotion() {
+        let v = Tensor::from_slice(&[1.0f32, 2.0, 3.0], [3]);
+        let m = Tensor::eye(3, DType::F32);
+        let out = v.matmul(&m);
+        assert_eq!(out.dims(), &[3]);
+        assert_eq!(out.to_vec(), vec![1.0, 2.0, 3.0]);
+        let dot = v.matmul(&v);
+        assert_eq!(dot.dims(), &[] as &[usize]);
+        assert_eq!(dot.item(), 14.0);
+    }
+
+    #[test]
+    fn matmul_int_promotes_to_float() {
+        let a = Tensor::from_slice(&[1i64, 2, 3, 4], [2, 2]);
+        let c = a.matmul(&a);
+        assert_eq!(c.dtype(), DType::F32);
+        assert_eq!(c.to_vec(), vec![7.0, 10.0, 15.0, 22.0]);
+    }
+
+    #[test]
+    fn matmul_large_against_naive() {
+        crate::util::rng::seed(7);
+        let (m, k, n) = (33, 47, 29);
+        let a = Tensor::rand([m, k], -1.0, 1.0);
+        let b = Tensor::rand([k, n], -1.0, 1.0);
+        let c = a.matmul(&b).to_vec();
+        let (av, bv) = (a.to_vec(), b.to_vec());
+        for i in 0..m {
+            for j in 0..n {
+                let mut acc = 0.0f64;
+                for l in 0..k {
+                    acc += av[i * k + l] as f64 * bv[l * n + j] as f64;
+                }
+                assert!((c[i * n + j] as f64 - acc).abs() < 1e-3, "({i},{j})");
+            }
+        }
+    }
+}

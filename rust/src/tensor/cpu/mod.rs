@@ -1,0 +1,825 @@
+//! The reference eager CPU backend (paper §4.1.1: "deliberately-compact
+//! default implementations").
+//!
+//! Storage is always contiguous row-major; structural ops copy rather than
+//! view (compactness over cleverness — the paper "deliberately abstains
+//! from adding small efficiency improvements if they conflict with keeping
+//! the codebase simple"). Hot loops (GEMM, conv, large maps) are
+//! parallelized over native threads; buffers come from the installed
+//! [`crate::memory::MemoryManagerAdapter`].
+
+pub mod conv;
+pub mod kernels;
+pub mod matmul;
+pub mod pool;
+pub mod reduce;
+pub mod shape_ops;
+
+use std::sync::Arc;
+
+use once_cell::sync::OnceCell;
+
+use super::adapter::TensorAdapter;
+use super::backend::{Conv2dParams, Pool2dParams, TensorBackend};
+use super::dtype::DType;
+use super::host::HostBuffer;
+use super::shape::Shape;
+use super::Tensor;
+use crate::memory::telemetry::OpScope;
+use crate::memory::TypedBuf;
+use crate::util::error::Result;
+use crate::util::rng::with_thread_rng;
+
+/// Dtype-dispatched storage (Bool shares the `U8` variant; the tensor's
+/// `dtype` field disambiguates).
+pub enum Storage {
+    /// f32 elements.
+    F32(TypedBuf<f32>),
+    /// f64 elements.
+    F64(TypedBuf<f64>),
+    /// i32 elements.
+    I32(TypedBuf<i32>),
+    /// i64 elements.
+    I64(TypedBuf<i64>),
+    /// u8 / bool elements.
+    U8(TypedBuf<u8>),
+}
+
+impl Storage {
+    /// Number of elements.
+    pub fn len(&self) -> usize {
+        match self {
+            Storage::F32(v) => v.len(),
+            Storage::F64(v) => v.len(),
+            Storage::I32(v) => v.len(),
+            Storage::I64(v) => v.len(),
+            Storage::U8(v) => v.len(),
+        }
+    }
+
+    /// Whether there are zero elements.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Variant's natural dtype (`U8` for bool storage).
+    pub fn natural_dtype(&self) -> DType {
+        match self {
+            Storage::F32(_) => DType::F32,
+            Storage::F64(_) => DType::F64,
+            Storage::I32(_) => DType::I32,
+            Storage::I64(_) => DType::I64,
+            Storage::U8(_) => DType::U8,
+        }
+    }
+}
+
+/// Expand `$body` with `$buf` bound to the typed buffer of each variant.
+macro_rules! dispatch {
+    ($s:expr, $buf:ident => $body:expr) => {
+        match $s {
+            Storage::F32($buf) => $body,
+            Storage::F64($buf) => $body,
+            Storage::I32($buf) => $body,
+            Storage::I64($buf) => $body,
+            Storage::U8($buf) => $body,
+        }
+    };
+}
+
+/// Like `dispatch!` but rebuilds the same variant from the expression.
+macro_rules! dispatch_same {
+    ($s:expr, $buf:ident => $body:expr) => {
+        match $s {
+            Storage::F32($buf) => Storage::F32($body),
+            Storage::F64($buf) => Storage::F64($body),
+            Storage::I32($buf) => Storage::I32($body),
+            Storage::I64($buf) => Storage::I64($body),
+            Storage::U8($buf) => Storage::U8($body),
+        }
+    };
+}
+
+pub(crate) use {dispatch, dispatch_same};
+
+/// The CPU backend's per-tensor adapter (paper Listing 1): contiguous
+/// storage + shape/type metadata.
+pub struct CpuTensor {
+    /// Shared contiguous storage (reshape is zero-copy).
+    pub storage: Arc<Storage>,
+    /// Logical shape.
+    pub shape: Shape,
+    /// Logical dtype (distinguishes Bool from U8).
+    pub dtype: DType,
+}
+
+impl Clone for CpuTensor {
+    fn clone(&self) -> Self {
+        CpuTensor { storage: self.storage.clone(), shape: self.shape.clone(), dtype: self.dtype }
+    }
+}
+
+impl TensorAdapter for CpuTensor {
+    fn shape(&self) -> &Shape {
+        &self.shape
+    }
+    fn dtype(&self) -> DType {
+        self.dtype
+    }
+    fn backend(&self) -> Arc<dyn TensorBackend> {
+        CpuBackend::shared()
+    }
+    fn to_host(&self) -> HostBuffer {
+        match &*self.storage {
+            Storage::F32(v) => HostBuffer::F32(v.as_slice().to_vec()),
+            Storage::F64(v) => HostBuffer::F64(v.as_slice().to_vec()),
+            Storage::I32(v) => HostBuffer::I32(v.as_slice().to_vec()),
+            Storage::I64(v) => HostBuffer::I64(v.as_slice().to_vec()),
+            Storage::U8(v) => HostBuffer::U8(v.as_slice().to_vec(), self.dtype == DType::Bool),
+        }
+    }
+    fn as_any(&self) -> &dyn std::any::Any {
+        self
+    }
+}
+
+/// Wrap storage into a public tensor handle.
+pub fn wrap(storage: Storage, shape: Shape, dtype: DType) -> Tensor {
+    debug_assert_eq!(storage.len(), shape.numel(), "storage/shape mismatch");
+    Tensor::from_adapter(Arc::new(CpuTensor { storage: Arc::new(storage), shape, dtype }))
+}
+
+/// View a public tensor as a `CpuTensor`, converting through host memory
+/// when it belongs to a different backend (cross-backend interop).
+pub fn cpu(t: &Tensor) -> CpuTensor {
+    if let Some(c) = t.adapter().as_any().downcast_ref::<CpuTensor>() {
+        return c.clone();
+    }
+    let host = t.to_host();
+    from_host_storage(host, t.shape().clone())
+}
+
+fn from_host_storage(host: HostBuffer, shape: Shape) -> CpuTensor {
+    let dtype = host.dtype();
+    let storage = match host {
+        HostBuffer::F32(v) => Storage::F32(TypedBuf::from_slice(&v)),
+        HostBuffer::F64(v) => Storage::F64(TypedBuf::from_slice(&v)),
+        HostBuffer::I32(v) => Storage::I32(TypedBuf::from_slice(&v)),
+        HostBuffer::I64(v) => Storage::I64(TypedBuf::from_slice(&v)),
+        HostBuffer::U8(v, _) => Storage::U8(TypedBuf::from_slice(&v)),
+    };
+    CpuTensor { storage: Arc::new(storage), shape, dtype }
+}
+
+/// Cast a `CpuTensor`'s storage to `to` (identity when already there).
+pub fn cast(x: &CpuTensor, to: DType) -> CpuTensor {
+    if x.dtype == to {
+        return x.clone();
+    }
+    let storage = match to {
+        DType::F32 => {
+            Storage::F32(dispatch!(&*x.storage, v => kernels::map1(v, |e| e as f32)))
+        }
+        DType::F64 => {
+            Storage::F64(dispatch!(&*x.storage, v => kernels::map1(v, |e| e as f64)))
+        }
+        DType::I32 => {
+            Storage::I32(dispatch!(&*x.storage, v => kernels::map1(v, |e| e as i32)))
+        }
+        DType::I64 => {
+            Storage::I64(dispatch!(&*x.storage, v => kernels::map1(v, |e| e as i64)))
+        }
+        DType::U8 => Storage::U8(dispatch!(&*x.storage, v => kernels::map1(v, |e| e as u8))),
+        DType::Bool => Storage::U8(
+            dispatch!(&*x.storage, v => kernels::map1(v, |e| ((e as f64) != 0.0) as u8)),
+        ),
+    };
+    CpuTensor { storage: Arc::new(storage), shape: x.shape.clone(), dtype: to }
+}
+
+/// Promote both operands to their common dtype.
+pub fn promote_pair(a: &Tensor, b: &Tensor) -> (CpuTensor, CpuTensor, DType) {
+    let (ca, cb) = (cpu(a), cpu(b));
+    let d = ca.dtype.promote(cb.dtype);
+    (cast(&ca, d), cast(&cb, d), d)
+}
+
+/// Promote a tensor to floating point (f32 unless already f64).
+pub fn to_float(x: CpuTensor) -> CpuTensor {
+    match x.dtype {
+        DType::F32 | DType::F64 => x,
+        _ => cast(&x, DType::F32),
+    }
+}
+
+/// f32-native erf (same A&S 7.1.26 polynomial; |err| < ~3e-7 in f32) —
+/// the f32 hot path avoids the f64 `exp` that dominated the composed
+/// gelu's cost (EXPERIMENTS.md §Perf L3.1).
+#[inline]
+pub fn erf_f32(x: f32) -> f32 {
+    let sign = if x < 0.0 { -1.0f32 } else { 1.0 };
+    let x = x.abs();
+    let t = 1.0 / (1.0 + 0.3275911 * x);
+    let y = 1.0
+        - (((((1.061405429 * t - 1.453152027) * t) + 1.421413741) * t - 0.284496736) * t
+            + 0.254829592)
+            * t
+            * (-x * x).exp();
+    sign * y
+}
+
+/// Abramowitz & Stegun 7.1.26 rational approximation of erf (|err| < 1.5e-7).
+pub fn erf_scalar(x: f64) -> f64 {
+    let sign = if x < 0.0 { -1.0 } else { 1.0 };
+    let x = x.abs();
+    let t = 1.0 / (1.0 + 0.3275911 * x);
+    let y = 1.0
+        - (((((1.061405429 * t - 1.453152027) * t) + 1.421413741) * t - 0.284496736) * t
+            + 0.254829592)
+            * t
+            * (-x * x).exp();
+    sign * y
+}
+
+/// Same-variant broadcasting arithmetic: `$ff` runs on float variants,
+/// `$fi` on integer variants (after dtype promotion both operands share a
+/// variant).
+macro_rules! binop {
+    ($name:literal, $a:expr, $b:expr, $ff:expr, $fi:expr) => {{
+        let _g = OpScope::enter($name);
+        let (ca, cb, d) = promote_pair($a, $b);
+        let out_shape = ca.shape.broadcast(&cb.shape).expect("binop broadcast");
+        let storage = match (&*ca.storage, &*cb.storage) {
+            (Storage::F32(x), Storage::F32(y)) => {
+                Storage::F32(kernels::map2(x, &ca.shape, y, &cb.shape, &out_shape, $ff))
+            }
+            (Storage::F64(x), Storage::F64(y)) => {
+                Storage::F64(kernels::map2(x, &ca.shape, y, &cb.shape, &out_shape, $ff))
+            }
+            (Storage::I32(x), Storage::I32(y)) => {
+                Storage::I32(kernels::map2(x, &ca.shape, y, &cb.shape, &out_shape, $fi))
+            }
+            (Storage::I64(x), Storage::I64(y)) => {
+                Storage::I64(kernels::map2(x, &ca.shape, y, &cb.shape, &out_shape, $fi))
+            }
+            (Storage::U8(x), Storage::U8(y)) => {
+                Storage::U8(kernels::map2(x, &ca.shape, y, &cb.shape, &out_shape, $fi))
+            }
+            _ => unreachable!("promote_pair produced mismatched variants"),
+        };
+        wrap(storage, out_shape, d)
+    }};
+}
+
+/// Broadcasting comparison: closure returns bool, result dtype Bool.
+macro_rules! cmpop {
+    ($name:literal, $a:expr, $b:expr, $f:expr) => {{
+        let _g = OpScope::enter($name);
+        let (ca, cb, _) = promote_pair($a, $b);
+        let out_shape = ca.shape.broadcast(&cb.shape).expect("cmp broadcast");
+        let f = $f;
+        let buf = match (&*ca.storage, &*cb.storage) {
+            (Storage::F32(x), Storage::F32(y)) => {
+                kernels::map2(x, &ca.shape, y, &cb.shape, &out_shape, |a, b| f(a as f64, b as f64) as u8)
+            }
+            (Storage::F64(x), Storage::F64(y)) => {
+                kernels::map2(x, &ca.shape, y, &cb.shape, &out_shape, |a, b| f(a, b) as u8)
+            }
+            (Storage::I32(x), Storage::I32(y)) => {
+                kernels::map2(x, &ca.shape, y, &cb.shape, &out_shape, |a, b| f(a as f64, b as f64) as u8)
+            }
+            (Storage::I64(x), Storage::I64(y)) => {
+                kernels::map2(x, &ca.shape, y, &cb.shape, &out_shape, |a, b| f(a as f64, b as f64) as u8)
+            }
+            (Storage::U8(x), Storage::U8(y)) => {
+                kernels::map2(x, &ca.shape, y, &cb.shape, &out_shape, |a, b| f(a as f64, b as f64) as u8)
+            }
+            _ => unreachable!(),
+        };
+        wrap(Storage::U8(buf), out_shape, DType::Bool)
+    }};
+}
+
+/// Float unary op (integer inputs promote to f32).
+macro_rules! unary_float {
+    ($name:literal, $x:expr, $f:expr) => {{
+        let _g = OpScope::enter($name);
+        let cx = to_float(cpu($x));
+        let storage = match &*cx.storage {
+            Storage::F32(v) => Storage::F32(kernels::map1(v, $f)),
+            Storage::F64(v) => Storage::F64(kernels::map1(v, $f)),
+            _ => unreachable!("to_float returned non-float"),
+        };
+        wrap(storage, cx.shape.clone(), cx.dtype)
+    }};
+}
+
+/// The reference eager backend (stateless; all instances share storage
+/// semantics, `shared()` returns the canonical Arc).
+pub struct CpuBackend;
+
+impl CpuBackend {
+    /// Create an instance (stateless).
+    pub fn new() -> Self {
+        CpuBackend
+    }
+
+    /// The canonical shared instance used by adapters.
+    pub fn shared() -> Arc<dyn TensorBackend> {
+        static INST: OnceCell<Arc<CpuBackend>> = OnceCell::new();
+        INST.get_or_init(|| Arc::new(CpuBackend)).clone() as Arc<dyn TensorBackend>
+    }
+}
+
+impl Default for CpuBackend {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl TensorBackend for CpuBackend {
+    fn name(&self) -> &str {
+        "cpu"
+    }
+
+    // ---- creation -------------------------------------------------------
+
+    fn full(&self, shape: &Shape, value: f64, dtype: DType) -> Tensor {
+        let n = shape.numel();
+        let storage = match dtype {
+            DType::F32 => Storage::F32(TypedBuf::from_fn(n, |_| value as f32)),
+            DType::F64 => Storage::F64(TypedBuf::from_fn(n, |_| value)),
+            DType::I32 => Storage::I32(TypedBuf::from_fn(n, |_| value as i32)),
+            DType::I64 => Storage::I64(TypedBuf::from_fn(n, |_| value as i64)),
+            DType::U8 => Storage::U8(TypedBuf::from_fn(n, |_| value as u8)),
+            DType::Bool => Storage::U8(TypedBuf::from_fn(n, |_| (value != 0.0) as u8)),
+        };
+        wrap(storage, shape.clone(), dtype)
+    }
+
+    fn arange(&self, n: usize, dtype: DType) -> Tensor {
+        let storage = match dtype {
+            DType::F32 => Storage::F32(TypedBuf::from_fn(n, |i| i as f32)),
+            DType::F64 => Storage::F64(TypedBuf::from_fn(n, |i| i as f64)),
+            DType::I32 => Storage::I32(TypedBuf::from_fn(n, |i| i as i32)),
+            DType::I64 => Storage::I64(TypedBuf::from_fn(n, |i| i as i64)),
+            DType::U8 => Storage::U8(TypedBuf::from_fn(n, |i| i as u8)),
+            DType::Bool => Storage::U8(TypedBuf::from_fn(n, |i| (i != 0) as u8)),
+        };
+        wrap(storage, Shape::new(vec![n]), dtype)
+    }
+
+    fn rand_uniform(&self, shape: &Shape, lo: f64, hi: f64, dtype: DType) -> Tensor {
+        let n = shape.numel();
+        let vals: Vec<f64> = with_thread_rng(|r| (0..n).map(|_| r.uniform_range(lo, hi)).collect());
+        let host = HostBuffer::F64(vals).cast(dtype);
+        self.from_host(host, shape.clone())
+    }
+
+    fn rand_normal(&self, shape: &Shape, mean: f64, std: f64, dtype: DType) -> Tensor {
+        let n = shape.numel();
+        let vals: Vec<f64> = with_thread_rng(|r| (0..n).map(|_| mean + std * r.normal()).collect());
+        let host = HostBuffer::F64(vals).cast(dtype);
+        self.from_host(host, shape.clone())
+    }
+
+    fn from_host(&self, host: HostBuffer, shape: Shape) -> Tensor {
+        assert_eq!(host.len(), shape.numel(), "host data length != shape numel");
+        let c = from_host_storage(host, shape);
+        Tensor::from_adapter(Arc::new(c))
+    }
+
+    // ---- unary ----------------------------------------------------------
+
+    fn neg(&self, x: &Tensor) -> Tensor {
+        let _g = OpScope::enter("neg");
+        let cx = cpu(x);
+        let storage = match &*cx.storage {
+            Storage::F32(v) => Storage::F32(kernels::map1(v, |e| -e)),
+            Storage::F64(v) => Storage::F64(kernels::map1(v, |e| -e)),
+            Storage::I32(v) => Storage::I32(kernels::map1(v, |e| e.wrapping_neg())),
+            Storage::I64(v) => Storage::I64(kernels::map1(v, |e| e.wrapping_neg())),
+            Storage::U8(v) => Storage::U8(kernels::map1(v, |e| e.wrapping_neg())),
+        };
+        wrap(storage, cx.shape.clone(), cx.dtype)
+    }
+
+    fn abs(&self, x: &Tensor) -> Tensor {
+        let _g = OpScope::enter("abs");
+        let cx = cpu(x);
+        let storage = match &*cx.storage {
+            Storage::F32(v) => Storage::F32(kernels::map1(v, |e| e.abs())),
+            Storage::F64(v) => Storage::F64(kernels::map1(v, |e| e.abs())),
+            Storage::I32(v) => Storage::I32(kernels::map1(v, |e| e.wrapping_abs())),
+            Storage::I64(v) => Storage::I64(kernels::map1(v, |e| e.wrapping_abs())),
+            Storage::U8(v) => Storage::U8(kernels::map1(v, |e| e)),
+        };
+        wrap(storage, cx.shape.clone(), cx.dtype)
+    }
+
+    fn sign(&self, x: &Tensor) -> Tensor {
+        let _g = OpScope::enter("sign");
+        let cx = cpu(x);
+        let storage = match &*cx.storage {
+            Storage::F32(v) => {
+                Storage::F32(kernels::map1(v, |e| if e > 0.0 { 1.0 } else if e < 0.0 { -1.0 } else { 0.0 }))
+            }
+            Storage::F64(v) => {
+                Storage::F64(kernels::map1(v, |e| if e > 0.0 { 1.0 } else if e < 0.0 { -1.0 } else { 0.0 }))
+            }
+            Storage::I32(v) => Storage::I32(kernels::map1(v, |e| e.signum())),
+            Storage::I64(v) => Storage::I64(kernels::map1(v, |e| e.signum())),
+            Storage::U8(v) => Storage::U8(kernels::map1(v, |e| (e != 0) as u8)),
+        };
+        wrap(storage, cx.shape.clone(), cx.dtype)
+    }
+
+    fn exp(&self, x: &Tensor) -> Tensor {
+        unary_float!("exp", x, |e| e.exp())
+    }
+    fn log(&self, x: &Tensor) -> Tensor {
+        unary_float!("log", x, |e| e.ln())
+    }
+    fn log1p(&self, x: &Tensor) -> Tensor {
+        unary_float!("log1p", x, |e| e.ln_1p())
+    }
+    fn sin(&self, x: &Tensor) -> Tensor {
+        unary_float!("sin", x, |e| e.sin())
+    }
+    fn cos(&self, x: &Tensor) -> Tensor {
+        unary_float!("cos", x, |e| e.cos())
+    }
+    fn tanh(&self, x: &Tensor) -> Tensor {
+        unary_float!("tanh", x, |e| e.tanh())
+    }
+    fn sqrt(&self, x: &Tensor) -> Tensor {
+        unary_float!("sqrt", x, |e| e.sqrt())
+    }
+    fn rsqrt(&self, x: &Tensor) -> Tensor {
+        unary_float!("rsqrt", x, |e| e.sqrt().recip())
+    }
+    fn reciprocal(&self, x: &Tensor) -> Tensor {
+        unary_float!("reciprocal", x, |e| e.recip())
+    }
+    fn floor(&self, x: &Tensor) -> Tensor {
+        unary_float!("floor", x, |e| e.floor())
+    }
+    fn ceil(&self, x: &Tensor) -> Tensor {
+        unary_float!("ceil", x, |e| e.ceil())
+    }
+    fn round(&self, x: &Tensor) -> Tensor {
+        unary_float!("round", x, |e| e.round())
+    }
+
+    fn erf(&self, x: &Tensor) -> Tensor {
+        let _g = OpScope::enter("erf");
+        let cx = to_float(cpu(x));
+        let storage = match &*cx.storage {
+            Storage::F32(v) => Storage::F32(kernels::map1(v, erf_f32)),
+            Storage::F64(v) => Storage::F64(kernels::map1(v, erf_scalar)),
+            _ => unreachable!(),
+        };
+        wrap(storage, cx.shape.clone(), cx.dtype)
+    }
+
+    fn logical_not(&self, x: &Tensor) -> Tensor {
+        let _g = OpScope::enter("logical_not");
+        let cx = cpu(x);
+        let buf = dispatch!(&*cx.storage, v => kernels::map1(v, |e| ((e as f64) == 0.0) as u8));
+        wrap(Storage::U8(buf), cx.shape.clone(), DType::Bool)
+    }
+
+    fn isnan(&self, x: &Tensor) -> Tensor {
+        let _g = OpScope::enter("isnan");
+        let cx = cpu(x);
+        let buf = match &*cx.storage {
+            Storage::F32(v) => kernels::map1(v, |e| e.is_nan() as u8),
+            Storage::F64(v) => kernels::map1(v, |e| e.is_nan() as u8),
+            s => dispatch!(s, v => kernels::map1(v, |_e| 0u8)),
+        };
+        wrap(Storage::U8(buf), cx.shape.clone(), DType::Bool)
+    }
+
+    fn clip(&self, x: &Tensor, lo: f64, hi: f64) -> Tensor {
+        let _g = OpScope::enter("clip");
+        let cx = cpu(x);
+        let storage = match &*cx.storage {
+            Storage::F32(v) => {
+                Storage::F32(kernels::map1(v, |e| e.clamp(lo as f32, hi as f32)))
+            }
+            Storage::F64(v) => Storage::F64(kernels::map1(v, |e| e.clamp(lo, hi))),
+            Storage::I32(v) => {
+                Storage::I32(kernels::map1(v, |e| e.clamp(lo as i32, hi as i32)))
+            }
+            Storage::I64(v) => {
+                Storage::I64(kernels::map1(v, |e| e.clamp(lo as i64, hi as i64)))
+            }
+            Storage::U8(v) => {
+                Storage::U8(kernels::map1(v, |e| e.clamp(lo.max(0.0) as u8, hi.min(255.0) as u8)))
+            }
+        };
+        wrap(storage, cx.shape.clone(), cx.dtype)
+    }
+
+    // ---- binary ----------------------------------------------------------
+
+    fn add(&self, a: &Tensor, b: &Tensor) -> Tensor {
+        binop!("add", a, b, |x, y| x + y, |x, y| x.wrapping_add(y))
+    }
+    fn sub(&self, a: &Tensor, b: &Tensor) -> Tensor {
+        binop!("sub", a, b, |x, y| x - y, |x, y| x.wrapping_sub(y))
+    }
+    fn mul(&self, a: &Tensor, b: &Tensor) -> Tensor {
+        binop!("mul", a, b, |x, y| x * y, |x, y| x.wrapping_mul(y))
+    }
+    fn div(&self, a: &Tensor, b: &Tensor) -> Tensor {
+        binop!("div", a, b, |x, y| x / y, |x, y| if y == 0 { 0 } else { x.wrapping_div(y) })
+    }
+    fn pow(&self, a: &Tensor, b: &Tensor) -> Tensor {
+        binop!(
+            "pow",
+            a,
+            b,
+            |x, y| x.powf(y),
+            |x, y| ((x as f64).powf(y as f64)) as _
+        )
+    }
+    fn minimum(&self, a: &Tensor, b: &Tensor) -> Tensor {
+        binop!("minimum", a, b, |x, y| x.min(y), |x, y| x.min(y))
+    }
+    fn maximum(&self, a: &Tensor, b: &Tensor) -> Tensor {
+        binop!("maximum", a, b, |x, y| x.max(y), |x, y| x.max(y))
+    }
+    fn rem(&self, a: &Tensor, b: &Tensor) -> Tensor {
+        binop!("rem", a, b, |x, y| x % y, |x, y| if y == 0 { 0 } else { x % y })
+    }
+
+    // ---- comparison --------------------------------------------------------
+
+    fn eq(&self, a: &Tensor, b: &Tensor) -> Tensor {
+        cmpop!("eq", a, b, |x: f64, y: f64| x == y)
+    }
+    fn neq(&self, a: &Tensor, b: &Tensor) -> Tensor {
+        cmpop!("neq", a, b, |x: f64, y: f64| x != y)
+    }
+    fn lt(&self, a: &Tensor, b: &Tensor) -> Tensor {
+        cmpop!("lt", a, b, |x: f64, y: f64| x < y)
+    }
+    fn le(&self, a: &Tensor, b: &Tensor) -> Tensor {
+        cmpop!("le", a, b, |x: f64, y: f64| x <= y)
+    }
+    fn gt(&self, a: &Tensor, b: &Tensor) -> Tensor {
+        cmpop!("gt", a, b, |x: f64, y: f64| x > y)
+    }
+    fn ge(&self, a: &Tensor, b: &Tensor) -> Tensor {
+        cmpop!("ge", a, b, |x: f64, y: f64| x >= y)
+    }
+    fn logical_and(&self, a: &Tensor, b: &Tensor) -> Tensor {
+        cmpop!("logical_and", a, b, |x: f64, y: f64| x != 0.0 && y != 0.0)
+    }
+    fn logical_or(&self, a: &Tensor, b: &Tensor) -> Tensor {
+        cmpop!("logical_or", a, b, |x: f64, y: f64| x != 0.0 || y != 0.0)
+    }
+
+    // ---- reductions -----------------------------------------------------------
+
+    fn sum(&self, x: &Tensor, axes: &[usize], keepdims: bool) -> Tensor {
+        let _g = OpScope::enter("sum");
+        reduce::sum(&cpu(x), axes, keepdims)
+    }
+    fn prod(&self, x: &Tensor, axes: &[usize], keepdims: bool) -> Tensor {
+        let _g = OpScope::enter("prod");
+        reduce::prod(&cpu(x), axes, keepdims)
+    }
+    fn max_reduce(&self, x: &Tensor, axes: &[usize], keepdims: bool) -> Tensor {
+        let _g = OpScope::enter("max_reduce");
+        reduce::max(&cpu(x), axes, keepdims)
+    }
+    fn min_reduce(&self, x: &Tensor, axes: &[usize], keepdims: bool) -> Tensor {
+        let _g = OpScope::enter("min_reduce");
+        reduce::min(&cpu(x), axes, keepdims)
+    }
+    fn argmax(&self, x: &Tensor, axis: usize, keepdims: bool) -> Tensor {
+        let _g = OpScope::enter("argmax");
+        reduce::argminmax(&cpu(x), axis, keepdims, true)
+    }
+    fn argmin(&self, x: &Tensor, axis: usize, keepdims: bool) -> Tensor {
+        let _g = OpScope::enter("argmin");
+        reduce::argminmax(&cpu(x), axis, keepdims, false)
+    }
+    fn any(&self, x: &Tensor, axes: &[usize], keepdims: bool) -> Tensor {
+        let _g = OpScope::enter("any");
+        reduce::any_all(&cpu(x), axes, keepdims, false)
+    }
+    fn all(&self, x: &Tensor, axes: &[usize], keepdims: bool) -> Tensor {
+        let _g = OpScope::enter("all");
+        reduce::any_all(&cpu(x), axes, keepdims, true)
+    }
+    fn cumsum(&self, x: &Tensor, axis: usize) -> Tensor {
+        let _g = OpScope::enter("cumsum");
+        reduce::cumsum(&cpu(x), axis)
+    }
+
+    // ---- linear algebra -----------------------------------------------------------
+
+    fn matmul(&self, a: &Tensor, b: &Tensor) -> Tensor {
+        let _g = OpScope::enter("matmul");
+        matmul::matmul(a, b)
+    }
+
+    // ---- nn primitives -----------------------------------------------------------
+
+    fn conv2d(&self, x: &Tensor, w: &Tensor, p: Conv2dParams) -> Tensor {
+        let _g = OpScope::enter("conv2d");
+        conv::conv2d(x, w, p)
+    }
+    fn conv2d_bwd_input(
+        &self,
+        grad_y: &Tensor,
+        w: &Tensor,
+        x_shape: &Shape,
+        p: Conv2dParams,
+    ) -> Tensor {
+        let _g = OpScope::enter("conv2d_bwd_input");
+        conv::conv2d_bwd_input(grad_y, w, x_shape, p)
+    }
+    fn conv2d_bwd_filter(
+        &self,
+        grad_y: &Tensor,
+        x: &Tensor,
+        w_shape: &Shape,
+        p: Conv2dParams,
+    ) -> Tensor {
+        let _g = OpScope::enter("conv2d_bwd_filter");
+        conv::conv2d_bwd_filter(grad_y, x, w_shape, p)
+    }
+    fn pool2d(&self, x: &Tensor, p: Pool2dParams) -> Tensor {
+        let _g = OpScope::enter("pool2d");
+        pool::pool2d(x, p)
+    }
+    fn pool2d_bwd(&self, grad_y: &Tensor, x: &Tensor, p: Pool2dParams) -> Tensor {
+        let _g = OpScope::enter("pool2d_bwd");
+        pool::pool2d_bwd(grad_y, x, p)
+    }
+
+    // ---- data movement -----------------------------------------------------------
+
+    fn reshape(&self, x: &Tensor, shape: &Shape) -> Tensor {
+        let cx = cpu(x);
+        assert_eq!(cx.shape.numel(), shape.numel(), "reshape numel mismatch");
+        // zero-copy: share storage under the new shape
+        Tensor::from_adapter(Arc::new(CpuTensor {
+            storage: cx.storage.clone(),
+            shape: shape.clone(),
+            dtype: cx.dtype,
+        }))
+    }
+    fn transpose(&self, x: &Tensor, perm: &[usize]) -> Tensor {
+        let _g = OpScope::enter("transpose");
+        shape_ops::transpose(&cpu(x), perm)
+    }
+    fn slice(&self, x: &Tensor, starts: &[usize], ends: &[usize]) -> Tensor {
+        let _g = OpScope::enter("slice");
+        shape_ops::slice(&cpu(x), starts, ends)
+    }
+    fn concat(&self, xs: &[&Tensor], axis: usize) -> Tensor {
+        let _g = OpScope::enter("concat");
+        shape_ops::concat(xs, axis)
+    }
+    fn pad(&self, x: &Tensor, pads: &[(usize, usize)], value: f64) -> Tensor {
+        let _g = OpScope::enter("pad");
+        shape_ops::pad(&cpu(x), pads, value)
+    }
+    fn tile(&self, x: &Tensor, reps: &[usize]) -> Tensor {
+        let _g = OpScope::enter("tile");
+        shape_ops::tile(&cpu(x), reps)
+    }
+    fn flip(&self, x: &Tensor, axes: &[usize]) -> Tensor {
+        let _g = OpScope::enter("flip");
+        shape_ops::flip(&cpu(x), axes)
+    }
+    fn index_select(&self, x: &Tensor, axis: usize, indices: &Tensor) -> Tensor {
+        let _g = OpScope::enter("index_select");
+        shape_ops::index_select(&cpu(x), axis, indices)
+    }
+    fn scatter_add(&self, base: &Tensor, indices: &Tensor, src: &Tensor) -> Tensor {
+        let _g = OpScope::enter("scatter_add");
+        shape_ops::scatter_add(base, indices, src)
+    }
+    fn where_cond(&self, cond: &Tensor, a: &Tensor, b: &Tensor) -> Tensor {
+        let _g = OpScope::enter("where_cond");
+        shape_ops::where_cond(cond, a, b)
+    }
+    fn astype(&self, x: &Tensor, dtype: DType) -> Tensor {
+        let cx = cpu(x);
+        let out = cast(&cx, dtype);
+        Tensor::from_adapter(Arc::new(out))
+    }
+    fn copy(&self, x: &Tensor) -> Tensor {
+        let _g = OpScope::enter("copy");
+        let cx = cpu(x);
+        let storage = dispatch_same!(&*cx.storage, v => v.clone());
+        wrap(storage, cx.shape.clone(), cx.dtype)
+    }
+
+    fn call_ext(&self, name: &str, _inputs: &[&Tensor]) -> Result<Tensor> {
+        Err(crate::util::error::Error::Unsupported {
+            backend: "cpu".into(),
+            op: format!("ext:{name}"),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dtype_promotion_in_binops() {
+        let a = Tensor::from_slice(&[1i32, 2], [2]);
+        let b = Tensor::from_slice(&[0.5f32, 0.5], [2]);
+        let c = a.add(&b);
+        assert_eq!(c.dtype(), DType::F32);
+        assert_eq!(c.to_vec(), vec![1.5, 2.5]);
+    }
+
+    #[test]
+    fn unary_int_promotes_to_float() {
+        let a = Tensor::from_slice(&[1i64, 2], [2]);
+        let e = a.exp();
+        assert_eq!(e.dtype(), DType::F32);
+        assert!((e.to_vec()[1] - std::f64::consts::E.powi(2) as f32).abs() < 1e-4);
+    }
+
+    #[test]
+    fn erf_accuracy() {
+        // reference values from scipy
+        for (x, want) in [(0.0, 0.0), (0.5, 0.5204998778), (1.0, 0.8427007929), (-2.0, -0.9953222650)]
+        {
+            assert!((erf_scalar(x) - want).abs() < 2e-7, "erf({x})");
+        }
+    }
+
+    #[test]
+    fn comparisons_yield_bool() {
+        let a = Tensor::from_slice(&[1.0f32, 2.0, 3.0], [3]);
+        let b = Tensor::from_slice(&[2.0f32, 2.0, 2.0], [3]);
+        let lt = a.lt(&b);
+        assert_eq!(lt.dtype(), DType::Bool);
+        assert_eq!(lt.to_vec(), vec![1.0, 0.0, 0.0]);
+        assert_eq!(a.ge(&b).to_vec(), vec![0.0, 1.0, 1.0]);
+        assert_eq!(a.eq(&b).to_vec(), vec![0.0, 1.0, 0.0]);
+    }
+
+    #[test]
+    fn div_by_zero_int_is_zero() {
+        let a = Tensor::from_slice(&[4i32, 9], [2]);
+        let b = Tensor::from_slice(&[0i32, 3], [2]);
+        assert_eq!(a.div(&b).to_vec_i64(), vec![0, 3]);
+    }
+
+    #[test]
+    fn clip_clamps() {
+        let a = Tensor::from_slice(&[-5.0f32, 0.5, 5.0], [3]);
+        assert_eq!(a.clip(-1.0, 1.0).to_vec(), vec![-1.0, 0.5, 1.0]);
+    }
+
+    #[test]
+    fn reshape_is_zero_copy() {
+        let a = Tensor::from_slice(&[1.0f32, 2.0, 3.0, 4.0], [2, 2]);
+        let b = a.reshape(&[4]);
+        assert_eq!(b.to_vec(), vec![1.0, 2.0, 3.0, 4.0]);
+        // both handles alive and consistent
+        assert_eq!(a.dims(), &[2, 2]);
+        assert_eq!(b.dims(), &[4]);
+    }
+
+    #[test]
+    fn rand_respects_bounds_and_dtype() {
+        crate::util::rng::seed(1234);
+        let u = Tensor::rand([1000], -2.0, 3.0);
+        let v = u.to_vec();
+        assert!(v.iter().all(|&x| (-2.0..3.0).contains(&x)));
+        let n = Tensor::randn([1000], 1.0, 0.5);
+        let mean = n.mean(&[], false).item();
+        assert!((mean - 1.0).abs() < 0.1, "mean {mean}");
+    }
+
+    #[test]
+    fn isnan_detects() {
+        let a = Tensor::from_slice(&[1.0f32, f32::NAN], [2]);
+        assert_eq!(a.isnan().to_vec(), vec![0.0, 1.0]);
+        let i = Tensor::from_slice(&[1i32, 2], [2]);
+        assert_eq!(i.isnan().to_vec(), vec![0.0, 0.0]);
+    }
+
+    #[test]
+    fn pow_int_and_float() {
+        let a = Tensor::from_slice(&[2.0f32, 3.0], [2]);
+        let b = Tensor::from_slice(&[3.0f32, 2.0], [2]);
+        assert_eq!(a.pow(&b).to_vec(), vec![8.0, 9.0]);
+        let ai = Tensor::from_slice(&[2i64, 3], [2]);
+        let bi = Tensor::from_slice(&[3i64, 2], [2]);
+        assert_eq!(ai.pow(&bi).to_vec_i64(), vec![8, 9]);
+    }
+}

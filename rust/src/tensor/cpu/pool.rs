@@ -1,0 +1,174 @@
+//! 2-D max/average pooling (NCHW), forward and backward.
+
+use crate::memory::TypedBuf;
+use crate::tensor::backend::{Pool2dParams, PoolKind};
+use crate::tensor::shape::Shape;
+use crate::tensor::{DType, Tensor};
+use crate::util::parallel::parallel_chunks;
+
+use super::conv::out_dim;
+use super::{cast, cpu, to_float, wrap, Storage};
+
+fn f32_view(t: &Tensor) -> (Vec<usize>, std::sync::Arc<Storage>) {
+    let c = cast(&to_float(cpu(t)), DType::F32);
+    (c.shape.dims().to_vec(), c.storage)
+}
+
+fn data(s: &Storage) -> &[f32] {
+    match s {
+        Storage::F32(v) => v.as_slice(),
+        _ => unreachable!(),
+    }
+}
+
+/// Forward pooling over `x [N,C,H,W]` (no padding; windows must fit with
+/// the given stride, trailing elements are dropped as in other frameworks).
+pub fn pool2d(x: &Tensor, p: Pool2dParams) -> Tensor {
+    let (xd, xs) = f32_view(x);
+    assert_eq!(xd.len(), 4, "pool2d input must be NCHW");
+    let (n, c, h, w) = (xd[0], xd[1], xd[2], xd[3]);
+    let (kh, kw) = p.kernel;
+    let (sh, sw) = p.stride;
+    let oh = out_dim(h, kh, sh, 0);
+    let ow = out_dim(w, kw, sw, 0);
+    let xv = data(&xs);
+    let mut out = TypedBuf::<f32>::zeroed(n * c * oh * ow);
+    let ov = out.as_mut_slice();
+    let ov_ptr = SendPtr(ov.as_mut_ptr());
+    parallel_chunks(n * c, 4, |lo, hi| {
+        let ov = ov_ptr;
+        for plane in lo..hi {
+            let src = &xv[plane * h * w..(plane + 1) * h * w];
+            for oy in 0..oh {
+                for ox in 0..ow {
+                    let mut acc = if matches!(p.kind, PoolKind::Max) { f32::NEG_INFINITY } else { 0.0 };
+                    for ky in 0..kh {
+                        for kx in 0..kw {
+                            let v = src[(oy * sh + ky) * w + (ox * sw + kx)];
+                            match p.kind {
+                                PoolKind::Max => acc = acc.max(v),
+                                PoolKind::Avg => acc += v,
+                            }
+                        }
+                    }
+                    if matches!(p.kind, PoolKind::Avg) {
+                        acc /= (kh * kw) as f32;
+                    }
+                    unsafe { *ov.0.add(plane * oh * ow + oy * ow + ox) = acc };
+                }
+            }
+        }
+    });
+    wrap(Storage::F32(out), Shape::new(vec![n, c, oh, ow]), DType::F32)
+}
+
+#[derive(Clone, Copy)]
+struct SendPtr(*mut f32);
+unsafe impl Send for SendPtr {}
+unsafe impl Sync for SendPtr {}
+
+/// Backward pooling: max routes the gradient to the (first) argmax element
+/// of each window (re-derived from `x`); avg spreads it uniformly.
+pub fn pool2d_bwd(grad_y: &Tensor, x: &Tensor, p: Pool2dParams) -> Tensor {
+    let (xd, xs) = f32_view(x);
+    let (gd, gs) = f32_view(grad_y);
+    let (n, c, h, w) = (xd[0], xd[1], xd[2], xd[3]);
+    let (oh, ow) = (gd[2], gd[3]);
+    let (kh, kw) = p.kernel;
+    let (sh, sw) = p.stride;
+    let xv = data(&xs);
+    let gv = data(&gs);
+    let mut dx = TypedBuf::<f32>::zeroed(n * c * h * w);
+    let dptr = SendPtr(dx.as_mut_slice().as_mut_ptr());
+    parallel_chunks(n * c, 4, |lo, hi| {
+        let d = dptr;
+        for plane in lo..hi {
+            let src = &xv[plane * h * w..(plane + 1) * h * w];
+            let g = &gv[plane * oh * ow..(plane + 1) * oh * ow];
+            for oy in 0..oh {
+                for ox in 0..ow {
+                    let go = g[oy * ow + ox];
+                    match p.kind {
+                        PoolKind::Max => {
+                            let (mut by, mut bx, mut bv) = (0usize, 0usize, f32::NEG_INFINITY);
+                            for ky in 0..kh {
+                                for kx in 0..kw {
+                                    let v = src[(oy * sh + ky) * w + (ox * sw + kx)];
+                                    if v > bv {
+                                        bv = v;
+                                        by = ky;
+                                        bx = kx;
+                                    }
+                                }
+                            }
+                            let idx = plane * h * w + (oy * sh + by) * w + (ox * sw + bx);
+                            unsafe { *d.0.add(idx) += go };
+                        }
+                        PoolKind::Avg => {
+                            let share = go / (kh * kw) as f32;
+                            for ky in 0..kh {
+                                for kx in 0..kw {
+                                    let idx = plane * h * w + (oy * sh + ky) * w + (ox * sw + kx);
+                                    unsafe { *d.0.add(idx) += share };
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    });
+    wrap(Storage::F32(dx), Shape::new(vec![n, c, h, w]), DType::F32)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn maxpool_2x2() {
+        let x = Tensor::from_slice(
+            &[1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0, 8.0, 9.0, 10.0, 11.0, 12.0, 13.0, 14.0, 15.0, 16.0],
+            [1, 1, 4, 4],
+        );
+        let p = Pool2dParams { kind: PoolKind::Max, kernel: (2, 2), stride: (2, 2) };
+        let y = pool2d(&x, p);
+        assert_eq!(y.dims(), &[1, 1, 2, 2]);
+        assert_eq!(y.to_vec(), vec![6.0, 8.0, 14.0, 16.0]);
+    }
+
+    #[test]
+    fn avgpool_2x2() {
+        let x = Tensor::from_slice(&[1.0f32, 3.0, 5.0, 7.0], [1, 1, 2, 2]);
+        let p = Pool2dParams { kind: PoolKind::Avg, kernel: (2, 2), stride: (2, 2) };
+        assert_eq!(pool2d(&x, p).to_vec(), vec![4.0]);
+    }
+
+    #[test]
+    fn maxpool_bwd_routes_to_argmax() {
+        let x = Tensor::from_slice(&[1.0f32, 9.0, 2.0, 3.0], [1, 1, 2, 2]);
+        let p = Pool2dParams { kind: PoolKind::Max, kernel: (2, 2), stride: (2, 2) };
+        let gy = Tensor::from_slice(&[5.0f32], [1, 1, 1, 1]);
+        let dx = pool2d_bwd(&gy, &x, p);
+        assert_eq!(dx.to_vec(), vec![0.0, 5.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn avgpool_bwd_spreads() {
+        let x = Tensor::ones([1, 1, 2, 2]);
+        let p = Pool2dParams { kind: PoolKind::Avg, kernel: (2, 2), stride: (2, 2) };
+        let gy = Tensor::from_slice(&[8.0f32], [1, 1, 1, 1]);
+        let dx = pool2d_bwd(&gy, &x, p);
+        assert_eq!(dx.to_vec(), vec![2.0, 2.0, 2.0, 2.0]);
+    }
+
+    #[test]
+    fn strided_pool_drops_tail() {
+        // 5x5 with 2x2 kernel stride 2 -> 2x2 output (last row/col dropped)
+        let x = Tensor::arange(25, DType::F32).reshape(&[1, 1, 5, 5]);
+        let p = Pool2dParams { kind: PoolKind::Max, kernel: (2, 2), stride: (2, 2) };
+        let y = pool2d(&x, p);
+        assert_eq!(y.dims(), &[1, 1, 2, 2]);
+        assert_eq!(y.to_vec(), vec![6.0, 8.0, 16.0, 18.0]);
+    }
+}

@@ -1,0 +1,289 @@
+//! Reductions for the CPU backend.
+//!
+//! Floating-point reductions accumulate in f64 (precision over speed for
+//! the reference implementation); integer reductions accumulate in i64.
+//! The common case — reducing over trailing axes, e.g. softmax's row sums —
+//! takes a parallel contiguous-segment fast path.
+
+use crate::memory::TypedBuf;
+use crate::tensor::dtype::DType;
+use crate::tensor::shape::Shape;
+use crate::tensor::Tensor;
+use crate::util::parallel::{parallel_fill, PAR_THRESHOLD};
+
+use super::{cpu, wrap, CpuTensor, Storage};
+
+/// Are `axes` exactly the trailing dims of a rank-`rank` shape?
+fn is_trailing(axes: &[usize], rank: usize) -> bool {
+    !axes.is_empty() && axes.iter().rev().enumerate().all(|(i, &a)| a == rank - 1 - i)
+}
+
+/// Generic reduction core. `load` lifts an element into the accumulator
+/// domain, `fold` combines, `store` lowers the result.
+fn reduce_generic<T, A>(
+    x: &[T],
+    shape: &Shape,
+    axes: &[usize],
+    keepdims: bool,
+    init: A,
+    load: impl Fn(T) -> A + Sync,
+    fold: impl Fn(A, A) -> A + Sync,
+    store: impl Fn(A) -> T + Sync,
+) -> (TypedBuf<T>, Shape)
+where
+    T: Copy + Default + Send + Sync,
+    A: Copy + Send + Sync,
+{
+    let out_shape_flat = shape.reduce(axes, false);
+    let out_shape = shape.reduce(axes, keepdims);
+    let out_n = out_shape_flat.numel().max(1);
+    let mut out = TypedBuf::<T>::zeroed(out_n);
+
+    if is_trailing(axes, shape.rank()) || axes.len() == shape.rank() {
+        // contiguous segments: out[i] = fold(x[i*seg .. (i+1)*seg])
+        let seg = if out_n == 0 { 0 } else { x.len() / out_n };
+        parallel_fill(out.as_mut_slice(), PAR_THRESHOLD / seg.max(1), |base, chunk| {
+            for (i, slot) in chunk.iter_mut().enumerate() {
+                let row = &x[(base + i) * seg..(base + i + 1) * seg];
+                let mut acc = init;
+                for &v in row {
+                    acc = fold(acc, load(v));
+                }
+                *slot = store(acc);
+            }
+        });
+        return (out, out_shape);
+    }
+
+    // general case: accumulate with an input odometer mapped to out offsets
+    let out_strides_flat = out_shape_flat.strides();
+    let mut ostride = vec![0usize; shape.rank()];
+    let mut oi = 0usize;
+    for d in 0..shape.rank() {
+        if axes.contains(&d) {
+            ostride[d] = 0;
+        } else {
+            ostride[d] = out_strides_flat[oi];
+            oi += 1;
+        }
+    }
+    let mut acc = vec![init; out_n];
+    let dims = shape.dims();
+    let rank = dims.len();
+    let mut idx = vec![0usize; rank];
+    let mut off = 0usize;
+    for &v in x {
+        acc[off] = fold(acc[off], load(v));
+        for d in (0..rank).rev() {
+            idx[d] += 1;
+            off += ostride[d];
+            if idx[d] < dims[d] {
+                break;
+            }
+            idx[d] = 0;
+            off -= ostride[d] * dims[d];
+        }
+    }
+    for (slot, a) in out.as_mut_slice().iter_mut().zip(acc) {
+        *slot = store(a);
+    }
+    (out, out_shape)
+}
+
+macro_rules! reduce_dispatch {
+    ($x:expr, $axes:expr, $keep:expr, $initf:expr, $ff:expr, $initi:expr, $fi:expr) => {{
+        let x = $x;
+        let (storage, shape) = match &*x.storage {
+            Storage::F32(v) => {
+                let (b, s) = reduce_generic(v, &x.shape, $axes, $keep, $initf, |e| e as f64, $ff, |a| a as f32);
+                (Storage::F32(b), s)
+            }
+            Storage::F64(v) => {
+                let (b, s) = reduce_generic(v, &x.shape, $axes, $keep, $initf, |e| e, $ff, |a| a);
+                (Storage::F64(b), s)
+            }
+            Storage::I32(v) => {
+                let (b, s) = reduce_generic(v, &x.shape, $axes, $keep, $initi, |e| e as i64, $fi, |a| a as i32);
+                (Storage::I32(b), s)
+            }
+            Storage::I64(v) => {
+                let (b, s) = reduce_generic(v, &x.shape, $axes, $keep, $initi, |e| e, $fi, |a| a);
+                (Storage::I64(b), s)
+            }
+            Storage::U8(v) => {
+                let (b, s) = reduce_generic(v, &x.shape, $axes, $keep, $initi, |e| e as i64, $fi, |a| a as u8);
+                (Storage::U8(b), s)
+            }
+        };
+        wrap(storage, shape, x.dtype)
+    }};
+}
+
+/// Sum over `axes`.
+pub fn sum(x: &CpuTensor, axes: &[usize], keepdims: bool) -> Tensor {
+    reduce_dispatch!(x, axes, keepdims, 0.0f64, |a, b| a + b, 0i64, |a: i64, b: i64| a.wrapping_add(b))
+}
+
+/// Product over `axes`.
+pub fn prod(x: &CpuTensor, axes: &[usize], keepdims: bool) -> Tensor {
+    reduce_dispatch!(x, axes, keepdims, 1.0f64, |a, b| a * b, 1i64, |a: i64, b: i64| a.wrapping_mul(b))
+}
+
+/// Max over `axes`.
+pub fn max(x: &CpuTensor, axes: &[usize], keepdims: bool) -> Tensor {
+    reduce_dispatch!(x, axes, keepdims, f64::NEG_INFINITY, |a: f64, b: f64| a.max(b), i64::MIN, |a: i64, b: i64| a.max(b))
+}
+
+/// Min over `axes`.
+pub fn min(x: &CpuTensor, axes: &[usize], keepdims: bool) -> Tensor {
+    reduce_dispatch!(x, axes, keepdims, f64::INFINITY, |a: f64, b: f64| a.min(b), i64::MAX, |a: i64, b: i64| a.min(b))
+}
+
+/// Logical any (`and=false`) / all (`and=true`) over `axes` (Bool result).
+pub fn any_all(x: &CpuTensor, axes: &[usize], keepdims: bool, and: bool) -> Tensor {
+    let as_bool = super::cast(x, DType::Bool);
+    let t = if and {
+        reduce_dispatch!(&as_bool, axes, keepdims, 1.0f64, |a: f64, b: f64| if a != 0.0 && b != 0.0 { 1.0 } else { 0.0 }, 1i64, |a: i64, b: i64| (a != 0 && b != 0) as i64)
+    } else {
+        reduce_dispatch!(&as_bool, axes, keepdims, 0.0f64, |a: f64, b: f64| if a != 0.0 || b != 0.0 { 1.0 } else { 0.0 }, 0i64, |a: i64, b: i64| (a != 0 || b != 0) as i64)
+    };
+    t
+}
+
+/// Argmax/argmin along one axis (I64 result). First match wins.
+pub fn argminmax(x: &CpuTensor, axis: usize, keepdims: bool, want_max: bool) -> Tensor {
+    let dims = x.shape.dims();
+    let outer: usize = dims[..axis].iter().product();
+    let len = dims[axis];
+    let inner: usize = dims[axis + 1..].iter().product();
+    let mut out = TypedBuf::<i64>::zeroed(outer * inner);
+
+    super::dispatch!(&*x.storage, v => {
+        let data = v.as_slice();
+        parallel_fill(out.as_mut_slice(), PAR_THRESHOLD / len.max(1), |base, chunk| {
+            for (ci, slot) in chunk.iter_mut().enumerate() {
+                let flat = base + ci;
+                let (o, i) = (flat / inner, flat % inner);
+                let mut best_k = 0usize;
+                let mut best_v = data[(o * len) * inner + i] as f64;
+                for k in 1..len {
+                    let val = data[(o * len + k) * inner + i] as f64;
+                    let better = if want_max { val > best_v } else { val < best_v };
+                    if better {
+                        best_v = val;
+                        best_k = k;
+                    }
+                }
+                *slot = best_k as i64;
+            }
+        });
+    });
+    let shape = x.shape.reduce(&[axis], keepdims);
+    wrap(Storage::I64(out), shape, DType::I64)
+}
+
+/// Inclusive cumulative sum along `axis` (same dtype).
+pub fn cumsum(x: &CpuTensor, axis: usize) -> Tensor {
+    let dims = x.shape.dims();
+    let len = dims[axis];
+    let inner: usize = dims[axis + 1..].iter().product();
+    let outer: usize = dims[..axis].iter().product();
+    let storage = super::dispatch_same!(&*x.storage, v => {
+        let data = v.as_slice();
+        let mut out = TypedBuf::from_slice(data);
+        {
+            let o = out.as_mut_slice();
+            for ob in 0..outer {
+                for i in 0..inner {
+                    for k in 1..len {
+                        let cur = (ob * len + k) * inner + i;
+                        let prev = (ob * len + k - 1) * inner + i;
+                        o[cur] = o[cur] + o[prev];
+                    }
+                }
+            }
+        }
+        out
+    });
+    wrap(storage, x.shape.clone(), x.dtype)
+}
+
+/// Convenience: sum everything to a scalar f64.
+pub fn sum_all_f64(t: &Tensor) -> f64 {
+    let c = cpu(t);
+    sum(&c, &(0..c.shape.rank()).collect::<Vec<_>>(), false).item()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sum_trailing_axis() {
+        let t = Tensor::from_slice(&[1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0], [2, 3]);
+        assert_eq!(t.sum(&[1], false).to_vec(), vec![6.0, 15.0]);
+        assert_eq!(t.sum(&[1], true).dims(), &[2, 1]);
+    }
+
+    #[test]
+    fn sum_leading_axis_general_path() {
+        let t = Tensor::from_slice(&[1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0], [2, 3]);
+        assert_eq!(t.sum(&[0], false).to_vec(), vec![5.0, 7.0, 9.0]);
+    }
+
+    #[test]
+    fn sum_all_and_multiple_axes() {
+        let t = Tensor::from_slice(&[1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0, 8.0], [2, 2, 2]);
+        assert_eq!(t.sum(&[], false).item(), 36.0);
+        assert_eq!(t.sum(&[0, 2], false).to_vec(), vec![14.0, 22.0]);
+    }
+
+    #[test]
+    fn prod_max_min() {
+        let t = Tensor::from_slice(&[2.0f32, 3.0, -1.0, 4.0], [2, 2]);
+        assert_eq!(t.prod(&[], false).item(), -24.0);
+        assert_eq!(t.max(&[1], false).to_vec(), vec![3.0, 4.0]);
+        assert_eq!(t.min(&[0], false).to_vec(), vec![-1.0, 3.0]);
+    }
+
+    #[test]
+    fn int_reductions_stay_int() {
+        let t = Tensor::from_slice(&[1i64, 2, 3, 4], [4]);
+        let s = t.sum(&[], false);
+        assert_eq!(s.dtype(), DType::I64);
+        assert_eq!(s.to_vec_i64(), vec![10]);
+    }
+
+    #[test]
+    fn argmax_argmin() {
+        let t = Tensor::from_slice(&[1.0f32, 9.0, 3.0, 7.0, 2.0, 5.0], [2, 3]);
+        assert_eq!(t.argmax(1, false).to_vec_i64(), vec![1, 0]);
+        assert_eq!(t.argmin(1, false).to_vec_i64(), vec![0, 1]);
+        assert_eq!(t.argmax(0, false).to_vec_i64(), vec![1, 0, 1]);
+        assert_eq!(t.argmax(1, true).dims(), &[2, 1]);
+    }
+
+    #[test]
+    fn any_all_bool() {
+        let t = Tensor::from_slice(&[0.0f32, 1.0, 0.0, 0.0], [2, 2]);
+        assert_eq!(t.any(&[1], false).to_vec(), vec![1.0, 0.0]);
+        assert_eq!(t.all(&[1], false).to_vec(), vec![0.0, 0.0]);
+        assert_eq!(t.any(&[], false).to_vec(), vec![1.0]);
+        assert_eq!(t.any(&[], false).dtype(), DType::Bool);
+    }
+
+    #[test]
+    fn cumsum_axes() {
+        let t = Tensor::from_slice(&[1.0f32, 2.0, 3.0, 4.0], [2, 2]);
+        assert_eq!(t.cumsum(1).to_vec(), vec![1.0, 3.0, 3.0, 7.0]);
+        assert_eq!(t.cumsum(0).to_vec(), vec![1.0, 2.0, 4.0, 6.0]);
+    }
+
+    #[test]
+    fn large_sum_precision() {
+        // f64 accumulation keeps 1M small f32 sums exact enough
+        let t = Tensor::full([1_000_000], 0.1, DType::F32);
+        let s = t.sum(&[], false).item();
+        assert!((s - 100_000.0).abs() / 100_000.0 < 1e-4, "{s}");
+    }
+}

@@ -1,0 +1,445 @@
+//! Data-movement operations for the CPU backend. All outputs are fresh
+//! contiguous buffers (the reference backend trades views for simplicity).
+
+use crate::memory::TypedBuf;
+use crate::tensor::shape::Shape;
+use crate::tensor::{DType, Tensor};
+
+use super::kernels::map3;
+use super::{cast, cpu, dispatch_same, promote_pair, wrap, CpuTensor, Storage};
+
+/// Gather-copy: walk `out_shape` linearly; element i comes from
+/// `base + Σ idx[d]·strides[d]` of the input (strides may be negative for
+/// flips).
+fn strided_gather<T: Copy + Default + Send + Sync>(
+    input: &[T],
+    out_shape: &Shape,
+    strides: &[isize],
+    base: isize,
+) -> TypedBuf<T> {
+    let n = out_shape.numel();
+    let mut out = TypedBuf::<T>::zeroed(n);
+    let dims = out_shape.dims();
+    let rank = dims.len();
+    let mut idx = vec![0usize; rank];
+    let mut off = base;
+    for slot in out.as_mut_slice().iter_mut() {
+        *slot = input[off as usize];
+        for d in (0..rank).rev() {
+            idx[d] += 1;
+            off += strides[d];
+            if idx[d] < dims[d] {
+                break;
+            }
+            idx[d] = 0;
+            off -= strides[d] * dims[d] as isize;
+        }
+    }
+    out
+}
+
+/// Permute dimensions.
+pub fn transpose(x: &CpuTensor, perm: &[usize]) -> Tensor {
+    let in_strides = x.shape.strides();
+    let out_dims: Vec<usize> = perm.iter().map(|&p| x.shape.dims()[p]).collect();
+    let out_shape = Shape::new(out_dims);
+    let strides: Vec<isize> = perm.iter().map(|&p| in_strides[p] as isize).collect();
+    let storage =
+        dispatch_same!(&*x.storage, v => strided_gather(v, &out_shape, &strides, 0));
+    wrap(storage, out_shape, x.dtype)
+}
+
+/// Rectangular slice `[starts, ends)`.
+pub fn slice(x: &CpuTensor, starts: &[usize], ends: &[usize]) -> Tensor {
+    assert_eq!(starts.len(), x.shape.rank(), "slice starts rank");
+    assert_eq!(ends.len(), x.shape.rank(), "slice ends rank");
+    let dims = x.shape.dims();
+    for d in 0..dims.len() {
+        assert!(
+            starts[d] <= ends[d] && ends[d] <= dims[d],
+            "slice bounds [{}, {}) out of range for dim {} (size {})",
+            starts[d],
+            ends[d],
+            d,
+            dims[d]
+        );
+    }
+    let in_strides = x.shape.strides();
+    let out_shape = Shape::new(
+        starts.iter().zip(ends).map(|(&s, &e)| e - s).collect::<Vec<_>>(),
+    );
+    let base: isize = starts.iter().zip(&in_strides).map(|(&s, &st)| (s * st) as isize).sum();
+    let strides: Vec<isize> = in_strides.iter().map(|&s| s as isize).collect();
+    let storage =
+        dispatch_same!(&*x.storage, v => strided_gather(v, &out_shape, &strides, base));
+    wrap(storage, out_shape, x.dtype)
+}
+
+/// Concatenate along `axis`.
+pub fn concat(xs: &[&Tensor], axis: usize) -> Tensor {
+    assert!(!xs.is_empty());
+    let first = cpu(xs[0]);
+    let dtype = xs.iter().fold(first.dtype, |d, t| d.promote(t.dtype()));
+    let cs: Vec<CpuTensor> = xs.iter().map(|t| cast(&cpu(t), dtype)).collect();
+    let rank = first.shape.rank();
+    let mut out_dims = first.shape.dims().to_vec();
+    out_dims[axis] = cs.iter().map(|c| c.shape.dims()[axis]).sum();
+    for c in &cs {
+        for d in 0..rank {
+            if d != axis {
+                assert_eq!(
+                    c.shape.dims()[d],
+                    out_dims[d],
+                    "concat shape mismatch off-axis"
+                );
+            }
+        }
+    }
+    let out_shape = Shape::new(out_dims.clone());
+    let outer: usize = out_dims[..axis].iter().product();
+    let inner: usize = out_dims[axis + 1..].iter().product();
+
+    macro_rules! do_concat {
+        ($variant:ident, $t:ty) => {{
+            let mut out = TypedBuf::<$t>::zeroed(out_shape.numel());
+            let o = out.as_mut_slice();
+            let mut axis_off = 0usize;
+            for c in &cs {
+                let len = c.shape.dims()[axis];
+                let src = match &*c.storage {
+                    Storage::$variant(v) => v.as_slice(),
+                    _ => unreachable!(),
+                };
+                for ob in 0..outer {
+                    let dst_start = (ob * out_dims[axis] + axis_off) * inner;
+                    let src_start = ob * len * inner;
+                    o[dst_start..dst_start + len * inner]
+                        .copy_from_slice(&src[src_start..src_start + len * inner]);
+                }
+                axis_off += len;
+            }
+            Storage::$variant(out)
+        }};
+    }
+    let storage = match dtype {
+        DType::F32 => do_concat!(F32, f32),
+        DType::F64 => do_concat!(F64, f64),
+        DType::I32 => do_concat!(I32, i32),
+        DType::I64 => do_concat!(I64, i64),
+        DType::U8 | DType::Bool => do_concat!(U8, u8),
+    };
+    wrap(storage, out_shape, dtype)
+}
+
+/// Constant-pad by `(before, after)` per dimension.
+pub fn pad(x: &CpuTensor, pads: &[(usize, usize)], value: f64) -> Tensor {
+    assert_eq!(pads.len(), x.shape.rank(), "pad rank mismatch");
+    let in_dims = x.shape.dims();
+    let out_dims: Vec<usize> =
+        in_dims.iter().zip(pads).map(|(&d, &(b, a))| d + b + a).collect();
+    let out_shape = Shape::new(out_dims);
+    let out_strides = out_shape.strides();
+    let base: usize = pads.iter().zip(&out_strides).map(|(&(b, _), &s)| b * s).sum();
+    let in_strides_o: Vec<usize> = out_strides.clone();
+
+    macro_rules! do_pad {
+        ($v:ident, $t:ty, $conv:expr) => {{
+            let src = $v.as_slice();
+            let mut out = TypedBuf::<$t>::from_fn(out_shape.numel(), |_| $conv);
+            let o = out.as_mut_slice();
+            // scatter input into the interior
+            let rank = in_dims.len();
+            let mut idx = vec![0usize; rank];
+            let mut off = base;
+            for &val in src {
+                o[off] = val;
+                for d in (0..rank).rev() {
+                    idx[d] += 1;
+                    off += in_strides_o[d];
+                    if idx[d] < in_dims[d] {
+                        break;
+                    }
+                    idx[d] = 0;
+                    off -= in_strides_o[d] * in_dims[d];
+                }
+            }
+            out
+        }};
+    }
+    let storage = match &*x.storage {
+        Storage::F32(v) => Storage::F32(do_pad!(v, f32, value as f32)),
+        Storage::F64(v) => Storage::F64(do_pad!(v, f64, value)),
+        Storage::I32(v) => Storage::I32(do_pad!(v, i32, value as i32)),
+        Storage::I64(v) => Storage::I64(do_pad!(v, i64, value as i64)),
+        Storage::U8(v) => Storage::U8(do_pad!(v, u8, value as u8)),
+    };
+    wrap(storage, out_shape, x.dtype)
+}
+
+/// Repeat `reps[d]` times along each dimension.
+pub fn tile(x: &CpuTensor, reps: &[usize]) -> Tensor {
+    assert_eq!(reps.len(), x.shape.rank(), "tile rank mismatch");
+    let in_dims = x.shape.dims();
+    let out_dims: Vec<usize> = in_dims.iter().zip(reps).map(|(&d, &r)| d * r).collect();
+    let out_shape = Shape::new(out_dims.clone());
+    let in_strides = x.shape.strides();
+    let rank = in_dims.len();
+    let storage = dispatch_same!(&*x.storage, v => {
+        let src = v.as_slice();
+        TypedBuf::from_fn(out_shape.numel(), |flat| {
+            // decompose flat out index, wrap each dim into the input
+            let mut rem = flat;
+            let mut off = 0usize;
+            for d in 0..rank {
+                let stride_out: usize = out_dims[d + 1..].iter().product();
+                let od = rem / stride_out;
+                rem %= stride_out;
+                off += (od % in_dims[d]) * in_strides[d];
+            }
+            src[off]
+        })
+    });
+    wrap(storage, out_shape, x.dtype)
+}
+
+/// Reverse along `axes`.
+pub fn flip(x: &CpuTensor, axes: &[usize]) -> Tensor {
+    let in_strides = x.shape.strides();
+    let dims = x.shape.dims();
+    let mut strides: Vec<isize> = in_strides.iter().map(|&s| s as isize).collect();
+    let mut base: isize = 0;
+    for &a in axes {
+        base += ((dims[a] - 1) * in_strides[a]) as isize;
+        strides[a] = -(in_strides[a] as isize);
+    }
+    let storage =
+        dispatch_same!(&*x.storage, v => strided_gather(v, &x.shape, &strides, base));
+    wrap(storage, x.shape.clone(), x.dtype)
+}
+
+/// Gather along `axis` with 1-D integer indices.
+pub fn index_select(x: &CpuTensor, axis: usize, indices: &Tensor) -> Tensor {
+    let idx = indices.to_vec_i64();
+    let dims = x.shape.dims();
+    let len = dims[axis];
+    let outer: usize = dims[..axis].iter().product();
+    let inner: usize = dims[axis + 1..].iter().product();
+    let mut out_dims = dims.to_vec();
+    out_dims[axis] = idx.len();
+    let out_shape = Shape::new(out_dims);
+    for &i in &idx {
+        assert!((0..len as i64).contains(&i), "index_select index {i} out of range (len {len})");
+    }
+    let storage = dispatch_same!(&*x.storage, v => {
+        let src = v.as_slice();
+        let mut out = TypedBuf::zeroed(out_shape.numel());
+        {
+            let o = out.as_mut_slice();
+            for ob in 0..outer {
+                for (pos, &i) in idx.iter().enumerate() {
+                    let dst = (ob * idx.len() + pos) * inner;
+                    let s = (ob * len + i as usize) * inner;
+                    o[dst..dst + inner].copy_from_slice(&src[s..s + inner]);
+                }
+            }
+        }
+        out
+    });
+    wrap(storage, out_shape, x.dtype)
+}
+
+/// `out = base; out[idx[i], ...] += src[i, ...]` along axis 0.
+pub fn scatter_add(base: &Tensor, indices: &Tensor, src: &Tensor) -> Tensor {
+    let (cb, cs, d) = promote_pair(base, src);
+    let idx = indices.to_vec_i64();
+    let rows = cb.shape.dims()[0];
+    let inner: usize = cb.shape.dims()[1..].iter().product();
+    assert_eq!(cs.shape.dims()[0], idx.len(), "scatter_add: src rows != indices");
+    assert_eq!(
+        cs.shape.dims()[1..].iter().product::<usize>(),
+        inner,
+        "scatter_add: trailing dims mismatch"
+    );
+
+    macro_rules! do_scatter {
+        ($variant:ident) => {{
+            let (bv, sv) = match (&*cb.storage, &*cs.storage) {
+                (Storage::$variant(b), Storage::$variant(s)) => (b, s),
+                _ => unreachable!(),
+            };
+            let mut out = bv.clone();
+            {
+                let o = out.as_mut_slice();
+                let s = sv.as_slice();
+                for (i, &row) in idx.iter().enumerate() {
+                    assert!((0..rows as i64).contains(&row), "scatter_add row {row} out of range");
+                    let dst = row as usize * inner;
+                    for j in 0..inner {
+                        o[dst + j] = o[dst + j] + s[i * inner + j];
+                    }
+                }
+            }
+            Storage::$variant(out)
+        }};
+    }
+    let storage = match d {
+        DType::F32 => do_scatter!(F32),
+        DType::F64 => do_scatter!(F64),
+        DType::I32 => do_scatter!(I32),
+        DType::I64 => do_scatter!(I64),
+        DType::U8 | DType::Bool => do_scatter!(U8),
+    };
+    wrap(storage, cb.shape.clone(), d)
+}
+
+/// Broadcasting element-wise select.
+pub fn where_cond(cond: &Tensor, a: &Tensor, b: &Tensor) -> Tensor {
+    let cc = cast(&cpu(cond), DType::Bool);
+    let (ca, cb, d) = promote_pair(a, b);
+    let ab_shape = ca.shape.broadcast(&cb.shape).expect("where operands");
+    let out_shape = cc.shape.broadcast(&ab_shape).expect("where cond");
+    let cv = match &*cc.storage {
+        Storage::U8(v) => v,
+        _ => unreachable!(),
+    };
+    macro_rules! do_where {
+        ($variant:ident) => {{
+            let (av, bv) = match (&*ca.storage, &*cb.storage) {
+                (Storage::$variant(x), Storage::$variant(y)) => (x, y),
+                _ => unreachable!(),
+            };
+            Storage::$variant(map3(
+                cv,
+                &cc.shape,
+                av,
+                &ca.shape,
+                bv,
+                &cb.shape,
+                &out_shape,
+                |c, x, y| if c != 0 { x } else { y },
+            ))
+        }};
+    }
+    let storage = match d {
+        DType::F32 => do_where!(F32),
+        DType::F64 => do_where!(F64),
+        DType::I32 => do_where!(I32),
+        DType::I64 => do_where!(I64),
+        DType::U8 | DType::Bool => do_where!(U8),
+    };
+    wrap(storage, out_shape, d)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn transpose_2d() {
+        let t = Tensor::from_slice(&[1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0], [2, 3]);
+        let tt = t.t();
+        assert_eq!(tt.dims(), &[3, 2]);
+        assert_eq!(tt.to_vec(), vec![1.0, 4.0, 2.0, 5.0, 3.0, 6.0]);
+        // double transpose is identity
+        assert_eq!(tt.t().to_vec(), t.to_vec());
+    }
+
+    #[test]
+    fn transpose_3d_perm() {
+        let t = Tensor::arange(24, DType::F32).reshape(&[2, 3, 4]);
+        let p = t.transpose(&[2, 0, 1]);
+        assert_eq!(p.dims(), &[4, 2, 3]);
+        // element (i,j,k) of p == element (j,k,i) of t
+        let tv = t.to_vec();
+        let pv = p.to_vec();
+        for i in 0..4 {
+            for j in 0..2 {
+                for k in 0..3 {
+                    assert_eq!(pv[(i * 2 + j) * 3 + k], tv[(j * 3 + k) * 4 + i]);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn slice_and_bounds() {
+        let t = Tensor::arange(12, DType::F32).reshape(&[3, 4]);
+        let s = t.slice(&[1, 1], &[3, 3]);
+        assert_eq!(s.dims(), &[2, 2]);
+        assert_eq!(s.to_vec(), vec![5.0, 6.0, 9.0, 10.0]);
+    }
+
+    #[test]
+    fn concat_axis0_and_1() {
+        let a = Tensor::from_slice(&[1.0f32, 2.0], [1, 2]);
+        let b = Tensor::from_slice(&[3.0f32, 4.0], [1, 2]);
+        let c0 = Tensor::concat(&[&a, &b], 0);
+        assert_eq!(c0.dims(), &[2, 2]);
+        assert_eq!(c0.to_vec(), vec![1.0, 2.0, 3.0, 4.0]);
+        let c1 = Tensor::concat(&[&a, &b], 1);
+        assert_eq!(c1.dims(), &[1, 4]);
+        assert_eq!(c1.to_vec(), vec![1.0, 2.0, 3.0, 4.0]);
+    }
+
+    #[test]
+    fn concat_promotes_dtype() {
+        let a = Tensor::from_slice(&[1i32, 2], [2]);
+        let b = Tensor::from_slice(&[0.5f32, 1.5], [2]);
+        let c = Tensor::concat(&[&a, &b], 0);
+        assert_eq!(c.dtype(), DType::F32);
+        assert_eq!(c.to_vec(), vec![1.0, 2.0, 0.5, 1.5]);
+    }
+
+    #[test]
+    fn pad_constant() {
+        let t = Tensor::from_slice(&[1.0f32, 2.0, 3.0, 4.0], [2, 2]);
+        let p = t.pad(&[(1, 0), (0, 1)], 9.0);
+        assert_eq!(p.dims(), &[3, 3]);
+        assert_eq!(p.to_vec(), vec![9., 9., 9., 1., 2., 9., 3., 4., 9.]);
+    }
+
+    #[test]
+    fn tile_repeats() {
+        let t = Tensor::from_slice(&[1.0f32, 2.0], [1, 2]);
+        let r = t.tile(&[2, 2]);
+        assert_eq!(r.dims(), &[2, 4]);
+        assert_eq!(r.to_vec(), vec![1., 2., 1., 2., 1., 2., 1., 2.]);
+    }
+
+    #[test]
+    fn flip_axes() {
+        let t = Tensor::arange(6, DType::F32).reshape(&[2, 3]);
+        assert_eq!(t.flip(&[1]).to_vec(), vec![2., 1., 0., 5., 4., 3.]);
+        assert_eq!(t.flip(&[0]).to_vec(), vec![3., 4., 5., 0., 1., 2.]);
+        assert_eq!(t.flip(&[0, 1]).to_vec(), vec![5., 4., 3., 2., 1., 0.]);
+    }
+
+    #[test]
+    fn index_select_rows_and_cols() {
+        let t = Tensor::arange(6, DType::F32).reshape(&[3, 2]);
+        let idx = Tensor::from_slice(&[2i64, 0], [2]);
+        let rows = t.index_select(0, &idx);
+        assert_eq!(rows.to_vec(), vec![4., 5., 0., 1.]);
+        let cols = t.index_select(1, &Tensor::from_slice(&[1i64], [1]));
+        assert_eq!(cols.dims(), &[3, 1]);
+        assert_eq!(cols.to_vec(), vec![1., 3., 5.]);
+    }
+
+    #[test]
+    fn scatter_add_accumulates_duplicates() {
+        let base = Tensor::zeros([3, 2]);
+        let idx = Tensor::from_slice(&[1i64, 1, 0], [3]);
+        let src = Tensor::from_slice(&[1.0f32, 1.0, 2.0, 2.0, 5.0, 5.0], [3, 2]);
+        let out = base.scatter_add(&idx, &src);
+        assert_eq!(out.to_vec(), vec![5., 5., 3., 3., 0., 0.]);
+    }
+
+    #[test]
+    fn where_broadcasts() {
+        let cond = Tensor::from_slice(&[1u8, 0], [2]).astype(DType::Bool);
+        let a = Tensor::full([2, 2], 1.0, DType::F32);
+        let b = Tensor::full([2, 2], -1.0, DType::F32);
+        let out = Tensor::where_cond(&cond, &a, &b);
+        assert_eq!(out.to_vec(), vec![1., -1., 1., -1.]);
+    }
+}

@@ -1,0 +1,157 @@
+//! Element types supported by the tensor stack.
+
+/// Tensor element types. `Bool` shares `u8` storage.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum DType {
+    /// 32-bit float (the workhorse type).
+    F32,
+    /// 64-bit float.
+    F64,
+    /// 32-bit signed integer.
+    I32,
+    /// 64-bit signed integer (indices).
+    I64,
+    /// 8-bit unsigned integer (images).
+    U8,
+    /// Boolean (stored as u8 ∈ {0,1}).
+    Bool,
+}
+
+impl DType {
+    /// Size of one element in bytes.
+    pub fn size_of(self) -> usize {
+        match self {
+            DType::F32 | DType::I32 => 4,
+            DType::F64 | DType::I64 => 8,
+            DType::U8 | DType::Bool => 1,
+        }
+    }
+
+    /// Is this a floating-point type?
+    pub fn is_float(self) -> bool {
+        matches!(self, DType::F32 | DType::F64)
+    }
+
+    /// Is this an integer type (incl. bool)?
+    pub fn is_int(self) -> bool {
+        !self.is_float()
+    }
+
+    /// Binary-op result type (NumPy-style promotion, floats dominate).
+    pub fn promote(self, other: DType) -> DType {
+        use DType::*;
+        if self == other {
+            return self;
+        }
+        fn rank(d: DType) -> u8 {
+            match d {
+                Bool => 0,
+                U8 => 1,
+                I32 => 2,
+                I64 => 3,
+                F32 => 4,
+                F64 => 5,
+            }
+        }
+        if rank(self) >= rank(other) {
+            self
+        } else {
+            other
+        }
+    }
+
+    /// Name as shown in debug output.
+    pub fn name(self) -> &'static str {
+        match self {
+            DType::F32 => "f32",
+            DType::F64 => "f64",
+            DType::I32 => "i32",
+            DType::I64 => "i64",
+            DType::U8 => "u8",
+            DType::Bool => "bool",
+        }
+    }
+}
+
+impl std::fmt::Display for DType {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Rust scalar types that map to a [`DType`].
+pub trait Element: Copy + Default + Send + Sync + 'static {
+    /// The corresponding dtype.
+    const DTYPE: DType;
+    /// Lossy conversion to f64 (for printing / scalar extraction).
+    fn to_f64(self) -> f64;
+    /// Lossy conversion from f64 (for fills).
+    fn from_f64(v: f64) -> Self;
+}
+
+impl Element for f32 {
+    const DTYPE: DType = DType::F32;
+    fn to_f64(self) -> f64 {
+        self as f64
+    }
+    fn from_f64(v: f64) -> Self {
+        v as f32
+    }
+}
+impl Element for f64 {
+    const DTYPE: DType = DType::F64;
+    fn to_f64(self) -> f64 {
+        self
+    }
+    fn from_f64(v: f64) -> Self {
+        v
+    }
+}
+impl Element for i32 {
+    const DTYPE: DType = DType::I32;
+    fn to_f64(self) -> f64 {
+        self as f64
+    }
+    fn from_f64(v: f64) -> Self {
+        v as i32
+    }
+}
+impl Element for i64 {
+    const DTYPE: DType = DType::I64;
+    fn to_f64(self) -> f64 {
+        self as f64
+    }
+    fn from_f64(v: f64) -> Self {
+        v as i64
+    }
+}
+impl Element for u8 {
+    const DTYPE: DType = DType::U8;
+    fn to_f64(self) -> f64 {
+        self as f64
+    }
+    fn from_f64(v: f64) -> Self {
+        v as u8
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn promotion_lattice() {
+        assert_eq!(DType::F32.promote(DType::F64), DType::F64);
+        assert_eq!(DType::I64.promote(DType::F32), DType::F32);
+        assert_eq!(DType::Bool.promote(DType::U8), DType::U8);
+        assert_eq!(DType::I32.promote(DType::I32), DType::I32);
+    }
+
+    #[test]
+    fn sizes() {
+        assert_eq!(DType::F32.size_of(), 4);
+        assert_eq!(DType::Bool.size_of(), 1);
+        assert!(DType::F64.is_float());
+        assert!(DType::I64.is_int());
+    }
+}

@@ -1,0 +1,144 @@
+//! Dtype-erased host-side data, the materialization format every backend
+//! produces on request ("tensor values need only be materialized upon user
+//! request", paper §4.1.1).
+
+use super::dtype::DType;
+
+/// A host buffer of one of the supported element types.
+#[derive(Debug, Clone, PartialEq)]
+pub enum HostBuffer {
+    /// f32 data.
+    F32(Vec<f32>),
+    /// f64 data.
+    F64(Vec<f64>),
+    /// i32 data.
+    I32(Vec<i32>),
+    /// i64 data.
+    I64(Vec<i64>),
+    /// u8 data (also backs Bool; `bool_tag` distinguishes).
+    U8(Vec<u8>, /* is_bool */ bool),
+}
+
+impl HostBuffer {
+    /// The dtype of the contained data.
+    pub fn dtype(&self) -> DType {
+        match self {
+            HostBuffer::F32(_) => DType::F32,
+            HostBuffer::F64(_) => DType::F64,
+            HostBuffer::I32(_) => DType::I32,
+            HostBuffer::I64(_) => DType::I64,
+            HostBuffer::U8(_, false) => DType::U8,
+            HostBuffer::U8(_, true) => DType::Bool,
+        }
+    }
+
+    /// Number of elements.
+    pub fn len(&self) -> usize {
+        match self {
+            HostBuffer::F32(v) => v.len(),
+            HostBuffer::F64(v) => v.len(),
+            HostBuffer::I32(v) => v.len(),
+            HostBuffer::I64(v) => v.len(),
+            HostBuffer::U8(v, _) => v.len(),
+        }
+    }
+
+    /// Is the buffer empty?
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Element `i` as f64.
+    pub fn get_f64(&self, i: usize) -> f64 {
+        match self {
+            HostBuffer::F32(v) => v[i] as f64,
+            HostBuffer::F64(v) => v[i],
+            HostBuffer::I32(v) => v[i] as f64,
+            HostBuffer::I64(v) => v[i] as f64,
+            HostBuffer::U8(v, _) => v[i] as f64,
+        }
+    }
+
+    /// Convert to a `Vec<f32>` (lossy for f64/i64).
+    pub fn to_f32_vec(&self) -> Vec<f32> {
+        match self {
+            HostBuffer::F32(v) => v.clone(),
+            HostBuffer::F64(v) => v.iter().map(|&x| x as f32).collect(),
+            HostBuffer::I32(v) => v.iter().map(|&x| x as f32).collect(),
+            HostBuffer::I64(v) => v.iter().map(|&x| x as f32).collect(),
+            HostBuffer::U8(v, _) => v.iter().map(|&x| x as f32).collect(),
+        }
+    }
+
+    /// Convert to a `Vec<f64>`.
+    pub fn to_f64_vec(&self) -> Vec<f64> {
+        (0..self.len()).map(|i| self.get_f64(i)).collect()
+    }
+
+    /// Convert to a `Vec<i64>` (floats truncate).
+    pub fn to_i64_vec(&self) -> Vec<i64> {
+        match self {
+            HostBuffer::F32(v) => v.iter().map(|&x| x as i64).collect(),
+            HostBuffer::F64(v) => v.iter().map(|&x| x as i64).collect(),
+            HostBuffer::I32(v) => v.iter().map(|&x| x as i64).collect(),
+            HostBuffer::I64(v) => v.clone(),
+            HostBuffer::U8(v, _) => v.iter().map(|&x| x as i64).collect(),
+        }
+    }
+
+    /// Borrow as f32 slice if the dtype matches.
+    pub fn as_f32(&self) -> Option<&[f32]> {
+        match self {
+            HostBuffer::F32(v) => Some(v),
+            _ => None,
+        }
+    }
+
+    /// Cast to a different dtype (creates a new buffer).
+    pub fn cast(&self, to: DType) -> HostBuffer {
+        if self.dtype() == to {
+            return self.clone();
+        }
+        match to {
+            DType::F32 => HostBuffer::F32(self.to_f32_vec()),
+            DType::F64 => HostBuffer::F64(self.to_f64_vec()),
+            DType::I32 => HostBuffer::I32(self.to_i64_vec().iter().map(|&x| x as i32).collect()),
+            DType::I64 => HostBuffer::I64(self.to_i64_vec()),
+            DType::U8 => {
+                HostBuffer::U8(self.to_i64_vec().iter().map(|&x| x as u8).collect(), false)
+            }
+            DType::Bool => HostBuffer::U8(
+                (0..self.len()).map(|i| (self.get_f64(i) != 0.0) as u8).collect(),
+                true,
+            ),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn casts_roundtrip() {
+        let h = HostBuffer::F32(vec![1.5, -2.0, 0.0]);
+        assert_eq!(h.cast(DType::I64), HostBuffer::I64(vec![1, -2, 0]));
+        assert_eq!(h.cast(DType::Bool), HostBuffer::U8(vec![1, 1, 0], true));
+        assert_eq!(h.cast(DType::F64).dtype(), DType::F64);
+        assert_eq!(h.cast(DType::F32), h);
+    }
+
+    #[test]
+    fn get_and_len() {
+        let h = HostBuffer::I32(vec![7, 8]);
+        assert_eq!(h.len(), 2);
+        assert_eq!(h.get_f64(1), 8.0);
+        assert!(!h.is_empty());
+    }
+
+    #[test]
+    fn bool_tag_distinguishes_dtype() {
+        assert_eq!(HostBuffer::U8(vec![1], true).dtype(), DType::Bool);
+        assert_eq!(HostBuffer::U8(vec![1], false).dtype(), DType::U8);
+    }
+}

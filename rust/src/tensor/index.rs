@@ -1,0 +1,82 @@
+//! Indexing helpers: a small `numpy`-like sugar layer over
+//! `slice`/`index_select`, mirroring the original library's
+//! `tensor(span, range(a, b), idx)` style.
+
+use super::Tensor;
+
+/// One indexing specifier per dimension.
+#[derive(Debug, Clone)]
+pub enum Index {
+    /// The whole dimension (`span`).
+    Span,
+    /// Half-open range `[start, end)`.
+    Range(usize, usize),
+    /// A single position (the dimension is kept with size 1).
+    At(usize),
+}
+
+/// `span` — take the whole dimension.
+pub fn span() -> Index {
+    Index::Span
+}
+
+/// `range(a, b)` — take `[a, b)`.
+pub fn range(a: usize, b: usize) -> Index {
+    Index::Range(a, b)
+}
+
+/// `at(i)` — take position `i` (size-1 dim retained).
+pub fn at(i: usize) -> Index {
+    Index::At(i)
+}
+
+impl Tensor {
+    /// Multi-dimensional indexing: one [`Index`] per leading dimension
+    /// (trailing dimensions default to `span`).
+    pub fn index(&self, ix: &[Index]) -> Tensor {
+        assert!(ix.len() <= self.rank(), "too many indices for rank {}", self.rank());
+        let dims = self.dims();
+        let mut starts = vec![0usize; self.rank()];
+        let mut ends = dims.to_vec();
+        for (d, spec) in ix.iter().enumerate() {
+            match *spec {
+                Index::Span => {}
+                Index::Range(a, b) => {
+                    starts[d] = a;
+                    ends[d] = b;
+                }
+                Index::At(i) => {
+                    starts[d] = i;
+                    ends[d] = i + 1;
+                }
+            }
+        }
+        self.slice(&starts, &ends)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::DType;
+
+    #[test]
+    fn index_mixes_specs() {
+        let t = Tensor::arange(24, DType::F32).reshape(&[2, 3, 4]);
+        let s = t.index(&[at(1), range(0, 2)]);
+        assert_eq!(s.dims(), &[1, 2, 4]);
+        assert_eq!(s.to_vec()[0], 12.0);
+        let whole = t.index(&[span(), span(), span()]);
+        assert_eq!(whole.to_vec(), t.to_vec());
+    }
+
+    #[test]
+    fn mnist_style_holdout_split() {
+        // the paper's MNIST listing: val = x(span, range(0, kVal))
+        let x = Tensor::arange(20, DType::F32).reshape(&[4, 5]);
+        let val = x.index(&[span(), range(0, 2)]);
+        let train = x.index(&[span(), range(2, 5)]);
+        assert_eq!(val.dims(), &[4, 2]);
+        assert_eq!(train.dims(), &[4, 3]);
+    }
+}

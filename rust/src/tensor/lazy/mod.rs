@@ -1,0 +1,397 @@
+//! Deferred-execution tensor backend (paper Figure 2, §4.1.1: "tensor
+//! values need only be materialized upon user request").
+//!
+//! Element-wise operations and `matmul` build an expression graph instead
+//! of executing; materialization (`to_host`) walks the graph and evaluates
+//! **fused**: a chain of element-wise ops becomes a single pass over the
+//! output with no intermediate buffers — the same JIT-fusion idea as the
+//! original library's ArrayFire backend ("deferred, on-the-fly code
+//! generation ... to increase kernel arithmetic intensity"). Everything
+//! not deferred transparently falls back to the eager CPU backend via
+//! [`DelegateBackend`]: lazy tensors materialize on the way in, so the
+//! backend is always complete.
+
+use std::sync::{Arc, Mutex};
+
+use once_cell::sync::OnceCell;
+
+use super::adapter::TensorAdapter;
+use super::cpu::CpuBackend;
+use super::delegate::DelegateBackend;
+use super::{DType, HostBuffer, Shape, Tensor, TensorBackend};
+
+/// Deferred element-wise opcodes (a tiny fusion ISA).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EwOp {
+    /// Binary ops pop two stack values.
+    Add,
+    Sub,
+    Mul,
+    Div,
+    Maximum,
+    Minimum,
+    /// Unary ops pop one.
+    Neg,
+    Exp,
+    Log,
+    Tanh,
+    Sqrt,
+    Abs,
+}
+
+impl EwOp {
+    fn arity(self) -> usize {
+        matches!(self, EwOp::Neg | EwOp::Exp | EwOp::Log | EwOp::Tanh | EwOp::Sqrt | EwOp::Abs)
+            .then_some(1)
+            .unwrap_or(2)
+    }
+
+    fn apply1(self, x: f32) -> f32 {
+        match self {
+            EwOp::Neg => -x,
+            EwOp::Exp => x.exp(),
+            EwOp::Log => x.ln(),
+            EwOp::Tanh => x.tanh(),
+            EwOp::Sqrt => x.sqrt(),
+            EwOp::Abs => x.abs(),
+            _ => unreachable!(),
+        }
+    }
+
+    fn apply2(self, a: f32, b: f32) -> f32 {
+        match self {
+            EwOp::Add => a + b,
+            EwOp::Sub => a - b,
+            EwOp::Mul => a * b,
+            EwOp::Div => a / b,
+            EwOp::Maximum => a.max(b),
+            EwOp::Minimum => a.min(b),
+            _ => unreachable!(),
+        }
+    }
+}
+
+enum Node {
+    /// A materialized operand.
+    Leaf(Tensor),
+    /// Deferred element-wise op over lazy operands.
+    Ew(EwOp, Vec<Arc<LazyTensor>>),
+    /// Deferred matmul.
+    Matmul(Arc<LazyTensor>, Arc<LazyTensor>),
+}
+
+/// Adapter for deferred tensors: shape/dtype are known immediately, the
+/// value only on request.
+pub struct LazyTensor {
+    node: Node,
+    shape: Shape,
+    dtype: DType,
+    cache: Mutex<Option<Tensor>>,
+}
+
+impl LazyTensor {
+    fn leaf(t: Tensor) -> Arc<LazyTensor> {
+        Arc::new(LazyTensor {
+            shape: t.shape().clone(),
+            dtype: t.dtype(),
+            node: Node::Leaf(t),
+            cache: Mutex::new(None),
+        })
+    }
+
+    /// View any public tensor as a lazy node (wrapping eagerly-computed
+    /// tensors as leaves).
+    fn of(t: &Tensor) -> Arc<LazyTensor> {
+        if let Some(l) = t.adapter().as_any().downcast_ref::<Handle>() {
+            return l.0.clone();
+        }
+        Self::leaf(t.clone())
+    }
+
+    /// Graph depth statistics (pending, unmaterialized ops).
+    pub fn pending_ops(&self) -> usize {
+        if self.cache.lock().unwrap().is_some() {
+            return 0;
+        }
+        match &self.node {
+            Node::Leaf(_) => 0,
+            Node::Ew(_, ins) => 1 + ins.iter().map(|i| i.pending_ops()).sum::<usize>(),
+            Node::Matmul(a, b) => 1 + a.pending_ops() + b.pending_ops(),
+        }
+    }
+
+    /// Force evaluation (memoized).
+    pub fn force(&self) -> Tensor {
+        if let Some(t) = self.cache.lock().unwrap().clone() {
+            return t;
+        }
+        let out = match &self.node {
+            Node::Leaf(t) => t.clone(),
+            Node::Matmul(a, b) => CpuBackend::shared().matmul(&a.force(), &b.force()),
+            Node::Ew(..) => self.eval_fused(),
+        };
+        *self.cache.lock().unwrap() = Some(out.clone());
+        out
+    }
+
+    /// Fused evaluation of an element-wise subtree: one pass, no
+    /// intermediates. Operands that broadcast are pre-materialized to the
+    /// output shape; deeper non-elementwise nodes are forced first and
+    /// enter as leaves.
+    fn eval_fused(&self) -> Tensor {
+        // compile: post-order RPN program over the ew subtree
+        let mut leaves: Vec<Vec<f32>> = Vec::new();
+        let mut rpn: Vec<Rpn> = Vec::new();
+        self.compile(&mut rpn, &mut leaves);
+        let n = self.shape.numel();
+        let mut out = vec![0.0f32; n];
+        let mut stack = vec![0.0f32; rpn.len()];
+        for (i, o) in out.iter_mut().enumerate() {
+            let mut sp = 0usize;
+            for step in &rpn {
+                match step {
+                    Rpn::Leaf(li) => {
+                        let buf = &leaves[*li];
+                        stack[sp] = if buf.len() == 1 { buf[0] } else { buf[i] };
+                        sp += 1;
+                    }
+                    Rpn::Op(op) => {
+                        if op.arity() == 1 {
+                            stack[sp - 1] = op.apply1(stack[sp - 1]);
+                        } else {
+                            stack[sp - 2] = op.apply2(stack[sp - 2], stack[sp - 1]);
+                            sp -= 1;
+                        }
+                    }
+                }
+            }
+            *o = stack[0];
+        }
+        Tensor::from_slice(&out, self.shape.clone())
+    }
+
+    fn compile(&self, rpn: &mut Vec<Rpn>, leaves: &mut Vec<Vec<f32>>) {
+        match &self.node {
+            Node::Ew(op, ins) if self.cache.lock().unwrap().is_none() => {
+                for i in ins {
+                    // operands must align element-wise with the output;
+                    // scalars stay scalar, everything else materializes to
+                    // the broadcast shape
+                    if i.shape == self.shape || i.shape.numel() == 1 {
+                        i.compile(rpn, leaves);
+                    } else {
+                        // expand through the eager CPU backend explicitly —
+                        // going through the default (lazy) backend here
+                        // would re-enter this evaluator
+                        let cpu = CpuBackend::shared();
+                        let zeros = cpu.full(&self.shape, 0.0, DType::F32);
+                        let forced = cpu.add(&i.force(), &zeros);
+                        rpn.push(Rpn::Leaf(leaves.len()));
+                        leaves.push(forced.to_vec());
+                    }
+                }
+                rpn.push(Rpn::Op(*op));
+            }
+            _ => {
+                let forced = self.force();
+                rpn.push(Rpn::Leaf(leaves.len()));
+                leaves.push(forced.to_vec());
+            }
+        }
+    }
+}
+
+enum Rpn {
+    Leaf(usize),
+    Op(EwOp),
+}
+
+/// Public adapter handle for lazy tensors.
+struct Handle(Arc<LazyTensor>);
+
+impl TensorAdapter for Handle {
+    fn shape(&self) -> &Shape {
+        &self.0.shape
+    }
+    fn dtype(&self) -> DType {
+        self.0.dtype
+    }
+    fn backend(&self) -> Arc<dyn TensorBackend> {
+        LazyBackend::shared()
+    }
+    fn to_host(&self) -> HostBuffer {
+        self.0.force().to_host()
+    }
+    fn as_any(&self) -> &dyn std::any::Any {
+        self
+    }
+}
+
+/// Count pending (deferred, unevaluated) ops behind a tensor handle; 0 for
+/// eager tensors. Used by tests and the Figure-2 bench.
+pub fn pending_ops(t: &Tensor) -> usize {
+    t.adapter().as_any().downcast_ref::<Handle>().map(|h| h.0.pending_ops()).unwrap_or(0)
+}
+
+/// The deferred backend. Element-wise f32 ops and matmul defer; everything
+/// else delegates to the eager CPU backend (lazy operands materialize on
+/// the way in via `to_host`).
+pub struct LazyBackend {
+    inner: Arc<dyn TensorBackend>,
+}
+
+impl LazyBackend {
+    /// The canonical shared instance.
+    pub fn shared() -> Arc<dyn TensorBackend> {
+        static INST: OnceCell<Arc<LazyBackend>> = OnceCell::new();
+        INST.get_or_init(|| Arc::new(LazyBackend { inner: CpuBackend::shared() })).clone()
+            as Arc<dyn TensorBackend>
+    }
+
+    fn defer_ew(&self, op: EwOp, inputs: &[&Tensor]) -> Option<Tensor> {
+        if inputs.iter().any(|t| t.dtype() != DType::F32) {
+            return None; // defer only the f32 hot path
+        }
+        let mut shape = inputs[0].shape().clone();
+        for t in &inputs[1..] {
+            shape = shape.broadcast(t.shape()).ok()?;
+        }
+        let ins: Vec<Arc<LazyTensor>> = inputs.iter().map(|t| LazyTensor::of(t)).collect();
+        let lt = Arc::new(LazyTensor {
+            node: Node::Ew(op, ins),
+            shape,
+            dtype: DType::F32,
+            cache: Mutex::new(None),
+        });
+        Some(Tensor::from_adapter(Arc::new(Handle(lt))))
+    }
+}
+
+macro_rules! lazy_binop {
+    ($meth:ident, $op:expr) => {
+        fn $meth(&self, a: &Tensor, b: &Tensor) -> Tensor {
+            match self.defer_ew($op, &[a, b]) {
+                Some(t) => t,
+                None => self.inner.$meth(a, b),
+            }
+        }
+    };
+}
+macro_rules! lazy_unop {
+    ($meth:ident, $op:expr) => {
+        fn $meth(&self, x: &Tensor) -> Tensor {
+            match self.defer_ew($op, &[x]) {
+                Some(t) => t,
+                None => self.inner.$meth(x),
+            }
+        }
+    };
+}
+
+impl DelegateBackend for LazyBackend {
+    fn inner(&self) -> Arc<dyn TensorBackend> {
+        self.inner.clone()
+    }
+
+    fn wrapper_name(&self) -> &str {
+        "lazy"
+    }
+
+    lazy_binop!(add, EwOp::Add);
+    lazy_binop!(sub, EwOp::Sub);
+    lazy_binop!(mul, EwOp::Mul);
+    lazy_binop!(div, EwOp::Div);
+    lazy_binop!(maximum, EwOp::Maximum);
+    lazy_binop!(minimum, EwOp::Minimum);
+    lazy_unop!(neg, EwOp::Neg);
+    lazy_unop!(exp, EwOp::Exp);
+    lazy_unop!(log, EwOp::Log);
+    lazy_unop!(tanh, EwOp::Tanh);
+    lazy_unop!(sqrt, EwOp::Sqrt);
+    lazy_unop!(abs, EwOp::Abs);
+
+    fn matmul(&self, a: &Tensor, b: &Tensor) -> Tensor {
+        if a.dtype() != DType::F32 || b.dtype() != DType::F32 || a.rank() != 2 || b.rank() != 2 {
+            return self.inner.matmul(a, b);
+        }
+        let (la, lb) = (LazyTensor::of(a), LazyTensor::of(b));
+        let shape = Shape::new(vec![a.dims()[0], b.dims()[1]]);
+        let lt = Arc::new(LazyTensor {
+            node: Node::Matmul(la, lb),
+            shape,
+            dtype: DType::F32,
+            cache: Mutex::new(None),
+        });
+        Tensor::from_adapter(Arc::new(Handle(lt)))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::BackendGuard;
+
+    #[test]
+    fn defers_until_materialization() {
+        let _g = BackendGuard::install(LazyBackend::shared());
+        let a = Tensor::from_slice(&[1.0f32, 2.0], [2]);
+        let b = Tensor::from_slice(&[3.0f32, 4.0], [2]);
+        let c = a.add(&b).mul(&b).exp().log(); // 4 deferred ops
+        assert_eq!(pending_ops(&c), 4);
+        let v = c.to_vec(); // (1+3)*3 = 12, (2+4)*4 = 24, through exp/log
+        assert!((v[0] - 12.0).abs() < 1e-4 && (v[1] - 24.0).abs() < 1e-3, "{v:?}");
+        // memoized after forcing
+        assert_eq!(pending_ops(&c), 0);
+    }
+
+    #[test]
+    fn lazy_matches_eager_on_composed_expressions() {
+        crate::util::rng::seed(21);
+        let av = Tensor::rand([16, 16], 0.1, 2.0).to_vec();
+        let bv = Tensor::rand([16, 16], 0.1, 2.0).to_vec();
+        let eager = {
+            let a = Tensor::from_slice(&av, [16, 16]);
+            let b = Tensor::from_slice(&bv, [16, 16]);
+            a.matmul(&b).add(&b).tanh().mul(&a).to_vec()
+        };
+        let lazy = {
+            let _g = BackendGuard::install(LazyBackend::shared());
+            let a = Tensor::from_slice(&av, [16, 16]);
+            let b = Tensor::from_slice(&bv, [16, 16]);
+            a.matmul(&b).add(&b).tanh().mul(&a).to_vec()
+        };
+        for (e, l) in eager.iter().zip(&lazy) {
+            assert!((e - l).abs() < 1e-4, "{e} vs {l}");
+        }
+    }
+
+    #[test]
+    fn scalars_and_broadcast_fuse() {
+        let _g = BackendGuard::install(LazyBackend::shared());
+        let a = Tensor::from_slice(&[1.0f32, -2.0, 3.0], [3]);
+        let r = a.relu(); // maximum(a, scalar 0)
+        assert_eq!(r.to_vec(), vec![1.0, 0.0, 3.0]);
+        let row = Tensor::from_slice(&[1.0f32, 2.0, 3.0], [3]);
+        let m = Tensor::ones([2, 3]);
+        let s = m.add(&row); // broadcast operand
+        assert_eq!(s.to_vec(), vec![2., 3., 4., 2., 3., 4.]);
+    }
+
+    #[test]
+    fn non_deferred_ops_fall_back_and_force() {
+        let _g = BackendGuard::install(LazyBackend::shared());
+        let a = Tensor::from_slice(&[4.0f32, 1.0], [2]);
+        let c = a.add_scalar(1.0); // deferred
+        let s = c.sum(&[], false); // reduction: eager fallback, forces c
+        assert_eq!(s.item(), 7.0);
+    }
+
+    #[test]
+    fn diamond_sharing_evaluates_once() {
+        let _g = BackendGuard::install(LazyBackend::shared());
+        let a = Tensor::from_slice(&[2.0f32], [1]);
+        let shared = a.exp(); // used twice
+        let out = shared.add(&shared);
+        assert!((out.to_vec()[0] - 2.0 * 2.0f32.exp()).abs() < 1e-5);
+    }
+}

@@ -1,0 +1,777 @@
+//! The Tensor foundation API (paper §4.1.1).
+//!
+//! [`Tensor`] is a cheap shared handle to a backend-owned
+//! [`adapter::TensorAdapter`]. All operations dispatch through the small
+//! [`backend::TensorBackend`] interface; everything beyond that interface
+//! (activations, softmax, statistics, …) is derived by composition in this
+//! module, so a custom backend retargets the whole framework.
+
+pub mod adapter;
+pub mod backend;
+pub mod cpu;
+pub mod delegate;
+pub mod dtype;
+pub mod host;
+pub mod index;
+pub mod lazy;
+pub mod shape;
+pub mod xla_backend;
+
+use std::sync::Arc;
+
+pub use adapter::TensorAdapter;
+pub use backend::{
+    default_backend, set_default_backend, BackendGuard, Conv2dParams, Pool2dParams, PoolKind,
+    TensorBackend,
+};
+pub use dtype::{DType, Element};
+pub use host::HostBuffer;
+pub use shape::Shape;
+
+use crate::util::error::{Error, Result};
+
+/// A multidimensional array handle (paper §2: tensors as first-class
+/// objects). Clones share the underlying adapter.
+#[derive(Clone)]
+pub struct Tensor(Arc<dyn TensorAdapter>);
+
+impl Tensor {
+    // ---- construction ---------------------------------------------------
+
+    /// Wrap a backend adapter (backend-implementer API).
+    pub fn from_adapter(a: Arc<dyn TensorAdapter>) -> Tensor {
+        Tensor(a)
+    }
+
+    /// The adapter behind this handle (backend-implementer API).
+    pub fn adapter(&self) -> &dyn TensorAdapter {
+        self.0.as_ref()
+    }
+
+    /// Build from a slice of scalars on the default backend.
+    pub fn from_slice<T: Element>(data: &[T], shape: impl Into<Shape>) -> Tensor {
+        let shape = shape.into();
+        assert_eq!(shape.numel(), data.len(), "shape {shape} != data len {}", data.len());
+        let host = match T::DTYPE {
+            DType::F32 => HostBuffer::F32(data.iter().map(|x| x.to_f64() as f32).collect()),
+            DType::F64 => HostBuffer::F64(data.iter().map(|x| x.to_f64()).collect()),
+            DType::I32 => HostBuffer::I32(data.iter().map(|x| x.to_f64() as i32).collect()),
+            DType::I64 => HostBuffer::I64(data.iter().map(|x| x.to_f64() as i64).collect()),
+            DType::U8 | DType::Bool => {
+                HostBuffer::U8(data.iter().map(|x| x.to_f64() as u8).collect(), false)
+            }
+        };
+        default_backend().from_host(host, shape)
+    }
+
+    /// Build from host data on the default backend.
+    pub fn from_host(host: HostBuffer, shape: impl Into<Shape>) -> Tensor {
+        default_backend().from_host(host, shape.into())
+    }
+
+    /// All-zeros f32 tensor.
+    pub fn zeros(shape: impl Into<Shape>) -> Tensor {
+        default_backend().full(&shape.into(), 0.0, DType::F32)
+    }
+
+    /// All-ones f32 tensor.
+    pub fn ones(shape: impl Into<Shape>) -> Tensor {
+        default_backend().full(&shape.into(), 1.0, DType::F32)
+    }
+
+    /// Constant-filled tensor.
+    pub fn full(shape: impl Into<Shape>, value: f64, dtype: DType) -> Tensor {
+        default_backend().full(&shape.into(), value, dtype)
+    }
+
+    /// Scalar (rank-0) tensor.
+    pub fn scalar_value(value: f64, dtype: DType) -> Tensor {
+        default_backend().full(&Shape::scalar(), value, dtype)
+    }
+
+    /// `[0, 1, ..., n-1]`.
+    pub fn arange(n: usize, dtype: DType) -> Tensor {
+        default_backend().arange(n, dtype)
+    }
+
+    /// Uniform random in `[lo, hi)`.
+    pub fn rand(shape: impl Into<Shape>, lo: f64, hi: f64) -> Tensor {
+        default_backend().rand_uniform(&shape.into(), lo, hi, DType::F32)
+    }
+
+    /// Standard-normal random (scaled).
+    pub fn randn(shape: impl Into<Shape>, mean: f64, std: f64) -> Tensor {
+        default_backend().rand_normal(&shape.into(), mean, std, DType::F32)
+    }
+
+    /// Identity matrix.
+    pub fn eye(n: usize, dtype: DType) -> Tensor {
+        // derived by composition: iota == iota^T
+        let i = Tensor::arange(n, DType::I64).reshape(&[n as isize, 1]);
+        let j = Tensor::arange(n, DType::I64).reshape(&[1, n as isize]);
+        i.eq(&j).astype(dtype)
+    }
+
+    // ---- metadata ---------------------------------------------------------
+
+    /// Tensor shape.
+    pub fn shape(&self) -> &Shape {
+        self.0.shape()
+    }
+
+    /// Dimension sizes.
+    pub fn dims(&self) -> &[usize] {
+        self.0.shape().dims()
+    }
+
+    /// Size of dimension `axis` (negative wraps).
+    pub fn dim(&self, axis: isize) -> usize {
+        self.0.shape().dim(axis)
+    }
+
+    /// Number of dimensions.
+    pub fn rank(&self) -> usize {
+        self.0.shape().rank()
+    }
+
+    /// Total element count.
+    pub fn numel(&self) -> usize {
+        self.0.shape().numel()
+    }
+
+    /// Element type.
+    pub fn dtype(&self) -> DType {
+        self.0.dtype()
+    }
+
+    /// Owning backend.
+    pub fn backend(&self) -> Arc<dyn TensorBackend> {
+        self.0.backend()
+    }
+
+    // ---- materialization -----------------------------------------------------
+
+    /// Materialize to host memory (forces deferred backends).
+    pub fn to_host(&self) -> HostBuffer {
+        self.0.to_host()
+    }
+
+    /// Materialize as `Vec<f32>`.
+    pub fn to_vec(&self) -> Vec<f32> {
+        self.to_host().to_f32_vec()
+    }
+
+    /// Materialize as `Vec<f64>`.
+    pub fn to_vec_f64(&self) -> Vec<f64> {
+        self.to_host().to_f64_vec()
+    }
+
+    /// Materialize as `Vec<i64>`.
+    pub fn to_vec_i64(&self) -> Vec<i64> {
+        self.to_host().to_i64_vec()
+    }
+
+    /// Extract the single element of a size-1 tensor as f64.
+    pub fn item(&self) -> f64 {
+        assert_eq!(self.numel(), 1, "item() requires exactly one element, shape {}", self.shape());
+        self.to_host().get_f64(0)
+    }
+
+    // ---- primitive pass-throughs ------------------------------------------------
+
+    /// Element-wise negation.
+    pub fn neg(&self) -> Tensor {
+        default_backend().neg(self)
+    }
+    /// Element-wise absolute value.
+    pub fn abs(&self) -> Tensor {
+        default_backend().abs(self)
+    }
+    /// Element-wise sign (−1, 0, +1).
+    pub fn sign(&self) -> Tensor {
+        default_backend().sign(self)
+    }
+    /// Element-wise `e^x`.
+    pub fn exp(&self) -> Tensor {
+        default_backend().exp(self)
+    }
+    /// Element-wise natural log.
+    pub fn log(&self) -> Tensor {
+        default_backend().log(self)
+    }
+    /// Element-wise `ln(1+x)`.
+    pub fn log1p(&self) -> Tensor {
+        default_backend().log1p(self)
+    }
+    /// Element-wise sine.
+    pub fn sin(&self) -> Tensor {
+        default_backend().sin(self)
+    }
+    /// Element-wise cosine.
+    pub fn cos(&self) -> Tensor {
+        default_backend().cos(self)
+    }
+    /// Element-wise tanh.
+    pub fn tanh(&self) -> Tensor {
+        default_backend().tanh(self)
+    }
+    /// Element-wise square root.
+    pub fn sqrt(&self) -> Tensor {
+        default_backend().sqrt(self)
+    }
+    /// Element-wise `1/sqrt(x)`.
+    pub fn rsqrt(&self) -> Tensor {
+        default_backend().rsqrt(self)
+    }
+    /// Element-wise `1/x`.
+    pub fn reciprocal(&self) -> Tensor {
+        default_backend().reciprocal(self)
+    }
+    /// Element-wise floor.
+    pub fn floor(&self) -> Tensor {
+        default_backend().floor(self)
+    }
+    /// Element-wise ceil.
+    pub fn ceil(&self) -> Tensor {
+        default_backend().ceil(self)
+    }
+    /// Element-wise round-half-away-from-zero.
+    pub fn round(&self) -> Tensor {
+        default_backend().round(self)
+    }
+    /// Element-wise Gauss error function.
+    pub fn erf(&self) -> Tensor {
+        default_backend().erf(self)
+    }
+    /// Element-wise logical not (Bool result).
+    pub fn logical_not(&self) -> Tensor {
+        default_backend().logical_not(self)
+    }
+    /// Element-wise NaN test (Bool result).
+    pub fn isnan(&self) -> Tensor {
+        default_backend().isnan(self)
+    }
+    /// Clamp values into `[lo, hi]`.
+    pub fn clip(&self, lo: f64, hi: f64) -> Tensor {
+        default_backend().clip(self, lo, hi)
+    }
+
+    /// Element-wise sum (broadcasting).
+    pub fn add(&self, other: &Tensor) -> Tensor {
+        default_backend().add(self, other)
+    }
+    /// Element-wise difference (broadcasting).
+    pub fn sub(&self, other: &Tensor) -> Tensor {
+        default_backend().sub(self, other)
+    }
+    /// Element-wise product (broadcasting).
+    pub fn mul(&self, other: &Tensor) -> Tensor {
+        default_backend().mul(self, other)
+    }
+    /// Element-wise quotient (broadcasting).
+    pub fn div(&self, other: &Tensor) -> Tensor {
+        default_backend().div(self, other)
+    }
+    /// Element-wise power (broadcasting).
+    pub fn pow(&self, other: &Tensor) -> Tensor {
+        default_backend().pow(self, other)
+    }
+    /// Element-wise minimum (broadcasting).
+    pub fn minimum(&self, other: &Tensor) -> Tensor {
+        default_backend().minimum(self, other)
+    }
+    /// Element-wise maximum (broadcasting).
+    pub fn maximum(&self, other: &Tensor) -> Tensor {
+        default_backend().maximum(self, other)
+    }
+    /// Element-wise remainder (broadcasting).
+    pub fn rem(&self, other: &Tensor) -> Tensor {
+        default_backend().rem(self, other)
+    }
+
+    /// Element-wise equality (Bool result).
+    pub fn eq(&self, other: &Tensor) -> Tensor {
+        default_backend().eq(self, other)
+    }
+    /// Element-wise inequality (Bool result).
+    pub fn neq(&self, other: &Tensor) -> Tensor {
+        default_backend().neq(self, other)
+    }
+    /// Element-wise `<` (Bool result).
+    pub fn lt(&self, other: &Tensor) -> Tensor {
+        default_backend().lt(self, other)
+    }
+    /// Element-wise `<=` (Bool result).
+    pub fn le(&self, other: &Tensor) -> Tensor {
+        default_backend().le(self, other)
+    }
+    /// Element-wise `>` (Bool result).
+    pub fn gt(&self, other: &Tensor) -> Tensor {
+        default_backend().gt(self, other)
+    }
+    /// Element-wise `>=` (Bool result).
+    pub fn ge(&self, other: &Tensor) -> Tensor {
+        default_backend().ge(self, other)
+    }
+    /// Element-wise logical and.
+    pub fn logical_and(&self, other: &Tensor) -> Tensor {
+        default_backend().logical_and(self, other)
+    }
+    /// Element-wise logical or.
+    pub fn logical_or(&self, other: &Tensor) -> Tensor {
+        default_backend().logical_or(self, other)
+    }
+
+    fn norm_axes(&self, axes: &[isize]) -> Vec<usize> {
+        if axes.is_empty() {
+            return (0..self.rank()).collect();
+        }
+        let mut v: Vec<usize> = axes.iter().map(|&a| self.shape().normalize_axis(a)).collect();
+        v.sort_unstable();
+        v.dedup();
+        v
+    }
+
+    /// Sum over `axes` (empty = all).
+    pub fn sum(&self, axes: &[isize], keepdims: bool) -> Tensor {
+        default_backend().sum(self, &self.norm_axes(axes), keepdims)
+    }
+    /// Product over `axes` (empty = all).
+    pub fn prod(&self, axes: &[isize], keepdims: bool) -> Tensor {
+        default_backend().prod(self, &self.norm_axes(axes), keepdims)
+    }
+    /// Max over `axes` (empty = all).
+    pub fn max(&self, axes: &[isize], keepdims: bool) -> Tensor {
+        default_backend().max_reduce(self, &self.norm_axes(axes), keepdims)
+    }
+    /// Min over `axes` (empty = all).
+    pub fn min(&self, axes: &[isize], keepdims: bool) -> Tensor {
+        default_backend().min_reduce(self, &self.norm_axes(axes), keepdims)
+    }
+    /// Argmax along `axis`.
+    pub fn argmax(&self, axis: isize, keepdims: bool) -> Tensor {
+        default_backend().argmax(self, self.shape().normalize_axis(axis), keepdims)
+    }
+    /// Argmin along `axis`.
+    pub fn argmin(&self, axis: isize, keepdims: bool) -> Tensor {
+        default_backend().argmin(self, self.shape().normalize_axis(axis), keepdims)
+    }
+    /// Logical any over `axes`.
+    pub fn any(&self, axes: &[isize], keepdims: bool) -> Tensor {
+        default_backend().any(self, &self.norm_axes(axes), keepdims)
+    }
+    /// Logical all over `axes`.
+    pub fn all(&self, axes: &[isize], keepdims: bool) -> Tensor {
+        default_backend().all(self, &self.norm_axes(axes), keepdims)
+    }
+    /// Inclusive cumulative sum along `axis`.
+    pub fn cumsum(&self, axis: isize) -> Tensor {
+        default_backend().cumsum(self, self.shape().normalize_axis(axis))
+    }
+
+    /// Matrix product (see [`TensorBackend::matmul`]).
+    pub fn matmul(&self, other: &Tensor) -> Tensor {
+        default_backend().matmul(self, other)
+    }
+
+    /// 2-D convolution.
+    pub fn conv2d(&self, w: &Tensor, p: Conv2dParams) -> Tensor {
+        default_backend().conv2d(self, w, p)
+    }
+    /// 2-D pooling.
+    pub fn pool2d(&self, p: Pool2dParams) -> Tensor {
+        default_backend().pool2d(self, p)
+    }
+
+    /// Reshape (supports one `-1` wildcard).
+    pub fn reshape(&self, dims: &[isize]) -> Tensor {
+        let target = self.shape().resolve_reshape(dims).expect("bad reshape");
+        default_backend().reshape(self, &target)
+    }
+    /// Permute dimensions.
+    pub fn transpose(&self, perm: &[usize]) -> Tensor {
+        assert_eq!(perm.len(), self.rank(), "perm rank mismatch");
+        default_backend().transpose(self, perm)
+    }
+    /// Swap the last two dimensions (matrix transpose).
+    pub fn t(&self) -> Tensor {
+        let r = self.rank();
+        assert!(r >= 2, "t() requires rank >= 2");
+        let mut perm: Vec<usize> = (0..r).collect();
+        perm.swap(r - 2, r - 1);
+        self.transpose(&perm)
+    }
+    /// Rectangular slice `[starts, ends)`.
+    pub fn slice(&self, starts: &[usize], ends: &[usize]) -> Tensor {
+        default_backend().slice(self, starts, ends)
+    }
+    /// Slice a single axis, keeping others whole.
+    pub fn narrow(&self, axis: isize, start: usize, len: usize) -> Tensor {
+        let a = self.shape().normalize_axis(axis);
+        let mut starts = vec![0; self.rank()];
+        let mut ends = self.dims().to_vec();
+        starts[a] = start;
+        ends[a] = start + len;
+        self.slice(&starts, &ends)
+    }
+    /// Concatenate along `axis`.
+    pub fn concat(xs: &[&Tensor], axis: isize) -> Tensor {
+        assert!(!xs.is_empty(), "concat of zero tensors");
+        let a = xs[0].shape().normalize_axis(axis);
+        default_backend().concat(xs, a)
+    }
+    /// Stack along a new leading axis.
+    pub fn stack(xs: &[&Tensor], axis: isize) -> Tensor {
+        let expanded: Vec<Tensor> = xs
+            .iter()
+            .map(|x| {
+                let mut d: Vec<isize> = x.dims().iter().map(|&v| v as isize).collect();
+                let a = if axis < 0 { (x.rank() as isize + 1 + axis) as usize } else { axis as usize };
+                d.insert(a, 1);
+                x.reshape(&d)
+            })
+            .collect();
+        let refs: Vec<&Tensor> = expanded.iter().collect();
+        Tensor::concat(&refs, axis)
+    }
+    /// Constant-pad.
+    pub fn pad(&self, pads: &[(usize, usize)], value: f64) -> Tensor {
+        default_backend().pad(self, pads, value)
+    }
+    /// Tile along each dimension.
+    pub fn tile(&self, reps: &[usize]) -> Tensor {
+        default_backend().tile(self, reps)
+    }
+    /// Reverse along `axes`.
+    pub fn flip(&self, axes: &[isize]) -> Tensor {
+        default_backend().flip(self, &self.norm_axes(axes))
+    }
+    /// Gather along `axis` by 1-D integer `indices`.
+    pub fn index_select(&self, axis: isize, indices: &Tensor) -> Tensor {
+        default_backend().index_select(self, self.shape().normalize_axis(axis), indices)
+    }
+    /// `out = self; out[idx[i]] += src[i]` along axis 0.
+    pub fn scatter_add(&self, indices: &Tensor, src: &Tensor) -> Tensor {
+        default_backend().scatter_add(self, indices, src)
+    }
+    /// Element-wise select.
+    pub fn where_cond(cond: &Tensor, a: &Tensor, b: &Tensor) -> Tensor {
+        default_backend().where_cond(cond, a, b)
+    }
+    /// Cast dtype.
+    pub fn astype(&self, dtype: DType) -> Tensor {
+        default_backend().astype(self, dtype)
+    }
+    /// Deep copy.
+    pub fn copy(&self) -> Tensor {
+        default_backend().copy(self)
+    }
+    /// Broadcast to a target shape (derived: tile of size-1 dims).
+    pub fn broadcast_to(&self, target: impl Into<Shape>) -> Tensor {
+        let target = target.into();
+        let bshape = self.shape().broadcast(&target).expect("broadcast_to failed");
+        assert_eq!(bshape, target, "{} does not broadcast to {}", self.shape(), target);
+        // add with zeros of target shape — backends fuse/optimize as they wish
+        self.add(&default_backend().full(&target, 0.0, self.dtype()))
+    }
+
+    // ---- scalar conveniences -------------------------------------------------
+
+    fn scalar_like(&self, v: f64) -> Tensor {
+        default_backend().full(&Shape::scalar(), v, self.dtype())
+    }
+    /// Add a scalar.
+    pub fn add_scalar(&self, v: f64) -> Tensor {
+        self.add(&self.scalar_like(v))
+    }
+    /// Subtract a scalar.
+    pub fn sub_scalar(&self, v: f64) -> Tensor {
+        self.sub(&self.scalar_like(v))
+    }
+    /// Multiply by a scalar.
+    pub fn mul_scalar(&self, v: f64) -> Tensor {
+        self.mul(&self.scalar_like(v))
+    }
+    /// Divide by a scalar.
+    pub fn div_scalar(&self, v: f64) -> Tensor {
+        self.div(&self.scalar_like(v))
+    }
+    /// Raise to a scalar power.
+    pub fn pow_scalar(&self, v: f64) -> Tensor {
+        self.pow(&self.scalar_like(v))
+    }
+
+    // ---- derived operators (composition over the primitive API) ---------------
+
+    /// Rectified linear unit — derived from `maximum` (paper §4.1.1's
+    /// canonical composition example).
+    pub fn relu(&self) -> Tensor {
+        self.maximum(&self.scalar_like(0.0))
+    }
+
+    /// Logistic sigmoid.
+    pub fn sigmoid(&self) -> Tensor {
+        // 1 / (1 + e^-x)
+        self.neg().exp().add_scalar(1.0).reciprocal()
+    }
+
+    /// Gaussian error linear unit (exact, via erf).
+    pub fn gelu(&self) -> Tensor {
+        // x * 0.5 * (1 + erf(x / sqrt(2)))
+        let inner = self.mul_scalar(1.0 / std::f64::consts::SQRT_2).erf().add_scalar(1.0);
+        self.mul(&inner).mul_scalar(0.5)
+    }
+
+    /// SiLU / swish.
+    pub fn silu(&self) -> Tensor {
+        self.mul(&self.sigmoid())
+    }
+
+    /// Mean over `axes` (empty = all).
+    pub fn mean(&self, axes: &[isize], keepdims: bool) -> Tensor {
+        let axes_n = self.norm_axes(axes);
+        let count: usize = axes_n.iter().map(|&a| self.dims()[a]).product();
+        self.sum(axes, keepdims).div_scalar(count as f64)
+    }
+
+    /// Population variance over `axes`.
+    pub fn var(&self, axes: &[isize], keepdims: bool) -> Tensor {
+        let mu = self.mean(axes, true);
+        let centered = self.sub(&mu);
+        centered.mul(&centered).mean(axes, keepdims)
+    }
+
+    /// Population standard deviation over `axes`.
+    pub fn std(&self, axes: &[isize], keepdims: bool) -> Tensor {
+        self.var(axes, keepdims).sqrt()
+    }
+
+    /// Numerically-stable softmax along `axis`.
+    pub fn softmax(&self, axis: isize) -> Tensor {
+        let m = self.max(&[axis], true);
+        let e = self.sub(&m).exp();
+        let s = e.sum(&[axis], true);
+        e.div(&s)
+    }
+
+    /// Numerically-stable log-softmax along `axis`.
+    pub fn log_softmax(&self, axis: isize) -> Tensor {
+        let m = self.max(&[axis], true);
+        let shifted = self.sub(&m);
+        let lse = shifted.exp().sum(&[axis], true).log();
+        shifted.sub(&lse)
+    }
+
+    /// One-hot encode an integer tensor into `classes` classes (appends a
+    /// trailing class dimension; f32 result).
+    pub fn one_hot(&self, classes: usize) -> Tensor {
+        let mut dims: Vec<isize> = self.dims().iter().map(|&d| d as isize).collect();
+        dims.push(1);
+        let idx = self.astype(DType::I64).reshape(&dims);
+        let mut cshape = vec![1isize; self.rank()];
+        cshape.push(classes as isize);
+        let cls = Tensor::arange(classes, DType::I64).reshape(&cshape);
+        idx.eq(&cls).astype(DType::F32)
+    }
+
+    /// Lower-triangular (inclusive) mask of shape `[n, n]`, Bool.
+    pub fn tril_mask(n: usize) -> Tensor {
+        let i = Tensor::arange(n, DType::I64).reshape(&[n as isize, 1]);
+        let j = Tensor::arange(n, DType::I64).reshape(&[1, n as isize]);
+        j.le(&i)
+    }
+
+    /// Squared L2 norm of all elements (scalar tensor).
+    pub fn norm_sq(&self) -> Tensor {
+        self.mul(self).sum(&[], false)
+    }
+
+    /// Check element-wise closeness with another tensor.
+    pub fn allclose(&self, other: &Tensor, atol: f64, rtol: f64) -> bool {
+        if self.shape() != other.shape() {
+            return false;
+        }
+        let a = self.to_vec_f64();
+        let b = other.to_vec_f64();
+        a.iter().zip(&b).all(|(&x, &y)| (x - y).abs() <= atol + rtol * y.abs().max(x.abs()))
+    }
+
+    /// Like [`Tensor::allclose`] but returns the worst absolute deviation
+    /// for diagnostics.
+    pub fn max_abs_diff(&self, other: &Tensor) -> Result<f64> {
+        if self.shape() != other.shape() {
+            return Err(Error::ShapeMismatch(format!(
+                "{} vs {}",
+                self.shape(),
+                other.shape()
+            )));
+        }
+        let a = self.to_vec_f64();
+        let b = other.to_vec_f64();
+        Ok(a.iter().zip(&b).map(|(&x, &y)| (x - y).abs()).fold(0.0, f64::max))
+    }
+}
+
+macro_rules! impl_binop {
+    ($trait:ident, $meth:ident) => {
+        impl std::ops::$trait<&Tensor> for &Tensor {
+            type Output = Tensor;
+            fn $meth(self, rhs: &Tensor) -> Tensor {
+                Tensor::$meth(self, rhs)
+            }
+        }
+        impl std::ops::$trait<Tensor> for Tensor {
+            type Output = Tensor;
+            fn $meth(self, rhs: Tensor) -> Tensor {
+                Tensor::$meth(&self, &rhs)
+            }
+        }
+        impl std::ops::$trait<f64> for &Tensor {
+            type Output = Tensor;
+            fn $meth(self, rhs: f64) -> Tensor {
+                Tensor::$meth(self, &self.scalar_like(rhs))
+            }
+        }
+    };
+}
+impl_binop!(Add, add);
+impl_binop!(Sub, sub);
+impl_binop!(Mul, mul);
+impl_binop!(Div, div);
+
+impl std::ops::Neg for &Tensor {
+    type Output = Tensor;
+    fn neg(self) -> Tensor {
+        Tensor::neg(self)
+    }
+}
+
+impl std::fmt::Debug for Tensor {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "Tensor(shape={}, dtype={}, backend={})",
+            self.shape(),
+            self.dtype(),
+            default_backend().name()
+        )?;
+        if self.numel() <= 16 {
+            write!(f, " {:?}", self.to_vec_f64())?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn creation_and_metadata() {
+        let t = Tensor::from_slice(&[1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0], [2, 3]);
+        assert_eq!(t.dims(), &[2, 3]);
+        assert_eq!(t.dtype(), DType::F32);
+        assert_eq!(t.numel(), 6);
+        assert_eq!(t.to_vec(), vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        let z = Tensor::zeros([4]);
+        assert_eq!(z.to_vec(), vec![0.0; 4]);
+        let o = Tensor::full([2], 7.0, DType::I64);
+        assert_eq!(o.to_vec_i64(), vec![7, 7]);
+    }
+
+    #[test]
+    fn eye_and_arange_composition() {
+        let e = Tensor::eye(3, DType::F32);
+        assert_eq!(e.to_vec(), vec![1., 0., 0., 0., 1., 0., 0., 0., 1.]);
+        let a = Tensor::arange(4, DType::I32);
+        assert_eq!(a.to_vec_i64(), vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn relu_is_composed_from_maximum() {
+        let t = Tensor::from_slice(&[-2.0f32, -0.5, 0.0, 3.0], [4]);
+        assert_eq!(t.relu().to_vec(), vec![0.0, 0.0, 0.0, 3.0]);
+    }
+
+    #[test]
+    fn softmax_rows_sum_to_one() {
+        let t = Tensor::rand([3, 7], -4.0, 4.0);
+        let s = t.softmax(-1);
+        let sums = s.sum(&[-1], false).to_vec();
+        for v in sums {
+            assert!((v - 1.0).abs() < 1e-5, "row sum {v}");
+        }
+        // log_softmax == log(softmax)
+        let ls = t.log_softmax(-1);
+        assert!(ls.exp().allclose(&s, 1e-5, 1e-5));
+    }
+
+    #[test]
+    fn mean_var_std() {
+        let t = Tensor::from_slice(&[1.0f32, 2.0, 3.0, 4.0], [4]);
+        assert!((t.mean(&[], false).item() - 2.5).abs() < 1e-6);
+        assert!((t.var(&[], false).item() - 1.25).abs() < 1e-6);
+        assert!((t.std(&[], false).item() - 1.25f64.sqrt()).abs() < 1e-6);
+    }
+
+    #[test]
+    fn one_hot_encodes() {
+        let t = Tensor::from_slice(&[0i64, 2, 1], [3]);
+        let oh = t.one_hot(3);
+        assert_eq!(oh.dims(), &[3, 3]);
+        assert_eq!(oh.to_vec(), vec![1., 0., 0., 0., 0., 1., 0., 1., 0.]);
+    }
+
+    #[test]
+    fn tril_mask_shape() {
+        let m = Tensor::tril_mask(3);
+        assert_eq!(m.dtype(), DType::Bool);
+        assert_eq!(m.to_vec(), vec![1., 0., 0., 1., 1., 0., 1., 1., 1.]);
+    }
+
+    #[test]
+    fn operator_overloads() {
+        let a = Tensor::from_slice(&[1.0f32, 2.0], [2]);
+        let b = Tensor::from_slice(&[3.0f32, 5.0], [2]);
+        assert_eq!((&a + &b).to_vec(), vec![4.0, 7.0]);
+        assert_eq!((&b - &a).to_vec(), vec![2.0, 3.0]);
+        assert_eq!((&a * &b).to_vec(), vec![3.0, 10.0]);
+        assert_eq!((&b / &a).to_vec(), vec![3.0, 2.5]);
+        assert_eq!((&a * 2.0).to_vec(), vec![2.0, 4.0]);
+        assert_eq!((-&a).to_vec(), vec![-1.0, -2.0]);
+    }
+
+    #[test]
+    fn narrow_and_stack() {
+        let t = Tensor::from_slice(&[1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0], [2, 3]);
+        let n = t.narrow(1, 1, 2);
+        assert_eq!(n.dims(), &[2, 2]);
+        assert_eq!(n.to_vec(), vec![2.0, 3.0, 5.0, 6.0]);
+        let s = Tensor::stack(&[&t, &t], 0);
+        assert_eq!(s.dims(), &[2, 2, 3]);
+    }
+
+    #[test]
+    fn broadcast_to_expands() {
+        let t = Tensor::from_slice(&[1.0f32, 2.0], [2, 1]);
+        let b = t.broadcast_to([2, 3]);
+        assert_eq!(b.to_vec(), vec![1., 1., 1., 2., 2., 2.]);
+    }
+
+    #[test]
+    fn item_panics_on_non_scalar() {
+        let t = Tensor::zeros([2]);
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| t.item()));
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn allclose_and_max_abs_diff() {
+        let a = Tensor::from_slice(&[1.0f32, 2.0], [2]);
+        let b = Tensor::from_slice(&[1.0f32, 2.0001], [2]);
+        assert!(a.allclose(&b, 1e-3, 0.0));
+        assert!(!a.allclose(&b, 1e-6, 0.0));
+        assert!(a.max_abs_diff(&b).unwrap() < 2e-4);
+        assert!(a.max_abs_diff(&Tensor::zeros([3])).is_err());
+    }
+}

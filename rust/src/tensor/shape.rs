@@ -1,0 +1,327 @@
+//! Shapes, strides, and broadcasting.
+//!
+//! Tensors are row-major ("C order"): the last dimension is contiguous.
+//! Broadcasting follows NumPy rules — shapes are aligned at the trailing
+//! dimensions and size-1 dimensions stretch.
+
+use crate::util::error::{Error, Result};
+
+/// A tensor shape (dimension sizes). Rank-0 (`Shape::scalar()`) denotes a
+/// scalar with one element.
+#[derive(Clone, PartialEq, Eq, Hash, Default)]
+pub struct Shape(Vec<usize>);
+
+impl Shape {
+    /// Build from dimension sizes.
+    pub fn new(dims: impl Into<Vec<usize>>) -> Self {
+        Shape(dims.into())
+    }
+
+    /// The rank-0 scalar shape.
+    pub fn scalar() -> Self {
+        Shape(Vec::new())
+    }
+
+    /// Dimension sizes.
+    pub fn dims(&self) -> &[usize] {
+        &self.0
+    }
+
+    /// Number of dimensions.
+    pub fn rank(&self) -> usize {
+        self.0.len()
+    }
+
+    /// Total number of elements.
+    pub fn numel(&self) -> usize {
+        self.0.iter().product()
+    }
+
+    /// Size of dimension `axis` (negative axes wrap).
+    pub fn dim(&self, axis: isize) -> usize {
+        self.0[self.normalize_axis(axis)]
+    }
+
+    /// Map a possibly-negative axis to `0..rank`. Panics when out of range
+    /// (an internal invariant; public APIs validate first).
+    pub fn normalize_axis(&self, axis: isize) -> usize {
+        let rank = self.rank() as isize;
+        let a = if axis < 0 { axis + rank } else { axis };
+        assert!(
+            (0..rank.max(1)).contains(&a),
+            "axis {axis} out of range for rank {rank}"
+        );
+        a as usize
+    }
+
+    /// Validate and normalize an axis, returning an error instead of
+    /// panicking.
+    pub fn checked_axis(&self, axis: isize) -> Result<usize> {
+        let rank = self.rank() as isize;
+        let a = if axis < 0 { axis + rank } else { axis };
+        if (0..rank.max(1)).contains(&a) {
+            Ok(a as usize)
+        } else {
+            Err(Error::Index(format!("axis {axis} out of range for rank {rank}")))
+        }
+    }
+
+    /// Row-major strides (in elements).
+    pub fn strides(&self) -> Vec<usize> {
+        let mut s = vec![1usize; self.rank()];
+        for i in (0..self.rank().saturating_sub(1)).rev() {
+            s[i] = s[i + 1] * self.0[i + 1];
+        }
+        s
+    }
+
+    /// Broadcast two shapes (NumPy rules).
+    pub fn broadcast(&self, other: &Shape) -> Result<Shape> {
+        let rank = self.rank().max(other.rank());
+        let mut out = vec![0usize; rank];
+        for i in 0..rank {
+            let a = if i < rank - self.rank() { 1 } else { self.0[i - (rank - self.rank())] };
+            let b = if i < rank - other.rank() { 1 } else { other.0[i - (rank - other.rank())] };
+            out[i] = if a == b {
+                a
+            } else if a == 1 {
+                b
+            } else if b == 1 {
+                a
+            } else {
+                return Err(Error::ShapeMismatch(format!(
+                    "cannot broadcast {self} with {other}"
+                )));
+            };
+        }
+        Ok(Shape(out))
+    }
+
+    /// Strides for iterating `self` as if broadcast to `target`:
+    /// broadcast dimensions get stride 0. `self` must be broadcastable to
+    /// `target`.
+    pub fn broadcast_strides(&self, target: &Shape) -> Result<Vec<usize>> {
+        if self.broadcast(target)? != *target {
+            return Err(Error::ShapeMismatch(format!(
+                "{self} does not broadcast to {target}"
+            )));
+        }
+        let own = self.strides();
+        let offset = target.rank() - self.rank();
+        let mut out = vec![0usize; target.rank()];
+        for i in 0..self.rank() {
+            out[offset + i] = if self.0[i] == 1 { 0 } else { own[i] };
+        }
+        Ok(out)
+    }
+
+    /// Shape with `axes` removed (for reductions with `keepdims=false`) or
+    /// set to 1 (`keepdims=true`). `axes` must be normalized and sorted.
+    pub fn reduce(&self, axes: &[usize], keepdims: bool) -> Shape {
+        let mut out = Vec::new();
+        for (i, &d) in self.0.iter().enumerate() {
+            if axes.contains(&i) {
+                if keepdims {
+                    out.push(1);
+                }
+            } else {
+                out.push(d);
+            }
+        }
+        Shape(out)
+    }
+
+    /// Resolve a reshape target that may contain a single `-1` wildcard.
+    pub fn resolve_reshape(&self, target: &[isize]) -> Result<Shape> {
+        let numel = self.numel();
+        let mut wild = None;
+        let mut known = 1usize;
+        for (i, &d) in target.iter().enumerate() {
+            if d == -1 {
+                if wild.is_some() {
+                    return Err(Error::ShapeMismatch("multiple -1 in reshape".into()));
+                }
+                wild = Some(i);
+            } else if d < 0 {
+                return Err(Error::ShapeMismatch(format!("bad dim {d} in reshape")));
+            } else {
+                known *= d as usize;
+            }
+        }
+        let mut dims: Vec<usize> =
+            target.iter().map(|&d| if d < 0 { 0 } else { d as usize }).collect();
+        if let Some(i) = wild {
+            if known == 0 || numel % known != 0 {
+                return Err(Error::ShapeMismatch(format!(
+                    "cannot infer -1 reshaping {numel} elements into {target:?}"
+                )));
+            }
+            dims[i] = numel / known;
+        }
+        let out = Shape(dims);
+        if out.numel() != numel {
+            return Err(Error::ShapeMismatch(format!(
+                "reshape {self} ({numel} elements) -> {out} ({} elements)",
+                out.numel()
+            )));
+        }
+        Ok(out)
+    }
+}
+
+impl std::fmt::Debug for Shape {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{self}")
+    }
+}
+
+impl std::fmt::Display for Shape {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "[")?;
+        for (i, d) in self.0.iter().enumerate() {
+            if i > 0 {
+                write!(f, ", ")?;
+            }
+            write!(f, "{d}")?;
+        }
+        write!(f, "]")
+    }
+}
+
+impl From<Vec<usize>> for Shape {
+    fn from(v: Vec<usize>) -> Self {
+        Shape(v)
+    }
+}
+
+impl From<&[usize]> for Shape {
+    fn from(v: &[usize]) -> Self {
+        Shape(v.to_vec())
+    }
+}
+
+impl<const N: usize> From<[usize; N]> for Shape {
+    fn from(v: [usize; N]) -> Self {
+        Shape(v.to_vec())
+    }
+}
+
+/// Iterate multi-dimensional indices of `shape`, yielding flat offsets for
+/// each of the provided stride vectors. The workhorse of broadcast loops.
+pub struct StridedIter<'a> {
+    shape: &'a [usize],
+    idx: Vec<usize>,
+    offsets: Vec<usize>,
+    strides: Vec<&'a [usize]>,
+    remaining: usize,
+}
+
+impl<'a> StridedIter<'a> {
+    /// Iterate `shape`, tracking an offset per stride vector.
+    pub fn new(shape: &'a Shape, strides: Vec<&'a [usize]>) -> Self {
+        StridedIter {
+            shape: shape.dims(),
+            idx: vec![0; shape.rank()],
+            offsets: vec![0; strides.len()],
+            strides,
+            remaining: shape.numel(),
+        }
+    }
+}
+
+impl<'a> Iterator for StridedIter<'a> {
+    type Item = Vec<usize>; // offsets snapshot
+
+    fn next(&mut self) -> Option<Vec<usize>> {
+        if self.remaining == 0 {
+            return None;
+        }
+        let out = self.offsets.clone();
+        self.remaining -= 1;
+        // increment odometer
+        for d in (0..self.shape.len()).rev() {
+            self.idx[d] += 1;
+            for (o, s) in self.offsets.iter_mut().zip(&self.strides) {
+                *o += s[d];
+            }
+            if self.idx[d] < self.shape[d] {
+                break;
+            }
+            for (o, s) in self.offsets.iter_mut().zip(&self.strides) {
+                *o -= s[d] * self.shape[d];
+            }
+            self.idx[d] = 0;
+        }
+        Some(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn strides_row_major() {
+        assert_eq!(Shape::new(vec![2, 3, 4]).strides(), vec![12, 4, 1]);
+        assert_eq!(Shape::scalar().strides(), Vec::<usize>::new());
+    }
+
+    #[test]
+    fn broadcast_rules() {
+        let a = Shape::new(vec![3, 1, 5]);
+        let b = Shape::new(vec![4, 5]);
+        assert_eq!(a.broadcast(&b).unwrap().dims(), &[3, 4, 5]);
+        let s = Shape::scalar();
+        assert_eq!(s.broadcast(&a).unwrap(), a);
+        assert!(Shape::new(vec![2]).broadcast(&Shape::new(vec![3])).is_err());
+    }
+
+    #[test]
+    fn broadcast_strides_zero_on_stretched() {
+        let a = Shape::new(vec![3, 1]);
+        let t = Shape::new(vec![2, 3, 4]);
+        assert_eq!(a.broadcast_strides(&t).unwrap(), vec![0, 1, 0]);
+        assert!(Shape::new(vec![5]).broadcast_strides(&t).is_err());
+    }
+
+    #[test]
+    fn reduce_shapes() {
+        let s = Shape::new(vec![2, 3, 4]);
+        assert_eq!(s.reduce(&[1], false).dims(), &[2, 4]);
+        assert_eq!(s.reduce(&[1], true).dims(), &[2, 1, 4]);
+        assert_eq!(s.reduce(&[0, 1, 2], false).dims(), &[] as &[usize]);
+    }
+
+    #[test]
+    fn resolve_reshape_wildcard() {
+        let s = Shape::new(vec![2, 3, 4]);
+        assert_eq!(s.resolve_reshape(&[6, -1]).unwrap().dims(), &[6, 4]);
+        assert_eq!(s.resolve_reshape(&[-1]).unwrap().dims(), &[24]);
+        assert!(s.resolve_reshape(&[-1, -1]).is_err());
+        assert!(s.resolve_reshape(&[5, -1]).is_err());
+        assert!(s.resolve_reshape(&[7, 7]).is_err());
+    }
+
+    #[test]
+    fn negative_axes() {
+        let s = Shape::new(vec![2, 3, 4]);
+        assert_eq!(s.normalize_axis(-1), 2);
+        assert_eq!(s.dim(-2), 3);
+        assert!(s.checked_axis(3).is_err());
+        assert!(s.checked_axis(-4).is_err());
+    }
+
+    #[test]
+    fn strided_iter_broadcast_walk() {
+        // walk [2,3] with a [3]-shaped operand broadcast across rows
+        let target = Shape::new(vec![2, 3]);
+        let a = Shape::new(vec![3]);
+        let sa = a.broadcast_strides(&target).unwrap();
+        let st = target.strides();
+        let offs: Vec<Vec<usize>> = StridedIter::new(&target, vec![&st, &sa]).collect();
+        assert_eq!(offs.len(), 6);
+        assert_eq!(offs[0], vec![0, 0]);
+        assert_eq!(offs[4], vec![4, 1]);
+        assert_eq!(offs[5], vec![5, 2]);
+    }
+}

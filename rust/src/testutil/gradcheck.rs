@@ -1,0 +1,90 @@
+//! Numeric gradient checking for autograd operators.
+
+use crate::autograd::Variable;
+use crate::tensor::{DType, Tensor};
+use crate::util::rng::Rng;
+
+/// Check analytic vs central-difference gradients of `f` (a scalar-valued
+/// function of one variable) at a random f64 point of shape `shape`.
+///
+/// Panics with a diagnostic on mismatch. Uses f64 inputs for stable
+/// differencing.
+pub fn check_grad(name: &str, shape: &[usize], f: impl Fn(&Variable) -> Variable) {
+    check_grad_tol(name, shape, 1e-4, 5e-3, f)
+}
+
+/// [`check_grad`] with explicit step and tolerance.
+pub fn check_grad_tol(
+    name: &str,
+    shape: &[usize],
+    eps: f64,
+    tol: f64,
+    f: impl Fn(&Variable) -> Variable,
+) {
+    let mut rng = Rng::new(0xC0FFEE ^ name.len() as u64);
+    let n: usize = shape.iter().product();
+    let base: Vec<f64> = (0..n).map(|_| rng.uniform_range(-0.9, 0.9)).collect();
+    let xt = Tensor::from_slice(&base, shape.to_vec()).astype(DType::F64);
+
+    let x = Variable::param(xt.clone());
+    let y = f(&x);
+    assert_eq!(y.numel(), 1, "{name}: gradcheck target must be scalar");
+    y.backward();
+    let analytic = x.grad().expect("no gradient").to_vec_f64();
+
+    // probe a subset of coordinates for large inputs
+    let probes: Vec<usize> = if n <= 24 {
+        (0..n).collect()
+    } else {
+        let mut p: Vec<usize> = (0..n).collect();
+        rng.shuffle(&mut p);
+        p.truncate(24);
+        p
+    };
+    for &i in &probes {
+        let mut plus = base.clone();
+        plus[i] += eps;
+        let mut minus = base.clone();
+        minus[i] -= eps;
+        let fp = f(&Variable::constant(
+            Tensor::from_slice(&plus, shape.to_vec()).astype(DType::F64),
+        ))
+        .tensor()
+        .item();
+        let fm = f(&Variable::constant(
+            Tensor::from_slice(&minus, shape.to_vec()).astype(DType::F64),
+        ))
+        .tensor()
+        .item();
+        let numeric = (fp - fm) / (2.0 * eps);
+        let denom = numeric.abs().max(analytic[i].abs()).max(1.0);
+        assert!(
+            (numeric - analytic[i]).abs() / denom < tol,
+            "{name}: grad mismatch at {i}: numeric {numeric} vs analytic {}",
+            analytic[i]
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::autograd::ops;
+
+    #[test]
+    fn passes_on_correct_gradient() {
+        check_grad("square", &[4], |x| ops::sum(&ops::mul(x, x), &[], false));
+    }
+
+    #[test]
+    #[should_panic(expected = "grad mismatch")]
+    fn fails_on_wrong_gradient() {
+        // claim d(sum(x))/dx = 2 (wrong)
+        check_grad("bogus", &[3], |x| {
+            let out = x.tensor().sum(&[], false);
+            Variable::from_op(out, vec![x.clone()], "bogus", |ins, _g| {
+                vec![Some(Tensor::full(ins[0].dims(), 2.0, DType::F64))]
+            })
+        });
+    }
+}

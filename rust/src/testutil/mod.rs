@@ -1,0 +1,5 @@
+//! In-house testing utilities: numeric gradient checking and a small
+//! property-testing harness (no external `proptest` is available offline).
+
+pub mod gradcheck;
+pub mod prop;

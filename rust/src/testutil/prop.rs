@@ -1,0 +1,84 @@
+//! A miniature property-testing harness (offline stand-in for proptest):
+//! seeded random case generation with first-failure reporting.
+
+use crate::util::rng::Rng;
+
+/// Run `cases` random test cases. `gen` builds an input from the RNG;
+/// `check` returns `Err(msg)` on a violated property. Panics with the
+/// failing case number, seed, and a `Debug` dump of the input.
+pub fn run<T: std::fmt::Debug>(
+    name: &str,
+    cases: usize,
+    mut gen: impl FnMut(&mut Rng) -> T,
+    mut check: impl FnMut(&T) -> Result<(), String>,
+) {
+    let seed = 0x5EED ^ name.bytes().fold(0u64, |a, b| a.wrapping_mul(31).wrapping_add(b as u64));
+    let mut rng = Rng::new(seed);
+    for case in 0..cases {
+        let input = gen(&mut rng);
+        if let Err(msg) = check(&input) {
+            panic!("property `{name}` failed on case {case} (seed {seed:#x}): {msg}\ninput: {input:?}");
+        }
+    }
+}
+
+/// Generate a random shape with rank in `[1, max_rank]` and each dim in
+/// `[1, max_dim]`.
+pub fn random_shape(rng: &mut Rng, max_rank: usize, max_dim: usize) -> Vec<usize> {
+    let rank = 1 + rng.below(max_rank);
+    (0..rank).map(|_| 1 + rng.below(max_dim)).collect()
+}
+
+/// Random f32 vector of length `n` in `[-bound, bound]`.
+pub fn random_vec(rng: &mut Rng, n: usize, bound: f64) -> Vec<f32> {
+    (0..n).map(|_| rng.uniform_range(-bound, bound) as f32).collect()
+}
+
+/// A broadcast-compatible variant of `shape`: random subset of dims set to
+/// 1, random leading dims dropped.
+pub fn broadcastable_shape(rng: &mut Rng, shape: &[usize]) -> Vec<usize> {
+    let drop = rng.below(shape.len() + 1);
+    let mut out: Vec<usize> = shape[drop..].to_vec();
+    for d in out.iter_mut() {
+        if rng.uniform() < 0.4 {
+            *d = 1;
+        }
+    }
+    if out.is_empty() {
+        out.push(1);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn runs_all_cases() {
+        let mut n = 0;
+        run("count", 50, |r| r.below(10), |_| {
+            n += 1;
+            Ok(())
+        });
+        assert_eq!(n, 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "property `alwaysfail` failed")]
+    fn reports_failure() {
+        run("alwaysfail", 10, |r| r.below(5), |x| Err(format!("x={x}")));
+    }
+
+    #[test]
+    fn shapes_in_bounds() {
+        let mut rng = Rng::new(1);
+        for _ in 0..100 {
+            let s = random_shape(&mut rng, 4, 6);
+            assert!((1..=4).contains(&s.len()));
+            assert!(s.iter().all(|&d| (1..=6).contains(&d)));
+            let b = broadcastable_shape(&mut rng, &s);
+            assert!(b.len() <= s.len() || (b.len() == 1 && s.is_empty()));
+        }
+    }
+}

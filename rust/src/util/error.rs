@@ -1,0 +1,65 @@
+//! Library error type. Kept deliberately small: the paper's library favors
+//! explicit, unopinionated interfaces over deep error taxonomies.
+
+use thiserror::Error;
+
+/// Errors produced by flashlight-rs.
+#[derive(Error, Debug)]
+pub enum Error {
+    /// Two shapes that were required to match (or broadcast) did not.
+    #[error("shape mismatch: {0}")]
+    ShapeMismatch(String),
+    /// An operation was invoked with an unsupported dtype.
+    #[error("dtype error: {0}")]
+    DType(String),
+    /// An index / axis was out of range.
+    #[error("index error: {0}")]
+    Index(String),
+    /// A backend does not implement the requested operation.
+    #[error("backend `{backend}` does not support {op}")]
+    Unsupported { backend: String, op: String },
+    /// Memory-manager failure.
+    #[error("memory error: {0}")]
+    Memory(String),
+    /// Distributed-runtime failure.
+    #[error("distributed error: {0}")]
+    Distributed(String),
+    /// Serialization / checkpoint failure.
+    #[error("serialization error: {0}")]
+    Serde(String),
+    /// Configuration / CLI error.
+    #[error("config error: {0}")]
+    Config(String),
+    /// PJRT / XLA runtime failure.
+    #[error("runtime error: {0}")]
+    Runtime(String),
+    /// I/O error.
+    #[error(transparent)]
+    Io(#[from] std::io::Error),
+    /// Anything else.
+    #[error("{0}")]
+    Msg(String),
+}
+
+/// Library result alias.
+pub type Result<T> = std::result::Result<T, Error>;
+
+impl Error {
+    /// Shorthand for a free-form error message.
+    pub fn msg(m: impl Into<String>) -> Self {
+        Error::Msg(m.into())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_includes_context() {
+        let e = Error::Unsupported { backend: "lazy".into(), op: "conv2d".into() };
+        assert_eq!(e.to_string(), "backend `lazy` does not support conv2d");
+        let e = Error::msg("boom");
+        assert_eq!(e.to_string(), "boom");
+    }
+}

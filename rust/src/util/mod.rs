@@ -1,0 +1,10 @@
+//! Small shared utilities: errors, RNG, parallel-for, timing.
+
+pub mod error;
+pub mod parallel;
+pub mod rng;
+pub mod timing;
+pub mod toml;
+
+pub use error::{Error, Result};
+pub use rng::Rng;

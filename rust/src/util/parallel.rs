@@ -1,0 +1,146 @@
+//! Scoped data-parallel helpers over native threads.
+//!
+//! The reference backend parallelizes its hot loops (GEMM, conv, large
+//! elementwise maps) with plain `std::thread::scope` — no external runtime.
+//! This mirrors the paper's "native C++ threads" approach for dataset
+//! parallelism and keeps the dependency surface minimal.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Number of worker threads to use for data-parallel loops.
+///
+/// Defaults to the number of available cores, overridable with
+/// `FL_NUM_THREADS`. Capped at 16: beyond that, memory bandwidth dominates
+/// for the kernel sizes this library targets.
+pub fn num_threads() -> usize {
+    static CACHED: AtomicUsize = AtomicUsize::new(0);
+    let c = CACHED.load(Ordering::Relaxed);
+    if c != 0 {
+        return c;
+    }
+    let n = std::env::var("FL_NUM_THREADS")
+        .ok()
+        .and_then(|s| s.parse::<usize>().ok())
+        .unwrap_or_else(|| {
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+        })
+        .clamp(1, 16);
+    CACHED.store(n, Ordering::Relaxed);
+    n
+}
+
+/// Minimum per-item work (in "element" units) below which we stay serial.
+pub const PAR_THRESHOLD: usize = 16 * 1024;
+
+/// Run `f(range)` over disjoint chunks of `0..n` across worker threads.
+///
+/// `f` receives `(start, end)` index pairs. Falls back to a single serial
+/// call when the problem is small or only one thread is configured.
+pub fn parallel_chunks(n: usize, min_serial: usize, f: impl Fn(usize, usize) + Sync) {
+    let threads = num_threads();
+    if threads <= 1 || n <= min_serial {
+        f(0, n);
+        return;
+    }
+    let chunks = threads.min(n.max(1));
+    let per = n.div_ceil(chunks);
+    std::thread::scope(|s| {
+        for c in 0..chunks {
+            let lo = c * per;
+            let hi = ((c + 1) * per).min(n);
+            if lo >= hi {
+                break;
+            }
+            let f = &f;
+            s.spawn(move || f(lo, hi));
+        }
+    });
+}
+
+/// Split a mutable slice into per-thread chunks and run `f(chunk_index_base,
+/// chunk)` on each in parallel. Used for filling output buffers.
+pub fn parallel_fill<T: Send>(out: &mut [T], min_serial: usize, f: impl Fn(usize, &mut [T]) + Sync) {
+    let n = out.len();
+    let threads = num_threads();
+    if threads <= 1 || n <= min_serial {
+        f(0, out);
+        return;
+    }
+    let per = n.div_ceil(threads);
+    std::thread::scope(|s| {
+        let mut rest = out;
+        let mut base = 0usize;
+        while !rest.is_empty() {
+            let take = per.min(rest.len());
+            let (head, tail) = rest.split_at_mut(take);
+            let f = &f;
+            let b = base;
+            s.spawn(move || f(b, head));
+            rest = tail;
+            base += take;
+        }
+    });
+}
+
+/// Map `0..n` to a `Vec<R>` in parallel, preserving order.
+pub fn parallel_map<R: Send + Default + Clone>(
+    n: usize,
+    min_serial: usize,
+    f: impl Fn(usize) -> R + Sync,
+) -> Vec<R> {
+    let mut out = vec![R::default(); n];
+    parallel_fill(&mut out, min_serial, |base, chunk| {
+        for (i, slot) in chunk.iter_mut().enumerate() {
+            *slot = f(base + i);
+        }
+    });
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn chunks_cover_range_exactly_once() {
+        let total = AtomicU64::new(0);
+        let n = 100_001;
+        parallel_chunks(n, 0, |lo, hi| {
+            let mut s = 0u64;
+            for i in lo..hi {
+                s += i as u64;
+            }
+            total.fetch_add(s, Ordering::Relaxed);
+        });
+        let expect = (n as u64 - 1) * n as u64 / 2;
+        assert_eq!(total.load(Ordering::Relaxed), expect);
+    }
+
+    #[test]
+    fn fill_writes_every_slot() {
+        let mut v = vec![0usize; 50_000];
+        parallel_fill(&mut v, 0, |base, chunk| {
+            for (i, x) in chunk.iter_mut().enumerate() {
+                *x = base + i;
+            }
+        });
+        for (i, x) in v.iter().enumerate() {
+            assert_eq!(*x, i);
+        }
+    }
+
+    #[test]
+    fn map_preserves_order() {
+        let v = parallel_map(10_000, 0, |i| i * 2);
+        assert_eq!(v[777], 1554);
+        assert_eq!(v.len(), 10_000);
+    }
+
+    #[test]
+    fn serial_small_input() {
+        // under threshold everything still works
+        let v = parallel_map(3, PAR_THRESHOLD, |i| i + 1);
+        assert_eq!(v, vec![1, 2, 3]);
+    }
+}

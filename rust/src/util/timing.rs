@@ -1,0 +1,123 @@
+//! Timing helpers shared by benches and the trainer.
+
+use std::time::{Duration, Instant};
+
+/// A simple stopwatch.
+#[derive(Debug)]
+pub struct Timer {
+    start: Instant,
+}
+
+impl Timer {
+    /// Start a new timer.
+    pub fn start() -> Self {
+        Timer { start: Instant::now() }
+    }
+
+    /// Elapsed time since start.
+    pub fn elapsed(&self) -> Duration {
+        self.start.elapsed()
+    }
+
+    /// Elapsed seconds as f64.
+    pub fn secs(&self) -> f64 {
+        self.elapsed().as_secs_f64()
+    }
+
+    /// Restart, returning the previous elapsed duration.
+    pub fn lap(&mut self) -> Duration {
+        let e = self.start.elapsed();
+        self.start = Instant::now();
+        e
+    }
+}
+
+/// Summary statistics over repeated measurements (used by the bench
+/// harness; criterion is unavailable offline).
+#[derive(Debug, Clone)]
+pub struct Samples {
+    /// Raw measurements in seconds.
+    pub secs: Vec<f64>,
+}
+
+impl Samples {
+    /// Collect `n` timed runs of `f`, after `warmup` untimed runs.
+    pub fn collect(warmup: usize, n: usize, mut f: impl FnMut()) -> Self {
+        for _ in 0..warmup {
+            f();
+        }
+        let mut secs = Vec::with_capacity(n);
+        for _ in 0..n {
+            let t = Timer::start();
+            f();
+            secs.push(t.secs());
+        }
+        Samples { secs }
+    }
+
+    /// Mean of the samples.
+    pub fn mean(&self) -> f64 {
+        if self.secs.is_empty() {
+            return 0.0;
+        }
+        self.secs.iter().sum::<f64>() / self.secs.len() as f64
+    }
+
+    /// Median of the samples.
+    pub fn median(&self) -> f64 {
+        if self.secs.is_empty() {
+            return 0.0;
+        }
+        let mut v = self.secs.clone();
+        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = v.len();
+        if n % 2 == 1 {
+            v[n / 2]
+        } else {
+            0.5 * (v[n / 2 - 1] + v[n / 2])
+        }
+    }
+
+    /// Population standard deviation.
+    pub fn std(&self) -> f64 {
+        let m = self.mean();
+        if self.secs.len() < 2 {
+            return 0.0;
+        }
+        (self.secs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / self.secs.len() as f64).sqrt()
+    }
+
+    /// Minimum sample.
+    pub fn min(&self) -> f64 {
+        self.secs.iter().cloned().fold(f64::INFINITY, f64::min)
+    }
+
+    /// Total across samples.
+    pub fn total(&self) -> f64 {
+        self.secs.iter().sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_basic() {
+        let s = Samples { secs: vec![1.0, 2.0, 3.0, 4.0] };
+        assert!((s.mean() - 2.5).abs() < 1e-12);
+        assert!((s.median() - 2.5).abs() < 1e-12);
+        assert!((s.min() - 1.0).abs() < 1e-12);
+        assert!((s.total() - 10.0).abs() < 1e-12);
+        let s = Samples { secs: vec![3.0, 1.0, 2.0] };
+        assert!((s.median() - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn collect_counts_runs() {
+        let mut calls = 0;
+        let s = Samples::collect(2, 5, || calls += 1);
+        assert_eq!(calls, 7);
+        assert_eq!(s.secs.len(), 5);
+    }
+}

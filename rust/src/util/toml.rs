@@ -1,0 +1,276 @@
+//! A minimal TOML-subset parser for the config system.
+//!
+//! No external `toml`/`serde` crates are available offline, and the config
+//! files this framework needs are flat: `[section]` tables with string /
+//! int / float / bool / string-array scalars. This parser supports exactly
+//! that subset, with `#` comments and quoted strings.
+
+use std::collections::BTreeMap;
+
+use crate::util::error::{Error, Result};
+
+/// A parsed scalar value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    /// String value.
+    Str(String),
+    /// Integer value.
+    Int(i64),
+    /// Float value.
+    Float(f64),
+    /// Boolean value.
+    Bool(bool),
+    /// Homogeneous array of values.
+    Array(Vec<Value>),
+}
+
+impl Value {
+    /// Interpret as string.
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+    /// Interpret as integer (ints only).
+    pub fn as_int(&self) -> Option<i64> {
+        match self {
+            Value::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+    /// Interpret as float (accepts ints).
+    pub fn as_float(&self) -> Option<f64> {
+        match self {
+            Value::Float(f) => Some(*f),
+            Value::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+    /// Interpret as bool.
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+    /// Interpret as array.
+    pub fn as_array(&self) -> Option<&[Value]> {
+        match self {
+            Value::Array(v) => Some(v),
+            _ => None,
+        }
+    }
+}
+
+/// A parsed document: `section.key -> Value`. Keys outside any section
+/// live under the empty section `""`.
+#[derive(Debug, Clone, Default)]
+pub struct Doc {
+    /// section -> key -> value
+    pub tables: BTreeMap<String, BTreeMap<String, Value>>,
+}
+
+impl Doc {
+    /// Look up `key` in `section`.
+    pub fn get(&self, section: &str, key: &str) -> Option<&Value> {
+        self.tables.get(section).and_then(|t| t.get(key))
+    }
+
+    /// Set a value (used for CLI overrides like `--set train.lr=0.1`).
+    pub fn set(&mut self, section: &str, key: &str, v: Value) {
+        self.tables.entry(section.to_string()).or_default().insert(key.to_string(), v);
+    }
+
+    /// Parse a `section.key=value` override string.
+    pub fn apply_override(&mut self, spec: &str) -> Result<()> {
+        let (path, raw) = spec
+            .split_once('=')
+            .ok_or_else(|| Error::Config(format!("override `{spec}` missing `=`")))?;
+        let (section, key) = match path.rsplit_once('.') {
+            Some((s, k)) => (s.to_string(), k.to_string()),
+            None => (String::new(), path.to_string()),
+        };
+        let v = parse_value(raw.trim())?;
+        self.set(&section, &key, v);
+        Ok(())
+    }
+}
+
+fn parse_string(s: &str) -> Result<(String, &str)> {
+    // s starts right after the opening quote
+    let mut out = String::new();
+    let mut chars = s.char_indices();
+    while let Some((i, c)) = chars.next() {
+        match c {
+            '"' => return Ok((out, &s[i + 1..])),
+            '\\' => match chars.next() {
+                Some((_, 'n')) => out.push('\n'),
+                Some((_, 't')) => out.push('\t'),
+                Some((_, '"')) => out.push('"'),
+                Some((_, '\\')) => out.push('\\'),
+                other => {
+                    return Err(Error::Config(format!("bad escape {other:?} in string")));
+                }
+            },
+            c => out.push(c),
+        }
+    }
+    Err(Error::Config("unterminated string".into()))
+}
+
+/// Parse one scalar or array value.
+pub fn parse_value(raw: &str) -> Result<Value> {
+    let raw = raw.trim();
+    if raw.is_empty() {
+        return Err(Error::Config("empty value".into()));
+    }
+    if let Some(rest) = raw.strip_prefix('"') {
+        let (s, tail) = parse_string(rest)?;
+        if !tail.trim().is_empty() {
+            return Err(Error::Config(format!("trailing characters after string: `{tail}`")));
+        }
+        return Ok(Value::Str(s));
+    }
+    if let Some(inner) = raw.strip_prefix('[') {
+        let inner = inner
+            .strip_suffix(']')
+            .ok_or_else(|| Error::Config(format!("unterminated array: `{raw}`")))?;
+        let mut items = Vec::new();
+        // split on top-level commas (strings may contain commas)
+        let mut depth_in_string = false;
+        let mut start = 0usize;
+        let bytes = inner.as_bytes();
+        for (i, &b) in bytes.iter().enumerate() {
+            match b {
+                b'"' if i == 0 || bytes[i - 1] != b'\\' => depth_in_string = !depth_in_string,
+                b',' if !depth_in_string => {
+                    let piece = inner[start..i].trim();
+                    if !piece.is_empty() {
+                        items.push(parse_value(piece)?);
+                    }
+                    start = i + 1;
+                }
+                _ => {}
+            }
+        }
+        let piece = inner[start..].trim();
+        if !piece.is_empty() {
+            items.push(parse_value(piece)?);
+        }
+        return Ok(Value::Array(items));
+    }
+    match raw {
+        "true" => return Ok(Value::Bool(true)),
+        "false" => return Ok(Value::Bool(false)),
+        _ => {}
+    }
+    if let Ok(i) = raw.parse::<i64>() {
+        return Ok(Value::Int(i));
+    }
+    if let Ok(f) = raw.parse::<f64>() {
+        return Ok(Value::Float(f));
+    }
+    // bare word — treat as string (lenient, convenient for CLI overrides)
+    Ok(Value::Str(raw.to_string()))
+}
+
+/// Parse a TOML-subset document.
+pub fn parse(text: &str) -> Result<Doc> {
+    let mut doc = Doc::default();
+    let mut section = String::new();
+    for (lineno, line) in text.lines().enumerate() {
+        let line = strip_comment(line).trim().to_string();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(name) = line.strip_prefix('[') {
+            let name = name
+                .strip_suffix(']')
+                .ok_or_else(|| Error::Config(format!("line {}: bad table header", lineno + 1)))?;
+            section = name.trim().to_string();
+            doc.tables.entry(section.clone()).or_default();
+            continue;
+        }
+        let (key, raw) = line
+            .split_once('=')
+            .ok_or_else(|| Error::Config(format!("line {}: expected `key = value`", lineno + 1)))?;
+        let v = parse_value(raw)
+            .map_err(|e| Error::Config(format!("line {}: {e}", lineno + 1)))?;
+        doc.set(&section, key.trim(), v);
+    }
+    Ok(doc)
+}
+
+fn strip_comment(line: &str) -> &str {
+    // `#` starts a comment unless inside a quoted string
+    let mut in_str = false;
+    let bytes = line.as_bytes();
+    for (i, &b) in bytes.iter().enumerate() {
+        match b {
+            b'"' if i == 0 || bytes[i - 1] != b'\\' => in_str = !in_str,
+            b'#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_and_scalars() {
+        let doc = parse(
+            r#"
+            top = 1
+            [train]            # trainer settings
+            lr = 0.1
+            steps = 300
+            name = "bert-tiny"
+            amp = false
+            tags = ["a", "b,c", 3]
+            "#,
+        )
+        .unwrap();
+        assert_eq!(doc.get("", "top").unwrap().as_int(), Some(1));
+        assert_eq!(doc.get("train", "lr").unwrap().as_float(), Some(0.1));
+        assert_eq!(doc.get("train", "steps").unwrap().as_int(), Some(300));
+        assert_eq!(doc.get("train", "name").unwrap().as_str(), Some("bert-tiny"));
+        assert_eq!(doc.get("train", "amp").unwrap().as_bool(), Some(false));
+        let arr = doc.get("train", "tags").unwrap().as_array().unwrap();
+        assert_eq!(arr[1].as_str(), Some("b,c"));
+        assert_eq!(arr[2].as_int(), Some(3));
+    }
+
+    #[test]
+    fn int_coerces_to_float() {
+        let v = parse_value("5").unwrap();
+        assert_eq!(v.as_float(), Some(5.0));
+    }
+
+    #[test]
+    fn overrides() {
+        let mut doc = Doc::default();
+        doc.apply_override("train.lr=0.5").unwrap();
+        doc.apply_override("model.name=vit").unwrap();
+        doc.apply_override("seed=42").unwrap();
+        assert_eq!(doc.get("train", "lr").unwrap().as_float(), Some(0.5));
+        assert_eq!(doc.get("model", "name").unwrap().as_str(), Some("vit"));
+        assert_eq!(doc.get("", "seed").unwrap().as_int(), Some(42));
+    }
+
+    #[test]
+    fn rejects_bad_lines() {
+        assert!(parse("[oops").is_err());
+        assert!(parse("novalue").is_err());
+        assert!(parse_value("\"unterminated").is_err());
+    }
+
+    #[test]
+    fn comment_stripping_respects_strings() {
+        let doc = parse("k = \"a # not comment\" # real comment").unwrap();
+        assert_eq!(doc.get("", "k").unwrap().as_str(), Some("a # not comment"));
+    }
+}

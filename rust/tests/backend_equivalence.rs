@@ -1,0 +1,141 @@
+//! Property tests across tensor backends: the eager CPU backend, the
+//! deferred lazy backend, and (when artifacts exist) the AOT XLA backend
+//! must agree on every composed expression — Figure 2's guarantee that the
+//! computation mode is an implementation detail behind the API.
+
+use std::sync::Arc;
+
+use flashlight::tensor::lazy::LazyBackend;
+use flashlight::tensor::{BackendGuard, Tensor, TensorBackend};
+use flashlight::testutil::prop;
+use flashlight::util::rng::Rng;
+
+/// Random element-wise expression over two operands.
+fn random_expr(rng: &mut Rng, a: &Tensor, b: &Tensor) -> Tensor {
+    let mut cur = a.clone();
+    let depth = 2 + rng.below(5);
+    for _ in 0..depth {
+        cur = match rng.below(7) {
+            0 => cur.add(b),
+            1 => cur.sub(b),
+            2 => cur.mul(b),
+            3 => cur.tanh(),
+            4 => cur.abs().add_scalar(0.1).sqrt(),
+            5 => cur.neg(),
+            _ => cur.maximum(b),
+        };
+    }
+    cur
+}
+
+#[test]
+fn prop_lazy_matches_eager_on_random_expressions() {
+    prop::run(
+        "lazy-vs-eager",
+        30,
+        |rng| {
+            let shape = prop::random_shape(rng, 3, 6);
+            let n: usize = shape.iter().product();
+            let a = prop::random_vec(rng, n, 2.0);
+            let b = prop::random_vec(rng, n, 2.0);
+            let ops_seed = rng.next_u64();
+            (shape, a, b, ops_seed)
+        },
+        |(shape, av, bv, ops_seed)| {
+            let eager = {
+                let a = Tensor::from_slice(av, shape.clone());
+                let b = Tensor::from_slice(bv, shape.clone());
+                let mut r = Rng::new(*ops_seed);
+                random_expr(&mut r, &a, &b).to_vec()
+            };
+            let lazy = {
+                let _g = BackendGuard::install(LazyBackend::shared());
+                let a = Tensor::from_slice(av, shape.clone());
+                let b = Tensor::from_slice(bv, shape.clone());
+                let mut r = Rng::new(*ops_seed);
+                random_expr(&mut r, &a, &b).to_vec()
+            };
+            for (i, (e, l)) in eager.iter().zip(&lazy).enumerate() {
+                if (e - l).abs() > 1e-4 * (1.0 + e.abs()) {
+                    return Err(format!("elem {i}: eager {e} vs lazy {l}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_broadcast_semantics_match_across_backends() {
+    prop::run(
+        "broadcast-lazy-vs-eager",
+        30,
+        |rng| {
+            let shape = prop::random_shape(rng, 3, 5);
+            let bshape = prop::broadcastable_shape(rng, &shape);
+            let n: usize = shape.iter().product();
+            let m: usize = bshape.iter().product();
+            (shape, bshape, prop::random_vec(rng, n, 3.0), prop::random_vec(rng, m, 3.0))
+        },
+        |(shape, bshape, av, bv)| {
+            let run = |lazy: bool| -> Vec<f32> {
+                let _g = lazy.then(|| BackendGuard::install(LazyBackend::shared()));
+                let a = Tensor::from_slice(av, shape.clone());
+                let b = Tensor::from_slice(bv, bshape.clone());
+                a.add(&b).mul(&b).to_vec()
+            };
+            let (e, l) = (run(false), run(true));
+            if e.len() != l.len() {
+                return Err(format!("length {} vs {}", e.len(), l.len()));
+            }
+            for (i, (x, y)) in e.iter().zip(&l).enumerate() {
+                if (x - y).abs() > 1e-4 {
+                    return Err(format!("elem {i}: {x} vs {y}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_matmul_associates_with_identity() {
+    prop::run(
+        "matmul-identity",
+        20,
+        |rng| {
+            let m = 1 + rng.below(8);
+            let k = 1 + rng.below(8);
+            (m, k, prop::random_vec(rng, m * k, 2.0))
+        },
+        |(m, k, data)| {
+            let a = Tensor::from_slice(data, vec![*m, *k]);
+            let i = Tensor::eye(*k, flashlight::tensor::DType::F32);
+            let out = a.matmul(&i).to_vec();
+            for (x, y) in out.iter().zip(data) {
+                if (x - y).abs() > 1e-5 {
+                    return Err(format!("{x} != {y}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn xla_backend_matches_cpu_when_available() {
+    let Some(xla) = flashlight::tensor::xla_backend::XlaBackend::from_global_runtime() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let xla: Arc<dyn TensorBackend> = xla;
+    flashlight::util::rng::seed(77);
+    for (m, k, n) in [(32usize, 256usize, 256usize), (64, 256, 256)] {
+        let a = Tensor::rand([m, k], -1.0, 1.0);
+        let b = Tensor::rand([k, n], -1.0, 1.0);
+        let cpu_out = a.matmul(&b);
+        let xla_out = xla.matmul(&a, &b);
+        let d = cpu_out.max_abs_diff(&xla_out).unwrap();
+        assert!(d < 1e-3, "{m}x{k}x{n}: {d}");
+    }
+}

