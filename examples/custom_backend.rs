@@ -38,6 +38,8 @@ impl DelegateBackend for CustomAdd {
     }
 }
 
+flashlight::impl_delegate_backend!(CustomAdd);
+
 fn main() {
     // 1) swap the default backend — one line, whole framework retargets
     let be = Arc::new(CustomAdd { inner: CpuBackend::shared(), adds: AtomicU64::new(0) });

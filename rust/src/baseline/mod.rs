@@ -129,6 +129,8 @@ impl DelegateBackend for BloatBackend {
     }
 }
 
+crate::impl_delegate_backend!(BloatBackend);
+
 #[cfg(test)]
 mod tests {
     use super::*;

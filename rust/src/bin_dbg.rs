@@ -1,8 +1,25 @@
+//! `fl_dbg` — tiny PJRT artifact-compilation probe. Parses one HLO-text
+//! artifact and attempts to compile it, printing each failure step instead
+//! of panicking (the offline build stubs PJRT, so the client step reports
+//! unavailability).
+
+use flashlight::runtime::xla;
+
 fn main() {
     let path = "artifacts/linear_gelu__32x256__256x256__256.hlo.txt";
-    let client = xla::PjRtClient::cpu().unwrap();
+    let client = match xla::PjRtClient::cpu() {
+        Ok(c) => c,
+        Err(e) => {
+            println!("pjrt client err: {e}");
+            return;
+        }
+    };
     let proto = match xla::HloModuleProto::from_text_file(path) {
-        Ok(p) => p, Err(e) => { println!("parse err: {e}"); return }
+        Ok(p) => p,
+        Err(e) => {
+            println!("parse err: {e}");
+            return;
+        }
     };
     let comp = xla::XlaComputation::from_proto(&proto);
     match client.compile(&comp) {

@@ -1,6 +1,18 @@
 //! Training loops (paper Listings 9–10 generalized): classifier and LM
 //! trainers with meters, gradient clipping, LR schedules, checkpoints, and
 //! a data-parallel launcher that replicates the model across ring workers.
+//!
+//! The launcher ([`train_data_parallel`]) is the application-layer face of
+//! the open [`DistributedInterface`]: it builds an in-process ring with
+//! [`init_ring`], broadcasts rank 0's parameters so every replica starts
+//! identical, and averages gradients after each backward pass through a
+//! [`GradientSynchronizer`]. Because the ring all-reduce is bitwise
+//! deterministic, replicas stay exactly synchronized — checked by
+//! [`replica_divergence`] and the tests below.
+//!
+//! Single-process entry points:
+//! - [`train_classifier`] — `(input, label)` batches, eval pass, meters.
+//! - [`train_lm`] — autoregressive windows through [`BertLike`].
 
 use std::sync::Arc;
 

@@ -1,0 +1,405 @@
+//! The open distributed-training interface (paper §4.1.3, Listing 5).
+//!
+//! Flashlight's third foundational API: a deliberately small collective-
+//! communication surface — rank, world size, `all_reduce`, `broadcast`,
+//! `barrier` — behind which any transport can sit. The paper's library
+//! backs this with NCCL/Gloo rings; this reproduction ships an **in-process
+//! ring** ([`RingWorker`], built by [`init_ring`]) that runs each simulated
+//! worker on its own native thread and exchanges chunks over `mpsc`
+//! channels, implementing the classic bandwidth-optimal ring all-reduce
+//! (reduce-scatter followed by all-gather). Because every chunk's final
+//! sum is produced at exactly one worker and then replicated verbatim,
+//! results are **bitwise identical across workers** — the property the
+//! data-parallel trainer's replica-divergence checks rely on.
+//!
+//! Layered on top, [`GradientSynchronizer`] (in [`sync`]) performs
+//! DDP-style bucketed gradient averaging after the backward pass.
+//!
+//! # Contract
+//!
+//! Collectives are *collective*: every worker of a ring must invoke the
+//! same operations in the same order with identically-shaped tensors, or
+//! the ring deadlocks/misroutes (the standard MPI/NCCL contract). Channels
+//! are unbounded, so individual sends never block and the ring cannot
+//! deadlock under a correct call sequence.
+//!
+//! # Example
+//!
+//! ```
+//! use flashlight::dist::{init_ring, DistributedInterface};
+//! use flashlight::tensor::Tensor;
+//!
+//! let workers = init_ring(2);
+//! let sums: Vec<Vec<f32>> = std::thread::scope(|s| {
+//!     workers
+//!         .into_iter()
+//!         .map(|w| {
+//!             s.spawn(move || {
+//!                 let mine = Tensor::full([4], (w.world_rank() + 1) as f64,
+//!                                         flashlight::tensor::DType::F32);
+//!                 w.all_reduce(&mine, 1.0).to_vec()
+//!             })
+//!         })
+//!         .collect::<Vec<_>>()
+//!         .into_iter()
+//!         .map(|h| h.join().unwrap())
+//!         .collect()
+//! });
+//! assert_eq!(sums[0], vec![3.0; 4]); // 1 + 2
+//! assert_eq!(sums[0], sums[1]);
+//! ```
+
+pub mod sync;
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Mutex;
+
+use crate::tensor::{HostBuffer, Tensor};
+
+pub use sync::GradientSynchronizer;
+
+/// The open distributed interface (paper Listing 5): the complete surface
+/// a transport must implement to plug distributed training into the
+/// framework. Implementations must be thread-safe; each worker is used
+/// from its own thread.
+pub trait DistributedInterface: Send + Sync {
+    /// This worker's rank in `0..world_size`.
+    fn world_rank(&self) -> usize;
+
+    /// Number of workers in the communicator.
+    fn world_size(&self) -> usize;
+
+    /// Element-wise sum of `t` across all workers, multiplied by `scale`
+    /// (pass `1.0 / world_size` for an average). Operates on the f32
+    /// materialization of `t`; the result is bitwise identical on every
+    /// worker.
+    fn all_reduce(&self, t: &Tensor, scale: f64) -> Tensor;
+
+    /// Every worker receives `root`'s tensor. Non-root callers pass their
+    /// own same-shaped tensor (its value is ignored, its shape is used).
+    fn broadcast(&self, t: &Tensor, root: usize) -> Tensor;
+
+    /// Block until every worker in the ring has reached the barrier.
+    fn barrier(&self);
+}
+
+/// Ring message: an all-reduce chunk, a broadcast payload, or a barrier
+/// token. One FIFO channel per ring edge carries all three (collective
+/// ordering keeps them unambiguous).
+enum Msg {
+    Chunk(Vec<f32>),
+    Host(HostBuffer),
+    Token,
+}
+
+/// One worker of an in-process ring communicator. Owns a sender to its
+/// successor and a receiver from its predecessor; see [`init_ring`].
+pub struct RingWorker {
+    rank: usize,
+    world: usize,
+    tx_next: Sender<Msg>,
+    // Receiver is !Sync; the Mutex restores Sync for &self collectives.
+    rx_prev: Mutex<Receiver<Msg>>,
+}
+
+/// Build an `n`-worker in-process ring (worker `i` sends to `(i+1) % n`).
+/// Move each returned [`RingWorker`] onto its own thread and drive the
+/// same collective sequence on all of them. `n == 0` is treated as 1.
+pub fn init_ring(n: usize) -> Vec<RingWorker> {
+    let n = n.max(1);
+    let mut senders = Vec::with_capacity(n);
+    let mut receivers = Vec::with_capacity(n);
+    for _ in 0..n {
+        let (tx, rx) = channel();
+        senders.push(Some(tx));
+        receivers.push(Some(rx));
+    }
+    // worker i keeps the sender of edge i (i -> i+1) and the receiver of
+    // edge i-1 (i-1 -> i)
+    (0..n)
+        .map(|i| RingWorker {
+            rank: i,
+            world: n,
+            tx_next: senders[i].take().unwrap(),
+            rx_prev: Mutex::new(receivers[(i + n - 1) % n].take().unwrap()),
+        })
+        .collect()
+}
+
+/// `(start, end)` element bounds splitting `len` into `n` nearly equal
+/// chunks (leading chunks absorb the remainder).
+fn chunk_bounds(len: usize, n: usize) -> Vec<(usize, usize)> {
+    let per = len / n;
+    let rem = len % n;
+    let mut out = Vec::with_capacity(n);
+    let mut start = 0usize;
+    for i in 0..n {
+        let size = per + usize::from(i < rem);
+        out.push((start, start + size));
+        start += size;
+    }
+    out
+}
+
+impl RingWorker {
+    fn send(&self, m: Msg) {
+        self.tx_next.send(m).expect("ring peer hung up");
+    }
+
+    fn recv_chunk(&self) -> Vec<f32> {
+        match self.rx_prev.lock().unwrap().recv().expect("ring peer hung up") {
+            Msg::Chunk(v) => v,
+            _ => panic!("ring protocol violation: expected chunk"),
+        }
+    }
+
+    fn recv_host(&self) -> HostBuffer {
+        match self.rx_prev.lock().unwrap().recv().expect("ring peer hung up") {
+            Msg::Host(h) => h,
+            _ => panic!("ring protocol violation: expected broadcast payload"),
+        }
+    }
+
+    fn recv_token(&self) {
+        match self.rx_prev.lock().unwrap().recv().expect("ring peer hung up") {
+            Msg::Token => {}
+            _ => panic!("ring protocol violation: expected barrier token"),
+        }
+    }
+}
+
+impl DistributedInterface for RingWorker {
+    fn world_rank(&self) -> usize {
+        self.rank
+    }
+
+    fn world_size(&self) -> usize {
+        self.world
+    }
+
+    fn all_reduce(&self, t: &Tensor, scale: f64) -> Tensor {
+        let n = self.world;
+        if n == 1 {
+            return if scale == 1.0 { t.clone() } else { t.mul_scalar(scale) };
+        }
+        let shape = t.shape().clone();
+        let mut data = t.to_vec();
+        let bounds = chunk_bounds(data.len(), n);
+        let r = self.rank;
+
+        // Phase 1 — reduce-scatter: at step s, send chunk (r - s) and fold
+        // the incoming chunk (r - s - 1) into the local buffer. After n-1
+        // steps worker r holds the fully reduced chunk (r + 1) % n.
+        for step in 0..n - 1 {
+            let send_idx = (r + n - step) % n;
+            let recv_idx = (r + 2 * n - step - 1) % n;
+            let (s, e) = bounds[send_idx];
+            self.send(Msg::Chunk(data[s..e].to_vec()));
+            let incoming = self.recv_chunk();
+            let (s, e) = bounds[recv_idx];
+            for (d, v) in data[s..e].iter_mut().zip(incoming) {
+                *d += v;
+            }
+        }
+        // Phase 2 — all-gather: circulate the finished chunks; incoming
+        // data *replaces* local chunks, so every worker ends with the same
+        // bits for every chunk.
+        for step in 0..n - 1 {
+            let send_idx = (r + 1 + n - step) % n;
+            let recv_idx = (r + n - step) % n;
+            let (s, e) = bounds[send_idx];
+            self.send(Msg::Chunk(data[s..e].to_vec()));
+            let incoming = self.recv_chunk();
+            let (s, e) = bounds[recv_idx];
+            data[s..e].copy_from_slice(&incoming);
+        }
+
+        let out = Tensor::from_slice(&data, shape);
+        if scale == 1.0 {
+            out
+        } else {
+            out.mul_scalar(scale)
+        }
+    }
+
+    fn broadcast(&self, t: &Tensor, root: usize) -> Tensor {
+        if self.world == 1 {
+            return t.clone();
+        }
+        assert!(root < self.world, "broadcast root {root} out of range");
+        if self.rank == root {
+            self.send(Msg::Host(t.to_host()));
+            t.clone()
+        } else {
+            let host = self.recv_host();
+            // forward around the ring unless the next hop is the root
+            if (self.rank + 1) % self.world != root {
+                self.send(Msg::Host(host.clone()));
+            }
+            Tensor::from_host(host, t.shape().clone())
+        }
+    }
+
+    fn barrier(&self) {
+        // n-1 rounds of token passing: completing round k proves the k-th
+        // predecessor has entered the barrier, so after n-1 rounds every
+        // worker has.
+        for _ in 0..self.world.saturating_sub(1) {
+            self.send(Msg::Token);
+            self.recv_token();
+        }
+    }
+}
+
+impl std::fmt::Debug for RingWorker {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "RingWorker(rank={}/{})", self.rank, self.world)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::DType;
+
+    /// Run one closure per ring worker on its own thread; collect results
+    /// in rank order.
+    fn on_ring<T: Send>(
+        n: usize,
+        f: impl Fn(&RingWorker) -> T + Sync,
+    ) -> Vec<T> {
+        let workers = init_ring(n);
+        std::thread::scope(|s| {
+            let handles: Vec<_> = workers
+                .iter()
+                .map(|w| {
+                    let f = &f;
+                    s.spawn(move || f(w))
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        })
+    }
+
+    #[test]
+    fn ring_all_reduce_matches_single_process_sum_and_average() {
+        let n = 4;
+        let len = 37; // not divisible by n: exercises uneven chunks
+        // integer-valued floats make reference summation order-independent
+        let inputs: Vec<Vec<f32>> = (0..n)
+            .map(|r| (0..len).map(|i| (r * 100 + i) as f32).collect())
+            .collect();
+        let expect_sum: Vec<f32> =
+            (0..len).map(|i| inputs.iter().map(|v| v[i]).sum()).collect();
+        let sums = on_ring(n, |w| {
+            let t = Tensor::from_slice(&inputs[w.world_rank()], [len]);
+            w.all_reduce(&t, 1.0).to_vec()
+        });
+        for (r, got) in sums.iter().enumerate() {
+            assert_eq!(got, &expect_sum, "rank {r} sum mismatch");
+        }
+        let avgs = on_ring(n, |w| {
+            let t = Tensor::from_slice(&inputs[w.world_rank()], [len]);
+            w.all_reduce(&t, 1.0 / n as f64).to_vec()
+        });
+        let expect_avg: Vec<f32> = expect_sum.iter().map(|&x| x / n as f32).collect();
+        for got in &avgs {
+            assert_eq!(got, &expect_avg);
+        }
+    }
+
+    #[test]
+    fn all_reduce_is_bitwise_identical_across_workers() {
+        crate::util::rng::seed(9);
+        let n = 3;
+        let inputs: Vec<Vec<f32>> =
+            (0..n).map(|_| Tensor::rand([50], -1.0, 1.0).to_vec()).collect();
+        let outs = on_ring(n, |w| {
+            let t = Tensor::from_slice(&inputs[w.world_rank()], [50]);
+            w.all_reduce(&t, 1.0 / 3.0).to_vec()
+        });
+        for r in 1..n {
+            assert!(
+                outs[0].iter().zip(&outs[r]).all(|(a, b)| a.to_bits() == b.to_bits()),
+                "rank {r} not bitwise identical to rank 0"
+            );
+        }
+    }
+
+    #[test]
+    fn all_reduce_world_one_is_identity() {
+        let w = init_ring(1).pop().unwrap();
+        let t = Tensor::from_slice(&[1.5f32, -2.25, 0.0], [3]);
+        let out = w.all_reduce(&t, 1.0);
+        assert_eq!(out.to_vec(), t.to_vec());
+        assert_eq!(w.world_size(), 1);
+        assert_eq!(w.world_rank(), 0);
+    }
+
+    #[test]
+    fn broadcast_distributes_roots_value() {
+        for root in 0..3usize {
+            let outs = on_ring(3, |w| {
+                let mine = Tensor::full([5], w.world_rank() as f64 + 10.0, DType::F32);
+                w.broadcast(&mine, root).to_vec()
+            });
+            for (r, got) in outs.iter().enumerate() {
+                assert_eq!(got, &vec![root as f32 + 10.0; 5], "rank {r}, root {root}");
+            }
+        }
+    }
+
+    #[test]
+    fn broadcast_preserves_dtype() {
+        let outs = on_ring(2, |w| {
+            let mine = Tensor::from_slice(&[w.world_rank() as i64 + 7, 2], [2]);
+            let out = w.broadcast(&mine, 0);
+            (out.dtype(), out.to_vec_i64())
+        });
+        for (d, v) in outs {
+            assert_eq!(d, DType::I64);
+            assert_eq!(v, vec![7, 2]);
+        }
+    }
+
+    #[test]
+    fn barrier_synchronizes_phases() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        let entered = AtomicUsize::new(0);
+        let n = 4;
+        on_ring(n, |w| {
+            entered.fetch_add(1, Ordering::SeqCst);
+            w.barrier();
+            // after the barrier, every worker must have entered
+            assert_eq!(entered.load(Ordering::SeqCst), n);
+        });
+    }
+
+    #[test]
+    fn chunk_bounds_partition_exactly() {
+        for (len, n) in [(10usize, 3usize), (3, 4), (0, 2), (16, 4)] {
+            let b = chunk_bounds(len, n);
+            assert_eq!(b.len(), n);
+            assert_eq!(b[0].0, 0);
+            assert_eq!(b[n - 1].1, len);
+            for w in b.windows(2) {
+                assert_eq!(w[0].1, w[1].0);
+            }
+        }
+    }
+
+    #[test]
+    fn collectives_compose_in_sequence() {
+        // all_reduce then broadcast then barrier on the same ring
+        let outs = on_ring(2, |w| {
+            let t = Tensor::full([4], (w.world_rank() + 1) as f64, DType::F32);
+            let summed = w.all_reduce(&t, 1.0);
+            let from_one = w.broadcast(&summed.mul_scalar((w.world_rank() + 1) as f64), 1);
+            w.barrier();
+            from_one.to_vec()
+        });
+        // root 1 broadcasts sum * 2 = [6, 6, 6, 6]
+        assert_eq!(outs[0], vec![6.0; 4]);
+        assert_eq!(outs[1], vec![6.0; 4]);
+    }
+}

@@ -7,12 +7,11 @@
 //! runs only at `make artifacts` time; the `fl` binary is self-contained.
 
 pub mod registry;
+pub mod xla;
 
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
-use std::sync::{Arc, Mutex};
-
-use once_cell::sync::OnceCell;
+use std::sync::{Arc, Mutex, OnceLock};
 
 use crate::tensor::{DType, Shape, Tensor};
 use crate::util::error::{Error, Result};
@@ -50,7 +49,7 @@ impl PjrtRuntime {
 
     /// The process-wide runtime, if `artifacts/` exists (probed once).
     pub fn global() -> Option<Arc<PjrtRuntime>> {
-        static INST: OnceCell<Option<Arc<PjrtRuntime>>> = OnceCell::new();
+        static INST: OnceLock<Option<Arc<PjrtRuntime>>> = OnceLock::new();
         INST.get_or_init(|| {
             let dir = std::env::var("FL_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
             PjrtRuntime::open(&dir).ok().map(Arc::new)

@@ -1,0 +1,126 @@
+//! Offline stand-in for the `xla-rs` PJRT bindings.
+//!
+//! The real runtime links libxla/PJRT through the `xla` crate; neither the
+//! crate nor the native library is available on this offline testbed, so
+//! this module reproduces the minimal API surface the [`super`] runtime
+//! consumes and fails gracefully at the earliest entry point
+//! ([`PjRtClient::cpu`]). Every caller already treats PJRT as optional
+//! ([`super::PjrtRuntime::global`] returns `None`), so with this stub the
+//! whole AOT/XLA path degrades to "artifacts not built" and the composed
+//! CPU implementation takes over.
+//!
+//! Swapping in the real bindings is a one-line change: replace this module
+//! with `use xla;` once the dependency is available.
+
+/// Error type mirroring `xla-rs`'s error (Display-able, opaque).
+#[derive(Debug, Clone)]
+pub struct XlaError(String);
+
+impl XlaError {
+    fn unavailable() -> Self {
+        XlaError("PJRT/XLA bindings are not available in this offline build".to_string())
+    }
+}
+
+impl std::fmt::Display for XlaError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for XlaError {}
+
+/// A PJRT client handle. In the stub, construction always fails.
+pub struct PjRtClient;
+
+impl PjRtClient {
+    /// Open the CPU PJRT client. Always errors offline; callers degrade to
+    /// the composed CPU path.
+    pub fn cpu() -> Result<PjRtClient, XlaError> {
+        Err(XlaError::unavailable())
+    }
+
+    /// Compile an XLA computation into a loaded executable.
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable, XlaError> {
+        Err(XlaError::unavailable())
+    }
+}
+
+/// Parsed HLO module protobuf.
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    /// Parse an HLO-text artifact file.
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto, XlaError> {
+        Err(XlaError::unavailable())
+    }
+}
+
+/// An XLA computation built from an HLO module.
+pub struct XlaComputation;
+
+impl XlaComputation {
+    /// Wrap a parsed HLO module.
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+/// A compiled, device-loaded executable.
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    /// Execute with the given input literals, producing per-device output
+    /// buffers.
+    pub fn execute<T>(&self, _args: &[Literal]) -> Result<Vec<Vec<PjRtBuffer>>, XlaError> {
+        Err(XlaError::unavailable())
+    }
+}
+
+/// A device-resident result buffer.
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    /// Copy the buffer back to a host literal.
+    pub fn to_literal_sync(&self) -> Result<Literal, XlaError> {
+        Err(XlaError::unavailable())
+    }
+}
+
+/// A host-side literal value.
+pub struct Literal;
+
+impl Literal {
+    /// Build a rank-1 literal from a slice.
+    pub fn vec1(_data: &[f32]) -> Literal {
+        Literal
+    }
+
+    /// Reshape the literal.
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal, XlaError> {
+        Ok(Literal)
+    }
+
+    /// Extract the first element of a tuple literal.
+    pub fn to_tuple1(&self) -> Result<Literal, XlaError> {
+        Err(XlaError::unavailable())
+    }
+
+    /// Copy out as a typed vector.
+    pub fn to_vec<T>(&self) -> Result<Vec<T>, XlaError> {
+        Err(XlaError::unavailable())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stub_fails_closed() {
+        assert!(PjRtClient::cpu().is_err());
+        assert!(HloModuleProto::from_text_file("x.hlo.txt").is_err());
+        let err = PjRtClient::cpu().unwrap_err();
+        assert!(err.to_string().contains("offline"));
+    }
+}

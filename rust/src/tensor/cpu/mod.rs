@@ -15,9 +15,7 @@ pub mod pool;
 pub mod reduce;
 pub mod shape_ops;
 
-use std::sync::Arc;
-
-use once_cell::sync::OnceCell;
+use std::sync::{Arc, OnceLock};
 
 use super::adapter::TensorAdapter;
 use super::backend::{Conv2dParams, Pool2dParams, TensorBackend};
@@ -326,7 +324,7 @@ impl CpuBackend {
 
     /// The canonical shared instance used by adapters.
     pub fn shared() -> Arc<dyn TensorBackend> {
-        static INST: OnceCell<Arc<CpuBackend>> = OnceCell::new();
+        static INST: OnceLock<Arc<CpuBackend>> = OnceLock::new();
         INST.get_or_init(|| Arc::new(CpuBackend)).clone() as Arc<dyn TensorBackend>
     }
 }

@@ -2,12 +2,22 @@
 //!
 //! Implement [`DelegateBackend`] with an `inner()` backend and override
 //! only the methods you care about — every other operation forwards to the
-//! inner backend, and the blanket `impl TensorBackend` makes the wrapper a
-//! full drop-in backend. This is the Rust rendition of the paper's
-//! "simply subclass or swap out the existing implementation of the add
-//! function ... all add operations in Flashlight dispatch to that
-//! operator, so existing baselines and operations will run with the new
-//! implementation without any additional code changes."
+//! inner backend, and one [`impl_delegate_backend!`](macro@crate::impl_delegate_backend)
+//! invocation makes the wrapper a full drop-in [`TensorBackend`]. (A
+//! blanket `impl<T: DelegateBackend> TensorBackend for T` is ruled out by
+//! Rust's coherence rules — it would conflict with the concrete backend
+//! impls — so the forwarding impl is generated per-type by the macro.)
+//! This is the Rust rendition of the paper's "simply subclass or swap out
+//! the existing implementation of the add function ... all add operations
+//! in Flashlight dispatch to that operator, so existing baselines and
+//! operations will run with the new implementation without any additional
+//! code changes."
+//!
+//! ```ignore
+//! struct MyBackend { inner: Arc<dyn TensorBackend> }
+//! impl DelegateBackend for MyBackend { /* override what you need */ }
+//! flashlight::impl_delegate_backend!(MyBackend);
+//! ```
 
 use std::sync::Arc;
 
@@ -234,84 +244,89 @@ pub trait DelegateBackend: Send + Sync {
     }
 }
 
-macro_rules! forward {
-    ($($body:tt)*) => { $($body)* };
-}
-
-impl<T: DelegateBackend> TensorBackend for T {
-    fn name(&self) -> &str {
-        self.wrapper_name()
-    }
-    forward! {
-        fn full(&self, shape: &Shape, value: f64, dtype: DType) -> Tensor { DelegateBackend::full(self, shape, value, dtype) }
-        fn arange(&self, n: usize, dtype: DType) -> Tensor { DelegateBackend::arange(self, n, dtype) }
-        fn rand_uniform(&self, shape: &Shape, lo: f64, hi: f64, dtype: DType) -> Tensor { DelegateBackend::rand_uniform(self, shape, lo, hi, dtype) }
-        fn rand_normal(&self, shape: &Shape, mean: f64, std: f64, dtype: DType) -> Tensor { DelegateBackend::rand_normal(self, shape, mean, std, dtype) }
-        fn from_host(&self, host: HostBuffer, shape: Shape) -> Tensor { DelegateBackend::from_host(self, host, shape) }
-        fn neg(&self, x: &Tensor) -> Tensor { DelegateBackend::neg(self, x) }
-        fn abs(&self, x: &Tensor) -> Tensor { DelegateBackend::abs(self, x) }
-        fn sign(&self, x: &Tensor) -> Tensor { DelegateBackend::sign(self, x) }
-        fn exp(&self, x: &Tensor) -> Tensor { DelegateBackend::exp(self, x) }
-        fn log(&self, x: &Tensor) -> Tensor { DelegateBackend::log(self, x) }
-        fn log1p(&self, x: &Tensor) -> Tensor { DelegateBackend::log1p(self, x) }
-        fn sin(&self, x: &Tensor) -> Tensor { DelegateBackend::sin(self, x) }
-        fn cos(&self, x: &Tensor) -> Tensor { DelegateBackend::cos(self, x) }
-        fn tanh(&self, x: &Tensor) -> Tensor { DelegateBackend::tanh(self, x) }
-        fn sqrt(&self, x: &Tensor) -> Tensor { DelegateBackend::sqrt(self, x) }
-        fn rsqrt(&self, x: &Tensor) -> Tensor { DelegateBackend::rsqrt(self, x) }
-        fn reciprocal(&self, x: &Tensor) -> Tensor { DelegateBackend::reciprocal(self, x) }
-        fn floor(&self, x: &Tensor) -> Tensor { DelegateBackend::floor(self, x) }
-        fn ceil(&self, x: &Tensor) -> Tensor { DelegateBackend::ceil(self, x) }
-        fn round(&self, x: &Tensor) -> Tensor { DelegateBackend::round(self, x) }
-        fn erf(&self, x: &Tensor) -> Tensor { DelegateBackend::erf(self, x) }
-        fn logical_not(&self, x: &Tensor) -> Tensor { DelegateBackend::logical_not(self, x) }
-        fn isnan(&self, x: &Tensor) -> Tensor { DelegateBackend::isnan(self, x) }
-        fn clip(&self, x: &Tensor, lo: f64, hi: f64) -> Tensor { DelegateBackend::clip(self, x, lo, hi) }
-        fn add(&self, a: &Tensor, b: &Tensor) -> Tensor { DelegateBackend::add(self, a, b) }
-        fn sub(&self, a: &Tensor, b: &Tensor) -> Tensor { DelegateBackend::sub(self, a, b) }
-        fn mul(&self, a: &Tensor, b: &Tensor) -> Tensor { DelegateBackend::mul(self, a, b) }
-        fn div(&self, a: &Tensor, b: &Tensor) -> Tensor { DelegateBackend::div(self, a, b) }
-        fn pow(&self, a: &Tensor, b: &Tensor) -> Tensor { DelegateBackend::pow(self, a, b) }
-        fn minimum(&self, a: &Tensor, b: &Tensor) -> Tensor { DelegateBackend::minimum(self, a, b) }
-        fn maximum(&self, a: &Tensor, b: &Tensor) -> Tensor { DelegateBackend::maximum(self, a, b) }
-        fn rem(&self, a: &Tensor, b: &Tensor) -> Tensor { DelegateBackend::rem(self, a, b) }
-        fn eq(&self, a: &Tensor, b: &Tensor) -> Tensor { DelegateBackend::eq(self, a, b) }
-        fn neq(&self, a: &Tensor, b: &Tensor) -> Tensor { DelegateBackend::neq(self, a, b) }
-        fn lt(&self, a: &Tensor, b: &Tensor) -> Tensor { DelegateBackend::lt(self, a, b) }
-        fn le(&self, a: &Tensor, b: &Tensor) -> Tensor { DelegateBackend::le(self, a, b) }
-        fn gt(&self, a: &Tensor, b: &Tensor) -> Tensor { DelegateBackend::gt(self, a, b) }
-        fn ge(&self, a: &Tensor, b: &Tensor) -> Tensor { DelegateBackend::ge(self, a, b) }
-        fn logical_and(&self, a: &Tensor, b: &Tensor) -> Tensor { DelegateBackend::logical_and(self, a, b) }
-        fn logical_or(&self, a: &Tensor, b: &Tensor) -> Tensor { DelegateBackend::logical_or(self, a, b) }
-        fn sum(&self, x: &Tensor, axes: &[usize], keepdims: bool) -> Tensor { DelegateBackend::sum(self, x, axes, keepdims) }
-        fn prod(&self, x: &Tensor, axes: &[usize], keepdims: bool) -> Tensor { DelegateBackend::prod(self, x, axes, keepdims) }
-        fn max_reduce(&self, x: &Tensor, axes: &[usize], keepdims: bool) -> Tensor { DelegateBackend::max_reduce(self, x, axes, keepdims) }
-        fn min_reduce(&self, x: &Tensor, axes: &[usize], keepdims: bool) -> Tensor { DelegateBackend::min_reduce(self, x, axes, keepdims) }
-        fn argmax(&self, x: &Tensor, axis: usize, keepdims: bool) -> Tensor { DelegateBackend::argmax(self, x, axis, keepdims) }
-        fn argmin(&self, x: &Tensor, axis: usize, keepdims: bool) -> Tensor { DelegateBackend::argmin(self, x, axis, keepdims) }
-        fn any(&self, x: &Tensor, axes: &[usize], keepdims: bool) -> Tensor { DelegateBackend::any(self, x, axes, keepdims) }
-        fn all(&self, x: &Tensor, axes: &[usize], keepdims: bool) -> Tensor { DelegateBackend::all(self, x, axes, keepdims) }
-        fn cumsum(&self, x: &Tensor, axis: usize) -> Tensor { DelegateBackend::cumsum(self, x, axis) }
-        fn matmul(&self, a: &Tensor, b: &Tensor) -> Tensor { DelegateBackend::matmul(self, a, b) }
-        fn conv2d(&self, x: &Tensor, w: &Tensor, p: Conv2dParams) -> Tensor { DelegateBackend::conv2d(self, x, w, p) }
-        fn conv2d_bwd_input(&self, gy: &Tensor, w: &Tensor, xs: &Shape, p: Conv2dParams) -> Tensor { DelegateBackend::conv2d_bwd_input(self, gy, w, xs, p) }
-        fn conv2d_bwd_filter(&self, gy: &Tensor, x: &Tensor, ws: &Shape, p: Conv2dParams) -> Tensor { DelegateBackend::conv2d_bwd_filter(self, gy, x, ws, p) }
-        fn pool2d(&self, x: &Tensor, p: Pool2dParams) -> Tensor { DelegateBackend::pool2d(self, x, p) }
-        fn pool2d_bwd(&self, gy: &Tensor, x: &Tensor, p: Pool2dParams) -> Tensor { DelegateBackend::pool2d_bwd(self, gy, x, p) }
-        fn reshape(&self, x: &Tensor, shape: &Shape) -> Tensor { DelegateBackend::reshape(self, x, shape) }
-        fn transpose(&self, x: &Tensor, perm: &[usize]) -> Tensor { DelegateBackend::transpose(self, x, perm) }
-        fn slice(&self, x: &Tensor, starts: &[usize], ends: &[usize]) -> Tensor { DelegateBackend::slice(self, x, starts, ends) }
-        fn concat(&self, xs: &[&Tensor], axis: usize) -> Tensor { DelegateBackend::concat(self, xs, axis) }
-        fn pad(&self, x: &Tensor, pads: &[(usize, usize)], value: f64) -> Tensor { DelegateBackend::pad(self, x, pads, value) }
-        fn tile(&self, x: &Tensor, reps: &[usize]) -> Tensor { DelegateBackend::tile(self, x, reps) }
-        fn flip(&self, x: &Tensor, axes: &[usize]) -> Tensor { DelegateBackend::flip(self, x, axes) }
-        fn index_select(&self, x: &Tensor, axis: usize, indices: &Tensor) -> Tensor { DelegateBackend::index_select(self, x, axis, indices) }
-        fn scatter_add(&self, base: &Tensor, indices: &Tensor, src: &Tensor) -> Tensor { DelegateBackend::scatter_add(self, base, indices, src) }
-        fn where_cond(&self, cond: &Tensor, a: &Tensor, b: &Tensor) -> Tensor { DelegateBackend::where_cond(self, cond, a, b) }
-        fn astype(&self, x: &Tensor, dtype: DType) -> Tensor { DelegateBackend::astype(self, x, dtype) }
-        fn copy(&self, x: &Tensor) -> Tensor { DelegateBackend::copy(self, x) }
-        fn call_ext(&self, name: &str, inputs: &[&Tensor]) -> Result<Tensor> { DelegateBackend::call_ext(self, name, inputs) }
-    }
+/// Generate the full forwarding `impl TensorBackend` for a type that
+/// implements [`DelegateBackend`]. Invoke once per wrapper type:
+///
+/// ```ignore
+/// flashlight::impl_delegate_backend!(MyBackend);
+/// ```
+#[macro_export]
+macro_rules! impl_delegate_backend {
+    ($ty:ty) => {
+        impl $crate::tensor::TensorBackend for $ty {
+            fn name(&self) -> &str {
+                $crate::tensor::delegate::DelegateBackend::wrapper_name(self)
+            }
+            fn full(&self, shape: &$crate::tensor::Shape, value: f64, dtype: $crate::tensor::DType) -> $crate::tensor::Tensor { $crate::tensor::delegate::DelegateBackend::full(self, shape, value, dtype) }
+            fn arange(&self, n: usize, dtype: $crate::tensor::DType) -> $crate::tensor::Tensor { $crate::tensor::delegate::DelegateBackend::arange(self, n, dtype) }
+            fn rand_uniform(&self, shape: &$crate::tensor::Shape, lo: f64, hi: f64, dtype: $crate::tensor::DType) -> $crate::tensor::Tensor { $crate::tensor::delegate::DelegateBackend::rand_uniform(self, shape, lo, hi, dtype) }
+            fn rand_normal(&self, shape: &$crate::tensor::Shape, mean: f64, std: f64, dtype: $crate::tensor::DType) -> $crate::tensor::Tensor { $crate::tensor::delegate::DelegateBackend::rand_normal(self, shape, mean, std, dtype) }
+            fn from_host(&self, host: $crate::tensor::HostBuffer, shape: $crate::tensor::Shape) -> $crate::tensor::Tensor { $crate::tensor::delegate::DelegateBackend::from_host(self, host, shape) }
+            fn neg(&self, x: &$crate::tensor::Tensor) -> $crate::tensor::Tensor { $crate::tensor::delegate::DelegateBackend::neg(self, x) }
+            fn abs(&self, x: &$crate::tensor::Tensor) -> $crate::tensor::Tensor { $crate::tensor::delegate::DelegateBackend::abs(self, x) }
+            fn sign(&self, x: &$crate::tensor::Tensor) -> $crate::tensor::Tensor { $crate::tensor::delegate::DelegateBackend::sign(self, x) }
+            fn exp(&self, x: &$crate::tensor::Tensor) -> $crate::tensor::Tensor { $crate::tensor::delegate::DelegateBackend::exp(self, x) }
+            fn log(&self, x: &$crate::tensor::Tensor) -> $crate::tensor::Tensor { $crate::tensor::delegate::DelegateBackend::log(self, x) }
+            fn log1p(&self, x: &$crate::tensor::Tensor) -> $crate::tensor::Tensor { $crate::tensor::delegate::DelegateBackend::log1p(self, x) }
+            fn sin(&self, x: &$crate::tensor::Tensor) -> $crate::tensor::Tensor { $crate::tensor::delegate::DelegateBackend::sin(self, x) }
+            fn cos(&self, x: &$crate::tensor::Tensor) -> $crate::tensor::Tensor { $crate::tensor::delegate::DelegateBackend::cos(self, x) }
+            fn tanh(&self, x: &$crate::tensor::Tensor) -> $crate::tensor::Tensor { $crate::tensor::delegate::DelegateBackend::tanh(self, x) }
+            fn sqrt(&self, x: &$crate::tensor::Tensor) -> $crate::tensor::Tensor { $crate::tensor::delegate::DelegateBackend::sqrt(self, x) }
+            fn rsqrt(&self, x: &$crate::tensor::Tensor) -> $crate::tensor::Tensor { $crate::tensor::delegate::DelegateBackend::rsqrt(self, x) }
+            fn reciprocal(&self, x: &$crate::tensor::Tensor) -> $crate::tensor::Tensor { $crate::tensor::delegate::DelegateBackend::reciprocal(self, x) }
+            fn floor(&self, x: &$crate::tensor::Tensor) -> $crate::tensor::Tensor { $crate::tensor::delegate::DelegateBackend::floor(self, x) }
+            fn ceil(&self, x: &$crate::tensor::Tensor) -> $crate::tensor::Tensor { $crate::tensor::delegate::DelegateBackend::ceil(self, x) }
+            fn round(&self, x: &$crate::tensor::Tensor) -> $crate::tensor::Tensor { $crate::tensor::delegate::DelegateBackend::round(self, x) }
+            fn erf(&self, x: &$crate::tensor::Tensor) -> $crate::tensor::Tensor { $crate::tensor::delegate::DelegateBackend::erf(self, x) }
+            fn logical_not(&self, x: &$crate::tensor::Tensor) -> $crate::tensor::Tensor { $crate::tensor::delegate::DelegateBackend::logical_not(self, x) }
+            fn isnan(&self, x: &$crate::tensor::Tensor) -> $crate::tensor::Tensor { $crate::tensor::delegate::DelegateBackend::isnan(self, x) }
+            fn clip(&self, x: &$crate::tensor::Tensor, lo: f64, hi: f64) -> $crate::tensor::Tensor { $crate::tensor::delegate::DelegateBackend::clip(self, x, lo, hi) }
+            fn add(&self, a: &$crate::tensor::Tensor, b: &$crate::tensor::Tensor) -> $crate::tensor::Tensor { $crate::tensor::delegate::DelegateBackend::add(self, a, b) }
+            fn sub(&self, a: &$crate::tensor::Tensor, b: &$crate::tensor::Tensor) -> $crate::tensor::Tensor { $crate::tensor::delegate::DelegateBackend::sub(self, a, b) }
+            fn mul(&self, a: &$crate::tensor::Tensor, b: &$crate::tensor::Tensor) -> $crate::tensor::Tensor { $crate::tensor::delegate::DelegateBackend::mul(self, a, b) }
+            fn div(&self, a: &$crate::tensor::Tensor, b: &$crate::tensor::Tensor) -> $crate::tensor::Tensor { $crate::tensor::delegate::DelegateBackend::div(self, a, b) }
+            fn pow(&self, a: &$crate::tensor::Tensor, b: &$crate::tensor::Tensor) -> $crate::tensor::Tensor { $crate::tensor::delegate::DelegateBackend::pow(self, a, b) }
+            fn minimum(&self, a: &$crate::tensor::Tensor, b: &$crate::tensor::Tensor) -> $crate::tensor::Tensor { $crate::tensor::delegate::DelegateBackend::minimum(self, a, b) }
+            fn maximum(&self, a: &$crate::tensor::Tensor, b: &$crate::tensor::Tensor) -> $crate::tensor::Tensor { $crate::tensor::delegate::DelegateBackend::maximum(self, a, b) }
+            fn rem(&self, a: &$crate::tensor::Tensor, b: &$crate::tensor::Tensor) -> $crate::tensor::Tensor { $crate::tensor::delegate::DelegateBackend::rem(self, a, b) }
+            fn eq(&self, a: &$crate::tensor::Tensor, b: &$crate::tensor::Tensor) -> $crate::tensor::Tensor { $crate::tensor::delegate::DelegateBackend::eq(self, a, b) }
+            fn neq(&self, a: &$crate::tensor::Tensor, b: &$crate::tensor::Tensor) -> $crate::tensor::Tensor { $crate::tensor::delegate::DelegateBackend::neq(self, a, b) }
+            fn lt(&self, a: &$crate::tensor::Tensor, b: &$crate::tensor::Tensor) -> $crate::tensor::Tensor { $crate::tensor::delegate::DelegateBackend::lt(self, a, b) }
+            fn le(&self, a: &$crate::tensor::Tensor, b: &$crate::tensor::Tensor) -> $crate::tensor::Tensor { $crate::tensor::delegate::DelegateBackend::le(self, a, b) }
+            fn gt(&self, a: &$crate::tensor::Tensor, b: &$crate::tensor::Tensor) -> $crate::tensor::Tensor { $crate::tensor::delegate::DelegateBackend::gt(self, a, b) }
+            fn ge(&self, a: &$crate::tensor::Tensor, b: &$crate::tensor::Tensor) -> $crate::tensor::Tensor { $crate::tensor::delegate::DelegateBackend::ge(self, a, b) }
+            fn logical_and(&self, a: &$crate::tensor::Tensor, b: &$crate::tensor::Tensor) -> $crate::tensor::Tensor { $crate::tensor::delegate::DelegateBackend::logical_and(self, a, b) }
+            fn logical_or(&self, a: &$crate::tensor::Tensor, b: &$crate::tensor::Tensor) -> $crate::tensor::Tensor { $crate::tensor::delegate::DelegateBackend::logical_or(self, a, b) }
+            fn sum(&self, x: &$crate::tensor::Tensor, axes: &[usize], keepdims: bool) -> $crate::tensor::Tensor { $crate::tensor::delegate::DelegateBackend::sum(self, x, axes, keepdims) }
+            fn prod(&self, x: &$crate::tensor::Tensor, axes: &[usize], keepdims: bool) -> $crate::tensor::Tensor { $crate::tensor::delegate::DelegateBackend::prod(self, x, axes, keepdims) }
+            fn max_reduce(&self, x: &$crate::tensor::Tensor, axes: &[usize], keepdims: bool) -> $crate::tensor::Tensor { $crate::tensor::delegate::DelegateBackend::max_reduce(self, x, axes, keepdims) }
+            fn min_reduce(&self, x: &$crate::tensor::Tensor, axes: &[usize], keepdims: bool) -> $crate::tensor::Tensor { $crate::tensor::delegate::DelegateBackend::min_reduce(self, x, axes, keepdims) }
+            fn argmax(&self, x: &$crate::tensor::Tensor, axis: usize, keepdims: bool) -> $crate::tensor::Tensor { $crate::tensor::delegate::DelegateBackend::argmax(self, x, axis, keepdims) }
+            fn argmin(&self, x: &$crate::tensor::Tensor, axis: usize, keepdims: bool) -> $crate::tensor::Tensor { $crate::tensor::delegate::DelegateBackend::argmin(self, x, axis, keepdims) }
+            fn any(&self, x: &$crate::tensor::Tensor, axes: &[usize], keepdims: bool) -> $crate::tensor::Tensor { $crate::tensor::delegate::DelegateBackend::any(self, x, axes, keepdims) }
+            fn all(&self, x: &$crate::tensor::Tensor, axes: &[usize], keepdims: bool) -> $crate::tensor::Tensor { $crate::tensor::delegate::DelegateBackend::all(self, x, axes, keepdims) }
+            fn cumsum(&self, x: &$crate::tensor::Tensor, axis: usize) -> $crate::tensor::Tensor { $crate::tensor::delegate::DelegateBackend::cumsum(self, x, axis) }
+            fn matmul(&self, a: &$crate::tensor::Tensor, b: &$crate::tensor::Tensor) -> $crate::tensor::Tensor { $crate::tensor::delegate::DelegateBackend::matmul(self, a, b) }
+            fn conv2d(&self, x: &$crate::tensor::Tensor, w: &$crate::tensor::Tensor, p: $crate::tensor::Conv2dParams) -> $crate::tensor::Tensor { $crate::tensor::delegate::DelegateBackend::conv2d(self, x, w, p) }
+            fn conv2d_bwd_input(&self, gy: &$crate::tensor::Tensor, w: &$crate::tensor::Tensor, xs: &$crate::tensor::Shape, p: $crate::tensor::Conv2dParams) -> $crate::tensor::Tensor { $crate::tensor::delegate::DelegateBackend::conv2d_bwd_input(self, gy, w, xs, p) }
+            fn conv2d_bwd_filter(&self, gy: &$crate::tensor::Tensor, x: &$crate::tensor::Tensor, ws: &$crate::tensor::Shape, p: $crate::tensor::Conv2dParams) -> $crate::tensor::Tensor { $crate::tensor::delegate::DelegateBackend::conv2d_bwd_filter(self, gy, x, ws, p) }
+            fn pool2d(&self, x: &$crate::tensor::Tensor, p: $crate::tensor::Pool2dParams) -> $crate::tensor::Tensor { $crate::tensor::delegate::DelegateBackend::pool2d(self, x, p) }
+            fn pool2d_bwd(&self, gy: &$crate::tensor::Tensor, x: &$crate::tensor::Tensor, p: $crate::tensor::Pool2dParams) -> $crate::tensor::Tensor { $crate::tensor::delegate::DelegateBackend::pool2d_bwd(self, gy, x, p) }
+            fn reshape(&self, x: &$crate::tensor::Tensor, shape: &$crate::tensor::Shape) -> $crate::tensor::Tensor { $crate::tensor::delegate::DelegateBackend::reshape(self, x, shape) }
+            fn transpose(&self, x: &$crate::tensor::Tensor, perm: &[usize]) -> $crate::tensor::Tensor { $crate::tensor::delegate::DelegateBackend::transpose(self, x, perm) }
+            fn slice(&self, x: &$crate::tensor::Tensor, starts: &[usize], ends: &[usize]) -> $crate::tensor::Tensor { $crate::tensor::delegate::DelegateBackend::slice(self, x, starts, ends) }
+            fn concat(&self, xs: &[&$crate::tensor::Tensor], axis: usize) -> $crate::tensor::Tensor { $crate::tensor::delegate::DelegateBackend::concat(self, xs, axis) }
+            fn pad(&self, x: &$crate::tensor::Tensor, pads: &[(usize, usize)], value: f64) -> $crate::tensor::Tensor { $crate::tensor::delegate::DelegateBackend::pad(self, x, pads, value) }
+            fn tile(&self, x: &$crate::tensor::Tensor, reps: &[usize]) -> $crate::tensor::Tensor { $crate::tensor::delegate::DelegateBackend::tile(self, x, reps) }
+            fn flip(&self, x: &$crate::tensor::Tensor, axes: &[usize]) -> $crate::tensor::Tensor { $crate::tensor::delegate::DelegateBackend::flip(self, x, axes) }
+            fn index_select(&self, x: &$crate::tensor::Tensor, axis: usize, indices: &$crate::tensor::Tensor) -> $crate::tensor::Tensor { $crate::tensor::delegate::DelegateBackend::index_select(self, x, axis, indices) }
+            fn scatter_add(&self, base: &$crate::tensor::Tensor, indices: &$crate::tensor::Tensor, src: &$crate::tensor::Tensor) -> $crate::tensor::Tensor { $crate::tensor::delegate::DelegateBackend::scatter_add(self, base, indices, src) }
+            fn where_cond(&self, cond: &$crate::tensor::Tensor, a: &$crate::tensor::Tensor, b: &$crate::tensor::Tensor) -> $crate::tensor::Tensor { $crate::tensor::delegate::DelegateBackend::where_cond(self, cond, a, b) }
+            fn astype(&self, x: &$crate::tensor::Tensor, dtype: $crate::tensor::DType) -> $crate::tensor::Tensor { $crate::tensor::delegate::DelegateBackend::astype(self, x, dtype) }
+            fn copy(&self, x: &$crate::tensor::Tensor) -> $crate::tensor::Tensor { $crate::tensor::delegate::DelegateBackend::copy(self, x) }
+            fn call_ext(&self, name: &str, inputs: &[&$crate::tensor::Tensor]) -> $crate::util::error::Result<$crate::tensor::Tensor> { $crate::tensor::delegate::DelegateBackend::call_ext(self, name, inputs) }
+        }
+    };
 }
 
 #[cfg(test)]
@@ -339,6 +354,8 @@ mod tests {
             self.inner.add(a, b)
         }
     }
+
+    crate::impl_delegate_backend!(CountingAdd);
 
     #[test]
     fn override_one_method_delegate_rest() {

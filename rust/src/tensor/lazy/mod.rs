@@ -11,9 +11,7 @@
 //! [`DelegateBackend`]: lazy tensors materialize on the way in, so the
 //! backend is always complete.
 
-use std::sync::{Arc, Mutex};
-
-use once_cell::sync::OnceCell;
+use std::sync::{Arc, Mutex, OnceLock};
 
 use super::adapter::TensorAdapter;
 use super::cpu::CpuBackend;
@@ -243,7 +241,7 @@ pub struct LazyBackend {
 impl LazyBackend {
     /// The canonical shared instance.
     pub fn shared() -> Arc<dyn TensorBackend> {
-        static INST: OnceCell<Arc<LazyBackend>> = OnceCell::new();
+        static INST: OnceLock<Arc<LazyBackend>> = OnceLock::new();
         INST.get_or_init(|| Arc::new(LazyBackend { inner: CpuBackend::shared() })).clone()
             as Arc<dyn TensorBackend>
     }
@@ -325,6 +323,8 @@ impl DelegateBackend for LazyBackend {
         Tensor::from_adapter(Arc::new(Handle(lt)))
     }
 }
+
+crate::impl_delegate_backend!(LazyBackend);
 
 #[cfg(test)]
 mod tests {

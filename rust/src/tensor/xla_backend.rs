@@ -89,6 +89,8 @@ impl DelegateBackend for XlaBackend {
     }
 }
 
+crate::impl_delegate_backend!(XlaBackend);
+
 #[cfg(test)]
 mod tests {
     use super::*;

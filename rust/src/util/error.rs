@@ -1,44 +1,75 @@
 //! Library error type. Kept deliberately small: the paper's library favors
 //! explicit, unopinionated interfaces over deep error taxonomies.
-
-use thiserror::Error;
+//!
+//! No external error-derive crate is used (the build is offline and
+//! dependency-free); `Display`, `std::error::Error`, and the `io::Error`
+//! conversion are implemented by hand.
 
 /// Errors produced by flashlight-rs.
-#[derive(Error, Debug)]
+#[derive(Debug)]
 pub enum Error {
     /// Two shapes that were required to match (or broadcast) did not.
-    #[error("shape mismatch: {0}")]
     ShapeMismatch(String),
     /// An operation was invoked with an unsupported dtype.
-    #[error("dtype error: {0}")]
     DType(String),
     /// An index / axis was out of range.
-    #[error("index error: {0}")]
     Index(String),
     /// A backend does not implement the requested operation.
-    #[error("backend `{backend}` does not support {op}")]
-    Unsupported { backend: String, op: String },
+    Unsupported {
+        /// Name of the backend that rejected the op.
+        backend: String,
+        /// The rejected operation.
+        op: String,
+    },
     /// Memory-manager failure.
-    #[error("memory error: {0}")]
     Memory(String),
     /// Distributed-runtime failure.
-    #[error("distributed error: {0}")]
     Distributed(String),
     /// Serialization / checkpoint failure.
-    #[error("serialization error: {0}")]
     Serde(String),
     /// Configuration / CLI error.
-    #[error("config error: {0}")]
     Config(String),
     /// PJRT / XLA runtime failure.
-    #[error("runtime error: {0}")]
     Runtime(String),
     /// I/O error.
-    #[error(transparent)]
-    Io(#[from] std::io::Error),
+    Io(std::io::Error),
     /// Anything else.
-    #[error("{0}")]
     Msg(String),
+}
+
+impl std::fmt::Display for Error {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Error::ShapeMismatch(m) => write!(f, "shape mismatch: {m}"),
+            Error::DType(m) => write!(f, "dtype error: {m}"),
+            Error::Index(m) => write!(f, "index error: {m}"),
+            Error::Unsupported { backend, op } => {
+                write!(f, "backend `{backend}` does not support {op}")
+            }
+            Error::Memory(m) => write!(f, "memory error: {m}"),
+            Error::Distributed(m) => write!(f, "distributed error: {m}"),
+            Error::Serde(m) => write!(f, "serialization error: {m}"),
+            Error::Config(m) => write!(f, "config error: {m}"),
+            Error::Runtime(m) => write!(f, "runtime error: {m}"),
+            Error::Io(e) => write!(f, "{e}"),
+            Error::Msg(m) => f.write_str(m),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
 }
 
 /// Library result alias.
@@ -61,5 +92,16 @@ mod tests {
         assert_eq!(e.to_string(), "backend `lazy` does not support conv2d");
         let e = Error::msg("boom");
         assert_eq!(e.to_string(), "boom");
+    }
+
+    #[test]
+    fn io_error_is_transparent_and_sourced() {
+        use std::error::Error as _;
+        let io = std::io::Error::new(std::io::ErrorKind::NotFound, "gone");
+        let text = io.to_string();
+        let e: Error = io.into();
+        assert_eq!(e.to_string(), text);
+        assert!(e.source().is_some());
+        assert!(Error::msg("x").source().is_none());
     }
 }
