@@ -1,48 +1,50 @@
 //! Paper §5.2.4 reproduced as a runnable artifact: swap the **source of
-//! truth for `add`** behind the small backend API and watch every derived
-//! operator, model, and baseline in the framework pick it up with zero
-//! call-site changes — then do the same with the deferred (lazy) and
-//! AOT (XLA) backends to demonstrate Figure 2's computation-mode freedom.
+//! truth for `add`** behind the single dispatch choke point and watch
+//! every derived operator, model, and baseline in the framework pick it
+//! up with zero call-site changes — then do the same with the deferred
+//! (lazy) and AOT (XLA) backends to demonstrate Figure 2's
+//! computation-mode freedom, and finish with the two IR-powered tools
+//! (profiling, trace capture + replay) that each take *one function* to
+//! build.
 //!
 //! Run: `cargo run --release --example custom_backend`
 
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Arc;
 
 use flashlight::autograd::Variable;
 use flashlight::models::mlp;
 use flashlight::nn::Module;
 use flashlight::tensor::cpu::CpuBackend;
-use flashlight::tensor::delegate::DelegateBackend;
 use flashlight::tensor::lazy::{pending_ops, LazyBackend};
-use flashlight::tensor::{BackendGuard, Tensor, TensorBackend};
+use flashlight::tensor::{
+    BackendGuard, InterposedBackend, Interposer, Op, ProfilingBackend, Tensor, TensorBackend,
+    TraceBackend,
+};
+use flashlight::util::error::Result;
 
-/// A research backend that replaces `add` (here: counting + delegating;
-/// a real project would plug in its novel element-wise implementation).
+/// A research backend that replaces `add`: one intercept function instead
+/// of a 60-method delegation surface. A real project would plug in its
+/// novel element-wise implementation where the counter bumps.
 struct CustomAdd {
-    inner: Arc<dyn TensorBackend>,
     adds: AtomicU64,
 }
 
-impl DelegateBackend for CustomAdd {
-    fn inner(&self) -> Arc<dyn TensorBackend> {
-        self.inner.clone()
-    }
-    fn wrapper_name(&self) -> &str {
+impl Interposer for CustomAdd {
+    fn name(&self) -> &str {
         "custom-add"
     }
-    fn add(&self, a: &Tensor, b: &Tensor) -> Tensor {
-        self.adds.fetch_add(1, Ordering::Relaxed);
-        // ... novel element-wise implementation goes here ...
-        self.inner.add(a, b)
+    fn intercept(&self, op: &Op, inputs: &[&Tensor], inner: &dyn TensorBackend) -> Result<Tensor> {
+        if matches!(op, Op::Add) {
+            self.adds.fetch_add(1, Ordering::Relaxed);
+            // ... novel element-wise implementation goes here ...
+        }
+        inner.dispatch(op, inputs)
     }
 }
 
-flashlight::impl_delegate_backend!(CustomAdd);
-
 fn main() {
     // 1) swap the default backend — one line, whole framework retargets
-    let be = Arc::new(CustomAdd { inner: CpuBackend::shared(), adds: AtomicU64::new(0) });
+    let be = InterposedBackend::over_cpu(CustomAdd { adds: AtomicU64::new(0) });
     {
         let _guard = BackendGuard::install(be.clone());
         // an existing model, untouched: every add (bias adds, residuals,
@@ -51,7 +53,7 @@ fn main() {
         let x = Variable::constant(Tensor::rand([8, 32], -1.0, 1.0));
         let y = model.forward(&x);
         flashlight::autograd::ops::sum(&y, &[], false).backward();
-        let n = be.adds.load(Ordering::Relaxed);
+        let n = be.interposer().adds.load(Ordering::Relaxed);
         println!("custom `add` dispatched {n} times through an unmodified MLP fwd+bwd");
         // 3 bias adds forward + gradient accumulation on the backward pass
         assert!(n >= 3, "custom add was bypassed (n={n})");
@@ -82,5 +84,41 @@ fn main() {
         None => println!("(artifacts/ not built — skipping the AOT backend demo)"),
     }
 
-    println!("custom_backend OK — three computation modes behind one API");
+    // 4) per-op profiling: a cross-cutting concern that used to need ~60
+    //    overrides, now shipped as one intercept function
+    {
+        let prof = ProfilingBackend::over_cpu_default();
+        let _guard = BackendGuard::install(prof.clone());
+        let a = Tensor::rand([32, 32], -1.0, 1.0);
+        let _ = a.matmul(&a).gelu().softmax(-1).to_vec();
+        let stats = prof.interposer().snapshot();
+        println!("profiler saw {} distinct op kinds; top 3 by time:", stats.len());
+        for s in stats.iter().take(3) {
+            println!("  {:<12} {:>5} calls  {:>9.1} µs total", s.op, s.calls, s.total_ns / 1e3);
+        }
+        assert!(prof.interposer().total_calls() > 0);
+    }
+
+    // 5) trace capture: run the program once, get a portable Vec<Op>
+    //    program, replay it bit-identically on the plain CPU backend
+    {
+        let tracer = TraceBackend::over_cpu_default();
+        let traced = {
+            let _guard = BackendGuard::install(tracer.clone());
+            let a = Tensor::from_slice(&(0..64).map(|i| i as f32 * 0.1).collect::<Vec<_>>(), [8, 8]);
+            a.matmul(&a).add(&a).tanh().sum(&[-1], false).to_vec()
+        };
+        let program = tracer.interposer().program();
+        println!("captured a {}-op program: {:?}", program.len(), program.op_names());
+        let replayed =
+            program.replay_on(CpuBackend::shared().as_ref()).expect("replay failed");
+        assert_eq!(
+            traced,
+            replayed.last().unwrap().to_vec(),
+            "replay must be bit-identical to the traced run"
+        );
+        println!("replayed on the plain CPU backend: bit-identical");
+    }
+
+    println!("custom_backend OK — three computation modes + two IR tools behind one choke point");
 }

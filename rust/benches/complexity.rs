@@ -102,9 +102,9 @@ fn main() {
     let operators = backend_ops + autograd_ops;
 
     // role counts over the *reference implementation* (tensor/cpu): the
-    // paper's metric is "how many places implement addition" — wrappers
-    // that delegate (delegate.rs, lazy, xla, bloat) are not sources of
-    // truth, so only the cpu backend is scanned
+    // paper's metric is "how many places implement addition" — interposed
+    // wrappers (interpose.rs: lazy, xla, profiling, trace, bloat) forward
+    // rather than implement, so only the cpu backend is scanned
     let cpu_src = rust_src.join("tensor/cpu");
     let (mut adds, mut convs, mut sums) = (0usize, 0usize, 0usize);
     count_role(&cpu_src, "add", &mut adds);

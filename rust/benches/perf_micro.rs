@@ -3,6 +3,12 @@
 //! allocator throughput, ring all-reduce bandwidth, and autograd per-node
 //! overhead.
 //!
+//! Besides the human-readable report, the run writes a machine-readable
+//! `BENCH_PR2.json` at the repo root
+//! (`[{"op", "ns_per_iter", "backend"}, ...]`), replacing any previous
+//! run's file; the perf trajectory accumulates across PRs via version
+//! control, one snapshot per PR.
+//!
 //! Run: `cargo bench --bench perf_micro`
 
 use std::sync::Arc;
@@ -12,22 +18,57 @@ use flashlight::memory::{CachingMemoryManager, MemoryManagerAdapter};
 use flashlight::tensor::{Conv2dParams, Tensor};
 use flashlight::util::timing::Samples;
 
+/// One machine-readable measurement row.
+struct Record {
+    op: String,
+    ns_per_iter: f64,
+    backend: &'static str,
+}
+
+/// Hand-rolled JSON (the crate is dependency-free; no serde offline).
+fn write_bench_json(records: &[Record]) {
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/BENCH_PR2.json");
+    let mut s = String::from("[\n");
+    for (i, r) in records.iter().enumerate() {
+        s.push_str(&format!(
+            "  {{\"op\": \"{}\", \"ns_per_iter\": {:.1}, \"backend\": \"{}\"}}{}\n",
+            r.op,
+            r.ns_per_iter,
+            r.backend,
+            if i + 1 < records.len() { "," } else { "" }
+        ));
+    }
+    s.push_str("]\n");
+    match std::fs::write(path, s) {
+        Ok(()) => println!("\nwrote {} records to {path}", records.len()),
+        Err(e) => eprintln!("\nfailed to write {path}: {e}"),
+    }
+}
+
 fn gemm_bench(n: usize) -> f64 {
     let a = Tensor::rand([n, n], -1.0, 1.0);
     let b = Tensor::rand([n, n], -1.0, 1.0);
     let s = Samples::collect(2, 5, || {
         std::hint::black_box(a.matmul(&b));
     });
-    2.0 * (n as f64).powi(3) / s.median() / 1e9
+    s.median()
 }
 
 fn main() {
+    let mut records: Vec<Record> = Vec::new();
     println!("== perf_micro: L3 hot paths ==");
     println!("threads: {}", flashlight::util::parallel::num_threads());
 
     println!("\n-- GEMM (f32) --");
     for n in [64usize, 128, 256, 512] {
-        println!("  {n:>4}x{n:<4}  {:>7.2} GFLOP/s", gemm_bench(n));
+        let secs = gemm_bench(n);
+        let gflops = 2.0 * (n as f64).powi(3) / secs / 1e9;
+        println!("  {n:>4}x{n:<4}  {gflops:>7.2} GFLOP/s");
+        records.push(Record {
+            op: format!("matmul_{n}x{n}"),
+            ns_per_iter: secs * 1e9,
+            backend: "cpu",
+        });
     }
 
     println!("\n-- conv2d (im2col+GEMM) --");
@@ -39,6 +80,11 @@ fn main() {
     });
     let flops = 2.0 * 8.0 * 32.0 * 32.0 * 32.0 * 16.0 * 9.0;
     println!("  8x16x32x32 ⋆ 32x16x3x3: {:.2} ms ({:.2} GFLOP/s)", s.median() * 1e3, flops / s.median() / 1e9);
+    records.push(Record {
+        op: "conv2d_8x16x32x32_k3".into(),
+        ns_per_iter: s.median() * 1e9,
+        backend: "cpu",
+    });
 
     println!("\n-- element-wise (gelu over 4M f32) --");
     let big = Tensor::rand([4 * 1024 * 1024], -2.0, 2.0);
@@ -46,6 +92,11 @@ fn main() {
         std::hint::black_box(big.gelu());
     });
     println!("  {:.2} ms  ({:.2} GB/s effective)", s.median() * 1e3, 8.0 * 4.0 * 1048576.0 / s.median() / 1e9);
+    records.push(Record {
+        op: "gelu_4m".into(),
+        ns_per_iter: s.median() * 1e9,
+        backend: "cpu",
+    });
 
     println!("\n-- allocator (caching manager, 64KiB blocks) --");
     let mgr = CachingMemoryManager::unrestricted();
@@ -59,6 +110,11 @@ fn main() {
         }
     });
     println!("  {:.1} ns per alloc/free pair", s.median() / 1000.0 * 1e9);
+    records.push(Record {
+        op: "alloc_free_64k".into(),
+        ns_per_iter: s.median() / 1000.0 * 1e9,
+        backend: "caching-mem",
+    });
 
     println!("\n-- ring all-reduce (4 workers, 1M f32) --");
     let s = Samples::collect(1, 3, || {
@@ -74,6 +130,11 @@ fn main() {
         });
     });
     println!("  {:.2} ms ({:.2} GB/s algorithmic)", s.median() * 1e3, 4.0 * 4.0 * (1 << 20) as f64 / s.median() / 1e9);
+    records.push(Record {
+        op: "all_reduce_ring4_1m".into(),
+        ns_per_iter: s.median() * 1e9,
+        backend: "dist-ring",
+    });
 
     println!("\n-- autograd overhead (scalar chain, 10k nodes) --");
     let s = Samples::collect(1, 5, || {
@@ -85,6 +146,11 @@ fn main() {
         y.backward();
     });
     println!("  {:.2} µs per node (fwd+bwd)", s.median() / 10_000.0 * 1e6);
+    records.push(Record {
+        op: "autograd_node_fwd_bwd".into(),
+        ns_per_iter: s.median() / 10_000.0 * 1e9,
+        backend: "autograd",
+    });
 
     println!("\n-- dataset pipeline (prefetch 4 workers vs serial) --");
     let base: Arc<dyn flashlight::data::Dataset> = Arc::new(flashlight::data::TensorDataset::new(vec![
@@ -111,4 +177,16 @@ fn main() {
         prefetch.median() * 1e3,
         serial.median() / prefetch.median()
     );
+    records.push(Record {
+        op: "dataset_serial_256".into(),
+        ns_per_iter: serial.median() * 1e9,
+        backend: "data-pipeline",
+    });
+    records.push(Record {
+        op: "dataset_prefetch4_256".into(),
+        ns_per_iter: prefetch.median() * 1e9,
+        backend: "data-pipeline",
+    });
+
+    write_bench_json(&records);
 }

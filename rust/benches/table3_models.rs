@@ -69,7 +69,7 @@ fn bench_single(name: &str, iters: usize) -> (f64, f64) {
     let fl = t.secs();
 
     // bloat baseline backend — same kernels, large-framework overhead
-    let _guard = BackendGuard::install(BloatBackend::new());
+    let _guard = BackendGuard::install(BloatBackend::over_cpu_default());
     let (mut model_b, spec_b) = by_name(name).unwrap();
     model_b.set_train(true);
     for _ in 0..iters.min(3) {
@@ -169,7 +169,7 @@ fn main() {
     };
     println!("\nsmall-op overhead probe (12k element-wise ops on 16-elem tensors):");
     let fl_small = probe("FL (cpu)");
-    let guard = BackendGuard::install(BloatBackend::new());
+    let guard = BackendGuard::install(BloatBackend::over_cpu_default());
     let bl_small = probe("baseline (bloat)");
     drop(guard);
     println!(

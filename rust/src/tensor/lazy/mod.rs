@@ -6,74 +6,62 @@
 //! **fused**: a chain of element-wise ops becomes a single pass over the
 //! output with no intermediate buffers — the same JIT-fusion idea as the
 //! original library's ArrayFire backend ("deferred, on-the-fly code
-//! generation ... to increase kernel arithmetic intensity"). Everything
-//! not deferred transparently falls back to the eager CPU backend via
-//! [`DelegateBackend`]: lazy tensors materialize on the way in, so the
-//! backend is always complete.
+//! generation ... to increase kernel arithmetic intensity").
+//!
+//! The backend is a single [`Interposer`] over the shared [`Op`] IR: the
+//! graph nodes store `Op` values directly (no private opcode enum), the
+//! fusion pass is a `match` over `Op`, and everything non-fusible falls
+//! through `inner.dispatch` to the eager CPU backend — lazy tensors
+//! materialize on the way in, so the backend is always complete.
 
 use std::sync::{Arc, Mutex, OnceLock};
 
 use super::adapter::TensorAdapter;
 use super::cpu::CpuBackend;
-use super::delegate::DelegateBackend;
+use super::interpose::{InterposedBackend, Interposer};
+use super::op::Op;
 use super::{DType, HostBuffer, Shape, Tensor, TensorBackend};
+use crate::util::error::Result;
 
-/// Deferred element-wise opcodes (a tiny fusion ISA).
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub enum EwOp {
-    /// Binary ops pop two stack values.
-    Add,
-    Sub,
-    Mul,
-    Div,
-    Maximum,
-    Minimum,
-    /// Unary ops pop one.
-    Neg,
-    Exp,
-    Log,
-    Tanh,
-    Sqrt,
-    Abs,
+/// Arity of a *fusible* element-wise op (`None`: not deferred). This is
+/// the deferral predicate — the fusion ISA is just a subset of [`Op`].
+fn ew_arity(op: &Op) -> Option<usize> {
+    match op {
+        Op::Add | Op::Sub | Op::Mul | Op::Div | Op::Maximum | Op::Minimum => Some(2),
+        Op::Neg | Op::Exp | Op::Log | Op::Tanh | Op::Sqrt | Op::Abs => Some(1),
+        _ => None,
+    }
 }
 
-impl EwOp {
-    fn arity(self) -> usize {
-        matches!(self, EwOp::Neg | EwOp::Exp | EwOp::Log | EwOp::Tanh | EwOp::Sqrt | EwOp::Abs)
-            .then_some(1)
-            .unwrap_or(2)
+fn apply1(op: &Op, x: f32) -> f32 {
+    match op {
+        Op::Neg => -x,
+        Op::Exp => x.exp(),
+        Op::Log => x.ln(),
+        Op::Tanh => x.tanh(),
+        Op::Sqrt => x.sqrt(),
+        Op::Abs => x.abs(),
+        _ => unreachable!("not a fusible unary op: {op:?}"),
     }
+}
 
-    fn apply1(self, x: f32) -> f32 {
-        match self {
-            EwOp::Neg => -x,
-            EwOp::Exp => x.exp(),
-            EwOp::Log => x.ln(),
-            EwOp::Tanh => x.tanh(),
-            EwOp::Sqrt => x.sqrt(),
-            EwOp::Abs => x.abs(),
-            _ => unreachable!(),
-        }
-    }
-
-    fn apply2(self, a: f32, b: f32) -> f32 {
-        match self {
-            EwOp::Add => a + b,
-            EwOp::Sub => a - b,
-            EwOp::Mul => a * b,
-            EwOp::Div => a / b,
-            EwOp::Maximum => a.max(b),
-            EwOp::Minimum => a.min(b),
-            _ => unreachable!(),
-        }
+fn apply2(op: &Op, a: f32, b: f32) -> f32 {
+    match op {
+        Op::Add => a + b,
+        Op::Sub => a - b,
+        Op::Mul => a * b,
+        Op::Div => a / b,
+        Op::Maximum => a.max(b),
+        Op::Minimum => a.min(b),
+        _ => unreachable!("not a fusible binary op: {op:?}"),
     }
 }
 
 enum Node {
     /// A materialized operand.
     Leaf(Tensor),
-    /// Deferred element-wise op over lazy operands.
-    Ew(EwOp, Vec<Arc<LazyTensor>>),
+    /// Deferred element-wise [`Op`] over lazy operands.
+    Ew(Op, Vec<Arc<LazyTensor>>),
     /// Deferred matmul.
     Matmul(Arc<LazyTensor>, Arc<LazyTensor>),
 }
@@ -154,10 +142,10 @@ impl LazyTensor {
                         sp += 1;
                     }
                     Rpn::Op(op) => {
-                        if op.arity() == 1 {
-                            stack[sp - 1] = op.apply1(stack[sp - 1]);
+                        if ew_arity(op) == Some(1) {
+                            stack[sp - 1] = apply1(op, stack[sp - 1]);
                         } else {
-                            stack[sp - 2] = op.apply2(stack[sp - 2], stack[sp - 1]);
+                            stack[sp - 2] = apply2(op, stack[sp - 2], stack[sp - 1]);
                             sp -= 1;
                         }
                     }
@@ -188,7 +176,7 @@ impl LazyTensor {
                         leaves.push(forced.to_vec());
                     }
                 }
-                rpn.push(Rpn::Op(*op));
+                rpn.push(Rpn::Op(op.clone()));
             }
             _ => {
                 let forced = self.force();
@@ -201,7 +189,7 @@ impl LazyTensor {
 
 enum Rpn {
     Leaf(usize),
-    Op(EwOp),
+    Op(Op),
 }
 
 /// Public adapter handle for lazy tensors.
@@ -231,22 +219,17 @@ pub fn pending_ops(t: &Tensor) -> usize {
     t.adapter().as_any().downcast_ref::<Handle>().map(|h| h.0.pending_ops()).unwrap_or(0)
 }
 
-/// The deferred backend. Element-wise f32 ops and matmul defer; everything
-/// else delegates to the eager CPU backend (lazy operands materialize on
-/// the way in via `to_host`).
-pub struct LazyBackend {
-    inner: Arc<dyn TensorBackend>,
-}
+/// The deferral policy, as a one-function [`Interposer`]: fusible f32
+/// element-wise ops and 2-D f32 matmuls queue as graph nodes; everything
+/// else falls through `dispatch` to the eager inner backend (lazy
+/// operands materialize on the way in via `to_host`).
+pub struct LazyInterposer;
 
-impl LazyBackend {
-    /// The canonical shared instance.
-    pub fn shared() -> Arc<dyn TensorBackend> {
-        static INST: OnceLock<Arc<LazyBackend>> = OnceLock::new();
-        INST.get_or_init(|| Arc::new(LazyBackend { inner: CpuBackend::shared() })).clone()
-            as Arc<dyn TensorBackend>
-    }
-
-    fn defer_ew(&self, op: EwOp, inputs: &[&Tensor]) -> Option<Tensor> {
+impl LazyInterposer {
+    fn defer_ew(&self, op: &Op, inputs: &[&Tensor]) -> Option<Tensor> {
+        if inputs.len() != ew_arity(op)? {
+            return None;
+        }
         if inputs.iter().any(|t| t.dtype() != DType::F32) {
             return None; // defer only the f32 hot path
         }
@@ -256,61 +239,18 @@ impl LazyBackend {
         }
         let ins: Vec<Arc<LazyTensor>> = inputs.iter().map(|t| LazyTensor::of(t)).collect();
         let lt = Arc::new(LazyTensor {
-            node: Node::Ew(op, ins),
+            node: Node::Ew(op.clone(), ins),
             shape,
             dtype: DType::F32,
             cache: Mutex::new(None),
         });
         Some(Tensor::from_adapter(Arc::new(Handle(lt))))
     }
-}
 
-macro_rules! lazy_binop {
-    ($meth:ident, $op:expr) => {
-        fn $meth(&self, a: &Tensor, b: &Tensor) -> Tensor {
-            match self.defer_ew($op, &[a, b]) {
-                Some(t) => t,
-                None => self.inner.$meth(a, b),
-            }
-        }
-    };
-}
-macro_rules! lazy_unop {
-    ($meth:ident, $op:expr) => {
-        fn $meth(&self, x: &Tensor) -> Tensor {
-            match self.defer_ew($op, &[x]) {
-                Some(t) => t,
-                None => self.inner.$meth(x),
-            }
-        }
-    };
-}
-
-impl DelegateBackend for LazyBackend {
-    fn inner(&self) -> Arc<dyn TensorBackend> {
-        self.inner.clone()
-    }
-
-    fn wrapper_name(&self) -> &str {
-        "lazy"
-    }
-
-    lazy_binop!(add, EwOp::Add);
-    lazy_binop!(sub, EwOp::Sub);
-    lazy_binop!(mul, EwOp::Mul);
-    lazy_binop!(div, EwOp::Div);
-    lazy_binop!(maximum, EwOp::Maximum);
-    lazy_binop!(minimum, EwOp::Minimum);
-    lazy_unop!(neg, EwOp::Neg);
-    lazy_unop!(exp, EwOp::Exp);
-    lazy_unop!(log, EwOp::Log);
-    lazy_unop!(tanh, EwOp::Tanh);
-    lazy_unop!(sqrt, EwOp::Sqrt);
-    lazy_unop!(abs, EwOp::Abs);
-
-    fn matmul(&self, a: &Tensor, b: &Tensor) -> Tensor {
+    fn defer_matmul(&self, inputs: &[&Tensor]) -> Option<Tensor> {
+        let [a, b] = inputs else { return None };
         if a.dtype() != DType::F32 || b.dtype() != DType::F32 || a.rank() != 2 || b.rank() != 2 {
-            return self.inner.matmul(a, b);
+            return None;
         }
         let (la, lb) = (LazyTensor::of(a), LazyTensor::of(b));
         let shape = Shape::new(vec![a.dims()[0], b.dims()[1]]);
@@ -320,11 +260,47 @@ impl DelegateBackend for LazyBackend {
             dtype: DType::F32,
             cache: Mutex::new(None),
         });
-        Tensor::from_adapter(Arc::new(Handle(lt)))
+        Some(Tensor::from_adapter(Arc::new(Handle(lt))))
     }
 }
 
-crate::impl_delegate_backend!(LazyBackend);
+impl Interposer for LazyInterposer {
+    fn name(&self) -> &str {
+        "lazy"
+    }
+
+    fn intercept(
+        &self,
+        op: &Op,
+        inputs: &[&Tensor],
+        inner: &dyn TensorBackend,
+    ) -> Result<Tensor> {
+        if ew_arity(op).is_some() {
+            if let Some(t) = self.defer_ew(op, inputs) {
+                return Ok(t);
+            }
+        } else if matches!(op, Op::Matmul) {
+            if let Some(t) = self.defer_matmul(inputs) {
+                return Ok(t);
+            }
+        }
+        inner.dispatch(op, inputs)
+    }
+}
+
+/// The deferred backend: [`LazyInterposer`] over the eager CPU backend.
+pub type LazyBackend = InterposedBackend<LazyInterposer>;
+
+impl LazyBackend {
+    /// The canonical shared instance.
+    pub fn shared() -> Arc<dyn TensorBackend> {
+        static INST: OnceLock<Arc<LazyBackend>> = OnceLock::new();
+        let be: Arc<LazyBackend> = INST
+            .get_or_init(|| InterposedBackend::new(LazyInterposer, CpuBackend::shared()))
+            .clone();
+        be
+    }
+}
 
 #[cfg(test)]
 mod tests {
@@ -393,5 +369,17 @@ mod tests {
         let shared = a.exp(); // used twice
         let out = shared.add(&shared);
         assert!((out.to_vec()[0] - 2.0 * 2.0f32.exp()).abs() < 1e-5);
+    }
+
+    #[test]
+    fn graph_nodes_are_shared_ops() {
+        // the deferral predicate and the dispatch surface speak the same
+        // IR: a deferred tensor dispatched through the public choke point
+        // materializes identically to the typed path
+        let lazy = LazyBackend::shared();
+        let a = Tensor::from_slice(&[1.0f32, 4.0, 9.0], [3]);
+        let deferred = lazy.dispatch(&Op::Sqrt, &[&a]).unwrap();
+        assert_eq!(pending_ops(&deferred), 1);
+        assert_eq!(deferred.to_vec(), vec![1.0, 2.0, 3.0]);
     }
 }

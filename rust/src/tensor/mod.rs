@@ -5,16 +5,26 @@
 //! [`backend::TensorBackend`] interface; everything beyond that interface
 //! (activations, softmax, statistics, …) is derived by composition in this
 //! module, so a custom backend retargets the whole framework.
+//!
+//! The backend surface itself has a single choke point: every primitive
+//! is reified as an [`op::Op`] value and executed via
+//! [`TensorBackend::dispatch`]. Wrapper backends implement the
+//! one-function [`interpose::Interposer`] instead of sixty methods — see
+//! [`profile::ProfilingBackend`], [`trace::TraceBackend`], [`lazy`], and
+//! [`xla_backend`] for the reference interposers.
 
 pub mod adapter;
 pub mod backend;
 pub mod cpu;
-pub mod delegate;
 pub mod dtype;
 pub mod host;
 pub mod index;
+pub mod interpose;
 pub mod lazy;
+pub mod op;
+pub mod profile;
 pub mod shape;
+pub mod trace;
 pub mod xla_backend;
 
 use std::sync::Arc;
@@ -26,7 +36,11 @@ pub use backend::{
 };
 pub use dtype::{DType, Element};
 pub use host::HostBuffer;
+pub use interpose::{InterposedBackend, Interposer};
+pub use op::Op;
+pub use profile::ProfilingBackend;
 pub use shape::Shape;
+pub use trace::{TraceBackend, TraceProgram};
 
 use crate::util::error::{Error, Result};
 

@@ -1,0 +1,714 @@
+//! The first-class operation IR: every [`TensorBackend`] primitive,
+//! reified as data.
+//!
+//! [`Op`] encodes the complete primitive surface of the framework — one
+//! variant per backend method, carrying the non-tensor payload (shapes,
+//! axes, dtypes, conv/pool hyper-parameters) by value. Tensor operands
+//! travel alongside as an `&[&Tensor]` slice. Together with
+//! [`TensorBackend::dispatch`] this turns every cross-cutting concern
+//! (tracing, profiling, fusion, graph capture, overhead modeling) from a
+//! ~60-method override chore into a *single function*: wrappers observe
+//! the `Op`, then either handle it or forward it.
+//!
+//! Design rules:
+//!
+//! - **Ops are pure data.** `Op` is `Clone + PartialEq + Debug`, carries
+//!   no backend state, and can be stored, compared, serialized by hand,
+//!   or replayed on any backend (see [`super::trace`]).
+//! - **The typed methods stay the contract.** [`execute`] is the one
+//!   place that maps each variant back to its typed method, so a backend
+//!   that only implements the typed surface is automatically complete
+//!   under `dispatch`, and a wrapper that only sees `dispatch` observes
+//!   the full surface. Adding a variant without routing it is a compile
+//!   error (the match below is exhaustive).
+//! - **Creation ops take zero tensor inputs.** Their payload (including
+//!   the full [`HostBuffer`] for `FromHost`) lives in the variant, which
+//!   is what makes captured programs self-contained.
+
+use super::backend::{Conv2dParams, Pool2dParams, TensorBackend};
+use super::dtype::DType;
+use super::host::HostBuffer;
+use super::shape::Shape;
+use super::Tensor;
+use crate::util::error::{Error, Result};
+
+/// A reified backend primitive (see module docs). Variant payloads are the
+/// non-tensor arguments of the corresponding [`TensorBackend`] method;
+/// tensor operands are passed separately to [`TensorBackend::dispatch`].
+#[derive(Debug, Clone, PartialEq)]
+pub enum Op {
+    // ---- creation (zero tensor inputs) -----------------------------------
+    /// `full(shape, value, dtype)`.
+    Full {
+        /// Output shape.
+        shape: Shape,
+        /// Fill value.
+        value: f64,
+        /// Output dtype.
+        dtype: DType,
+    },
+    /// `arange(n, dtype)`.
+    Arange {
+        /// Element count.
+        n: usize,
+        /// Output dtype.
+        dtype: DType,
+    },
+    /// `rand_uniform(shape, lo, hi, dtype)` — draws from the backend RNG,
+    /// so two executions are *not* bit-identical.
+    RandUniform {
+        /// Output shape.
+        shape: Shape,
+        /// Inclusive lower bound.
+        lo: f64,
+        /// Exclusive upper bound.
+        hi: f64,
+        /// Output dtype.
+        dtype: DType,
+    },
+    /// `rand_normal(shape, mean, std, dtype)` — draws from the backend RNG.
+    RandNormal {
+        /// Output shape.
+        shape: Shape,
+        /// Distribution mean.
+        mean: f64,
+        /// Distribution standard deviation.
+        std: f64,
+        /// Output dtype.
+        dtype: DType,
+    },
+    /// `from_host(host, shape)` — carries the host data by value so a
+    /// captured program is self-contained and replayable.
+    FromHost {
+        /// The host data.
+        host: HostBuffer,
+        /// Logical shape.
+        shape: Shape,
+    },
+
+    // ---- unary (one tensor input) ----------------------------------------
+    /// Element-wise negation.
+    Neg,
+    /// Element-wise absolute value.
+    Abs,
+    /// Element-wise sign.
+    Sign,
+    /// Element-wise `e^x`.
+    Exp,
+    /// Element-wise natural log.
+    Log,
+    /// Element-wise `ln(1+x)`.
+    Log1p,
+    /// Element-wise sine.
+    Sin,
+    /// Element-wise cosine.
+    Cos,
+    /// Element-wise tanh.
+    Tanh,
+    /// Element-wise square root.
+    Sqrt,
+    /// Element-wise `1/sqrt(x)`.
+    Rsqrt,
+    /// Element-wise `1/x`.
+    Reciprocal,
+    /// Element-wise floor.
+    Floor,
+    /// Element-wise ceil.
+    Ceil,
+    /// Element-wise round.
+    Round,
+    /// Element-wise Gauss error function.
+    Erf,
+    /// Element-wise logical not (Bool result).
+    LogicalNot,
+    /// Element-wise NaN test (Bool result).
+    IsNan,
+    /// Clamp into `[lo, hi]`.
+    Clip {
+        /// Lower bound.
+        lo: f64,
+        /// Upper bound.
+        hi: f64,
+    },
+
+    // ---- binary (two tensor inputs, broadcasting) --------------------------
+    /// Element-wise sum.
+    Add,
+    /// Element-wise difference.
+    Sub,
+    /// Element-wise product.
+    Mul,
+    /// Element-wise quotient.
+    Div,
+    /// Element-wise power.
+    Pow,
+    /// Element-wise minimum.
+    Minimum,
+    /// Element-wise maximum.
+    Maximum,
+    /// Element-wise remainder.
+    Rem,
+
+    // ---- comparison (two tensor inputs, Bool result) ------------------------
+    /// Element-wise equality.
+    Eq,
+    /// Element-wise inequality.
+    Neq,
+    /// Element-wise `<`.
+    Lt,
+    /// Element-wise `<=`.
+    Le,
+    /// Element-wise `>`.
+    Gt,
+    /// Element-wise `>=`.
+    Ge,
+    /// Element-wise logical and.
+    LogicalAnd,
+    /// Element-wise logical or.
+    LogicalOr,
+
+    // ---- reductions (one tensor input) ---------------------------------------
+    /// Sum over `axes`.
+    Sum {
+        /// Normalized, deduplicated axes.
+        axes: Vec<usize>,
+        /// Keep reduced dims as size 1.
+        keepdims: bool,
+    },
+    /// Product over `axes`.
+    Prod {
+        /// Normalized, deduplicated axes.
+        axes: Vec<usize>,
+        /// Keep reduced dims as size 1.
+        keepdims: bool,
+    },
+    /// Max over `axes`.
+    MaxReduce {
+        /// Normalized, deduplicated axes.
+        axes: Vec<usize>,
+        /// Keep reduced dims as size 1.
+        keepdims: bool,
+    },
+    /// Min over `axes`.
+    MinReduce {
+        /// Normalized, deduplicated axes.
+        axes: Vec<usize>,
+        /// Keep reduced dims as size 1.
+        keepdims: bool,
+    },
+    /// Index of the max along `axis` (dtype I64).
+    Argmax {
+        /// Reduction axis.
+        axis: usize,
+        /// Keep the reduced dim as size 1.
+        keepdims: bool,
+    },
+    /// Index of the min along `axis` (dtype I64).
+    Argmin {
+        /// Reduction axis.
+        axis: usize,
+        /// Keep the reduced dim as size 1.
+        keepdims: bool,
+    },
+    /// Logical any over `axes` (Bool result).
+    Any {
+        /// Normalized, deduplicated axes.
+        axes: Vec<usize>,
+        /// Keep reduced dims as size 1.
+        keepdims: bool,
+    },
+    /// Logical all over `axes` (Bool result).
+    All {
+        /// Normalized, deduplicated axes.
+        axes: Vec<usize>,
+        /// Keep reduced dims as size 1.
+        keepdims: bool,
+    },
+    /// Inclusive cumulative sum along `axis`.
+    Cumsum {
+        /// Scan axis.
+        axis: usize,
+    },
+
+    // ---- linear algebra (two tensor inputs) ------------------------------------
+    /// Matrix multiply (see [`TensorBackend::matmul`]).
+    Matmul,
+
+    // ---- neural-network primitives ------------------------------------------------
+    /// 2-D convolution over `(x, w)`.
+    Conv2d(Conv2dParams),
+    /// Gradient of conv2d w.r.t. its input, over `(grad_y, w)`.
+    Conv2dBwdInput {
+        /// Shape of the original input `x`.
+        x_shape: Shape,
+        /// The forward conv hyper-parameters.
+        params: Conv2dParams,
+    },
+    /// Gradient of conv2d w.r.t. the filter, over `(grad_y, x)`.
+    Conv2dBwdFilter {
+        /// Shape of the original filter `w`.
+        w_shape: Shape,
+        /// The forward conv hyper-parameters.
+        params: Conv2dParams,
+    },
+    /// 2-D max/avg pooling over `x`.
+    Pool2d(Pool2dParams),
+    /// Gradient of pool2d, over `(grad_y, x)`.
+    Pool2dBwd(Pool2dParams),
+
+    // ---- data movement ------------------------------------------------------------
+    /// Reshape to `shape` (same element count).
+    Reshape {
+        /// Pre-resolved target shape.
+        shape: Shape,
+    },
+    /// Permute dimensions.
+    Transpose {
+        /// The permutation.
+        perm: Vec<usize>,
+    },
+    /// Rectangular slice `[starts, ends)` per dimension.
+    Slice {
+        /// Inclusive start per dim.
+        starts: Vec<usize>,
+        /// Exclusive end per dim.
+        ends: Vec<usize>,
+    },
+    /// Concatenate all inputs along `axis` (variadic: ≥ 1 input).
+    Concat {
+        /// Concatenation axis.
+        axis: usize,
+    },
+    /// Constant-pad.
+    Pad {
+        /// `(before, after)` per dimension.
+        pads: Vec<(usize, usize)>,
+        /// Fill value.
+        value: f64,
+    },
+    /// Repeat along each dimension.
+    Tile {
+        /// Repetitions per dim.
+        reps: Vec<usize>,
+    },
+    /// Reverse along the given axes.
+    Flip {
+        /// Axes to reverse.
+        axes: Vec<usize>,
+    },
+    /// Gather along `axis` by integer indices, over `(x, indices)`.
+    IndexSelect {
+        /// Gather axis.
+        axis: usize,
+    },
+    /// `out = base; out[indices[i], ...] += src[i, ...]`, over
+    /// `(base, indices, src)`.
+    ScatterAdd,
+    /// Element-wise select, over `(cond, a, b)`.
+    WhereCond,
+    /// Cast to `dtype`.
+    Astype {
+        /// Target dtype.
+        dtype: DType,
+    },
+    /// Deep copy.
+    Copy,
+
+    // ---- extension point -------------------------------------------------------------
+    /// A named fused operation (variadic inputs); backends without a
+    /// matching kernel return [`Error::Unsupported`].
+    CallExt {
+        /// The extension-op name (e.g. `"linear_gelu"`).
+        name: String,
+    },
+}
+
+impl Op {
+    /// Every op name, in declaration order. Kept in sync with the enum by
+    /// review and enforced by the round-trip test in
+    /// `rust/tests/op_dispatch.rs`, which exercises each listed name
+    /// through [`TensorBackend::dispatch`]. ([`execute`]'s exhaustive
+    /// match is the compile-time guarantee that no variant goes unrouted.)
+    pub const ALL_NAMES: &'static [&'static str] = &[
+        "full",
+        "arange",
+        "rand_uniform",
+        "rand_normal",
+        "from_host",
+        "neg",
+        "abs",
+        "sign",
+        "exp",
+        "log",
+        "log1p",
+        "sin",
+        "cos",
+        "tanh",
+        "sqrt",
+        "rsqrt",
+        "reciprocal",
+        "floor",
+        "ceil",
+        "round",
+        "erf",
+        "logical_not",
+        "isnan",
+        "clip",
+        "add",
+        "sub",
+        "mul",
+        "div",
+        "pow",
+        "minimum",
+        "maximum",
+        "rem",
+        "eq",
+        "neq",
+        "lt",
+        "le",
+        "gt",
+        "ge",
+        "logical_and",
+        "logical_or",
+        "sum",
+        "prod",
+        "max_reduce",
+        "min_reduce",
+        "argmax",
+        "argmin",
+        "any",
+        "all",
+        "cumsum",
+        "matmul",
+        "conv2d",
+        "conv2d_bwd_input",
+        "conv2d_bwd_filter",
+        "pool2d",
+        "pool2d_bwd",
+        "reshape",
+        "transpose",
+        "slice",
+        "concat",
+        "pad",
+        "tile",
+        "flip",
+        "index_select",
+        "scatter_add",
+        "where_cond",
+        "astype",
+        "copy",
+        "call_ext",
+    ];
+
+    /// The op's name — identical to the [`TensorBackend`] method it routes
+    /// to (profilers and error messages key on this).
+    pub fn name(&self) -> &'static str {
+        match self {
+            Op::Full { .. } => "full",
+            Op::Arange { .. } => "arange",
+            Op::RandUniform { .. } => "rand_uniform",
+            Op::RandNormal { .. } => "rand_normal",
+            Op::FromHost { .. } => "from_host",
+            Op::Neg => "neg",
+            Op::Abs => "abs",
+            Op::Sign => "sign",
+            Op::Exp => "exp",
+            Op::Log => "log",
+            Op::Log1p => "log1p",
+            Op::Sin => "sin",
+            Op::Cos => "cos",
+            Op::Tanh => "tanh",
+            Op::Sqrt => "sqrt",
+            Op::Rsqrt => "rsqrt",
+            Op::Reciprocal => "reciprocal",
+            Op::Floor => "floor",
+            Op::Ceil => "ceil",
+            Op::Round => "round",
+            Op::Erf => "erf",
+            Op::LogicalNot => "logical_not",
+            Op::IsNan => "isnan",
+            Op::Clip { .. } => "clip",
+            Op::Add => "add",
+            Op::Sub => "sub",
+            Op::Mul => "mul",
+            Op::Div => "div",
+            Op::Pow => "pow",
+            Op::Minimum => "minimum",
+            Op::Maximum => "maximum",
+            Op::Rem => "rem",
+            Op::Eq => "eq",
+            Op::Neq => "neq",
+            Op::Lt => "lt",
+            Op::Le => "le",
+            Op::Gt => "gt",
+            Op::Ge => "ge",
+            Op::LogicalAnd => "logical_and",
+            Op::LogicalOr => "logical_or",
+            Op::Sum { .. } => "sum",
+            Op::Prod { .. } => "prod",
+            Op::MaxReduce { .. } => "max_reduce",
+            Op::MinReduce { .. } => "min_reduce",
+            Op::Argmax { .. } => "argmax",
+            Op::Argmin { .. } => "argmin",
+            Op::Any { .. } => "any",
+            Op::All { .. } => "all",
+            Op::Cumsum { .. } => "cumsum",
+            Op::Matmul => "matmul",
+            Op::Conv2d(_) => "conv2d",
+            Op::Conv2dBwdInput { .. } => "conv2d_bwd_input",
+            Op::Conv2dBwdFilter { .. } => "conv2d_bwd_filter",
+            Op::Pool2d(_) => "pool2d",
+            Op::Pool2dBwd(_) => "pool2d_bwd",
+            Op::Reshape { .. } => "reshape",
+            Op::Transpose { .. } => "transpose",
+            Op::Slice { .. } => "slice",
+            Op::Concat { .. } => "concat",
+            Op::Pad { .. } => "pad",
+            Op::Tile { .. } => "tile",
+            Op::Flip { .. } => "flip",
+            Op::IndexSelect { .. } => "index_select",
+            Op::ScatterAdd => "scatter_add",
+            Op::WhereCond => "where_cond",
+            Op::Astype { .. } => "astype",
+            Op::Copy => "copy",
+            Op::CallExt { .. } => "call_ext",
+        }
+    }
+
+    /// Expected tensor-input count, or `None` for variadic ops
+    /// (`Concat` needs ≥ 1 input, `CallExt` any number).
+    pub fn arity(&self) -> Option<usize> {
+        match self {
+            Op::Full { .. }
+            | Op::Arange { .. }
+            | Op::RandUniform { .. }
+            | Op::RandNormal { .. }
+            | Op::FromHost { .. } => Some(0),
+            Op::Neg
+            | Op::Abs
+            | Op::Sign
+            | Op::Exp
+            | Op::Log
+            | Op::Log1p
+            | Op::Sin
+            | Op::Cos
+            | Op::Tanh
+            | Op::Sqrt
+            | Op::Rsqrt
+            | Op::Reciprocal
+            | Op::Floor
+            | Op::Ceil
+            | Op::Round
+            | Op::Erf
+            | Op::LogicalNot
+            | Op::IsNan
+            | Op::Clip { .. }
+            | Op::Sum { .. }
+            | Op::Prod { .. }
+            | Op::MaxReduce { .. }
+            | Op::MinReduce { .. }
+            | Op::Argmax { .. }
+            | Op::Argmin { .. }
+            | Op::Any { .. }
+            | Op::All { .. }
+            | Op::Cumsum { .. }
+            | Op::Pool2d(_)
+            | Op::Reshape { .. }
+            | Op::Transpose { .. }
+            | Op::Slice { .. }
+            | Op::Pad { .. }
+            | Op::Tile { .. }
+            | Op::Flip { .. }
+            | Op::Astype { .. }
+            | Op::Copy => Some(1),
+            Op::Add
+            | Op::Sub
+            | Op::Mul
+            | Op::Div
+            | Op::Pow
+            | Op::Minimum
+            | Op::Maximum
+            | Op::Rem
+            | Op::Eq
+            | Op::Neq
+            | Op::Lt
+            | Op::Le
+            | Op::Gt
+            | Op::Ge
+            | Op::LogicalAnd
+            | Op::LogicalOr
+            | Op::Matmul
+            | Op::Conv2d(_)
+            | Op::Conv2dBwdInput { .. }
+            | Op::Conv2dBwdFilter { .. }
+            | Op::Pool2dBwd(_)
+            | Op::IndexSelect { .. } => Some(2),
+            Op::ScatterAdd | Op::WhereCond => Some(3),
+            Op::Concat { .. } | Op::CallExt { .. } => None,
+        }
+    }
+}
+
+/// Route a reified [`Op`] to the corresponding typed [`TensorBackend`]
+/// method. This is the body of the default [`TensorBackend::dispatch`]:
+/// one exhaustive match, so the compiler proves every variant reaches its
+/// typed implementation.
+pub fn execute<B: TensorBackend + ?Sized>(
+    backend: &B,
+    op: &Op,
+    inputs: &[&Tensor],
+) -> Result<Tensor> {
+    if let Some(want) = op.arity() {
+        if inputs.len() != want {
+            return Err(Error::msg(format!(
+                "op `{}` expects {want} tensor input(s), got {}",
+                op.name(),
+                inputs.len()
+            )));
+        }
+    }
+    let out = match op {
+        Op::Full { shape, value, dtype } => backend.full(shape, *value, *dtype),
+        Op::Arange { n, dtype } => backend.arange(*n, *dtype),
+        Op::RandUniform { shape, lo, hi, dtype } => backend.rand_uniform(shape, *lo, *hi, *dtype),
+        Op::RandNormal { shape, mean, std, dtype } => {
+            backend.rand_normal(shape, *mean, *std, *dtype)
+        }
+        Op::FromHost { host, shape } => backend.from_host(host.clone(), shape.clone()),
+        Op::Neg => backend.neg(inputs[0]),
+        Op::Abs => backend.abs(inputs[0]),
+        Op::Sign => backend.sign(inputs[0]),
+        Op::Exp => backend.exp(inputs[0]),
+        Op::Log => backend.log(inputs[0]),
+        Op::Log1p => backend.log1p(inputs[0]),
+        Op::Sin => backend.sin(inputs[0]),
+        Op::Cos => backend.cos(inputs[0]),
+        Op::Tanh => backend.tanh(inputs[0]),
+        Op::Sqrt => backend.sqrt(inputs[0]),
+        Op::Rsqrt => backend.rsqrt(inputs[0]),
+        Op::Reciprocal => backend.reciprocal(inputs[0]),
+        Op::Floor => backend.floor(inputs[0]),
+        Op::Ceil => backend.ceil(inputs[0]),
+        Op::Round => backend.round(inputs[0]),
+        Op::Erf => backend.erf(inputs[0]),
+        Op::LogicalNot => backend.logical_not(inputs[0]),
+        Op::IsNan => backend.isnan(inputs[0]),
+        Op::Clip { lo, hi } => backend.clip(inputs[0], *lo, *hi),
+        Op::Add => backend.add(inputs[0], inputs[1]),
+        Op::Sub => backend.sub(inputs[0], inputs[1]),
+        Op::Mul => backend.mul(inputs[0], inputs[1]),
+        Op::Div => backend.div(inputs[0], inputs[1]),
+        Op::Pow => backend.pow(inputs[0], inputs[1]),
+        Op::Minimum => backend.minimum(inputs[0], inputs[1]),
+        Op::Maximum => backend.maximum(inputs[0], inputs[1]),
+        Op::Rem => backend.rem(inputs[0], inputs[1]),
+        Op::Eq => backend.eq(inputs[0], inputs[1]),
+        Op::Neq => backend.neq(inputs[0], inputs[1]),
+        Op::Lt => backend.lt(inputs[0], inputs[1]),
+        Op::Le => backend.le(inputs[0], inputs[1]),
+        Op::Gt => backend.gt(inputs[0], inputs[1]),
+        Op::Ge => backend.ge(inputs[0], inputs[1]),
+        Op::LogicalAnd => backend.logical_and(inputs[0], inputs[1]),
+        Op::LogicalOr => backend.logical_or(inputs[0], inputs[1]),
+        Op::Sum { axes, keepdims } => backend.sum(inputs[0], axes, *keepdims),
+        Op::Prod { axes, keepdims } => backend.prod(inputs[0], axes, *keepdims),
+        Op::MaxReduce { axes, keepdims } => backend.max_reduce(inputs[0], axes, *keepdims),
+        Op::MinReduce { axes, keepdims } => backend.min_reduce(inputs[0], axes, *keepdims),
+        Op::Argmax { axis, keepdims } => backend.argmax(inputs[0], *axis, *keepdims),
+        Op::Argmin { axis, keepdims } => backend.argmin(inputs[0], *axis, *keepdims),
+        Op::Any { axes, keepdims } => backend.any(inputs[0], axes, *keepdims),
+        Op::All { axes, keepdims } => backend.all(inputs[0], axes, *keepdims),
+        Op::Cumsum { axis } => backend.cumsum(inputs[0], *axis),
+        Op::Matmul => backend.matmul(inputs[0], inputs[1]),
+        Op::Conv2d(p) => backend.conv2d(inputs[0], inputs[1], *p),
+        Op::Conv2dBwdInput { x_shape, params } => {
+            backend.conv2d_bwd_input(inputs[0], inputs[1], x_shape, *params)
+        }
+        Op::Conv2dBwdFilter { w_shape, params } => {
+            backend.conv2d_bwd_filter(inputs[0], inputs[1], w_shape, *params)
+        }
+        Op::Pool2d(p) => backend.pool2d(inputs[0], *p),
+        Op::Pool2dBwd(p) => backend.pool2d_bwd(inputs[0], inputs[1], *p),
+        Op::Reshape { shape } => backend.reshape(inputs[0], shape),
+        Op::Transpose { perm } => backend.transpose(inputs[0], perm),
+        Op::Slice { starts, ends } => backend.slice(inputs[0], starts, ends),
+        Op::Concat { axis } => {
+            if inputs.is_empty() {
+                return Err(Error::msg("op `concat` expects at least one tensor input"));
+            }
+            backend.concat(inputs, *axis)
+        }
+        Op::Pad { pads, value } => backend.pad(inputs[0], pads, *value),
+        Op::Tile { reps } => backend.tile(inputs[0], reps),
+        Op::Flip { axes } => backend.flip(inputs[0], axes),
+        Op::IndexSelect { axis } => backend.index_select(inputs[0], *axis, inputs[1]),
+        Op::ScatterAdd => backend.scatter_add(inputs[0], inputs[1], inputs[2]),
+        Op::WhereCond => backend.where_cond(inputs[0], inputs[1], inputs[2]),
+        Op::Astype { dtype } => backend.astype(inputs[0], *dtype),
+        Op::Copy => backend.copy(inputs[0]),
+        Op::CallExt { name } => return backend.call_ext(name, inputs),
+    };
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::cpu::CpuBackend;
+
+    #[test]
+    fn names_are_unique_and_canonical() {
+        let mut seen = std::collections::HashSet::new();
+        for n in Op::ALL_NAMES {
+            assert!(seen.insert(*n), "duplicate op name `{n}`");
+        }
+        // spot-check that `name()` agrees with the canonical list
+        assert!(Op::ALL_NAMES.contains(&Op::Add.name()));
+        assert!(Op::ALL_NAMES.contains(&Op::Matmul.name()));
+        assert!(Op::ALL_NAMES.contains(&Op::CallExt { name: "x".into() }.name()));
+    }
+
+    #[test]
+    fn arity_is_enforced() {
+        let be = CpuBackend::shared();
+        let t = Tensor::from_slice(&[1.0f32, 2.0], [2]);
+        // add wants 2 inputs
+        let err = be.dispatch(&Op::Add, &[&t]).unwrap_err();
+        assert!(err.to_string().contains("add"), "{err}");
+        // concat wants >= 1
+        assert!(be.dispatch(&Op::Concat { axis: 0 }, &[]).is_err());
+        // creation ops want 0
+        assert!(be
+            .dispatch(&Op::Arange { n: 3, dtype: DType::I64 }, &[&t])
+            .is_err());
+    }
+
+    #[test]
+    fn dispatch_routes_to_typed_methods() {
+        let be = CpuBackend::shared();
+        let a = Tensor::from_slice(&[1.0f32, 2.0, 3.0], [3]);
+        let b = Tensor::from_slice(&[10.0f32, 20.0, 30.0], [3]);
+        let y = be.dispatch(&Op::Add, &[&a, &b]).unwrap();
+        assert_eq!(y.to_vec(), vec![11.0, 22.0, 33.0]);
+        let s = be
+            .dispatch(&Op::Sum { axes: vec![0], keepdims: false }, &[&y])
+            .unwrap();
+        assert_eq!(s.item(), 66.0);
+        let z = be
+            .dispatch(
+                &Op::Full { shape: Shape::new(vec![2]), value: 7.0, dtype: DType::F32 },
+                &[],
+            )
+            .unwrap();
+        assert_eq!(z.to_vec(), vec![7.0, 7.0]);
+    }
+
+    #[test]
+    fn call_ext_errors_surface_through_dispatch() {
+        let be = CpuBackend::shared();
+        let err = be
+            .dispatch(&Op::CallExt { name: "no_such_kernel".into() }, &[])
+            .unwrap_err();
+        assert!(err.to_string().contains("no_such_kernel"), "{err}");
+    }
+}

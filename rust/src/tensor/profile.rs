@@ -1,0 +1,178 @@
+//! Per-op profiling as a one-function [`Interposer`] (proof of power for
+//! the [`Op`] IR): counts and wall-clock nanoseconds for every primitive
+//! that crosses the dispatch choke point, aggregated into the
+//! [`crate::meter`] machinery.
+//!
+//! ```ignore
+//! let be = ProfilingBackend::over_cpu_default();
+//! let _guard = BackendGuard::install(be.clone());
+//! // ... run any model, unchanged ...
+//! println!("{}", be.interposer().report());
+//! ```
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use super::interpose::{InterposedBackend, Interposer};
+use super::op::Op;
+use super::{Tensor, TensorBackend};
+use crate::meter::AverageValueMeter;
+use crate::util::error::Result;
+
+/// Aggregate for one op kind, as returned by [`Profiler::snapshot`].
+#[derive(Debug, Clone)]
+pub struct OpStat {
+    /// Op name (see [`Op::name`]).
+    pub op: &'static str,
+    /// Number of dispatches observed.
+    pub calls: u64,
+    /// Mean nanoseconds per dispatch.
+    pub mean_ns: f64,
+    /// Total nanoseconds across all dispatches.
+    pub total_ns: f64,
+}
+
+/// The profiling interposer: one [`AverageValueMeter`] per op name.
+#[derive(Default)]
+pub struct Profiler {
+    meters: Mutex<HashMap<&'static str, AverageValueMeter>>,
+}
+
+impl Profiler {
+    /// Fresh profiler with no recorded ops.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Per-op aggregates, heaviest (by total time) first.
+    pub fn snapshot(&self) -> Vec<OpStat> {
+        let meters = self.meters.lock().unwrap();
+        let mut stats: Vec<OpStat> = meters
+            .iter()
+            .map(|(op, m)| OpStat {
+                op,
+                calls: m.count(),
+                mean_ns: m.value(),
+                total_ns: m.value() * m.count() as f64,
+            })
+            .collect();
+        stats.sort_by(|a, b| b.total_ns.partial_cmp(&a.total_ns).unwrap());
+        stats
+    }
+
+    /// Total dispatches across all ops.
+    pub fn total_calls(&self) -> u64 {
+        self.meters.lock().unwrap().values().map(|m| m.count()).sum()
+    }
+
+    /// Drop all recorded data.
+    pub fn reset(&self) {
+        self.meters.lock().unwrap().clear();
+    }
+
+    /// A human-readable table (op, calls, mean µs, total ms).
+    pub fn report(&self) -> String {
+        let mut out = format!("{:<18} {:>8} {:>12} {:>12}\n", "OP", "CALLS", "mean (µs)", "total (ms)");
+        for s in self.snapshot() {
+            out.push_str(&format!(
+                "{:<18} {:>8} {:>12.2} {:>12.3}\n",
+                s.op,
+                s.calls,
+                s.mean_ns / 1e3,
+                s.total_ns / 1e6
+            ));
+        }
+        out
+    }
+}
+
+impl Interposer for Profiler {
+    fn name(&self) -> &str {
+        "profiling"
+    }
+
+    fn intercept(
+        &self,
+        op: &Op,
+        inputs: &[&Tensor],
+        inner: &dyn TensorBackend,
+    ) -> Result<Tensor> {
+        let t0 = Instant::now();
+        let out = inner.dispatch(op, inputs);
+        let ns = t0.elapsed().as_nanos() as f64;
+        self.meters.lock().unwrap().entry(op.name()).or_default().add(ns);
+        out
+    }
+}
+
+/// A profiling wrapper over any backend: per-op counts and nanoseconds
+/// for the *entire* primitive surface, from one function.
+pub type ProfilingBackend = InterposedBackend<Profiler>;
+
+impl ProfilingBackend {
+    /// Profile the reference CPU backend.
+    pub fn over_cpu_default() -> Arc<ProfilingBackend> {
+        InterposedBackend::over_cpu(Profiler::new())
+    }
+
+    /// Profile an arbitrary inner backend.
+    pub fn over(inner: Arc<dyn TensorBackend>) -> Arc<ProfilingBackend> {
+        InterposedBackend::new(Profiler::new(), inner)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::BackendGuard;
+
+    #[test]
+    fn profiles_every_op_without_overrides() {
+        let be = ProfilingBackend::over_cpu_default();
+        let _guard = BackendGuard::install(be.clone());
+        let a = Tensor::rand([8, 8], -1.0, 1.0);
+        let b = Tensor::rand([8, 8], -1.0, 1.0);
+        let _ = a.matmul(&b).gelu().sum(&[], false).item();
+        let stats = be.interposer().snapshot();
+        let names: Vec<&str> = stats.iter().map(|s| s.op).collect();
+        // primitives hit directly
+        assert!(names.contains(&"matmul"), "{names:?}");
+        assert!(names.contains(&"sum"), "{names:?}");
+        // primitives reached only through composition (gelu -> erf, mul)
+        assert!(names.contains(&"erf"), "{names:?}");
+        assert!(names.contains(&"mul"), "{names:?}");
+        for s in &stats {
+            assert!(s.calls >= 1);
+            assert!(s.total_ns >= 0.0);
+        }
+        assert!(be.interposer().total_calls() >= 6);
+    }
+
+    #[test]
+    fn numerics_are_untouched() {
+        crate::util::rng::seed(31);
+        let av = Tensor::rand([6, 6], -1.0, 1.0).to_vec();
+        let plain = {
+            let a = Tensor::from_slice(&av, [6, 6]);
+            a.matmul(&a).gelu().to_vec()
+        };
+        let profiled = {
+            let be = ProfilingBackend::over_cpu_default();
+            let _guard = BackendGuard::install(be);
+            let a = Tensor::from_slice(&av, [6, 6]);
+            a.matmul(&a).gelu().to_vec()
+        };
+        assert_eq!(plain, profiled, "profiling must be observation-only");
+    }
+
+    #[test]
+    fn reset_and_report() {
+        let be = ProfilingBackend::over_cpu_default();
+        let x = be.full(&crate::tensor::Shape::new(vec![4]), 1.0, crate::tensor::DType::F32);
+        let _ = be.add(&x, &x);
+        assert!(be.interposer().report().contains("add"));
+        be.interposer().reset();
+        assert_eq!(be.interposer().total_calls(), 0);
+    }
+}

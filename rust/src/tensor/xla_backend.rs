@@ -1,51 +1,35 @@
 //! The AOT/XLA hybrid backend (paper Figure 2's "static" computation mode,
 //! §4.1.1's hybrid vendor-offload strategy).
 //!
-//! Implements [`DelegateBackend`] over the reference CPU backend,
-//! overriding the hot operations: `matmul` (and the `call_ext` fused ops
-//! `linear_gelu` / `attention` / `layernorm` / `transformer_block`)
-//! dispatch to AOT-compiled PJRT executables authored in JAX + Pallas at
-//! build time. Shapes without a matching artifact silently fall back to
-//! the composed CPU path, so the backend is always correct and
-//! incrementally fast.
+//! A single [`Interposer`] over the reference CPU backend: the intercept
+//! function matches the hot operations — [`Op::Matmul`] and the
+//! [`Op::CallExt`] fused ops `linear_gelu` / `attention` / `layernorm` /
+//! `transformer_block` — and dispatches them to AOT-compiled PJRT
+//! executables authored in JAX + Pallas at build time. Shapes without a
+//! matching artifact silently fall back to the composed CPU path, so the
+//! backend is always correct and incrementally fast.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 
 use super::cpu::CpuBackend;
-use super::delegate::DelegateBackend;
+use super::interpose::{InterposedBackend, Interposer};
+use super::op::Op;
 use super::{DType, Tensor, TensorBackend};
 use crate::runtime::PjrtRuntime;
 use crate::util::error::Result;
 
-/// See module docs.
-pub struct XlaBackend {
-    inner: Arc<dyn TensorBackend>,
+/// The offload policy (see module docs): tries PJRT for hot ops, counts
+/// what it serves and what falls back.
+pub struct XlaOffload {
     runtime: Arc<PjrtRuntime>,
     /// Ops served by PJRT executables.
     pub offloaded: AtomicU64,
-    /// Ops that fell back to the CPU composition.
+    /// Hot ops that fell back to the CPU composition.
     pub fallbacks: AtomicU64,
 }
 
-impl XlaBackend {
-    /// Build over the global PJRT runtime; `None` if `artifacts/` is
-    /// absent (run `make artifacts`).
-    pub fn from_global_runtime() -> Option<Arc<XlaBackend>> {
-        let runtime = PjrtRuntime::global()?;
-        Some(Arc::new(XlaBackend {
-            inner: CpuBackend::shared(),
-            runtime,
-            offloaded: AtomicU64::new(0),
-            fallbacks: AtomicU64::new(0),
-        }))
-    }
-
-    /// (offloaded, fallback) dispatch counts.
-    pub fn counts(&self) -> (u64, u64) {
-        (self.offloaded.load(Ordering::Relaxed), self.fallbacks.load(Ordering::Relaxed))
-    }
-
+impl XlaOffload {
     fn try_offload(&self, op: &str, inputs: &[&Tensor]) -> Option<Tensor> {
         // artifact path is f32-only
         if inputs.iter().any(|t| t.dtype() != DType::F32) {
@@ -63,33 +47,56 @@ impl XlaBackend {
     }
 }
 
-impl DelegateBackend for XlaBackend {
-    fn inner(&self) -> Arc<dyn TensorBackend> {
-        self.inner.clone()
-    }
-
-    fn wrapper_name(&self) -> &str {
+impl Interposer for XlaOffload {
+    fn name(&self) -> &str {
         "xla-aot"
     }
 
-    fn matmul(&self, a: &Tensor, b: &Tensor) -> Tensor {
-        if let Some(out) = self.try_offload("matmul", &[a, b]) {
-            return out;
+    fn intercept(
+        &self,
+        op: &Op,
+        inputs: &[&Tensor],
+        inner: &dyn TensorBackend,
+    ) -> Result<Tensor> {
+        let hot = match op {
+            Op::Matmul => Some("matmul"),
+            Op::CallExt { name } => Some(name.as_str()),
+            _ => None,
+        };
+        if let Some(kernel) = hot {
+            if let Some(out) = self.try_offload(kernel, inputs) {
+                return Ok(out);
+            }
+            self.fallbacks.fetch_add(1, Ordering::Relaxed);
         }
-        self.fallbacks.fetch_add(1, Ordering::Relaxed);
-        self.inner.matmul(a, b)
-    }
-
-    fn call_ext(&self, name: &str, inputs: &[&Tensor]) -> Result<Tensor> {
-        if let Some(out) = self.try_offload(name, inputs) {
-            return Ok(out);
-        }
-        self.fallbacks.fetch_add(1, Ordering::Relaxed);
-        self.inner.call_ext(name, inputs)
+        inner.dispatch(op, inputs)
     }
 }
 
-crate::impl_delegate_backend!(XlaBackend);
+/// See module docs.
+pub type XlaBackend = InterposedBackend<XlaOffload>;
+
+impl XlaBackend {
+    /// Build over the global PJRT runtime; `None` if `artifacts/` is
+    /// absent (run `make artifacts`).
+    pub fn from_global_runtime() -> Option<Arc<XlaBackend>> {
+        let runtime = PjrtRuntime::global()?;
+        Some(InterposedBackend::new(
+            XlaOffload {
+                runtime,
+                offloaded: AtomicU64::new(0),
+                fallbacks: AtomicU64::new(0),
+            },
+            CpuBackend::shared(),
+        ))
+    }
+
+    /// (offloaded, fallback) dispatch counts.
+    pub fn counts(&self) -> (u64, u64) {
+        let x = self.interposer();
+        (x.offloaded.load(Ordering::Relaxed), x.fallbacks.load(Ordering::Relaxed))
+    }
+}
 
 #[cfg(test)]
 mod tests {
@@ -109,7 +116,7 @@ mod tests {
         crate::util::rng::seed(9);
         let x = Tensor::rand([32, 256], -1.0, 1.0);
         let w = Tensor::rand([256, 256], -1.0, 1.0);
-        let via_xla = TensorBackend::matmul(be.as_ref(), &x, &w);
+        let via_xla = be.matmul(&x, &w);
         let via_cpu = x.matmul(&w);
         assert!(via_xla.allclose(&via_cpu, 1e-3, 1e-3));
         assert!(be.counts().0 >= 1, "expected offload");
@@ -120,7 +127,7 @@ mod tests {
         let Some(be) = backend() else { return };
         let x = Tensor::rand([3, 5], -1.0, 1.0);
         let w = Tensor::rand([5, 7], -1.0, 1.0);
-        let out = TensorBackend::matmul(be.as_ref(), &x, &w);
+        let out = be.matmul(&x, &w);
         assert_eq!(out.dims(), &[3, 7]);
         assert!(be.counts().1 >= 1, "expected fallback");
     }
@@ -132,7 +139,7 @@ mod tests {
         let x = Tensor::rand([32, 256], -1.0, 1.0);
         let w = Tensor::rand([256, 256], -0.1, 0.1);
         let b = Tensor::rand([256], -0.1, 0.1);
-        let fused = TensorBackend::call_ext(be.as_ref(), "linear_gelu", &[&x, &w, &b]).unwrap();
+        let fused = be.call_ext("linear_gelu", &[&x, &w, &b]).unwrap();
         let composed = x.matmul(&w).add(&b).gelu();
         assert!(fused.allclose(&composed, 1e-4, 1e-4));
     }

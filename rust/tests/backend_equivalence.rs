@@ -5,8 +5,9 @@
 
 use std::sync::Arc;
 
+use flashlight::tensor::cpu::CpuBackend;
 use flashlight::tensor::lazy::LazyBackend;
-use flashlight::tensor::{BackendGuard, Tensor, TensorBackend};
+use flashlight::tensor::{BackendGuard, Op, Tensor, TensorBackend};
 use flashlight::testutil::prop;
 use flashlight::util::rng::Rng;
 
@@ -120,6 +121,52 @@ fn prop_matmul_associates_with_identity() {
             Ok(())
         },
     );
+}
+
+/// Lazy-vs-CPU through the *IR surface*: the same reified program,
+/// executed op by op via `dispatch` on both backends, must agree — the
+/// deferral/fusion machinery is an implementation detail behind the
+/// choke point.
+#[test]
+fn lazy_matches_cpu_through_dispatch() {
+    let cpu = CpuBackend::shared();
+    let lazy = LazyBackend::shared();
+    // a mixed program: deferred ops (matmul/add/tanh/mul) and an eager
+    // fallback (sum) that forces the pending graph
+    let program = [
+        Op::Matmul,
+        Op::Add,
+        Op::Tanh,
+        Op::Mul,
+        Op::Abs,
+        Op::Sqrt,
+        Op::Sum { axes: vec![1], keepdims: false },
+    ];
+    let av: Vec<f32> = (0..16).map(|i| 0.3 * i as f32 - 2.0).collect();
+    let bv: Vec<f32> = (0..16).map(|i| 1.5 - 0.2 * i as f32).collect();
+
+    let run = |be: &dyn TensorBackend| -> Vec<f32> {
+        let a = be.from_host(flashlight::tensor::HostBuffer::F32(av.clone()), [4, 4].into());
+        let b = be.from_host(flashlight::tensor::HostBuffer::F32(bv.clone()), [4, 4].into());
+        let mut cur = a;
+        for op in &program {
+            let inputs: Vec<&Tensor> = match op.arity() {
+                Some(2) => vec![&cur, &b],
+                _ => vec![&cur],
+            };
+            cur = be.dispatch(op, &inputs).unwrap_or_else(|e| panic!("{}: {e}", op.name()));
+        }
+        cur.to_vec()
+    };
+
+    let (eager, deferred) = (run(cpu.as_ref()), run(lazy.as_ref()));
+    assert_eq!(eager.len(), deferred.len());
+    for (i, (e, l)) in eager.iter().zip(&deferred).enumerate() {
+        assert!(
+            (e - l).abs() <= 1e-4 * (1.0 + e.abs()),
+            "elem {i}: cpu {e} vs lazy {l}"
+        );
+    }
 }
 
 #[test]
