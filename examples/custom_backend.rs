@@ -120,5 +120,38 @@ fn main() {
         println!("replayed on the plain CPU backend: bit-identical");
     }
 
-    println!("custom_backend OK — three computation modes + two IR tools behind one choke point");
+    // 6) compiled execution: trace a function once, optimize the capture
+    //    (DCE / constant folding / CSE / element-wise fusion + a liveness
+    //    memory plan), then call it like a function with fresh inputs
+    {
+        use flashlight::tensor::graph::trace_and_compile;
+        let ex = [Tensor::rand([64, 64], -1.0, 1.0), Tensor::rand([64, 64], 0.1, 2.0)];
+        let cf = trace_and_compile(&ex, |args| {
+            let wasted = args[0].mul(&args[1]); // dead: eliminated by DCE
+            let _ = wasted;
+            let e = args[0].add(&args[1]).tanh(); // shared by both branches
+            e.mul(&e).sub(&args[1]) // diamond: fuses into one kernel
+        })
+        .expect("trace_and_compile failed");
+        println!(
+            "compiled fn: {} instr(s) [{}], pipeline {{{}}}",
+            cf.program().len(),
+            cf.program().op_names().join(", "),
+            cf.program().report.summary()
+        );
+        // fresh arguments, same shapes: parameters are substituted, the
+        // result matches eager execution
+        let (x, y) = (Tensor::rand([64, 64], -1.0, 1.0), Tensor::rand([64, 64], 0.1, 2.0));
+        let compiled_out = cf.call(CpuBackend::shared().as_ref(), &[&x, &y]).unwrap();
+        let e = x.add(&y).tanh();
+        let eager_out = e.mul(&e).sub(&y);
+        assert_eq!(
+            compiled_out.to_vec(),
+            eager_out.to_vec(),
+            "compiled execution must be bit-identical to eager"
+        );
+        println!("compiled call matches eager execution bit-for-bit");
+    }
+
+    println!("custom_backend OK — three computation modes + three IR tools behind one choke point");
 }

@@ -1,13 +1,14 @@
 //! L3 hot-path microbenchmarks for the performance pass (EXPERIMENTS.md
 //! §Perf): GEMM GFLOP/s vs problem size, conv2d, large element-wise maps,
-//! allocator throughput, ring all-reduce bandwidth, and autograd per-node
-//! overhead.
+//! allocator throughput, ring all-reduce bandwidth, autograd per-node
+//! overhead, and the graph compiler's fused-vs-eager element-wise chain
+//! (with op/buffer counts per optimization pass).
 //!
 //! Besides the human-readable report, the run writes a machine-readable
-//! `BENCH_PR2.json` at the repo root
-//! (`[{"op", "ns_per_iter", "backend"}, ...]`), replacing any previous
-//! run's file; the perf trajectory accumulates across PRs via version
-//! control, one snapshot per PR.
+//! `BENCH_PR3.json` at the repo root
+//! (`[{"op", "ns_per_iter", "backend", ...extras}, ...]`), replacing any
+//! previous run's file; the perf trajectory accumulates across PRs via
+//! version control, one snapshot per PR.
 //!
 //! Run: `cargo bench --bench perf_micro`
 
@@ -18,25 +19,35 @@ use flashlight::memory::{CachingMemoryManager, MemoryManagerAdapter};
 use flashlight::tensor::{Conv2dParams, Tensor};
 use flashlight::util::timing::Samples;
 
-/// One machine-readable measurement row.
+/// One machine-readable measurement row (plus free-form numeric extras,
+/// e.g. per-pass op counts for the graph-compiler rows).
 struct Record {
     op: String,
     ns_per_iter: f64,
     backend: &'static str,
+    extras: Vec<(&'static str, f64)>,
+}
+
+impl Record {
+    fn new(op: impl Into<String>, ns_per_iter: f64, backend: &'static str) -> Record {
+        Record { op: op.into(), ns_per_iter, backend, extras: Vec::new() }
+    }
 }
 
 /// Hand-rolled JSON (the crate is dependency-free; no serde offline).
 fn write_bench_json(records: &[Record]) {
-    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/BENCH_PR2.json");
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/BENCH_PR3.json");
     let mut s = String::from("[\n");
     for (i, r) in records.iter().enumerate() {
-        s.push_str(&format!(
-            "  {{\"op\": \"{}\", \"ns_per_iter\": {:.1}, \"backend\": \"{}\"}}{}\n",
-            r.op,
-            r.ns_per_iter,
-            r.backend,
-            if i + 1 < records.len() { "," } else { "" }
-        ));
+        let mut row = format!(
+            "  {{\"op\": \"{}\", \"ns_per_iter\": {:.1}, \"backend\": \"{}\"",
+            r.op, r.ns_per_iter, r.backend
+        );
+        for (k, v) in &r.extras {
+            row.push_str(&format!(", \"{k}\": {v}"));
+        }
+        row.push_str(&format!("}}{}\n", if i + 1 < records.len() { "," } else { "" }));
+        s.push_str(&row);
     }
     s.push_str("]\n");
     match std::fs::write(path, s) {
@@ -64,11 +75,7 @@ fn main() {
         let secs = gemm_bench(n);
         let gflops = 2.0 * (n as f64).powi(3) / secs / 1e9;
         println!("  {n:>4}x{n:<4}  {gflops:>7.2} GFLOP/s");
-        records.push(Record {
-            op: format!("matmul_{n}x{n}"),
-            ns_per_iter: secs * 1e9,
-            backend: "cpu",
-        });
+        records.push(Record::new(format!("matmul_{n}x{n}"), secs * 1e9, "cpu"));
     }
 
     println!("\n-- conv2d (im2col+GEMM) --");
@@ -80,11 +87,7 @@ fn main() {
     });
     let flops = 2.0 * 8.0 * 32.0 * 32.0 * 32.0 * 16.0 * 9.0;
     println!("  8x16x32x32 ⋆ 32x16x3x3: {:.2} ms ({:.2} GFLOP/s)", s.median() * 1e3, flops / s.median() / 1e9);
-    records.push(Record {
-        op: "conv2d_8x16x32x32_k3".into(),
-        ns_per_iter: s.median() * 1e9,
-        backend: "cpu",
-    });
+    records.push(Record::new("conv2d_8x16x32x32_k3", s.median() * 1e9, "cpu"));
 
     println!("\n-- element-wise (gelu over 4M f32) --");
     let big = Tensor::rand([4 * 1024 * 1024], -2.0, 2.0);
@@ -92,11 +95,7 @@ fn main() {
         std::hint::black_box(big.gelu());
     });
     println!("  {:.2} ms  ({:.2} GB/s effective)", s.median() * 1e3, 8.0 * 4.0 * 1048576.0 / s.median() / 1e9);
-    records.push(Record {
-        op: "gelu_4m".into(),
-        ns_per_iter: s.median() * 1e9,
-        backend: "cpu",
-    });
+    records.push(Record::new("gelu_4m", s.median() * 1e9, "cpu"));
 
     println!("\n-- allocator (caching manager, 64KiB blocks) --");
     let mgr = CachingMemoryManager::unrestricted();
@@ -110,11 +109,7 @@ fn main() {
         }
     });
     println!("  {:.1} ns per alloc/free pair", s.median() / 1000.0 * 1e9);
-    records.push(Record {
-        op: "alloc_free_64k".into(),
-        ns_per_iter: s.median() / 1000.0 * 1e9,
-        backend: "caching-mem",
-    });
+    records.push(Record::new("alloc_free_64k", s.median() / 1000.0 * 1e9, "caching-mem"));
 
     println!("\n-- ring all-reduce (4 workers, 1M f32) --");
     let s = Samples::collect(1, 3, || {
@@ -130,11 +125,7 @@ fn main() {
         });
     });
     println!("  {:.2} ms ({:.2} GB/s algorithmic)", s.median() * 1e3, 4.0 * 4.0 * (1 << 20) as f64 / s.median() / 1e9);
-    records.push(Record {
-        op: "all_reduce_ring4_1m".into(),
-        ns_per_iter: s.median() * 1e9,
-        backend: "dist-ring",
-    });
+    records.push(Record::new("all_reduce_ring4_1m", s.median() * 1e9, "dist-ring"));
 
     println!("\n-- autograd overhead (scalar chain, 10k nodes) --");
     let s = Samples::collect(1, 5, || {
@@ -146,11 +137,7 @@ fn main() {
         y.backward();
     });
     println!("  {:.2} µs per node (fwd+bwd)", s.median() / 10_000.0 * 1e6);
-    records.push(Record {
-        op: "autograd_node_fwd_bwd".into(),
-        ns_per_iter: s.median() / 10_000.0 * 1e9,
-        backend: "autograd",
-    });
+    records.push(Record::new("autograd_node_fwd_bwd", s.median() / 10_000.0 * 1e9, "autograd"));
 
     println!("\n-- dataset pipeline (prefetch 4 workers vs serial) --");
     let base: Arc<dyn flashlight::data::Dataset> = Arc::new(flashlight::data::TensorDataset::new(vec![
@@ -177,16 +164,114 @@ fn main() {
         prefetch.median() * 1e3,
         serial.median() / prefetch.median()
     );
-    records.push(Record {
-        op: "dataset_serial_256".into(),
-        ns_per_iter: serial.median() * 1e9,
-        backend: "data-pipeline",
-    });
-    records.push(Record {
-        op: "dataset_prefetch4_256".into(),
-        ns_per_iter: prefetch.median() * 1e9,
-        backend: "data-pipeline",
-    });
+    records.push(Record::new("dataset_serial_256", serial.median() * 1e9, "data-pipeline"));
+    records.push(Record::new("dataset_prefetch4_256", prefetch.median() * 1e9, "data-pipeline"));
+
+    graph_compiler_bench(&mut records);
 
     write_bench_json(&records);
+}
+
+/// Fused-vs-eager element-wise chain through the graph compiler, with
+/// op/buffer counts per pass (the PR-3 acceptance metric: the compiled
+/// chain executes fewer ops and allocates fewer buffers than eager, at
+/// equal-or-better wall time).
+fn graph_compiler_bench(records: &mut Vec<Record>) {
+    use flashlight::tensor::cpu::CpuBackend;
+    use flashlight::tensor::graph::{compile, CompileOptions};
+    use flashlight::tensor::{BackendGuard, TraceBackend};
+
+    println!("\n-- graph compiler: element-wise chain (1M f32, 6 ops) --");
+    let n = 1 << 20;
+    let a = Tensor::rand([n], -2.0, 2.0);
+    let b = Tensor::rand([n], 0.1, 2.0);
+    let chain = |x: &Tensor, y: &Tensor| x.add(y).mul(x).tanh().sub(y).abs().sqrt();
+
+    // eager: six separate kernels, six intermediate buffers
+    let eager = Samples::collect(1, 5, || {
+        std::hint::black_box(chain(&a, &b).to_vec());
+    });
+
+    // capture the chain once, then compile it twice: a structure-
+    // preserving lowering (one dispatched kernel + buffer per op, the
+    // eager plan) and the full pipeline (the a/b constants are frozen so
+    // folding cannot bake their values in). The old lazy backend also
+    // single-passed straight chains, so its honest comparator is the
+    // fused row — which additionally shares diamond subgraphs and runs
+    // the pass in parallel, where the old RPN walk was serial.
+    let tracer = TraceBackend::over_cpu_default();
+    let root = {
+        let _g = BackendGuard::install(tracer.clone());
+        let out = chain(&a, &b);
+        tracer.interposer().value_ref_of(&out).expect("chain result not traced")
+    };
+    let raw = tracer.interposer().program();
+    let frozen = CompileOptions {
+        frozen_consts: [&a, &b]
+            .iter()
+            .map(|t| tracer.interposer().const_index_of(t).expect("operand not in const pool"))
+            .collect(),
+        ..Default::default()
+    };
+    let unopt = compile(&raw, &[root], &CompileOptions::none()).expect("lowering failed");
+    let opt = compile(&raw, &[root], &frozen).expect("pipeline failed");
+
+    let cpu = CpuBackend::shared();
+    let unfused_t = Samples::collect(1, 5, || {
+        std::hint::black_box(unopt.run(cpu.as_ref()).unwrap().remove(0).to_vec());
+    });
+    let fused_t = Samples::collect(1, 5, || {
+        std::hint::black_box(opt.run(cpu.as_ref()).unwrap().remove(0).to_vec());
+    });
+    let (_, ustats) = unopt.run_detailed(cpu.as_ref(), &[]).expect("unopt run failed");
+    let (_, ostats) = opt.run_detailed(cpu.as_ref(), &[]).expect("opt run failed");
+
+    println!(
+        "  eager {:.2} ms | compiled-unfused {:.2} ms | compiled-fused {:.2} ms ({:.2}x vs eager)",
+        eager.median() * 1e3,
+        unfused_t.median() * 1e3,
+        fused_t.median() * 1e3,
+        eager.median() / fused_t.median()
+    );
+    println!("  pipeline: {}", opt.report.summary());
+    println!(
+        "  ops {} -> {} (primitive {}), buffers {} -> {} slots, peak bytes {} -> {}",
+        ustats.executed_instrs,
+        ostats.executed_instrs,
+        ostats.executed_ops,
+        ustats.buffer_slots,
+        ostats.buffer_slots,
+        ustats.naive_peak_bytes,
+        ostats.planned_peak_bytes
+    );
+
+    let mut eager_rec = Record::new("ew_chain6_1m_eager", eager.median() * 1e9, "cpu");
+    eager_rec.extras.push(("ops_executed", 6.0));
+    eager_rec.extras.push(("buffers", 6.0));
+    records.push(eager_rec);
+
+    let mut urec = Record::new("ew_chain6_1m_unfused", unfused_t.median() * 1e9, "graph-lowered");
+    urec.extras.push(("instrs_executed", ustats.executed_instrs as f64));
+    urec.extras.push(("buffers_planned", ustats.buffer_slots as f64));
+    urec.extras.push(("peak_bytes_planned", ustats.planned_peak_bytes as f64));
+    urec.extras.push(("peak_bytes_naive", ustats.naive_peak_bytes as f64));
+    records.push(urec);
+
+    let mut rec = Record::new("ew_chain6_1m_fused", fused_t.median() * 1e9, "graph-compiled");
+    rec.extras.push(("instrs_executed", ostats.executed_instrs as f64));
+    rec.extras.push(("primitive_ops", ostats.executed_ops as f64));
+    rec.extras.push(("buffers_planned", ostats.buffer_slots as f64));
+    rec.extras.push(("buffers_naive", ustats.executed_instrs as f64));
+    rec.extras.push(("peak_bytes_planned", ostats.planned_peak_bytes as f64));
+    rec.extras.push(("peak_bytes_naive", ustats.naive_peak_bytes as f64));
+    for pass in &opt.report.passes {
+        match pass.pass {
+            "dce" => rec.extras.push(("ops_after_dce", pass.ops_after as f64)),
+            "fold" => rec.extras.push(("ops_after_fold", pass.ops_after as f64)),
+            "cse" => rec.extras.push(("ops_after_cse", pass.ops_after as f64)),
+            "fuse" => rec.extras.push(("ops_after_fuse", pass.ops_after as f64)),
+            _ => {}
+        }
+    }
+    records.push(rec);
 }

@@ -50,6 +50,43 @@ impl AverageValueMeter {
     }
 }
 
+/// Running level + high-water mark of an additive quantity (live bytes,
+/// queue depth, pending ops). Used by the graph executor to report
+/// planned-vs-naive peak memory.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct PeakValueMeter {
+    current: usize,
+    peak: usize,
+}
+
+impl PeakValueMeter {
+    /// Fresh meter at level 0.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Raise the current level by `v`.
+    pub fn add(&mut self, v: usize) {
+        self.current += v;
+        self.peak = self.peak.max(self.current);
+    }
+
+    /// Lower the current level by `v` (saturating).
+    pub fn sub(&mut self, v: usize) {
+        self.current = self.current.saturating_sub(v);
+    }
+
+    /// Current level.
+    pub fn current(&self) -> usize {
+        self.current
+    }
+
+    /// High-water mark.
+    pub fn peak(&self) -> usize {
+        self.peak
+    }
+}
+
 /// Classification frame-error meter: compares predicted ids with targets
 /// and reports error percentage (paper Listing 10).
 #[derive(Debug, Clone, Default)]

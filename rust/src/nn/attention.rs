@@ -145,6 +145,31 @@ mod tests {
     }
 
     #[test]
+    fn attention_gradcheck() {
+        use crate::testutil::gradcheck::check_grad_tol;
+        // module built once outside the closure: gradcheck re-evaluates f
+        // for numeric differencing, so the (random-initialized) weights
+        // must stay fixed across calls
+        let m = MultiheadAttention::new(4, 2, true);
+        check_grad_tol("attention", &[1, 3, 4], 1e-4, 1e-2, |x| {
+            ops::sum(&m.forward(x), &[], false)
+        });
+    }
+
+    #[test]
+    fn sdpa_core_gradcheck() {
+        use crate::autograd::ops::{matmul, sum};
+        use crate::testutil::gradcheck::check_grad_tol;
+        let m = MultiheadAttention::new(4, 1, false);
+        // grad through softmax(QK^T/sqrt(d))V with Q=K=V derived from x
+        check_grad_tol("sdpa", &[1, 3, 4], 1e-4, 1e-2, |x| {
+            let w = Variable::constant(Tensor::eye(4, DType::F64));
+            let q = matmul(x, &w);
+            sum(&m.sdpa(&q, x, x, 3), &[], false)
+        });
+    }
+
+    #[test]
     fn attention_rows_are_convex_combinations() {
         // uniform V rows -> output equals that row regardless of scores
         let m = MultiheadAttention::new(4, 1, false);

@@ -177,6 +177,18 @@ mod tests {
     }
 
     #[test]
+    fn conv_layer_gradcheck() {
+        use crate::testutil::gradcheck::check_grad_tol;
+        // fixed module outside the closure (random kaiming weights must
+        // not be re-drawn between numeric probes); checks grads through
+        // conv2d + broadcast bias add
+        let c = Conv2D::square(2, 3, 3, 1, Padding::Same);
+        check_grad_tol("conv2d-layer", &[1, 2, 5, 5], 1e-4, 1e-2, |x| {
+            aops::sum(&c.forward(x), &[], false)
+        });
+    }
+
+    #[test]
     fn pool_and_view_chain() {
         let p = Pool2D::max(2, 2, 2, 2);
         let v = View::new(&[-1, 4]);

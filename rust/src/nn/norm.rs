@@ -165,6 +165,35 @@ mod tests {
     }
 
     #[test]
+    fn layernorm_param_gradcheck() {
+        use crate::tensor::DType;
+        use crate::testutil::gradcheck::check_grad;
+        let input = Variable::constant(Tensor::rand([3, 6], -1.0, 1.0).astype(DType::F64));
+        let input2 = Variable::constant(input.tensor());
+        check_grad("layernorm-gamma", &[6], move |g| {
+            let mut ln = LayerNorm::new(6);
+            ln.gamma = g.clone();
+            ops::sum(&ln.forward(&input), &[], false)
+        });
+        check_grad("layernorm-beta", &[6], move |b| {
+            let mut ln = LayerNorm::new(6);
+            ln.beta = b.clone();
+            ops::sum(&ops::mul(&ln.forward(&input2), &input2), &[], false)
+        });
+    }
+
+    #[test]
+    fn batchnorm_gradcheck() {
+        use crate::testutil::gradcheck::check_grad_tol;
+        let bn = BatchNorm2d::new(2);
+        // multiply by x so the target is nonlinear in the input (a plain
+        // sum of a batch-normalized tensor has near-zero gradient)
+        check_grad_tol("batchnorm", &[2, 2, 3, 3], 1e-4, 1e-2, |x| {
+            ops::sum(&ops::mul(&bn.forward(x), x), &[], false)
+        });
+    }
+
+    #[test]
     fn batchnorm_train_normalizes_batch() {
         let bn = BatchNorm2d::new(3);
         let x = Variable::constant(Tensor::rand([4, 3, 5, 5], 2.0, 6.0));

@@ -1,0 +1,416 @@
+//! Element-wise fusion: collapse chains *and diamonds* of f32
+//! element-wise nodes into single [`FusedKernel`] regions that evaluate
+//! in one pass over the output with no intermediate buffers.
+//!
+//! This generalizes (and replaces) the old lazy backend's private
+//! `eval_fused` tree walk, with two correctness upgrades:
+//!
+//! - **Shared subgraphs evaluate once.** A kernel is a step *DAG*, not an
+//!   expression tree: a value consumed by two steps is one step, computed
+//!   once per element. (The tree walk duplicated shared subtrees in its
+//!   RPN program — exponential work on diamond-heavy graphs.)
+//! - **No cross-region duplication.** A fusible node consumed by two
+//!   different regions (or by a non-fusible op, or requested as a program
+//!   output) materializes exactly once as its own region root and enters
+//!   the consumers as a plain input.
+//!
+//! Bit-identity contract: the fused interpreter applies *exactly* the
+//! scalar f32 semantics of the CPU kernels (`kernels::map1`/`map2` with
+//! the same `std` float ops), and regions are gated on every participant
+//! being provably `F32` via `Graph::infer_dtypes`. The differential
+//! fuzzer holds this to bit-for-bit equality.
+
+use std::collections::HashMap;
+
+use super::super::host::HostBuffer;
+use super::super::op::Op;
+use super::super::shape::Shape;
+use super::super::trace::ValueRef;
+use super::super::{DType, Tensor, TensorBackend};
+use super::{CompileReport, CompiledInstr, Graph, PassReport};
+use crate::util::error::{Error, Result};
+
+/// Arity of an op the fused interpreter can evaluate with bit-identical
+/// f32 semantics (`None`: not fusible). This is also the lazy backend's
+/// deferral predicate — the fusion ISA is a subset of [`Op`].
+pub fn fusible_arity(op: &Op) -> Option<usize> {
+    match op {
+        Op::Add | Op::Sub | Op::Mul | Op::Div | Op::Minimum | Op::Maximum => Some(2),
+        Op::Neg
+        | Op::Abs
+        | Op::Sign
+        | Op::Exp
+        | Op::Log
+        | Op::Tanh
+        | Op::Sqrt
+        | Op::Clip { .. } => Some(1),
+        _ => None,
+    }
+}
+
+/// Scalar semantics of a fusible unary op — must mirror the CPU backend's
+/// f32 kernels exactly (see `cpu/mod.rs`).
+pub fn apply1(op: &Op, x: f32) -> f32 {
+    match op {
+        Op::Neg => -x,
+        Op::Abs => x.abs(),
+        Op::Sign => {
+            if x > 0.0 {
+                1.0
+            } else if x < 0.0 {
+                -1.0
+            } else {
+                0.0
+            }
+        }
+        Op::Exp => x.exp(),
+        Op::Log => x.ln(),
+        Op::Tanh => x.tanh(),
+        Op::Sqrt => x.sqrt(),
+        Op::Clip { lo, hi } => x.clamp(*lo as f32, *hi as f32),
+        _ => unreachable!("not a fusible unary op: {op:?}"),
+    }
+}
+
+/// Scalar semantics of a fusible binary op — must mirror the CPU
+/// backend's f32 kernels exactly.
+pub fn apply2(op: &Op, a: f32, b: f32) -> f32 {
+    match op {
+        Op::Add => a + b,
+        Op::Sub => a - b,
+        Op::Mul => a * b,
+        Op::Div => a / b,
+        Op::Minimum => a.min(b),
+        Op::Maximum => a.max(b),
+        _ => unreachable!("not a fusible binary op: {op:?}"),
+    }
+}
+
+/// Where a fused step's operand comes from.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FusedArg {
+    /// One of the kernel's external inputs.
+    Input(usize),
+    /// The value of an earlier step (shared steps evaluate once).
+    Step(usize),
+}
+
+/// One scalar operation inside a fused region.
+#[derive(Debug, Clone)]
+pub struct FusedStep {
+    /// A fusible element-wise [`Op`].
+    pub op: Op,
+    /// Operand sources (length = `fusible_arity(op)`).
+    pub args: Vec<FusedArg>,
+}
+
+/// A fused element-wise region: external inputs plus a topologically
+/// ordered step DAG. The last step is the region's output.
+#[derive(Debug, Clone)]
+pub struct FusedKernel {
+    /// External operand sources (deduplicated, first-use order).
+    pub inputs: Vec<ValueRef>,
+    /// The step DAG in evaluation order.
+    pub steps: Vec<FusedStep>,
+}
+
+impl FusedKernel {
+    /// Evaluate the region in a single pass. Inputs must broadcast to a
+    /// common shape; per output element, every step is computed exactly
+    /// once, in f32, with the CPU backend's scalar semantics. The result
+    /// materializes through `backend.from_host`.
+    pub fn execute(&self, backend: &dyn TensorBackend, inputs: &[&Tensor]) -> Result<Tensor> {
+        debug_assert_eq!(inputs.len(), self.inputs.len());
+        for t in inputs {
+            if t.dtype() != DType::F32 {
+                return Err(Error::msg(format!(
+                    "fused kernel input must be f32, got {}",
+                    t.dtype().name()
+                )));
+            }
+        }
+        let bufs: Vec<Vec<f32>> = inputs.iter().map(|t| t.to_vec()).collect();
+        let in_shapes: Vec<Shape> = inputs.iter().map(|t| t.shape().clone()).collect();
+        // resolve step shapes by the same broadcast rules the eager
+        // backend applies, so the kernel's output shape matches exactly
+        let mut step_shapes: Vec<Shape> = Vec::with_capacity(self.steps.len());
+        for step in &self.steps {
+            let shape_of = |a: &FusedArg| match a {
+                FusedArg::Input(i) => in_shapes[*i].clone(),
+                FusedArg::Step(s) => step_shapes[*s].clone(),
+            };
+            let mut shape = shape_of(&step.args[0]);
+            for a in &step.args[1..] {
+                shape = shape.broadcast(&shape_of(a))?;
+            }
+            step_shapes.push(shape);
+        }
+        let out_shape = step_shapes.last().expect("empty fused kernel").clone();
+        let n = out_shape.numel();
+        let strides: Vec<Vec<usize>> = in_shapes
+            .iter()
+            .map(|s| s.broadcast_strides(&out_shape))
+            .collect::<Result<_>>()?;
+        if n == 0 {
+            return Ok(backend.from_host(HostBuffer::F32(Vec::new()), out_shape));
+        }
+        let dims = out_shape.dims().to_vec();
+        let rank = dims.len();
+        let row_strides = out_shape.strides();
+        let mut out = vec![0f32; n];
+        // one fused pass, parallelized like the eager kernels; each chunk
+        // seeds its odometer from its base linear index (parallel split
+        // cannot change any value: every element is independent)
+        crate::util::parallel::parallel_fill(
+            &mut out,
+            crate::util::parallel::PAR_THRESHOLD,
+            |base, chunk| {
+                let mut idx = vec![0usize; rank];
+                let mut rem = base;
+                for d in 0..rank {
+                    idx[d] = rem / row_strides[d];
+                    rem %= row_strides[d];
+                }
+                let mut offs: Vec<usize> = strides
+                    .iter()
+                    .map(|st| st.iter().zip(&idx).map(|(s, i)| s * i).sum())
+                    .collect();
+                let mut vals = vec![0f32; self.steps.len()];
+                for slot in chunk.iter_mut() {
+                    for (s, step) in self.steps.iter().enumerate() {
+                        let read = |a: &FusedArg, vals: &[f32]| match a {
+                            FusedArg::Input(i) => bufs[*i][offs[*i]],
+                            FusedArg::Step(j) => vals[*j],
+                        };
+                        vals[s] = if step.args.len() == 1 {
+                            apply1(&step.op, read(&step.args[0], &vals))
+                        } else {
+                            apply2(
+                                &step.op,
+                                read(&step.args[0], &vals),
+                                read(&step.args[1], &vals),
+                            )
+                        };
+                    }
+                    *slot = *vals.last().unwrap();
+                    // odometer: advance every input offset in lockstep
+                    for d in (0..rank).rev() {
+                        idx[d] += 1;
+                        for (k, st) in strides.iter().enumerate() {
+                            offs[k] += st[d];
+                        }
+                        if idx[d] < dims[d] {
+                            break;
+                        }
+                        idx[d] = 0;
+                        for (k, st) in strides.iter().enumerate() {
+                            offs[k] -= st[d] * dims[d];
+                        }
+                    }
+                }
+            },
+        );
+        Ok(backend.from_host(HostBuffer::F32(out), out_shape))
+    }
+}
+
+/// Fusion pass: cluster fusible nodes into single-output regions and
+/// lower the graph to [`CompiledInstr`]s. Regions of a single node stay
+/// plain ops (a one-op kernel is pure overhead). Returns the instruction
+/// list and the remapped output references.
+pub(crate) fn fuse(g: &Graph, report: &mut CompileReport) -> (Vec<CompiledInstr>, Vec<ValueRef>) {
+    let n = g.nodes.len();
+    let dtypes = g.infer_dtypes();
+    let is_f32 = |r: &ValueRef| match r {
+        ValueRef::Const(c) => g.consts[*c].dtype() == DType::F32,
+        ValueRef::Out(i) => dtypes[*i] == Some(DType::F32),
+    };
+    let fusible: Vec<bool> = g
+        .nodes
+        .iter()
+        .enumerate()
+        .map(|(i, node)| {
+            fusible_arity(&node.op) == Some(node.inputs.len())
+                && dtypes[i] == Some(DType::F32)
+                && node.inputs.iter().all(is_f32)
+        })
+        .collect();
+    let consumers = g.consumers();
+    let is_out = g.output_mask();
+
+    // cluster in reverse topological order: a fusible node is absorbed
+    // into a region iff it is not an output and *all* its consumers sit
+    // in that one region; otherwise it roots a region of its own
+    let mut region_of: Vec<Option<usize>> = vec![None; n];
+    let mut region_members: Vec<Vec<usize>> = Vec::new();
+    for i in (0..n).rev() {
+        if !fusible[i] {
+            continue;
+        }
+        let all_same_region = (!is_out[i] && !consumers[i].is_empty())
+            .then(|| {
+                let r0 = region_of[consumers[i][0]]?;
+                consumers[i].iter().all(|&c| region_of[c] == Some(r0)).then_some(r0)
+            })
+            .flatten();
+        match all_same_region {
+            Some(r) => {
+                region_of[i] = Some(r);
+                region_members[r].push(i);
+            }
+            None => {
+                region_of[i] = Some(region_members.len());
+                region_members.push(vec![i]);
+            }
+        }
+    }
+    // single-node regions revert to plain dispatch
+    for members in &region_members {
+        if members.len() == 1 {
+            region_of[members[0]] = None;
+        }
+    }
+
+    // lower: members collapse into their root's position; everything else
+    // keeps its relative order. old node index -> new instr index
+    let root_of = |r: usize| region_members[r][0]; // reverse order: first pushed = root (max index)
+    let mut new_index: Vec<Option<usize>> = vec![None; n];
+    let mut instrs: Vec<CompiledInstr> = Vec::new();
+    let mut fused_ops = 0usize;
+    for i in 0..n {
+        let interior = region_of[i].is_some_and(|r| root_of(r) != i);
+        if interior {
+            continue;
+        }
+        let remap = |r: &ValueRef, new_index: &[Option<usize>]| match r {
+            ValueRef::Out(j) => ValueRef::Out(new_index[*j].expect("fuse: ref to interior node")),
+            c => *c,
+        };
+        match region_of[i] {
+            Some(region) => {
+                // build the kernel from members in topological order
+                let mut members = region_members[region].clone();
+                members.sort_unstable();
+                let step_of: HashMap<usize, usize> =
+                    members.iter().enumerate().map(|(s, &m)| (m, s)).collect();
+                let mut inputs: Vec<ValueRef> = Vec::new();
+                let mut steps: Vec<FusedStep> = Vec::new();
+                for &m in &members {
+                    let args: Vec<FusedArg> = g.nodes[m]
+                        .inputs
+                        .iter()
+                        .map(|r| {
+                            if let ValueRef::Out(j) = r {
+                                if let Some(&s) = step_of.get(j) {
+                                    return FusedArg::Step(s);
+                                }
+                            }
+                            let ext = remap(r, &new_index);
+                            let pos = match inputs.iter().position(|x| *x == ext) {
+                                Some(p) => p,
+                                None => {
+                                    inputs.push(ext);
+                                    inputs.len() - 1
+                                }
+                            };
+                            FusedArg::Input(pos)
+                        })
+                        .collect();
+                    steps.push(FusedStep { op: g.nodes[m].op.clone(), args });
+                }
+                fused_ops += steps.len();
+                new_index[i] = Some(instrs.len());
+                instrs.push(CompiledInstr::Fused(FusedKernel { inputs, steps }));
+            }
+            None => {
+                let inputs: Vec<ValueRef> =
+                    g.nodes[i].inputs.iter().map(|r| remap(r, &new_index)).collect();
+                new_index[i] = Some(instrs.len());
+                instrs.push(CompiledInstr::Op { op: g.nodes[i].op.clone(), inputs });
+            }
+        }
+    }
+    let outputs: Vec<ValueRef> = g
+        .outputs
+        .iter()
+        .map(|r| match r {
+            ValueRef::Out(j) => ValueRef::Out(new_index[*j].expect("fuse: output was fused away")),
+            c => *c,
+        })
+        .collect();
+    report.passes.push(PassReport {
+        pass: "fuse",
+        ops_before: n,
+        ops_after: instrs.len(),
+        changed: fused_ops.saturating_sub(region_members.iter().filter(|m| m.len() > 1).count()),
+    });
+    (instrs, outputs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::cpu::CpuBackend;
+
+    #[test]
+    fn kernel_evaluates_diamond_once_per_element() {
+        // e = exp(x); out = (e + y) * (e - y): e is one shared step
+        let kernel = FusedKernel {
+            inputs: vec![ValueRef::Const(0), ValueRef::Const(1)],
+            steps: vec![
+                FusedStep { op: Op::Exp, args: vec![FusedArg::Input(0)] },
+                FusedStep {
+                    op: Op::Add,
+                    args: vec![FusedArg::Step(0), FusedArg::Input(1)],
+                },
+                FusedStep {
+                    op: Op::Sub,
+                    args: vec![FusedArg::Step(0), FusedArg::Input(1)],
+                },
+                FusedStep {
+                    op: Op::Mul,
+                    args: vec![FusedArg::Step(1), FusedArg::Step(2)],
+                },
+            ],
+        };
+        let cpu = CpuBackend::shared();
+        let x = Tensor::from_slice(&[0.0f32, 1.0], [2]);
+        let y = Tensor::from_slice(&[0.5f32, 2.0], [2]);
+        let out = kernel.execute(cpu.as_ref(), &[&x, &y]).unwrap();
+        let expect: Vec<f32> = [(0.0f32, 0.5f32), (1.0, 2.0)]
+            .iter()
+            .map(|&(x, y)| (x.exp() + y) * (x.exp() - y))
+            .collect();
+        assert_eq!(out.to_vec(), expect);
+    }
+
+    #[test]
+    fn kernel_broadcasts_like_the_eager_backend() {
+        // [2,1] + [1,3] inside the region -> [2,3]
+        let kernel = FusedKernel {
+            inputs: vec![ValueRef::Const(0), ValueRef::Const(1)],
+            steps: vec![FusedStep {
+                op: Op::Add,
+                args: vec![FusedArg::Input(0), FusedArg::Input(1)],
+            }],
+        };
+        let cpu = CpuBackend::shared();
+        let a = Tensor::from_slice(&[1.0f32, 2.0], [2, 1]);
+        let b = Tensor::from_slice(&[10.0f32, 20.0, 30.0], [1, 3]);
+        let fused = kernel.execute(cpu.as_ref(), &[&a, &b]).unwrap();
+        let eager = cpu.add(&a, &b);
+        assert_eq!(fused.dims(), eager.dims());
+        assert_eq!(fused.to_vec(), eager.to_vec());
+    }
+
+    #[test]
+    fn non_f32_inputs_are_rejected() {
+        let kernel = FusedKernel {
+            inputs: vec![ValueRef::Const(0)],
+            steps: vec![FusedStep { op: Op::Neg, args: vec![FusedArg::Input(0)] }],
+        };
+        let cpu = CpuBackend::shared();
+        let x = Tensor::from_slice(&[1i64, 2], [2]);
+        assert!(kernel.execute(cpu.as_ref(), &[&x]).is_err());
+    }
+}

@@ -1,0 +1,161 @@
+//! Liveness-based buffer planning for compiled programs.
+//!
+//! Every instruction defines one value. The plan computes each value's
+//! last use, assigns values to a small set of reused *slots* (greedy
+//! linear scan over the topological order), and tells the executor when a
+//! value can be dropped back to the installed
+//! [`crate::memory::MemoryManagerAdapter`]. Program outputs are pinned
+//! for the whole run.
+//!
+//! The invariant — two values whose lifetimes overlap never share a slot
+//! — is checked by [`MemoryPlan::check_no_aliasing`] and exercised under
+//! instrumented execution in `rust/tests/graph_passes.rs`.
+
+use super::super::trace::ValueRef;
+use super::CompiledInstr;
+
+/// The buffer plan for one [`super::CompiledProgram`].
+#[derive(Debug, Clone, Default)]
+pub struct MemoryPlan {
+    /// Per instruction: the slot its output value occupies.
+    pub slot: Vec<usize>,
+    /// Per instruction: index of the last instruction that reads its
+    /// value (its own index if never read).
+    pub last_use: Vec<usize>,
+    /// Per instruction `j`: the values that die once `j` has executed
+    /// (the executor drops them there).
+    pub dies_after: Vec<Vec<usize>>,
+    /// Values pinned to the end of the program (requested outputs).
+    pub is_output: Vec<bool>,
+    /// Total distinct slots — the planned peak buffer count. The naive
+    /// plan (keep everything) would use one slot per instruction.
+    pub num_slots: usize,
+}
+
+impl MemoryPlan {
+    /// Build the plan from the instruction stream and requested outputs.
+    pub fn build(instrs: &[CompiledInstr], outputs: &[ValueRef]) -> MemoryPlan {
+        let n = instrs.len();
+        let mut last_use: Vec<usize> = (0..n).collect();
+        for (j, instr) in instrs.iter().enumerate() {
+            for r in instr.inputs() {
+                if let ValueRef::Out(i) = r {
+                    last_use[*i] = (*i).max(j).max(last_use[*i]);
+                }
+            }
+        }
+        let mut is_output = vec![false; n];
+        for r in outputs {
+            if let ValueRef::Out(i) = r {
+                is_output[*i] = true;
+            }
+        }
+        let mut dies_after: Vec<Vec<usize>> = vec![Vec::new(); n];
+        for i in 0..n {
+            if !is_output[i] {
+                dies_after[last_use[i]].push(i);
+            }
+        }
+        // greedy slot reuse over the topological order
+        let mut slot = vec![usize::MAX; n];
+        let mut free: Vec<usize> = Vec::new();
+        let mut num_slots = 0usize;
+        for j in 0..n {
+            slot[j] = free.pop().unwrap_or_else(|| {
+                num_slots += 1;
+                num_slots - 1
+            });
+            for &dead in &dies_after[j] {
+                free.push(slot[dead]);
+            }
+        }
+        MemoryPlan { slot, last_use, dies_after, is_output, num_slots }
+    }
+
+    /// Verify that no two values with overlapping lifetimes share a slot.
+    /// A value lives from its defining instruction until after its last
+    /// use (or to the end of the program, for outputs).
+    pub fn check_no_aliasing(&self) -> Result<(), String> {
+        let n = self.slot.len();
+        let end = |i: usize| if self.is_output[i] { n } else { self.last_use[i] };
+        for a in 0..n {
+            for b in (a + 1)..n {
+                // b defined at b; a dies after end(a): overlap iff b <= end(a)
+                if self.slot[a] == self.slot[b] && b <= end(a) {
+                    return Err(format!(
+                        "slot {} aliased: value {a} (live through {}) and value {b}",
+                        self.slot[a],
+                        end(a)
+                    ));
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::super::op::Op;
+    use super::*;
+
+    fn op(op: Op, inputs: Vec<ValueRef>) -> CompiledInstr {
+        CompiledInstr::Op { op, inputs }
+    }
+
+    #[test]
+    fn chain_reuses_two_slots() {
+        // v0 -> v1 -> v2 -> v3, only v3 requested: at any time one value
+        // is being read and one written, so two slots suffice
+        let instrs = vec![
+            op(
+                Op::Full { shape: vec![4].into(), value: 1.0, dtype: crate::tensor::DType::F32 },
+                vec![],
+            ),
+            op(Op::Neg, vec![ValueRef::Out(0)]),
+            op(Op::Abs, vec![ValueRef::Out(1)]),
+            op(Op::Exp, vec![ValueRef::Out(2)]),
+        ];
+        let plan = MemoryPlan::build(&instrs, &[ValueRef::Out(3)]);
+        assert_eq!(plan.num_slots, 2);
+        plan.check_no_aliasing().unwrap();
+    }
+
+    #[test]
+    fn outputs_are_pinned() {
+        let instrs = vec![
+            op(
+                Op::Full { shape: vec![1].into(), value: 1.0, dtype: crate::tensor::DType::F32 },
+                vec![],
+            ),
+            op(Op::Neg, vec![ValueRef::Out(0)]),
+            op(Op::Abs, vec![ValueRef::Out(1)]),
+        ];
+        // both v0 and v2 requested: v0 must not be freed at its last use
+        let plan = MemoryPlan::build(&instrs, &[ValueRef::Out(0), ValueRef::Out(2)]);
+        assert!(plan.is_output[0] && plan.is_output[2]);
+        assert!(plan.dies_after.iter().all(|d| !d.contains(&0)));
+        plan.check_no_aliasing().unwrap();
+    }
+
+    #[test]
+    fn dead_value_dies_immediately() {
+        let instrs = vec![
+            op(
+                Op::Full { shape: vec![1].into(), value: 1.0, dtype: crate::tensor::DType::F32 },
+                vec![],
+            ),
+            op(
+                Op::Full { shape: vec![1].into(), value: 2.0, dtype: crate::tensor::DType::F32 },
+                vec![],
+            ),
+        ];
+        let plan = MemoryPlan::build(&instrs, &[ValueRef::Out(1)]);
+        // v0 is never read: it dies right after its own definition and
+        // its slot is recycled for v1
+        assert_eq!(plan.last_use[0], 0);
+        assert!(plan.dies_after[0].contains(&0));
+        assert_eq!(plan.num_slots, 1);
+        plan.check_no_aliasing().unwrap();
+    }
+}

@@ -1,0 +1,769 @@
+//! An optimizing graph compiler over the [`Op`] IR (paper §4.1.1's
+//! "deferred, on-the-fly kernel generation", grown into a real pass
+//! pipeline).
+//!
+//! [`TraceProgram`]s captured by [`super::trace::TraceBackend`] are linear
+//! instruction lists. This module lifts them into an SSA-style dataflow
+//! [`Graph`] (every value defined exactly once, referenced by
+//! [`ValueRef`]), runs an optimization pipeline —
+//!
+//! 1. **dead-code elimination** ([`passes::dce`]): drop everything not
+//!    reachable from the requested outputs (RNG ops and `call_ext` are
+//!    treated as effectful and kept),
+//! 2. **constant folding** ([`passes::fold`]): evaluate nodes whose
+//!    operands are all compile-time constants on the reference CPU
+//!    backend,
+//! 3. **common-subexpression elimination** ([`passes::cse`]): merge
+//!    syntactically identical deterministic nodes,
+//! 4. **element-wise fusion** ([`fuse`]): collapse chains *and diamonds*
+//!    of f32 element-wise ops into single [`FusedKernel`] regions that
+//!    evaluate in one pass with no intermediate buffers (shared interior
+//!    values are computed once per element — the failure mode of the old
+//!    lazy backend's tree walk),
+//!
+//! — then lays out a liveness-based [`MemoryPlan`] (buffers are dropped
+//! back to the installed [`crate::memory::MemoryManagerAdapter`] at their
+//! last use, and the slot assignment bounds concurrent live buffers) and
+//! packages everything as an executable [`CompiledProgram`] that runs on
+//! *any* [`TensorBackend`].
+//!
+//! Correctness contract: on the reference CPU backend, an optimized
+//! program is **bit-identical** to replaying the unoptimized trace — the
+//! differential fuzzer in `rust/tests/graph_fuzz.rs` enforces this over
+//! hundreds of random programs, and `rust/tests/graph_passes.rs` pins
+//! down each pass individually.
+
+pub mod fuse;
+pub mod memplan;
+pub mod passes;
+
+use std::sync::Arc;
+
+use super::cpu::CpuBackend;
+use super::op::Op;
+use super::trace::{TraceBackend, TraceProgram, ValueRef};
+use super::{BackendGuard, DType, Shape, Tensor, TensorBackend};
+use crate::memory::telemetry::AllocEvent;
+use crate::util::error::{Error, Result};
+
+pub use fuse::{FusedArg, FusedKernel, FusedStep};
+pub use memplan::MemoryPlan;
+
+/// One dataflow node: an [`Op`] plus where its operands come from. Values
+/// are SSA — defined once by their node, never mutated.
+#[derive(Debug, Clone)]
+pub struct Node {
+    /// The reified operation.
+    pub op: Op,
+    /// Operand sources, in argument order.
+    pub inputs: Vec<ValueRef>,
+}
+
+/// A dataflow graph lifted from a linear [`TraceProgram`], with an
+/// explicit set of requested outputs (everything else is optimization
+/// fodder). Nodes are kept in topological (trace) order throughout.
+#[derive(Debug, Clone, Default)]
+pub struct Graph {
+    /// The constant pool (external operands of the trace).
+    pub consts: Vec<Tensor>,
+    /// Nodes in topological order: `ValueRef::Out(i)` is node `i`'s value.
+    pub nodes: Vec<Node>,
+    /// The values the caller wants back, in order.
+    pub outputs: Vec<ValueRef>,
+}
+
+impl Graph {
+    /// Lift a captured program, requesting `outputs`. Fails on dangling
+    /// references (forward edges, out-of-range constants).
+    pub fn from_program(program: &TraceProgram, outputs: &[ValueRef]) -> Result<Graph> {
+        let check = |r: &ValueRef, limit: usize| -> Result<()> {
+            match r {
+                ValueRef::Const(i) if *i >= program.consts.len() => {
+                    Err(Error::msg(format!("graph: const ref {i} out of range")))
+                }
+                ValueRef::Out(i) if *i >= limit => {
+                    Err(Error::msg(format!("graph: forward/dangling ref to instr {i}")))
+                }
+                _ => Ok(()),
+            }
+        };
+        for (j, instr) in program.instrs.iter().enumerate() {
+            for r in &instr.inputs {
+                check(r, j)?;
+            }
+        }
+        for r in outputs {
+            check(r, program.instrs.len())?;
+        }
+        Ok(Graph {
+            consts: program.consts.clone(),
+            nodes: program
+                .instrs
+                .iter()
+                .map(|i| Node { op: i.op.clone(), inputs: i.inputs.clone() })
+                .collect(),
+            outputs: outputs.to_vec(),
+        })
+    }
+
+    /// Drop every node whose `keep` flag is false, remapping all
+    /// `Out` references. Callers guarantee no kept node (or output)
+    /// references a dropped one.
+    pub(crate) fn retain(&mut self, keep: &[bool]) {
+        let mut remap = vec![usize::MAX; self.nodes.len()];
+        let mut next = 0usize;
+        for (i, &k) in keep.iter().enumerate() {
+            if k {
+                remap[i] = next;
+                next += 1;
+            }
+        }
+        let fix = |r: &mut ValueRef| {
+            if let ValueRef::Out(i) = r {
+                debug_assert_ne!(remap[*i], usize::MAX, "reference to dropped node {i}");
+                *i = remap[*i];
+            }
+        };
+        let mut nodes = Vec::with_capacity(next);
+        for (i, mut n) in std::mem::take(&mut self.nodes).into_iter().enumerate() {
+            if keep[i] {
+                n.inputs.iter_mut().for_each(fix);
+                nodes.push(n);
+            }
+        }
+        self.nodes = nodes;
+        self.outputs.iter_mut().for_each(fix);
+    }
+
+    /// Per-node consumer lists (node indices, may repeat per use).
+    pub(crate) fn consumers(&self) -> Vec<Vec<usize>> {
+        let mut out = vec![Vec::new(); self.nodes.len()];
+        for (j, n) in self.nodes.iter().enumerate() {
+            for r in &n.inputs {
+                if let ValueRef::Out(i) = r {
+                    out[*i].push(j);
+                }
+            }
+        }
+        out
+    }
+
+    /// Which nodes are requested program outputs.
+    pub(crate) fn output_mask(&self) -> Vec<bool> {
+        let mut m = vec![false; self.nodes.len()];
+        for r in &self.outputs {
+            if let ValueRef::Out(i) = r {
+                m[*i] = true;
+            }
+        }
+        m
+    }
+
+    /// Best-effort compile-time dtype inference (`None` = unknown). Used
+    /// to gate fusion: a node only fuses when it is *provably* f32.
+    pub(crate) fn infer_dtypes(&self) -> Vec<Option<DType>> {
+        let mut out: Vec<Option<DType>> = vec![None; self.nodes.len()];
+        for i in 0..self.nodes.len() {
+            let dt = |r: &ValueRef, out: &[Option<DType>]| match r {
+                ValueRef::Const(c) => Some(self.consts[*c].dtype()),
+                ValueRef::Out(n) => out[*n],
+            };
+            let n = &self.nodes[i];
+            // malformed arities infer as unknown; the arity error itself
+            // surfaces at dispatch time
+            let arg = |k: usize| n.inputs.get(k).and_then(|r| dt(r, &out));
+            out[i] = match &n.op {
+                Op::Full { dtype, .. }
+                | Op::Arange { dtype, .. }
+                | Op::RandUniform { dtype, .. }
+                | Op::RandNormal { dtype, .. }
+                | Op::Astype { dtype } => Some(*dtype),
+                Op::FromHost { host, .. } => Some(host.dtype()),
+                // binary arithmetic: NumPy-style promotion
+                Op::Add
+                | Op::Sub
+                | Op::Mul
+                | Op::Div
+                | Op::Pow
+                | Op::Minimum
+                | Op::Maximum
+                | Op::Rem => match (arg(0), arg(1)) {
+                    (Some(a), Some(b)) => Some(a.promote(b)),
+                    _ => None,
+                },
+                // predicates always produce Bool
+                Op::Eq
+                | Op::Neq
+                | Op::Lt
+                | Op::Le
+                | Op::Gt
+                | Op::Ge
+                | Op::LogicalAnd
+                | Op::LogicalOr
+                | Op::LogicalNot
+                | Op::IsNan
+                | Op::Any { .. }
+                | Op::All { .. } => Some(DType::Bool),
+                // float unaries promote integers to f32
+                Op::Exp
+                | Op::Log
+                | Op::Log1p
+                | Op::Sin
+                | Op::Cos
+                | Op::Tanh
+                | Op::Sqrt
+                | Op::Rsqrt
+                | Op::Reciprocal
+                | Op::Floor
+                | Op::Ceil
+                | Op::Round
+                | Op::Erf => arg(0).map(|d| if d.is_float() { d } else { DType::F32 }),
+                // dtype-preserving unaries and data movement
+                Op::Neg
+                | Op::Abs
+                | Op::Sign
+                | Op::Clip { .. }
+                | Op::Reshape { .. }
+                | Op::Transpose { .. }
+                | Op::Slice { .. }
+                | Op::Pad { .. }
+                | Op::Tile { .. }
+                | Op::Flip { .. }
+                | Op::Copy => arg(0),
+                Op::Argmax { .. } | Op::Argmin { .. } => Some(DType::I64),
+                // reductions preserve their input dtype (reduce.rs)
+                Op::Sum { .. }
+                | Op::Prod { .. }
+                | Op::MaxReduce { .. }
+                | Op::MinReduce { .. }
+                | Op::Cumsum { .. } => arg(0),
+                // matmul floats both operands then promotes (matmul.rs)
+                Op::Matmul => match (arg(0), arg(1)) {
+                    (Some(a), Some(b)) => {
+                        let float = |d: DType| if d.is_float() { d } else { DType::F32 };
+                        Some(float(a).promote(float(b)))
+                    }
+                    _ => None,
+                },
+                // conv/pool, gather/scatter, where, concat, call_ext:
+                // stay conservative
+                _ => None,
+            };
+        }
+        out
+    }
+}
+
+/// Which passes run, and their knobs.
+#[derive(Debug, Clone)]
+pub struct CompileOptions {
+    /// Dead-code elimination.
+    pub dce: bool,
+    /// Constant folding (on the reference CPU backend).
+    pub fold: bool,
+    /// Common-subexpression elimination.
+    pub cse: bool,
+    /// Element-wise fusion.
+    pub fuse: bool,
+    /// Upper bound (elements) on values materialized by constant folding.
+    pub fold_numel_cap: usize,
+    /// Constant-pool indices that must *not* be folded into (the
+    /// parameters of a [`CompiledFn`], substituted at call time).
+    pub frozen_consts: Vec<usize>,
+}
+
+impl Default for CompileOptions {
+    fn default() -> Self {
+        CompileOptions {
+            dce: true,
+            fold: true,
+            cse: true,
+            fuse: true,
+            fold_numel_cap: 1 << 16,
+            frozen_consts: Vec::new(),
+        }
+    }
+}
+
+impl CompileOptions {
+    /// All passes disabled — compile becomes a structure-preserving
+    /// lowering (useful as a differential baseline and in pass tests).
+    pub fn none() -> Self {
+        CompileOptions { dce: false, fold: false, cse: false, fuse: false, ..Default::default() }
+    }
+
+    /// Exactly one pass enabled (pass-level tests).
+    pub fn only(pass: &str) -> Self {
+        let mut o = Self::none();
+        match pass {
+            "dce" => o.dce = true,
+            "fold" => o.fold = true,
+            "cse" => o.cse = true,
+            "fuse" => o.fuse = true,
+            other => panic!("unknown pass `{other}`"),
+        }
+        o
+    }
+}
+
+/// What one pass did, for reports and tests.
+#[derive(Debug, Clone)]
+pub struct PassReport {
+    /// Pass name (`dce`, `fold`, `cse`, `fuse`).
+    pub pass: &'static str,
+    /// Node count entering the pass.
+    pub ops_before: usize,
+    /// Node count leaving the pass.
+    pub ops_after: usize,
+    /// Nodes removed / folded / merged / fused by the pass.
+    pub changed: usize,
+}
+
+/// Per-pass accounting for a whole compilation.
+#[derive(Debug, Clone, Default)]
+pub struct CompileReport {
+    /// One entry per executed pass, in pipeline order.
+    pub passes: Vec<PassReport>,
+}
+
+impl CompileReport {
+    /// Tally for a named pass (sums repeated runs, e.g. the cleanup DCE).
+    pub fn changed_by(&self, pass: &str) -> usize {
+        self.passes.iter().filter(|p| p.pass == pass).map(|p| p.changed).sum()
+    }
+
+    /// One-line human-readable summary.
+    pub fn summary(&self) -> String {
+        self.passes
+            .iter()
+            .map(|p| format!("{}: {}→{} (-{})", p.pass, p.ops_before, p.ops_after, p.changed))
+            .collect::<Vec<_>>()
+            .join(", ")
+    }
+}
+
+/// One executable instruction of a compiled program.
+#[derive(Debug, Clone)]
+pub enum CompiledInstr {
+    /// A plain op, dispatched through the backend choke point.
+    Op {
+        /// The reified operation.
+        op: Op,
+        /// Operand sources.
+        inputs: Vec<ValueRef>,
+    },
+    /// A fused element-wise region, evaluated in one pass.
+    Fused(FusedKernel),
+}
+
+impl CompiledInstr {
+    /// Display / telemetry name (`'static` so allocation events can carry it).
+    pub fn name(&self) -> &'static str {
+        match self {
+            CompiledInstr::Op { op, .. } => op.name(),
+            CompiledInstr::Fused(_) => "fused",
+        }
+    }
+
+    /// Operand sources of this instruction.
+    pub fn inputs(&self) -> &[ValueRef] {
+        match self {
+            CompiledInstr::Op { inputs, .. } => inputs,
+            CompiledInstr::Fused(k) => &k.inputs,
+        }
+    }
+}
+
+/// An optimized, executable program: the output of [`compile`].
+#[derive(Clone)]
+pub struct CompiledProgram {
+    /// The constant pool (indices match the source program's).
+    pub consts: Vec<Tensor>,
+    /// Instructions in execution order.
+    pub instrs: Vec<CompiledInstr>,
+    /// Requested outputs, resolved against `instrs`/`consts`.
+    pub outputs: Vec<ValueRef>,
+    /// The liveness-based buffer plan.
+    pub plan: MemoryPlan,
+    /// What each pass did.
+    pub report: CompileReport,
+}
+
+/// Execution statistics: op/buffer counts and a replayable allocation
+/// trace (feed it to [`crate::memory::telemetry::replay`] to evaluate the
+/// plan against any memory manager).
+#[derive(Debug, Clone, Default)]
+pub struct ExecStats {
+    /// Instructions executed (fused regions count once).
+    pub executed_instrs: usize,
+    /// Primitive ops represented (fused regions count their members).
+    pub executed_ops: usize,
+    /// Peak bytes live under the plan (buffers freed at last use).
+    pub planned_peak_bytes: usize,
+    /// Peak bytes had every intermediate been kept to the end.
+    pub naive_peak_bytes: usize,
+    /// Distinct buffer slots the plan used.
+    pub buffer_slots: usize,
+    /// Alloc/free events in execution order, replayable via
+    /// [`crate::memory::telemetry::replay`].
+    pub events: Vec<AllocEvent>,
+}
+
+impl CompiledProgram {
+    /// Instruction count.
+    pub fn len(&self) -> usize {
+        self.instrs.len()
+    }
+
+    /// Whether the program has no instructions (fully folded).
+    pub fn is_empty(&self) -> bool {
+        self.instrs.is_empty()
+    }
+
+    /// Instruction names in execution order (fused regions show as
+    /// `"fused"`); diagnostics and pass tests.
+    pub fn op_names(&self) -> Vec<&'static str> {
+        self.instrs.iter().map(|i| i.name()).collect()
+    }
+
+    /// Total primitive ops including the members of fused regions.
+    pub fn primitive_op_count(&self) -> usize {
+        self.instrs
+            .iter()
+            .map(|i| match i {
+                CompiledInstr::Op { .. } => 1,
+                CompiledInstr::Fused(k) => k.steps.len(),
+            })
+            .sum()
+    }
+
+    /// Execute on `backend`, returning the requested outputs in order.
+    /// Skips the allocation-event telemetry of [`Self::run_detailed`]
+    /// (this is the hot path for lazy materialization and
+    /// [`CompiledFn::call`]).
+    pub fn run(&self, backend: &dyn TensorBackend) -> Result<Vec<Tensor>> {
+        self.exec(backend, &[], false).map(|(outs, _)| outs)
+    }
+
+    /// Execute with constant-pool substitutions (`(const index, tensor)`)
+    /// and full statistics. Values are dropped back to the installed
+    /// memory manager at their last use, per the [`MemoryPlan`].
+    pub fn run_detailed(
+        &self,
+        backend: &dyn TensorBackend,
+        overrides: &[(usize, &Tensor)],
+    ) -> Result<(Vec<Tensor>, ExecStats)> {
+        self.exec(backend, overrides, true)
+    }
+
+    fn exec(
+        &self,
+        backend: &dyn TensorBackend,
+        overrides: &[(usize, &Tensor)],
+        instrument: bool,
+    ) -> Result<(Vec<Tensor>, ExecStats)> {
+        let get_const = |i: usize| -> &Tensor {
+            overrides.iter().find(|(k, _)| *k == i).map(|(_, t)| *t).unwrap_or(&self.consts[i])
+        };
+        let mut vals: Vec<Option<Tensor>> = vec![None; self.instrs.len()];
+        let mut def_bytes: Vec<usize> = vec![0; self.instrs.len()];
+        let mut stats = ExecStats {
+            executed_instrs: self.instrs.len(),
+            executed_ops: self.primitive_op_count(),
+            buffer_slots: self.plan.num_slots,
+            ..Default::default()
+        };
+        let mut live = crate::meter::PeakValueMeter::new();
+        let mut naive_bytes = 0usize;
+        for (j, instr) in self.instrs.iter().enumerate() {
+            let out = {
+                let resolve = |r: &ValueRef| -> &Tensor {
+                    match r {
+                        ValueRef::Const(i) => get_const(*i),
+                        ValueRef::Out(i) => {
+                            vals[*i].as_ref().expect("executor: value used after free")
+                        }
+                    }
+                };
+                match instr {
+                    CompiledInstr::Op { op, inputs } => {
+                        let args: Vec<&Tensor> = inputs.iter().map(resolve).collect();
+                        backend.dispatch(op, &args)?
+                    }
+                    CompiledInstr::Fused(k) => {
+                        let args: Vec<&Tensor> = k.inputs.iter().map(resolve).collect();
+                        k.execute(backend, &args)?
+                    }
+                }
+            };
+            let bytes = out.numel() * out.dtype().size_of();
+            def_bytes[j] = bytes;
+            live.add(bytes);
+            naive_bytes += bytes;
+            if instrument {
+                stats.events.push(AllocEvent {
+                    kind: crate::memory::EventKind::Alloc,
+                    bytes,
+                    id: j as u64,
+                    op: instr.name(),
+                });
+            }
+            vals[j] = Some(out);
+            for &dead in &self.plan.dies_after[j] {
+                if let Some(t) = vals[dead].take() {
+                    drop(t); // returns the buffer to the installed manager
+                    live.sub(def_bytes[dead]);
+                    if instrument {
+                        stats.events.push(AllocEvent {
+                            kind: crate::memory::EventKind::Free,
+                            bytes: 0,
+                            id: dead as u64,
+                            op: instr.name(),
+                        });
+                    }
+                }
+            }
+        }
+        stats.planned_peak_bytes = live.peak();
+        stats.naive_peak_bytes = naive_bytes;
+        let outs: Vec<Tensor> = self
+            .outputs
+            .iter()
+            .map(|r| match r {
+                ValueRef::Const(i) => get_const(*i).clone(),
+                ValueRef::Out(i) => vals[*i].clone().expect("executor: output freed"),
+            })
+            .collect();
+        Ok((outs, stats))
+    }
+}
+
+/// Compile a captured program into an optimized [`CompiledProgram`]
+/// producing `outputs`.
+pub fn compile(
+    program: &TraceProgram,
+    outputs: &[ValueRef],
+    opts: &CompileOptions,
+) -> Result<CompiledProgram> {
+    let mut g = Graph::from_program(program, outputs)?;
+    let mut report = CompileReport::default();
+    if opts.dce {
+        passes::dce(&mut g, &mut report);
+    }
+    if opts.fold {
+        passes::fold(&mut g, opts, &mut report);
+    }
+    if opts.cse {
+        passes::cse(&mut g, &mut report);
+    }
+    if opts.dce && (opts.fold || opts.cse) {
+        // fold/cse leave orphaned defs behind; sweep them
+        passes::dce(&mut g, &mut report);
+    }
+    let (instrs, outputs) = if opts.fuse {
+        fuse::fuse(&g, &mut report)
+    } else {
+        (
+            g.nodes
+                .iter()
+                .map(|n| CompiledInstr::Op { op: n.op.clone(), inputs: n.inputs.clone() })
+                .collect(),
+            g.outputs.clone(),
+        )
+    };
+    let plan = MemoryPlan::build(&instrs, &outputs);
+    Ok(CompiledProgram { consts: g.consts, instrs, outputs, plan, report })
+}
+
+/// A traced-and-compiled function: the `Tensor::compile`-style entry
+/// point. Capture once with example inputs, then [`CompiledFn::call`]
+/// with fresh tensors of the same shapes/dtypes.
+pub struct CompiledFn {
+    program: CompiledProgram,
+    /// Per example argument: its constant-pool slot (`None` if the traced
+    /// function never used that argument).
+    params: Vec<Option<usize>>,
+    arg_shapes: Vec<Shape>,
+    arg_dtypes: Vec<DType>,
+}
+
+/// Trace `f` over the example inputs and compile the captured program
+/// with default options. The examples' *values* are not baked in: each
+/// one becomes a substitutable parameter of the returned [`CompiledFn`]
+/// (constant folding is fenced off from them). Shapes and dtypes *are*
+/// specialized.
+///
+/// Caveats: the capture installs the trace backend as the
+/// *process-global* default for the duration of `f` (the same
+/// [`BackendGuard`] mechanism every backend swap in this codebase uses),
+/// so tensor work running concurrently on other threads gets captured
+/// too — trace on a quiescent process. Example arguments must be
+/// distinct tensors: two handles to the same storage would share one
+/// constant slot and could not be substituted independently at call
+/// time, so that case is rejected here.
+pub fn trace_and_compile(
+    examples: &[Tensor],
+    f: impl FnOnce(&[Tensor]) -> Tensor,
+) -> Result<CompiledFn> {
+    let be = TraceBackend::over_cpu_default();
+    let (root, params, program) = {
+        let _guard = BackendGuard::install(be.clone());
+        let out = f(examples);
+        let tracer = be.interposer();
+        let root = tracer.value_ref_of(&out).ok_or_else(|| {
+            Error::msg("trace_and_compile: the function's result was not produced by the trace")
+        })?;
+        let params: Vec<Option<usize>> =
+            examples.iter().map(|e| tracer.const_index_of(e)).collect();
+        (root, params, tracer.program())
+    };
+    for (i, p) in params.iter().enumerate() {
+        if p.is_some() && params[..i].contains(p) {
+            return Err(Error::msg(format!(
+                "trace_and_compile: example arguments {i} and an earlier one alias the same \
+                 tensor; parameters must be distinct to be substituted independently"
+            )));
+        }
+    }
+    let opts = CompileOptions {
+        frozen_consts: params.iter().flatten().copied().collect(),
+        ..Default::default()
+    };
+    let program = compile(&program, &[root], &opts)?;
+    Ok(CompiledFn {
+        program,
+        params,
+        arg_shapes: examples.iter().map(|e| e.shape().clone()).collect(),
+        arg_dtypes: examples.iter().map(|e| e.dtype()).collect(),
+    })
+}
+
+impl CompiledFn {
+    /// Run the compiled program on `backend` with fresh arguments
+    /// (shapes/dtypes must match the trace-time examples).
+    pub fn call(&self, backend: &dyn TensorBackend, args: &[&Tensor]) -> Result<Tensor> {
+        if args.len() != self.params.len() {
+            return Err(Error::msg(format!(
+                "compiled fn expects {} argument(s), got {}",
+                self.params.len(),
+                args.len()
+            )));
+        }
+        for (i, a) in args.iter().enumerate() {
+            if *a.shape() != self.arg_shapes[i] || a.dtype() != self.arg_dtypes[i] {
+                return Err(Error::msg(format!(
+                    "compiled fn arg {i}: expected {} {}, got {} {}",
+                    self.arg_shapes[i],
+                    self.arg_dtypes[i].name(),
+                    a.shape(),
+                    a.dtype().name()
+                )));
+            }
+        }
+        let overrides: Vec<(usize, &Tensor)> = self
+            .params
+            .iter()
+            .zip(args)
+            .filter_map(|(p, a)| p.map(|i| (i, *a)))
+            .collect();
+        let (mut outs, _) = self.program.exec(backend, &overrides, false)?;
+        Ok(outs.remove(0))
+    }
+
+    /// Convenience: run on the reference CPU backend.
+    pub fn call_cpu(&self, args: &[&Tensor]) -> Result<Tensor> {
+        let cpu: Arc<dyn TensorBackend> = CpuBackend::shared();
+        self.call(cpu.as_ref(), args)
+    }
+
+    /// The optimized program.
+    pub fn program(&self) -> &CompiledProgram {
+        &self.program
+    }
+
+    /// What each pass did during compilation.
+    pub fn report(&self) -> &CompileReport {
+        &self.program.report
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::HostBuffer;
+
+    fn fh(data: &[f32], shape: &[usize]) -> Op {
+        Op::FromHost { host: HostBuffer::F32(data.to_vec()), shape: Shape::new(shape.to_vec()) }
+    }
+
+    fn prog(instrs: Vec<(Op, Vec<ValueRef>)>) -> TraceProgram {
+        TraceProgram {
+            consts: Vec::new(),
+            instrs: instrs
+                .into_iter()
+                .map(|(op, inputs)| crate::tensor::trace::TraceInstr { op, inputs })
+                .collect(),
+        }
+    }
+
+    #[test]
+    fn lowering_without_passes_matches_replay() {
+        let p = prog(vec![
+            (fh(&[1.0, 2.0, 3.0], &[3]), vec![]),
+            (fh(&[4.0, 5.0, 6.0], &[3]), vec![]),
+            (Op::Add, vec![ValueRef::Out(0), ValueRef::Out(1)]),
+            (Op::Tanh, vec![ValueRef::Out(2)]),
+        ]);
+        let cpu = CpuBackend::shared();
+        let reference = p.replay_on(cpu.as_ref()).unwrap();
+        let compiled = compile(&p, &[ValueRef::Out(3)], &CompileOptions::none()).unwrap();
+        let outs = compiled.run(cpu.as_ref()).unwrap();
+        assert_eq!(outs[0].to_vec(), reference[3].to_vec());
+        assert_eq!(compiled.op_names(), vec!["from_host", "from_host", "add", "tanh"]);
+    }
+
+    #[test]
+    fn default_pipeline_folds_fuses_and_matches() {
+        let p = prog(vec![
+            (fh(&[1.0, -2.0, 3.0, -4.0], &[4]), vec![]),
+            (fh(&[0.5, 0.5, 0.5, 0.5], &[4]), vec![]),
+            (Op::Mul, vec![ValueRef::Out(0), ValueRef::Out(1)]),
+            (Op::Abs, vec![ValueRef::Out(2)]),
+            (Op::Sqrt, vec![ValueRef::Out(3)]),
+        ]);
+        let cpu = CpuBackend::shared();
+        let reference = p.replay_on(cpu.as_ref()).unwrap();
+        let compiled = compile(&p, &[ValueRef::Out(4)], &CompileOptions::default()).unwrap();
+        // everything is constant: the whole program folds away
+        assert!(compiled.is_empty(), "ops left: {:?}", compiled.op_names());
+        let outs = compiled.run(cpu.as_ref()).unwrap();
+        assert_eq!(outs[0].to_vec(), reference[4].to_vec());
+    }
+
+    #[test]
+    fn dangling_refs_are_rejected() {
+        let p = prog(vec![(Op::Neg, vec![ValueRef::Out(5)])]);
+        assert!(Graph::from_program(&p, &[ValueRef::Out(0)]).is_err());
+        let p2 = prog(vec![(fh(&[1.0], &[1]), vec![])]);
+        assert!(Graph::from_program(&p2, &[ValueRef::Out(9)]).is_err());
+    }
+
+    #[test]
+    fn compiled_fn_substitutes_parameters() {
+        let ex = [
+            Tensor::from_slice(&[1.0f32, 2.0], [2]),
+            Tensor::from_slice(&[10.0f32, 20.0], [2]),
+        ];
+        let cf = trace_and_compile(&ex, |args| args[0].add(&args[1]).mul(&args[0])).unwrap();
+        // called with the example values
+        let y = cf.call_cpu(&[&ex[0], &ex[1]]).unwrap();
+        assert_eq!(y.to_vec(), vec![11.0, 44.0]);
+        // called with *fresh* values: parameters must not be baked in
+        let a = Tensor::from_slice(&[2.0f32, 3.0], [2]);
+        let b = Tensor::from_slice(&[1.0f32, 1.0], [2]);
+        let y = cf.call_cpu(&[&a, &b]).unwrap();
+        assert_eq!(y.to_vec(), vec![6.0, 12.0]);
+        // shape mismatch is rejected
+        assert!(cf.call_cpu(&[&a, &Tensor::zeros([3])]).is_err());
+    }
+}

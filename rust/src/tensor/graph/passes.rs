@@ -1,0 +1,221 @@
+//! The optimization passes: dead-code elimination, constant folding, and
+//! common-subexpression elimination. Each pass rewrites the [`Graph`] in
+//! place and appends a [`PassReport`].
+//!
+//! Shared semantics rules:
+//!
+//! - **Effectful ops are barriers.** `rand_uniform`/`rand_normal` advance
+//!   the backend RNG stream and `call_ext` has backend-defined semantics,
+//!   so DCE keeps them even when dead, folding never evaluates them at
+//!   compile time, and CSE never merges them.
+//! - **Folding uses the reference CPU backend.** A folded value is the
+//!   byte-for-byte CPU result; on CPU execution this is indistinguishable
+//!   from running the op at execution time, which is what the
+//!   differential fuzzer checks.
+
+use std::collections::HashMap;
+
+use super::super::cpu::CpuBackend;
+use super::super::op::Op;
+use super::super::trace::ValueRef;
+use super::super::{Tensor, TensorBackend};
+use super::{CompileOptions, CompileReport, Graph, PassReport};
+
+/// Ops with observable effects beyond their value (kept by DCE, skipped
+/// by folding and CSE).
+pub(crate) fn effectful(op: &Op) -> bool {
+    matches!(op, Op::RandUniform { .. } | Op::RandNormal { .. } | Op::CallExt { .. })
+}
+
+/// Dead-code elimination: drop every node not transitively reachable from
+/// the requested outputs or from an effectful op.
+pub fn dce(g: &mut Graph, report: &mut CompileReport) {
+    let before = g.nodes.len();
+    let mut live = vec![false; g.nodes.len()];
+    let mut work: Vec<usize> = Vec::new();
+    for r in &g.outputs {
+        if let ValueRef::Out(i) = r {
+            work.push(*i);
+        }
+    }
+    for (i, n) in g.nodes.iter().enumerate() {
+        if effectful(&n.op) {
+            work.push(i);
+        }
+    }
+    while let Some(i) = work.pop() {
+        if live[i] {
+            continue;
+        }
+        live[i] = true;
+        for r in &g.nodes[i].inputs {
+            if let ValueRef::Out(j) = r {
+                work.push(*j);
+            }
+        }
+    }
+    g.retain(&live);
+    report.passes.push(PassReport {
+        pass: "dce",
+        ops_before: before,
+        ops_after: g.nodes.len(),
+        changed: before - g.nodes.len(),
+    });
+}
+
+/// Safe upper bound on the output element count of `op`, used to keep
+/// compile-time folding from materializing huge values.
+fn fold_size_bound(op: &Op, arg_numels: &[usize]) -> usize {
+    match op {
+        Op::Full { shape, .. } | Op::FromHost { shape, .. } => shape.numel(),
+        Op::Arange { n, .. } => *n,
+        Op::Tile { reps } => {
+            arg_numels.first().copied().unwrap_or(1).saturating_mul(reps.iter().product())
+        }
+        Op::Pad { pads, .. } => {
+            // numel(padded) <= numel * prod(1 + before + after)
+            let grow: usize = pads.iter().map(|(a, b)| 1 + a + b).product();
+            arg_numels.first().copied().unwrap_or(1).saturating_mul(grow)
+        }
+        // broadcast / matmul outputs are bounded by the operand-size product
+        _ => arg_numels.iter().copied().fold(1usize, |a, b| a.saturating_mul(b.max(1))),
+    }
+}
+
+/// Constant folding: evaluate deterministic nodes whose operands are all
+/// compile-time constants (and none of them frozen parameters) on the
+/// reference CPU backend, promoting the results into the constant pool.
+/// Runs in topological order so folds cascade through chains in one pass.
+pub fn fold(g: &mut Graph, opts: &CompileOptions, report: &mut CompileReport) {
+    let before = g.nodes.len();
+    let cpu = CpuBackend::shared();
+    // per old node: its replacement const, if folded
+    let mut folded: Vec<Option<ValueRef>> = vec![None; g.nodes.len()];
+    for i in 0..g.nodes.len() {
+        // rewrite inputs through earlier folds first so chains cascade
+        let inputs: Vec<ValueRef> = g.nodes[i]
+            .inputs
+            .iter()
+            .map(|r| match r {
+                ValueRef::Out(j) => folded[*j].unwrap_or(*r),
+                c => *c,
+            })
+            .collect();
+        g.nodes[i].inputs = inputs.clone();
+        if effectful(&g.nodes[i].op) {
+            continue;
+        }
+        let const_ids: Vec<usize> = inputs
+            .iter()
+            .filter_map(|r| match r {
+                ValueRef::Const(c) => Some(*c),
+                ValueRef::Out(_) => None,
+            })
+            .collect();
+        if const_ids.len() != inputs.len() {
+            continue; // some operand is still computed at run time
+        }
+        if const_ids.iter().any(|c| opts.frozen_consts.contains(c)) {
+            continue; // depends on a substitutable parameter
+        }
+        let arg_numels: Vec<usize> = const_ids.iter().map(|&c| g.consts[c].numel()).collect();
+        if fold_size_bound(&g.nodes[i].op, &arg_numels) > opts.fold_numel_cap {
+            continue;
+        }
+        let args: Vec<&Tensor> = const_ids.iter().map(|&c| &g.consts[c]).collect();
+        match cpu.dispatch(&g.nodes[i].op, &args) {
+            Ok(value) => {
+                let c = g.consts.len();
+                g.consts.push(value);
+                folded[i] = Some(ValueRef::Const(c));
+            }
+            // a failing op is left in place: the executor will surface
+            // the same error at run time (folding must not mask it)
+            Err(_) => continue,
+        }
+    }
+    // rewrite remaining uses and outputs, then drop the folded defs
+    for n in g.nodes.iter_mut() {
+        for r in n.inputs.iter_mut() {
+            if let ValueRef::Out(j) = r {
+                if let Some(c) = folded[*j] {
+                    *r = c;
+                }
+            }
+        }
+    }
+    for r in g.outputs.iter_mut() {
+        if let ValueRef::Out(j) = r {
+            if let Some(c) = folded[*j] {
+                *r = c;
+            }
+        }
+    }
+    let keep: Vec<bool> = folded.iter().map(|f| f.is_none()).collect();
+    g.retain(&keep);
+    report.passes.push(PassReport {
+        pass: "fold",
+        ops_before: before,
+        ops_after: g.nodes.len(),
+        changed: before - g.nodes.len(),
+    });
+}
+
+/// Common-subexpression elimination: redirect uses of syntactically
+/// identical deterministic nodes (same op payload, same canonical
+/// operands) to the first occurrence. Orphaned duplicates are left for
+/// the follow-up DCE sweep.
+pub fn cse(g: &mut Graph, report: &mut CompileReport) {
+    let before = g.nodes.len();
+    let mut seen: HashMap<String, usize> = HashMap::new();
+    // canonical value for each node (identity unless merged away)
+    let mut canon: Vec<usize> = (0..g.nodes.len()).collect();
+    let mut merged = 0usize;
+    for i in 0..g.nodes.len() {
+        let inputs: Vec<ValueRef> = g.nodes[i]
+            .inputs
+            .iter()
+            .map(|r| match r {
+                ValueRef::Out(j) => ValueRef::Out(canon[*j]),
+                c => *c,
+            })
+            .collect();
+        g.nodes[i].inputs = inputs.clone();
+        // effectful ops never merge; `from_host` is excluded because its
+        // Debug key would serialize the whole host buffer (folding already
+        // collapses constant data where it matters)
+        if effectful(&g.nodes[i].op) || matches!(g.nodes[i].op, Op::FromHost { .. }) {
+            continue;
+        }
+        // `Op` carries no interior mutability, so its Debug form is a
+        // faithful syntactic key (payload floats included)
+        let key = format!("{:?}|{:?}", g.nodes[i].op, inputs);
+        match seen.get(&key) {
+            Some(&first) => {
+                canon[i] = first;
+                merged += 1;
+            }
+            None => {
+                seen.insert(key, i);
+            }
+        }
+    }
+    for n in g.nodes.iter_mut() {
+        for r in n.inputs.iter_mut() {
+            if let ValueRef::Out(j) = r {
+                *j = canon[*j];
+            }
+        }
+    }
+    for r in g.outputs.iter_mut() {
+        if let ValueRef::Out(j) = r {
+            *j = canon[*j];
+        }
+    }
+    report.passes.push(PassReport {
+        pass: "cse",
+        ops_before: before,
+        ops_after: g.nodes.len(),
+        changed: merged,
+    });
+}

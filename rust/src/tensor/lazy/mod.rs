@@ -2,60 +2,34 @@
 //! values need only be materialized upon user request").
 //!
 //! Element-wise operations and `matmul` build an expression graph instead
-//! of executing; materialization (`to_host`) walks the graph and evaluates
-//! **fused**: a chain of element-wise ops becomes a single pass over the
-//! output with no intermediate buffers — the same JIT-fusion idea as the
-//! original library's ArrayFire backend ("deferred, on-the-fly code
-//! generation ... to increase kernel arithmetic intensity").
+//! of executing; materialization (`to_host`) lowers the pending subgraph
+//! into a [`TraceProgram`] and hands it to the optimizing graph compiler
+//! ([`super::graph`]): CSE deduplicates shared subexpressions, fusion
+//! collapses element-wise chains *and diamonds* into single
+//! [`super::graph::FusedKernel`] passes with no intermediate buffers —
+//! the same JIT-fusion idea as the original library's ArrayFire backend
+//! ("deferred, on-the-fly code generation ... to increase kernel
+//! arithmetic intensity"), but shared with every other consumer of the
+//! IR instead of living in a private tree walker.
 //!
 //! The backend is a single [`Interposer`] over the shared [`Op`] IR: the
-//! graph nodes store `Op` values directly (no private opcode enum), the
-//! fusion pass is a `match` over `Op`, and everything non-fusible falls
-//! through `inner.dispatch` to the eager CPU backend — lazy tensors
-//! materialize on the way in, so the backend is always complete.
+//! graph nodes store `Op` values directly, the deferral predicate is the
+//! compiler's fusion ISA ([`graph::fuse::fusible_arity`]), and everything
+//! non-fusible falls through `inner.dispatch` to the eager CPU backend —
+//! lazy tensors materialize on the way in, so the backend is always
+//! complete.
 
+use std::collections::HashMap;
 use std::sync::{Arc, Mutex, OnceLock};
 
 use super::adapter::TensorAdapter;
 use super::cpu::CpuBackend;
+use super::graph::{self, fuse::fusible_arity, CompileOptions};
 use super::interpose::{InterposedBackend, Interposer};
 use super::op::Op;
+use super::trace::{TraceInstr, TraceProgram, ValueRef};
 use super::{DType, HostBuffer, Shape, Tensor, TensorBackend};
 use crate::util::error::Result;
-
-/// Arity of a *fusible* element-wise op (`None`: not deferred). This is
-/// the deferral predicate — the fusion ISA is just a subset of [`Op`].
-fn ew_arity(op: &Op) -> Option<usize> {
-    match op {
-        Op::Add | Op::Sub | Op::Mul | Op::Div | Op::Maximum | Op::Minimum => Some(2),
-        Op::Neg | Op::Exp | Op::Log | Op::Tanh | Op::Sqrt | Op::Abs => Some(1),
-        _ => None,
-    }
-}
-
-fn apply1(op: &Op, x: f32) -> f32 {
-    match op {
-        Op::Neg => -x,
-        Op::Exp => x.exp(),
-        Op::Log => x.ln(),
-        Op::Tanh => x.tanh(),
-        Op::Sqrt => x.sqrt(),
-        Op::Abs => x.abs(),
-        _ => unreachable!("not a fusible unary op: {op:?}"),
-    }
-}
-
-fn apply2(op: &Op, a: f32, b: f32) -> f32 {
-    match op {
-        Op::Add => a + b,
-        Op::Sub => a - b,
-        Op::Mul => a * b,
-        Op::Div => a / b,
-        Op::Maximum => a.max(b),
-        Op::Minimum => a.min(b),
-        _ => unreachable!("not a fusible binary op: {op:?}"),
-    }
-}
 
 enum Node {
     /// A materialized operand.
@@ -73,6 +47,13 @@ pub struct LazyTensor {
     shape: Shape,
     dtype: DType,
     cache: Mutex<Option<Tensor>>,
+}
+
+/// The pass configuration for lazy materialization: folding is pointless
+/// (every leaf is a constant, so it would just evaluate the graph op by
+/// op at "compile" time and bypass fusion), the rest earn their keep.
+fn lazy_opts() -> CompileOptions {
+    CompileOptions { fold: false, ..CompileOptions::default() }
 }
 
 impl LazyTensor {
@@ -94,102 +75,145 @@ impl LazyTensor {
         Self::leaf(t.clone())
     }
 
-    /// Graph depth statistics (pending, unmaterialized ops).
+    fn ptr_key(&self) -> usize {
+        self as *const LazyTensor as usize
+    }
+
+    /// Number of *distinct* pending (deferred, unevaluated) ops behind
+    /// this tensor. Shared subgraphs are counted once: the walk keeps a
+    /// visited set keyed by node pointer, so diamond-heavy graphs stay
+    /// linear instead of going exponential.
     pub fn pending_ops(&self) -> usize {
+        let mut seen = std::collections::HashSet::new();
+        self.count_pending(&mut seen);
+        seen.len()
+    }
+
+    fn count_pending(&self, seen: &mut std::collections::HashSet<usize>) {
         if self.cache.lock().unwrap().is_some() {
-            return 0;
+            return;
         }
         match &self.node {
-            Node::Leaf(_) => 0,
-            Node::Ew(_, ins) => 1 + ins.iter().map(|i| i.pending_ops()).sum::<usize>(),
-            Node::Matmul(a, b) => 1 + a.pending_ops() + b.pending_ops(),
+            Node::Leaf(_) => {}
+            Node::Ew(_, ins) => {
+                if seen.insert(self.ptr_key()) {
+                    for i in ins {
+                        i.count_pending(seen);
+                    }
+                }
+            }
+            Node::Matmul(a, b) => {
+                if seen.insert(self.ptr_key()) {
+                    a.count_pending(seen);
+                    b.count_pending(seen);
+                }
+            }
         }
     }
 
-    /// Force evaluation (memoized).
+    /// Force evaluation (memoized): lower the pending subgraph to a
+    /// [`TraceProgram`] and run it through the optimizing pipeline.
+    /// Interior matmul values are requested as extra program outputs and
+    /// written back into their nodes' caches, so an expensive subgraph
+    /// shared by several separately-materialized roots executes once.
     pub fn force(&self) -> Tensor {
         if let Some(t) = self.cache.lock().unwrap().clone() {
             return t;
         }
         let out = match &self.node {
             Node::Leaf(t) => t.clone(),
-            Node::Matmul(a, b) => CpuBackend::shared().matmul(&a.force(), &b.force()),
-            Node::Ew(..) => self.eval_fused(),
+            _ => {
+                let mut b = ProgramBuilder {
+                    program: TraceProgram::default(),
+                    seen: HashMap::new(),
+                    matmuls: Vec::new(),
+                };
+                let root = b.lower(self);
+                // fast path: a single pending op gains nothing from the
+                // pass pipeline — dispatch it directly
+                if b.program.instrs.len() == 1 {
+                    let outs = b
+                        .program
+                        .replay_on(CpuBackend::shared().as_ref())
+                        .expect("lazy: single-op dispatch failed");
+                    let out = outs.into_iter().next().expect("lazy: no value");
+                    *self.cache.lock().unwrap() = Some(out.clone());
+                    return out;
+                }
+                let mut outputs = vec![root];
+                let mut memoize: Vec<&LazyTensor> = Vec::new();
+                for &(node, id) in &b.matmuls {
+                    if ValueRef::Out(id) != root {
+                        outputs.push(ValueRef::Out(id));
+                        memoize.push(node);
+                    }
+                }
+                let compiled = graph::compile(&b.program, &outputs, &lazy_opts())
+                    .expect("lazy: pending graph failed to compile");
+                let mut outs = compiled
+                    .run(CpuBackend::shared().as_ref())
+                    .expect("lazy: compiled program failed to execute")
+                    .into_iter();
+                let result = outs.next().expect("lazy: compiled program had no output");
+                for (node, value) in memoize.iter().zip(outs) {
+                    *node.cache.lock().unwrap() = Some(value);
+                }
+                result
+            }
         };
         *self.cache.lock().unwrap() = Some(out.clone());
         out
     }
-
-    /// Fused evaluation of an element-wise subtree: one pass, no
-    /// intermediates. Operands that broadcast are pre-materialized to the
-    /// output shape; deeper non-elementwise nodes are forced first and
-    /// enter as leaves.
-    fn eval_fused(&self) -> Tensor {
-        // compile: post-order RPN program over the ew subtree
-        let mut leaves: Vec<Vec<f32>> = Vec::new();
-        let mut rpn: Vec<Rpn> = Vec::new();
-        self.compile(&mut rpn, &mut leaves);
-        let n = self.shape.numel();
-        let mut out = vec![0.0f32; n];
-        let mut stack = vec![0.0f32; rpn.len()];
-        for (i, o) in out.iter_mut().enumerate() {
-            let mut sp = 0usize;
-            for step in &rpn {
-                match step {
-                    Rpn::Leaf(li) => {
-                        let buf = &leaves[*li];
-                        stack[sp] = if buf.len() == 1 { buf[0] } else { buf[i] };
-                        sp += 1;
-                    }
-                    Rpn::Op(op) => {
-                        if ew_arity(op) == Some(1) {
-                            stack[sp - 1] = apply1(op, stack[sp - 1]);
-                        } else {
-                            stack[sp - 2] = apply2(op, stack[sp - 2], stack[sp - 1]);
-                            sp -= 1;
-                        }
-                    }
-                }
-            }
-            *o = stack[0];
-        }
-        Tensor::from_slice(&out, self.shape.clone())
-    }
-
-    fn compile(&self, rpn: &mut Vec<Rpn>, leaves: &mut Vec<Vec<f32>>) {
-        match &self.node {
-            Node::Ew(op, ins) if self.cache.lock().unwrap().is_none() => {
-                for i in ins {
-                    // operands must align element-wise with the output;
-                    // scalars stay scalar, everything else materializes to
-                    // the broadcast shape
-                    if i.shape == self.shape || i.shape.numel() == 1 {
-                        i.compile(rpn, leaves);
-                    } else {
-                        // expand through the eager CPU backend explicitly —
-                        // going through the default (lazy) backend here
-                        // would re-enter this evaluator
-                        let cpu = CpuBackend::shared();
-                        let zeros = cpu.full(&self.shape, 0.0, DType::F32);
-                        let forced = cpu.add(&i.force(), &zeros);
-                        rpn.push(Rpn::Leaf(leaves.len()));
-                        leaves.push(forced.to_vec());
-                    }
-                }
-                rpn.push(Rpn::Op(op.clone()));
-            }
-            _ => {
-                let forced = self.force();
-                rpn.push(Rpn::Leaf(leaves.len()));
-                leaves.push(forced.to_vec());
-            }
-        }
-    }
 }
 
-enum Rpn {
-    Leaf(usize),
-    Op(Op),
+/// Lowers a pending lazy subgraph into a linear [`TraceProgram`]. The
+/// visited map (keyed by node pointer) wires each shared subgraph to a
+/// single instruction, which is what lets the compiler's CSE/fusion see
+/// diamonds as diamonds. Matmul nodes are recorded so [`LazyTensor::force`]
+/// can memoize their values after execution.
+struct ProgramBuilder<'a> {
+    program: TraceProgram,
+    seen: HashMap<usize, ValueRef>,
+    matmuls: Vec<(&'a LazyTensor, usize)>,
+}
+
+impl<'a> ProgramBuilder<'a> {
+    fn lower(&mut self, t: &'a LazyTensor) -> ValueRef {
+        if let Some(r) = self.seen.get(&t.ptr_key()) {
+            return *r;
+        }
+        // materialized values (leaves and already-forced nodes) enter the
+        // program as constants
+        let materialized: Option<Tensor> = match &t.node {
+            Node::Leaf(v) => Some(v.clone()),
+            _ => t.cache.lock().unwrap().clone(),
+        };
+        let r = match materialized {
+            Some(v) => {
+                let c = ValueRef::Const(self.program.consts.len());
+                self.program.consts.push(v);
+                c
+            }
+            None => match &t.node {
+                Node::Leaf(_) => unreachable!("leaf handled above"),
+                Node::Ew(op, ins) => {
+                    let inputs: Vec<ValueRef> = ins.iter().map(|i| self.lower(i)).collect();
+                    let id = self.program.instrs.len();
+                    self.program.instrs.push(TraceInstr { op: op.clone(), inputs });
+                    ValueRef::Out(id)
+                }
+                Node::Matmul(a, b) => {
+                    let inputs = vec![self.lower(a), self.lower(b)];
+                    let id = self.program.instrs.len();
+                    self.program.instrs.push(TraceInstr { op: Op::Matmul, inputs });
+                    self.matmuls.push((t, id));
+                    ValueRef::Out(id)
+                }
+            },
+        };
+        self.seen.insert(t.ptr_key(), r);
+        r
+    }
 }
 
 /// Public adapter handle for lazy tensors.
@@ -213,21 +237,21 @@ impl TensorAdapter for Handle {
     }
 }
 
-/// Count pending (deferred, unevaluated) ops behind a tensor handle; 0 for
-/// eager tensors. Used by tests and the Figure-2 bench.
+/// Count distinct pending (deferred, unevaluated) ops behind a tensor
+/// handle; 0 for eager tensors. Used by tests and the Figure-2 bench.
 pub fn pending_ops(t: &Tensor) -> usize {
     t.adapter().as_any().downcast_ref::<Handle>().map(|h| h.0.pending_ops()).unwrap_or(0)
 }
 
-/// The deferral policy, as a one-function [`Interposer`]: fusible f32
-/// element-wise ops and 2-D f32 matmuls queue as graph nodes; everything
-/// else falls through `dispatch` to the eager inner backend (lazy
-/// operands materialize on the way in via `to_host`).
+/// The deferral policy, as a one-function [`Interposer`]: f32 ops in the
+/// compiler's fusion ISA and 2-D f32 matmuls queue as graph nodes;
+/// everything else falls through `dispatch` to the eager inner backend
+/// (lazy operands materialize on the way in via `to_host`).
 pub struct LazyInterposer;
 
 impl LazyInterposer {
     fn defer_ew(&self, op: &Op, inputs: &[&Tensor]) -> Option<Tensor> {
-        if inputs.len() != ew_arity(op)? {
+        if inputs.len() != fusible_arity(op)? {
             return None;
         }
         if inputs.iter().any(|t| t.dtype() != DType::F32) {
@@ -275,7 +299,7 @@ impl Interposer for LazyInterposer {
         inputs: &[&Tensor],
         inner: &dyn TensorBackend,
     ) -> Result<Tensor> {
-        if ew_arity(op).is_some() {
+        if fusible_arity(op).is_some() {
             if let Some(t) = self.defer_ew(op, inputs) {
                 return Ok(t);
             }
@@ -372,6 +396,28 @@ mod tests {
     }
 
     #[test]
+    fn pending_ops_stays_linear_on_diamond_heavy_graphs() {
+        // regression: the old recursive count revisited shared subgraphs,
+        // doubling per layer — 2^40 walks on this graph. The visited-set
+        // walk counts each distinct op once and returns immediately.
+        // (explicit dispatch on the lazy backend, so concurrent tests
+        // swapping the process-global default cannot perturb the counts)
+        let be = LazyBackend::shared();
+        let mut x = be.from_host(HostBuffer::F32(vec![1.0, 2.0]), [2].into());
+        let depth = 40;
+        for _ in 0..depth {
+            x = be.add(&x, &x); // both operands share one node: a diamond per layer
+        }
+        assert_eq!(pending_ops(&x), depth);
+        // the fused evaluator shares subgraphs too: each lane is
+        // value * 2^40 exactly (f32 scaling by a power of two is exact)
+        let v = x.to_vec();
+        let expect = (2f32).powi(depth as i32);
+        assert_eq!(v, vec![expect, 2.0 * expect]);
+        assert_eq!(pending_ops(&x), 0);
+    }
+
+    #[test]
     fn graph_nodes_are_shared_ops() {
         // the deferral predicate and the dispatch surface speak the same
         // IR: a deferred tensor dispatched through the public choke point
@@ -381,5 +427,42 @@ mod tests {
         let deferred = lazy.dispatch(&Op::Sqrt, &[&a]).unwrap();
         assert_eq!(pending_ops(&deferred), 1);
         assert_eq!(deferred.to_vec(), vec![1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn shared_matmul_memoizes_across_materializations() {
+        // m feeds two separately-materialized roots: the first
+        // materialization must write m's cache so the second reuses it
+        let be = LazyBackend::shared();
+        let a = be.from_host(HostBuffer::F32(vec![1.0, 2.0, 3.0, 4.0]), [2, 2].into());
+        let m = be.matmul(&a, &a);
+        let y1 = be.tanh(&m);
+        let y2 = be.neg(&m);
+        assert_eq!(pending_ops(&m), 1);
+        let _ = y1.to_vec();
+        assert_eq!(pending_ops(&m), 0, "sibling materialization must memoize the shared matmul");
+        assert_eq!(y2.to_vec(), vec![-7.0, -10.0, -15.0, -22.0]);
+    }
+
+    #[test]
+    fn materialization_goes_through_the_compiler() {
+        // a diamond of ew ops over a matmul: the compiled program must
+        // agree with the eager CPU result, bit for bit
+        let av: Vec<f32> = (0..16).map(|i| 0.2 * i as f32 - 1.5).collect();
+        let got = {
+            let be = LazyBackend::shared();
+            let a = be.from_host(HostBuffer::F32(av.clone()), [4, 4].into());
+            let m = be.matmul(&a, &a); // deferred
+            let e = be.tanh(&m); // shared
+            be.add(&be.mul(&e, &e), &m).to_vec()
+        };
+        let eager = {
+            let cpu = CpuBackend::shared();
+            let a = cpu.from_host(HostBuffer::F32(av.clone()), [4, 4].into());
+            let m = cpu.matmul(&a, &a);
+            let e = cpu.tanh(&m);
+            cpu.add(&cpu.mul(&e, &e), &m).to_vec()
+        };
+        assert_eq!(got, eager, "lazy pipeline must be bit-identical to eager CPU");
     }
 }

@@ -17,6 +17,7 @@ pub mod adapter;
 pub mod backend;
 pub mod cpu;
 pub mod dtype;
+pub mod graph;
 pub mod host;
 pub mod index;
 pub mod interpose;
@@ -35,12 +36,13 @@ pub use backend::{
     TensorBackend,
 };
 pub use dtype::{DType, Element};
+pub use graph::{trace_and_compile, CompileOptions, CompileReport, CompiledFn, CompiledProgram};
 pub use host::HostBuffer;
 pub use interpose::{InterposedBackend, Interposer};
 pub use op::Op;
 pub use profile::ProfilingBackend;
 pub use shape::Shape;
-pub use trace::{TraceBackend, TraceProgram};
+pub use trace::{TraceBackend, TraceProgram, ValueRef};
 
 use crate::util::error::{Error, Result};
 

@@ -136,6 +136,23 @@ impl Tracer {
         st.regs.clear();
         st.outputs.clear();
     }
+
+    /// Where `t` lives in the captured program — `Out` for a traced
+    /// result, `Const` for an external operand the tracer snapshotted —
+    /// or `None` if the tracer never saw it. Used by
+    /// [`super::graph::trace_and_compile`] to locate roots and parameters.
+    pub fn value_ref_of(&self, t: &Tensor) -> Option<ValueRef> {
+        self.state.lock().unwrap().regs.get(&key(t)).copied()
+    }
+
+    /// The constant-pool slot `t` was snapshotted into, if it entered the
+    /// trace as an external operand.
+    pub fn const_index_of(&self, t: &Tensor) -> Option<usize> {
+        match self.value_ref_of(t) {
+            Some(ValueRef::Const(i)) => Some(i),
+            _ => None,
+        }
+    }
 }
 
 impl Interposer for Tracer {

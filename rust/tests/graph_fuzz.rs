@@ -1,0 +1,455 @@
+//! Differential fuzzing for the graph compiler: hundreds of random `Op`
+//! programs (random shapes, dtypes, shared operands, dead outputs) are
+//! executed twice on the reference CPU backend — once by replaying the
+//! unoptimized trace, once through the full optimization pipeline — and
+//! every requested output must be **bit-identical**.
+//!
+//! Knobs (see docs/ARCHITECTURE.md, "Testing & fuzzing guide"):
+//!
+//! - `GRAPH_FUZZ_CASES`: cases per configuration (default 500 for the
+//!   full pipeline, a fifth of that per single-pass run). CI's `fuzz`
+//!   job raises this.
+//! - `GRAPH_FUZZ_SEED` (decimal or 0x-hex): pins case 0's generation
+//!   seed (later cases derive from it). Every failure panic prints the
+//!   *case* seed; re-running with that value as `GRAPH_FUZZ_SEED` and
+//!   `GRAPH_FUZZ_CASES=1` replays exactly the failing program.
+
+use flashlight::tensor::cpu::CpuBackend;
+use flashlight::tensor::graph::{compile, CompileOptions};
+use flashlight::tensor::trace::{TraceInstr, TraceProgram, ValueRef};
+use flashlight::tensor::{DType, HostBuffer, Op, Tensor};
+use flashlight::testutil::prop;
+use flashlight::util::rng::Rng;
+
+fn env_usize(name: &str, default: usize) -> usize {
+    std::env::var(name).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+/// `GRAPH_FUZZ_SEED`, if set (decimal or 0x-hex). A pinned seed is used
+/// *directly* as case 0's generation seed, so the seed printed by a
+/// failure panic replays that exact program as case 0.
+fn env_seed() -> Option<u64> {
+    match std::env::var("GRAPH_FUZZ_SEED") {
+        Ok(v) => {
+            let v = v.trim();
+            let parsed = match v.strip_prefix("0x") {
+                Some(hex) => u64::from_str_radix(hex, 16).ok(),
+                None => v.parse().ok(),
+            };
+            Some(parsed.unwrap_or_else(|| panic!("unparseable GRAPH_FUZZ_SEED: {v}")))
+        }
+        Err(_) => None,
+    }
+}
+
+/// A value the generator can wire into later ops, with the metadata the
+/// generator tracks to keep programs well-formed.
+#[derive(Clone)]
+struct Value {
+    r: ValueRef,
+    shape: Vec<usize>,
+    dtype: DType,
+}
+
+struct Builder {
+    program: TraceProgram,
+    pool: Vec<Value>,
+}
+
+impl Builder {
+    fn push(&mut self, op: Op, inputs: Vec<ValueRef>, shape: Vec<usize>, dtype: DType) -> Value {
+        let id = self.program.instrs.len();
+        self.program.instrs.push(TraceInstr { op, inputs });
+        let v = Value { r: ValueRef::Out(id), shape, dtype };
+        self.pool.push(v.clone());
+        v
+    }
+
+    fn fresh_f32(&mut self, rng: &mut Rng, shape: Vec<usize>) -> Value {
+        let n: usize = shape.iter().product();
+        let data = prop::random_vec(rng, n, 2.0);
+        self.push(
+            Op::FromHost { host: HostBuffer::F32(data), shape: shape.clone().into() },
+            vec![],
+            shape,
+            DType::F32,
+        )
+    }
+
+    fn pick(&self, rng: &mut Rng) -> Value {
+        self.pool[rng.below(self.pool.len())].clone()
+    }
+
+    /// A pool value or fresh constant that broadcasts against `shape`.
+    fn companion(&mut self, rng: &mut Rng, shape: &[usize]) -> Value {
+        if rng.uniform() < 0.5 {
+            let candidates: Vec<Value> = self
+                .pool
+                .iter()
+                .filter(|v| broadcast(&v.shape, shape).is_some())
+                .cloned()
+                .collect();
+            if !candidates.is_empty() {
+                return candidates[rng.below(candidates.len())].clone();
+            }
+        }
+        let bshape = prop::broadcastable_shape(rng, shape);
+        self.fresh_f32(rng, bshape)
+    }
+}
+
+/// NumPy broadcast of two shapes (None when incompatible).
+fn broadcast(a: &[usize], b: &[usize]) -> Option<Vec<usize>> {
+    let rank = a.len().max(b.len());
+    let mut out = vec![0usize; rank];
+    for i in 0..rank {
+        let x = if i < rank - a.len() { 1 } else { a[i - (rank - a.len())] };
+        let y = if i < rank - b.len() { 1 } else { b[i - (rank - b.len())] };
+        out[i] = if x == y || y == 1 {
+            x
+        } else if x == 1 {
+            y
+        } else {
+            return None;
+        };
+    }
+    Some(out)
+}
+
+fn reduce_shape(shape: &[usize], axes: &[usize], keepdims: bool) -> Vec<usize> {
+    let mut out = Vec::new();
+    for (i, &d) in shape.iter().enumerate() {
+        if axes.contains(&i) {
+            if keepdims {
+                out.push(1);
+            }
+        } else {
+            out.push(d);
+        }
+    }
+    out
+}
+
+/// Generate one random program plus its requested outputs. Random ops
+/// (`rand_uniform`) are included as *dead* values only — they advance the
+/// RNG stream and may not feed observable outputs, so DCE must keep them
+/// without their (run-dependent) values being compared.
+fn gen_program(rng: &mut Rng) -> (TraceProgram, Vec<ValueRef>) {
+    let mut b = Builder { program: TraceProgram::default(), pool: Vec::new() };
+    // seed operands: a couple of FromHost instrs and one pool constant
+    for _ in 0..(2 + rng.below(2)) {
+        let shape = prop::random_shape(rng, 3, 4);
+        b.fresh_f32(rng, shape);
+    }
+    {
+        let shape = prop::random_shape(rng, 2, 4);
+        let n: usize = shape.iter().product();
+        let c = ValueRef::Const(b.program.consts.len());
+        b.program.consts.push(Tensor::from_slice(&prop::random_vec(rng, n, 2.0), shape.clone()));
+        b.pool.push(Value { r: c, shape, dtype: DType::F32 });
+    }
+
+    let steps = 4 + rng.below(12);
+    let mut tainted_rand = false;
+    for _ in 0..steps {
+        match rng.below(12) {
+            // fusible + non-fusible unaries (float ops promote ints to f32)
+            0 | 1 => {
+                let x = b.pick(rng);
+                let ops = [
+                    Op::Neg,
+                    Op::Abs,
+                    Op::Sign,
+                    Op::Exp,
+                    Op::Log,
+                    Op::Tanh,
+                    Op::Sqrt,
+                    Op::Clip { lo: -1.25, hi: 2.5 },
+                    Op::Erf,
+                    Op::Sin,
+                    Op::Cos,
+                    Op::Log1p,
+                    Op::Rsqrt,
+                    Op::Reciprocal,
+                    Op::Floor,
+                    Op::Round,
+                ];
+                let op = ops[rng.below(ops.len())].clone();
+                let dtype = match &op {
+                    Op::Neg | Op::Abs | Op::Sign | Op::Clip { .. } => x.dtype,
+                    _ if x.dtype.is_float() => x.dtype,
+                    _ => DType::F32,
+                };
+                b.push(op, vec![x.r], x.shape.clone(), dtype);
+            }
+            // binary arithmetic with broadcasting + dtype promotion
+            2 | 3 | 4 => {
+                let x = b.pick(rng);
+                let y = b.companion(rng, &x.shape);
+                let shape = broadcast(&x.shape, &y.shape).expect("companion must broadcast");
+                let ops = [
+                    Op::Add,
+                    Op::Sub,
+                    Op::Mul,
+                    Op::Div,
+                    Op::Minimum,
+                    Op::Maximum,
+                    Op::Pow,
+                    Op::Rem,
+                ];
+                let op = ops[rng.below(ops.len())].clone();
+                b.push(op, vec![x.r, y.r], shape, x.dtype.promote(y.dtype));
+            }
+            // comparisons -> Bool values in the pool
+            5 => {
+                let x = b.pick(rng);
+                let y = b.companion(rng, &x.shape);
+                let shape = broadcast(&x.shape, &y.shape).unwrap();
+                let ops = [Op::Eq, Op::Lt, Op::Le, Op::Gt, Op::LogicalAnd, Op::LogicalOr];
+                b.push(ops[rng.below(ops.len())].clone(), vec![x.r, y.r], shape, DType::Bool);
+            }
+            // reductions
+            6 => {
+                let x = b.pick(rng);
+                let rank = x.shape.len();
+                let mut axes: Vec<usize> = (0..rank).filter(|_| rng.uniform() < 0.5).collect();
+                if axes.is_empty() {
+                    axes = (0..rank).collect();
+                }
+                // keep rank >= 1 so every pool value has at least one axis
+                let keepdims = rng.uniform() < 0.5 || axes.len() == rank;
+                let shape = reduce_shape(&x.shape, &axes, keepdims);
+                match rng.below(5) {
+                    0 => b.push(Op::Sum { axes, keepdims }, vec![x.r], shape, x.dtype),
+                    1 => b.push(Op::Prod { axes, keepdims }, vec![x.r], shape, x.dtype),
+                    2 => b.push(Op::MaxReduce { axes, keepdims }, vec![x.r], shape, x.dtype),
+                    3 => b.push(Op::MinReduce { axes, keepdims }, vec![x.r], shape, x.dtype),
+                    _ => b.push(Op::Any { axes, keepdims }, vec![x.r], shape, DType::Bool),
+                };
+            }
+            // argmax / cumsum
+            7 => {
+                let x = b.pick(rng);
+                let axis = rng.below(x.shape.len());
+                if rng.uniform() < 0.5 {
+                    let keepdims = rng.uniform() < 0.5 || x.shape.len() == 1;
+                    let shape = reduce_shape(&x.shape, &[axis], keepdims);
+                    b.push(Op::Argmax { axis, keepdims }, vec![x.r], shape, DType::I64);
+                } else {
+                    b.push(Op::Cumsum { axis }, vec![x.r], x.shape.clone(), x.dtype);
+                }
+            }
+            // data movement
+            8 => {
+                let x = b.pick(rng);
+                let rank = x.shape.len();
+                match rng.below(4) {
+                    0 => {
+                        let n: usize = x.shape.iter().product();
+                        b.push(
+                            Op::Reshape { shape: vec![n].into() },
+                            vec![x.r],
+                            vec![n],
+                            x.dtype,
+                        );
+                    }
+                    1 => {
+                        let perm = rng.permutation(rank);
+                        let shape: Vec<usize> = perm.iter().map(|&p| x.shape[p]).collect();
+                        b.push(Op::Transpose { perm }, vec![x.r], shape, x.dtype);
+                    }
+                    2 => {
+                        let axes: Vec<usize> = (0..rank).filter(|_| rng.uniform() < 0.5).collect();
+                        b.push(Op::Flip { axes }, vec![x.r], x.shape.clone(), x.dtype);
+                    }
+                    _ => {
+                        let starts: Vec<usize> =
+                            x.shape.iter().map(|&d| rng.below(d)).collect();
+                        let ends: Vec<usize> = x
+                            .shape
+                            .iter()
+                            .zip(&starts)
+                            .map(|(&d, &s)| s + 1 + rng.below(d - s))
+                            .collect();
+                        let shape: Vec<usize> =
+                            ends.iter().zip(&starts).map(|(e, s)| e - s).collect();
+                        b.push(Op::Slice { starts, ends }, vec![x.r], shape, x.dtype);
+                    }
+                }
+            }
+            // dtype churn
+            9 => {
+                let x = b.pick(rng);
+                let targets = [DType::F32, DType::F64, DType::I64, DType::I32, DType::Bool];
+                let dtype = targets[rng.below(targets.len())];
+                b.push(Op::Astype { dtype }, vec![x.r], x.shape.clone(), dtype);
+            }
+            // matmul / concat(v, v) — shared operands by construction
+            10 => {
+                if rng.uniform() < 0.5 {
+                    let (m, k, n) = (1 + rng.below(4), 1 + rng.below(4), 1 + rng.below(4));
+                    let lhs = b.fresh_f32(rng, vec![m, k]);
+                    let rhs = b.fresh_f32(rng, vec![k, n]);
+                    b.push(Op::Matmul, vec![lhs.r, rhs.r], vec![m, n], DType::F32);
+                } else {
+                    let x = b.pick(rng);
+                    let axis = rng.below(x.shape.len());
+                    let mut shape = x.shape.clone();
+                    shape[axis] *= 2;
+                    b.push(Op::Concat { axis }, vec![x.r, x.r], shape, x.dtype);
+                }
+            }
+            // select, or a dead effectful op (kept by DCE, never observed)
+            _ => {
+                if rng.uniform() < 0.5 && !tainted_rand {
+                    // dead random op: remove it from the observable pool
+                    let shape = prop::random_shape(rng, 2, 3);
+                    let v = b.push(
+                        Op::RandUniform {
+                            shape: shape.clone().into(),
+                            lo: 0.0,
+                            hi: 1.0,
+                            dtype: DType::F32,
+                        },
+                        vec![],
+                        shape,
+                        DType::F32,
+                    );
+                    let _ = v;
+                    b.pool.pop(); // values drawn from the RNG are never wired up
+                    tainted_rand = true;
+                } else {
+                    let x = b.pick(rng);
+                    let y = b.companion(rng, &x.shape);
+                    let shape = broadcast(&x.shape, &y.shape).unwrap();
+                    let cond =
+                        b.push(Op::Lt, vec![x.r, y.r], shape.clone(), DType::Bool);
+                    let d = x.dtype.promote(y.dtype);
+                    b.push(Op::WhereCond, vec![cond.r, x.r, y.r], shape, d);
+                }
+            }
+        }
+    }
+
+    // request 1-3 distinct observable outputs (everything else is dead)
+    let candidates: Vec<ValueRef> = b
+        .pool
+        .iter()
+        .filter_map(|v| matches!(v.r, ValueRef::Out(_)).then_some(v.r))
+        .collect();
+    let mut outputs: Vec<ValueRef> = Vec::new();
+    for _ in 0..(1 + rng.below(3)) {
+        let pick = candidates[rng.below(candidates.len())];
+        if !outputs.contains(&pick) {
+            outputs.push(pick);
+        }
+    }
+    (b.program, outputs)
+}
+
+/// Bit-level view of a materialized tensor.
+fn bits(t: &Tensor) -> Vec<u64> {
+    match t.to_host() {
+        HostBuffer::F32(v) => v.iter().map(|x| x.to_bits() as u64).collect(),
+        HostBuffer::F64(v) => v.iter().map(|x| x.to_bits()).collect(),
+        HostBuffer::I32(v) => v.iter().map(|&x| x as u32 as u64).collect(),
+        HostBuffer::I64(v) => v.iter().map(|&x| x as u64).collect(),
+        HostBuffer::U8(v, _) => v.iter().map(|&x| x as u64).collect(),
+    }
+}
+
+fn run_config(label: &str, opts: &CompileOptions, cases: usize, master_seed: u64, pinned: bool) {
+    let cpu = CpuBackend::shared();
+    let mut master = Rng::new(master_seed);
+    for case in 0..cases {
+        // a pinned (GRAPH_FUZZ_SEED) value replays itself as case 0; the
+        // rest of the sweep derives from it as usual
+        let case_seed = if pinned && case == 0 { master_seed } else { master.next_u64() };
+        let mut rng = Rng::new(case_seed);
+        let (program, outputs) = gen_program(&mut rng);
+        let ctx = |stage: &str, detail: String| {
+            format!(
+                "graph_fuzz[{label}] case {case} (seed {case_seed:#x}): {stage}: {detail}\n\
+                 ops: {:?}\noutputs: {outputs:?}\n\
+                 reproduce with GRAPH_FUZZ_SEED={case_seed:#x} GRAPH_FUZZ_CASES=1",
+                program.op_names()
+            )
+        };
+        let reference = program
+            .replay_on(cpu.as_ref())
+            .unwrap_or_else(|e| panic!("{}", ctx("reference replay", e.to_string())));
+        let compiled = compile(&program, &outputs, opts)
+            .unwrap_or_else(|e| panic!("{}", ctx("compile", e.to_string())));
+        let got = compiled
+            .run(cpu.as_ref())
+            .unwrap_or_else(|e| panic!("{}", ctx("optimized run", e.to_string())));
+        compiled
+            .plan
+            .check_no_aliasing()
+            .unwrap_or_else(|e| panic!("{}", ctx("memory plan", e)));
+        for (k, r) in outputs.iter().enumerate() {
+            let want = match r {
+                ValueRef::Out(i) => &reference[*i],
+                ValueRef::Const(i) => &program.consts[*i],
+            };
+            assert!(
+                got[k].dims() == want.dims() && got[k].dtype() == want.dtype(),
+                "{}",
+                ctx(
+                    "output metadata",
+                    format!(
+                        "output {k}: got {:?} {}, want {:?} {} (pipeline: {})",
+                        got[k].dims(),
+                        got[k].dtype().name(),
+                        want.dims(),
+                        want.dtype().name(),
+                        compiled.report.summary()
+                    ),
+                )
+            );
+            assert!(
+                bits(&got[k]) == bits(want),
+                "{}",
+                ctx(
+                    "bit mismatch",
+                    format!(
+                        "output {k} differs: got {:?}, want {:?} (pipeline: {})",
+                        got[k].to_vec_f64(),
+                        want.to_vec_f64(),
+                        compiled.report.summary()
+                    ),
+                )
+            );
+        }
+    }
+    println!("graph_fuzz[{label}]: {cases} cases bit-identical (master seed {master_seed:#x})");
+}
+
+/// The headline run: ≥ 500 random programs through the full pipeline.
+#[test]
+fn differential_fuzz_full_pipeline() {
+    let cases = env_usize("GRAPH_FUZZ_CASES", 500);
+    let pinned = env_seed();
+    run_config(
+        "all",
+        &CompileOptions::default(),
+        cases,
+        pinned.unwrap_or(0x5EED_C0DE),
+        pinned.is_some(),
+    );
+}
+
+/// Each pass alone (plus the pass-free lowering) against the same
+/// generator, to localize a failure to a single pass.
+#[test]
+fn differential_fuzz_single_passes() {
+    let pinned = env_seed();
+    let floor = if pinned.is_some() { 1 } else { 20 };
+    let cases = (env_usize("GRAPH_FUZZ_CASES", 500) / 5).max(floor);
+    let seed = pinned.unwrap_or(0xDEAD_BEEF);
+    run_config("none", &CompileOptions::none(), cases, seed, pinned.is_some());
+    run_config("dce", &CompileOptions::only("dce"), cases, seed, pinned.is_some());
+    run_config("fold", &CompileOptions::only("fold"), cases, seed, pinned.is_some());
+    run_config("cse", &CompileOptions::only("cse"), cases, seed, pinned.is_some());
+    run_config("fuse", &CompileOptions::only("fuse"), cases, seed, pinned.is_some());
+}

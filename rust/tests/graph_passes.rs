@@ -1,0 +1,370 @@
+//! Pass-level tests for the graph compiler: each optimization is pinned
+//! down individually with snapshot-style assertions on the compiled
+//! instruction stream, and the memory plan is validated both structurally
+//! (no aliasing of live values) and under instrumented execution.
+
+use flashlight::memory::telemetry::replay;
+use flashlight::memory::DefaultMemoryManager;
+use flashlight::tensor::cpu::CpuBackend;
+use flashlight::tensor::graph::{compile, CompileOptions, CompiledInstr};
+use flashlight::tensor::trace::{TraceInstr, TraceProgram, ValueRef};
+use flashlight::tensor::{DType, HostBuffer, Op, Shape};
+
+fn fh(data: &[f32], shape: &[usize]) -> Op {
+    Op::FromHost { host: HostBuffer::F32(data.to_vec()), shape: Shape::new(shape.to_vec()) }
+}
+
+fn prog(instrs: Vec<(Op, Vec<ValueRef>)>) -> TraceProgram {
+    TraceProgram {
+        consts: Vec::new(),
+        instrs: instrs.into_iter().map(|(op, inputs)| TraceInstr { op, inputs }).collect(),
+    }
+}
+
+fn o(i: usize) -> ValueRef {
+    ValueRef::Out(i)
+}
+
+/// Optimized outputs must equal the reference replay (plain equality is
+/// enough here; the fuzzer covers bit-identity at scale).
+fn assert_matches_reference(p: &TraceProgram, outputs: &[ValueRef], opts: &CompileOptions) {
+    let cpu = CpuBackend::shared();
+    let reference = p.replay_on(cpu.as_ref()).unwrap();
+    let compiled = compile(p, outputs, opts).unwrap();
+    let got = compiled.run(cpu.as_ref()).unwrap();
+    for (k, r) in outputs.iter().enumerate() {
+        let want = match r {
+            ValueRef::Out(i) => &reference[*i],
+            ValueRef::Const(i) => &p.consts[*i],
+        };
+        assert_eq!(got[k].dims(), want.dims(), "output {k} shape");
+        assert_eq!(got[k].to_vec(), want.to_vec(), "output {k} value");
+    }
+}
+
+// ---- dead-code elimination --------------------------------------------
+
+#[test]
+fn dce_removes_exactly_the_dead_ops() {
+    let p = prog(vec![
+        (fh(&[1.0, 2.0], &[2]), vec![]),          // 0: live (feeds 2 and 4)
+        (fh(&[3.0, 4.0], &[2]), vec![]),          // 1: live (feeds 2)
+        (Op::Add, vec![o(0), o(1)]),              // 2: live (feeds 4)
+        (Op::Mul, vec![o(2), o(2)]),              // 3: dead
+        (Op::Tanh, vec![o(2)]),                   // 4: output
+        (Op::Neg, vec![o(3)]),                    // 5: dead (only feeds off dead 3)
+    ]);
+    let compiled = compile(&p, &[o(4)], &CompileOptions::only("dce")).unwrap();
+    assert_eq!(compiled.op_names(), vec!["from_host", "from_host", "add", "tanh"]);
+    assert_eq!(compiled.report.changed_by("dce"), 2);
+    assert_matches_reference(&p, &[o(4)], &CompileOptions::only("dce"));
+}
+
+#[test]
+fn dce_keeps_effectful_ops_and_their_operands() {
+    let p = prog(vec![
+        (fh(&[1.0], &[1]), vec![]), // 0: only feeds the dead call_ext
+        (
+            Op::RandUniform {
+                shape: Shape::new(vec![2]),
+                lo: 0.0,
+                hi: 1.0,
+                dtype: DType::F32,
+            },
+            vec![],
+        ), // 1: dead but effectful (advances the RNG stream)
+        (Op::CallExt { name: "nonexistent".into() }, vec![o(0)]), // 2: dead but effectful
+        (fh(&[5.0], &[1]), vec![]), // 3: output
+    ]);
+    let g_opts = CompileOptions::only("dce");
+    let compiled = compile(&p, &[o(3)], &g_opts).unwrap();
+    // rand_uniform, call_ext, and call_ext's operand all survive
+    assert_eq!(
+        compiled.op_names(),
+        vec!["from_host", "rand_uniform", "call_ext", "from_host"]
+    );
+}
+
+// ---- constant folding --------------------------------------------------
+
+#[test]
+fn fold_leaves_no_all_constant_ops() {
+    let p = prog(vec![
+        (fh(&[4.0, 9.0], &[2]), vec![]),  // 0
+        (Op::Sqrt, vec![o(0)]),           // 1: foldable
+        (Op::Neg, vec![o(1)]),            // 2: foldable (cascade)
+        (
+            Op::RandUniform {
+                shape: Shape::new(vec![2]),
+                lo: 0.0,
+                hi: 1.0,
+                dtype: DType::F32,
+            },
+            vec![],
+        ), // 3: never folded
+        (Op::Add, vec![o(2), o(3)]),      // 4: operand 3 is runtime -> not folded
+    ]);
+    let opts =
+        CompileOptions { dce: false, fold: true, cse: false, fuse: false, ..Default::default() };
+    let compiled = compile(&p, &[o(4)], &opts).unwrap();
+    // everything deterministic-and-constant folded away; no remaining
+    // instruction has all-constant inputs
+    assert_eq!(compiled.op_names(), vec!["rand_uniform", "add"]);
+    for instr in &compiled.instrs {
+        if let CompiledInstr::Op { op, inputs } = instr {
+            let all_const = !inputs.is_empty()
+                && inputs.iter().all(|r| matches!(r, ValueRef::Const(_)));
+            assert!(
+                !all_const || matches!(op, Op::CallExt { .. }),
+                "unfolded all-constant op {}",
+                op.name()
+            );
+        }
+    }
+    assert_eq!(compiled.report.changed_by("fold"), 3); // 0, 1, 2
+}
+
+#[test]
+fn fold_respects_the_size_cap() {
+    let p = prog(vec![(
+        Op::Full { shape: Shape::new(vec![1024]), value: 3.0, dtype: DType::F32 },
+        vec![],
+    )]);
+    let small_cap = CompileOptions {
+        dce: false,
+        cse: false,
+        fuse: false,
+        fold_numel_cap: 16,
+        ..Default::default()
+    };
+    let compiled = compile(&p, &[o(0)], &small_cap).unwrap();
+    assert_eq!(compiled.op_names(), vec!["full"], "oversized fold must be skipped");
+    assert_matches_reference(&p, &[o(0)], &small_cap);
+}
+
+// ---- common-subexpression elimination ----------------------------------
+
+#[test]
+fn cse_merges_syntactically_equal_nodes() {
+    let p = prog(vec![
+        (fh(&[1.0, 2.0], &[2]), vec![]), // 0
+        (fh(&[5.0, 6.0], &[2]), vec![]), // 1
+        (Op::Add, vec![o(0), o(1)]),     // 2
+        (Op::Add, vec![o(0), o(1)]),     // 3: duplicate of 2
+        (Op::Tanh, vec![o(2)]),          // 4
+        (Op::Tanh, vec![o(3)]),          // 5: duplicate once 3 merges into 2
+        (Op::Mul, vec![o(4), o(5)]),     // 6
+    ]);
+    let opts = CompileOptions { fold: false, fuse: false, ..Default::default() }; // cse + dce
+    let compiled = compile(&p, &[o(6)], &opts).unwrap();
+    assert_eq!(
+        compiled.op_names(),
+        vec!["from_host", "from_host", "add", "tanh", "mul"]
+    );
+    assert_eq!(compiled.report.changed_by("cse"), 2);
+    assert_matches_reference(&p, &[o(6)], &opts);
+}
+
+#[test]
+fn cse_never_merges_random_ops() {
+    let rand = Op::RandUniform {
+        shape: Shape::new(vec![3]),
+        lo: 0.0,
+        hi: 1.0,
+        dtype: DType::F32,
+    };
+    let p = prog(vec![
+        (rand.clone(), vec![]),      // 0
+        (rand, vec![]),              // 1: syntactically equal, distinct draws
+        (Op::Sub, vec![o(0), o(1)]), // 2
+    ]);
+    let opts = CompileOptions { fold: false, fuse: false, ..Default::default() };
+    let compiled = compile(&p, &[o(2)], &opts).unwrap();
+    assert_eq!(compiled.op_names(), vec!["rand_uniform", "rand_uniform", "sub"]);
+}
+
+// ---- element-wise fusion ------------------------------------------------
+
+#[test]
+fn fusion_collapses_a_chain_into_one_kernel() {
+    let p = prog(vec![
+        (fh(&[1.0, -2.0, 3.0, -4.0], &[4]), vec![]), // 0
+        (fh(&[0.5, 0.5, 0.5, 0.5], &[4]), vec![]),   // 1
+        (Op::Add, vec![o(0), o(1)]),                 // 2
+        (Op::Tanh, vec![o(2)]),                      // 3
+        (Op::Abs, vec![o(3)]),                       // 4
+        (Op::Sqrt, vec![o(4)]),                      // 5
+    ]);
+    let opts = CompileOptions::only("fuse");
+    let compiled = compile(&p, &[o(5)], &opts).unwrap();
+    assert_eq!(compiled.op_names(), vec!["from_host", "from_host", "fused"]);
+    let CompiledInstr::Fused(k) = &compiled.instrs[2] else {
+        panic!("expected a fused kernel")
+    };
+    assert_eq!(k.steps.len(), 4);
+    assert_matches_reference(&p, &[o(5)], &opts);
+}
+
+#[test]
+fn fusion_never_crosses_a_non_elementwise_boundary() {
+    let p = prog(vec![
+        (fh(&[1.0, 2.0, 3.0, 4.0], &[2, 2]), vec![]), // 0
+        (Op::Neg, vec![o(0)]),                        // 1: single ew node -> stays plain
+        (Op::Matmul, vec![o(1), o(1)]),               // 2: boundary
+        (Op::Tanh, vec![o(2)]),                       // 3 ┐ fuse
+        (Op::Exp, vec![o(3)]),                        // 4 ┘
+        (Op::Sum { axes: vec![0, 1], keepdims: false }, vec![o(4)]), // 5: boundary
+    ]);
+    let opts = CompileOptions::only("fuse");
+    let compiled = compile(&p, &[o(5)], &opts).unwrap();
+    assert_eq!(
+        compiled.op_names(),
+        vec!["from_host", "neg", "matmul", "fused", "sum"]
+    );
+    let CompiledInstr::Fused(k) = &compiled.instrs[3] else {
+        panic!("expected a fused kernel")
+    };
+    assert!(k.steps.iter().all(|s| matches!(s.op, Op::Tanh | Op::Exp)));
+    assert_matches_reference(&p, &[o(5)], &opts);
+}
+
+#[test]
+fn fusion_shares_diamond_subgraphs_inside_one_kernel() {
+    // e = exp(x); out = (e + c) * (e - c): the old lazy tree walk would
+    // duplicate e; the kernel must contain it exactly once
+    let p = prog(vec![
+        (fh(&[0.1, 0.2, 0.3], &[3]), vec![]), // 0
+        (fh(&[1.0, 1.0, 1.0], &[3]), vec![]), // 1
+        (Op::Exp, vec![o(0)]),                // 2: shared
+        (Op::Add, vec![o(2), o(1)]),          // 3
+        (Op::Sub, vec![o(2), o(1)]),          // 4
+        (Op::Mul, vec![o(3), o(4)]),          // 5
+    ]);
+    let opts = CompileOptions::only("fuse");
+    let compiled = compile(&p, &[o(5)], &opts).unwrap();
+    assert_eq!(compiled.op_names(), vec!["from_host", "from_host", "fused"]);
+    let CompiledInstr::Fused(k) = &compiled.instrs[2] else {
+        panic!("expected a fused kernel")
+    };
+    let exps = k.steps.iter().filter(|s| matches!(s.op, Op::Exp)).count();
+    assert_eq!(exps, 1, "shared subgraph must be a single step");
+    assert_eq!(k.steps.len(), 4);
+    assert_matches_reference(&p, &[o(5)], &opts);
+}
+
+#[test]
+fn fusion_materializes_values_shared_across_regions() {
+    // e feeds a fused region AND a reduction: it must materialize once as
+    // its own value, not be duplicated into the kernel
+    let p = prog(vec![
+        (fh(&[0.5, 1.5], &[2]), vec![]),                     // 0
+        (Op::Exp, vec![o(0)]),                               // 1: shared across a boundary
+        (Op::Sum { axes: vec![0], keepdims: true }, vec![o(1)]), // 2: non-ew consumer
+        (Op::Add, vec![o(1), o(2)]),                         // 3 ┐ fuse candidates
+        (Op::Tanh, vec![o(3)]),                              // 4 ┘
+    ]);
+    let opts = CompileOptions::only("fuse");
+    let compiled = compile(&p, &[o(4)], &opts).unwrap();
+    assert_eq!(compiled.op_names(), vec!["from_host", "exp", "sum", "fused"]);
+    assert_matches_reference(&p, &[o(4)], &opts);
+}
+
+#[test]
+fn fusion_skips_non_f32_chains() {
+    let p = prog(vec![
+        (Op::Arange { n: 6, dtype: DType::I64 }, vec![]), // 0
+        (Op::Neg, vec![o(0)]),                            // 1: i64 -> no fusion
+        (Op::Abs, vec![o(1)]),                            // 2
+    ]);
+    let opts = CompileOptions::only("fuse");
+    let compiled = compile(&p, &[o(2)], &opts).unwrap();
+    assert_eq!(compiled.op_names(), vec!["arange", "neg", "abs"]);
+    assert_matches_reference(&p, &[o(2)], &opts);
+}
+
+// ---- memory plan ---------------------------------------------------------
+
+/// A chain program long enough for slot reuse to matter.
+fn chain_program() -> TraceProgram {
+    prog(vec![
+        (fh(&[1.0, 2.0, 3.0, 4.0], &[4]), vec![]),
+        (Op::Neg, vec![o(0)]),
+        (Op::Abs, vec![o(1)]),
+        (Op::Exp, vec![o(2)]),
+        (Op::Log, vec![o(3)]),
+        (Op::Tanh, vec![o(4)]),
+        (Op::Sqrt, vec![o(5)]),
+    ])
+}
+
+#[test]
+fn memory_plan_never_aliases_live_values() {
+    // structural check on a plan with real reuse (fusion off so the chain
+    // stays long), plus instrumented execution: outputs must survive the
+    // frees and match the reference
+    let p = chain_program();
+    let opts = CompileOptions::none();
+    let compiled = compile(&p, &[o(3), o(6)], &opts).unwrap();
+    compiled.plan.check_no_aliasing().unwrap();
+    assert!(compiled.plan.num_slots < compiled.len(), "chain must reuse slots");
+    // o(3) is read by instr 4 but is also an output: it must stay pinned
+    assert!(compiled.plan.is_output[3]);
+    assert_matches_reference(&p, &[o(3), o(6)], &opts);
+}
+
+#[test]
+fn executor_reports_planned_vs_naive_peaks() {
+    let p = chain_program();
+    let opts = CompileOptions::none();
+    let compiled = compile(&p, &[o(6)], &opts).unwrap();
+    let cpu = CpuBackend::shared();
+    let (outs, stats) = compiled.run_detailed(cpu.as_ref(), &[]).unwrap();
+    assert_eq!(outs.len(), 1);
+    // 7 instrs x 16 bytes each: naive keeps all alive, the plan keeps at
+    // most two values (producer + consumer) plus nothing pinned early
+    assert_eq!(stats.naive_peak_bytes, 7 * 16);
+    assert!(
+        stats.planned_peak_bytes <= 2 * 16,
+        "planned peak {} exceeds two live chain values",
+        stats.planned_peak_bytes
+    );
+    assert!(stats.buffer_slots < stats.executed_instrs);
+}
+
+#[test]
+fn exec_alloc_events_replay_through_memory_telemetry() {
+    let p = chain_program();
+    let compiled = compile(&p, &[o(6)], &CompileOptions::none()).unwrap();
+    let cpu = CpuBackend::shared();
+    let (_, stats) = compiled.run_detailed(cpu.as_ref(), &[]).unwrap();
+    // the event stream is a well-formed alloc/free trace: replaying it
+    // against a fresh manager frees everything except the pinned output
+    // (replay() releases still-live ids at the end itself)
+    let mgr = DefaultMemoryManager::new();
+    let (mstats, _frag) = replay(&stats.events, &mgr);
+    assert_eq!(mstats.allocated_bytes, 0, "replay must balance allocs and frees");
+    assert_eq!(mstats.alloc_count, 7);
+    // at most two chain values live at once: two 64-byte-aligned blocks
+    assert!(mstats.peak_allocated_bytes <= 2 * 64, "peak {}", mstats.peak_allocated_bytes);
+}
+
+// ---- pipeline composition ------------------------------------------------
+
+#[test]
+fn full_pipeline_reports_every_pass() {
+    let p = prog(vec![
+        (fh(&[1.0, 2.0], &[2]), vec![]),  // 0
+        (Op::Sqrt, vec![o(0)]),           // 1: folds
+        (Op::Neg, vec![o(1)]),            // 2: folds
+        (Op::Neg, vec![o(1)]),            // 3: folds
+        (Op::Mul, vec![o(2), o(3)]),      // 4: folds
+        (Op::Tanh, vec![o(4)]),           // 5: folds
+    ]);
+    let compiled = compile(&p, &[o(5)], &CompileOptions::default()).unwrap();
+    assert!(compiled.is_empty(), "all-constant program must fold away: {:?}", compiled.op_names());
+    let ran: Vec<&str> = compiled.report.passes.iter().map(|r| r.pass).collect();
+    for pass in ["dce", "fold", "cse", "fuse"] {
+        assert!(ran.contains(&pass), "pass {pass} missing from report: {ran:?}");
+    }
+    assert_matches_reference(&p, &[o(5)], &CompileOptions::default());
+}
