@@ -17,44 +17,8 @@ use std::sync::Arc;
 use flashlight::autograd::{ops, Variable};
 use flashlight::memory::{CachingMemoryManager, MemoryManagerAdapter};
 use flashlight::tensor::{Conv2dParams, Tensor};
+use flashlight::testutil::{write_bench_json, BenchRecord as Record};
 use flashlight::util::timing::Samples;
-
-/// One machine-readable measurement row (plus free-form numeric extras,
-/// e.g. per-pass op counts for the graph-compiler rows).
-struct Record {
-    op: String,
-    ns_per_iter: f64,
-    backend: &'static str,
-    extras: Vec<(&'static str, f64)>,
-}
-
-impl Record {
-    fn new(op: impl Into<String>, ns_per_iter: f64, backend: &'static str) -> Record {
-        Record { op: op.into(), ns_per_iter, backend, extras: Vec::new() }
-    }
-}
-
-/// Hand-rolled JSON (the crate is dependency-free; no serde offline).
-fn write_bench_json(records: &[Record]) {
-    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/BENCH_PR3.json");
-    let mut s = String::from("[\n");
-    for (i, r) in records.iter().enumerate() {
-        let mut row = format!(
-            "  {{\"op\": \"{}\", \"ns_per_iter\": {:.1}, \"backend\": \"{}\"",
-            r.op, r.ns_per_iter, r.backend
-        );
-        for (k, v) in &r.extras {
-            row.push_str(&format!(", \"{k}\": {v}"));
-        }
-        row.push_str(&format!("}}{}\n", if i + 1 < records.len() { "," } else { "" }));
-        s.push_str(&row);
-    }
-    s.push_str("]\n");
-    match std::fs::write(path, s) {
-        Ok(()) => println!("\nwrote {} records to {path}", records.len()),
-        Err(e) => eprintln!("\nfailed to write {path}: {e}"),
-    }
-}
 
 fn gemm_bench(n: usize) -> f64 {
     let a = Tensor::rand([n, n], -1.0, 1.0);
@@ -169,7 +133,7 @@ fn main() {
 
     graph_compiler_bench(&mut records);
 
-    write_bench_json(&records);
+    write_bench_json("BENCH_PR3.json", &records);
 }
 
 /// Fused-vs-eager element-wise chain through the graph compiler, with

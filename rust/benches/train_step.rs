@@ -1,0 +1,153 @@
+//! Compiled-vs-eager train-step benchmark (PR 4): one MLP classifier
+//! step — forward + backward + clip + SGD-momentum update — timed as the
+//! eager loop and as the [`flashlight::coordinator::compile_step`]
+//! program, plus the compiler's per-pass op counts and the memory plan's
+//! planned/naive peak bytes with buffer donation on and off.
+//!
+//! Writes machine-readable `BENCH_PR4.json` at the repo root (same row
+//! format as the earlier bench snapshots: `[{"op", "ns_per_iter",
+//! "backend", ...extras}]`).
+//!
+//! Run: `cargo bench --bench train_step`
+
+use std::time::Instant;
+
+use flashlight::autograd::Variable;
+use flashlight::coordinator::trainer::make_optimizer;
+use flashlight::coordinator::{compile_step, BatchSpec, TrainConfig};
+use flashlight::models::mlp;
+use flashlight::nn::{categorical_cross_entropy, Module};
+use flashlight::optim::{clip_grad_norm, Optimizer};
+use flashlight::tensor::{default_backend, Tensor};
+use flashlight::testutil::{write_bench_json, BenchRecord as Record};
+
+fn fixed_batch(b: usize, feat: usize, classes: usize) -> Vec<Tensor> {
+    let xs: Vec<f32> = (0..b * feat).map(|j| ((j * 37 % 19) as f32) * 0.1 - 0.9).collect();
+    let ys: Vec<i64> = (0..b).map(|j| (j % classes) as i64).collect();
+    vec![Tensor::from_slice(&xs, [b, feat]), Tensor::from_slice(&ys, [b])]
+}
+
+fn main() {
+    let (feat, hidden, classes, b) = (64usize, 64usize, 10usize, 32usize);
+    let iters = 60usize;
+    let warmup = 5usize;
+    let cfg = TrainConfig {
+        optimizer: "sgd".into(),
+        lr: 0.01,
+        grad_clip: 1.0,
+        ..Default::default()
+    };
+    let batch = fixed_batch(b, feat, classes);
+    let mut records = Vec::new();
+    println!("train-step benchmark: MLP {feat}->{hidden}->{classes}, batch {b}, {iters} iters");
+
+    // ---- eager loop -----------------------------------------------------
+    let mut model = mlp(&[feat, hidden, classes]);
+    model.set_train(true);
+    let mut opt = make_optimizer(&cfg, model.params()).expect("optimizer");
+    let eager_step = |model: &mut flashlight::nn::Sequential, opt: &mut Box<dyn Optimizer>| {
+        let out = model.forward(&Variable::constant(batch[0].clone()));
+        let loss = categorical_cross_entropy(&out, &batch[1]);
+        loss.backward();
+        clip_grad_norm(opt.params(), cfg.grad_clip);
+        opt.step();
+        opt.zero_grad();
+    };
+    for _ in 0..warmup {
+        eager_step(&mut model, &mut opt);
+    }
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        eager_step(&mut model, &mut opt);
+    }
+    let eager_ns = t0.elapsed().as_nanos() as f64 / iters as f64;
+    let eager_sps = 1e9 / eager_ns;
+    println!("eager:    {:>10.0} ns/step  ({eager_sps:.1} steps/s)", eager_ns);
+    records.push(Record {
+        op: "train_step_eager".into(),
+        ns_per_iter: eager_ns,
+        backend: "cpu",
+        extras: vec![("steps_per_sec", eager_sps)],
+    });
+
+    // ---- compiled step --------------------------------------------------
+    let mut model = mlp(&[feat, hidden, classes]);
+    model.set_train(true);
+    let step = compile_step(&model, &cfg, &BatchSpec::like(&batch)).expect("compile_step");
+    let report = step.report();
+    println!("compile report: {}", report.summary());
+    let traced_ops = report.passes.first().map(|p| p.ops_before).unwrap_or(0);
+    let prog = step.program();
+    let be = default_backend();
+    let mut params: Vec<Tensor> = model.params().iter().map(|p| p.tensor()).collect();
+    let mut state = step.init_state(&params);
+    for _ in 0..warmup {
+        let res = step.run(be.as_ref(), params, state, &batch, true).expect("step");
+        params = res.params;
+        state = res.state;
+    }
+    let t0 = Instant::now();
+    let mut last_stats = None;
+    for _ in 0..iters {
+        let res = step.run(be.as_ref(), params, state, &batch, true).expect("step");
+        params = res.params;
+        state = res.state;
+        last_stats = Some(res.stats);
+    }
+    let compiled_ns = t0.elapsed().as_nanos() as f64 / iters as f64;
+    let compiled_sps = 1e9 / compiled_ns;
+    let stats = last_stats.expect("at least one iteration");
+    println!(
+        "compiled: {:>10.0} ns/step  ({compiled_sps:.1} steps/s)  \
+         [{} instrs / {} primitive ops, traced {traced_ops}]",
+        compiled_ns,
+        prog.len(),
+        prog.primitive_op_count()
+    );
+    records.push(Record {
+        op: "train_step_compiled".into(),
+        ns_per_iter: compiled_ns,
+        backend: "cpu",
+        extras: vec![
+            ("steps_per_sec", compiled_sps),
+            ("traced_ops", traced_ops as f64),
+            ("compiled_instrs", prog.len() as f64),
+            ("compiled_primitive_ops", prog.primitive_op_count() as f64),
+            ("dce_removed", report.changed_by("dce") as f64),
+            ("fold_removed", report.changed_by("fold") as f64),
+            ("cse_merged", report.changed_by("cse") as f64),
+            ("fuse_collapsed", report.changed_by("fuse") as f64),
+            ("executed_ops", stats.executed_ops as f64),
+        ],
+    });
+
+    // ---- memory plan: donation on vs off --------------------------------
+    let ps = |src: &[Tensor]| -> Vec<Tensor> { src.iter().map(|p| p.copy()).collect() };
+    let run_mem = |donate: bool| {
+        let p = ps(&params);
+        let st = step.init_state(&p);
+        step.run(be.as_ref(), p, st, &batch, donate).expect("step").stats
+    };
+    let kept = run_mem(false);
+    let donated = run_mem(true);
+    println!(
+        "memory:   planned peak {} B (donating) vs {} B (keeping inputs), naive {} B, \
+         donated {} B/step",
+        donated.planned_peak_bytes, kept.planned_peak_bytes, kept.naive_peak_bytes,
+        donated.donated_bytes
+    );
+    records.push(Record {
+        op: "train_step_memplan".into(),
+        ns_per_iter: 0.0,
+        backend: "cpu",
+        extras: vec![
+            ("planned_peak_bytes_donate", donated.planned_peak_bytes as f64),
+            ("planned_peak_bytes_keep", kept.planned_peak_bytes as f64),
+            ("naive_peak_bytes", kept.naive_peak_bytes as f64),
+            ("donated_bytes_per_step", donated.donated_bytes as f64),
+            ("buffer_slots", donated.buffer_slots as f64),
+        ],
+    });
+
+    write_bench_json("BENCH_PR4.json", &records);
+}

@@ -229,8 +229,44 @@ impl Variable {
         self.backward_seeded(seed, opts)
     }
 
-    /// Backward with an explicit seed gradient.
+    /// Backward with an explicit seed gradient, accumulating into each
+    /// parameter's gradient slot (the classic mutating tape sweep).
     pub fn backward_seeded(&self, seed: Tensor, opts: &BackwardOpts) -> BackwardStats {
+        self.backward_sink(seed, opts, &mut |v, g| v.add_grad(g))
+    }
+
+    /// Backward with the gradients returned as *values* instead of written
+    /// into the `Mutex` slots: a pure map from variable id to gradient.
+    ///
+    /// This is the trace-transparent face of the tape: every gradient op
+    /// still flows through the installed backend's `dispatch`, but the
+    /// results are explicit outputs, so a capturing backend (or
+    /// [`crate::coordinator::compile_step`]) can wire them into a compiled
+    /// program rather than chasing side effects. The arithmetic is
+    /// bit-identical to [`Variable::backward_seeded`] — both run the same
+    /// sweep; only the destination of each finished gradient differs.
+    pub fn backward_collect(
+        &self,
+        seed: Tensor,
+        opts: &BackwardOpts,
+    ) -> (HashMap<u64, Tensor>, BackwardStats) {
+        let mut out: HashMap<u64, Tensor> = HashMap::new();
+        let stats = self.backward_sink(seed, opts, &mut |v, g| {
+            out.insert(v.id(), g.clone());
+        });
+        (out, stats)
+    }
+
+    /// The shared sweep behind [`Variable::backward_seeded`] and
+    /// [`Variable::backward_collect`]: `sink` receives each
+    /// requires-grad variable exactly once with its fully-accumulated
+    /// gradient, in reverse-topological visit order.
+    fn backward_sink(
+        &self,
+        seed: Tensor,
+        opts: &BackwardOpts,
+        sink: &mut dyn FnMut(&Variable, &Tensor),
+    ) -> BackwardStats {
         let mut stats = BackwardStats::default();
         // iterative DFS topological order over tape nodes
         let order = self.topo_order();
@@ -240,7 +276,7 @@ impl Variable {
         for v in order.iter().rev() {
             let Some(g) = grads.remove(&v.id()) else { continue };
             if v.inner.requires_grad {
-                v.add_grad(&g);
+                sink(v, &g);
             }
             let node_guard = v.inner.graph.lock().unwrap();
             let Some(node) = node_guard.as_ref() else { continue };
@@ -403,6 +439,21 @@ mod tests {
         }
         y.backward();
         assert_eq!(x.grad().unwrap().item(), 1.0);
+    }
+
+    #[test]
+    fn backward_collect_is_pure_and_matches_seeded() {
+        let x = Variable::param(Tensor::from_slice(&[2.0f32], [1]));
+        let y = ops::mul(&x, &x);
+        let opts = BackwardOpts { retain_graph: true, ..Default::default() };
+        let (grads, stats) = y.backward_collect(Tensor::ones([1]), &opts);
+        // pure: the gradient arrives as a value, the slot stays empty
+        assert!(x.grad().is_none());
+        assert_eq!(grads[&x.id()].item(), 4.0);
+        assert!(stats.grads_computed >= 1);
+        // the mutating sweep over the retained graph agrees
+        y.backward_with(&BackwardOpts::default());
+        assert_eq!(x.grad().unwrap().item(), 4.0);
     }
 
     #[test]

@@ -31,6 +31,12 @@ pub struct TrainConfig {
     pub checkpoint: String,
     /// Tensor backend: "cpu" | "lazy" | "xla".
     pub backend: String,
+    /// Trace forward + backward + optimizer update into one compiled
+    /// program and run training through it (see
+    /// [`crate::coordinator::compile_step`]).
+    pub compile_step: bool,
+    /// Maximum number of batches the classifier eval pass visits.
+    pub eval_batches: usize,
 }
 
 impl Default for TrainConfig {
@@ -47,6 +53,8 @@ impl Default for TrainConfig {
             log_every: 10,
             checkpoint: String::new(),
             backend: "cpu".into(),
+            compile_step: false,
+            eval_batches: 16,
         }
     }
 }
@@ -90,6 +98,12 @@ impl TrainConfig {
         }
         if let Some(v) = get_str("train", "backend") {
             c.backend = v;
+        }
+        if let Some(v) = doc.get("train", "compile_step").and_then(|v| v.as_bool()) {
+            c.compile_step = v;
+        }
+        if let Some(v) = doc.get("train", "eval_batches").and_then(|v| v.as_int()) {
+            c.eval_batches = (v as usize).max(1);
         }
         c.validate()?;
         Ok(c)
@@ -141,6 +155,8 @@ mod tests {
             batch_size = 4
             workers = 2
             backend = "lazy"
+            compile_step = true
+            eval_batches = 4
             "#,
         )
         .unwrap();
@@ -151,6 +167,8 @@ mod tests {
         assert_eq!(c.steps, 50);
         assert_eq!(c.workers, 2);
         assert_eq!(c.backend, "lazy");
+        assert!(c.compile_step);
+        assert_eq!(c.eval_batches, 4);
     }
 
     #[test]

@@ -5,8 +5,12 @@
 
 pub mod checkpoint;
 pub mod config;
+pub mod step;
 pub mod trainer;
 
 pub use checkpoint::{load_params, save_params};
 pub use config::TrainConfig;
+pub use step::{
+    compile_step, compile_step_fn, BatchSpec, CompiledTrainStep, StepResult, TrainStepState,
+};
 pub use trainer::{train_classifier, train_data_parallel, train_lm, TrainReport};

@@ -1,0 +1,630 @@
+//! Compiled training steps: forward + backward + gradient clipping +
+//! optimizer update captured as **one** traceable Op program and run
+//! through the graph compiler (the paper's JIT case study compiles whole
+//! train iterations, not just inference graphs).
+//!
+//! [`compile_step`] traces a complete training step through the
+//! [`crate::tensor::TraceBackend`]: the model forward pass, the loss, the
+//! autograd sweep ([`crate::autograd::Variable::backward_collect`] exposes
+//! gradients as values, so the tape is trace-transparent), branch-free
+//! gradient clipping ([`crate::optim::clip_grads`]), and the pure
+//! optimizer core ([`crate::optim::UpdateRule`]). The captured program is
+//! compiled through the full pass pipeline (DCE / constant folding / CSE /
+//! element-wise fusion / memory planning) into a [`CompiledTrainStep`]
+//! mapping `(params, opt_state, batch) -> (params', opt_state', loss)`.
+//!
+//! Three programs come out of the trace:
+//!
+//! - **full** — the whole step; the single-process fast path.
+//! - **backward** — same trace, outputs cut at the gradients (the update
+//!   arithmetic is dead code and DCE removes it); used by data-parallel
+//!   replicas so the [`crate::dist::GradientSynchronizer`] bucketed
+//!   all-reduce can run *between* the traced backward and the traced
+//!   update.
+//! - **update** — a separate trace of the optimizer core alone, with
+//!   gradients as substitutable inputs.
+//!
+//! Correctness contract: with the same RNG stream, a compiled step is
+//! **bit-identical** to the eager loop — the eager optimizers and
+//! `clip_grad_norm` now execute the very same tensor formulas, every
+//! compiler pass is bit-preserving on the reference CPU backend (PR 3's
+//! fuzzed contract), and `Op::RandUniform`/`Op::RandNormal` are effectful
+//! ops the passes keep in order, so dropout masks replay identically.
+//! `rust/tests/train_step_compiled.rs` pins this down over multi-step
+//! parameter trajectories, single-process and world=2.
+//!
+//! What is *not* capturable: host-side control flow on tensor values
+//! (early stopping on the loss), modules that mutate internal buffers
+//! during forward (BatchNorm running statistics update eagerly at trace
+//! time but are not re-traced per step), and shape-dependent behavior —
+//! batch shapes are specialized at trace time, so every step must be fed
+//! batches of the traced shape.
+
+use std::sync::Mutex;
+
+use crate::autograd::{BackwardOpts, Variable};
+use crate::nn::{categorical_cross_entropy, Module};
+use crate::optim::{clip_grads, UpdateRule};
+use crate::tensor::graph::{compile, CompileOptions, CompileReport, CompiledProgram, ExecStats};
+use crate::tensor::{
+    default_backend, BackendGuard, DType, Shape, Tensor, TensorBackend, TraceBackend, ValueRef,
+};
+use crate::util::error::{Error, Result};
+
+use super::config::TrainConfig;
+
+/// Process-wide trace serialization. [`BackendGuard::install`] swaps the
+/// *global* default backend, so two concurrent captures would record each
+/// other's operations (and mis-restore on drop). Every `compile_step`
+/// holds this lock for the duration of its captures; callers running
+/// other threads that do tensor work must still quiesce them around
+/// compilation (the data-parallel trainer brackets compilation with ring
+/// barriers for exactly this reason).
+static TRACE_LOCK: Mutex<()> = Mutex::new(());
+
+/// Shapes and dtypes of the batch columns a compiled step consumes each
+/// iteration (values are substituted per call; shapes are specialized at
+/// trace time). Classifier steps use two columns `(input, target)`; LM
+/// steps use one (the token window).
+#[derive(Debug, Clone)]
+pub struct BatchSpec {
+    /// One `(dims, dtype)` entry per batch column.
+    pub columns: Vec<(Vec<usize>, DType)>,
+}
+
+impl BatchSpec {
+    /// The spec describing an example batch.
+    pub fn like(batch: &[Tensor]) -> BatchSpec {
+        BatchSpec {
+            columns: batch.iter().map(|t| (t.dims().to_vec(), t.dtype())).collect(),
+        }
+    }
+
+    /// Materialize zero-valued example tensors for tracing.
+    fn examples(&self) -> Vec<Tensor> {
+        self.columns.iter().map(|(dims, dt)| Tensor::full(dims.clone(), 0.0, *dt)).collect()
+    }
+}
+
+/// The optimizer state a compiled step threads from one iteration to the
+/// next, as plain tensors (no `Mutex` slots, no host-side counters).
+#[derive(Clone)]
+pub struct TrainStepState {
+    /// Per-parameter state tensors ([`UpdateRule::state_slots`] each).
+    pub per_param: Vec<Vec<Tensor>>,
+    /// Scalar f32 step counter (Adam-family bias correction), if used.
+    pub t: Option<Tensor>,
+}
+
+/// One executed compiled step: the next parameters and optimizer state,
+/// the scalar loss, and the executor's memory/op statistics.
+pub struct StepResult {
+    /// Updated parameters, in registration order.
+    pub params: Vec<Tensor>,
+    /// Updated optimizer state.
+    pub state: TrainStepState,
+    /// The step's loss value.
+    pub loss: f64,
+    /// Op counts and planned/naive peak bytes for this execution.
+    pub stats: ExecStats,
+}
+
+/// Where each runtime input of one compiled program lives in its constant
+/// pool (`None`: the traced computation never read that input).
+struct SlotMap {
+    params: Vec<Option<usize>>,
+    state: Vec<Vec<Option<usize>>>,
+    t: Option<usize>,
+    batch: Vec<Option<usize>>,
+    grads: Vec<Option<usize>>,
+}
+
+/// A traced-and-compiled training step; see the module docs. Build with
+/// [`compile_step`] (module + cross-entropy) or [`compile_step_fn`]
+/// (arbitrary loss).
+pub struct CompiledTrainStep {
+    rule: UpdateRule,
+    full: CompiledProgram,
+    bwd: CompiledProgram,
+    upd: CompiledProgram,
+    full_slots: SlotMap,
+    upd_slots: SlotMap,
+    n_params: usize,
+    param_meta: Vec<(Shape, DType)>,
+    batch_meta: Vec<(Shape, DType)>,
+}
+
+/// Trace and compile one training step of `model` under `cfg`
+/// (optimizer, learning rate, gradient clipping): cross-entropy loss of
+/// `model.forward(input)` against integer targets, exactly the arithmetic
+/// of [`super::trainer::train_classifier`]'s eager loop.
+///
+/// Tracing runs the model forward once (consuming one step's RNG draws
+/// and any eager buffer updates); reseed afterwards if the subsequent run
+/// must align with a reference stream.
+pub fn compile_step(
+    model: &dyn Module,
+    cfg: &TrainConfig,
+    spec: &BatchSpec,
+) -> Result<CompiledTrainStep> {
+    if spec.columns.len() != 2 {
+        return Err(Error::Config(format!(
+            "compile_step expects (input, target) batch columns, got {}",
+            spec.columns.len()
+        )));
+    }
+    let examples = spec.examples();
+    let params = model.params();
+    compile_step_fn(&params, cfg, &examples, |batch| {
+        let out = model.forward(&Variable::constant(batch[0].clone()));
+        categorical_cross_entropy(&out, &batch[1])
+    })
+}
+
+/// Generalized entry: trace `loss_fn` (forward + loss over the batch
+/// columns) plus backward, clipping, and the optimizer update for
+/// `params` into a [`CompiledTrainStep`]. `batch_examples` fix the batch
+/// shapes/dtypes; their values are not baked in.
+pub fn compile_step_fn(
+    params: &[Variable],
+    cfg: &TrainConfig,
+    batch_examples: &[Tensor],
+    loss_fn: impl FnOnce(&[Tensor]) -> Variable,
+) -> Result<CompiledTrainStep> {
+    let rule = UpdateRule::from_config(&cfg.optimizer, cfg.lr)?;
+    let n = params.len();
+    if n == 0 {
+        return Err(Error::Config("compile_step: model has no parameters".into()));
+    }
+    // one open capture at a time, process-wide (see TRACE_LOCK); taken
+    // before the state/proto allocations so they cannot leak into another
+    // thread's open capture either
+    let _trace_lock = TRACE_LOCK.lock().unwrap_or_else(|p| p.into_inner());
+
+    // pre-trace allocations on the *untraced* backend: these enter the
+    // trace as external constants, i.e. substitutable per-step inputs
+    let param_tensors: Vec<Tensor> = params.iter().map(|p| p.tensor()).collect();
+    let state0: Vec<Vec<Tensor>> = param_tensors.iter().map(|p| rule.init_state(p)).collect();
+    let t0 = rule.uses_step_count().then(|| Tensor::full([], 0.0, DType::F32));
+    let grad_protos: Vec<Tensor> = param_tensors
+        .iter()
+        .map(|p| Tensor::full(p.dims().to_vec(), 0.0, p.dtype()))
+        .collect();
+
+    // ---- trace 1: forward + backward + clip + update --------------------
+    let tb = TraceBackend::over(default_backend());
+    let (trace_prog, full_slots, full_outputs, bwd_outputs) = {
+        let _guard = BackendGuard::install(tb.clone());
+        let loss = loss_fn(batch_examples);
+        // the same seeding backward_with() performs
+        let seed = Tensor::ones(loss.tensor().dims().to_vec());
+        let (gradmap, _) = loss.backward_collect(seed, &BackwardOpts::default());
+        let raw_grads: Vec<Tensor> = params
+            .iter()
+            .map(|p| {
+                gradmap.get(&p.id()).cloned().ok_or_else(|| {
+                    Error::Config(
+                        "compile_step: a parameter received no gradient; every parameter \
+                         must participate in the loss (or be excluded from the step)"
+                            .into(),
+                    )
+                })
+            })
+            .collect::<Result<_>>()?;
+        let grads = if cfg.grad_clip > 0.0 {
+            clip_grads(&raw_grads, cfg.grad_clip).0
+        } else {
+            raw_grads.clone()
+        };
+        let t1 = t0.as_ref().map(|t| t.add_scalar(1.0));
+        let mut new_params = Vec::with_capacity(n);
+        let mut new_state = Vec::with_capacity(n);
+        for i in 0..n {
+            let (p2, s2) = rule.apply(&param_tensors[i], &grads[i], &state0[i], t1.as_ref());
+            new_params.push(p2);
+            new_state.push(s2);
+        }
+
+        let tracer = tb.interposer();
+        let out_ref = |t: &Tensor, what: &str| -> Result<ValueRef> {
+            tracer.value_ref_of(t).ok_or_else(|| {
+                Error::Config(format!("compile_step: {what} was not produced by the trace"))
+            })
+        };
+        let loss_ref = out_ref(&loss.tensor(), "the loss")?;
+        let mut full_outputs: Vec<ValueRef> = Vec::with_capacity(n * (1 + rule.state_slots()) + 2);
+        for (i, p2) in new_params.iter().enumerate() {
+            full_outputs.push(out_ref(p2, &format!("updated parameter {i}"))?);
+        }
+        for (i, s2) in new_state.iter().enumerate() {
+            for s in s2 {
+                full_outputs.push(out_ref(s, &format!("updated state of parameter {i}"))?);
+            }
+        }
+        if let Some(t1) = &t1 {
+            full_outputs.push(out_ref(t1, "the step counter")?);
+        }
+        full_outputs.push(loss_ref);
+        let mut bwd_outputs: Vec<ValueRef> = Vec::with_capacity(n + 1);
+        for (i, g) in raw_grads.iter().enumerate() {
+            bwd_outputs.push(out_ref(g, &format!("gradient of parameter {i}"))?);
+        }
+        bwd_outputs.push(loss_ref);
+
+        let slots = SlotMap {
+            params: param_tensors.iter().map(|p| tracer.const_index_of(p)).collect(),
+            state: state0
+                .iter()
+                .map(|sv| sv.iter().map(|s| tracer.const_index_of(s)).collect())
+                .collect(),
+            t: t0.as_ref().and_then(|t| tracer.const_index_of(t)),
+            batch: batch_examples.iter().map(|b| tracer.const_index_of(b)).collect(),
+            grads: Vec::new(),
+        };
+        (tracer.program(), slots, full_outputs, bwd_outputs)
+    };
+
+    let frozen = full_slots.frozen();
+    let opts = CompileOptions { frozen_consts: frozen, ..Default::default() };
+    let full = compile(&trace_prog, &full_outputs, &opts)?;
+    let bwd = compile(&trace_prog, &bwd_outputs, &opts)?;
+
+    // ---- trace 2: the optimizer update alone (data-parallel split) ------
+    let tb2 = TraceBackend::over(default_backend());
+    let (upd_prog, upd_slots, upd_outputs) = {
+        let _guard = BackendGuard::install(tb2.clone());
+        let t1 = t0.as_ref().map(|t| t.add_scalar(1.0));
+        let mut outs: Vec<Tensor> = Vec::new();
+        let mut state_outs: Vec<Tensor> = Vec::new();
+        for i in 0..n {
+            let (p2, s2) = rule.apply(&param_tensors[i], &grad_protos[i], &state0[i], t1.as_ref());
+            outs.push(p2);
+            state_outs.extend(s2);
+        }
+        let tracer = tb2.interposer();
+        let out_ref = |t: &Tensor, what: &str| -> Result<ValueRef> {
+            tracer.value_ref_of(t).ok_or_else(|| {
+                Error::Config(format!("compile_step: {what} was not produced by the trace"))
+            })
+        };
+        let mut upd_outputs = Vec::with_capacity(outs.len() + state_outs.len() + 1);
+        for (i, p2) in outs.iter().enumerate() {
+            upd_outputs.push(out_ref(p2, &format!("updated parameter {i}"))?);
+        }
+        for s in &state_outs {
+            upd_outputs.push(out_ref(s, "updated optimizer state")?);
+        }
+        if let Some(t1) = &t1 {
+            upd_outputs.push(out_ref(t1, "the step counter")?);
+        }
+        let slots = SlotMap {
+            params: param_tensors.iter().map(|p| tracer.const_index_of(p)).collect(),
+            state: state0
+                .iter()
+                .map(|sv| sv.iter().map(|s| tracer.const_index_of(s)).collect())
+                .collect(),
+            t: t0.as_ref().and_then(|t| tracer.const_index_of(t)),
+            batch: Vec::new(),
+            grads: grad_protos.iter().map(|g| tracer.const_index_of(g)).collect(),
+        };
+        (tracer.program(), slots, upd_outputs)
+    };
+    let upd_opts = CompileOptions { frozen_consts: upd_slots.frozen(), ..Default::default() };
+    let upd = compile(&upd_prog, &upd_outputs, &upd_opts)?;
+
+    Ok(CompiledTrainStep {
+        rule,
+        full,
+        bwd,
+        upd,
+        full_slots,
+        upd_slots,
+        n_params: n,
+        param_meta: param_tensors.iter().map(|p| (p.shape().clone(), p.dtype())).collect(),
+        batch_meta: batch_examples.iter().map(|b| (b.shape().clone(), b.dtype())).collect(),
+    })
+}
+
+impl SlotMap {
+    /// Every substitutable constant slot: fenced off from constant folding.
+    fn frozen(&self) -> Vec<usize> {
+        let mut v: Vec<usize> = Vec::new();
+        v.extend(self.params.iter().flatten());
+        v.extend(self.state.iter().flatten().flatten());
+        v.extend(self.t.iter());
+        v.extend(self.batch.iter().flatten());
+        v.extend(self.grads.iter().flatten());
+        v
+    }
+}
+
+impl CompiledTrainStep {
+    /// The optimizer core the step was compiled against.
+    pub fn rule(&self) -> &UpdateRule {
+        &self.rule
+    }
+
+    /// Number of parameters the step updates.
+    pub fn n_params(&self) -> usize {
+        self.n_params
+    }
+
+    /// Fresh optimizer state (zeros) for `params`.
+    pub fn init_state(&self, params: &[Tensor]) -> TrainStepState {
+        TrainStepState {
+            per_param: params.iter().map(|p| self.rule.init_state(p)).collect(),
+            t: self.rule.uses_step_count().then(|| Tensor::full([], 0.0, DType::F32)),
+        }
+    }
+
+    /// The fully-fused single-process program (`(params, state, batch) ->
+    /// (params', state', loss)`).
+    pub fn program(&self) -> &CompiledProgram {
+        &self.full
+    }
+
+    /// The backward-only program (`(params, batch) -> (grads, loss)`).
+    pub fn backward_program(&self) -> &CompiledProgram {
+        &self.bwd
+    }
+
+    /// The update-only program (`(params, grads, state) -> (params',
+    /// state')`).
+    pub fn update_program(&self) -> &CompiledProgram {
+        &self.upd
+    }
+
+    /// What each compiler pass did to the full step program.
+    pub fn report(&self) -> &CompileReport {
+        &self.full.report
+    }
+
+    fn check_params(&self, params: &[Tensor]) -> Result<()> {
+        if params.len() != self.n_params {
+            return Err(Error::Config(format!(
+                "compiled step expects {} parameters, got {}",
+                self.n_params,
+                params.len()
+            )));
+        }
+        for (i, (p, (shape, dt))) in params.iter().zip(&self.param_meta).enumerate() {
+            if p.shape() != shape || p.dtype() != *dt {
+                return Err(Error::Config(format!(
+                    "compiled step parameter {i}: expected {} {}, got {} {}",
+                    shape,
+                    dt.name(),
+                    p.shape(),
+                    p.dtype().name()
+                )));
+            }
+        }
+        Ok(())
+    }
+
+    fn check_batch(&self, batch: &[Tensor]) -> Result<()> {
+        if batch.len() != self.batch_meta.len() {
+            return Err(Error::Config(format!(
+                "compiled step expects {} batch column(s), got {}",
+                self.batch_meta.len(),
+                batch.len()
+            )));
+        }
+        for (i, (b, (shape, dt))) in batch.iter().zip(&self.batch_meta).enumerate() {
+            if b.shape() != shape || b.dtype() != *dt {
+                return Err(Error::Config(format!(
+                    "compiled step batch column {i}: expected {} {} (shapes are specialized \
+                     at trace time; keep batches full-sized), got {} {}",
+                    shape,
+                    dt.name(),
+                    b.shape(),
+                    b.dtype().name()
+                )));
+            }
+        }
+        Ok(())
+    }
+
+    fn check_state(&self, state: &TrainStepState) -> Result<()> {
+        let k = self.rule.state_slots();
+        if state.per_param.len() != self.n_params
+            || state.per_param.iter().any(|s| s.len() != k)
+            || state.t.is_some() != self.rule.uses_step_count()
+        {
+            return Err(Error::Config("compiled step: optimizer state layout mismatch".into()));
+        }
+        Ok(())
+    }
+
+    /// Assemble `(slot, tensor)` overrides plus the donation list for a
+    /// program run. Owned inputs (params / state / t / grads) are donated
+    /// when `donate` is set; batch handles are shared with the caller and
+    /// never donated.
+    fn overrides(
+        slots: &SlotMap,
+        params: Vec<Tensor>,
+        state: Option<TrainStepState>,
+        grads: Option<Vec<Tensor>>,
+        batch: &[Tensor],
+        donate: bool,
+    ) -> (Vec<(usize, Tensor)>, Vec<usize>) {
+        let mut ovr: Vec<(usize, Tensor)> = Vec::new();
+        let mut don: Vec<usize> = Vec::new();
+        let mut push_owned = |slot: Option<usize>, t: Tensor, don: &mut Vec<usize>| {
+            if let Some(s) = slot {
+                ovr.push((s, t));
+                if donate {
+                    don.push(s);
+                }
+            }
+        };
+        for (slot, p) in slots.params.iter().zip(params) {
+            push_owned(*slot, p, &mut don);
+        }
+        if let Some(st) = state {
+            for (sv, tv) in slots.state.iter().zip(st.per_param) {
+                for (slot, t) in sv.iter().zip(tv) {
+                    push_owned(*slot, t, &mut don);
+                }
+            }
+            if let (Some(slot), Some(t)) = (slots.t, st.t) {
+                push_owned(Some(slot), t, &mut don);
+            }
+        }
+        if let Some(gs) = grads {
+            for (slot, g) in slots.grads.iter().zip(gs) {
+                push_owned(*slot, g, &mut don);
+            }
+        }
+        for (slot, b) in slots.batch.iter().zip(batch) {
+            if let Some(s) = slot {
+                ovr.push((s, b.clone()));
+            }
+        }
+        (ovr, don)
+    }
+
+    /// Split a program's outputs back into `(params', state', loss)`.
+    /// `outs` is consumed in the output order the compiler was given.
+    fn unpack(
+        &self,
+        mut outs: Vec<Tensor>,
+        with_loss: bool,
+    ) -> (Vec<Tensor>, TrainStepState, f64) {
+        let loss = if with_loss {
+            let l = outs.pop().expect("compiled step: missing loss output");
+            l.item()
+        } else {
+            f64::NAN
+        };
+        let t = self.rule.uses_step_count().then(|| {
+            outs.pop().expect("compiled step: missing step counter output")
+        });
+        let k = self.rule.state_slots();
+        let state_flat: Vec<Tensor> = outs.split_off(self.n_params);
+        let per_param: Vec<Vec<Tensor>> = if k == 0 {
+            vec![Vec::new(); self.n_params]
+        } else {
+            state_flat.chunks(k).map(|c| c.to_vec()).collect()
+        };
+        (outs, TrainStepState { per_param, t }, loss)
+    }
+
+    /// Run one full compiled step: `(params, state, batch) -> (params',
+    /// state', loss)`. With `donate`, the incoming parameter and state
+    /// buffers are released back to the memory manager at their last use,
+    /// so the updated tensors can reuse their storage (pass ownership —
+    /// keeping extra handles alive defeats the donation).
+    pub fn run(
+        &self,
+        backend: &dyn TensorBackend,
+        params: Vec<Tensor>,
+        state: TrainStepState,
+        batch: &[Tensor],
+        donate: bool,
+    ) -> Result<StepResult> {
+        self.check_params(&params)?;
+        self.check_state(&state)?;
+        self.check_batch(batch)?;
+        let (ovr, don) =
+            Self::overrides(&self.full_slots, params, Some(state), None, batch, donate);
+        let (outs, stats) = self.full.run_owned(backend, ovr, &don, false)?;
+        let (params, state, loss) = self.unpack(outs, true);
+        Ok(StepResult { params, state, loss, stats })
+    }
+
+    /// Run the backward half only: `(params, batch) -> (grads, loss)`.
+    /// Parameters are borrowed — they are still needed by
+    /// [`CompiledTrainStep::run_update`] after gradient synchronization.
+    pub fn run_backward(
+        &self,
+        backend: &dyn TensorBackend,
+        params: &[Tensor],
+        batch: &[Tensor],
+    ) -> Result<(Vec<Tensor>, f64)> {
+        self.check_params(params)?;
+        self.check_batch(batch)?;
+        let (ovr, _) = Self::overrides(
+            &self.full_slots,
+            params.to_vec(),
+            None,
+            None,
+            batch,
+            false,
+        );
+        let (mut outs, _) = self.bwd.run_owned(backend, ovr, &[], false)?;
+        let loss = outs.pop().expect("compiled step: missing loss output").item();
+        Ok((outs, loss))
+    }
+
+    /// Run the update half only: `(params, grads, state) -> (params',
+    /// state')`. Gradients typically arrive from
+    /// [`crate::dist::GradientSynchronizer::average_tensors`].
+    ///
+    /// Note the data-parallel composition applies no gradient clipping,
+    /// mirroring the eager `train_data_parallel` loop.
+    pub fn run_update(
+        &self,
+        backend: &dyn TensorBackend,
+        params: Vec<Tensor>,
+        grads: Vec<Tensor>,
+        state: TrainStepState,
+        donate: bool,
+    ) -> Result<(Vec<Tensor>, TrainStepState, ExecStats)> {
+        self.check_params(&params)?;
+        self.check_state(&state)?;
+        if grads.len() != self.n_params {
+            return Err(Error::Config(format!(
+                "compiled step expects {} gradients, got {}",
+                self.n_params,
+                grads.len()
+            )));
+        }
+        let (ovr, don) =
+            Self::overrides(&self.upd_slots, params, Some(state), Some(grads), &[], donate);
+        let (outs, stats) = self.upd.run_owned(backend, ovr, &don, false)?;
+        let (params, state, _) = self.unpack(outs, false);
+        Ok((params, state, stats))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::mlp;
+
+    #[test]
+    fn compile_step_validates_inputs() {
+        let model = mlp(&[4, 3]);
+        let cfg = TrainConfig::default(); // adam
+        let batch =
+            vec![Tensor::zeros([2, 4]), Tensor::from_slice(&[0i64, 1], [2])];
+        let step = compile_step(&model, &cfg, &BatchSpec::like(&batch)).unwrap();
+        let be = default_backend();
+        let params: Vec<Tensor> = model.params().iter().map(|p| p.tensor()).collect();
+        let state = step.init_state(&params);
+        // shapes are specialized: a different batch size is rejected
+        let bad = vec![Tensor::zeros([3, 4]), Tensor::from_slice(&[0i64, 1, 0], [3])];
+        assert!(step.run(be.as_ref(), params.clone(), state.clone(), &bad, false).is_err());
+        // batch arity is checked
+        assert!(step
+            .run(be.as_ref(), params.clone(), state.clone(), &batch[..1], false)
+            .is_err());
+        // a well-formed step runs
+        let ok = step.run(be.as_ref(), params, state, &batch, false).unwrap();
+        assert!(ok.loss.is_finite());
+        assert_eq!(ok.params.len(), step.n_params());
+        assert!(ok.state.t.is_some(), "adam threads a step counter");
+        // the cross-entropy entry point wants (input, target) columns
+        let one_col = BatchSpec { columns: vec![(vec![2, 4], DType::F32)] };
+        assert!(compile_step(&model, &cfg, &one_col).is_err());
+    }
+
+    #[test]
+    fn unknown_optimizer_is_rejected_at_compile() {
+        let model = mlp(&[4, 3]);
+        let cfg = TrainConfig { optimizer: "lion".into(), ..Default::default() };
+        let batch =
+            vec![Tensor::zeros([2, 4]), Tensor::from_slice(&[0i64, 1], [2])];
+        assert!(compile_step(&model, &cfg, &BatchSpec::like(&batch)).is_err());
+    }
+}

@@ -23,10 +23,13 @@ use crate::meter::{AverageValueMeter, FrameErrorMeter, TimeMeter};
 use crate::models::BertLike;
 use crate::nn::{categorical_cross_entropy, Module};
 use crate::optim::{clip_grad_norm, AdamOptimizer, AdamWOptimizer, Optimizer, SGDOptimizer};
-use crate::tensor::Tensor;
-use crate::util::error::Result;
+use crate::tensor::{default_backend, Tensor};
+use crate::util::error::{Error, Result};
 
 use super::config::TrainConfig;
+pub use super::step::{
+    compile_step, compile_step_fn, BatchSpec, CompiledTrainStep, StepResult, TrainStepState,
+};
 
 /// Summary of a training run.
 #[derive(Debug, Clone)]
@@ -41,13 +44,40 @@ pub struct TrainReport {
     pub eval_error: Option<f64>,
 }
 
-/// Build the configured optimizer.
-pub fn make_optimizer(cfg: &TrainConfig, params: Vec<Variable>) -> Box<dyn Optimizer> {
+/// Build the configured optimizer. Unknown optimizer strings are an
+/// error (they used to fall back to Adam silently); the accepted set
+/// mirrors [`crate::optim::UpdateRule::from_config`] so eager and
+/// compiled steps agree on the arithmetic.
+pub fn make_optimizer(cfg: &TrainConfig, params: Vec<Variable>) -> Result<Box<dyn Optimizer>> {
     match cfg.optimizer.as_str() {
-        "sgd" => Box::new(SGDOptimizer::with_momentum(params, cfg.lr, 0.9, false)),
-        "adamw" => Box::new(AdamWOptimizer::new(params, cfg.lr, 0.01)),
-        _ => Box::new(AdamOptimizer::new(params, cfg.lr)),
+        "sgd" => Ok(Box::new(SGDOptimizer::with_momentum(params, cfg.lr, 0.9, false))),
+        "adam" => Ok(Box::new(AdamOptimizer::new(params, cfg.lr))),
+        "adamw" => Ok(Box::new(AdamWOptimizer::new(params, cfg.lr, 0.01))),
+        other => Err(Error::Config(format!(
+            "unknown optimizer `{other}` (expected sgd | adam | adamw)"
+        ))),
     }
+}
+
+/// Number of leading batches that share the traced (full) batch shape.
+/// Compiled steps specialize shapes at trace time, so the compiled paths
+/// cycle over these and skip a ragged tail batch (the eager paths train
+/// on it; make the dataset length divisible by the batch size for exact
+/// data parity between the two).
+fn full_batches(batches: &BatchDataset) -> usize {
+    let n = batches.len();
+    if n > 1 && batches.get(n - 1)[0].dim(0) != batches.get(0)[0].dim(0) {
+        n - 1
+    } else {
+        n
+    }
+}
+
+/// Per-worker RNG stream for data-parallel training: deterministic in
+/// `(seed, rank)` so eager and compiled replicas draw identical dropout
+/// masks (the compiled branch re-aligns to this after tracing).
+fn worker_stream(seed: u64, rank: usize) -> u64 {
+    seed ^ (rank as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15)
 }
 
 /// Train a classifier on `(input, label)` batches (paper Listing 9).
@@ -60,30 +90,60 @@ pub fn train_classifier(
     crate::util::rng::seed(cfg.seed);
     model.set_train(true);
     let batches = BatchDataset::new(dataset.clone(), cfg.batch_size);
-    let mut opt = make_optimizer(cfg, model.params());
     let mut loss_meter = AverageValueMeter::new();
     let mut curve = Vec::new();
     let mut timer = TimeMeter::start();
 
-    for step in 0..cfg.steps {
-        let batch = batches.get(step % batches.len());
-        let inputs = Variable::constant(batch[0].clone());
-        let targets = batch[1].clone();
-        let output = model.forward(&inputs);
-        let loss = categorical_cross_entropy(&output, &targets);
-        let lv = loss.tensor().item();
-        loss_meter.add(lv);
-        loss.backward();
-        if cfg.grad_clip > 0.0 {
-            clip_grad_norm(opt.params(), cfg.grad_clip);
+    if cfg.compile_step {
+        // one traced program per step: forward + backward + clip + update
+        let spec = BatchSpec::like(&batches.get(0));
+        let step = compile_step(&*model, cfg, &spec)?;
+        // tracing ran one forward (consuming RNG draws); realign the
+        // stream so the compiled run replays the eager run's draws
+        crate::util::rng::seed(cfg.seed);
+        let be = default_backend();
+        let n_full = full_batches(&batches);
+        let mut params: Vec<Tensor> = model.params().iter().map(|p| p.tensor()).collect();
+        let mut state = step.init_state(&params);
+        for s in 0..cfg.steps {
+            let batch = batches.get(s % n_full);
+            let items = batch[0].dim(0) as u64;
+            let out = step.run(be.as_ref(), params, state, &batch, true)?;
+            params = out.params;
+            state = out.state;
+            loss_meter.add(out.loss);
+            timer.add_items(items);
+            if (s + 1) % cfg.log_every == 0 || s + 1 == cfg.steps {
+                log(s + 1, loss_meter.value());
+                curve.push((s + 1, loss_meter.value()));
+                loss_meter.reset();
+            }
         }
-        opt.step();
-        opt.zero_grad();
-        timer.add_items(batch[0].dim(0) as u64);
-        if (step + 1) % cfg.log_every == 0 || step + 1 == cfg.steps {
-            log(step + 1, loss_meter.value());
-            curve.push((step + 1, loss_meter.value()));
-            loss_meter.reset();
+        for (p, t) in model.params().iter().zip(&params) {
+            p.set_tensor(t.clone());
+        }
+    } else {
+        let mut opt = make_optimizer(cfg, model.params())?;
+        for step in 0..cfg.steps {
+            let batch = batches.get(step % batches.len());
+            let inputs = Variable::constant(batch[0].clone());
+            let targets = batch[1].clone();
+            let output = model.forward(&inputs);
+            let loss = categorical_cross_entropy(&output, &targets);
+            let lv = loss.tensor().item();
+            loss_meter.add(lv);
+            loss.backward();
+            if cfg.grad_clip > 0.0 {
+                clip_grad_norm(opt.params(), cfg.grad_clip);
+            }
+            opt.step();
+            opt.zero_grad();
+            timer.add_items(batch[0].dim(0) as u64);
+            if (step + 1) % cfg.log_every == 0 || step + 1 == cfg.steps {
+                log(step + 1, loss_meter.value());
+                curve.push((step + 1, loss_meter.value()));
+                loss_meter.reset();
+            }
         }
     }
 
@@ -91,7 +151,7 @@ pub fn train_classifier(
     model.set_train(false);
     let mut err = FrameErrorMeter::new();
     crate::autograd::no_grad(|| {
-        for i in 0..batches.len().min(16) {
+        for i in 0..batches.len().min(cfg.eval_batches) {
             let batch = batches.get(i);
             let out = model.forward(&Variable::constant(batch[0].clone()));
             let pred = out.tensor().argmax(-1, false);
@@ -120,26 +180,54 @@ pub fn train_lm(
 ) -> Result<TrainReport> {
     crate::util::rng::seed(cfg.seed);
     let batches = BatchDataset::new(dataset, cfg.batch_size);
-    let mut opt = make_optimizer(cfg, model.params());
     let mut loss_meter = AverageValueMeter::new();
     let mut curve = Vec::new();
     let mut timer = TimeMeter::start();
-    for step in 0..cfg.steps {
-        let batch = batches.get(step % batches.len());
-        let loss = crate::models::bert::lm_loss(model, &batch[0]);
-        let lv = loss.tensor().item();
-        loss_meter.add(lv);
-        loss.backward();
-        if cfg.grad_clip > 0.0 {
-            clip_grad_norm(opt.params(), cfg.grad_clip);
+    if cfg.compile_step {
+        let example = batches.get(0);
+        let step = compile_step_fn(&model.params(), cfg, &example[..1], |batch| {
+            crate::models::bert::lm_loss(model, &batch[0])
+        })?;
+        crate::util::rng::seed(cfg.seed);
+        let be = default_backend();
+        let n_full = full_batches(&batches);
+        let mut params: Vec<Tensor> = model.params().iter().map(|p| p.tensor()).collect();
+        let mut state = step.init_state(&params);
+        for s in 0..cfg.steps {
+            let batch = batches.get(s % n_full);
+            let out = step.run(be.as_ref(), params, state, &batch[..1], true)?;
+            params = out.params;
+            state = out.state;
+            loss_meter.add(out.loss);
+            timer.add_items(batch[0].dim(0) as u64);
+            if (s + 1) % cfg.log_every == 0 || s + 1 == cfg.steps {
+                log(s + 1, loss_meter.value());
+                curve.push((s + 1, loss_meter.value()));
+                loss_meter.reset();
+            }
         }
-        opt.step();
-        opt.zero_grad();
-        timer.add_items(batch[0].dim(0) as u64);
-        if (step + 1) % cfg.log_every == 0 || step + 1 == cfg.steps {
-            log(step + 1, loss_meter.value());
-            curve.push((step + 1, loss_meter.value()));
-            loss_meter.reset();
+        for (p, t) in model.params().iter().zip(&params) {
+            p.set_tensor(t.clone());
+        }
+    } else {
+        let mut opt = make_optimizer(cfg, model.params())?;
+        for step in 0..cfg.steps {
+            let batch = batches.get(step % batches.len());
+            let loss = crate::models::bert::lm_loss(model, &batch[0]);
+            let lv = loss.tensor().item();
+            loss_meter.add(lv);
+            loss.backward();
+            if cfg.grad_clip > 0.0 {
+                clip_grad_norm(opt.params(), cfg.grad_clip);
+            }
+            opt.step();
+            opt.zero_grad();
+            timer.add_items(batch[0].dim(0) as u64);
+            if (step + 1) % cfg.log_every == 0 || step + 1 == cfg.steps {
+                log(step + 1, loss_meter.value());
+                curve.push((step + 1, loss_meter.value()));
+                loss_meter.reset();
+            }
         }
     }
     if !cfg.checkpoint.is_empty() {
@@ -181,29 +269,84 @@ pub fn train_data_parallel(
                 let sync = GradientSynchronizer::new(dist.clone());
                 let data = make_data(rank);
                 let batches = BatchDataset::new(data, cfg.batch_size);
-                let mut opt = make_optimizer(&cfg, model.params());
                 let mut curve = Vec::new();
                 let mut meter = AverageValueMeter::new();
                 let mut timer = TimeMeter::start();
                 model.set_train(true);
-                for step in 0..cfg.steps {
-                    let batch = batches.get(step % batches.len());
-                    let out = model.forward(&Variable::constant(batch[0].clone()));
-                    let loss = if out.dims().len() == 3 {
-                        // sequence logits: mean log-softmax proxy loss
-                        ops::mean(&ops::mul(&out, &out), &[], false)
-                    } else {
-                        categorical_cross_entropy(&out, &batch[1])
-                    };
-                    meter.add(loss.tensor().item());
-                    loss.backward();
-                    sync.synchronize(&opt.params().to_vec());
-                    opt.step();
-                    opt.zero_grad();
-                    timer.add_items(batch[0].dim(0) as u64);
-                    if (step + 1) % cfg.log_every == 0 || step + 1 == cfg.steps {
-                        curve.push((step + 1, meter.value()));
-                        meter.reset();
+                if cfg.compile_step {
+                    // per-replica compiled step, split at the gradient
+                    // boundary: traced backward -> bucketed all-reduce ->
+                    // traced update (mirrors the eager loop, which does
+                    // not clip in the data-parallel path)
+                    let example = batches.get(0);
+                    // tracing swaps the process-global default backend, so
+                    // replicas must compile one at a time with no other
+                    // tensor work in flight: quiesce at a barrier, compile
+                    // (serialized by the trace lock), quiesce again before
+                    // any post-compile tensor work starts. A compile error
+                    // is config-shaped and hits every replica identically,
+                    // so no replica is left waiting at the second barrier.
+                    dist.barrier();
+                    let step = compile_step_fn(&model.params(), &cfg, &example, |batch| {
+                        let out = model.forward(&Variable::constant(batch[0].clone()));
+                        if out.dims().len() == 3 {
+                            // sequence logits: mean log-softmax proxy loss
+                            ops::mean(&ops::mul(&out, &out), &[], false)
+                        } else {
+                            categorical_cross_entropy(&out, &batch[1])
+                        }
+                    })?;
+                    dist.barrier();
+                    let be = default_backend();
+                    let n_full = full_batches(&batches);
+                    let mut params: Vec<Tensor> =
+                        model.params().iter().map(|p| p.tensor()).collect();
+                    let mut state = step.init_state(&params);
+                    // tracing consumed this worker's RNG draws; realign to
+                    // the same per-rank stream the eager branch uses
+                    crate::util::rng::reseed_thread(worker_stream(cfg.seed, rank));
+                    for s in 0..cfg.steps {
+                        let batch = batches.get(s % n_full);
+                        let (grads, loss) = step.run_backward(be.as_ref(), &params, &batch)?;
+                        let grads = sync.average_tensors(&grads);
+                        let (p2, st2, _) =
+                            step.run_update(be.as_ref(), params, grads, state, true)?;
+                        params = p2;
+                        state = st2;
+                        meter.add(loss);
+                        timer.add_items(batch[0].dim(0) as u64);
+                        if (s + 1) % cfg.log_every == 0 || s + 1 == cfg.steps {
+                            curve.push((s + 1, meter.value()));
+                            meter.reset();
+                        }
+                    }
+                    for (p, t) in model.params().iter().zip(&params) {
+                        p.set_tensor(t.clone());
+                    }
+                } else {
+                    let mut opt = make_optimizer(&cfg, model.params())?;
+                    // deterministic per-rank stream (dropout masks), shared
+                    // with the compiled branch for bit-parity
+                    crate::util::rng::reseed_thread(worker_stream(cfg.seed, rank));
+                    for step in 0..cfg.steps {
+                        let batch = batches.get(step % batches.len());
+                        let out = model.forward(&Variable::constant(batch[0].clone()));
+                        let loss = if out.dims().len() == 3 {
+                            // sequence logits: mean log-softmax proxy loss
+                            ops::mean(&ops::mul(&out, &out), &[], false)
+                        } else {
+                            categorical_cross_entropy(&out, &batch[1])
+                        };
+                        meter.add(loss.tensor().item());
+                        loss.backward();
+                        sync.synchronize(&opt.params().to_vec());
+                        opt.step();
+                        opt.zero_grad();
+                        timer.add_items(batch[0].dim(0) as u64);
+                        if (step + 1) % cfg.log_every == 0 || step + 1 == cfg.steps {
+                            curve.push((step + 1, meter.value()));
+                            meter.reset();
+                        }
                     }
                 }
                 Ok(TrainReport {

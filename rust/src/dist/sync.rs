@@ -71,31 +71,68 @@ impl GradientSynchronizer {
         if world <= 1 {
             return;
         }
+        let entries = params.iter().enumerate().rev().filter_map(|(i, p)| p.grad().map(|g| (i, g)));
+        self.reduce_entries(entries, world, &mut |i, t| params[i].set_grad(t));
+    }
+
+    /// Average a flat list of gradient *tensors* across all workers,
+    /// returning the averaged tensors in the same order. This is the
+    /// compiled-train-step face of the synchronizer: a
+    /// [`crate::coordinator::CompiledTrainStep`] produces its gradients as
+    /// program outputs rather than `Variable` side effects, and this
+    /// method slots between the traced backward and the traced optimizer
+    /// update.
+    ///
+    /// Bucketing is *identical* to [`GradientSynchronizer::synchronize`]
+    /// (reverse order, same byte budget, one shared code path), so an
+    /// eager replica and a compiled replica reduce bitwise-identical
+    /// buckets. At `world_size == 1` the input handles are returned
+    /// unchanged — bit-identical to unsynchronized training.
+    pub fn average_tensors(&self, grads: &[Tensor]) -> Vec<Tensor> {
+        let world = self.dist.world_size();
+        if world <= 1 {
+            return grads.to_vec();
+        }
+        let mut out: Vec<Option<Tensor>> = vec![None; grads.len()];
+        let entries = grads.iter().enumerate().rev().map(|(i, g)| (i, g.clone()));
+        self.reduce_entries(entries, world, &mut |i, t| out[i] = Some(t));
+        out.into_iter().map(|t| t.expect("bucket reduction missed a gradient")).collect()
+    }
+
+    /// The shared bucketing sweep: walk `(index, gradient)` entries (the
+    /// callers supply them in reverse registration order), pack them into
+    /// byte-budgeted buckets, all-reduce each bucket as one collective,
+    /// and hand every averaged gradient back through `apply`.
+    fn reduce_entries(
+        &self,
+        entries: impl Iterator<Item = (usize, Tensor)>,
+        world: usize,
+        apply: &mut dyn FnMut(usize, Tensor),
+    ) {
         let scale = 1.0 / world as f64;
-        // (param index, flat grad, grad dims) accumulated into the open bucket
+        // (entry index, flat grad, grad dims) accumulated into the open bucket
         let mut bucket: Vec<(usize, Vec<f32>, Vec<usize>)> = Vec::new();
         let mut bytes = 0usize;
-        for (i, p) in params.iter().enumerate().rev() {
-            let Some(g) = p.grad() else { continue };
+        for (i, g) in entries {
             let dims = g.dims().to_vec();
             let flat = g.to_vec();
             bytes += flat.len() * std::mem::size_of::<f32>();
             bucket.push((i, flat, dims));
             if bytes >= self.bucket_bytes {
-                self.flush(params, &mut bucket, scale);
+                self.flush(&mut bucket, scale, apply);
                 bytes = 0;
             }
         }
-        self.flush(params, &mut bucket, scale);
+        self.flush(&mut bucket, scale, apply);
     }
 
     /// Reduce one bucket: flatten, all-reduce, scatter the averaged
-    /// segments back onto the parameters' gradient slots.
+    /// segments back through `apply`.
     fn flush(
         &self,
-        params: &[Variable],
         bucket: &mut Vec<(usize, Vec<f32>, Vec<usize>)>,
         scale: f64,
+        apply: &mut dyn FnMut(usize, Tensor),
     ) {
         if bucket.is_empty() {
             return;
@@ -109,7 +146,7 @@ impl GradientSynchronizer {
         let mut off = 0usize;
         for (idx, g, dims) in bucket.drain(..) {
             let seg = &reduced[off..off + g.len()];
-            params[idx].set_grad(Tensor::from_slice(seg, dims));
+            apply(idx, Tensor::from_slice(seg, dims));
             off += g.len();
         }
     }
@@ -225,6 +262,54 @@ mod tests {
             .collect();
         for got in &results {
             assert_eq!(got, &expect);
+        }
+    }
+
+    #[test]
+    fn average_tensors_matches_variable_path_bitwise() {
+        let n = 2;
+        let workers = init_ring(n);
+        let oks: Vec<bool> = std::thread::scope(|s| {
+            let handles: Vec<_> = workers
+                .into_iter()
+                .map(|w| {
+                    s.spawn(move || {
+                        let rank = w.world_rank();
+                        let params = params_with_grads(&[
+                            (vec![0.0; 4], vec![(rank * 3) as f32 + 0.25; 4]),
+                            (vec![0.0; 2], vec![(rank + 1) as f32 * 0.1, -0.7]),
+                        ]);
+                        let grads: Vec<Tensor> =
+                            params.iter().map(|p| p.grad().unwrap()).collect();
+                        let sync = GradientSynchronizer::new(Arc::new(w));
+                        // tensor path first, then the Variable path — every
+                        // worker runs the collectives in the same order
+                        let avg = sync.average_tensors(&grads);
+                        sync.synchronize(&params);
+                        params.iter().zip(&avg).all(|(p, a)| {
+                            p.grad()
+                                .unwrap()
+                                .to_vec()
+                                .iter()
+                                .zip(a.to_vec())
+                                .all(|(x, y)| x.to_bits() == y.to_bits())
+                        })
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        assert!(oks.iter().all(|&b| b), "tensor path diverged from variable path");
+    }
+
+    #[test]
+    fn average_tensors_world_one_is_identity() {
+        let w = init_ring(1).pop().unwrap();
+        let sync = GradientSynchronizer::new(Arc::new(w));
+        let g = Tensor::from_slice(&[1.5f32, -0.0, f32::MIN_POSITIVE], [3]);
+        let avg = sync.average_tensors(&[g.clone()]);
+        for (a, b) in avg[0].to_vec().iter().zip(g.to_vec()) {
+            assert_eq!(a.to_bits(), b.to_bits());
         }
     }
 

@@ -1,8 +1,15 @@
 //! Adam-family optimizers (Adam, AdamW, Adagrad).
+//!
+//! The arithmetic — including bias correction — lives in the pure
+//! [`UpdateRule`] cores; `step()` is a thin stateful wrapper, so eager
+//! training and [`crate::coordinator::compile_step`] share one formula.
+//! The step count feeds the rule as a scalar *tensor* so the bias
+//! correction is itself backend-dispatched (and therefore traceable).
 
 use crate::autograd::Variable;
-use crate::tensor::Tensor;
+use crate::tensor::{DType, Tensor};
 
+use super::update::UpdateRule;
 use super::Optimizer;
 
 /// Adam (Kingma & Ba) with bias correction; `decoupled=false` puts weight
@@ -52,33 +59,36 @@ impl AdamOptimizer {
     }
 }
 
+impl AdamOptimizer {
+    /// The pure update core this optimizer wraps.
+    pub fn rule(&self) -> UpdateRule {
+        UpdateRule::Adam {
+            lr: self.lr,
+            beta1: self.beta1,
+            beta2: self.beta2,
+            eps: self.eps,
+            weight_decay: self.weight_decay,
+            decoupled: self.decoupled,
+        }
+    }
+}
+
 impl Optimizer for AdamOptimizer {
     fn step(&mut self) {
         self.t += 1;
-        let bc1 = 1.0 - self.beta1.powi(self.t as i32);
-        let bc2 = 1.0 - self.beta2.powi(self.t as i32);
+        let t = Tensor::full([], self.t as f64, DType::F32);
+        let rule = self.rule();
         for (i, p) in self.params.iter().enumerate() {
-            let Some(mut g) = p.grad() else { continue };
-            if self.weight_decay != 0.0 && !self.decoupled {
-                g = g.add(&p.tensor().mul_scalar(self.weight_decay));
-            }
-            let m = match &self.m[i] {
-                Some(m) => m.mul_scalar(self.beta1).add(&g.mul_scalar(1.0 - self.beta1)),
-                None => g.mul_scalar(1.0 - self.beta1),
+            let Some(g) = p.grad() else { continue };
+            let pt = p.tensor();
+            let state: Vec<Tensor> = match (&self.m[i], &self.v[i]) {
+                (Some(m), Some(v)) => vec![m.clone(), v.clone()],
+                _ => rule.init_state(&pt),
             };
-            let v = match &self.v[i] {
-                Some(v) => v.mul_scalar(self.beta2).add(&g.mul(&g).mul_scalar(1.0 - self.beta2)),
-                None => g.mul(&g).mul_scalar(1.0 - self.beta2),
-            };
-            self.m[i] = Some(m.clone());
-            self.v[i] = Some(v.clone());
-            let mhat = m.mul_scalar(1.0 / bc1);
-            let vhat = v.mul_scalar(1.0 / bc2);
-            let mut update = mhat.div(&vhat.sqrt().add_scalar(self.eps)).mul_scalar(self.lr);
-            if self.weight_decay != 0.0 && self.decoupled {
-                update = update.add(&p.tensor().mul_scalar(self.weight_decay * self.lr));
-            }
-            p.set_tensor(p.tensor().sub(&update));
+            let (p2, s2) = rule.apply(&pt, &g, &state, Some(&t));
+            self.m[i] = Some(s2[0].clone());
+            self.v[i] = Some(s2[1].clone());
+            p.set_tensor(p2);
         }
     }
 
@@ -134,17 +144,26 @@ impl AdagradOptimizer {
     }
 }
 
+impl AdagradOptimizer {
+    /// The pure update core this optimizer wraps.
+    pub fn rule(&self) -> UpdateRule {
+        UpdateRule::Adagrad { lr: self.lr, eps: self.eps }
+    }
+}
+
 impl Optimizer for AdagradOptimizer {
     fn step(&mut self) {
+        let rule = self.rule();
         for (i, p) in self.params.iter().enumerate() {
             let Some(g) = p.grad() else { continue };
-            let acc = match &self.accum[i] {
-                Some(a) => a.add(&g.mul(&g)),
-                None => g.mul(&g),
+            let pt = p.tensor();
+            let state: Vec<Tensor> = match &self.accum[i] {
+                Some(a) => vec![a.clone()],
+                None => rule.init_state(&pt),
             };
-            self.accum[i] = Some(acc.clone());
-            let update = g.div(&acc.sqrt().add_scalar(self.eps)).mul_scalar(self.lr);
-            p.set_tensor(p.tensor().sub(&update));
+            let (p2, s2) = rule.apply(&pt, &g, &state, None);
+            self.accum[i] = Some(s2[0].clone());
+            p.set_tensor(p2);
         }
     }
 

@@ -6,13 +6,16 @@ pub mod adam;
 pub mod rmsprop;
 pub mod scheduler;
 pub mod sgd;
+pub mod update;
 
 pub use adam::{AdagradOptimizer, AdamOptimizer, AdamWOptimizer};
 pub use rmsprop::RMSPropOptimizer;
 pub use scheduler::{CosineSchedule, LrSchedule, StepSchedule, WarmupLinearSchedule};
 pub use sgd::SGDOptimizer;
+pub use update::{clip_grads, UpdateRule};
 
 use crate::autograd::Variable;
+use crate::tensor::Tensor;
 
 /// The optimizer interface: owns its parameter list, consumes accumulated
 /// gradients on `step`.
@@ -39,20 +42,30 @@ pub trait Optimizer: Send {
 }
 
 /// Global L2-norm gradient clipping; returns the pre-clip norm.
+///
+/// Uses the same tensor formula as the branch-free
+/// [`update::clip_grads`] traced by [`crate::coordinator::compile_step`],
+/// but skips rewriting the gradients when the norm is under the cap:
+/// there `clip_grads` multiplies by exactly `1.0`, a bitwise no-op, so
+/// the early return is bit-identical to the traced path while sparing
+/// the eager hot path a full copy of every gradient.
 pub fn clip_grad_norm(params: &[Variable], max_norm: f64) -> f64 {
-    let mut total = 0.0f64;
-    for p in params {
-        if let Some(g) = p.grad() {
-            total += g.norm_sq().item();
-        }
+    let entries: Vec<(usize, Tensor)> =
+        params.iter().enumerate().filter_map(|(i, p)| p.grad().map(|g| (i, g))).collect();
+    if entries.is_empty() {
+        return 0.0;
     }
-    let norm = total.sqrt();
-    if norm > max_norm && norm > 0.0 {
-        let scale = max_norm / norm;
-        for p in params {
-            if let Some(g) = p.grad() {
-                p.set_grad(g.mul_scalar(scale));
-            }
+    let grads: Vec<Tensor> = entries.iter().map(|(_, g)| g.clone()).collect();
+    // the exact accumulation clip_grads performs
+    let mut total = Tensor::full([], 0.0, crate::tensor::DType::F32);
+    for g in &grads {
+        total = total.add(&g.norm_sq());
+    }
+    let norm = total.sqrt().item();
+    if norm > max_norm {
+        let (clipped, _) = clip_grads(&grads, max_norm);
+        for ((i, _), c) in entries.iter().zip(clipped) {
+            params[*i].set_grad(c);
         }
     }
     norm

@@ -1,8 +1,12 @@
 //! RMSProp.
+//!
+//! The arithmetic lives in the pure [`UpdateRule::RmsProp`] core; `step()`
+//! is a thin stateful wrapper (see [`super::update`]).
 
 use crate::autograd::Variable;
 use crate::tensor::Tensor;
 
+use super::update::UpdateRule;
 use super::Optimizer;
 
 /// RMSProp with exponential moving average of squared gradients.
@@ -22,17 +26,26 @@ impl RMSPropOptimizer {
     }
 }
 
+impl RMSPropOptimizer {
+    /// The pure update core this optimizer wraps.
+    pub fn rule(&self) -> UpdateRule {
+        UpdateRule::RmsProp { lr: self.lr, alpha: self.alpha, eps: self.eps }
+    }
+}
+
 impl Optimizer for RMSPropOptimizer {
     fn step(&mut self) {
+        let rule = self.rule();
         for (i, p) in self.params.iter().enumerate() {
             let Some(g) = p.grad() else { continue };
-            let sq = match &self.sq[i] {
-                Some(s) => s.mul_scalar(self.alpha).add(&g.mul(&g).mul_scalar(1.0 - self.alpha)),
-                None => g.mul(&g).mul_scalar(1.0 - self.alpha),
+            let pt = p.tensor();
+            let state: Vec<Tensor> = match &self.sq[i] {
+                Some(s) => vec![s.clone()],
+                None => rule.init_state(&pt),
             };
-            self.sq[i] = Some(sq.clone());
-            let update = g.div(&sq.sqrt().add_scalar(self.eps)).mul_scalar(self.lr);
-            p.set_tensor(p.tensor().sub(&update));
+            let (p2, s2) = rule.apply(&pt, &g, &state, None);
+            self.sq[i] = Some(s2[0].clone());
+            p.set_tensor(p2);
         }
     }
 

@@ -1,9 +1,14 @@
 //! Stochastic gradient descent with optional momentum / Nesterov /
 //! weight decay (paper Listing 9's `SGDOptimizer`).
+//!
+//! The arithmetic lives in the pure [`UpdateRule::Sgd`] core; `step()` is
+//! a thin stateful wrapper, so eager training and
+//! [`crate::coordinator::compile_step`] share one formula.
 
 use crate::autograd::Variable;
 use crate::tensor::Tensor;
 
+use super::update::UpdateRule;
 use super::Optimizer;
 
 /// See module docs.
@@ -40,28 +45,34 @@ impl SGDOptimizer {
     }
 }
 
+impl SGDOptimizer {
+    /// The pure update core this optimizer wraps.
+    pub fn rule(&self) -> UpdateRule {
+        UpdateRule::Sgd {
+            lr: self.lr,
+            momentum: self.momentum,
+            nesterov: self.nesterov,
+            weight_decay: self.weight_decay,
+        }
+    }
+}
+
 impl Optimizer for SGDOptimizer {
     fn step(&mut self) {
+        let rule = self.rule();
         for (i, p) in self.params.iter().enumerate() {
-            let Some(mut g) = p.grad() else { continue };
-            if self.weight_decay != 0.0 {
-                g = g.add(&p.tensor().mul_scalar(self.weight_decay));
-            }
-            let update = if self.momentum != 0.0 {
-                let v = match &self.velocity[i] {
-                    Some(v) => v.mul_scalar(self.momentum).add(&g),
-                    None => g.clone(),
-                };
-                self.velocity[i] = Some(v.clone());
-                if self.nesterov {
-                    g.add(&v.mul_scalar(self.momentum))
-                } else {
-                    v
-                }
-            } else {
-                g
+            let Some(g) = p.grad() else { continue };
+            let pt = p.tensor();
+            let state: Vec<Tensor> = match &self.velocity[i] {
+                _ if self.momentum == 0.0 => Vec::new(),
+                Some(v) => vec![v.clone()],
+                None => rule.init_state(&pt),
             };
-            p.set_tensor(p.tensor().sub(&update.mul_scalar(self.lr)));
+            let (p2, mut s2) = rule.apply(&pt, &g, &state, None);
+            if self.momentum != 0.0 {
+                self.velocity[i] = Some(s2.remove(0));
+            }
+            p.set_tensor(p2);
         }
     }
 

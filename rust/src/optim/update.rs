@@ -1,0 +1,280 @@
+//! Pure, traceable optimizer update rules.
+//!
+//! Each first-order optimizer in this crate factors into a stateless
+//! [`UpdateRule`] core: a *pure function* `(param, grad, state[, t]) ->
+//! (param', state')` expressed entirely in tensor ops. The mutating
+//! [`super::Optimizer::step`] implementations are thin wrappers that feed
+//! their per-parameter state through the rule and write the results back.
+//!
+//! Why this split matters: because a rule touches nothing but tensor
+//! primitives, every arithmetic step flows through the installed backend's
+//! `dispatch` choke point — so a capturing backend
+//! ([`crate::tensor::TraceBackend`]) sees the *entire* optimizer update as
+//! ordinary IR, and [`crate::coordinator::compile_step`] can fuse it into
+//! one compiled program with the forward and backward passes. The eager
+//! wrappers and the compiled replay execute the *same* op sequence, which
+//! is what makes compiled-vs-eager parameter trajectories bit-identical.
+//!
+//! State layout is positional: [`UpdateRule::state_slots`] tensors per
+//! parameter (velocity for momentum-SGD; first/second moments for Adam;
+//! the squared-gradient accumulator for Adagrad/RMSProp), all initialized
+//! to zeros by [`UpdateRule::init_state`] — zero state is arithmetically
+//! identical to the lazily-initialized `None` state the wrappers
+//! historically used (`0 * β + g == g` bitwise for finite `g`). Adam
+//! additionally consumes a scalar step-count tensor `t` (already
+//! incremented for the current step) so bias correction is itself a
+//! traced computation rather than host-side `f64` math.
+
+use crate::tensor::{DType, Tensor};
+use crate::util::error::{Error, Result};
+
+/// Scalar f32 constant on the default backend (traced like any other op).
+fn scalar(v: f64) -> Tensor {
+    Tensor::full([], v, DType::F32)
+}
+
+/// A stateless optimizer update core. See the module docs.
+#[derive(Debug, Clone)]
+pub enum UpdateRule {
+    /// SGD with optional momentum / Nesterov / L2 weight decay.
+    Sgd {
+        /// Learning rate.
+        lr: f64,
+        /// Momentum coefficient (0 disables the velocity slot).
+        momentum: f64,
+        /// Nesterov lookahead.
+        nesterov: bool,
+        /// L2 weight decay added to the gradient.
+        weight_decay: f64,
+    },
+    /// Adam / AdamW (Kingma & Ba) with bias correction.
+    Adam {
+        /// Learning rate.
+        lr: f64,
+        /// First-moment decay.
+        beta1: f64,
+        /// Second-moment decay.
+        beta2: f64,
+        /// Denominator fuzz.
+        eps: f64,
+        /// Weight decay; coupled (into the gradient) unless `decoupled`.
+        weight_decay: f64,
+        /// `true` = AdamW (decay applied directly to the parameter).
+        decoupled: bool,
+    },
+    /// Adagrad: accumulated squared gradients.
+    Adagrad {
+        /// Learning rate.
+        lr: f64,
+        /// Denominator fuzz.
+        eps: f64,
+    },
+    /// RMSProp: exponential moving average of squared gradients.
+    RmsProp {
+        /// Learning rate.
+        lr: f64,
+        /// Squared-gradient EMA decay.
+        alpha: f64,
+        /// Denominator fuzz.
+        eps: f64,
+    },
+}
+
+impl UpdateRule {
+    /// The rule behind a [`crate::coordinator::TrainConfig`] optimizer
+    /// string, mirroring `coordinator::trainer::make_optimizer` exactly
+    /// (so an eager run and a compiled run of the same config share one
+    /// arithmetic). Unknown names are an error.
+    pub fn from_config(optimizer: &str, lr: f64) -> Result<UpdateRule> {
+        match optimizer {
+            "sgd" => Ok(UpdateRule::Sgd { lr, momentum: 0.9, nesterov: false, weight_decay: 0.0 }),
+            "adam" => Ok(UpdateRule::Adam {
+                lr,
+                beta1: 0.9,
+                beta2: 0.999,
+                eps: 1e-8,
+                weight_decay: 0.0,
+                decoupled: false,
+            }),
+            "adamw" => Ok(UpdateRule::Adam {
+                lr,
+                beta1: 0.9,
+                beta2: 0.999,
+                eps: 1e-8,
+                weight_decay: 0.01,
+                decoupled: true,
+            }),
+            other => Err(Error::Config(format!("unknown optimizer `{other}`"))),
+        }
+    }
+
+    /// Number of per-parameter state tensors the rule carries.
+    pub fn state_slots(&self) -> usize {
+        match self {
+            UpdateRule::Sgd { momentum, .. } => usize::from(*momentum != 0.0),
+            UpdateRule::Adam { .. } => 2,
+            UpdateRule::Adagrad { .. } | UpdateRule::RmsProp { .. } => 1,
+        }
+    }
+
+    /// Whether [`UpdateRule::apply`] needs the scalar step-count tensor.
+    pub fn uses_step_count(&self) -> bool {
+        matches!(self, UpdateRule::Adam { .. })
+    }
+
+    /// Fresh (all-zeros) state for one parameter.
+    pub fn init_state(&self, param: &Tensor) -> Vec<Tensor> {
+        (0..self.state_slots())
+            .map(|_| Tensor::full(param.dims().to_vec(), 0.0, param.dtype()))
+            .collect()
+    }
+
+    /// One pure update: `(param, grad, state[, t]) -> (param', state')`.
+    ///
+    /// `state` must have exactly [`UpdateRule::state_slots`] entries and
+    /// `t` (the step count *after* incrementing, as a scalar tensor) must
+    /// be present iff [`UpdateRule::uses_step_count`]. Nothing is mutated;
+    /// every operation goes through the installed backend.
+    pub fn apply(
+        &self,
+        param: &Tensor,
+        grad: &Tensor,
+        state: &[Tensor],
+        t: Option<&Tensor>,
+    ) -> (Tensor, Vec<Tensor>) {
+        assert_eq!(state.len(), self.state_slots(), "update rule state arity");
+        match *self {
+            UpdateRule::Sgd { lr, momentum, nesterov, weight_decay } => {
+                let mut g = grad.clone();
+                if weight_decay != 0.0 {
+                    g = g.add(&param.mul_scalar(weight_decay));
+                }
+                if momentum != 0.0 {
+                    let v = state[0].mul_scalar(momentum).add(&g);
+                    let update =
+                        if nesterov { g.add(&v.mul_scalar(momentum)) } else { v.clone() };
+                    (param.sub(&update.mul_scalar(lr)), vec![v])
+                } else {
+                    (param.sub(&g.mul_scalar(lr)), vec![])
+                }
+            }
+            UpdateRule::Adam { lr, beta1, beta2, eps, weight_decay, decoupled } => {
+                let t = t.expect("Adam update needs the step-count tensor");
+                let mut g = grad.clone();
+                if weight_decay != 0.0 && !decoupled {
+                    g = g.add(&param.mul_scalar(weight_decay));
+                }
+                let m = state[0].mul_scalar(beta1).add(&g.mul_scalar(1.0 - beta1));
+                let v = state[1].mul_scalar(beta2).add(&g.mul(&g).mul_scalar(1.0 - beta2));
+                // bias correction as traced tensor math: 1 - beta^t
+                let bc1 = scalar(1.0).sub(&scalar(beta1).pow(t));
+                let bc2 = scalar(1.0).sub(&scalar(beta2).pow(t));
+                let mhat = m.div(&bc1);
+                let vhat = v.div(&bc2);
+                let mut update = mhat.div(&vhat.sqrt().add_scalar(eps)).mul_scalar(lr);
+                if weight_decay != 0.0 && decoupled {
+                    update = update.add(&param.mul_scalar(weight_decay * lr));
+                }
+                (param.sub(&update), vec![m, v])
+            }
+            UpdateRule::Adagrad { lr, eps } => {
+                let acc = state[0].add(&grad.mul(grad));
+                let update = grad.div(&acc.sqrt().add_scalar(eps)).mul_scalar(lr);
+                (param.sub(&update), vec![acc])
+            }
+            UpdateRule::RmsProp { lr, alpha, eps } => {
+                let sq =
+                    state[0].mul_scalar(alpha).add(&grad.mul(grad).mul_scalar(1.0 - alpha));
+                let update = grad.div(&sq.sqrt().add_scalar(eps)).mul_scalar(lr);
+                (param.sub(&update), vec![sq])
+            }
+        }
+    }
+}
+
+/// Branch-free global L2-norm gradient clipping, expressed in tensor ops
+/// so it is traceable: `scale = max_norm / max(norm, max_norm)` is exactly
+/// `1.0` when the norm is under the cap (multiplying by `1.0` is bitwise
+/// identity for finite f32), and `max_norm / norm` otherwise — no
+/// data-dependent host branch, so the same formula runs eagerly and inside
+/// a compiled train step. Returns the clipped gradients and the pre-clip
+/// global norm (a scalar tensor).
+pub fn clip_grads(grads: &[Tensor], max_norm: f64) -> (Vec<Tensor>, Tensor) {
+    let mut total = scalar(0.0);
+    for g in grads {
+        total = total.add(&g.norm_sq());
+    }
+    let norm = total.sqrt();
+    let scale = scalar(max_norm).div(&norm.maximum(&scalar(max_norm)));
+    (grads.iter().map(|g| g.mul(&scale)).collect(), norm)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn from_config_rejects_unknown() {
+        assert!(UpdateRule::from_config("sgd", 0.1).is_ok());
+        assert!(UpdateRule::from_config("adam", 0.1).is_ok());
+        assert!(UpdateRule::from_config("adamw", 0.1).is_ok());
+        assert!(UpdateRule::from_config("lion", 0.1).is_err());
+    }
+
+    #[test]
+    fn sgd_momentum_rule_matches_hand_math() {
+        let rule = UpdateRule::Sgd { lr: 1.0, momentum: 0.5, nesterov: false, weight_decay: 0.0 };
+        let p = Tensor::from_slice(&[0.0f32], [1]);
+        let g = Tensor::from_slice(&[1.0f32], [1]);
+        let s0 = rule.init_state(&p);
+        let (p1, s1) = rule.apply(&p, &g, &s0, None); // v=1, p=-1
+        let (p2, _) = rule.apply(&p1, &g, &s1, None); // v=1.5, p=-2.5
+        assert!((p1.item() + 1.0).abs() < 1e-6);
+        assert!((p2.item() + 2.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn adam_rule_first_step_is_lr_sized() {
+        let rule = UpdateRule::Adam {
+            lr: 0.01,
+            beta1: 0.9,
+            beta2: 0.999,
+            eps: 1e-8,
+            weight_decay: 0.0,
+            decoupled: false,
+        };
+        let p = Tensor::from_slice(&[0.0f32], [1]);
+        let g = Tensor::from_slice(&[123.0f32], [1]);
+        let t = Tensor::from_slice(&[1.0f32], []);
+        let (p1, st) = rule.apply(&p, &g, &rule.init_state(&p), Some(&t));
+        assert!((p1.item().abs() - 0.01).abs() < 1e-4);
+        assert_eq!(st.len(), 2);
+    }
+
+    #[test]
+    fn rule_is_pure() {
+        let rule = UpdateRule::RmsProp { lr: 0.1, alpha: 0.99, eps: 1e-8 };
+        let p = Tensor::from_slice(&[3.0f32], [1]);
+        let g = Tensor::from_slice(&[1.0f32], [1]);
+        let s = rule.init_state(&p);
+        let _ = rule.apply(&p, &g, &s, None);
+        // inputs untouched
+        assert_eq!(p.item(), 3.0);
+        assert_eq!(g.item(), 1.0);
+        assert_eq!(s[0].item(), 0.0);
+    }
+
+    #[test]
+    fn clip_is_identity_under_cap_and_scales_over() {
+        let g = Tensor::from_slice(&[3.0f32, 4.0], [2]);
+        let (clipped, norm) = clip_grads(&[g.clone()], 10.0);
+        assert!((norm.item() - 5.0).abs() < 1e-5);
+        for (a, b) in clipped[0].to_vec().iter().zip(g.to_vec()) {
+            assert_eq!(a.to_bits(), b.to_bits(), "under-cap clip must be bitwise identity");
+        }
+        let (clipped, norm) = clip_grads(&[g], 1.0);
+        assert!((norm.item() - 5.0).abs() < 1e-5);
+        let v = clipped[0].to_vec();
+        assert!((v[0] - 0.6).abs() < 1e-6 && (v[1] - 0.8).abs() < 1e-6);
+    }
+}

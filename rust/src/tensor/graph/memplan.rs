@@ -30,12 +30,39 @@ pub struct MemoryPlan {
     /// Total distinct slots — the planned peak buffer count. The naive
     /// plan (keep everything) would use one slot per instruction.
     pub num_slots: usize,
+    /// Per constant-pool slot: the index of the last instruction that
+    /// reads it, or `None` if the constant is unused or is itself a
+    /// requested output (and therefore must survive the whole run). This
+    /// is the donation frontier: a caller-owned input substituted into a
+    /// droppable slot can be released back to the memory manager as soon
+    /// as that instruction retires, letting `params'` reuse the storage
+    /// `params` occupied instead of growing the footprint every step.
+    pub const_last_use: Vec<Option<usize>>,
 }
 
 impl MemoryPlan {
-    /// Build the plan from the instruction stream and requested outputs.
-    pub fn build(instrs: &[CompiledInstr], outputs: &[ValueRef]) -> MemoryPlan {
+    /// Build the plan from the instruction stream, requested outputs, and
+    /// the size of the constant pool the instructions index into.
+    pub fn build(
+        instrs: &[CompiledInstr],
+        outputs: &[ValueRef],
+        num_consts: usize,
+    ) -> MemoryPlan {
         let n = instrs.len();
+        let mut const_last_use: Vec<Option<usize>> = vec![None; num_consts];
+        for (j, instr) in instrs.iter().enumerate() {
+            for r in instr.inputs() {
+                if let ValueRef::Const(i) = r {
+                    const_last_use[*i] = Some(j);
+                }
+            }
+        }
+        // constants that are requested outputs are pinned (never donated)
+        for r in outputs {
+            if let ValueRef::Const(i) = r {
+                const_last_use[*i] = None;
+            }
+        }
         let mut last_use: Vec<usize> = (0..n).collect();
         for (j, instr) in instrs.iter().enumerate() {
             for r in instr.inputs() {
@@ -69,7 +96,7 @@ impl MemoryPlan {
                 free.push(slot[dead]);
             }
         }
-        MemoryPlan { slot, last_use, dies_after, is_output, num_slots }
+        MemoryPlan { slot, last_use, dies_after, is_output, num_slots, const_last_use }
     }
 
     /// Verify that no two values with overlapping lifetimes share a slot.
@@ -116,7 +143,7 @@ mod tests {
             op(Op::Abs, vec![ValueRef::Out(1)]),
             op(Op::Exp, vec![ValueRef::Out(2)]),
         ];
-        let plan = MemoryPlan::build(&instrs, &[ValueRef::Out(3)]);
+        let plan = MemoryPlan::build(&instrs, &[ValueRef::Out(3)], 0);
         assert_eq!(plan.num_slots, 2);
         plan.check_no_aliasing().unwrap();
     }
@@ -132,10 +159,23 @@ mod tests {
             op(Op::Abs, vec![ValueRef::Out(1)]),
         ];
         // both v0 and v2 requested: v0 must not be freed at its last use
-        let plan = MemoryPlan::build(&instrs, &[ValueRef::Out(0), ValueRef::Out(2)]);
+        let plan = MemoryPlan::build(&instrs, &[ValueRef::Out(0), ValueRef::Out(2)], 0);
         assert!(plan.is_output[0] && plan.is_output[2]);
         assert!(plan.dies_after.iter().all(|d| !d.contains(&0)));
         plan.check_no_aliasing().unwrap();
+    }
+
+    #[test]
+    fn const_last_use_tracks_donation_frontier() {
+        let instrs = vec![
+            op(Op::Neg, vec![ValueRef::Const(0)]),
+            op(Op::Add, vec![ValueRef::Out(0), ValueRef::Const(0)]),
+            op(Op::Abs, vec![ValueRef::Out(1)]),
+        ];
+        let plan = MemoryPlan::build(&instrs, &[ValueRef::Out(2), ValueRef::Const(2)], 3);
+        assert_eq!(plan.const_last_use[0], Some(1)); // last read at instr 1
+        assert_eq!(plan.const_last_use[1], None); // never read
+        assert_eq!(plan.const_last_use[2], None); // requested output: pinned
     }
 
     #[test]
@@ -150,7 +190,7 @@ mod tests {
                 vec![],
             ),
         ];
-        let plan = MemoryPlan::build(&instrs, &[ValueRef::Out(1)]);
+        let plan = MemoryPlan::build(&instrs, &[ValueRef::Out(1)], 0);
         // v0 is never read: it dies right after its own definition and
         // its slot is recycled for v1
         assert_eq!(plan.last_use[0], 0);

@@ -404,6 +404,15 @@ pub struct ExecStats {
     pub naive_peak_bytes: usize,
     /// Distinct buffer slots the plan used.
     pub buffer_slots: usize,
+    /// Bytes of caller-donated inputs whose *handles* were released back
+    /// to the memory manager before the end of the run (see
+    /// [`CompiledProgram::run_owned`]). Accounting is by handle: if the
+    /// caller retains another handle to the same storage (e.g. the very
+    /// first step of a compiled train loop, where the model's `Variable`s
+    /// still hold the parameter tensors), the bytes count as donated here
+    /// but the storage is not actually freed until that alias drops; from
+    /// the second step on, loop-owned inputs donate for real.
+    pub donated_bytes: usize,
     /// Alloc/free events in execution order, replayable via
     /// [`crate::memory::telemetry::replay`].
     pub events: Vec<AllocEvent>,
@@ -462,11 +471,43 @@ impl CompiledProgram {
         overrides: &[(usize, &Tensor)],
         instrument: bool,
     ) -> Result<(Vec<Tensor>, ExecStats)> {
-        let get_const = |i: usize| -> &Tensor {
-            overrides.iter().find(|(k, _)| *k == i).map(|(_, t)| *t).unwrap_or(&self.consts[i])
-        };
-        let mut vals: Vec<Option<Tensor>> = vec![None; self.instrs.len()];
-        let mut def_bytes: Vec<usize> = vec![0; self.instrs.len()];
+        let owned: Vec<(usize, Tensor)> =
+            overrides.iter().map(|(i, t)| (*i, (*t).clone())).collect();
+        self.exec_impl(backend, owned, &[], instrument)
+    }
+
+    /// Execute with *owned* constant-pool substitutions and input
+    /// donation: every slot listed in `donate` is dropped back to the
+    /// installed memory manager right after its last consuming
+    /// instruction (per [`MemoryPlan::const_last_use`]), instead of
+    /// staying live for the whole run. With a caching manager this lets
+    /// an output reuse the storage of the input it replaces — the
+    /// `params' ← params` round-trip of a compiled train step then runs
+    /// at a steady footprint rather than two copies of the model.
+    ///
+    /// Only pass slots whose tensors the caller truly relinquishes
+    /// (other live handles to the same storage defeat the donation, and
+    /// slots pinned as program outputs are never dropped).
+    pub fn run_owned(
+        &self,
+        backend: &dyn TensorBackend,
+        overrides: Vec<(usize, Tensor)>,
+        donate: &[usize],
+        instrument: bool,
+    ) -> Result<(Vec<Tensor>, ExecStats)> {
+        self.exec_impl(backend, overrides, donate, instrument)
+    }
+
+    fn exec_impl(
+        &self,
+        backend: &dyn TensorBackend,
+        overrides: Vec<(usize, Tensor)>,
+        donate: &[usize],
+        instrument: bool,
+    ) -> Result<(Vec<Tensor>, ExecStats)> {
+        let nc = self.consts.len();
+        let mut ovr: Vec<Option<Tensor>> = vec![None; nc];
+        let mut ovr_bytes: Vec<usize> = vec![0; nc];
         let mut stats = ExecStats {
             executed_instrs: self.instrs.len(),
             executed_ops: self.primitive_op_count(),
@@ -475,11 +516,34 @@ impl CompiledProgram {
         };
         let mut live = crate::meter::PeakValueMeter::new();
         let mut naive_bytes = 0usize;
+        for (i, t) in overrides {
+            let bytes = t.numel() * t.dtype().size_of();
+            ovr_bytes[i] = bytes;
+            ovr[i] = Some(t);
+            // substituted inputs are live at entry; the naive plan keeps
+            // them to the end, donation retires them at last use
+            live.add(bytes);
+            naive_bytes += bytes;
+        }
+        // donation frontier: override slots to release after instruction j
+        let mut donate_after: Vec<Vec<usize>> = vec![Vec::new(); self.instrs.len()];
+        for &ci in donate {
+            if ci < nc && ovr[ci].is_some() {
+                if let Some(j) = self.plan.const_last_use[ci] {
+                    donate_after[j].push(ci);
+                }
+            }
+        }
+        let mut vals: Vec<Option<Tensor>> = vec![None; self.instrs.len()];
+        let mut def_bytes: Vec<usize> = vec![0; self.instrs.len()];
         for (j, instr) in self.instrs.iter().enumerate() {
             let out = {
                 let resolve = |r: &ValueRef| -> &Tensor {
                     match r {
-                        ValueRef::Const(i) => get_const(*i),
+                        ValueRef::Const(i) => match &ovr[*i] {
+                            Some(t) => t,
+                            None => &self.consts[*i],
+                        },
                         ValueRef::Out(i) => {
                             vals[*i].as_ref().expect("executor: value used after free")
                         }
@@ -523,6 +587,13 @@ impl CompiledProgram {
                     }
                 }
             }
+            for &ci in &donate_after[j] {
+                if let Some(t) = ovr[ci].take() {
+                    drop(t); // donated input returns to the manager early
+                    live.sub(ovr_bytes[ci]);
+                    stats.donated_bytes += ovr_bytes[ci];
+                }
+            }
         }
         stats.planned_peak_bytes = live.peak();
         stats.naive_peak_bytes = naive_bytes;
@@ -530,7 +601,10 @@ impl CompiledProgram {
             .outputs
             .iter()
             .map(|r| match r {
-                ValueRef::Const(i) => get_const(*i).clone(),
+                ValueRef::Const(i) => match &ovr[*i] {
+                    Some(t) => t.clone(),
+                    None => self.consts[*i].clone(),
+                },
                 ValueRef::Out(i) => vals[*i].clone().expect("executor: output freed"),
             })
             .collect();
@@ -571,7 +645,7 @@ pub fn compile(
             g.outputs.clone(),
         )
     };
-    let plan = MemoryPlan::build(&instrs, &outputs);
+    let plan = MemoryPlan::build(&instrs, &outputs, g.consts.len());
     Ok(CompiledProgram { consts: g.consts, instrs, outputs, plan, report })
 }
 
@@ -676,6 +750,38 @@ impl CompiledFn {
         self.call(cpu.as_ref(), args)
     }
 
+    /// Rebind example argument `arg` to a new tensor *without re-tracing*:
+    /// the value is written into the compiled program's constant pool, so
+    /// it becomes the default for direct [`CompiledProgram::run`]
+    /// executions (per-[`CompiledFn::call`] arguments still override it).
+    /// This is the per-step input swap of a long-running compiled loop —
+    /// shape and dtype are pinned by the trace, only the data changes.
+    pub fn rebind(&mut self, arg: usize, value: &Tensor) -> Result<()> {
+        if arg >= self.params.len() {
+            return Err(Error::msg(format!(
+                "rebind: argument {arg} out of range ({} traced)",
+                self.params.len()
+            )));
+        }
+        if *value.shape() != self.arg_shapes[arg] || value.dtype() != self.arg_dtypes[arg] {
+            return Err(Error::msg(format!(
+                "rebind arg {arg}: expected {} {}, got {} {}",
+                self.arg_shapes[arg],
+                self.arg_dtypes[arg].name(),
+                value.shape(),
+                value.dtype().name()
+            )));
+        }
+        match self.params[arg] {
+            Some(slot) => {
+                self.program.consts[slot] = value.clone();
+                Ok(())
+            }
+            // the traced function never read this argument: nothing to bind
+            None => Ok(()),
+        }
+    }
+
     /// The optimized program.
     pub fn program(&self) -> &CompiledProgram {
         &self.program
@@ -746,6 +852,56 @@ mod tests {
         assert!(Graph::from_program(&p, &[ValueRef::Out(0)]).is_err());
         let p2 = prog(vec![(fh(&[1.0], &[1]), vec![])]);
         assert!(Graph::from_program(&p2, &[ValueRef::Out(9)]).is_err());
+    }
+
+    #[test]
+    fn rebind_swaps_inputs_without_retracing() {
+        let ex = [Tensor::from_slice(&[1.0f32, 2.0], [2])];
+        let mut cf = trace_and_compile(&ex, |args| args[0].mul(&args[0])).unwrap();
+        let outs = cf.program().run(CpuBackend::shared().as_ref()).unwrap();
+        assert_eq!(outs[0].to_vec(), vec![1.0, 4.0]);
+        cf.rebind(0, &Tensor::from_slice(&[3.0f32, 4.0], [2])).unwrap();
+        let outs = cf.program().run(CpuBackend::shared().as_ref()).unwrap();
+        assert_eq!(outs[0].to_vec(), vec![9.0, 16.0]);
+        // shape mismatch is rejected, index out of range too
+        assert!(cf.rebind(0, &Tensor::zeros([3])).is_err());
+        assert!(cf.rebind(5, &Tensor::zeros([2])).is_err());
+    }
+
+    #[test]
+    fn donation_retires_inputs_early_and_lowers_peak() {
+        // two-instruction chain: p and g are dead after the first op
+        let be = TraceBackend::over_cpu_default();
+        let p = Tensor::from_slice(&vec![1.0f32; 1000], [1000]);
+        let g = Tensor::from_slice(&vec![0.5f32; 1000], [1000]);
+        let y = be.sub(&p, &g);
+        let z = be.tanh(&y);
+        let tracer = be.interposer();
+        let root = tracer.value_ref_of(&z).unwrap();
+        let pslot = tracer.const_index_of(&p).unwrap();
+        let gslot = tracer.const_index_of(&g).unwrap();
+        let opts =
+            CompileOptions { frozen_consts: vec![pslot, gslot], ..CompileOptions::none() };
+        let prog = compile(&tracer.program(), &[root], &opts).unwrap();
+        let cpu = CpuBackend::shared();
+        let fresh = || {
+            vec![
+                (pslot, Tensor::from_slice(&vec![2.0f32; 1000], [1000])),
+                (gslot, Tensor::from_slice(&vec![1.0f32; 1000], [1000])),
+            ]
+        };
+        let (outs_keep, keep) = prog.run_owned(cpu.as_ref(), fresh(), &[], false).unwrap();
+        let (outs_don, don) =
+            prog.run_owned(cpu.as_ref(), fresh(), &[pslot, gslot], false).unwrap();
+        assert_eq!(outs_keep[0].to_vec(), outs_don[0].to_vec());
+        assert_eq!(don.donated_bytes, 2 * 1000 * 4);
+        assert_eq!(keep.donated_bytes, 0);
+        assert!(
+            don.planned_peak_bytes < keep.planned_peak_bytes,
+            "donation did not lower the peak: {} vs {}",
+            don.planned_peak_bytes,
+            keep.planned_peak_bytes
+        );
     }
 
     #[test]

@@ -1,0 +1,65 @@
+//! Shared machine-readable bench output: every bench writes its snapshot
+//! as `BENCH_PR<N>.json` at the repo root through this one writer, so the
+//! row format (`[{"op", "ns_per_iter", "backend", ...extras}]`) cannot
+//! drift between benches. Hand-rolled JSON — the crate is dependency-free.
+
+/// One measurement row (plus free-form numeric extras, e.g. per-pass op
+/// counts for graph-compiler rows).
+pub struct BenchRecord {
+    /// Measured operation name.
+    pub op: String,
+    /// Nanoseconds per iteration (0 for non-timing rows).
+    pub ns_per_iter: f64,
+    /// Backend label.
+    pub backend: &'static str,
+    /// Additional numeric columns.
+    pub extras: Vec<(&'static str, f64)>,
+}
+
+impl BenchRecord {
+    /// Row without extras.
+    pub fn new(op: impl Into<String>, ns_per_iter: f64, backend: &'static str) -> BenchRecord {
+        BenchRecord { op: op.into(), ns_per_iter, backend, extras: Vec::new() }
+    }
+}
+
+/// Write `records` to `<repo root>/<file_name>`, replacing any previous
+/// snapshot (the perf trajectory accumulates across PRs via version
+/// control, one snapshot per PR).
+pub fn write_bench_json(file_name: &str, records: &[BenchRecord]) {
+    let path = format!("{}/{}", env!("CARGO_MANIFEST_DIR"), file_name);
+    let mut s = String::from("[\n");
+    for (i, r) in records.iter().enumerate() {
+        let mut row = format!(
+            "  {{\"op\": \"{}\", \"ns_per_iter\": {:.1}, \"backend\": \"{}\"",
+            r.op, r.ns_per_iter, r.backend
+        );
+        for (k, v) in &r.extras {
+            row.push_str(&format!(", \"{k}\": {v}"));
+        }
+        row.push_str(&format!("}}{}\n", if i + 1 < records.len() { "," } else { "" }));
+        s.push_str(&row);
+    }
+    s.push_str("]\n");
+    match std::fs::write(&path, s) {
+        Ok(()) => println!("\nwrote {path}"),
+        Err(e) => eprintln!("\nfailed to write {path}: {e}"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rows_render_as_json() {
+        let mut r = BenchRecord::new("matmul", 1234.5, "cpu");
+        r.extras.push(("gflops", 2.0));
+        // render through the same formatting path (no file I/O)
+        let row = format!(
+            "{{\"op\": \"{}\", \"ns_per_iter\": {:.1}, \"backend\": \"{}\"}}",
+            r.op, r.ns_per_iter, r.backend
+        );
+        assert!(row.contains("\"matmul\"") && row.contains("1234.5"));
+    }
+}

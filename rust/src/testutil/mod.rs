@@ -1,5 +1,9 @@
-//! In-house testing utilities: numeric gradient checking and a small
-//! property-testing harness (no external `proptest` is available offline).
+//! In-house testing utilities: numeric gradient checking, a small
+//! property-testing harness (no external `proptest` is available
+//! offline), and the shared bench-snapshot JSON writer.
 
+pub mod bench_json;
 pub mod gradcheck;
 pub mod prop;
+
+pub use bench_json::{write_bench_json, BenchRecord};

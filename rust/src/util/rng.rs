@@ -11,10 +11,22 @@ use std::sync::atomic::{AtomicU64, Ordering};
 static GLOBAL_SEED: AtomicU64 = AtomicU64::new(0x9E3779B97F4A7C15);
 static STREAM_COUNTER: AtomicU64 = AtomicU64::new(0);
 
-/// Set the global seed (affects generators created afterwards).
+/// Set the global seed. Affects generators created afterwards, and also
+/// resets the *calling thread's* generator so repeated `seed(s)` calls in
+/// one thread replay the same stream (training loops and the compiled-step
+/// parity tests rely on this).
 pub fn seed(s: u64) {
     GLOBAL_SEED.store(s, Ordering::SeqCst);
     STREAM_COUNTER.store(0, Ordering::SeqCst);
+    reseed_thread(s);
+}
+
+/// Replace the calling thread's generator with a fresh one derived from
+/// `s`. Unlike [`seed`], this touches no global state: other threads'
+/// streams are unaffected, so concurrently running tests cannot perturb a
+/// determinism check.
+pub fn reseed_thread(s: u64) {
+    THREAD_RNG.with(|r| *r.borrow_mut() = Rng::new(s));
 }
 
 fn splitmix64(state: &mut u64) -> u64 {

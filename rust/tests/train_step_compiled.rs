@@ -1,0 +1,379 @@
+//! Compiled-train-step parity suite: a [`flashlight::coordinator`]
+//! compiled step (one traced program for forward + backward + clip +
+//! optimizer update, run through the graph compiler) must produce
+//! **bit-identical** parameter trajectories to the eager loop — with
+//! dropout enabled and gradient clipping on — single-process and at
+//! world=2 through `train_data_parallel`'s bucketed all-reduce.
+//!
+//! RNG discipline: tracing consumes one forward's worth of draws, so each
+//! run realigns the thread stream with `rng::reseed_thread` (the trainers
+//! do the equivalent internally by re-seeding after compilation).
+
+use std::sync::{Arc, Mutex, MutexGuard};
+
+use flashlight::autograd::Variable;
+use flashlight::coordinator::trainer::make_optimizer;
+use flashlight::coordinator::{
+    compile_step, train_classifier, train_data_parallel, train_lm, BatchSpec, TrainConfig,
+};
+use flashlight::data::{Dataset, TensorDataset, TransformDataset};
+use flashlight::models::{mlp, BertLike};
+use flashlight::nn::{categorical_cross_entropy, Dropout, Linear, Module, ReLU, Sequential};
+use flashlight::optim::{clip_grad_norm, Optimizer};
+use flashlight::pkg::vision::synthetic_image_classification;
+use flashlight::tensor::{default_backend, Tensor};
+use flashlight::util::rng;
+
+/// Tracing swaps the process-global default backend and the parity
+/// assertions depend on the thread RNG stream, so the tests in this
+/// binary must not interleave tensor work: each takes this lock first.
+static SERIAL: Mutex<()> = Mutex::new(());
+
+fn serial() -> MutexGuard<'static, ()> {
+    SERIAL.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+/// Bit patterns of every parameter (the trajectory unit).
+fn param_bits(params: &[Tensor]) -> Vec<Vec<u32>> {
+    params.iter().map(|p| p.to_vec().iter().map(|v| v.to_bits()).collect()).collect()
+}
+
+/// Deterministic classifier batches: `n_batches` of `[b, feat]` inputs
+/// with `[b]` integer targets.
+fn fixed_batches(n_batches: usize, b: usize, feat: usize, classes: usize) -> Vec<Vec<Tensor>> {
+    (0..n_batches)
+        .map(|k| {
+            let xs: Vec<f32> = (0..b * feat)
+                .map(|j| (((j * 37 + k * 101) % 19) as f32) * 0.1 - 0.9)
+                .collect();
+            let ys: Vec<i64> = (0..b).map(|j| ((j + k) % classes) as i64).collect();
+            vec![Tensor::from_slice(&xs, [b, feat]), Tensor::from_slice(&ys, [b])]
+        })
+        .collect()
+}
+
+/// MLP with dropout, deterministically initialized.
+fn dropout_mlp(seed: u64, feat: usize, hidden: usize, classes: usize) -> Sequential {
+    rng::reseed_thread(seed);
+    let mut m = Sequential::new();
+    m.add(Linear::new(feat, hidden));
+    m.add(ReLU);
+    m.add(Dropout::new(0.25));
+    m.add(Linear::new(hidden, classes));
+    m
+}
+
+fn restore(model: &Sequential, p0: &[Tensor]) {
+    for (p, t) in model.params().iter().zip(p0) {
+        p.set_tensor(t.clone());
+        p.zero_grad();
+    }
+}
+
+/// The eager reference loop: exactly `train_classifier`'s arithmetic.
+fn eager_trajectory(
+    model: &mut Sequential,
+    p0: &[Tensor],
+    batches: &[Vec<Tensor>],
+    cfg: &TrainConfig,
+    steps: usize,
+) -> Vec<Vec<Vec<u32>>> {
+    restore(model, p0);
+    model.set_train(true);
+    rng::reseed_thread(999);
+    let mut opt = make_optimizer(cfg, model.params()).unwrap();
+    let mut traj = Vec::with_capacity(steps);
+    for s in 0..steps {
+        let batch = &batches[s % batches.len()];
+        let out = model.forward(&Variable::constant(batch[0].clone()));
+        let loss = categorical_cross_entropy(&out, &batch[1]);
+        loss.backward();
+        if cfg.grad_clip > 0.0 {
+            clip_grad_norm(opt.params(), cfg.grad_clip);
+        }
+        opt.step();
+        opt.zero_grad();
+        let now: Vec<Tensor> = model.params().iter().map(|p| p.tensor()).collect();
+        traj.push(param_bits(&now));
+    }
+    traj
+}
+
+/// The compiled loop over the same model/batches.
+fn compiled_trajectory(
+    model: &mut Sequential,
+    p0: &[Tensor],
+    batches: &[Vec<Tensor>],
+    cfg: &TrainConfig,
+    steps: usize,
+) -> Vec<Vec<Vec<u32>>> {
+    restore(model, p0);
+    model.set_train(true);
+    let spec = BatchSpec::like(&batches[0]);
+    let step = compile_step(&*model, cfg, &spec).unwrap();
+    // tracing consumed RNG draws; realign with the eager run's stream
+    rng::reseed_thread(999);
+    let be = default_backend();
+    let mut params: Vec<Tensor> = model.params().iter().map(|p| p.tensor()).collect();
+    let mut state = step.init_state(&params);
+    let mut traj = Vec::with_capacity(steps);
+    for s in 0..steps {
+        let res = step.run(be.as_ref(), params, state, &batches[s % batches.len()], true).unwrap();
+        params = res.params;
+        state = res.state;
+        assert!(res.loss.is_finite(), "step {s}: non-finite loss {}", res.loss);
+        traj.push(param_bits(&params));
+    }
+    traj
+}
+
+fn assert_trajectories_identical(eager: &[Vec<Vec<u32>>], compiled: &[Vec<Vec<u32>>], tag: &str) {
+    assert_eq!(eager.len(), compiled.len());
+    for (s, (e, c)) in eager.iter().zip(compiled).enumerate() {
+        for (i, (ep, cp)) in e.iter().zip(c).enumerate() {
+            assert_eq!(
+                ep, cp,
+                "{tag}: parameter {i} diverged from the eager trajectory at step {s}"
+            );
+        }
+    }
+}
+
+fn parity_case(optimizer: &str) {
+    let mut model = dropout_mlp(11, 12, 16, 4);
+    let p0: Vec<Tensor> = model.params().iter().map(|p| p.tensor()).collect();
+    let batches = fixed_batches(3, 8, 12, 4);
+    let cfg = TrainConfig {
+        optimizer: optimizer.into(),
+        lr: 0.05,
+        grad_clip: 0.05, // tight cap: clipping actually fires
+        ..Default::default()
+    };
+    let eager = eager_trajectory(&mut model, &p0, &batches, &cfg, 20);
+    let compiled = compiled_trajectory(&mut model, &p0, &batches, &cfg, 20);
+    assert_trajectories_identical(&eager, &compiled, optimizer);
+}
+
+#[test]
+fn sgd_momentum_with_dropout_and_clip_is_bit_identical_over_20_steps() {
+    let _serial = serial();
+    parity_case("sgd");
+}
+
+#[test]
+fn adamw_with_dropout_and_clip_is_bit_identical_over_20_steps() {
+    let _serial = serial();
+    parity_case("adamw");
+}
+
+#[test]
+fn compiled_step_fuses_ops_and_donation_lowers_peak() {
+    let _serial = serial();
+    // parameters dominate the footprint, so donating them must move the peak
+    let mut model = mlp(&[32, 16, 4]);
+    model.set_train(true);
+    let batches = fixed_batches(1, 8, 32, 4);
+    let cfg = TrainConfig { optimizer: "sgd".into(), lr: 0.1, ..Default::default() };
+    let step = compile_step(&model, &cfg, &BatchSpec::like(&batches[0])).unwrap();
+
+    // fusion is visible in the per-pass report and in the op counts
+    let report = step.report();
+    assert!(report.changed_by("fuse") > 0, "no fusion happened: {}", report.summary());
+    let prog = step.program();
+    assert!(
+        prog.len() < prog.primitive_op_count(),
+        "fused program should execute fewer instructions ({}) than primitive ops ({})",
+        prog.len(),
+        prog.primitive_op_count()
+    );
+
+    // donation: same step, same inputs, lower planned peak
+    let be = default_backend();
+    let params: Vec<Tensor> = model.params().iter().map(|p| p.tensor()).collect();
+    let run = |donate: bool| {
+        let ps: Vec<Tensor> = params.iter().map(|p| p.copy()).collect();
+        let state = step.init_state(&ps);
+        step.run(be.as_ref(), ps, state, &batches[0], donate).unwrap()
+    };
+    let kept = run(false);
+    let donated = run(true);
+    assert_eq!(kept.stats.donated_bytes, 0);
+    assert!(donated.stats.donated_bytes > 0);
+    assert!(
+        donated.stats.planned_peak_bytes < kept.stats.planned_peak_bytes,
+        "donation did not lower the planned peak: {} vs {}",
+        donated.stats.planned_peak_bytes,
+        kept.stats.planned_peak_bytes
+    );
+    // both runs computed the same step (dropout-free model)
+    for (a, b) in kept.params.iter().zip(&donated.params) {
+        assert_eq!(param_bits(&[a.clone()]), param_bits(&[b.clone()]));
+    }
+
+    // the backward/update split (the data-parallel composition, no
+    // clipping) reproduces the fused full program bitwise at world=1
+    let ps: Vec<Tensor> = params.iter().map(|p| p.copy()).collect();
+    let state = step.init_state(&ps);
+    let (grads, loss) = step.run_backward(be.as_ref(), &ps, &batches[0]).unwrap();
+    let (p2, _, _) = step.run_update(be.as_ref(), ps, grads, state, true).unwrap();
+    let full = run(true);
+    assert_eq!(loss.to_bits(), full.loss.to_bits());
+    for (a, b) in p2.iter().zip(&full.params) {
+        assert_eq!(param_bits(&[a.clone()]), param_bits(&[b.clone()]));
+    }
+}
+
+#[test]
+fn world2_data_parallel_compiled_matches_eager_bitwise() {
+    let _serial = serial();
+    // deterministic replicas: random init is overwritten with fixed values
+    let make_model = || -> Box<dyn Module> {
+        let mut m = Sequential::new();
+        m.add(Linear::new(8, 8));
+        m.add(ReLU);
+        m.add(Linear::new(8, 3));
+        for (i, p) in m.params().iter().enumerate() {
+            let n = p.numel();
+            let vals: Vec<f32> =
+                (0..n).map(|j| ((i * 131 + j * 17) % 23) as f32 * 0.05 - 0.5).collect();
+            p.set_tensor(Tensor::from_slice(&vals, p.dims()));
+        }
+        Box::new(m)
+    };
+    let make_data = |rank: usize| -> Arc<dyn Dataset> {
+        let (n, feat, classes) = (8usize, 8usize, 3usize);
+        let xs: Vec<f32> = (0..n * feat)
+            .map(|j| (((j * 37 + rank * 101) % 19) as f32) * 0.1 - 0.9)
+            .collect();
+        let ys: Vec<i64> = (0..n).map(|j| ((j + rank) % classes) as i64).collect();
+        Arc::new(TensorDataset::new(vec![
+            Tensor::from_slice(&xs, [n, feat]),
+            Tensor::from_slice(&ys, [n]),
+        ]))
+    };
+    let base = TrainConfig {
+        optimizer: "sgd".into(),
+        lr: 0.05,
+        steps: 20,
+        batch_size: 4,
+        workers: 2,
+        log_every: 1,
+        ..Default::default()
+    };
+    let eager = train_data_parallel(make_model, make_data, &base).unwrap();
+    let cfg = TrainConfig { compile_step: true, ..base };
+    let compiled = train_data_parallel(make_model, make_data, &cfg).unwrap();
+    assert_eq!(eager.len(), 2);
+    assert_eq!(compiled.len(), 2);
+    for rank in 0..2 {
+        let e = &eager[rank].loss_curve;
+        let c = &compiled[rank].loss_curve;
+        assert_eq!(e.len(), 20, "log_every=1 must log every step");
+        for ((es, el), (cs, cl)) in e.iter().zip(c) {
+            assert_eq!(es, cs);
+            assert_eq!(
+                el.to_bits(),
+                cl.to_bits(),
+                "rank {rank} step {es}: compiled loss {cl} != eager loss {el}"
+            );
+        }
+    }
+}
+
+#[test]
+fn train_classifier_cfg_path_matches_eager_end_to_end() {
+    let _serial = serial();
+    let dataset = || -> Arc<dyn Dataset> {
+        let ds = synthetic_image_classification(64, 1, 8, 4, 3);
+        Arc::new(TransformDataset::new(ds, |mut s| {
+            let n = s[0].numel();
+            s[0] = s[0].reshape(&[1, n as isize]);
+            s
+        }))
+    };
+    let fresh_model = || {
+        rng::reseed_thread(5);
+        let mut m = Sequential::new();
+        m.add(Linear::new(64, 32));
+        m.add(ReLU);
+        m.add(Dropout::new(0.2));
+        m.add(Linear::new(32, 4));
+        m
+    };
+    let base = TrainConfig {
+        optimizer: "adamw".into(),
+        lr: 3e-3,
+        steps: 12,
+        batch_size: 16,
+        grad_clip: 0.1,
+        log_every: 3,
+        eval_batches: 2,
+        seed: 42,
+        ..Default::default()
+    };
+    let mut m1 = fresh_model();
+    let eager = train_classifier(&mut m1, dataset(), &base, |_, _| {}).unwrap();
+    let mut m2 = fresh_model();
+    let cfg = TrainConfig { compile_step: true, ..base };
+    let compiled = train_classifier(&mut m2, dataset(), &cfg, |_, _| {}).unwrap();
+
+    assert_eq!(eager.loss_curve.len(), compiled.loss_curve.len());
+    for ((es, el), (cs, cl)) in eager.loss_curve.iter().zip(&compiled.loss_curve) {
+        assert_eq!(es, cs);
+        assert_eq!(el.to_bits(), cl.to_bits(), "loss curves diverged at step {es}");
+    }
+    let pe: Vec<Tensor> = m1.params().iter().map(|p| p.tensor()).collect();
+    let pc: Vec<Tensor> = m2.params().iter().map(|p| p.tensor()).collect();
+    assert_eq!(param_bits(&pe), param_bits(&pc), "final parameters diverged");
+    assert_eq!(eager.eval_error.unwrap().to_bits(), compiled.eval_error.unwrap().to_bits());
+}
+
+#[test]
+fn train_lm_cfg_path_matches_eager_end_to_end() {
+    let _serial = serial();
+    let dataset = || -> Arc<dyn Dataset> {
+        let (n, l1) = (24usize, 7usize);
+        let ids: Vec<i64> = (0..n * l1).map(|j| ((j * 13 + 5) % 16) as i64).collect();
+        Arc::new(TensorDataset::new(vec![
+            Tensor::from_slice(&ids, [n, l1]).astype(flashlight::tensor::DType::I64),
+        ]))
+    };
+    let fresh_model = || {
+        rng::reseed_thread(3);
+        BertLike::new(16, 8, 2, 1, 12)
+    };
+    let base = TrainConfig {
+        optimizer: "adam".into(),
+        lr: 1e-3,
+        steps: 6,
+        batch_size: 4,
+        grad_clip: 0.5,
+        log_every: 2,
+        seed: 17,
+        ..Default::default()
+    };
+    let m1 = fresh_model();
+    let eager = train_lm(&m1, dataset(), &base, |_, _| {}).unwrap();
+    let m2 = fresh_model();
+    let cfg = TrainConfig { compile_step: true, ..base };
+    let compiled = train_lm(&m2, dataset(), &cfg, |_, _| {}).unwrap();
+
+    assert_eq!(eager.loss_curve.len(), compiled.loss_curve.len());
+    for ((es, el), (cs, cl)) in eager.loss_curve.iter().zip(&compiled.loss_curve) {
+        assert_eq!(es, cs);
+        assert_eq!(el.to_bits(), cl.to_bits(), "LM loss curves diverged at step {es}");
+    }
+    let pe: Vec<Tensor> = m1.params().iter().map(|p| p.tensor()).collect();
+    let pc: Vec<Tensor> = m2.params().iter().map(|p| p.tensor()).collect();
+    assert_eq!(param_bits(&pe), param_bits(&pc), "final LM parameters diverged");
+}
+
+#[test]
+fn unknown_optimizer_is_an_error_not_a_silent_adam() {
+    let _serial = serial();
+    let cfg = TrainConfig { optimizer: "lion".into(), ..Default::default() };
+    assert!(make_optimizer(&cfg, Vec::new()).is_err());
+    let model = mlp(&[4, 2]);
+    let batches = fixed_batches(1, 2, 4, 2);
+    assert!(compile_step(&model, &cfg, &BatchSpec::like(&batches[0])).is_err());
+}
