@@ -1,0 +1,135 @@
+//! Serving-engine throughput snapshot -> BENCH_PR5.json.
+//!
+//! Two comparisons, matching the acceptance criteria:
+//! - **batched vs unbatched** scoring tokens/s through the compiled
+//!   session (dynamic batcher at max_batch 8 vs one-by-one service), and
+//! - **cached vs uncached** autoregressive decode tokens/s (per-layer KV
+//!   cache vs full-context recompute).
+//!
+//! Run: `cargo bench --bench serve`
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use flashlight::models::BertLike;
+use flashlight::serve::{generate, Engine, EngineConfig, GenerateOptions, Sampling};
+use flashlight::testutil::{write_bench_json, BenchRecord};
+use flashlight::util::rng::Rng;
+use flashlight::Tensor;
+
+const VOCAB: usize = 64;
+const SEQ: usize = 16;
+const REQUESTS: usize = 64;
+const PROMPT: usize = 8;
+const NEW_TOKENS: usize = 32;
+
+fn main() {
+    flashlight::util::rng::seed(42);
+    let model = Arc::new(BertLike::new(VOCAB, 64, 4, 2, PROMPT + NEW_TOKENS + SEQ));
+    let mut rng = Rng::new(7);
+    let inputs: Vec<Tensor> = (0..REQUESTS)
+        .map(|_| {
+            let ids: Vec<i64> = (0..SEQ).map(|_| rng.below(VOCAB) as i64).collect();
+            Tensor::from_slice(&ids, [SEQ])
+        })
+        .collect();
+    let mut records = Vec::new();
+
+    // ---- batched vs unbatched scoring ------------------------------------
+    let cfg_unbatched = EngineConfig {
+        max_batch_size: 1,
+        max_wait: Duration::from_micros(100),
+        workers: 1,
+    };
+    let engine = Engine::start_lm(Arc::clone(&model), SEQ, &[1], &cfg_unbatched).unwrap();
+    let t0 = Instant::now();
+    for x in &inputs {
+        let _ = engine.infer(x.copy()).unwrap();
+    }
+    let unbatched_secs = t0.elapsed().as_secs_f64();
+    let stats = engine.stats();
+    engine.shutdown();
+    let unbatched_tps = (REQUESTS * SEQ) as f64 / unbatched_secs;
+    let mut row = BenchRecord::new(
+        "serve_score_unbatched",
+        unbatched_secs * 1e9 / REQUESTS as f64,
+        "cpu",
+    );
+    row.extras.push(("tokens_per_sec", unbatched_tps));
+    row.extras.push(("requests", REQUESTS as f64));
+    row.extras.push(("batches", stats.batcher.batches as f64));
+    row.extras.push(("latency_p50_us", stats.batcher.latency_p50_us));
+    row.extras.push(("latency_p99_us", stats.batcher.latency_p99_us));
+    records.push(row);
+
+    let cfg_batched = EngineConfig {
+        max_batch_size: 8,
+        max_wait: Duration::from_millis(5),
+        workers: 2,
+    };
+    let engine = Engine::start_lm(Arc::clone(&model), SEQ, &[1, 8], &cfg_batched).unwrap();
+    let t0 = Instant::now();
+    let handles: Vec<_> = inputs.iter().map(|x| engine.submit(x.copy())).collect();
+    for h in handles {
+        let _ = h.wait().unwrap();
+    }
+    let batched_secs = t0.elapsed().as_secs_f64();
+    let stats = engine.stats();
+    engine.shutdown();
+    let batched_tps = (REQUESTS * SEQ) as f64 / batched_secs;
+    let mut row = BenchRecord::new(
+        "serve_score_batched",
+        batched_secs * 1e9 / REQUESTS as f64,
+        "cpu",
+    );
+    row.extras.push(("tokens_per_sec", batched_tps));
+    row.extras.push(("requests", REQUESTS as f64));
+    row.extras.push(("batches", stats.batcher.batches as f64));
+    row.extras.push(("mean_batch_fill", stats.batcher.mean_batch_fill));
+    row.extras.push(("latency_p50_us", stats.batcher.latency_p50_us));
+    row.extras.push(("latency_p99_us", stats.batcher.latency_p99_us));
+    row.extras.push(("speedup_vs_unbatched", batched_tps / unbatched_tps));
+    records.push(row);
+    println!(
+        "scoring: unbatched {unbatched_tps:.0} tok/s, batched {batched_tps:.0} tok/s \
+         ({:.2}x)",
+        batched_tps / unbatched_tps
+    );
+
+    // ---- cached vs uncached decode ---------------------------------------
+    let prompt: Vec<i64> = (0..PROMPT).map(|i| (i * 5 % VOCAB) as i64).collect();
+    let opts = |use_cache| GenerateOptions {
+        max_new_tokens: NEW_TOKENS,
+        sampling: Sampling::Greedy,
+        seed: 3,
+        use_cache,
+    };
+    let uncached = generate(&model, &prompt, &opts(false)).unwrap();
+    let cached = generate(&model, &prompt, &opts(true)).unwrap();
+    assert_eq!(cached.tokens, uncached.tokens, "decode paths must agree bitwise");
+    for (name, rep) in [("decode_uncached", &uncached), ("decode_cached", &cached)] {
+        let mut row = BenchRecord::new(
+            name.to_string(),
+            rep.decode_secs * 1e9 / rep.generated.max(1) as f64,
+            "cpu",
+        );
+        row.extras.push(("tokens_per_sec", rep.tokens_per_sec));
+        row.extras.push(("generated", rep.generated as f64));
+        row.extras.push(("prefill_secs", rep.prefill_secs));
+        records.push(row);
+    }
+    if uncached.tokens_per_sec > 0.0 {
+        records.last_mut().unwrap().extras.push((
+            "speedup_vs_uncached",
+            cached.tokens_per_sec / uncached.tokens_per_sec,
+        ));
+    }
+    println!(
+        "decode: uncached {:.1} tok/s, cached {:.1} tok/s ({:.2}x)",
+        uncached.tokens_per_sec,
+        cached.tokens_per_sec,
+        cached.tokens_per_sec / uncached.tokens_per_sec.max(1e-9)
+    );
+
+    write_bench_json("BENCH_PR5.json", &records);
+}

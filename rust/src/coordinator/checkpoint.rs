@@ -119,14 +119,48 @@ fn read_tensor(r: &mut impl Read) -> Result<Tensor> {
     Ok(Tensor::from_host(host, shape))
 }
 
-/// Save parameter tensors in order.
-pub fn save_params(path: &Path, params: &[Variable]) -> Result<()> {
-    let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
-    f.write_all(MAGIC)?;
-    f.write_all(&(params.len() as u64).to_le_bytes())?;
+/// Stream the full checkpoint (magic, count, tensors) to `w`.
+fn write_params(w: &mut impl Write, params: &[Variable]) -> Result<()> {
+    w.write_all(MAGIC)?;
+    w.write_all(&(params.len() as u64).to_le_bytes())?;
     for p in params {
-        write_tensor(&mut f, &p.tensor())?;
+        write_tensor(w, &p.tensor())?;
     }
+    Ok(())
+}
+
+/// The sibling scratch file a save streams into before the atomic rename.
+fn tmp_path(path: &Path) -> std::path::PathBuf {
+    let mut s = path.as_os_str().to_os_string();
+    s.push(".tmp");
+    std::path::PathBuf::from(s)
+}
+
+/// Save parameter tensors in order.
+///
+/// The write is atomic with respect to crashes: the checkpoint streams
+/// into `<path>.tmp` and only a fully-written, fsynced file is renamed
+/// over `path` (rename within a filesystem replaces atomically). A
+/// process killed mid-write leaves at worst a stale `.tmp` behind — the
+/// previous checkpoint at `path` is never truncated or half-overwritten,
+/// so a training run interrupted during its periodic save can always
+/// resume from the last complete snapshot.
+pub fn save_params(path: &Path, params: &[Variable]) -> Result<()> {
+    let tmp = tmp_path(path);
+    let write = (|| -> Result<()> {
+        let mut f = std::io::BufWriter::new(std::fs::File::create(&tmp)?);
+        write_params(&mut f, params)?;
+        f.flush()?;
+        // durability before the swap: the rename must not land before the
+        // data it points at
+        f.get_ref().sync_all()?;
+        Ok(())
+    })();
+    if let Err(e) = write {
+        let _ = std::fs::remove_file(&tmp);
+        return Err(e);
+    }
+    std::fs::rename(&tmp, path)?;
     Ok(())
 }
 
@@ -191,6 +225,59 @@ mod tests {
         assert!(load_params(&path, &b.params()).is_err());
         let c = Linear::new_no_bias(4, 3);
         assert!(load_params(&path, &c.params()).is_err()); // count mismatch
+    }
+
+    /// A writer that fails once `budget` bytes have been accepted —
+    /// simulates a disk-full / crash partway through a checkpoint stream.
+    struct FailAfter {
+        written: Vec<u8>,
+        budget: usize,
+    }
+
+    impl Write for FailAfter {
+        fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+            if self.written.len() + buf.len() > self.budget {
+                return Err(std::io::Error::other("simulated mid-write failure"));
+            }
+            self.written.extend_from_slice(buf);
+            Ok(buf.len())
+        }
+        fn flush(&mut self) -> std::io::Result<()> {
+            Ok(())
+        }
+    }
+
+    #[test]
+    fn mid_write_failure_never_corrupts_existing_checkpoint() {
+        let dir = std::env::temp_dir().join("fl_ckpt_atomic");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("m.ckpt");
+        let a = Linear::new(6, 5);
+        save_params(&path, &a.params()).unwrap();
+        let golden = std::fs::read(&path).unwrap();
+
+        // the streaming format really does fail partway through a tensor
+        let b = Linear::new(6, 5);
+        let mut failing = FailAfter { written: Vec::new(), budget: 24 };
+        assert!(write_params(&mut failing, &b.params()).is_err());
+        assert!(!failing.written.is_empty(), "failure must be mid-stream, not at byte 0");
+
+        // a crashed save leaves exactly those partial bytes in the scratch
+        // file; the checkpoint itself must be untouched and loadable
+        let tmp = tmp_path(&path);
+        std::fs::write(&tmp, &failing.written).unwrap();
+        assert_eq!(std::fs::read(&path).unwrap(), golden, "target mutated before rename");
+        let c = Linear::new(6, 5);
+        load_params(&path, &c.params()).unwrap();
+        assert_eq!(a.weight.tensor().to_vec(), c.weight.tensor().to_vec());
+
+        // the next successful save consumes the scratch file and swaps in
+        // the new snapshot whole
+        save_params(&path, &b.params()).unwrap();
+        assert!(!tmp.exists(), "scratch file must not outlive a successful save");
+        let d = Linear::new(6, 5);
+        load_params(&path, &d.params()).unwrap();
+        assert_eq!(b.weight.tensor().to_vec(), d.weight.tensor().to_vec());
     }
 
     #[test]

@@ -40,8 +40,6 @@
 //! batch shapes are specialized at trace time, so every step must be fed
 //! batches of the traced shape.
 
-use std::sync::Mutex;
-
 use crate::autograd::{BackwardOpts, Variable};
 use crate::nn::{categorical_cross_entropy, Module};
 use crate::optim::{clip_grads, UpdateRule};
@@ -52,15 +50,6 @@ use crate::tensor::{
 use crate::util::error::{Error, Result};
 
 use super::config::TrainConfig;
-
-/// Process-wide trace serialization. [`BackendGuard::install`] swaps the
-/// *global* default backend, so two concurrent captures would record each
-/// other's operations (and mis-restore on drop). Every `compile_step`
-/// holds this lock for the duration of its captures; callers running
-/// other threads that do tensor work must still quiesce them around
-/// compilation (the data-parallel trainer brackets compilation with ring
-/// barriers for exactly this reason).
-static TRACE_LOCK: Mutex<()> = Mutex::new(());
 
 /// Shapes and dtypes of the batch columns a compiled step consumes each
 /// iteration (values are substituted per call; shapes are specialized at
@@ -176,10 +165,12 @@ pub fn compile_step_fn(
     if n == 0 {
         return Err(Error::Config("compile_step: model has no parameters".into()));
     }
-    // one open capture at a time, process-wide (see TRACE_LOCK); taken
+    // one open capture at a time, process-wide (the trace lock shared
+    // with `graph::trace_and_compile` and the serving session); taken
     // before the state/proto allocations so they cannot leak into another
-    // thread's open capture either
-    let _trace_lock = TRACE_LOCK.lock().unwrap_or_else(|p| p.into_inner());
+    // thread's open capture either. The data-parallel trainer additionally
+    // brackets compilation with ring barriers to quiesce its replicas.
+    let _trace_lock = crate::tensor::graph::trace_lock();
 
     // pre-trace allocations on the *untraced* backend: these enter the
     // trace as external constants, i.e. substitutable per-step inputs

@@ -12,7 +12,8 @@
 //! Architecture (paper Figure 1):
 //!
 //! ```text
-//!  applications (examples/, coordinator)       trainers, launchers, CLI
+//!  applications (examples/, coordinator,       trainers, launchers, CLI,
+//!                serve)                        inference serving engine
 //!  packages     (pkg::{speech, vision, text})  domain building blocks
 //!  core         (nn, optim, data, meter)       modules, losses, pipelines
 //!  autograd     (autograd::Variable)           dynamic tape
@@ -38,6 +39,7 @@ pub mod nn;
 pub mod optim;
 pub mod pkg;
 pub mod runtime;
+pub mod serve;
 pub mod tensor;
 pub mod testutil;
 pub mod util;

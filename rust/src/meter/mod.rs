@@ -1,7 +1,9 @@
 //! Metric meters (paper Listings 9–10: `AverageValueMeter`,
-//! `FrameErrorMeter`, plus the speech package's edit-distance meter).
+//! `FrameErrorMeter`, plus the speech package's edit-distance meter and
+//! the serving engine's streaming percentile meter).
 
 use crate::tensor::Tensor;
+use crate::util::rng::Rng;
 
 /// Running mean/variance of scalar observations.
 #[derive(Debug, Clone, Default)]
@@ -84,6 +86,103 @@ impl PeakValueMeter {
     /// High-water mark.
     pub fn peak(&self) -> usize {
         self.peak
+    }
+}
+
+/// Streaming quantiles (p50/p95/p99) over a bounded reservoir.
+///
+/// Observations are kept in a fixed-capacity reservoir (Vitter's
+/// Algorithm R with a deterministic in-tree RNG, so a meter fed the same
+/// stream always reports the same quantiles): the first `capacity`
+/// observations are stored verbatim, after which each new observation
+/// replaces a uniformly-random slot with probability `capacity / n`.
+/// Memory is O(capacity) no matter how long the stream runs — this is the
+/// serving engine's per-request latency meter, where the stream is
+/// unbounded by design.
+#[derive(Debug, Clone)]
+pub struct PercentileMeter {
+    reservoir: Vec<f64>,
+    capacity: usize,
+    n: u64,
+    rng: Rng,
+}
+
+impl PercentileMeter {
+    /// Default reservoir of 1024 observations.
+    pub fn new() -> Self {
+        Self::with_capacity(1024)
+    }
+
+    /// Reservoir bounded at `capacity` observations (must be > 0).
+    pub fn with_capacity(capacity: usize) -> Self {
+        assert!(capacity > 0, "PercentileMeter needs a non-empty reservoir");
+        PercentileMeter {
+            reservoir: Vec::with_capacity(capacity.min(4096)),
+            capacity,
+            n: 0,
+            // fixed seed: quantiles are reproducible for a given stream
+            rng: Rng::new(0x9E3779B97F4A7C15),
+        }
+    }
+
+    /// Record one observation.
+    pub fn add(&mut self, v: f64) {
+        self.n += 1;
+        if self.reservoir.len() < self.capacity {
+            self.reservoir.push(v);
+        } else {
+            // Algorithm R: keep each of the n observations with equal
+            // probability capacity/n
+            let j = (self.rng.next_u64() % self.n) as usize;
+            if j < self.capacity {
+                self.reservoir[j] = v;
+            }
+        }
+    }
+
+    /// Total observations seen (not the reservoir size).
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    /// Nearest-rank quantile `q` in `[0, 1]` over the reservoir
+    /// (0 when empty). Exact while the stream fits the reservoir,
+    /// a uniform-sample estimate beyond it.
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.reservoir.is_empty() {
+            return 0.0;
+        }
+        let mut sorted = self.reservoir.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
+        let rank = (q.clamp(0.0, 1.0) * sorted.len() as f64).ceil() as usize;
+        sorted[rank.clamp(1, sorted.len()) - 1]
+    }
+
+    /// Median.
+    pub fn p50(&self) -> f64 {
+        self.quantile(0.50)
+    }
+
+    /// 95th percentile.
+    pub fn p95(&self) -> f64 {
+        self.quantile(0.95)
+    }
+
+    /// 99th percentile.
+    pub fn p99(&self) -> f64 {
+        self.quantile(0.99)
+    }
+
+    /// Reset to empty (the RNG restarts too, keeping resets reproducible).
+    pub fn reset(&mut self) {
+        let cap = self.capacity;
+        *self = Self::with_capacity(cap);
+    }
+}
+
+impl Default for PercentileMeter {
+    fn default() -> Self {
+        Self::new()
     }
 }
 
@@ -260,6 +359,55 @@ mod tests {
         assert_eq!(m.count(), 4);
         m.reset();
         assert_eq!(m.count(), 0);
+    }
+
+    #[test]
+    fn percentile_meter_exact_within_reservoir() {
+        let mut m = PercentileMeter::with_capacity(256);
+        // 1..=100 in shuffled order: nearest-rank quantiles are exact
+        let mut vals: Vec<f64> = (1..=100).map(|v| v as f64).collect();
+        let mut r = Rng::new(5);
+        r.shuffle(&mut vals);
+        for v in vals {
+            m.add(v);
+        }
+        assert_eq!(m.count(), 100);
+        assert_eq!(m.p50(), 50.0);
+        assert_eq!(m.p95(), 95.0);
+        assert_eq!(m.p99(), 99.0);
+        assert_eq!(m.quantile(0.0), 1.0);
+        assert_eq!(m.quantile(1.0), 100.0);
+        m.reset();
+        assert_eq!(m.count(), 0);
+        assert_eq!(m.p50(), 0.0);
+    }
+
+    #[test]
+    fn percentile_meter_reservoir_stays_bounded() {
+        let mut m = PercentileMeter::with_capacity(64);
+        for i in 0..10_000 {
+            m.add(i as f64);
+        }
+        assert_eq!(m.count(), 10_000);
+        assert!(m.reservoir.len() <= 64);
+        // estimates stay inside the observed range and keep order
+        let (p50, p95, p99) = (m.p50(), m.p95(), m.p99());
+        assert!((0.0..10_000.0).contains(&p50));
+        assert!(p50 <= p95 && p95 <= p99, "{p50} {p95} {p99}");
+        // uniform stream: the median estimate lands near the middle
+        assert!((2_000.0..8_000.0).contains(&p50), "p50={p50}");
+    }
+
+    #[test]
+    fn percentile_meter_is_deterministic() {
+        let run = || {
+            let mut m = PercentileMeter::with_capacity(32);
+            for i in 0..5_000 {
+                m.add((i * 7 % 1000) as f64);
+            }
+            (m.p50(), m.p95(), m.p99())
+        };
+        assert_eq!(run(), run());
     }
 
     #[test]

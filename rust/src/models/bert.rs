@@ -2,7 +2,9 @@
 //! scaled; also the backbone of the end-to-end training example).
 
 use crate::autograd::{ops, Variable};
-use crate::nn::{Embedding, LayerNorm, Linear, Module, PositionalEmbedding, TransformerEncoderLayer};
+use crate::nn::{
+    Embedding, KvCache, LayerNorm, Linear, Module, PositionalEmbedding, TransformerEncoderLayer,
+};
 use crate::tensor::Tensor;
 
 /// Token embedding + positional embedding + N transformer layers + LM head.
@@ -40,6 +42,44 @@ impl BertLike {
             h = l.forward(&h);
         }
         self.head.forward(&self.ln_f.forward(&h))
+    }
+
+    /// Forward *new* token ids `[B, L_new]` against per-layer KV caches
+    /// (one [`KvCache`] per transformer layer, from
+    /// [`BertLike::empty_cache`]): positions are offset by the cache
+    /// length, each layer's attention consumes and extends its cache, and
+    /// only the new positions' logits `[B, L_new, V]` come back. With an
+    /// empty cache and the full sequence this is the prefill pass —
+    /// bit-identical to [`BertLike::logits`]; with one token it is the
+    /// O(L) incremental decode step [`crate::serve::generate()`] drives.
+    pub fn logits_cached(&self, ids: &Tensor, caches: &mut [KvCache]) -> Variable {
+        assert_eq!(caches.len(), self.layers.len(), "one KV cache per layer");
+        let offset = caches.first().map_or(0, |c| c.len());
+        let mut h = self.pos.forward_at(&self.tok.lookup(ids), offset);
+        for (layer, cache) in self.layers.iter().zip(caches.iter_mut()) {
+            h = layer.forward_cached(&h, cache);
+        }
+        self.head.forward(&self.ln_f.forward(&h))
+    }
+
+    /// Fresh per-layer KV caches for one generation stream.
+    pub fn empty_cache(&self) -> Vec<KvCache> {
+        (0..self.layers.len()).map(|_| KvCache::new()).collect()
+    }
+
+    /// Number of transformer layers.
+    pub fn depth(&self) -> usize {
+        self.layers.len()
+    }
+
+    /// Longest supported sequence (the positional table's size).
+    pub fn max_len(&self) -> usize {
+        self.pos.max_len()
+    }
+
+    /// Vocabulary size (the LM head's output width).
+    pub fn vocab(&self) -> usize {
+        self.tok.vocab()
     }
 
     /// Hidden width.

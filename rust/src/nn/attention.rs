@@ -5,12 +5,72 @@
 //! Pallas-authored fused kernel — and falls back to primitive composition
 //! everywhere else (inference path; training always uses the composed
 //! graph so the tape sees every op).
+//!
+//! For autoregressive serving, [`MultiheadAttention::forward_cached`]
+//! threads a per-layer [`KvCache`]: each new token's query attends over
+//! the cached keys/values of every earlier position instead of
+//! recomputing the whole prefix, turning an O(L²)-per-token decode into
+//! O(L). The cached path is **bit-identical** to the full recompute on
+//! the reference CPU backend (`rust/tests/serve.rs` pins this down over
+//! 64 generated tokens).
+
+use std::collections::HashMap;
+use std::sync::Mutex;
 
 use crate::autograd::{ops, Variable};
-use crate::tensor::{DType, Tensor};
+use crate::tensor::Tensor;
 
 use super::linear::Linear;
 use super::Module;
+
+/// Per-layer key/value cache for incremental decoding. Keys and values
+/// are stored merged-head-major, `[B*H, len, head_dim]` — exactly the
+/// layout [`MultiheadAttention::sdpa`] consumes, so appending is a single
+/// `concat` along the position axis and no re-layout happens per step.
+#[derive(Default)]
+pub struct KvCache {
+    k: Option<Tensor>,
+    v: Option<Tensor>,
+    len: usize,
+}
+
+impl KvCache {
+    /// Empty cache.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Positions cached so far.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    /// Whether any position is cached.
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Append `[B*H, l_new, head_dim]` keys/values and return the full
+    /// (past + new) tensors. On an empty cache this is a handle clone, so
+    /// prefill stores and reuses the very tensors the forward computed.
+    pub fn append(&mut self, k_new: &Tensor, v_new: &Tensor) -> (Tensor, Tensor) {
+        let (k_all, v_all) = match (&self.k, &self.v) {
+            (Some(k), Some(v)) => {
+                (Tensor::concat(&[k, k_new], 1), Tensor::concat(&[v, v_new], 1))
+            }
+            _ => (k_new.clone(), v_new.clone()),
+        };
+        self.len += k_new.dim(1);
+        self.k = Some(k_all.clone());
+        self.v = Some(v_all.clone());
+        (k_all, v_all)
+    }
+
+    /// Drop all cached positions (start a fresh sequence).
+    pub fn reset(&mut self) {
+        *self = Self::default();
+    }
+}
 
 /// Multi-head self-attention with optional causal masking.
 pub struct MultiheadAttention {
@@ -25,6 +85,10 @@ pub struct MultiheadAttention {
     heads: usize,
     dim: usize,
     causal: bool,
+    /// Additive causal bias tensors keyed by `(q_len, past_len)`, built
+    /// once per shape instead of re-deriving the `-1e9` mask from
+    /// `tril_mask` on every forward.
+    bias_cache: Mutex<HashMap<(usize, usize), Tensor>>,
 }
 
 impl MultiheadAttention {
@@ -39,7 +103,43 @@ impl MultiheadAttention {
             heads,
             dim,
             causal,
+            bias_cache: Mutex::new(HashMap::new()),
         }
+    }
+
+    /// Whether this attention applies a causal mask.
+    pub fn is_causal(&self) -> bool {
+        self.causal
+    }
+
+    /// The additive causal bias for `q_len` query rows whose global
+    /// positions start at `past_len`: entry `(i, j)` is `-0.0` where query
+    /// `past_len + i` may attend key `j` and `-1e9` where it may not
+    /// (matching the bits of the historical `(1 - tril) * -1e9`
+    /// construction, whose allowed entries were `0.0 * -1e9 = -0.0`).
+    /// Built once per shape and cached.
+    fn causal_bias(&self, q_len: usize, past_len: usize) -> Tensor {
+        // Retained shapes per module. Training and bucketed serving see a
+        // handful; only a server fed organically varied prompt lengths
+        // would otherwise accumulate O(Σ L²) dense masks without bound.
+        const BIAS_CACHE_CAP: usize = 64;
+        let mut cache = self.bias_cache.lock().unwrap_or_else(|p| p.into_inner());
+        if let Some(t) = cache.get(&(q_len, past_len)) {
+            return t.clone();
+        }
+        let kv_len = past_len + q_len;
+        let mut data = vec![0.0f32; q_len * kv_len];
+        for (i, row) in data.chunks_mut(kv_len).enumerate() {
+            for (j, slot) in row.iter_mut().enumerate() {
+                *slot = if j <= past_len + i { -0.0 } else { -1e9 };
+            }
+        }
+        let t = Tensor::from_slice(&data, [q_len, kv_len]);
+        if cache.len() >= BIAS_CACHE_CAP {
+            cache.clear();
+        }
+        cache.insert((q_len, past_len), t.clone());
+        t
     }
 
     /// Split `[B, L, D]` into `[B*H, L, D/H]`.
@@ -60,19 +160,63 @@ impl MultiheadAttention {
 
     /// Scaled-dot-product core over `[B*H, L, hd]` tensors.
     pub fn sdpa(&self, q: &Variable, k: &Variable, v: &Variable, l: usize) -> Variable {
+        self.sdpa_with_past(q, k, v, l, 0)
+    }
+
+    /// Scaled-dot-product with a key/value *past*: `q` holds the trailing
+    /// `q_len` positions (`[B*H, q_len, hd]`) while `k`/`v` cover all
+    /// `past_len + q_len` positions. With `past_len == 0` this is the
+    /// classic full-sequence core; with a non-zero past it is the
+    /// KV-cached incremental decode step, where each new query attends
+    /// over cached keys instead of recomputing the prefix.
+    pub fn sdpa_with_past(
+        &self,
+        q: &Variable,
+        k: &Variable,
+        v: &Variable,
+        q_len: usize,
+        past_len: usize,
+    ) -> Variable {
         let hd = self.dim / self.heads;
         let scale = 1.0 / (hd as f64).sqrt();
         let scores = ops::mul_scalar(&ops::matmul(q, &ops::t(k)), scale);
-        let scores = if self.causal {
-            let mask = Tensor::tril_mask(l).astype(DType::F32);
-            // additive -inf style mask: (1-mask) * -1e9
-            let bias = mask.neg().add_scalar(1.0).mul_scalar(-1e9);
+        // a single trailing query row may attend every key, so its bias
+        // row is all `-0.0` — an additive bitwise no-op we skip entirely
+        // (this is what keeps cached decode bit-identical to recompute)
+        let scores = if self.causal && q_len > 1 {
+            let bias = self.causal_bias(q_len, past_len);
             ops::add(&scores, &Variable::constant(bias))
         } else {
             scores
         };
         let attn = ops::softmax(&scores, -1);
         ops::matmul(&attn, v)
+    }
+
+    /// Forward one or more *new* positions `[B, L_new, D]` against the
+    /// cached past, appending this call's keys/values to `cache`. An empty
+    /// cache makes this the prefill pass (identical to
+    /// [`Module::forward`]); a one-token input is the steady-state decode
+    /// step. Requires causal attention — with bidirectional attention
+    /// earlier positions would need recomputing anyway.
+    pub fn forward_cached(&self, input: &Variable, cache: &mut KvCache) -> Variable {
+        assert!(self.causal, "KV-cached attention requires causal masking");
+        let dims = input.dims();
+        assert_eq!(dims.len(), 3, "attention wants [B, L, D]");
+        let (b, l_new) = (dims[0], dims[1]);
+        let past = cache.len();
+        let q = self.split_heads(&self.wq.forward(input), b, l_new);
+        let k = self.split_heads(&self.wk.forward(input), b, l_new);
+        let v = self.split_heads(&self.wv.forward(input), b, l_new);
+        let (k_all, v_all) = cache.append(&k.tensor(), &v.tensor());
+        let ctx = self.sdpa_with_past(
+            &q,
+            &Variable::constant(k_all),
+            &Variable::constant(v_all),
+            l_new,
+            past,
+        );
+        self.wo.forward(&self.merge_heads(&ctx, b, l_new))
     }
 }
 
@@ -100,6 +244,7 @@ impl Module for MultiheadAttention {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::tensor::DType;
 
     #[test]
     fn shapes_roundtrip() {
@@ -167,6 +312,61 @@ mod tests {
             let q = matmul(x, &w);
             sum(&m.sdpa(&q, x, x, 3), &[], false)
         });
+    }
+
+    fn bits(v: &Variable) -> Vec<u32> {
+        v.tensor().to_vec().iter().map(|x| x.to_bits()).collect()
+    }
+
+    #[test]
+    fn kv_cached_forward_is_bit_identical_to_full() {
+        let m = MultiheadAttention::new(8, 2, true);
+        let x = Tensor::rand([1, 5, 8], -1.0, 1.0);
+        let full = m.forward(&Variable::constant(x.clone()));
+
+        // prefill: the whole sequence through the cached path at once
+        let mut cache = KvCache::new();
+        let prefill = m.forward_cached(&Variable::constant(x.clone()), &mut cache);
+        assert_eq!(bits(&full), bits(&prefill), "prefill must equal the full forward");
+        assert_eq!(cache.len(), 5);
+
+        // incremental: one position at a time through a fresh cache
+        let mut cache = KvCache::new();
+        let full_bits = bits(&full);
+        for t in 0..5 {
+            let step = x.narrow(1, t, 1);
+            let y = m.forward_cached(&Variable::constant(step), &mut cache);
+            assert_eq!(
+                bits(&y),
+                full_bits[t * 8..(t + 1) * 8].to_vec(),
+                "cached decode diverged at position {t}"
+            );
+        }
+        assert_eq!(cache.len(), 5);
+        cache.reset();
+        assert!(cache.is_empty());
+    }
+
+    #[test]
+    fn causal_bias_is_cached_per_shape() {
+        let m = MultiheadAttention::new(8, 2, true);
+        let x = Variable::constant(Tensor::rand([1, 4, 8], -1.0, 1.0));
+        let _ = m.forward(&x);
+        let _ = m.forward(&x);
+        assert_eq!(m.bias_cache.lock().unwrap().len(), 1, "same shape must hit the cache");
+        let y = Variable::constant(Tensor::rand([1, 6, 8], -1.0, 1.0));
+        let _ = m.forward(&y);
+        assert_eq!(m.bias_cache.lock().unwrap().len(), 2, "new shape adds one entry");
+        // the cached bias matches the historical (1 - tril) * -1e9 bits
+        let bias = m.causal_bias(4, 0);
+        let legacy = Tensor::tril_mask(4)
+            .astype(DType::F32)
+            .neg()
+            .add_scalar(1.0)
+            .mul_scalar(-1e9);
+        let (a, b) = (bias.to_vec(), legacy.to_vec());
+        let eq = a.iter().zip(&b).all(|(x, y)| x.to_bits() == y.to_bits());
+        assert!(eq, "cached bias bits drifted from the legacy construction");
     }
 
     #[test]

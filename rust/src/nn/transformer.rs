@@ -2,7 +2,7 @@
 
 use crate::autograd::{ops, Variable};
 
-use super::attention::MultiheadAttention;
+use super::attention::{KvCache, MultiheadAttention};
 use super::dropout::Dropout;
 use super::linear::Linear;
 use super::norm::LayerNorm;
@@ -23,16 +23,34 @@ impl PositionalEmbedding {
             max_len,
         }
     }
+
+    /// Longest supported sequence.
+    pub fn max_len(&self) -> usize {
+        self.max_len
+    }
+
+    /// Add the embeddings of positions `offset .. offset + L` to a
+    /// `[B, L, D]` input — the incremental-decode entry, where the new
+    /// tokens sit `offset` positions into the sequence.
+    pub fn forward_at(&self, input: &Variable, offset: usize) -> Variable {
+        let dims = input.dims();
+        let l = dims[1];
+        assert!(
+            offset + l <= self.max_len,
+            "positions {}..{} exceed max_len {}",
+            offset,
+            offset + l,
+            self.max_len
+        );
+        let pos = ops::slice(&self.weight, &[offset, 0], &[offset + l, dims[2]]);
+        // [L, D] broadcasts over batch
+        ops::add(input, &pos)
+    }
 }
 
 impl Module for PositionalEmbedding {
     fn forward(&self, input: &Variable) -> Variable {
-        let dims = input.dims();
-        let l = dims[1];
-        assert!(l <= self.max_len, "sequence {l} > max_len {}", self.max_len);
-        let pos = ops::slice(&self.weight, &[0, 0], &[l, dims[2]]);
-        // [L, D] broadcasts over batch
-        ops::add(input, &pos)
+        self.forward_at(input, 0)
     }
     fn params(&self) -> Vec<Variable> {
         vec![self.weight.clone()]
@@ -69,6 +87,19 @@ impl TransformerEncoderLayer {
             drop: Dropout::new(dropout),
             dim,
         }
+    }
+
+    /// Forward new positions `[B, L_new, D]` against this layer's KV
+    /// cache (see [`MultiheadAttention::forward_cached`]); everything
+    /// outside attention is position-wise, so only the attention core
+    /// needs the past. Run the layer in eval mode (dropout off) — a
+    /// random mask over only the new positions would not match a full
+    /// recompute.
+    pub fn forward_cached(&self, input: &Variable, cache: &mut KvCache) -> Variable {
+        let a = self.attn.forward_cached(&self.ln1.forward(input), cache);
+        let x = ops::add(input, &self.drop.forward(&a));
+        let h = self.fc2.forward(&ops::gelu(&self.fc1.forward(&self.ln2.forward(&x))));
+        ops::add(&x, &self.drop.forward(&h))
     }
 }
 

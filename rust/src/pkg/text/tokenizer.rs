@@ -77,6 +77,64 @@ mod tests {
     }
 
     #[test]
+    fn encode_decode_roundtrip_is_stable() {
+        let t = Tokenizer::train("to be or not to be that is the question", 64);
+        let text = "to be or not to be";
+        let ids = t.encode(text);
+        assert_eq!(t.decode(&ids), text);
+        // a second encode of the decoded text is idempotent
+        assert_eq!(t.encode(&t.decode(&ids)), ids);
+        // whitespace normalizes away: tabs and runs of spaces don't change ids
+        assert_eq!(t.encode("to\tbe   or not\nto be"), ids);
+    }
+
+    #[test]
+    fn oov_roundtrip_degrades_to_unk_in_place() {
+        let t = Tokenizer::train("the cat sat", 50);
+        let ids = t.encode("the dog sat");
+        assert_eq!(ids.len(), 3);
+        assert_eq!(ids[1], UNK, "unseen word must map to UNK");
+        assert_ne!(ids[0], UNK);
+        assert_ne!(ids[2], UNK);
+        // decode keeps position: known words survive, the OOV shows as <unk>
+        assert_eq!(t.decode(&ids), "the <unk> sat");
+        // ids past the vocabulary decode to a visible marker, never panic
+        assert_eq!(t.decode(&[t.vocab_size() + 7]), "<oob>");
+        // specials decode to their reserved spellings
+        assert_eq!(t.decode(&[PAD, UNK, MASK]), "<pad> <unk> <mask>");
+    }
+
+    #[test]
+    fn vocab_size_is_stable_across_retrains() {
+        let corpus = "a quick brown fox jumps over a lazy dog a quick fox";
+        let t1 = Tokenizer::train(corpus, 100);
+        let t2 = Tokenizer::train(corpus, 100);
+        // same corpus -> same size and the same id assignment (ranking is
+        // count-then-lexicographic, so HashMap iteration order cannot leak)
+        assert_eq!(t1.vocab_size(), t2.vocab_size());
+        assert_eq!(t1.encode(corpus), t2.encode(corpus));
+        // size accounts for every distinct word plus the reserved specials
+        let distinct = 8; // a quick brown fox jumps over lazy dog
+        assert_eq!(t1.vocab_size(), distinct + NUM_SPECIALS);
+        // and is capped exactly at max_vocab when the corpus overflows it
+        let capped = Tokenizer::train(corpus, NUM_SPECIALS + 3);
+        assert_eq!(capped.vocab_size(), NUM_SPECIALS + 3);
+    }
+
+    #[test]
+    fn empty_and_degenerate_inputs() {
+        let t = Tokenizer::train("x y z", 10);
+        assert!(t.encode("").is_empty());
+        assert!(t.encode("   \n\t ").is_empty());
+        assert_eq!(t.decode(&[]), "");
+        // a cap smaller than the specials still yields a well-formed
+        // specials-only vocabulary
+        let tiny = Tokenizer::train("x y z", 2);
+        assert_eq!(tiny.vocab_size(), NUM_SPECIALS);
+        assert_eq!(tiny.encode("x")[0], UNK);
+    }
+
+    #[test]
     fn vocab_cap_keeps_most_frequent() {
         let t = Tokenizer::train("x x x y y z", NUM_SPECIALS + 2);
         assert_eq!(t.vocab_size(), NUM_SPECIALS + 2);

@@ -1,0 +1,261 @@
+//! Dynamic request batching over an MPSC queue.
+//!
+//! Requests enter a process-local queue; a pool of worker threads drains
+//! it in batches. A worker that picks up a request waits at most
+//! `max_wait` for companions (or until `max_batch_size` is reached),
+//! stacks what arrived into one batch, and runs it through the
+//! [`InferenceSession`]'s compiled programs. The deadline policy trades
+//! a bounded latency penalty on the first request of a batch for the
+//! throughput of batched execution.
+//!
+//! Correctness contract: batching is *invisible* — the response to a
+//! request served in a batch of 8 is bit-identical to the same request
+//! served alone (row-independent kernels + shape-bucket padding; enforced
+//! by `rust/tests/serve.rs`).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::meter::{AverageValueMeter, PercentileMeter};
+use crate::tensor::Tensor;
+use crate::util::error::{Error, Result};
+
+use super::session::InferenceSession;
+
+/// Batching policy knobs.
+#[derive(Debug, Clone)]
+pub struct BatcherConfig {
+    /// Largest batch one flush may assemble (clamped to the session's
+    /// largest compiled bucket).
+    pub max_batch_size: usize,
+    /// How long the first request of a batch waits for companions.
+    pub max_wait: Duration,
+    /// Worker threads draining the queue.
+    pub workers: usize,
+}
+
+impl Default for BatcherConfig {
+    fn default() -> Self {
+        BatcherConfig { max_batch_size: 8, max_wait: Duration::from_millis(2), workers: 2 }
+    }
+}
+
+/// One queued request: the input example, its enqueue time (for latency
+/// accounting), and where the response goes.
+struct Request {
+    input: Tensor,
+    enqueued: Instant,
+    resp: Sender<Result<Tensor>>,
+}
+
+/// The caller's handle to an in-flight request.
+pub struct ResponseHandle {
+    rx: Receiver<Result<Tensor>>,
+}
+
+impl ResponseHandle {
+    /// Block until the response arrives (or the engine shut down with the
+    /// request unserved).
+    pub fn wait(self) -> Result<Tensor> {
+        self.rx
+            .recv()
+            .map_err(|_| Error::msg("serve: engine shut down before the request was served"))?
+    }
+}
+
+/// Shared counters and meters the workers update per batch.
+#[derive(Default)]
+struct Metrics {
+    requests: AtomicU64,
+    batches: AtomicU64,
+    latency_us: Mutex<PercentileMeter>,
+    batch_fill: Mutex<AverageValueMeter>,
+}
+
+/// A point-in-time snapshot of the batcher's telemetry.
+#[derive(Debug, Clone, Default)]
+pub struct BatcherStats {
+    /// Requests answered.
+    pub requests: u64,
+    /// Program executions (batches flushed).
+    pub batches: u64,
+    /// Mean requests per flushed batch.
+    pub mean_batch_fill: f64,
+    /// Median request latency (enqueue → response), microseconds.
+    pub latency_p50_us: f64,
+    /// 95th-percentile request latency, microseconds.
+    pub latency_p95_us: f64,
+    /// 99th-percentile request latency, microseconds.
+    pub latency_p99_us: f64,
+}
+
+/// The dynamic batcher: an MPSC queue plus a worker pool. Dropping (or
+/// [`Batcher::shutdown`]) closes the queue; workers drain every request
+/// already submitted, then exit, and the call blocks until they have.
+pub struct Batcher {
+    tx: Option<Sender<Request>>,
+    workers: Vec<JoinHandle<()>>,
+    metrics: Arc<Metrics>,
+    session: Arc<InferenceSession>,
+}
+
+impl Batcher {
+    /// Start `cfg.workers` threads serving through `session`.
+    pub fn start(session: Arc<InferenceSession>, cfg: BatcherConfig) -> Batcher {
+        let (tx, rx) = channel::<Request>();
+        let rx = Arc::new(Mutex::new(rx));
+        let metrics = Arc::new(Metrics::default());
+        let max_batch = cfg.max_batch_size.clamp(1, session.max_batch().max(1));
+        let workers = (0..cfg.workers.max(1))
+            .map(|i| {
+                let rx = Arc::clone(&rx);
+                let session = Arc::clone(&session);
+                let metrics = Arc::clone(&metrics);
+                let max_wait = cfg.max_wait;
+                std::thread::Builder::new()
+                    .name(format!("serve-worker-{i}"))
+                    .spawn(move || worker_loop(&rx, &session, max_batch, max_wait, &metrics))
+                    .expect("serve: failed to spawn worker thread")
+            })
+            .collect();
+        Batcher { tx: Some(tx), workers, metrics, session }
+    }
+
+    /// Enqueue one `[example_dims…]` input; returns immediately with a
+    /// handle the caller can block on. Malformed inputs (wrong shape or
+    /// dtype) are rejected here, before they can be stacked with — and
+    /// poison — innocent cohort requests in the same batch.
+    pub fn submit(&self, input: Tensor) -> ResponseHandle {
+        let (rtx, rrx) = channel();
+        if let Err(e) = self.session.check_example(&input) {
+            let _ = rtx.send(Err(e));
+            return ResponseHandle { rx: rrx };
+        }
+        let req = Request { input, enqueued: Instant::now(), resp: rtx };
+        if let Some(tx) = &self.tx {
+            // a send can only fail after shutdown; dropping `req` (and its
+            // response sender with it) surfaces that through wait()
+            let _ = tx.send(req);
+        }
+        ResponseHandle { rx: rrx }
+    }
+
+    /// Submit and block for the response.
+    pub fn infer(&self, input: Tensor) -> Result<Tensor> {
+        self.submit(input).wait()
+    }
+
+    /// Telemetry snapshot.
+    pub fn stats(&self) -> BatcherStats {
+        let m = &self.metrics;
+        let lat = m.latency_us.lock().unwrap_or_else(|p| p.into_inner());
+        let fill = m.batch_fill.lock().unwrap_or_else(|p| p.into_inner());
+        BatcherStats {
+            requests: m.requests.load(Ordering::Relaxed),
+            batches: m.batches.load(Ordering::Relaxed),
+            mean_batch_fill: fill.value(),
+            latency_p50_us: lat.p50(),
+            latency_p95_us: lat.p95(),
+            latency_p99_us: lat.p99(),
+        }
+    }
+
+    /// Graceful shutdown: stop accepting requests, serve everything
+    /// already queued, join the workers. Idempotent; also runs on drop.
+    pub fn shutdown(&mut self) {
+        self.tx.take();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+impl Drop for Batcher {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+fn worker_loop(
+    rx: &Mutex<Receiver<Request>>,
+    session: &InferenceSession,
+    max_batch: usize,
+    max_wait: Duration,
+    metrics: &Metrics,
+) {
+    loop {
+        // hold the queue lock only while assembling one batch; a blocked
+        // recv() parks this worker until traffic (or shutdown) arrives
+        let mut batch: Vec<Request> = Vec::new();
+        {
+            let queue = rx.lock().unwrap_or_else(|p| p.into_inner());
+            match queue.recv() {
+                Ok(first) => {
+                    // the deadline starts at pickup: under a backlog the
+                    // companions are already queued and recv_timeout
+                    // returns them without waiting, so a deep queue fills
+                    // whole batches back-to-back
+                    let deadline = Instant::now() + max_wait;
+                    batch.push(first);
+                    while batch.len() < max_batch {
+                        let now = Instant::now();
+                        if now >= deadline {
+                            break;
+                        }
+                        match queue.recv_timeout(deadline - now) {
+                            Ok(r) => batch.push(r),
+                            Err(RecvTimeoutError::Timeout | RecvTimeoutError::Disconnected) => {
+                                break
+                            }
+                        }
+                    }
+                }
+                // every sender dropped and the queue is drained: shutdown
+                Err(_) => return,
+            }
+        }
+        serve_batch(session, batch, metrics);
+    }
+}
+
+/// Stack the collected requests, run them as one padded batch, and fan
+/// the per-row outputs back to their callers.
+fn serve_batch(session: &InferenceSession, batch: Vec<Request>, metrics: &Metrics) {
+    let inputs: Vec<&Tensor> = batch.iter().map(|r| &r.input).collect();
+    let stacked = Tensor::stack(&inputs, 0);
+    metrics.batches.fetch_add(1, Ordering::Relaxed);
+    metrics
+        .batch_fill
+        .lock()
+        .unwrap_or_else(|p| p.into_inner())
+        .add(batch.len() as f64);
+    match session.run_batch(stacked) {
+        Ok(out) => {
+            let rest: Vec<isize> = out.dims()[1..].iter().map(|&d| d as isize).collect();
+            for (i, req) in batch.iter().enumerate() {
+                let row = out.narrow(0, i, 1).reshape(&rest);
+                record_done(metrics, req);
+                let _ = req.resp.send(Ok(row));
+            }
+        }
+        Err(e) => {
+            let msg = format!("serve: batch execution failed: {e}");
+            for req in &batch {
+                record_done(metrics, req);
+                let _ = req.resp.send(Err(Error::msg(msg.clone())));
+            }
+        }
+    }
+}
+
+fn record_done(metrics: &Metrics, req: &Request) {
+    metrics.requests.fetch_add(1, Ordering::Relaxed);
+    metrics
+        .latency_us
+        .lock()
+        .unwrap_or_else(|p| p.into_inner())
+        .add(req.enqueued.elapsed().as_secs_f64() * 1e6);
+}

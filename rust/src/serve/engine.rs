@@ -1,0 +1,145 @@
+//! The serving engine: compiled session + dynamic batcher + telemetry +
+//! graceful shutdown, behind one handle.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use crate::meter::AverageValueMeter;
+use crate::models::BertLike;
+use crate::tensor::{DType, Tensor};
+use crate::util::error::{Error, Result};
+
+use super::batcher::{Batcher, BatcherConfig, BatcherStats, ResponseHandle};
+use super::generate::{generate, GenerateOptions, GenerateReport};
+use super::session::InferenceSession;
+
+/// Engine deployment knobs (a thin rename of [`BatcherConfig`], kept
+/// separate so serving policy can grow without touching the batcher).
+#[derive(Debug, Clone)]
+pub struct EngineConfig {
+    /// Largest dynamic batch (clamped to the session's largest bucket).
+    pub max_batch_size: usize,
+    /// How long the first request of a batch waits for companions.
+    pub max_wait: Duration,
+    /// Worker threads.
+    pub workers: usize,
+}
+
+impl Default for EngineConfig {
+    fn default() -> Self {
+        let b = BatcherConfig::default();
+        EngineConfig { max_batch_size: b.max_batch_size, max_wait: b.max_wait, workers: b.workers }
+    }
+}
+
+/// A point-in-time snapshot of everything the engine measures.
+#[derive(Debug, Clone, Default)]
+pub struct EngineStats {
+    /// Batcher counters and latency percentiles.
+    pub batcher: BatcherStats,
+    /// Tokens produced by [`Engine::generate`] calls.
+    pub generated_tokens: u64,
+    /// Mean decode throughput over [`Engine::generate`] calls, tokens/s.
+    pub decode_tokens_per_sec: f64,
+}
+
+/// One deployed model: score requests flow through the dynamic batcher
+/// into shape-bucketed compiled programs; generation requests run the
+/// KV-cached decoder. Shutdown (explicit or on drop) drains the queue and
+/// joins the workers.
+pub struct Engine {
+    batcher: Batcher,
+    lm: Option<Arc<BertLike>>,
+    generated_tokens: AtomicU64,
+    decode_tps: Mutex<AverageValueMeter>,
+}
+
+impl Engine {
+    /// Serve an already-compiled session.
+    pub fn start(session: InferenceSession, cfg: &EngineConfig) -> Engine {
+        let bcfg = BatcherConfig {
+            max_batch_size: cfg.max_batch_size,
+            max_wait: cfg.max_wait,
+            workers: cfg.workers,
+        };
+        Engine {
+            batcher: Batcher::start(Arc::new(session), bcfg),
+            lm: None,
+            generated_tokens: AtomicU64::new(0),
+            decode_tps: Mutex::new(AverageValueMeter::new()),
+        }
+    }
+
+    /// Deploy a transformer LM: compiles `model.logits` over `[b, seq_len]`
+    /// token windows for every batch bucket (scoring traffic), and keeps
+    /// the model for KV-cached [`Engine::generate`] requests.
+    pub fn start_lm(
+        model: Arc<BertLike>,
+        seq_len: usize,
+        batch_buckets: &[usize],
+        cfg: &EngineConfig,
+    ) -> Result<Engine> {
+        if seq_len == 0 || seq_len > model.max_len() {
+            return Err(Error::msg(format!(
+                "serve: seq_len {seq_len} outside the model's 1..={} window",
+                model.max_len()
+            )));
+        }
+        let traced = Arc::clone(&model);
+        let session = InferenceSession::compile(&[seq_len], DType::I64, batch_buckets, move |ids| {
+            traced.logits(ids).tensor()
+        })?;
+        let mut engine = Engine::start(session, cfg);
+        engine.lm = Some(model);
+        Ok(engine)
+    }
+
+    /// Enqueue one example; returns a handle to block on.
+    pub fn submit(&self, input: Tensor) -> ResponseHandle {
+        self.batcher.submit(input)
+    }
+
+    /// Serve one example synchronously through the dynamic batcher.
+    pub fn infer(&self, input: Tensor) -> Result<Tensor> {
+        self.batcher.infer(input)
+    }
+
+    /// KV-cached autoregressive generation on the deployed LM (only
+    /// available for [`Engine::start_lm`] engines). Decode telemetry
+    /// feeds [`Engine::stats`].
+    pub fn generate(&self, prompt: &[i64], opts: &GenerateOptions) -> Result<GenerateReport> {
+        let model = self
+            .lm
+            .as_ref()
+            .ok_or_else(|| Error::msg("serve: this engine was not deployed with an LM"))?;
+        let report = generate(model, prompt, opts)?;
+        self.generated_tokens.fetch_add(report.generated as u64, Ordering::Relaxed);
+        if report.tokens_per_sec > 0.0 {
+            self.decode_tps
+                .lock()
+                .unwrap_or_else(|p| p.into_inner())
+                .add(report.tokens_per_sec);
+        }
+        Ok(report)
+    }
+
+    /// Telemetry snapshot.
+    pub fn stats(&self) -> EngineStats {
+        EngineStats {
+            batcher: self.batcher.stats(),
+            generated_tokens: self.generated_tokens.load(Ordering::Relaxed),
+            decode_tokens_per_sec: self
+                .decode_tps
+                .lock()
+                .unwrap_or_else(|p| p.into_inner())
+                .value(),
+        }
+    }
+
+    /// Graceful shutdown: serve everything already queued, then join the
+    /// workers. Dropping the engine does the same.
+    pub fn shutdown(mut self) {
+        self.batcher.shutdown();
+    }
+}

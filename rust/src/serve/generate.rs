@@ -1,0 +1,192 @@
+//! KV-cached autoregressive generation for the transformer LM.
+//!
+//! One prefill pass computes the prompt's keys/values per layer; each
+//! subsequent token runs a single-position forward whose attention reads
+//! the cache ([`crate::models::BertLike::logits_cached`]), so step cost is
+//! O(L) instead of the O(L²) full recompute. Both paths exist here —
+//! [`GenerateOptions::use_cache`] picks one — and they are
+//! **bit-identical** on the reference CPU backend: the same prompt, seed,
+//! and sampling settings produce the same tokens either way
+//! (`rust/tests/serve.rs` asserts this over 64 generated tokens).
+//!
+//! Sampling is host-side and driven by an explicit
+//! [`crate::util::rng::Rng`] stream seeded per call, so generation is
+//! reproducible regardless of what other threads draw from the global
+//! stream.
+
+use std::time::Instant;
+
+use crate::autograd::no_grad;
+use crate::models::BertLike;
+use crate::tensor::Tensor;
+use crate::util::error::{Error, Result};
+use crate::util::rng::Rng;
+
+/// Token-selection policy.
+#[derive(Debug, Clone)]
+pub enum Sampling {
+    /// Pick the highest-logit token (first index on ties). Consumes no
+    /// randomness.
+    Greedy,
+    /// Softmax over the `k` highest logits at `temperature`, then draw
+    /// from that distribution (one uniform draw per token).
+    TopK {
+        /// How many candidates survive the cut.
+        k: usize,
+        /// Logit divisor; lower is sharper. Must be positive.
+        temperature: f64,
+    },
+}
+
+/// Decoding controls.
+#[derive(Debug, Clone)]
+pub struct GenerateOptions {
+    /// How many tokens to append to the prompt.
+    pub max_new_tokens: usize,
+    /// Token-selection policy.
+    pub sampling: Sampling,
+    /// Seed of the per-call sampling stream.
+    pub seed: u64,
+    /// KV-cached incremental decode (true) or full-context recompute per
+    /// token (false). Same bits either way; wildly different cost.
+    pub use_cache: bool,
+}
+
+impl Default for GenerateOptions {
+    fn default() -> Self {
+        GenerateOptions {
+            max_new_tokens: 32,
+            sampling: Sampling::Greedy,
+            seed: 0,
+            use_cache: true,
+        }
+    }
+}
+
+/// What one generation call produced.
+#[derive(Debug, Clone)]
+pub struct GenerateReport {
+    /// Prompt followed by the generated tokens.
+    pub tokens: Vec<i64>,
+    /// Tokens generated (== `max_new_tokens` unless the prompt filled the
+    /// context).
+    pub generated: usize,
+    /// Seconds spent in the prefill pass (0 for the uncached path, which
+    /// has no separate prefill).
+    pub prefill_secs: f64,
+    /// Seconds spent decoding.
+    pub decode_secs: f64,
+    /// Generated tokens per decode second.
+    pub tokens_per_sec: f64,
+}
+
+/// Generate `opts.max_new_tokens` continuation tokens for `prompt`.
+pub fn generate(
+    model: &BertLike,
+    prompt: &[i64],
+    opts: &GenerateOptions,
+) -> Result<GenerateReport> {
+    if prompt.is_empty() {
+        return Err(Error::msg("generate: empty prompt"));
+    }
+    if prompt.len() + opts.max_new_tokens > model.max_len() {
+        return Err(Error::msg(format!(
+            "generate: prompt {} + {} new tokens exceeds the model's max_len {}",
+            prompt.len(),
+            opts.max_new_tokens,
+            model.max_len()
+        )));
+    }
+    if let Sampling::TopK { k, temperature } = &opts.sampling {
+        if *k == 0 || !temperature.is_finite() || *temperature <= 0.0 {
+            return Err(Error::msg(
+                "generate: top-k sampling needs k > 0 and a positive finite temperature",
+            ));
+        }
+    }
+    let mut rng = Rng::new(opts.seed);
+    let mut tokens = prompt.to_vec();
+    let (prefill_secs, decode_secs) = no_grad(|| {
+        if opts.use_cache {
+            let mut caches = model.empty_cache();
+            let t0 = Instant::now();
+            let ids = Tensor::from_slice(&tokens, [1, tokens.len()]);
+            let prefill_logits = model.logits_cached(&ids, &mut caches).tensor();
+            let mut last = last_position_logits(&prefill_logits);
+            let prefill = t0.elapsed().as_secs_f64();
+            let t1 = Instant::now();
+            for i in 0..opts.max_new_tokens {
+                let next = sample(&last, &opts.sampling, &mut rng);
+                tokens.push(next);
+                if i + 1 < opts.max_new_tokens {
+                    let step = Tensor::from_slice(&[next], [1, 1]);
+                    last = model.logits_cached(&step, &mut caches).tensor().to_vec();
+                }
+            }
+            (prefill, t1.elapsed().as_secs_f64())
+        } else {
+            let t0 = Instant::now();
+            for _ in 0..opts.max_new_tokens {
+                let ids = Tensor::from_slice(&tokens, [1, tokens.len()]);
+                let last = last_position_logits(&model.logits(&ids).tensor());
+                tokens.push(sample(&last, &opts.sampling, &mut rng));
+            }
+            (0.0, t0.elapsed().as_secs_f64())
+        }
+    });
+    let generated = tokens.len() - prompt.len();
+    Ok(GenerateReport {
+        generated,
+        prefill_secs,
+        decode_secs,
+        tokens_per_sec: if decode_secs > 0.0 { generated as f64 / decode_secs } else { 0.0 },
+        tokens,
+    })
+}
+
+/// The `[V]` logits of the final position of a `[1, L, V]` logits tensor.
+fn last_position_logits(logits: &Tensor) -> Vec<f32> {
+    let l = logits.dim(1);
+    logits.narrow(1, l - 1, 1).to_vec()
+}
+
+/// Deterministic token selection over one position's logits.
+fn sample(logits: &[f32], sampling: &Sampling, rng: &mut Rng) -> i64 {
+    match sampling {
+        Sampling::Greedy => {
+            let mut best = 0usize;
+            for (i, &v) in logits.iter().enumerate() {
+                if v > logits[best] {
+                    best = i;
+                }
+            }
+            best as i64
+        }
+        Sampling::TopK { k, temperature } => {
+            let k = (*k).min(logits.len());
+            // stable top-k: value descending, index ascending on ties
+            let mut idx: Vec<usize> = (0..logits.len()).collect();
+            idx.sort_by(|&a, &b| {
+                logits[b]
+                    .partial_cmp(&logits[a])
+                    .unwrap_or(std::cmp::Ordering::Equal)
+                    .then(a.cmp(&b))
+            });
+            idx.truncate(k);
+            // f64 softmax over the survivors at the given temperature
+            let scaled: Vec<f64> = idx.iter().map(|&i| logits[i] as f64 / temperature).collect();
+            let m = scaled.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+            let weights: Vec<f64> = scaled.iter().map(|&s| (s - m).exp()).collect();
+            let total: f64 = weights.iter().sum();
+            let draw = rng.uniform() * total;
+            let mut acc = 0.0;
+            for (j, w) in weights.iter().enumerate() {
+                acc += w;
+                if draw < acc {
+                    return idx[j] as i64;
+                }
+            }
+            idx[k - 1] as i64
+        }
+    }
+}

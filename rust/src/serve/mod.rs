@@ -1,0 +1,36 @@
+//! Inference serving: the request-answering runtime on top of the graph
+//! compiler (the continuous-batching serving design of the Orca lineage,
+//! scoped to this codebase's compiled forward programs).
+//!
+//! Four pieces, composable or standalone:
+//!
+//! - [`InferenceSession`] traces a model's forward pass in inference mode
+//!   once per **shape bucket** via [`crate::tensor::trace_and_compile`]
+//!   and serves every later request through the compiled programs —
+//!   steady-state serving does zero re-tracing, and request batches are
+//!   donated to the executor ([`crate::tensor::graph::CompiledFn::call_owned`])
+//!   so their buffers recycle at last use.
+//! - [`Batcher`] implements **dynamic batching**: an MPSC request queue
+//!   drained by a worker pool under a `max_batch_size` + `max_wait`
+//!   deadline policy, padding each flush up to the nearest compiled
+//!   bucket. Correctness contract: a request served through a batch is
+//!   **bit-identical** to the same request served alone
+//!   (`rust/tests/serve.rs`).
+//! - [`generate()`] is KV-cached autoregressive decoding for the
+//!   transformer LM ([`crate::models::BertLike`]), with greedy and
+//!   temperature/top-k sampling on deterministic
+//!   [`crate::util::rng`] streams; cached decode is bit-identical to
+//!   full-context recompute.
+//! - [`Engine`] ties them together: per-request latency percentiles
+//!   ([`crate::meter::PercentileMeter`]), decode tokens/s telemetry, and
+//!   graceful worker shutdown.
+
+pub mod batcher;
+pub mod engine;
+pub mod generate;
+pub mod session;
+
+pub use batcher::{Batcher, BatcherConfig, BatcherStats, ResponseHandle};
+pub use engine::{Engine, EngineConfig, EngineStats};
+pub use generate::{generate, GenerateOptions, GenerateReport, Sampling};
+pub use session::InferenceSession;

@@ -1,0 +1,227 @@
+//! Shape-bucketed compiled inference programs.
+//!
+//! Serving traffic arrives at unpredictable batch sizes, but the graph
+//! compiler specializes shapes at trace time. The classic resolution is
+//! *shape bucketing*: compile the forward pass once per allowed batch
+//! size, route each request batch to the smallest bucket that fits, and
+//! pad the gap. Padding is sound here because every layer this engine
+//! serves is row-independent — a padded row changes no other row's bits
+//! (the batch-parity test in `rust/tests/serve.rs` enforces exactly
+//! this).
+
+use std::sync::Arc;
+
+use crate::autograd::no_grad;
+use crate::tensor::graph::{trace_and_compile, CompiledFn};
+use crate::tensor::{default_backend, DType, Tensor, TensorBackend};
+use crate::util::error::{Error, Result};
+
+/// A model forward compiled for a fixed set of batch-size buckets.
+///
+/// Construction traces the forward once per bucket (in inference mode:
+/// run it under [`no_grad`], with dropout and other train-time behavior
+/// off) and keeps the compiled programs for the session's lifetime —
+/// the steady state serves every request with zero re-tracing.
+pub struct InferenceSession {
+    /// `(batch_size, program)` sorted ascending by batch size.
+    buckets: Vec<(usize, CompiledFn)>,
+    example_dims: Vec<usize>,
+    out_rest: Vec<usize>,
+    dtype: DType,
+    backend: Arc<dyn TensorBackend>,
+}
+
+impl InferenceSession {
+    /// Trace and compile `forward` for every batch size in
+    /// `batch_buckets` over per-example inputs of shape `example_dims`
+    /// and dtype `dtype` (so bucket `b` is traced at `[b, example_dims…]`).
+    ///
+    /// `forward` must be batch-major: output dimension 0 must equal the
+    /// input batch size (validated here by probing each compiled
+    /// program). Tracing installs the capture backend process-globally —
+    /// compile on a quiescent process, before serving threads start.
+    pub fn compile(
+        example_dims: &[usize],
+        dtype: DType,
+        batch_buckets: &[usize],
+        forward: impl Fn(&Tensor) -> Tensor,
+    ) -> Result<InferenceSession> {
+        let mut sizes: Vec<usize> = batch_buckets.to_vec();
+        sizes.sort_unstable();
+        sizes.dedup();
+        if sizes.is_empty() || sizes[0] == 0 {
+            return Err(Error::msg("serve: batch buckets must be non-empty and positive"));
+        }
+        // snapshot the serving backend while no capture is in flight: a
+        // concurrent `trace_and_compile`/`compile_step` on another thread
+        // has a TraceBackend installed as the process-global default, and
+        // pinning *that* as this session's backend would corrupt the other
+        // thread's capture on every later request (the lock is taken and
+        // released here; each bucket compile below re-acquires it)
+        let backend = {
+            let _quiesced = crate::tensor::graph::trace_lock();
+            default_backend()
+        };
+        let mut buckets = Vec::with_capacity(sizes.len());
+        let mut out_rest: Option<Vec<usize>> = None;
+        for &b in &sizes {
+            let mut dims = vec![b];
+            dims.extend_from_slice(example_dims);
+            let example = Tensor::full(dims, 0.0, dtype);
+            let compiled = no_grad(|| trace_and_compile(&[example], |args| forward(&args[0])))?;
+            // probe once: the traced examples are still the program's
+            // defaults, so a direct run validates the batch-major contract
+            let probe = compiled.program().run(backend.as_ref())?;
+            let odims = probe[0].dims();
+            if odims.first() != Some(&b) {
+                return Err(Error::msg(format!(
+                    "serve: forward is not batch-major — input batch {b} produced output \
+                     shape {}",
+                    probe[0].shape()
+                )));
+            }
+            let rest = odims[1..].to_vec();
+            match &out_rest {
+                None => out_rest = Some(rest),
+                Some(r) if *r == rest => {}
+                Some(r) => {
+                    return Err(Error::msg(format!(
+                        "serve: per-example output shape differs across buckets \
+                         ({r:?} vs {rest:?})"
+                    )));
+                }
+            }
+            buckets.push((b, compiled));
+        }
+        Ok(InferenceSession {
+            buckets,
+            example_dims: example_dims.to_vec(),
+            out_rest: out_rest.unwrap_or_default(),
+            dtype,
+            backend,
+        })
+    }
+
+    /// Serve on a specific backend instead of the default one captured at
+    /// construction (worker threads always use this handle, so a backend
+    /// swap elsewhere in the process cannot redirect in-flight serving).
+    pub fn with_backend(mut self, backend: Arc<dyn TensorBackend>) -> Self {
+        self.backend = backend;
+        self
+    }
+
+    /// The compiled batch sizes, ascending.
+    pub fn bucket_sizes(&self) -> Vec<usize> {
+        self.buckets.iter().map(|(b, _)| *b).collect()
+    }
+
+    /// Largest batch one program call can serve.
+    pub fn max_batch(&self) -> usize {
+        self.buckets.last().map_or(0, |(b, _)| *b)
+    }
+
+    /// Per-example input dims (without the batch axis).
+    pub fn example_dims(&self) -> &[usize] {
+        &self.example_dims
+    }
+
+    /// The input dtype every request must carry.
+    pub fn input_dtype(&self) -> DType {
+        self.dtype
+    }
+
+    /// Validate one `[example_dims…]` request input against the traced
+    /// signature (the batcher rejects bad requests *before* they are
+    /// stacked with innocent cohort requests).
+    pub fn check_example(&self, example: &Tensor) -> Result<()> {
+        if example.dims() != self.example_dims {
+            return Err(Error::msg(format!(
+                "serve: request shape {} != expected {:?}",
+                example.shape(),
+                self.example_dims
+            )));
+        }
+        if example.dtype() != self.dtype {
+            return Err(Error::msg(format!(
+                "serve: request dtype {} != expected {}",
+                example.dtype().name(),
+                self.dtype.name()
+            )));
+        }
+        Ok(())
+    }
+
+    /// Smallest compiled bucket that fits `n` rows.
+    pub fn bucket_for(&self, n: usize) -> Option<usize> {
+        self.bucket_index(n).map(|i| self.buckets[i].0)
+    }
+
+    /// Index (into the sorted bucket list) of the smallest bucket ≥ `n`.
+    fn bucket_index(&self, n: usize) -> Option<usize> {
+        self.buckets.iter().position(|(b, _)| *b >= n)
+    }
+
+    /// Run a `[n, example_dims…]` batch: route to the smallest bucket
+    /// ≥ `n`, zero-pad the tail rows, execute the compiled program
+    /// (donating the padded batch to the executor), and slice the real
+    /// `n` rows back out of the output.
+    pub fn run_batch(&self, batch: Tensor) -> Result<Tensor> {
+        let dims = batch.dims().to_vec();
+        if dims.len() != self.example_dims.len() + 1 || dims[1..] != self.example_dims[..] {
+            return Err(Error::msg(format!(
+                "serve: batch shape {} does not extend example dims {:?}",
+                batch.shape(),
+                self.example_dims
+            )));
+        }
+        if batch.dtype() != self.dtype {
+            return Err(Error::msg(format!(
+                "serve: batch dtype {} != session dtype {}",
+                batch.dtype().name(),
+                self.dtype.name()
+            )));
+        }
+        let n = dims[0];
+        if n == 0 {
+            return Err(Error::msg("serve: empty batch"));
+        }
+        let idx = self.bucket_index(n).ok_or_else(|| {
+            Error::msg(format!(
+                "serve: batch of {n} exceeds the largest compiled bucket ({})",
+                self.max_batch()
+            ))
+        })?;
+        let (bucket, program) = &self.buckets[idx];
+        let bucket = *bucket;
+        let padded = if bucket > n {
+            let mut pad_dims = vec![bucket - n];
+            pad_dims.extend_from_slice(&self.example_dims);
+            let filler = Tensor::full(pad_dims, 0.0, self.dtype);
+            Tensor::concat(&[&batch, &filler], 0)
+        } else {
+            batch
+        };
+        let (out, _stats) = program.call_owned(self.backend.as_ref(), vec![padded], true)?;
+        Ok(if bucket > n { out.narrow(0, 0, n) } else { out })
+    }
+
+    /// Serve a single `[example_dims…]` example through the batch-1
+    /// bucket path; returns the per-example output (no batch axis).
+    pub fn run_one(&self, example: Tensor) -> Result<Tensor> {
+        let mut dims: Vec<isize> = vec![1];
+        dims.extend(example.dims().iter().map(|&d| d as isize));
+        let out = self.run_batch(example.reshape(&dims))?;
+        let rest: Vec<isize> = out.dims()[1..].iter().map(|&d| d as isize).collect();
+        Ok(out.reshape(&rest))
+    }
+
+    /// Per-example output dims (without the batch axis).
+    pub fn output_dims(&self) -> &[usize] {
+        &self.out_rest
+    }
+
+    /// The backend every request runs on.
+    pub fn backend(&self) -> &Arc<dyn TensorBackend> {
+        &self.backend
+    }
+}

@@ -49,6 +49,21 @@ use crate::util::error::{Error, Result};
 pub use fuse::{FusedArg, FusedKernel, FusedStep};
 pub use memplan::MemoryPlan;
 
+/// Process-wide capture serialization. [`BackendGuard::install`] swaps
+/// the *global* default backend, so two concurrent captures would record
+/// each other's operations (and mis-restore on drop). Every capture site
+/// — [`trace_and_compile`], [`crate::coordinator::compile_step`], the
+/// serving session's bucket compiles — holds this lock for the duration
+/// of its capture. Callers running other threads that do tensor work must
+/// still quiesce them around compilation.
+static TRACE_LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+
+/// Acquire the process-wide trace lock (poison-tolerant: a panicked
+/// capture must not wedge every later compilation).
+pub fn trace_lock() -> std::sync::MutexGuard<'static, ()> {
+    TRACE_LOCK.lock().unwrap_or_else(|p| p.into_inner())
+}
+
 /// One dataflow node: an [`Op`] plus where its operands come from. Values
 /// are SSA — defined once by their node, never mutated.
 #[derive(Debug, Clone)]
@@ -679,6 +694,7 @@ pub fn trace_and_compile(
     examples: &[Tensor],
     f: impl FnOnce(&[Tensor]) -> Tensor,
 ) -> Result<CompiledFn> {
+    let _lock = trace_lock();
     let be = TraceBackend::over_cpu_default();
     let (root, params, program) = {
         let _guard = BackendGuard::install(be.clone());
@@ -713,26 +729,37 @@ pub fn trace_and_compile(
 }
 
 impl CompiledFn {
-    /// Run the compiled program on `backend` with fresh arguments
-    /// (shapes/dtypes must match the trace-time examples).
-    pub fn call(&self, backend: &dyn TensorBackend, args: &[&Tensor]) -> Result<Tensor> {
-        if args.len() != self.params.len() {
+    /// Validate one call-time argument against the traced signature.
+    fn check_arg(&self, i: usize, a: &Tensor) -> Result<()> {
+        if *a.shape() != self.arg_shapes[i] || a.dtype() != self.arg_dtypes[i] {
+            return Err(Error::msg(format!(
+                "compiled fn arg {i}: expected {} {}, got {} {}",
+                self.arg_shapes[i],
+                self.arg_dtypes[i].name(),
+                a.shape(),
+                a.dtype().name()
+            )));
+        }
+        Ok(())
+    }
+
+    fn check_arity(&self, n: usize) -> Result<()> {
+        if n != self.params.len() {
             return Err(Error::msg(format!(
                 "compiled fn expects {} argument(s), got {}",
                 self.params.len(),
-                args.len()
+                n
             )));
         }
+        Ok(())
+    }
+
+    /// Run the compiled program on `backend` with fresh arguments
+    /// (shapes/dtypes must match the trace-time examples).
+    pub fn call(&self, backend: &dyn TensorBackend, args: &[&Tensor]) -> Result<Tensor> {
+        self.check_arity(args.len())?;
         for (i, a) in args.iter().enumerate() {
-            if *a.shape() != self.arg_shapes[i] || a.dtype() != self.arg_dtypes[i] {
-                return Err(Error::msg(format!(
-                    "compiled fn arg {i}: expected {} {}, got {} {}",
-                    self.arg_shapes[i],
-                    self.arg_dtypes[i].name(),
-                    a.shape(),
-                    a.dtype().name()
-                )));
-            }
+            self.check_arg(i, a)?;
         }
         let overrides: Vec<(usize, &Tensor)> = self
             .params
@@ -742,6 +769,38 @@ impl CompiledFn {
             .collect();
         let (mut outs, _) = self.program.exec(backend, &overrides, false)?;
         Ok(outs.remove(0))
+    }
+
+    /// Like [`CompiledFn::call`], but the arguments are passed by value
+    /// and (optionally) *donated*: each one is released back to the
+    /// installed memory manager right after its last consuming
+    /// instruction, per [`CompiledProgram::run_owned`]. This is the
+    /// steady-state serving path — a padded request batch is consumed by
+    /// the program instead of staying live for the whole run, so with a
+    /// caching manager the first activation reuses its storage. Returns
+    /// the result plus the executor's memory/op statistics.
+    pub fn call_owned(
+        &self,
+        backend: &dyn TensorBackend,
+        args: Vec<Tensor>,
+        donate: bool,
+    ) -> Result<(Tensor, ExecStats)> {
+        self.check_arity(args.len())?;
+        for (i, a) in args.iter().enumerate() {
+            self.check_arg(i, a)?;
+        }
+        let mut overrides: Vec<(usize, Tensor)> = Vec::with_capacity(args.len());
+        let mut don: Vec<usize> = Vec::new();
+        for (p, a) in self.params.iter().zip(args) {
+            if let Some(slot) = p {
+                overrides.push((*slot, a));
+                if donate {
+                    don.push(*slot);
+                }
+            }
+        }
+        let (mut outs, stats) = self.program.run_owned(backend, overrides, &don, false)?;
+        Ok((outs.remove(0), stats))
     }
 
     /// Convenience: run on the reference CPU backend.
@@ -902,6 +961,24 @@ mod tests {
             don.planned_peak_bytes,
             keep.planned_peak_bytes
         );
+    }
+
+    #[test]
+    fn call_owned_matches_call_and_donates() {
+        let ex = [Tensor::from_slice(&vec![1.5f32; 512], [512])];
+        let cf = trace_and_compile(&ex, |args| args[0].mul(&args[0]).tanh()).unwrap();
+        let fresh = || Tensor::from_slice(&vec![0.75f32; 512], [512]);
+        let borrowed = cf.call_cpu(&[&fresh()]).unwrap();
+        let cpu = CpuBackend::shared();
+        let (kept, ks) = cf.call_owned(cpu.as_ref(), vec![fresh()], false).unwrap();
+        let (donated, ds) = cf.call_owned(cpu.as_ref(), vec![fresh()], true).unwrap();
+        assert_eq!(borrowed.to_vec(), kept.to_vec());
+        assert_eq!(borrowed.to_vec(), donated.to_vec());
+        assert_eq!(ks.donated_bytes, 0);
+        assert_eq!(ds.donated_bytes, 512 * 4, "the argument must be retired at last use");
+        // arity / signature checks still apply
+        assert!(cf.call_owned(cpu.as_ref(), vec![], false).is_err());
+        assert!(cf.call_owned(cpu.as_ref(), vec![Tensor::zeros([3])], true).is_err());
     }
 
     #[test]

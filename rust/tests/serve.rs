@@ -1,0 +1,328 @@
+//! Serving-engine correctness suite.
+//!
+//! The two acceptance contracts, enforced bitwise (`f32::to_bits`, no
+//! tolerances):
+//!
+//! 1. KV-cached incremental decode is **bit-identical** to full-context
+//!    recompute decode for ≥ 64 generated tokens.
+//! 2. A request served through the dynamic batcher is **bit-identical**
+//!    to the same request served at batch size 1.
+//!
+//! Plus behavioral coverage of the batching policy (deadline flush,
+//! coalescing, padding, graceful shutdown) and the session's shape
+//! bucketing.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use flashlight::models::BertLike;
+use flashlight::serve::{
+    generate, Engine, EngineConfig, GenerateOptions, InferenceSession, Sampling,
+};
+use flashlight::tensor::{DType, Tensor};
+use flashlight::util::rng::Rng;
+
+/// A small causal LM with deterministic (per-test) random weights.
+fn small_lm(vocab: usize, max_len: usize) -> BertLike {
+    BertLike::new(vocab, 32, 4, 2, max_len)
+}
+
+fn random_ids(rng: &mut Rng, n: usize, vocab: usize) -> Vec<i64> {
+    (0..n).map(|_| rng.below(vocab) as i64).collect()
+}
+
+fn bits(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+// ---- contract 1: KV-cached decode ≡ full recompute ------------------------
+
+#[test]
+fn kv_cached_logits_bit_identical_to_recompute_for_64_tokens() {
+    let model = small_lm(48, 80);
+    let mut rng = Rng::new(11);
+    let mut tokens = random_ids(&mut rng, 8, 48);
+
+    let mut caches = model.empty_cache();
+    let prefill = Tensor::from_slice(&tokens, [1, tokens.len()]);
+    let mut cached_last: Vec<f32> = {
+        let logits = model.logits_cached(&prefill, &mut caches).tensor();
+        logits.narrow(1, tokens.len() - 1, 1).to_vec()
+    };
+
+    for step in 0..64 {
+        // reference: recompute the whole context eagerly, take the last row
+        let ctx = Tensor::from_slice(&tokens, [1, tokens.len()]);
+        let full = model.logits(&ctx).tensor();
+        let full_last: Vec<f32> = full.narrow(1, tokens.len() - 1, 1).to_vec();
+        assert_eq!(
+            bits(&cached_last),
+            bits(&full_last),
+            "cached decode diverged from recompute at generated token {step}"
+        );
+        // greedy next token from the (identical) logits
+        let mut best = 0usize;
+        for (i, &v) in cached_last.iter().enumerate() {
+            if v > cached_last[best] {
+                best = i;
+            }
+        }
+        tokens.push(best as i64);
+        cached_last = model
+            .logits_cached(&Tensor::from_slice(&[best as i64], [1, 1]), &mut caches)
+            .tensor()
+            .to_vec();
+    }
+    assert_eq!(caches[0].len(), 8 + 64, "cache must hold every processed position");
+}
+
+#[test]
+fn generate_cached_and_uncached_agree_greedy_and_topk() {
+    let model = small_lm(64, 96);
+    let mut rng = Rng::new(29);
+    let prompt = random_ids(&mut rng, 6, 64);
+
+    for sampling in [Sampling::Greedy, Sampling::TopK { k: 8, temperature: 0.9 }] {
+        let opts = |use_cache| GenerateOptions {
+            max_new_tokens: 64,
+            sampling: sampling.clone(),
+            seed: 1234,
+            use_cache,
+        };
+        let cached = generate(&model, &prompt, &opts(true)).unwrap();
+        let recompute = generate(&model, &prompt, &opts(false)).unwrap();
+        assert_eq!(
+            cached.tokens, recompute.tokens,
+            "cached vs recompute token streams diverged under {sampling:?}"
+        );
+        assert_eq!(cached.generated, 64);
+        assert_eq!(cached.tokens.len(), prompt.len() + 64);
+        assert!(cached.tokens.iter().all(|&t| (t as usize) < 64));
+    }
+}
+
+#[test]
+fn generate_is_reproducible_per_seed_and_validates_inputs() {
+    let model = small_lm(32, 40);
+    let prompt = [1i64, 5, 9];
+    let topk = |seed| GenerateOptions {
+        max_new_tokens: 12,
+        sampling: Sampling::TopK { k: 5, temperature: 1.1 },
+        seed,
+        use_cache: true,
+    };
+    let a = generate(&model, &prompt, &topk(7)).unwrap();
+    let b = generate(&model, &prompt, &topk(7)).unwrap();
+    assert_eq!(a.tokens, b.tokens, "same seed must replay the same stream");
+
+    // empty prompts, context overflow, and bad sampling knobs are rejected
+    assert!(generate(&model, &[], &GenerateOptions::default()).is_err());
+    let too_long = GenerateOptions { max_new_tokens: 40, ..Default::default() };
+    assert!(generate(&model, &prompt, &too_long).is_err());
+    let bad_k = GenerateOptions {
+        sampling: Sampling::TopK { k: 0, temperature: 1.0 },
+        ..Default::default()
+    };
+    assert!(generate(&model, &prompt, &bad_k).is_err());
+    let bad_t = GenerateOptions {
+        sampling: Sampling::TopK { k: 3, temperature: 0.0 },
+        ..Default::default()
+    };
+    assert!(generate(&model, &prompt, &bad_t).is_err());
+}
+
+// ---- contract 2: batched ≡ solo through the compiled session --------------
+
+#[test]
+fn batched_requests_bit_identical_to_solo_service() {
+    let model = Arc::new(small_lm(40, 24));
+    let seq = 10usize;
+    let traced = Arc::clone(&model);
+    let session = InferenceSession::compile(&[seq], DType::I64, &[1, 4], move |ids| {
+        traced.logits(ids).tensor()
+    })
+    .unwrap();
+
+    let mut rng = Rng::new(3);
+    let requests: Vec<Tensor> = (0..3)
+        .map(|_| Tensor::from_slice(&random_ids(&mut rng, seq, 40), [seq]))
+        .collect();
+
+    // solo references through the batch-1 bucket
+    let solo: Vec<Vec<f32>> = requests
+        .iter()
+        .map(|r| session.run_one(r.copy()).unwrap().to_vec())
+        .collect();
+
+    // the same three requests as one padded batch (3 rows -> bucket 4)
+    let refs: Vec<&Tensor> = requests.iter().collect();
+    let out = session.run_batch(Tensor::stack(&refs, 0)).unwrap();
+    assert_eq!(out.dims(), &[3, seq, 40], "padding rows must be sliced back off");
+    for (i, solo_row) in solo.iter().enumerate() {
+        let batched_row: Vec<f32> = out.narrow(0, i, 1).to_vec();
+        assert_eq!(
+            bits(&batched_row),
+            bits(solo_row),
+            "request {i} served batched diverged from solo service"
+        );
+    }
+}
+
+#[test]
+fn engine_serves_batched_requests_bit_identically_and_coalesces() {
+    let model = Arc::new(small_lm(40, 24));
+    let seq = 10usize;
+    let cfg = EngineConfig {
+        max_batch_size: 8,
+        max_wait: Duration::from_millis(300),
+        workers: 1,
+    };
+    let engine = Engine::start_lm(Arc::clone(&model), seq, &[1, 8], &cfg).unwrap();
+
+    let mut rng = Rng::new(17);
+    let inputs: Vec<Tensor> = (0..8)
+        .map(|_| Tensor::from_slice(&random_ids(&mut rng, seq, 40), [seq]))
+        .collect();
+
+    // enqueue everything before waiting so the single worker can coalesce
+    let handles: Vec<_> = inputs.iter().map(|t| engine.submit(t.copy())).collect();
+    let responses: Vec<Tensor> = handles.into_iter().map(|h| h.wait().unwrap()).collect();
+
+    // references served one-by-one through a fresh batch-1 session
+    let traced = Arc::clone(&model);
+    let solo_session = InferenceSession::compile(&[seq], DType::I64, &[1], move |ids| {
+        traced.logits(ids).tensor()
+    })
+    .unwrap();
+    for (i, (input, resp)) in inputs.iter().zip(&responses).enumerate() {
+        assert_eq!(resp.dims(), &[seq, 40]);
+        let solo = solo_session.run_one(input.copy()).unwrap();
+        assert_eq!(
+            bits(&resp.to_vec()),
+            bits(&solo.to_vec()),
+            "engine response {i} diverged from solo service"
+        );
+    }
+
+    let stats = engine.stats();
+    assert_eq!(stats.batcher.requests, 8);
+    assert!(
+        stats.batcher.batches < stats.batcher.requests,
+        "a 300ms window with 8 queued requests must coalesce (got {} batches)",
+        stats.batcher.batches
+    );
+    assert!(stats.batcher.mean_batch_fill > 1.0);
+    assert!(stats.batcher.latency_p50_us > 0.0);
+    assert!(stats.batcher.latency_p99_us >= stats.batcher.latency_p50_us);
+    engine.shutdown();
+}
+
+#[test]
+fn single_request_flushes_at_the_deadline() {
+    let model = Arc::new(small_lm(24, 16));
+    let cfg = EngineConfig {
+        max_batch_size: 8,
+        max_wait: Duration::from_millis(10),
+        workers: 2,
+    };
+    let engine = Engine::start_lm(model, 6, &[1, 8], &cfg).unwrap();
+    // nobody else is queuing: the lone request must still be answered
+    let ids = Tensor::from_slice(&[1i64, 2, 3, 4, 5, 6], [6]);
+    let out = engine.infer(ids).unwrap();
+    assert_eq!(out.dims(), &[6, 24]);
+    let stats = engine.stats();
+    assert_eq!(stats.batcher.requests, 1);
+    assert_eq!(stats.batcher.batches, 1);
+
+    // malformed requests are rejected at submit time — they must neither
+    // panic a worker nor poison a cohort batch
+    let wrong_shape = Tensor::from_slice(&[1i64, 2, 3], [3]);
+    assert!(engine.infer(wrong_shape).is_err());
+    let wrong_dtype = Tensor::rand([6], 0.0, 1.0);
+    assert!(engine.infer(wrong_dtype).is_err());
+    // and a well-formed request afterwards is still served
+    let ok = engine.infer(Tensor::from_slice(&[0i64; 6], [6])).unwrap();
+    assert_eq!(ok.dims(), &[6, 24]);
+}
+
+#[test]
+fn shutdown_serves_already_queued_requests() {
+    let model = Arc::new(small_lm(24, 16));
+    let cfg = EngineConfig {
+        max_batch_size: 4,
+        max_wait: Duration::from_millis(1),
+        workers: 1,
+    };
+    let engine = Engine::start_lm(model, 6, &[1, 4], &cfg).unwrap();
+    let handles: Vec<_> = (0..6)
+        .map(|i| engine.submit(Tensor::from_slice(&[i as i64; 6], [6])))
+        .collect();
+    // graceful: shutdown joins the workers only after the queue drains
+    engine.shutdown();
+    for h in handles {
+        let out = h.wait().expect("queued request must be served before shutdown");
+        assert_eq!(out.dims(), &[6, 24]);
+    }
+}
+
+// ---- session-level behavior ----------------------------------------------
+
+#[test]
+fn session_buckets_validate_and_route() {
+    let session = InferenceSession::compile(&[3], DType::F32, &[2, 4, 1], |x| {
+        x.mul(x).add_scalar(1.0)
+    })
+    .unwrap();
+    assert_eq!(session.bucket_sizes(), vec![1, 2, 4]);
+    assert_eq!(session.max_batch(), 4);
+    assert_eq!(session.bucket_for(3), Some(4));
+    assert_eq!(session.bucket_for(5), None);
+    assert_eq!(session.output_dims(), &[3]);
+
+    // routing pads 3 rows into the 4-bucket and slices back
+    let batch = Tensor::rand([3, 3], -1.0, 1.0);
+    let out = session.run_batch(batch.copy()).unwrap();
+    assert_eq!(out.dims(), &[3, 3]);
+    let direct = batch.mul(&batch).add_scalar(1.0);
+    assert_eq!(bits(&out.to_vec()), bits(&direct.to_vec()));
+
+    // a single example loses its batch axis
+    let one = session.run_one(Tensor::rand([3], -1.0, 1.0)).unwrap();
+    assert_eq!(one.dims(), &[3]);
+
+    // oversized batches, wrong dtypes, and wrong shapes are rejected
+    assert!(session.run_batch(Tensor::rand([5, 3], -1.0, 1.0)).is_err());
+    assert!(session.run_batch(Tensor::rand([2, 4], -1.0, 1.0)).is_err());
+    assert!(session
+        .run_batch(Tensor::rand([2, 3], 0.0, 1.0).astype(DType::I64))
+        .is_err());
+    // and so are degenerate bucket lists
+    assert!(InferenceSession::compile(&[3], DType::F32, &[], |x| x.copy()).is_err());
+    assert!(InferenceSession::compile(&[3], DType::F32, &[0], |x| x.copy()).is_err());
+    // a non-batch-major forward is caught at compile time
+    assert!(
+        InferenceSession::compile(&[3], DType::F32, &[2], |x| x.sum(&[], false)).is_err(),
+        "reducing away the batch axis must be rejected"
+    );
+}
+
+#[test]
+fn steady_state_serving_does_not_retrace() {
+    // trace_and_compile runs the forward closure exactly once per bucket;
+    // count invocations to prove steady-state serving never re-traces
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    let traces = Arc::new(AtomicUsize::new(0));
+    let counter = Arc::clone(&traces);
+    let session = InferenceSession::compile(&[2], DType::F32, &[1, 2], move |x| {
+        counter.fetch_add(1, Ordering::SeqCst);
+        x.tanh()
+    })
+    .unwrap();
+    assert_eq!(traces.load(Ordering::SeqCst), 2, "one trace per bucket");
+    for i in 0..50 {
+        let x = Tensor::from_slice(&[i as f32, -0.5 * i as f32], [2]);
+        let y = session.run_one(x.copy()).unwrap();
+        assert_eq!(bits(&y.to_vec()), bits(&x.tanh().to_vec()));
+    }
+    assert_eq!(traces.load(Ordering::SeqCst), 2, "serving must not re-trace");
+}
