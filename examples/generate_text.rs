@@ -1,7 +1,8 @@
 //! End-to-end serving demo: train a tiny LM on a synthetic bigram corpus,
 //! checkpoint it (atomically), reload it into a fresh model, then serve it
-//! — KV-cached greedy/top-k generation plus dynamically-batched scoring
-//! through the [`flashlight::serve::Engine`].
+//! — KV-cached greedy/top-k generation, dynamically-batched scoring, and
+//! continuously-batched (iteration-level, paged-KV) generation through the
+//! [`flashlight::serve::Engine`].
 //!
 //! Run: `cargo run --release --example generate_text [steps]`
 
@@ -12,7 +13,9 @@ use flashlight::coordinator::{load_params, save_params, train_lm, TrainConfig};
 use flashlight::models::BertLike;
 use flashlight::nn::Module;
 use flashlight::pkg::text::AutoregressiveLmDataset;
-use flashlight::serve::{generate, Engine, EngineConfig, GenerateOptions, Sampling};
+use flashlight::serve::{
+    generate, ContinuousConfig, Engine, EngineConfig, GenerateOptions, Sampling,
+};
 use flashlight::tensor::Tensor;
 use flashlight::util::rng::Rng;
 
@@ -71,6 +74,7 @@ fn main() {
         sampling: Sampling::Greedy,
         seed: 0,
         use_cache: true,
+        record_logits: false,
     };
     let cached = generate(&served, &prompt, &greedy).expect("generation failed");
     let recomputed = generate(
@@ -96,6 +100,7 @@ fn main() {
         sampling: Sampling::TopK { k: 4, temperature: 0.8 },
         seed: 1234,
         use_cache: true,
+        record_logits: false,
     };
     let sampled = generate(&served, &prompt, &creative).expect("generation failed");
     println!("top-k:     {:?}", &sampled.tokens[prompt.len()..]);
@@ -115,6 +120,7 @@ fn main() {
         max_batch_size: 8,
         max_wait: Duration::from_millis(2),
         workers: 2,
+        decode: ContinuousConfig { max_active: 4, page_tokens: 8, pool_pages: None },
     };
     let engine = Engine::start_lm(Arc::clone(&served), SEQ, &[1, 8], &cfg)
         .expect("engine compile failed");
@@ -142,6 +148,40 @@ fn main() {
         stats.batcher.mean_batch_fill,
         stats.batcher.latency_p50_us,
         stats.batcher.latency_p99_us
+    );
+
+    // ---- continuously-batched generation ----------------------------------
+    // four requests of different lengths share the iteration-level decode
+    // batch over the paged KV pool; each report is bit-identical to a solo
+    // generate() call with the same prompt, seed, and sampling
+    let gen_handles: Vec<_> = (0..4u64)
+        .map(|i| {
+            let p: Vec<i64> =
+                corpus(4 + i as usize * 2, 40 + i).iter().skip(1).map(|&t| t as i64).collect();
+            let opts = GenerateOptions {
+                max_new_tokens: 8 + 4 * i as usize,
+                sampling: Sampling::TopK { k: 4, temperature: 0.9 },
+                seed: i,
+                ..Default::default()
+            };
+            (p.clone(), opts.clone(), engine.submit_generate(&p, &opts).unwrap())
+        })
+        .collect();
+    for (i, (p, opts, h)) in gen_handles.into_iter().enumerate() {
+        let rep = h.wait().expect("continuous generation failed");
+        let solo = generate(&served, &p, &opts).expect("solo generation failed");
+        assert_eq!(rep.tokens, solo.tokens, "continuous decode must match solo decode");
+        println!("continuous {i}: {:?}", &rep.tokens[p.len()..]);
+    }
+    let stats = engine.stats();
+    println!(
+        "decode pool: {} iterations (mean batch {:.2}), goodput {:.1} tok/s, \
+         {} stalls, peak {} pages",
+        stats.decode.iterations,
+        stats.decode.mean_iteration_batch,
+        stats.decode_tokens_per_sec,
+        stats.decode.backpressure_stalls,
+        stats.decode.pool.peak_leased_pages
     );
     engine.shutdown();
     println!("{} served. generate_text OK", Module::name(served.as_ref()));

@@ -40,6 +40,7 @@ fn main() {
         max_batch_size: 1,
         max_wait: Duration::from_micros(100),
         workers: 1,
+        ..Default::default()
     };
     let engine = Engine::start_lm(Arc::clone(&model), SEQ, &[1], &cfg_unbatched).unwrap();
     let t0 = Instant::now();
@@ -66,6 +67,7 @@ fn main() {
         max_batch_size: 8,
         max_wait: Duration::from_millis(5),
         workers: 2,
+        ..Default::default()
     };
     let engine = Engine::start_lm(Arc::clone(&model), SEQ, &[1, 8], &cfg_batched).unwrap();
     let t0 = Instant::now();
@@ -103,6 +105,7 @@ fn main() {
         sampling: Sampling::Greedy,
         seed: 3,
         use_cache,
+        record_logits: false,
     };
     let uncached = generate(&model, &prompt, &opts(false)).unwrap();
     let cached = generate(&model, &prompt, &opts(true)).unwrap();

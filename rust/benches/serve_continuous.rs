@@ -1,0 +1,256 @@
+//! Continuous vs request-level batching snapshot -> BENCH_PR6.json.
+//!
+//! Three comparisons, matching the PR's acceptance criteria:
+//! - **goodput**: 32 mixed-length generation requests through the
+//!   continuous (iteration-level) scheduler vs a request-level baseline
+//!   that forms FIFO batches of 4 and holds every slot until the whole
+//!   batch finishes (head-of-line blocking, the PR 5 serving shape);
+//! - **tail latency**: per-request p99 under the same workload; and
+//! - **solo latency**: a lone request through the continuous scheduler vs
+//!   a direct `generate()` call (the no-regression guard).
+//!
+//! Both paths decode greedily over the same paged KV pool geometry, so
+//! the only variable is the scheduling policy.
+//!
+//! Run: `cargo bench --bench serve_continuous`
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use flashlight::autograd::no_grad;
+use flashlight::memory::KvPagePool;
+use flashlight::models::BertLike;
+use flashlight::nn::PagedKvCache;
+use flashlight::serve::{generate, ContinuousBatcher, ContinuousConfig, GenerateOptions, Sampling};
+use flashlight::testutil::{write_bench_json, BenchRecord};
+use flashlight::util::rng::Rng;
+use flashlight::Tensor;
+
+const VOCAB: usize = 64;
+const PROMPT: usize = 8;
+const REQUESTS: usize = 32;
+const BATCH: usize = 4;
+const PAGE_TOKENS: usize = 8;
+/// Generation budgets cycle short..long, so every request-level batch of
+/// 4 contains one straggler the other three slots must wait out.
+const NEW_TOKENS: [usize; 4] = [4, 8, 16, 32];
+
+fn mixed_requests(rng: &mut Rng) -> Vec<(Vec<i64>, usize)> {
+    (0..REQUESTS)
+        .map(|i| {
+            let prompt: Vec<i64> = (0..PROMPT).map(|_| rng.below(VOCAB) as i64).collect();
+            (prompt, NEW_TOKENS[i % NEW_TOKENS.len()])
+        })
+        .collect()
+}
+
+fn argmax(v: &[f32]) -> i64 {
+    let mut best = 0usize;
+    for (i, &x) in v.iter().enumerate() {
+        if x > v[best] {
+            best = i;
+        }
+    }
+    best as i64
+}
+
+/// The PR 5 shape, re-expressed over the paged APIs: FIFO batches of
+/// `BATCH`, admitted together, decoded in lock-step, and the next batch
+/// waits until *every* member of the current one has finished. Returns
+/// (total generated tokens, per-request latencies in seconds).
+fn request_level_baseline(
+    model: &BertLike,
+    pool: &Arc<KvPagePool>,
+    requests: &[(Vec<i64>, usize)],
+) -> (u64, Vec<f64>) {
+    let t0 = Instant::now();
+    let mut generated = 0u64;
+    let mut latencies = vec![0.0f64; requests.len()];
+    for (chunk_idx, chunk) in requests.chunks(BATCH).enumerate() {
+        // prefill every member of the batch; prefill samples token 1
+        let mut caches: Vec<PagedKvCache> = Vec::with_capacity(chunk.len());
+        let mut last: Vec<i64> = Vec::with_capacity(chunk.len());
+        let mut left: Vec<usize> = Vec::with_capacity(chunk.len());
+        for (prompt, max_new) in chunk {
+            let mut cache = PagedKvCache::new(Arc::clone(pool));
+            cache.reserve(prompt.len() + max_new).expect("baseline pool sized for one batch");
+            let ids = Tensor::from_slice(prompt, [1, prompt.len()]);
+            let logits = no_grad(|| model.logits_paged(&ids, &mut cache)).tensor();
+            let l = logits.dim(1);
+            let row: Vec<f32> = logits.narrow(1, l - 1, 1).to_vec();
+            caches.push(cache);
+            last.push(argmax(&row));
+            left.push(*max_new);
+        }
+        for (slot, l) in left.iter_mut().enumerate() {
+            if *l > 0 {
+                generated += 1;
+                *l -= 1;
+            }
+            if *l == 0 {
+                latencies[chunk_idx * BATCH + slot] = t0.elapsed().as_secs_f64();
+            }
+        }
+        // lock-step decode; finished members leave the forward but their
+        // slots stay blocked until the whole batch drains
+        while left.iter().any(|&l| l > 0) {
+            let mut ids = Vec::new();
+            let mut rows = Vec::new();
+            for (slot, &l) in left.iter().enumerate() {
+                if l > 0 {
+                    ids.push(last[slot]);
+                    rows.push(slot);
+                }
+            }
+            let step = Tensor::from_slice(&ids, [ids.len(), 1]);
+            let mut refs: Vec<&mut PagedKvCache> = Vec::with_capacity(rows.len());
+            let mut rest: &mut [PagedKvCache] = &mut caches;
+            let mut consumed = 0usize;
+            for &slot in &rows {
+                let (_, tail) = rest.split_at_mut(slot - consumed);
+                let (head, tail) = tail.split_at_mut(1);
+                refs.push(&mut head[0]);
+                rest = tail;
+                consumed = slot + 1;
+            }
+            let logits = no_grad(|| model.logits_decode_batch(&step, &mut refs)).tensor();
+            let v = logits.dims()[2];
+            let flat = logits.to_vec();
+            for (k, &slot) in rows.iter().enumerate() {
+                last[slot] = argmax(&flat[k * v..(k + 1) * v]);
+                generated += 1;
+                left[slot] -= 1;
+                if left[slot] == 0 {
+                    latencies[chunk_idx * BATCH + slot] = t0.elapsed().as_secs_f64();
+                }
+            }
+        }
+        drop(caches); // release the batch's pages before the next admission
+    }
+    (generated, latencies)
+}
+
+fn p99(latencies: &[f64]) -> f64 {
+    let mut sorted = latencies.to_vec();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let idx = ((sorted.len() as f64) * 0.99).ceil() as usize;
+    sorted[idx.clamp(1, sorted.len()) - 1]
+}
+
+fn main() {
+    flashlight::util::rng::seed(42);
+    let model = Arc::new(BertLike::new(VOCAB, 64, 4, 2, PROMPT + 32 + 8));
+    let mut rng = Rng::new(7);
+    let requests = mixed_requests(&mut rng);
+    let total_budget: u64 = requests.iter().map(|(_, n)| *n as u64).sum();
+    // both policies get the same pool geometry: BATCH concurrent
+    // worst-case reservations
+    let pages_per_req = (PROMPT + 32).div_ceil(PAGE_TOKENS);
+    let pool_pages = BATCH * pages_per_req;
+    let mut records = Vec::new();
+
+    // ---- request-level baseline (head-of-line blocking) -------------------
+    let pool = KvPagePool::new(model.kv_pool_config(PAGE_TOKENS, pool_pages));
+    let t0 = Instant::now();
+    let (gen_tokens, latencies) = request_level_baseline(&model, &pool, &requests);
+    let static_secs = t0.elapsed().as_secs_f64();
+    assert_eq!(gen_tokens, total_budget, "baseline must decode every budgeted token");
+    assert_eq!(pool.stats().leased_pages, 0, "baseline must drain the pool");
+    let static_tps = gen_tokens as f64 / static_secs;
+    let static_p99_us = p99(&latencies) * 1e6;
+    let mut row = BenchRecord::new(
+        "serve_request_level_batch4",
+        static_secs * 1e9 / gen_tokens as f64,
+        "cpu",
+    );
+    row.extras.push(("goodput_tokens_per_sec", static_tps));
+    row.extras.push(("latency_p99_us", static_p99_us));
+    row.extras.push(("requests", REQUESTS as f64));
+    row.extras.push(("generated_tokens", gen_tokens as f64));
+    records.push(row);
+
+    // ---- continuous scheduler over the same pool geometry ------------------
+    let cfg = ContinuousConfig {
+        max_active: BATCH,
+        page_tokens: PAGE_TOKENS,
+        pool_pages: Some(pool_pages),
+    };
+    let batcher = ContinuousBatcher::start(Arc::clone(&model), &cfg).unwrap();
+    let t0 = Instant::now();
+    let handles: Vec<_> = requests
+        .iter()
+        .map(|(prompt, max_new)| {
+            let opts = GenerateOptions {
+                max_new_tokens: *max_new,
+                sampling: Sampling::Greedy,
+                seed: 0,
+                ..Default::default()
+            };
+            batcher.submit(prompt, &opts)
+        })
+        .collect();
+    for h in handles {
+        h.wait().unwrap();
+    }
+    let cont_secs = t0.elapsed().as_secs_f64();
+    let stats = batcher.stats();
+    batcher.shutdown();
+    assert_eq!(stats.generated_tokens, total_budget, "scheduler must decode every token");
+    assert_eq!(stats.pool.leased_pages, 0, "scheduler must drain the pool");
+    let cont_tps = stats.generated_tokens as f64 / cont_secs;
+    let mut row = BenchRecord::new(
+        "serve_continuous_batch4",
+        cont_secs * 1e9 / stats.generated_tokens as f64,
+        "cpu",
+    );
+    row.extras.push(("goodput_tokens_per_sec", cont_tps));
+    row.extras.push(("busy_goodput_tokens_per_sec", stats.goodput_tps));
+    row.extras.push(("latency_p99_us", stats.latency_p99_us));
+    row.extras.push(("requests", REQUESTS as f64));
+    row.extras.push(("generated_tokens", stats.generated_tokens as f64));
+    row.extras.push(("mean_iteration_batch", stats.mean_iteration_batch));
+    row.extras.push(("occupancy_mean", stats.occupancy_mean));
+    row.extras.push(("backpressure_stalls", stats.backpressure_stalls as f64));
+    row.extras.push(("speedup_vs_request_level", cont_tps / static_tps));
+    row.extras.push(("p99_vs_request_level", stats.latency_p99_us / static_p99_us));
+    records.push(row);
+    println!(
+        "mixed 32-request decode: request-level {static_tps:.1} tok/s (p99 {:.0}us), \
+         continuous {cont_tps:.1} tok/s (p99 {:.0}us), {:.2}x goodput",
+        static_p99_us,
+        stats.latency_p99_us,
+        cont_tps / static_tps
+    );
+
+    // ---- solo latency guard ------------------------------------------------
+    let solo_prompt: Vec<i64> = (0..PROMPT).map(|i| (i * 5 % VOCAB) as i64).collect();
+    let solo_opts = GenerateOptions {
+        max_new_tokens: 32,
+        sampling: Sampling::Greedy,
+        seed: 0,
+        ..Default::default()
+    };
+    let t0 = Instant::now();
+    let direct = generate(&model, &solo_prompt, &solo_opts).unwrap();
+    let direct_secs = t0.elapsed().as_secs_f64();
+    let batcher = ContinuousBatcher::start(Arc::clone(&model), &cfg).unwrap();
+    let t0 = Instant::now();
+    let scheduled = batcher.generate(&solo_prompt, &solo_opts).unwrap();
+    let sched_secs = t0.elapsed().as_secs_f64();
+    batcher.shutdown();
+    assert_eq!(scheduled.tokens, direct.tokens, "solo paths must agree bitwise");
+    let mut row = BenchRecord::new("serve_decode_solo_direct", direct_secs * 1e9 / 32.0, "cpu");
+    row.extras.push(("total_secs", direct_secs));
+    records.push(row);
+    let mut row = BenchRecord::new("serve_decode_solo_continuous", sched_secs * 1e9 / 32.0, "cpu");
+    row.extras.push(("total_secs", sched_secs));
+    row.extras.push(("overhead_vs_direct", sched_secs / direct_secs));
+    records.push(row);
+    println!(
+        "solo decode: direct {direct_secs:.3}s vs continuous {sched_secs:.3}s \
+         ({:.2}x)",
+        sched_secs / direct_secs
+    );
+
+    write_bench_json("BENCH_PR6.json", &records);
+}

@@ -1,0 +1,390 @@
+//! Paged KV-cache pool: fixed-size pages leased from a shared, capped
+//! reservoir, built on the block machinery every other buffer uses.
+//!
+//! Continuous (iteration-level) batching admits and retires generation
+//! requests every token, so per-request KV memory must come and go just
+//! as fast. Instead of one contiguous `[B*H, len, hd]` tensor per request
+//! that grows by concat-append, each request's cache owns a set of
+//! fixed-size **pages** leased from a process-wide [`KvPagePool`]; a page
+//! table (in [`crate::nn::PagedKvCache`]) maps logical KV positions to
+//! pool pages. Retirement drops the lease handles, which return their
+//! backing [`TypedBuf`] blocks to the originating memory manager — the
+//! pool is a *policy* layer (capacity + accounting) over the existing
+//! `memory/caching.rs` allocator, not a second allocator.
+//!
+//! Exhaustion is a first-class, typed outcome ([`PoolExhausted`]), not a
+//! panic: the serving scheduler treats it as backpressure and holds the
+//! queue head until a retirement frees pages.
+
+use std::sync::{Arc, Mutex};
+
+use crate::util::error::Error;
+
+use super::{manager, MemoryManagerAdapter, MemStats, TypedBuf};
+
+/// Geometry of one pool: every page stores `page_tokens` KV positions for
+/// *all* layers and heads of one request, so a request's page count is
+/// just `ceil(positions / page_tokens)` regardless of model depth.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct KvPoolConfig {
+    /// Transformer layers the cache covers.
+    pub layers: usize,
+    /// Attention heads per layer.
+    pub heads: usize,
+    /// Per-head feature width.
+    pub head_dim: usize,
+    /// KV positions stored per page.
+    pub page_tokens: usize,
+    /// Hard cap on simultaneously leased pages (the backpressure knob).
+    pub max_pages: usize,
+}
+
+impl KvPoolConfig {
+    /// f32 elements in one page: `[layers][k|v][heads][page_tokens][head_dim]`.
+    pub fn floats_per_page(&self) -> usize {
+        self.layers * 2 * self.heads * self.page_tokens * self.head_dim
+    }
+
+    /// Bytes in one page.
+    pub fn page_bytes(&self) -> usize {
+        self.floats_per_page() * std::mem::size_of::<f32>()
+    }
+
+    /// Pages needed to hold `positions` KV positions.
+    pub fn pages_for(&self, positions: usize) -> usize {
+        positions.div_ceil(self.page_tokens)
+    }
+
+    /// Most KV positions one request could hold if it leased every page.
+    pub fn max_positions(&self) -> usize {
+        self.max_pages * self.page_tokens
+    }
+
+    /// Physical offset (in f32 elements, within one page) of the
+    /// `head_dim`-long run holding position-slot `slot` of head `head`,
+    /// key (`kv == 0`) or value (`kv == 1`), layer `layer`. This is the
+    /// page table's address math; `kv_pool` unit tests pin it against a
+    /// naive enumeration and `nn/attention.rs` pins the end-to-end
+    /// gather against the contiguous concat-append reference.
+    pub fn run_offset(&self, layer: usize, kv: usize, head: usize, slot: usize) -> usize {
+        debug_assert!(layer < self.layers && kv < 2 && head < self.heads);
+        debug_assert!(slot < self.page_tokens);
+        (((layer * 2 + kv) * self.heads + head) * self.page_tokens + slot) * self.head_dim
+    }
+}
+
+/// Typed backpressure error: the pool cannot lease `wanted` more pages
+/// right now. Callers decide whether to wait for retirements (`wanted <=
+/// capacity`) or reject the request outright (`wanted > capacity`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PoolExhausted {
+    /// Pages the lease asked for.
+    pub wanted: usize,
+    /// Pages currently free.
+    pub free: usize,
+    /// Total pool capacity in pages.
+    pub capacity: usize,
+}
+
+impl std::fmt::Display for PoolExhausted {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "kv page pool exhausted: wanted {} pages, {} free of {} total",
+            self.wanted, self.free, self.capacity
+        )
+    }
+}
+
+impl std::error::Error for PoolExhausted {}
+
+impl From<PoolExhausted> for Error {
+    fn from(e: PoolExhausted) -> Self {
+        Error::Memory(e.to_string())
+    }
+}
+
+/// A point-in-time snapshot of the pool's accounting.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct KvPoolStats {
+    /// Pages currently leased out.
+    pub leased_pages: usize,
+    /// Pages currently available.
+    pub free_pages: usize,
+    /// Total capacity in pages.
+    pub capacity_pages: usize,
+    /// High-water mark of `leased_pages`.
+    pub peak_leased_pages: usize,
+    /// Pages handed out over the pool's lifetime.
+    pub total_leases: u64,
+    /// Pages returned over the pool's lifetime.
+    pub total_releases: u64,
+    /// Lease calls rejected with [`PoolExhausted`].
+    pub exhausted_count: u64,
+}
+
+#[derive(Default)]
+struct PoolState {
+    leased: usize,
+    peak_leased: usize,
+    total_leases: u64,
+    total_releases: u64,
+    exhausted: u64,
+}
+
+/// The shared page reservoir. Cheap to clone via `Arc`; every leased
+/// [`KvPage`] holds one back-reference for release accounting.
+pub struct KvPagePool {
+    cfg: KvPoolConfig,
+    mgr: Arc<dyn MemoryManagerAdapter>,
+    state: Mutex<PoolState>,
+}
+
+impl KvPagePool {
+    /// A pool allocating pages through the globally installed memory
+    /// manager (see [`crate::memory::manager`]).
+    pub fn new(cfg: KvPoolConfig) -> Arc<Self> {
+        Self::with_manager(cfg, manager())
+    }
+
+    /// A pool allocating pages through a specific manager (tests pin this
+    /// to a telemetry-wrapped caching manager to audit for leaks).
+    pub fn with_manager(cfg: KvPoolConfig, mgr: Arc<dyn MemoryManagerAdapter>) -> Arc<Self> {
+        assert!(cfg.layers > 0 && cfg.heads > 0 && cfg.head_dim > 0, "degenerate pool geometry");
+        assert!(cfg.page_tokens > 0, "pages must hold at least one position");
+        assert!(cfg.max_pages > 0, "a zero-capacity pool can serve nothing");
+        Arc::new(KvPagePool { cfg, mgr, state: Mutex::new(PoolState::default()) })
+    }
+
+    /// The pool's geometry.
+    pub fn config(&self) -> &KvPoolConfig {
+        &self.cfg
+    }
+
+    /// Lease `pages` pages atomically: either all are granted or none
+    /// are, so a multi-page reservation can never deadlock half-held.
+    /// Pages come back zero-filled (recycled blocks never leak stale KV
+    /// bits across requests).
+    pub fn lease(self: &Arc<Self>, pages: usize) -> Result<Vec<KvPage>, PoolExhausted> {
+        if pages == 0 {
+            return Ok(Vec::new());
+        }
+        {
+            let mut st = self.state.lock().unwrap_or_else(|p| p.into_inner());
+            let free = self.cfg.max_pages - st.leased;
+            if pages > free {
+                st.exhausted += 1;
+                return Err(PoolExhausted { wanted: pages, free, capacity: self.cfg.max_pages });
+            }
+            st.leased += pages;
+            st.peak_leased = st.peak_leased.max(st.leased);
+            st.total_leases += pages as u64;
+        }
+        // allocate outside the lock: the counters already reserve the
+        // capacity, and allocation may be slow under a caching miss
+        let n = self.cfg.floats_per_page();
+        Ok((0..pages)
+            .map(|_| KvPage {
+                buf: TypedBuf::zeroed_in(n, self.mgr.clone()),
+                pool: Arc::clone(self),
+            })
+            .collect())
+    }
+
+    fn release_one(&self) {
+        let mut st = self.state.lock().unwrap_or_else(|p| p.into_inner());
+        debug_assert!(st.leased > 0, "release without a matching lease");
+        st.leased = st.leased.saturating_sub(1);
+        st.total_releases += 1;
+    }
+
+    /// Accounting snapshot.
+    pub fn stats(&self) -> KvPoolStats {
+        let st = self.state.lock().unwrap_or_else(|p| p.into_inner());
+        KvPoolStats {
+            leased_pages: st.leased,
+            free_pages: self.cfg.max_pages - st.leased,
+            capacity_pages: self.cfg.max_pages,
+            peak_leased_pages: st.peak_leased,
+            total_leases: st.total_leases,
+            total_releases: st.total_releases,
+            exhausted_count: st.exhausted,
+        }
+    }
+
+    /// The underlying memory manager's statistics (pages show up here as
+    /// ordinary allocations — the no-leak tests assert both ledgers).
+    pub fn manager_stats(&self) -> MemStats {
+        self.mgr.stats()
+    }
+}
+
+impl std::fmt::Debug for KvPagePool {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let s = self.stats();
+        write!(
+            f,
+            "KvPagePool({} leased / {} pages of {} tokens, mgr={})",
+            s.leased_pages,
+            s.capacity_pages,
+            self.cfg.page_tokens,
+            self.mgr.name()
+        )
+    }
+}
+
+/// One leased page. Dropping it returns the backing block to the memory
+/// manager *and* the capacity to the pool (RAII — retirement cannot leak).
+pub struct KvPage {
+    buf: TypedBuf<f32>,
+    pool: Arc<KvPagePool>,
+}
+
+impl KvPage {
+    /// The page's f32 storage.
+    pub fn data(&self) -> &[f32] {
+        self.buf.as_slice()
+    }
+
+    /// Mutable f32 storage.
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        self.buf.as_mut_slice()
+    }
+}
+
+impl Drop for KvPage {
+    fn drop(&mut self) {
+        self.pool.release_one();
+    }
+}
+
+impl std::fmt::Debug for KvPage {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "KvPage({} floats)", self.buf.len())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::caching::CachingMemoryManager;
+    use super::super::telemetry::TelemetryMemoryManager;
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn small_cfg(max_pages: usize) -> KvPoolConfig {
+        KvPoolConfig { layers: 2, heads: 2, head_dim: 4, page_tokens: 3, max_pages }
+    }
+
+    #[test]
+    fn geometry_math() {
+        let cfg = small_cfg(8);
+        assert_eq!(cfg.floats_per_page(), 2 * 2 * 2 * 3 * 4);
+        assert_eq!(cfg.page_bytes(), cfg.floats_per_page() * 4);
+        assert_eq!(cfg.pages_for(0), 0);
+        assert_eq!(cfg.pages_for(1), 1);
+        assert_eq!(cfg.pages_for(3), 1);
+        assert_eq!(cfg.pages_for(4), 2);
+        assert_eq!(cfg.max_positions(), 24);
+    }
+
+    #[test]
+    fn run_offsets_tile_the_page_exactly() {
+        // the address math must be a bijection from (layer, kv, head,
+        // slot) onto disjoint head_dim-long runs covering the whole page —
+        // checked against a naive enumeration in storage order
+        let cfg = small_cfg(1);
+        let mut expected = 0usize;
+        for layer in 0..cfg.layers {
+            for kv in 0..2 {
+                for head in 0..cfg.heads {
+                    for slot in 0..cfg.page_tokens {
+                        assert_eq!(cfg.run_offset(layer, kv, head, slot), expected);
+                        expected += cfg.head_dim;
+                    }
+                }
+            }
+        }
+        assert_eq!(expected, cfg.floats_per_page());
+    }
+
+    #[test]
+    fn lease_release_churn_never_leaks() {
+        // audit both ledgers under random churn: the pool's page counters
+        // and the real allocator bytes seen through the telemetry wrapper
+        let mgr = Arc::new(TelemetryMemoryManager::new(Arc::new(
+            CachingMemoryManager::unrestricted(),
+        )));
+        let pool = KvPagePool::with_manager(small_cfg(16), mgr.clone());
+        // the caching allocator rounds block sizes to its quantum, so
+        // measure one page's real footprint instead of assuming page_bytes
+        let bytes_per_page = {
+            let probe = pool.lease(1).unwrap();
+            let b = mgr.stats().allocated_bytes;
+            assert!(b >= pool.config().page_bytes());
+            drop(probe);
+            b
+        };
+        assert_eq!(mgr.stats().allocated_bytes, 0);
+        let mut rng = Rng::new(0x9A6E);
+        let mut held: Vec<KvPage> = Vec::new();
+        for _ in 0..200 {
+            if !held.is_empty() && rng.uniform() < 0.5 {
+                let i = rng.below(held.len());
+                held.swap_remove(i);
+            } else {
+                let want = 1 + rng.below(4);
+                match pool.lease(want) {
+                    Ok(pages) => held.extend(pages),
+                    Err(e) => assert!(e.wanted > e.free, "spurious exhaustion: {e}"),
+                }
+            }
+            let s = pool.stats();
+            assert_eq!(s.leased_pages, held.len());
+            assert_eq!(s.leased_pages + s.free_pages, s.capacity_pages);
+            assert_eq!(
+                mgr.stats().allocated_bytes,
+                held.len() * bytes_per_page,
+                "allocator bytes disagree with the page ledger"
+            );
+        }
+        held.clear();
+        let s = pool.stats();
+        assert_eq!(s.leased_pages, 0, "pages leaked after the churn");
+        assert_eq!(s.total_leases, s.total_releases);
+        assert_eq!(mgr.stats().allocated_bytes, 0, "allocator bytes leaked after the churn");
+        assert!(s.peak_leased_pages <= s.capacity_pages);
+    }
+
+    #[test]
+    fn exhaustion_is_a_typed_error_not_a_panic() {
+        let pool = KvPagePool::new(small_cfg(4));
+        let held = pool.lease(3).unwrap();
+        let err = pool.lease(2).unwrap_err();
+        assert_eq!(err, PoolExhausted { wanted: 2, free: 1, capacity: 4 });
+        assert!(err.to_string().contains("exhausted"));
+        // the failed lease must not consume capacity
+        assert_eq!(pool.stats().leased_pages, 3);
+        assert_eq!(pool.stats().exhausted_count, 1);
+        drop(held);
+        // freed capacity serves the retry
+        let again = pool.lease(4).unwrap();
+        assert_eq!(again.len(), 4);
+        // conversion into the library error keeps the context
+        let lib: Error = PoolExhausted { wanted: 9, free: 0, capacity: 4 }.into();
+        assert!(matches!(lib, Error::Memory(ref m) if m.contains("wanted 9")));
+    }
+
+    #[test]
+    fn leases_are_all_or_nothing_and_zeroed() {
+        let pool = KvPagePool::new(small_cfg(2));
+        assert!(pool.lease(3).is_err(), "over-capacity lease must fail atomically");
+        assert_eq!(pool.stats().leased_pages, 0);
+        let mut pages = pool.lease(2).unwrap();
+        assert!(pages.iter().all(|p| p.data().iter().all(|&x| x == 0.0)));
+        // dirty a page, return it, lease again: still zeroed
+        pages[0].data_mut()[0] = 7.0;
+        drop(pages);
+        let pages = pool.lease(1).unwrap();
+        assert!(pages[0].data().iter().all(|&x| x == 0.0), "recycled page leaked stale bits");
+    }
+}

@@ -13,6 +13,7 @@
 pub mod block;
 pub mod caching;
 pub mod default;
+pub mod kv_pool;
 pub mod telemetry;
 
 use std::sync::{Arc, RwLock};
@@ -20,6 +21,7 @@ use std::sync::{Arc, RwLock};
 pub use block::Block;
 pub use caching::{CachingConfig, CachingMemoryManager};
 pub use default::DefaultMemoryManager;
+pub use kv_pool::{KvPage, KvPagePool, KvPoolConfig, KvPoolStats, PoolExhausted};
 pub use telemetry::{AllocEvent, EventKind, TelemetryMemoryManager};
 
 use crate::util::error::Result;

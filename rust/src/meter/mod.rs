@@ -344,6 +344,70 @@ impl TimeMeter {
     }
 }
 
+/// Time-weighted mean of a piecewise-constant level — e.g. decode-slot
+/// occupancy in the continuous batcher, where "mean active sequences"
+/// must weight each batch size by how long it was in effect, not by how
+/// many times it was observed.
+#[derive(Debug, Default)]
+pub struct TimeWeightedMeter {
+    level: f64,
+    weighted: f64, // ∫ level dt over closed segments
+    elapsed: f64,  // total closed-segment seconds
+    peak: f64,
+    last: Option<std::time::Instant>,
+}
+
+impl TimeWeightedMeter {
+    /// Empty meter; the clock starts at the first [`Self::set`].
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// The level changed to `level` now: close the previous segment at
+    /// the old level and start a new one.
+    pub fn set(&mut self, level: f64) {
+        let now = std::time::Instant::now();
+        if let Some(last) = self.last {
+            self.observe(self.level, now.duration_since(last).as_secs_f64());
+        }
+        self.level = level;
+        self.peak = self.peak.max(level);
+        self.last = Some(now);
+    }
+
+    /// Deterministic low-level entry (and the testable core of
+    /// [`Self::set`]): account `level` having held for `secs` seconds.
+    pub fn observe(&mut self, level: f64, secs: f64) {
+        self.weighted += level * secs;
+        self.elapsed += secs;
+        self.peak = self.peak.max(level);
+    }
+
+    /// Time-weighted mean level over every closed segment (0 before any).
+    pub fn mean(&self) -> f64 {
+        if self.elapsed == 0.0 {
+            0.0
+        } else {
+            self.weighted / self.elapsed
+        }
+    }
+
+    /// Highest level seen.
+    pub fn peak(&self) -> f64 {
+        self.peak
+    }
+
+    /// Total accounted seconds.
+    pub fn seconds(&self) -> f64 {
+        self.elapsed
+    }
+
+    /// Forget everything.
+    pub fn reset(&mut self) {
+        *self = Self::default();
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -430,6 +494,36 @@ mod tests {
         let mut top3 = TopKMeter::new(3);
         top3.add(&scores, &targets);
         assert!((top3.value() - 100.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn time_weighted_meter_weights_by_duration() {
+        let mut m = TimeWeightedMeter::new();
+        assert_eq!(m.mean(), 0.0);
+        // level 4 for 1s, level 1 for 3s: mean = (4 + 3) / 4 = 1.75
+        m.observe(4.0, 1.0);
+        m.observe(1.0, 3.0);
+        assert!((m.mean() - 1.75).abs() < 1e-12);
+        assert_eq!(m.peak(), 4.0);
+        assert!((m.seconds() - 4.0).abs() < 1e-12);
+        // an instantaneous observation adds no weight
+        m.observe(100.0, 0.0);
+        assert!((m.mean() - 1.75).abs() < 1e-12);
+        assert_eq!(m.peak(), 100.0);
+        m.reset();
+        assert_eq!(m.mean(), 0.0);
+        assert_eq!(m.peak(), 0.0);
+    }
+
+    #[test]
+    fn time_weighted_meter_set_tracks_wall_clock() {
+        let mut m = TimeWeightedMeter::new();
+        m.set(3.0);
+        std::thread::sleep(std::time::Duration::from_millis(5));
+        m.set(0.0);
+        assert!(m.seconds() > 0.0, "a closed segment must account time");
+        assert!((m.mean() - 3.0).abs() < 1e-9, "only level-3 time is closed");
+        assert_eq!(m.peak(), 3.0);
     }
 
     #[test]

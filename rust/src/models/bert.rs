@@ -2,8 +2,10 @@
 //! scaled; also the backbone of the end-to-end training example).
 
 use crate::autograd::{ops, Variable};
+use crate::memory::KvPoolConfig;
 use crate::nn::{
-    Embedding, KvCache, LayerNorm, Linear, Module, PositionalEmbedding, TransformerEncoderLayer,
+    Embedding, KvCache, LayerNorm, Linear, Module, PagedKvCache, PositionalEmbedding,
+    TransformerEncoderLayer,
 };
 use crate::tensor::Tensor;
 
@@ -65,6 +67,71 @@ impl BertLike {
     /// Fresh per-layer KV caches for one generation stream.
     pub fn empty_cache(&self) -> Vec<KvCache> {
         (0..self.layers.len()).map(|_| KvCache::new()).collect()
+    }
+
+    /// [`BertLike::logits_cached`] against one request's paged cache:
+    /// forward new ids `[1, L_new]` at the cache's current length, write
+    /// each layer's keys/values into the cache's pages, and commit the
+    /// new positions once after the layer stack. Bit-identical to the
+    /// contiguous cached path (`rust/tests/serve.rs` pins this).
+    pub fn logits_paged(&self, ids: &Tensor, cache: &mut PagedKvCache) -> Variable {
+        let dims = ids.dims().to_vec();
+        assert_eq!(dims.len(), 2, "ids want [B, L]");
+        assert_eq!(dims[0], 1, "the paged path is per-request");
+        let l_new = dims[1];
+        let offset = cache.len();
+        let mut h = self.pos.forward_at(&self.tok.lookup(ids), offset);
+        for (i, layer) in self.layers.iter().enumerate() {
+            h = layer.forward_paged(&h, cache, i);
+        }
+        cache.advance(l_new);
+        self.head.forward(&self.ln_f.forward(&h))
+    }
+
+    /// One continuous-batching decode iteration: step `B` *different*
+    /// requests one token each. `ids` is `[B, 1]`, row `i` the latest
+    /// token of the request behind `caches[i]`; every row sits at its own
+    /// position (its cache length). Returns `[B, 1, V]` logits whose row
+    /// `i` is bit-identical to stepping that request alone — the
+    /// correctness contract of the continuous batcher, fuzzed in
+    /// `rust/tests/serve_continuous_fuzz.rs`.
+    pub fn logits_decode_batch(&self, ids: &Tensor, caches: &mut [&mut PagedKvCache]) -> Variable {
+        let dims = ids.dims().to_vec();
+        assert_eq!(dims.len(), 2, "ids want [B, L]");
+        assert_eq!(dims[1], 1, "decode steps one token per request");
+        assert_eq!(dims[0], caches.len(), "one paged cache per batch row");
+        let offsets: Vec<usize> = caches.iter().map(|c| c.len()).collect();
+        let mut h = self.pos.forward_at_each(&self.tok.lookup(ids), &offsets);
+        for (i, layer) in self.layers.iter().enumerate() {
+            h = layer.forward_decode_batch(&h, caches, i);
+        }
+        for c in caches.iter_mut() {
+            c.advance(1);
+        }
+        self.head.forward(&self.ln_f.forward(&h))
+    }
+
+    /// Pool geometry matching this model for a given page size and
+    /// capacity — the glue between the model's shape and
+    /// [`crate::memory::KvPagePool`].
+    pub fn kv_pool_config(&self, page_tokens: usize, max_pages: usize) -> KvPoolConfig {
+        KvPoolConfig {
+            layers: self.depth(),
+            heads: self.heads(),
+            head_dim: self.head_dim(),
+            page_tokens,
+            max_pages,
+        }
+    }
+
+    /// Attention heads per layer.
+    pub fn heads(&self) -> usize {
+        self.layers.first().map_or(1, |l| l.attn.heads())
+    }
+
+    /// Per-head feature width.
+    pub fn head_dim(&self) -> usize {
+        self.dim / self.heads()
     }
 
     /// Number of transformer layers.

@@ -15,9 +15,10 @@
 //! 64 generated tokens).
 
 use std::collections::HashMap;
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 
 use crate::autograd::{ops, Variable};
+use crate::memory::{KvPage, KvPagePool, PoolExhausted};
 use crate::tensor::Tensor;
 
 use super::linear::Linear;
@@ -72,6 +73,149 @@ impl KvCache {
     }
 }
 
+/// Per-*request* KV cache backed by fixed-size pages leased from a shared
+/// [`KvPagePool`] — the indirection layer that lets the continuous
+/// batcher admit and retire sequences every token without moving anyone
+/// else's memory.
+///
+/// Where [`KvCache`] stores one contiguous `[B*H, len, hd]` tensor per
+/// layer that grows by concat-append, a `PagedKvCache` owns a page table:
+/// logical KV position `p` lives in page `p / page_tokens` at slot
+/// `p % page_tokens`, and one page holds that slot range for *every*
+/// layer and head (see [`crate::memory::KvPoolConfig::run_offset`]).
+/// Dropping the cache releases its lease, so retirement frees memory
+/// immediately. The gathered per-layer tensors are bit-copies of what the
+/// contiguous cache would hold — `rust/src/nn/attention.rs` tests pin the
+/// two layouts against each other bitwise.
+pub struct PagedKvCache {
+    pool: Arc<KvPagePool>,
+    pages: Vec<KvPage>,
+    len: usize,
+}
+
+impl PagedKvCache {
+    /// Empty cache leasing from `pool`.
+    pub fn new(pool: Arc<KvPagePool>) -> Self {
+        PagedKvCache { pool, pages: Vec::new(), len: 0 }
+    }
+
+    /// Positions written so far.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    /// Whether any position has been written.
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Positions the currently leased pages can hold.
+    pub fn capacity(&self) -> usize {
+        self.pages.len() * self.pool.config().page_tokens
+    }
+
+    /// Pages currently leased.
+    pub fn pages_held(&self) -> usize {
+        self.pages.len()
+    }
+
+    /// The pool this cache leases from.
+    pub fn pool(&self) -> &Arc<KvPagePool> {
+        &self.pool
+    }
+
+    /// Ensure capacity for `total_positions` logical positions, leasing
+    /// additional pages as needed. All-or-nothing: on [`PoolExhausted`]
+    /// nothing was leased and the cache is unchanged — the scheduler's
+    /// backpressure signal. Reserving a request's worst case (prompt +
+    /// max new tokens) at admission means decode can never die mid-flight
+    /// from a failed page grab.
+    pub fn reserve(&mut self, total_positions: usize) -> Result<(), PoolExhausted> {
+        let need = self.pool.config().pages_for(total_positions);
+        if need > self.pages.len() {
+            let extra = self.pool.lease(need - self.pages.len())?;
+            self.pages.extend(extra);
+        }
+        Ok(())
+    }
+
+    /// Write `[H, l_new, hd]` keys/values for `layer` at logical
+    /// positions `base .. base + l_new`. Capacity must already be
+    /// reserved. The per-layer write does *not* advance [`Self::len`] —
+    /// every layer of one forward writes at the same base, and the model
+    /// calls [`Self::advance`] once after the layer stack.
+    pub fn write_layer(&mut self, layer: usize, base: usize, k_new: &Tensor, v_new: &Tensor) {
+        let cfg = *self.pool.config();
+        assert!(layer < cfg.layers, "layer {layer} out of range {}", cfg.layers);
+        let dims = k_new.dims().to_vec();
+        assert_eq!(dims.len(), 3, "paged write wants [H, l_new, hd]");
+        assert_eq!(dims[0], cfg.heads, "head count mismatch");
+        assert_eq!(dims[2], cfg.head_dim, "head width mismatch");
+        assert_eq!(v_new.dims(), dims, "K and V must agree in shape");
+        let (h, l_new, hd) = (dims[0], dims[1], dims[2]);
+        assert!(
+            base + l_new <= self.capacity(),
+            "write beyond reserved capacity: {} + {} > {}",
+            base,
+            l_new,
+            self.capacity()
+        );
+        for (which, data) in [k_new.to_vec(), v_new.to_vec()].iter().enumerate() {
+            for head in 0..h {
+                for t in 0..l_new {
+                    let pos = base + t;
+                    let (page, slot) = (pos / cfg.page_tokens, pos % cfg.page_tokens);
+                    let off = cfg.run_offset(layer, which, head, slot);
+                    let src = &data[(head * l_new + t) * hd..(head * l_new + t + 1) * hd];
+                    self.pages[page].data_mut()[off..off + hd].copy_from_slice(src);
+                }
+            }
+        }
+    }
+
+    /// Commit `l_new` freshly written positions (once per model forward,
+    /// after every layer wrote at the old length).
+    pub fn advance(&mut self, l_new: usize) {
+        self.len += l_new;
+        debug_assert!(self.len <= self.capacity(), "advance beyond reserved capacity");
+    }
+
+    /// Materialize `layer`'s keys/values over positions `0 .. len` as
+    /// contiguous `[H, len, hd]` tensors — bit-copies of what the
+    /// concat-append [`KvCache`] would hold, so attention downstream of a
+    /// gather cannot tell the layouts apart.
+    pub fn gather_layer(&self, layer: usize, len: usize) -> (Tensor, Tensor) {
+        let cfg = *self.pool.config();
+        assert!(len <= self.capacity(), "gather beyond reserved capacity");
+        let (h, hd) = (cfg.heads, cfg.head_dim);
+        let mut out = [vec![0.0f32; h * len * hd], vec![0.0f32; h * len * hd]];
+        for (which, data) in out.iter_mut().enumerate() {
+            for head in 0..h {
+                for t in 0..len {
+                    let (page, slot) = (t / cfg.page_tokens, t % cfg.page_tokens);
+                    let off = cfg.run_offset(layer, which, head, slot);
+                    let dst = &mut data[(head * len + t) * hd..(head * len + t + 1) * hd];
+                    dst.copy_from_slice(&self.pages[page].data()[off..off + hd]);
+                }
+            }
+        }
+        let [k, v] = out;
+        (Tensor::from_slice(&k, [h, len, hd]), Tensor::from_slice(&v, [h, len, hd]))
+    }
+
+    /// Release every page and forget all positions.
+    pub fn reset(&mut self) {
+        self.pages.clear();
+        self.len = 0;
+    }
+}
+
+impl std::fmt::Debug for PagedKvCache {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "PagedKvCache(len={}, pages={})", self.len, self.pages.len())
+    }
+}
+
 /// Multi-head self-attention with optional causal masking.
 pub struct MultiheadAttention {
     /// Q/K/V projections.
@@ -110,6 +254,16 @@ impl MultiheadAttention {
     /// Whether this attention applies a causal mask.
     pub fn is_causal(&self) -> bool {
         self.causal
+    }
+
+    /// Number of attention heads.
+    pub fn heads(&self) -> usize {
+        self.heads
+    }
+
+    /// Per-head feature width.
+    pub fn head_dim(&self) -> usize {
+        self.dim / self.heads
     }
 
     /// The additive causal bias for `q_len` query rows whose global
@@ -217,6 +371,88 @@ impl MultiheadAttention {
             past,
         );
         self.wo.forward(&self.merge_heads(&ctx, b, l_new))
+    }
+
+    /// [`Self::forward_cached`] against a paged cache: forward one
+    /// request's new positions `[1, L_new, D]`, writing this call's
+    /// keys/values into `cache`'s pages for `layer` and attending over a
+    /// gather of the full past. Bit-identical to the contiguous cached
+    /// path — the gather reproduces the concat-append layout exactly.
+    /// Per-request by construction (`B == 1`): prefill lengths differ per
+    /// request, so prefill never batches across requests.
+    pub fn forward_paged(
+        &self,
+        input: &Variable,
+        cache: &mut PagedKvCache,
+        layer: usize,
+    ) -> Variable {
+        assert!(self.causal, "KV-cached attention requires causal masking");
+        let dims = input.dims();
+        assert_eq!(dims.len(), 3, "attention wants [B, L, D]");
+        let (b, l_new) = (dims[0], dims[1]);
+        assert_eq!(b, 1, "the paged prefill/decode path is per-request");
+        let past = cache.len();
+        let q = self.split_heads(&self.wq.forward(input), b, l_new);
+        let k = self.split_heads(&self.wk.forward(input), b, l_new);
+        let v = self.split_heads(&self.wv.forward(input), b, l_new);
+        cache.write_layer(layer, past, &k.tensor(), &v.tensor());
+        let (k_all, v_all) = cache.gather_layer(layer, past + l_new);
+        let ctx = self.sdpa_with_past(
+            &q,
+            &Variable::constant(k_all),
+            &Variable::constant(v_all),
+            l_new,
+            past,
+        );
+        self.wo.forward(&self.merge_heads(&ctx, b, l_new))
+    }
+
+    /// One decode step for `B` *different* requests at once — the
+    /// continuous batcher's inner loop. `input` is `[B, 1, D]`, row `i`
+    /// belonging to the request behind `caches[i]` (each at its own past
+    /// length). The row-independent projections (Q/K/V, output) run
+    /// batched; the attention core runs per request over that request's
+    /// gathered pages, because the KV lengths differ. Row `i`'s output is
+    /// bit-identical to running the request alone: the projections are
+    /// row-independent bitwise (the batch-parity contract
+    /// `rust/tests/serve.rs` pins for the whole stack) and the per-row
+    /// attention sees exactly the solo operands.
+    pub fn forward_decode_batch(
+        &self,
+        input: &Variable,
+        caches: &mut [&mut PagedKvCache],
+        layer: usize,
+    ) -> Variable {
+        assert!(self.causal, "KV-cached attention requires causal masking");
+        let dims = input.dims();
+        assert_eq!(dims.len(), 3, "attention wants [B, L, D]");
+        let (b, l_new) = (dims[0], dims[1]);
+        assert_eq!(l_new, 1, "iteration-level decode steps one token per sequence");
+        assert_eq!(b, caches.len(), "one KV cache per batch row");
+        let h = self.heads;
+        let q = self.split_heads(&self.wq.forward(input), b, 1).tensor();
+        let k = self.split_heads(&self.wk.forward(input), b, 1).tensor();
+        let v = self.split_heads(&self.wv.forward(input), b, 1).tensor();
+        let mut ctx_rows: Vec<Tensor> = Vec::with_capacity(b);
+        for (i, cache) in caches.iter_mut().enumerate() {
+            let past = cache.len();
+            let qi = q.narrow(0, i * h, h);
+            let ki = k.narrow(0, i * h, h);
+            let vi = v.narrow(0, i * h, h);
+            cache.write_layer(layer, past, &ki, &vi);
+            let (k_all, v_all) = cache.gather_layer(layer, past + 1);
+            let ctx = self.sdpa_with_past(
+                &Variable::constant(qi),
+                &Variable::constant(k_all),
+                &Variable::constant(v_all),
+                1,
+                past,
+            );
+            ctx_rows.push(ctx.tensor());
+        }
+        let refs: Vec<&Tensor> = ctx_rows.iter().collect();
+        let ctx = Variable::constant(Tensor::concat(&refs, 0));
+        self.wo.forward(&self.merge_heads(&ctx, b, 1))
     }
 }
 
@@ -367,6 +603,148 @@ mod tests {
         let (a, b) = (bias.to_vec(), legacy.to_vec());
         let eq = a.iter().zip(&b).all(|(x, y)| x.to_bits() == y.to_bits());
         assert!(eq, "cached bias bits drifted from the legacy construction");
+    }
+
+    fn test_pool(
+        layers: usize,
+        heads: usize,
+        head_dim: usize,
+        page_tokens: usize,
+        max_pages: usize,
+    ) -> Arc<KvPagePool> {
+        KvPagePool::new(crate::memory::KvPoolConfig {
+            layers,
+            heads,
+            head_dim,
+            page_tokens,
+            max_pages,
+        })
+    }
+
+    #[test]
+    fn paged_write_gather_matches_contiguous_reference() {
+        // property-check the page-table address math against the naive
+        // contiguous layout: random-sized appends through both, gather
+        // must reproduce the concat bits exactly (page size 3 forces
+        // writes and reads to straddle page boundaries)
+        let pool = test_pool(2, 2, 4, 3, 8);
+        let mut paged = PagedKvCache::new(Arc::clone(&pool));
+        paged.reserve(11).unwrap();
+        // [layer] -> appended K chunks (V in vref)
+        let mut reference: Vec<Vec<Tensor>> = vec![Vec::new(), Vec::new()];
+        let mut vref: Vec<Vec<Tensor>> = vec![Vec::new(), Vec::new()];
+        let mut len = 0usize;
+        for &l_new in &[1usize, 2, 5, 3] {
+            for layer in 0..2 {
+                let k = Tensor::rand([2, l_new, 4], -1.0, 1.0);
+                let v = Tensor::rand([2, l_new, 4], -1.0, 1.0);
+                paged.write_layer(layer, len, &k, &v);
+                reference[layer].push(k);
+                vref[layer].push(v);
+            }
+            paged.advance(l_new);
+            len += l_new;
+            for layer in 0..2 {
+                let (kg, vg) = paged.gather_layer(layer, len);
+                let kcat = Tensor::concat(&reference[layer].iter().collect::<Vec<_>>(), 1);
+                let vcat = Tensor::concat(&vref[layer].iter().collect::<Vec<_>>(), 1);
+                assert_eq!(kg.dims(), vec![2, len, 4]);
+                let same = |a: &Tensor, b: &Tensor| {
+                    a.to_vec().iter().zip(b.to_vec().iter()).all(|(x, y): (&f32, &f32)| {
+                        x.to_bits() == y.to_bits()
+                    })
+                };
+                assert!(same(&kg, &kcat), "K gather diverged at len {len} layer {layer}");
+                assert!(same(&vg, &vcat), "V gather diverged at len {len} layer {layer}");
+            }
+        }
+        assert_eq!(paged.len(), 11);
+        assert_eq!(paged.pages_held(), 4);
+        paged.reset();
+        assert_eq!(pool.stats().leased_pages, 0);
+    }
+
+    #[test]
+    fn paged_forward_is_bit_identical_to_contiguous_cached() {
+        let m = MultiheadAttention::new(8, 2, true);
+        let x = Tensor::rand([1, 7, 8], -1.0, 1.0);
+        let pool = test_pool(1, 2, 4, 2, 8);
+
+        // prefill-then-steps through the contiguous cache
+        let mut cc = KvCache::new();
+        let mut contiguous: Vec<Vec<u32>> = Vec::new();
+        // prefill 4, then 3 single-token steps
+        contiguous.push(bits(&m.forward_cached(&Variable::constant(x.narrow(1, 0, 4)), &mut cc)));
+        for t in 4..7 {
+            contiguous
+                .push(bits(&m.forward_cached(&Variable::constant(x.narrow(1, t, 1)), &mut cc)));
+        }
+
+        // same schedule through the paged cache
+        let mut pc = PagedKvCache::new(pool);
+        pc.reserve(7).unwrap();
+        let mut paged: Vec<Vec<u32>> = Vec::new();
+        paged.push(bits(&m.forward_paged(&Variable::constant(x.narrow(1, 0, 4)), &mut pc, 0)));
+        pc.advance(4);
+        for t in 4..7 {
+            paged.push(bits(&m.forward_paged(&Variable::constant(x.narrow(1, t, 1)), &mut pc, 0)));
+            pc.advance(1);
+        }
+        assert_eq!(contiguous, paged, "paged attention diverged from the contiguous cache");
+        assert_eq!(pc.len(), 7);
+    }
+
+    #[test]
+    fn decode_batch_rows_are_bit_identical_to_solo_decode() {
+        // two requests at different past lengths, stepped together through
+        // forward_decode_batch, must match each one stepped alone
+        let m = MultiheadAttention::new(8, 2, true);
+        let pool = test_pool(1, 2, 4, 2, 16);
+        let a = Tensor::rand([1, 5, 8], -1.0, 1.0); // request A: past 4, step 1
+        let b = Tensor::rand([1, 3, 8], -1.0, 1.0); // request B: past 2, step 1
+
+        let solo = |prompt: &Tensor| {
+            let l = prompt.dim(1);
+            let mut c = PagedKvCache::new(test_pool(1, 2, 4, 2, 16));
+            c.reserve(l).unwrap();
+            let _ = m.forward_paged(&Variable::constant(prompt.narrow(1, 0, l - 1)), &mut c, 0);
+            c.advance(l - 1);
+            let y = m.forward_paged(&Variable::constant(prompt.narrow(1, l - 1, 1)), &mut c, 0);
+            bits(&y)
+        };
+        let solo_a = solo(&a);
+        let solo_b = solo(&b);
+
+        let mut ca = PagedKvCache::new(Arc::clone(&pool));
+        let mut cb = PagedKvCache::new(Arc::clone(&pool));
+        ca.reserve(5).unwrap();
+        cb.reserve(3).unwrap();
+        let _ = m.forward_paged(&Variable::constant(a.narrow(1, 0, 4)), &mut ca, 0);
+        ca.advance(4);
+        let _ = m.forward_paged(&Variable::constant(b.narrow(1, 0, 2)), &mut cb, 0);
+        cb.advance(2);
+        // batch the two final steps: rows [A_step; B_step]
+        let step = Tensor::concat(&[&a.narrow(1, 4, 1), &b.narrow(1, 2, 1)], 0);
+        let mut caches: Vec<&mut PagedKvCache> = vec![&mut ca, &mut cb];
+        let y = m.forward_decode_batch(&Variable::constant(step), &mut caches, 0);
+        ca.advance(1);
+        cb.advance(1);
+        let yb = bits(&y);
+        assert_eq!(&yb[..8], &solo_a[..], "batched row A diverged from solo decode");
+        assert_eq!(&yb[8..], &solo_b[..], "batched row B diverged from solo decode");
+    }
+
+    #[test]
+    fn paged_reserve_propagates_pool_exhaustion() {
+        let pool = test_pool(1, 2, 4, 2, 2);
+        let mut c = PagedKvCache::new(Arc::clone(&pool));
+        c.reserve(4).unwrap(); // both pages
+        let mut d = PagedKvCache::new(Arc::clone(&pool));
+        let err = d.reserve(1).unwrap_err();
+        assert_eq!(err.free, 0);
+        assert_eq!(d.pages_held(), 0, "failed reserve must not hold pages");
+        c.reset();
+        assert!(d.reserve(2).is_ok(), "released pages must serve the retry");
     }
 
     #[test]

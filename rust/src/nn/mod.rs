@@ -19,7 +19,7 @@ pub mod norm;
 pub mod transformer;
 
 pub use activations::{LogSoftmax, ReLU, Sigmoid, Tanh, GELU};
-pub use attention::{KvCache, MultiheadAttention};
+pub use attention::{KvCache, MultiheadAttention, PagedKvCache};
 pub use conv::{Conv2D, Pool2D, View};
 pub use dropout::Dropout;
 pub use embedding::Embedding;

@@ -1,8 +1,9 @@
 //! Transformer encoder blocks and positional embeddings.
 
 use crate::autograd::{ops, Variable};
+use crate::tensor::Tensor;
 
-use super::attention::{KvCache, MultiheadAttention};
+use super::attention::{KvCache, MultiheadAttention, PagedKvCache};
 use super::dropout::Dropout;
 use super::linear::Linear;
 use super::norm::LayerNorm;
@@ -44,6 +45,26 @@ impl PositionalEmbedding {
         );
         let pos = ops::slice(&self.weight, &[offset, 0], &[offset + l, dims[2]]);
         // [L, D] broadcasts over batch
+        ops::add(input, &pos)
+    }
+
+    /// Add each row's *own* position embedding to a `[B, 1, D]` decode
+    /// batch: row `i` sits at position `offsets[i]` of its sequence. The
+    /// continuous batcher needs this because cohabiting requests are at
+    /// different depths. Row `i` sees the same value pair additions as
+    /// [`Self::forward_at`] with `offset = offsets[i]` would feed it, so
+    /// the batched add is bit-identical per row.
+    pub fn forward_at_each(&self, input: &Variable, offsets: &[usize]) -> Variable {
+        let dims = input.dims();
+        assert_eq!(dims.len(), 3, "positional embedding wants [B, L, D]");
+        assert_eq!(dims[1], 1, "per-row offsets step one position per row");
+        assert_eq!(dims[0], offsets.len(), "one offset per batch row");
+        for &o in offsets {
+            assert!(o < self.max_len, "position {o} exceeds max_len {}", self.max_len);
+        }
+        let idx: Vec<i64> = offsets.iter().map(|&o| o as i64).collect();
+        let rows = ops::index_select0(&self.weight, &Tensor::from_slice(&idx, [idx.len()]));
+        let pos = ops::reshape(&rows, &[dims[0] as isize, 1, dims[2] as isize]);
         ops::add(input, &pos)
     }
 }
@@ -101,6 +122,36 @@ impl TransformerEncoderLayer {
         let h = self.fc2.forward(&ops::gelu(&self.fc1.forward(&self.ln2.forward(&x))));
         ops::add(&x, &self.drop.forward(&h))
     }
+
+    /// [`Self::forward_cached`] against one request's paged cache (this
+    /// block's keys/values live under index `layer` in the page layout).
+    pub fn forward_paged(
+        &self,
+        input: &Variable,
+        cache: &mut PagedKvCache,
+        layer: usize,
+    ) -> Variable {
+        let a = self.attn.forward_paged(&self.ln1.forward(input), cache, layer);
+        let x = ops::add(input, &self.drop.forward(&a));
+        let h = self.fc2.forward(&ops::gelu(&self.fc1.forward(&self.ln2.forward(&x))));
+        ops::add(&x, &self.drop.forward(&h))
+    }
+
+    /// One decode step for `B` different requests (see
+    /// [`MultiheadAttention::forward_decode_batch`]): the position-wise
+    /// pieces (norms, MLP, residuals) batch across rows bitwise; only the
+    /// attention core runs per request.
+    pub fn forward_decode_batch(
+        &self,
+        input: &Variable,
+        caches: &mut [&mut PagedKvCache],
+        layer: usize,
+    ) -> Variable {
+        let a = self.attn.forward_decode_batch(&self.ln1.forward(input), caches, layer);
+        let x = ops::add(input, &self.drop.forward(&a));
+        let h = self.fc2.forward(&ops::gelu(&self.fc1.forward(&self.ln2.forward(&x))));
+        ops::add(&x, &self.drop.forward(&h))
+    }
 }
 
 impl Module for TransformerEncoderLayer {
@@ -149,6 +200,26 @@ mod tests {
         let x = Variable::constant(Tensor::zeros([2, 3, 4]));
         let y = pe.forward(&x).tensor();
         assert_eq!(y.to_vec(), vec![1.0; 24]);
+    }
+
+    #[test]
+    fn forward_at_each_rows_match_forward_at_bitwise() {
+        let pe = PositionalEmbedding::new(8, 4);
+        let x = Tensor::rand([3, 1, 4], -1.0, 1.0);
+        let offsets = [5usize, 0, 7];
+        let batched = pe
+            .forward_at_each(&Variable::constant(x.clone()), &offsets)
+            .tensor()
+            .to_vec();
+        for (i, &o) in offsets.iter().enumerate() {
+            let solo = pe
+                .forward_at(&Variable::constant(x.narrow(0, i, 1)), o)
+                .tensor()
+                .to_vec();
+            let row = &batched[i * 4..(i + 1) * 4];
+            let same = row.iter().zip(&solo).all(|(a, b)| a.to_bits() == b.to_bits());
+            assert!(same, "row {i} at offset {o} diverged from forward_at");
+        }
     }
 
     #[test]

@@ -15,7 +15,7 @@
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, RwLock};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
@@ -95,9 +95,19 @@ pub struct BatcherStats {
 /// The dynamic batcher: an MPSC queue plus a worker pool. Dropping (or
 /// [`Batcher::shutdown`]) closes the queue; workers drain every request
 /// already submitted, then exit, and the call blocks until they have.
+///
+/// `submit` may race `shutdown` from another thread: the sender lives
+/// under a lock so a submit either lands before the queue closes (and is
+/// served during the drain) or observes the closed queue and fails the
+/// caller cleanly through [`ResponseHandle::wait`] — never a hang, never
+/// a poisoned cohort (`rust/tests/serve.rs` exercises both orders).
 pub struct Batcher {
-    tx: Option<Sender<Request>>,
-    workers: Vec<JoinHandle<()>>,
+    // submit() sends while holding the read lock; shutdown() takes the
+    // sender under the write lock. A plain Option raced: a sender clone
+    // taken between take() and join() would keep the channel connected
+    // and leave the submitted request in a queue nobody drains.
+    tx: RwLock<Option<Sender<Request>>>,
+    workers: Mutex<Vec<JoinHandle<()>>>,
     metrics: Arc<Metrics>,
     session: Arc<InferenceSession>,
 }
@@ -121,7 +131,7 @@ impl Batcher {
                     .expect("serve: failed to spawn worker thread")
             })
             .collect();
-        Batcher { tx: Some(tx), workers, metrics, session }
+        Batcher { tx: RwLock::new(Some(tx)), workers: Mutex::new(workers), metrics, session }
     }
 
     /// Enqueue one `[example_dims…]` input; returns immediately with a
@@ -135,11 +145,15 @@ impl Batcher {
             return ResponseHandle { rx: rrx };
         }
         let req = Request { input, enqueued: Instant::now(), resp: rtx };
-        if let Some(tx) = &self.tx {
-            // a send can only fail after shutdown; dropping `req` (and its
-            // response sender with it) surfaces that through wait()
+        // send while holding the read lock: cloning the sender out of the
+        // lock would keep the channel connected past shutdown's take(),
+        // and the workers' drain-then-exit recv loop would never return
+        let guard = self.tx.read().unwrap_or_else(|p| p.into_inner());
+        if let Some(tx) = guard.as_ref() {
             let _ = tx.send(req);
         }
+        // no sender: already shut down. Dropping `req` (and its response
+        // sender with it) surfaces that through wait() as a clean error.
         ResponseHandle { rx: rrx }
     }
 
@@ -164,10 +178,14 @@ impl Batcher {
     }
 
     /// Graceful shutdown: stop accepting requests, serve everything
-    /// already queued, join the workers. Idempotent; also runs on drop.
-    pub fn shutdown(&mut self) {
-        self.tx.take();
-        for w in self.workers.drain(..) {
+    /// already queued, join the workers. Idempotent, safe to race with
+    /// [`Batcher::submit`]; also runs on drop.
+    pub fn shutdown(&self) {
+        let taken = self.tx.write().unwrap_or_else(|p| p.into_inner()).take();
+        drop(taken); // disconnects the queue once no sender remains
+        let workers: Vec<JoinHandle<()>> =
+            std::mem::take(&mut *self.workers.lock().unwrap_or_else(|p| p.into_inner()));
+        for w in workers {
             let _ = w.join();
         }
     }

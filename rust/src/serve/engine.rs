@@ -1,21 +1,20 @@
-//! The serving engine: compiled session + dynamic batcher + telemetry +
-//! graceful shutdown, behind one handle.
+//! The serving engine: compiled session + dynamic batcher + continuous
+//! decode scheduler + telemetry + graceful shutdown, behind one handle.
 
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 use std::time::Duration;
 
-use crate::meter::AverageValueMeter;
 use crate::models::BertLike;
 use crate::tensor::{DType, Tensor};
 use crate::util::error::{Error, Result};
 
 use super::batcher::{Batcher, BatcherConfig, BatcherStats, ResponseHandle};
-use super::generate::{generate, GenerateOptions, GenerateReport};
+use super::generate::{GenerateOptions, GenerateReport};
+use super::scheduler::{ContinuousBatcher, ContinuousConfig, ContinuousStats, GenHandle};
 use super::session::InferenceSession;
 
-/// Engine deployment knobs (a thin rename of [`BatcherConfig`], kept
-/// separate so serving policy can grow without touching the batcher).
+/// Engine deployment knobs: the dynamic-batching policy for scoring
+/// traffic plus the continuous-batching policy for decode traffic.
 #[derive(Debug, Clone)]
 pub struct EngineConfig {
     /// Largest dynamic batch (clamped to the session's largest bucket).
@@ -24,35 +23,45 @@ pub struct EngineConfig {
     pub max_wait: Duration,
     /// Worker threads.
     pub workers: usize,
+    /// Continuous-decode policy (slots, KV page size, pool capacity);
+    /// only used by [`Engine::start_lm`] engines.
+    pub decode: ContinuousConfig,
 }
 
 impl Default for EngineConfig {
     fn default() -> Self {
         let b = BatcherConfig::default();
-        EngineConfig { max_batch_size: b.max_batch_size, max_wait: b.max_wait, workers: b.workers }
+        EngineConfig {
+            max_batch_size: b.max_batch_size,
+            max_wait: b.max_wait,
+            workers: b.workers,
+            decode: ContinuousConfig::default(),
+        }
     }
 }
 
 /// A point-in-time snapshot of everything the engine measures.
 #[derive(Debug, Clone, Default)]
 pub struct EngineStats {
-    /// Batcher counters and latency percentiles.
+    /// Batcher counters and latency percentiles (scoring traffic).
     pub batcher: BatcherStats,
+    /// Continuous-scheduler counters: goodput, per-request latency
+    /// percentiles, occupancy, pool accounting (decode traffic).
+    pub decode: ContinuousStats,
     /// Tokens produced by [`Engine::generate`] calls.
     pub generated_tokens: u64,
-    /// Mean decode throughput over [`Engine::generate`] calls, tokens/s.
+    /// Decode goodput (generated tokens per scheduler-busy second).
     pub decode_tokens_per_sec: f64,
 }
 
 /// One deployed model: score requests flow through the dynamic batcher
-/// into shape-bucketed compiled programs; generation requests run the
-/// KV-cached decoder. Shutdown (explicit or on drop) drains the queue and
-/// joins the workers.
+/// into shape-bucketed compiled programs; generation requests flow
+/// through the continuous (iteration-level) scheduler over the paged KV
+/// pool. Shutdown (explicit or on drop) drains both queues and joins
+/// every thread.
 pub struct Engine {
     batcher: Batcher,
-    lm: Option<Arc<BertLike>>,
-    generated_tokens: AtomicU64,
-    decode_tps: Mutex<AverageValueMeter>,
+    decoder: Option<ContinuousBatcher>,
 }
 
 impl Engine {
@@ -63,17 +72,13 @@ impl Engine {
             max_wait: cfg.max_wait,
             workers: cfg.workers,
         };
-        Engine {
-            batcher: Batcher::start(Arc::new(session), bcfg),
-            lm: None,
-            generated_tokens: AtomicU64::new(0),
-            decode_tps: Mutex::new(AverageValueMeter::new()),
-        }
+        Engine { batcher: Batcher::start(Arc::new(session), bcfg), decoder: None }
     }
 
     /// Deploy a transformer LM: compiles `model.logits` over `[b, seq_len]`
-    /// token windows for every batch bucket (scoring traffic), and keeps
-    /// the model for KV-cached [`Engine::generate`] requests.
+    /// token windows for every batch bucket (scoring traffic), and starts
+    /// the continuous scheduler for [`Engine::generate`] /
+    /// [`Engine::submit_generate`] requests.
     pub fn start_lm(
         model: Arc<BertLike>,
         seq_len: usize,
@@ -91,7 +96,7 @@ impl Engine {
             traced.logits(ids).tensor()
         })?;
         let mut engine = Engine::start(session, cfg);
-        engine.lm = Some(model);
+        engine.decoder = Some(ContinuousBatcher::start(model, &cfg.decode)?);
         Ok(engine)
     }
 
@@ -105,41 +110,47 @@ impl Engine {
         self.batcher.infer(input)
     }
 
-    /// KV-cached autoregressive generation on the deployed LM (only
-    /// available for [`Engine::start_lm`] engines). Decode telemetry
-    /// feeds [`Engine::stats`].
-    pub fn generate(&self, prompt: &[i64], opts: &GenerateOptions) -> Result<GenerateReport> {
-        let model = self
-            .lm
+    fn decoder(&self) -> Result<&ContinuousBatcher> {
+        self.decoder
             .as_ref()
-            .ok_or_else(|| Error::msg("serve: this engine was not deployed with an LM"))?;
-        let report = generate(model, prompt, opts)?;
-        self.generated_tokens.fetch_add(report.generated as u64, Ordering::Relaxed);
-        if report.tokens_per_sec > 0.0 {
-            self.decode_tps
-                .lock()
-                .unwrap_or_else(|p| p.into_inner())
-                .add(report.tokens_per_sec);
-        }
-        Ok(report)
+            .ok_or_else(|| Error::msg("serve: this engine was not deployed with an LM"))
+    }
+
+    /// Enqueue a generation request on the continuous scheduler (only
+    /// available for [`Engine::start_lm`] engines); it joins the decode
+    /// batch as soon as a slot and KV pages are free, regardless of who
+    /// else is mid-generation.
+    pub fn submit_generate(&self, prompt: &[i64], opts: &GenerateOptions) -> Result<GenHandle> {
+        Ok(self.decoder()?.submit(prompt, opts))
+    }
+
+    /// Generate synchronously through the continuous scheduler. The
+    /// report (and every report) is bit-identical to a solo
+    /// [`super::generate()`] call with the same prompt and options,
+    /// whatever else the engine is serving concurrently.
+    pub fn generate(&self, prompt: &[i64], opts: &GenerateOptions) -> Result<GenerateReport> {
+        self.decoder()?.generate(prompt, opts)
     }
 
     /// Telemetry snapshot.
     pub fn stats(&self) -> EngineStats {
+        let decode = self.decoder.as_ref().map(|d| d.stats()).unwrap_or_default();
         EngineStats {
             batcher: self.batcher.stats(),
-            generated_tokens: self.generated_tokens.load(Ordering::Relaxed),
-            decode_tokens_per_sec: self
-                .decode_tps
-                .lock()
-                .unwrap_or_else(|p| p.into_inner())
-                .value(),
+            generated_tokens: decode.generated_tokens,
+            decode_tokens_per_sec: decode.goodput_tps,
+            decode,
         }
     }
 
-    /// Graceful shutdown: serve everything already queued, then join the
-    /// workers. Dropping the engine does the same.
-    pub fn shutdown(mut self) {
+    /// Graceful shutdown: serve everything already queued on both the
+    /// scoring and decode paths, then join every thread. Safe to race
+    /// with concurrent submits (they fail cleanly); dropping the engine
+    /// does the same.
+    pub fn shutdown(&self) {
+        if let Some(d) = &self.decoder {
+            d.shutdown();
+        }
         self.batcher.shutdown();
     }
 }

@@ -50,6 +50,12 @@ pub struct GenerateOptions {
     /// KV-cached incremental decode (true) or full-context recompute per
     /// token (false). Same bits either way; wildly different cost.
     pub use_cache: bool,
+    /// Record the `[V]` logits each sampling step saw into
+    /// [`GenerateReport::step_logits`]. Off by default (it clones one
+    /// vocab-sized row per token); the schedule-fuzzing harness turns it
+    /// on to compare continuous-batched decode against solo decode
+    /// bit-for-bit, not just token-for-token.
+    pub record_logits: bool,
 }
 
 impl Default for GenerateOptions {
@@ -59,6 +65,7 @@ impl Default for GenerateOptions {
             sampling: Sampling::Greedy,
             seed: 0,
             use_cache: true,
+            record_logits: false,
         }
     }
 }
@@ -78,6 +85,9 @@ pub struct GenerateReport {
     pub decode_secs: f64,
     /// Generated tokens per decode second.
     pub tokens_per_sec: f64,
+    /// Per-step pre-sampling logits (`[V]` per generated token), only
+    /// when [`GenerateOptions::record_logits`] was set; empty otherwise.
+    pub step_logits: Vec<Vec<f32>>,
 }
 
 /// Generate `opts.max_new_tokens` continuation tokens for `prompt`.
@@ -106,6 +116,7 @@ pub fn generate(
     }
     let mut rng = Rng::new(opts.seed);
     let mut tokens = prompt.to_vec();
+    let mut step_logits: Vec<Vec<f32>> = Vec::new();
     let (prefill_secs, decode_secs) = no_grad(|| {
         if opts.use_cache {
             let mut caches = model.empty_cache();
@@ -116,6 +127,9 @@ pub fn generate(
             let prefill = t0.elapsed().as_secs_f64();
             let t1 = Instant::now();
             for i in 0..opts.max_new_tokens {
+                if opts.record_logits {
+                    step_logits.push(last.clone());
+                }
                 let next = sample(&last, &opts.sampling, &mut rng);
                 tokens.push(next);
                 if i + 1 < opts.max_new_tokens {
@@ -129,6 +143,9 @@ pub fn generate(
             for _ in 0..opts.max_new_tokens {
                 let ids = Tensor::from_slice(&tokens, [1, tokens.len()]);
                 let last = last_position_logits(&model.logits(&ids).tensor());
+                if opts.record_logits {
+                    step_logits.push(last.clone());
+                }
                 tokens.push(sample(&last, &opts.sampling, &mut rng));
             }
             (0.0, t0.elapsed().as_secs_f64())
@@ -141,17 +158,20 @@ pub fn generate(
         decode_secs,
         tokens_per_sec: if decode_secs > 0.0 { generated as f64 / decode_secs } else { 0.0 },
         tokens,
+        step_logits,
     })
 }
 
 /// The `[V]` logits of the final position of a `[1, L, V]` logits tensor.
-fn last_position_logits(logits: &Tensor) -> Vec<f32> {
+pub(super) fn last_position_logits(logits: &Tensor) -> Vec<f32> {
     let l = logits.dim(1);
     logits.narrow(1, l - 1, 1).to_vec()
 }
 
-/// Deterministic token selection over one position's logits.
-fn sample(logits: &[f32], sampling: &Sampling, rng: &mut Rng) -> i64 {
+/// Deterministic token selection over one position's logits. Shared with
+/// the continuous scheduler so a batched request draws from the *same*
+/// code path (and per-request RNG stream) as a solo decode.
+pub(super) fn sample(logits: &[f32], sampling: &Sampling, rng: &mut Rng) -> i64 {
     match sampling {
         Sampling::Greedy => {
             let mut best = 0usize;

@@ -21,16 +21,26 @@
 //!   temperature/top-k sampling on deterministic
 //!   [`crate::util::rng`] streams; cached decode is bit-identical to
 //!   full-context recompute.
+//! - [`ContinuousBatcher`] schedules decode at **iteration** granularity
+//!   (the Orca design): the batch is re-formed every token, new requests
+//!   join mid-flight right after their prefill, finished ones retire
+//!   immediately, and each request's KV cache lives in fixed-size pages
+//!   leased from a shared [`crate::memory::KvPagePool`] (admission
+//!   backpressures on pool exhaustion instead of panicking). Contract:
+//!   every request is bit-identical to its solo decode — fuzzed over
+//!   randomized schedules by `rust/tests/serve_continuous_fuzz.rs`.
 //! - [`Engine`] ties them together: per-request latency percentiles
-//!   ([`crate::meter::PercentileMeter`]), decode tokens/s telemetry, and
-//!   graceful worker shutdown.
+//!   ([`crate::meter::PercentileMeter`]), goodput and occupancy
+//!   telemetry, and graceful worker shutdown (safe to race submits).
 
 pub mod batcher;
 pub mod engine;
 pub mod generate;
+pub mod scheduler;
 pub mod session;
 
 pub use batcher::{Batcher, BatcherConfig, BatcherStats, ResponseHandle};
 pub use engine::{Engine, EngineConfig, EngineStats};
 pub use generate::{generate, GenerateOptions, GenerateReport, Sampling};
+pub use scheduler::{ContinuousBatcher, ContinuousConfig, ContinuousStats, GenHandle};
 pub use session::InferenceSession;

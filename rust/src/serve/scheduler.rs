@@ -1,0 +1,532 @@
+//! Continuous (iteration-level) batching: the decode batch is re-formed
+//! **every token**, in the Orca lineage.
+//!
+//! The PR 5 [`super::Batcher`] schedules at *request* granularity — a
+//! decode cohort is locked until its slowest member finishes, so one
+//! long generation head-of-line blocks every short one behind it. The
+//! [`ContinuousBatcher`] schedules at *iteration* granularity instead:
+//!
+//! 1. **Intake** — drain newly submitted requests into a FIFO queue.
+//! 2. **Admission** — while a decode slot is free, pop the queue head,
+//!    reserve its worst-case KV pages (prompt + max new tokens) from the
+//!    shared [`KvPagePool`], and run its prefill solo (`[1, L]` — the
+//!    exact computation a solo decode would run). If the pool cannot
+//!    serve the reservation, the head *waits* (backpressure) until a
+//!    retirement frees pages — admission is FIFO, so a starved request
+//!    cannot be overtaken forever.
+//! 3. **Iteration** — step every active sequence one token with a single
+//!    batched forward ([`BertLike::logits_decode_batch`]), sample each
+//!    row on its own per-request RNG stream, and **retire** finished
+//!    sequences immediately — their pages return to the pool the moment
+//!    the cache drops, and the freed slot admits the next queued request
+//!    on the very next iteration.
+//!
+//! Correctness bar (the repo's standing one): a request decoded through
+//! this scheduler is `f32::to_bits`-identical to its solo decode —
+//! token stream *and* per-step logits — regardless of who shared any of
+//! its batches. `rust/tests/serve_continuous_fuzz.rs` fuzzes randomized
+//! schedules against that contract; reservation-at-admission keeps the
+//! schedule deterministic (a sequence can never stall mid-decode on an
+//! empty pool, so batch composition depends only on arrival order and
+//! retirement times, never on allocation luck).
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
+use std::sync::{Arc, Mutex, RwLock};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use crate::autograd::no_grad;
+use crate::memory::{KvPagePool, KvPoolStats, PoolExhausted};
+use crate::meter::{AverageValueMeter, PercentileMeter, TimeWeightedMeter};
+use crate::models::BertLike;
+use crate::nn::PagedKvCache;
+use crate::tensor::Tensor;
+use crate::util::error::{Error, Result};
+use crate::util::rng::Rng;
+
+use super::generate::{last_position_logits, sample, GenerateOptions, GenerateReport, Sampling};
+
+/// Continuous-scheduler knobs.
+#[derive(Debug, Clone)]
+pub struct ContinuousConfig {
+    /// Decode slots: the most sequences one iteration may step together.
+    pub max_active: usize,
+    /// KV positions per pool page. Small pages waste little memory on
+    /// short sequences; large pages amortize page-table overhead.
+    pub page_tokens: usize,
+    /// Total pool pages. `None` sizes the pool for `max_active`
+    /// worst-case (model `max_len`) sequences; smaller values trade
+    /// admission backpressure for memory.
+    pub pool_pages: Option<usize>,
+}
+
+impl Default for ContinuousConfig {
+    fn default() -> Self {
+        ContinuousConfig { max_active: 8, page_tokens: 16, pool_pages: None }
+    }
+}
+
+/// A point-in-time snapshot of the scheduler's telemetry.
+#[derive(Debug, Clone, Default)]
+pub struct ContinuousStats {
+    /// Requests accepted by [`ContinuousBatcher::submit`].
+    pub submitted: u64,
+    /// Requests answered (success or failure).
+    pub completed: u64,
+    /// Tokens generated across all requests.
+    pub generated_tokens: u64,
+    /// Batched decode iterations run.
+    pub iterations: u64,
+    /// Prefill passes run (== admissions).
+    pub prefills: u64,
+    /// Admissions deferred because the pool could not serve the
+    /// reservation (each deferral counts once per scheduling pass).
+    pub backpressure_stalls: u64,
+    /// Seconds the scheduler spent inside model forwards.
+    pub busy_secs: f64,
+    /// Goodput: generated tokens per *busy* second (queue idle time
+    /// excluded, so the number reflects scheduling efficiency, not
+    /// traffic).
+    pub goodput_tps: f64,
+    /// Median request latency (submit → response), microseconds.
+    pub latency_p50_us: f64,
+    /// 95th-percentile request latency, microseconds.
+    pub latency_p95_us: f64,
+    /// 99th-percentile request latency, microseconds.
+    pub latency_p99_us: f64,
+    /// Mean sequences per decode iteration (observation-weighted).
+    pub mean_iteration_batch: f64,
+    /// Time-weighted mean decode-slot occupancy.
+    pub occupancy_mean: f64,
+    /// Peak decode-slot occupancy.
+    pub occupancy_peak: f64,
+    /// KV page-pool accounting.
+    pub pool: KvPoolStats,
+}
+
+/// One queued generation request.
+struct GenRequest {
+    prompt: Vec<i64>,
+    opts: GenerateOptions,
+    resp: Sender<Result<GenerateReport>>,
+    enqueued: Instant,
+}
+
+/// The caller's handle to an in-flight generation.
+pub struct GenHandle {
+    rx: Receiver<Result<GenerateReport>>,
+}
+
+impl GenHandle {
+    /// Block until the report arrives (or the engine shut down with the
+    /// request unserved).
+    pub fn wait(self) -> Result<GenerateReport> {
+        self.rx
+            .recv()
+            .map_err(|_| Error::msg("serve: engine shut down before the request was served"))?
+    }
+}
+
+/// Shared counters and meters the scheduler thread updates.
+#[derive(Default)]
+struct SchedulerMetrics {
+    submitted: AtomicU64,
+    completed: AtomicU64,
+    generated: AtomicU64,
+    iterations: AtomicU64,
+    prefills: AtomicU64,
+    stalls: AtomicU64,
+    busy_nanos: AtomicU64,
+    latency_us: Mutex<PercentileMeter>,
+    batch_fill: Mutex<AverageValueMeter>,
+    occupancy: Mutex<TimeWeightedMeter>,
+}
+
+/// One admitted, not-yet-finished sequence.
+struct ActiveSeq {
+    tokens: Vec<i64>,
+    cache: PagedKvCache,
+    rng: Rng,
+    sampling: Sampling,
+    max_new: usize,
+    generated: usize,
+    record: bool,
+    step_logits: Vec<Vec<f32>>,
+    /// The `[V]` logits of this sequence's latest position (what the next
+    /// sample draws from).
+    last: Vec<f32>,
+    resp: Sender<Result<GenerateReport>>,
+    enqueued: Instant,
+    prefill_secs: f64,
+    decode_started: Instant,
+}
+
+enum Admitted {
+    /// Prefilled and sampling; joins the decode batch next iteration.
+    Running(Box<ActiveSeq>),
+    /// Finished at admission (`max_new_tokens == 1` needs no decode step).
+    Done,
+    /// The pool cannot serve the reservation yet; retry after retirements.
+    Wait(GenRequest),
+}
+
+/// The continuous batcher: one scheduler thread owning the decode loop,
+/// fed over an MPSC queue. Dropping (or [`ContinuousBatcher::shutdown`])
+/// closes the queue; the scheduler drains every admitted *and* queued
+/// request, then exits.
+pub struct ContinuousBatcher {
+    // submit() sends while holding the read lock; shutdown() takes the
+    // sender under the write lock. An Option alone (the PR 5 batcher's
+    // shape) races: a submit between take() and join() could clone a
+    // live sender or enqueue into a queue nobody will drain.
+    tx: RwLock<Option<Sender<GenRequest>>>,
+    worker: Mutex<Option<JoinHandle<()>>>,
+    metrics: Arc<SchedulerMetrics>,
+    pool: Arc<KvPagePool>,
+    model: Arc<BertLike>,
+}
+
+impl ContinuousBatcher {
+    /// Start the scheduler thread for `model`.
+    pub fn start(model: Arc<BertLike>, cfg: &ContinuousConfig) -> Result<ContinuousBatcher> {
+        if cfg.max_active == 0 {
+            return Err(Error::msg("serve: continuous batching needs at least one decode slot"));
+        }
+        if cfg.page_tokens == 0 {
+            return Err(Error::msg("serve: KV pages must hold at least one position"));
+        }
+        if model.depth() == 0 {
+            return Err(Error::msg("serve: the model has no transformer layers to cache"));
+        }
+        let per_seq = model.max_len().div_ceil(cfg.page_tokens);
+        let pages = cfg.pool_pages.unwrap_or(cfg.max_active * per_seq).max(1);
+        let pool = KvPagePool::new(model.kv_pool_config(cfg.page_tokens, pages));
+        let metrics = Arc::new(SchedulerMetrics::default());
+        let (tx, rx) = channel::<GenRequest>();
+        let worker = {
+            let model = Arc::clone(&model);
+            let pool = Arc::clone(&pool);
+            let metrics = Arc::clone(&metrics);
+            let max_active = cfg.max_active;
+            std::thread::Builder::new()
+                .name("serve-continuous".into())
+                .spawn(move || scheduler_loop(&rx, &model, &pool, max_active, &metrics))
+                .map_err(|e| Error::msg(format!("serve: failed to spawn scheduler: {e}")))?
+        };
+        Ok(ContinuousBatcher {
+            tx: RwLock::new(Some(tx)),
+            worker: Mutex::new(Some(worker)),
+            metrics,
+            pool,
+            model,
+        })
+    }
+
+    /// Enqueue one generation request; returns immediately with a handle
+    /// the caller can block on. Malformed or never-servable requests
+    /// (empty prompt, context overflow, bad sampling knobs, KV demand
+    /// beyond the whole pool) fail fast here, without touching the queue.
+    pub fn submit(&self, prompt: &[i64], opts: &GenerateOptions) -> GenHandle {
+        let (rtx, rrx) = channel();
+        let handle = GenHandle { rx: rrx };
+        if let Err(e) = self.validate(prompt, opts) {
+            let _ = rtx.send(Err(e));
+            return handle;
+        }
+        if opts.max_new_tokens == 0 {
+            // nothing to decode: answer immediately (a solo generate's
+            // sampling loop never runs either, so the streams agree)
+            self.metrics.submitted.fetch_add(1, Ordering::Relaxed);
+            self.metrics.completed.fetch_add(1, Ordering::Relaxed);
+            let _ = rtx.send(Ok(GenerateReport {
+                tokens: prompt.to_vec(),
+                generated: 0,
+                prefill_secs: 0.0,
+                decode_secs: 0.0,
+                tokens_per_sec: 0.0,
+                step_logits: Vec::new(),
+            }));
+            return handle;
+        }
+        let req = GenRequest {
+            prompt: prompt.to_vec(),
+            opts: opts.clone(),
+            resp: rtx,
+            enqueued: Instant::now(),
+        };
+        // send while holding the read lock: a sender clone escaping the
+        // lock would keep the channel connected after shutdown() took the
+        // original, and the scheduler would never see disconnect
+        let guard = self.tx.read().unwrap_or_else(|p| p.into_inner());
+        if let Some(tx) = guard.as_ref() {
+            self.metrics.submitted.fetch_add(1, Ordering::Relaxed);
+            let _ = tx.send(req);
+        }
+        // no sender: shut down. Dropping `req` drops its response sender,
+        // which surfaces as a clean error from GenHandle::wait().
+        handle
+    }
+
+    /// Submit and block for the report.
+    pub fn generate(&self, prompt: &[i64], opts: &GenerateOptions) -> Result<GenerateReport> {
+        self.submit(prompt, opts).wait()
+    }
+
+    fn validate(&self, prompt: &[i64], opts: &GenerateOptions) -> Result<()> {
+        if prompt.is_empty() {
+            return Err(Error::msg("generate: empty prompt"));
+        }
+        if prompt.len() + opts.max_new_tokens > self.model.max_len() {
+            return Err(Error::msg(format!(
+                "generate: prompt {} + {} new tokens exceeds the model's max_len {}",
+                prompt.len(),
+                opts.max_new_tokens,
+                self.model.max_len()
+            )));
+        }
+        if let Sampling::TopK { k, temperature } = &opts.sampling {
+            if *k == 0 || !temperature.is_finite() || *temperature <= 0.0 {
+                return Err(Error::msg(
+                    "generate: top-k sampling needs k > 0 and a positive finite temperature",
+                ));
+            }
+        }
+        let cfg = self.pool.config();
+        let wanted = cfg.pages_for(prompt.len() + opts.max_new_tokens);
+        if wanted > cfg.max_pages {
+            // waiting could never help: this is a permanent rejection,
+            // not backpressure
+            return Err(PoolExhausted { wanted, free: 0, capacity: cfg.max_pages }.into());
+        }
+        Ok(())
+    }
+
+    /// Telemetry snapshot.
+    pub fn stats(&self) -> ContinuousStats {
+        let m = &self.metrics;
+        let lat = m.latency_us.lock().unwrap_or_else(|p| p.into_inner());
+        let fill = m.batch_fill.lock().unwrap_or_else(|p| p.into_inner());
+        let occ = m.occupancy.lock().unwrap_or_else(|p| p.into_inner());
+        let generated = m.generated.load(Ordering::Relaxed);
+        let busy = m.busy_nanos.load(Ordering::Relaxed) as f64 / 1e9;
+        ContinuousStats {
+            submitted: m.submitted.load(Ordering::Relaxed),
+            completed: m.completed.load(Ordering::Relaxed),
+            generated_tokens: generated,
+            iterations: m.iterations.load(Ordering::Relaxed),
+            prefills: m.prefills.load(Ordering::Relaxed),
+            backpressure_stalls: m.stalls.load(Ordering::Relaxed),
+            busy_secs: busy,
+            goodput_tps: if busy > 0.0 { generated as f64 / busy } else { 0.0 },
+            latency_p50_us: lat.p50(),
+            latency_p95_us: lat.p95(),
+            latency_p99_us: lat.p99(),
+            mean_iteration_batch: fill.value(),
+            occupancy_mean: occ.mean(),
+            occupancy_peak: occ.peak(),
+            pool: self.pool.stats(),
+        }
+    }
+
+    /// The shared KV page pool (its stats expose lease/release ledgers).
+    pub fn pool(&self) -> &Arc<KvPagePool> {
+        &self.pool
+    }
+
+    /// Graceful shutdown: stop accepting requests, let the scheduler
+    /// drain everything already queued or in flight, join it. Idempotent,
+    /// safe to race with [`Self::submit`], and also runs on drop.
+    pub fn shutdown(&self) {
+        let taken = self.tx.write().unwrap_or_else(|p| p.into_inner()).take();
+        drop(taken); // disconnects the queue once no sender remains
+        if let Some(w) = self.worker.lock().unwrap_or_else(|p| p.into_inner()).take() {
+            let _ = w.join();
+        }
+    }
+}
+
+impl Drop for ContinuousBatcher {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+fn scheduler_loop(
+    rx: &Receiver<GenRequest>,
+    model: &BertLike,
+    pool: &Arc<KvPagePool>,
+    max_active: usize,
+    metrics: &SchedulerMetrics,
+) {
+    let mut pending: VecDeque<GenRequest> = VecDeque::new();
+    let mut active: Vec<ActiveSeq> = Vec::new();
+    let mut disconnected = false;
+    loop {
+        // 1) intake: block only when idle, otherwise drain without waiting
+        if active.is_empty() && pending.is_empty() {
+            if disconnected {
+                break;
+            }
+            set_occupancy(metrics, 0.0);
+            match rx.recv() {
+                Ok(r) => pending.push_back(r),
+                Err(_) => break,
+            }
+        }
+        loop {
+            match rx.try_recv() {
+                Ok(r) => pending.push_back(r),
+                Err(TryRecvError::Empty) => break,
+                Err(TryRecvError::Disconnected) => {
+                    disconnected = true;
+                    break;
+                }
+            }
+        }
+        // 2) admission: FIFO; stop at the first head the pool can't serve
+        while active.len() < max_active {
+            let Some(req) = pending.pop_front() else { break };
+            match admit(model, pool, req, metrics) {
+                Admitted::Running(seq) => active.push(*seq),
+                Admitted::Done => {}
+                Admitted::Wait(req) => {
+                    metrics.stalls.fetch_add(1, Ordering::Relaxed);
+                    if active.is_empty() {
+                        // every page is free yet the reservation failed —
+                        // unreachable when submit() validated capacity,
+                        // but fail loudly rather than livelock
+                        let _ = req.resp.send(Err(Error::Memory(format!(
+                            "serve: kv pool can never serve this request ({:?})",
+                            pool.stats()
+                        ))));
+                        metrics.completed.fetch_add(1, Ordering::Relaxed);
+                    } else {
+                        pending.push_front(req);
+                    }
+                    break;
+                }
+            }
+        }
+        if active.is_empty() {
+            continue;
+        }
+        // 3) one iteration: step every active sequence one token
+        set_occupancy(metrics, active.len() as f64);
+        metrics
+            .batch_fill
+            .lock()
+            .unwrap_or_else(|p| p.into_inner())
+            .add(active.len() as f64);
+        let t0 = Instant::now();
+        let last_tokens: Vec<i64> =
+            active.iter().map(|s| *s.tokens.last().expect("nonempty prompt")).collect();
+        let ids = Tensor::from_slice(&last_tokens, [active.len(), 1]);
+        let logits = {
+            let mut caches: Vec<&mut PagedKvCache> =
+                active.iter_mut().map(|s| &mut s.cache).collect();
+            no_grad(|| model.logits_decode_batch(&ids, &mut caches)).tensor()
+        };
+        metrics.busy_nanos.fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+        let v = logits.dim(2);
+        let flat = logits.to_vec();
+        let mut i = 0;
+        while i < active.len() {
+            active[i].last = flat[i * v..(i + 1) * v].to_vec();
+            step_seq(&mut active[i]);
+            if active[i].generated >= active[i].max_new {
+                // swap_remove: retirement is O(1) and batch order carries
+                // no meaning (every row is bitwise independent)
+                let seq = active.swap_remove(i);
+                retire(seq, metrics);
+            } else {
+                i += 1;
+            }
+        }
+        metrics.iterations.fetch_add(1, Ordering::Relaxed);
+    }
+    set_occupancy(metrics, 0.0);
+}
+
+/// Reserve pages, prefill, and sample the first token — the admission
+/// path. Mirrors `generate()`'s cached branch exactly: prefill produces
+/// the last position's logits, the first sample draws from them, and a
+/// forward only runs for tokens after the first.
+fn admit(
+    model: &BertLike,
+    pool: &Arc<KvPagePool>,
+    req: GenRequest,
+    metrics: &SchedulerMetrics,
+) -> Admitted {
+    let mut cache = PagedKvCache::new(Arc::clone(pool));
+    if cache.reserve(req.prompt.len() + req.opts.max_new_tokens).is_err() {
+        return Admitted::Wait(req);
+    }
+    metrics.prefills.fetch_add(1, Ordering::Relaxed);
+    let t0 = Instant::now();
+    let ids = Tensor::from_slice(&req.prompt, [1, req.prompt.len()]);
+    let logits = no_grad(|| model.logits_paged(&ids, &mut cache)).tensor();
+    let last = last_position_logits(&logits);
+    let prefill_secs = t0.elapsed().as_secs_f64();
+    metrics.busy_nanos.fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+    let mut seq = Box::new(ActiveSeq {
+        tokens: req.prompt,
+        cache,
+        rng: Rng::new(req.opts.seed),
+        sampling: req.opts.sampling.clone(),
+        max_new: req.opts.max_new_tokens,
+        generated: 0,
+        record: req.opts.record_logits,
+        step_logits: Vec::new(),
+        last,
+        resp: req.resp,
+        enqueued: req.enqueued,
+        prefill_secs,
+        decode_started: Instant::now(),
+    });
+    step_seq(&mut seq);
+    if seq.generated >= seq.max_new {
+        retire(*seq, metrics);
+        Admitted::Done
+    } else {
+        Admitted::Running(seq)
+    }
+}
+
+/// Sample the next token from `seq.last` — the same `sample()` a solo
+/// decode runs, on the request's own RNG stream.
+fn step_seq(seq: &mut ActiveSeq) {
+    if seq.record {
+        seq.step_logits.push(seq.last.clone());
+    }
+    let next = sample(&seq.last, &seq.sampling, &mut seq.rng);
+    seq.tokens.push(next);
+    seq.generated += 1;
+}
+
+/// Finish a sequence: build its report, answer the caller, account the
+/// telemetry. The cache drops here, returning every page to the pool.
+fn retire(seq: ActiveSeq, metrics: &SchedulerMetrics) {
+    let decode_secs = seq.decode_started.elapsed().as_secs_f64();
+    metrics.completed.fetch_add(1, Ordering::Relaxed);
+    metrics.generated.fetch_add(seq.generated as u64, Ordering::Relaxed);
+    metrics
+        .latency_us
+        .lock()
+        .unwrap_or_else(|p| p.into_inner())
+        .add(seq.enqueued.elapsed().as_secs_f64() * 1e6);
+    let report = GenerateReport {
+        generated: seq.generated,
+        prefill_secs: seq.prefill_secs,
+        decode_secs,
+        tokens_per_sec: if decode_secs > 0.0 { seq.generated as f64 / decode_secs } else { 0.0 },
+        tokens: seq.tokens,
+        step_logits: seq.step_logits,
+    };
+    let _ = seq.resp.send(Ok(report));
+}
+
+fn set_occupancy(metrics: &SchedulerMetrics, level: f64) {
+    metrics.occupancy.lock().unwrap_or_else(|p| p.into_inner()).set(level);
+}

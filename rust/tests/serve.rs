@@ -8,18 +8,26 @@
 //! 2. A request served through the dynamic batcher is **bit-identical**
 //!    to the same request served at batch size 1.
 //!
+//! 3. A request served through the continuous (iteration-level) batcher
+//!    is **bit-identical** — token stream and per-step logits — to a solo
+//!    `generate()` call, whatever else shares the decode batch.
+//!
 //! Plus behavioral coverage of the batching policy (deadline flush,
-//! coalescing, padding, graceful shutdown) and the session's shape
-//! bucketing.
+//! coalescing, padding, graceful shutdown), the continuous scheduler's
+//! admission/backpressure policy, submit/shutdown race-freedom, and the
+//! session's shape bucketing. Randomized arrival/retirement schedules are
+//! covered separately by `rust/tests/serve_continuous_fuzz.rs`.
 
 use std::sync::Arc;
 use std::time::Duration;
 
 use flashlight::models::BertLike;
 use flashlight::serve::{
-    generate, Engine, EngineConfig, GenerateOptions, InferenceSession, Sampling,
+    generate, ContinuousBatcher, ContinuousConfig, Engine, EngineConfig, GenerateOptions,
+    InferenceSession, Sampling,
 };
 use flashlight::tensor::{DType, Tensor};
+use flashlight::util::error::Error;
 use flashlight::util::rng::Rng;
 
 /// A small causal LM with deterministic (per-test) random weights.
@@ -88,6 +96,7 @@ fn generate_cached_and_uncached_agree_greedy_and_topk() {
             sampling: sampling.clone(),
             seed: 1234,
             use_cache,
+            record_logits: false,
         };
         let cached = generate(&model, &prompt, &opts(true)).unwrap();
         let recompute = generate(&model, &prompt, &opts(false)).unwrap();
@@ -110,6 +119,7 @@ fn generate_is_reproducible_per_seed_and_validates_inputs() {
         sampling: Sampling::TopK { k: 5, temperature: 1.1 },
         seed,
         use_cache: true,
+        record_logits: false,
     };
     let a = generate(&model, &prompt, &topk(7)).unwrap();
     let b = generate(&model, &prompt, &topk(7)).unwrap();
@@ -176,6 +186,7 @@ fn engine_serves_batched_requests_bit_identically_and_coalesces() {
         max_batch_size: 8,
         max_wait: Duration::from_millis(300),
         workers: 1,
+        ..Default::default()
     };
     let engine = Engine::start_lm(Arc::clone(&model), seq, &[1, 8], &cfg).unwrap();
 
@@ -224,6 +235,7 @@ fn single_request_flushes_at_the_deadline() {
         max_batch_size: 8,
         max_wait: Duration::from_millis(10),
         workers: 2,
+        ..Default::default()
     };
     let engine = Engine::start_lm(model, 6, &[1, 8], &cfg).unwrap();
     // nobody else is queuing: the lone request must still be answered
@@ -252,6 +264,7 @@ fn shutdown_serves_already_queued_requests() {
         max_batch_size: 4,
         max_wait: Duration::from_millis(1),
         workers: 1,
+        ..Default::default()
     };
     let engine = Engine::start_lm(model, 6, &[1, 4], &cfg).unwrap();
     let handles: Vec<_> = (0..6)
@@ -263,6 +276,274 @@ fn shutdown_serves_already_queued_requests() {
         let out = h.wait().expect("queued request must be served before shutdown");
         assert_eq!(out.dims(), &[6, 24]);
     }
+}
+
+// ---- contract 3: continuous batching ≡ solo decode ------------------------
+
+fn gen_opts(seed: u64, max_new: usize, sampling: Sampling) -> GenerateOptions {
+    GenerateOptions {
+        max_new_tokens: max_new,
+        sampling,
+        seed,
+        use_cache: true,
+        record_logits: true,
+    }
+}
+
+fn assert_report_matches_solo(
+    model: &BertLike,
+    prompt: &[i64],
+    opts: &GenerateOptions,
+    served: &flashlight::serve::GenerateReport,
+    who: &str,
+) {
+    let solo = generate(model, prompt, opts).unwrap();
+    assert_eq!(served.tokens, solo.tokens, "{who}: token stream diverged from solo decode");
+    assert_eq!(served.generated, solo.generated);
+    assert_eq!(
+        served.step_logits.len(),
+        solo.step_logits.len(),
+        "{who}: step-logit count diverged"
+    );
+    for (step, (a, b)) in served.step_logits.iter().zip(&solo.step_logits).enumerate() {
+        assert_eq!(bits(a), bits(b), "{who}: step {step} logits diverged from solo decode");
+    }
+}
+
+#[test]
+fn continuous_batched_generation_bit_identical_to_solo() {
+    let model = Arc::new(small_lm(48, 64));
+    let cfg = ContinuousConfig { max_active: 4, page_tokens: 4, pool_pages: None };
+    let batcher = ContinuousBatcher::start(Arc::clone(&model), &cfg).unwrap();
+
+    let mut rng = Rng::new(41);
+    let requests: Vec<(Vec<i64>, GenerateOptions)> = (0..6)
+        .map(|i| {
+            let n = 2 + rng.below(6);
+            let prompt = random_ids(&mut rng, n, 48);
+            let sampling = if i % 2 == 0 {
+                Sampling::Greedy
+            } else {
+                Sampling::TopK { k: 6, temperature: 0.8 }
+            };
+            (prompt, gen_opts(100 + i as u64, 4 + i, sampling))
+        })
+        .collect();
+
+    // enqueue everything up front so requests of different lengths share
+    // (and progressively leave) the iteration batch
+    let handles: Vec<_> = requests.iter().map(|(p, o)| batcher.submit(p, o)).collect();
+    for ((prompt, opts), handle) in requests.iter().zip(handles) {
+        let served = handle.wait().unwrap();
+        assert_report_matches_solo(&model, prompt, opts, &served, "continuous");
+    }
+
+    let stats = batcher.stats();
+    assert_eq!(stats.submitted, 6);
+    assert_eq!(stats.completed, 6);
+    assert_eq!(stats.prefills, 6);
+    assert_eq!(stats.generated_tokens, (0..6).map(|i| 4 + i as u64).sum::<u64>());
+    assert!(stats.iterations > 0);
+    assert!(stats.mean_iteration_batch >= 1.0);
+    assert!(stats.occupancy_peak >= 1.0);
+    assert_eq!(stats.pool.leased_pages, 0, "retired requests must return every KV page");
+    assert_eq!(stats.pool.total_leases, stats.pool.total_releases);
+    batcher.shutdown();
+}
+
+#[test]
+fn backpressured_admission_stalls_then_serves_every_request_bitwise() {
+    let model = Arc::new(small_lm(32, 32));
+    // 6-token prompt + 10 new = 16 positions = 4 pages of 4 tokens; the
+    // pool holds exactly one request's reservation, so admission of the
+    // queue's head must stall until the running request retires
+    let cfg = ContinuousConfig { max_active: 4, page_tokens: 4, pool_pages: Some(4) };
+    let batcher = ContinuousBatcher::start(Arc::clone(&model), &cfg).unwrap();
+
+    let mut rng = Rng::new(7);
+    let prompts: Vec<Vec<i64>> = (0..3).map(|_| random_ids(&mut rng, 6, 32)).collect();
+    let opts = gen_opts(11, 10, Sampling::TopK { k: 4, temperature: 1.0 });
+    let handles: Vec<_> = prompts.iter().map(|p| batcher.submit(p, &opts)).collect();
+    for (prompt, handle) in prompts.iter().zip(handles) {
+        let served = handle.wait().unwrap();
+        assert_report_matches_solo(&model, prompt, &opts, &served, "backpressured");
+    }
+
+    let stats = batcher.stats();
+    assert_eq!(stats.completed, 3);
+    assert!(
+        stats.backpressure_stalls > 0,
+        "a one-request pool with three queued requests must stall admissions"
+    );
+    assert_eq!(stats.pool.leased_pages, 0);
+    assert_eq!(stats.pool.total_leases, stats.pool.total_releases);
+    batcher.shutdown();
+}
+
+#[test]
+fn continuous_submit_validates_and_answers_zero_token_requests() {
+    let model = Arc::new(small_lm(24, 20));
+    let cfg = ContinuousConfig { max_active: 2, page_tokens: 4, pool_pages: Some(3) };
+    let batcher = ContinuousBatcher::start(Arc::clone(&model), &cfg).unwrap();
+
+    // empty prompts, context overflow, and bad sampling knobs fail fast
+    assert!(batcher.generate(&[], &GenerateOptions::default()).is_err());
+    let too_long = GenerateOptions { max_new_tokens: 20, ..Default::default() };
+    assert!(batcher.generate(&[1, 2, 3], &too_long).is_err());
+    let bad_k = GenerateOptions {
+        max_new_tokens: 4,
+        sampling: Sampling::TopK { k: 0, temperature: 1.0 },
+        ..Default::default()
+    };
+    assert!(batcher.generate(&[1, 2], &bad_k).is_err());
+
+    // KV demand beyond the whole pool is a typed, permanent rejection
+    // (4 prompt + 9 new = 13 positions = 4 pages > the pool's 3)
+    let hungry = GenerateOptions { max_new_tokens: 9, ..Default::default() };
+    let err = batcher.generate(&[1, 2, 3, 4], &hungry).unwrap_err();
+    assert!(matches!(err, Error::Memory(_)), "want Error::Memory, got {err:?}");
+
+    // zero-token requests answer immediately with the prompt unchanged
+    let none = GenerateOptions { max_new_tokens: 0, ..Default::default() };
+    let r = batcher.generate(&[5, 6, 7], &none).unwrap();
+    assert_eq!(r.tokens, vec![5, 6, 7]);
+    assert_eq!(r.generated, 0);
+
+    // and a servable request afterwards still goes through
+    let ok = gen_opts(0, 4, Sampling::Greedy);
+    let served = batcher.generate(&[3, 1, 2], &ok).unwrap();
+    assert_report_matches_solo(&model, &[3, 1, 2], &ok, &served, "post-rejection");
+    batcher.shutdown();
+}
+
+#[test]
+fn engine_generate_matches_solo_and_reports_decode_stats() {
+    let model = Arc::new(small_lm(32, 48));
+    let cfg = EngineConfig {
+        max_batch_size: 2,
+        max_wait: Duration::from_millis(5),
+        workers: 1,
+        decode: ContinuousConfig { max_active: 2, page_tokens: 4, pool_pages: None },
+    };
+    let engine = Engine::start_lm(Arc::clone(&model), 8, &[1], &cfg).unwrap();
+    let opts = gen_opts(3, 6, Sampling::Greedy);
+    let prompt = [4i64, 9, 2, 7];
+    let handles: Vec<_> = (0..3).map(|_| engine.submit_generate(&prompt, &opts).unwrap()).collect();
+    for h in handles {
+        let served = h.wait().unwrap();
+        assert_report_matches_solo(&model, &prompt, &opts, &served, "engine");
+    }
+    let stats = engine.stats();
+    assert_eq!(stats.decode.completed, 3);
+    assert_eq!(stats.generated_tokens, 18);
+    assert!(stats.decode_tokens_per_sec > 0.0);
+    assert!(stats.decode.latency_p99_us >= stats.decode.latency_p50_us);
+    assert_eq!(stats.decode.pool.leased_pages, 0);
+    engine.shutdown();
+    // generation requests after shutdown fail cleanly instead of hanging
+    assert!(engine.generate(&prompt, &opts).is_err());
+}
+
+// ---- submit/shutdown races ------------------------------------------------
+
+#[test]
+fn submit_after_shutdown_fails_cleanly_and_shutdown_is_idempotent() {
+    use flashlight::serve::{Batcher, BatcherConfig};
+    let session = InferenceSession::compile(&[2], DType::F32, &[1], |x| x.tanh()).unwrap();
+    let batcher = Batcher::start(Arc::new(session), BatcherConfig::default());
+    let served = batcher.submit(Tensor::from_slice(&[0.25f32, -0.5], [2])).wait().unwrap();
+    assert_eq!(served.dims(), &[2]);
+    batcher.shutdown();
+    batcher.shutdown(); // idempotent
+    // late submission: the handle resolves with an error, never hangs
+    let late = batcher.submit(Tensor::from_slice(&[1.0f32, 2.0], [2]));
+    assert!(late.wait().is_err(), "a post-shutdown submit must fail cleanly");
+
+    // same contract on the continuous scheduler
+    let model = Arc::new(small_lm(24, 16));
+    let decoder = ContinuousBatcher::start(model, &ContinuousConfig::default()).unwrap();
+    decoder.shutdown();
+    decoder.shutdown();
+    let opts = GenerateOptions { max_new_tokens: 2, ..Default::default() };
+    assert!(decoder.generate(&[1, 2], &opts).is_err());
+}
+
+#[test]
+fn concurrent_submits_racing_shutdown_resolve_without_hanging() {
+    use flashlight::serve::{Batcher, BatcherConfig};
+    let session = InferenceSession::compile(&[2], DType::F32, &[1, 4], |x| x.tanh()).unwrap();
+    let cfg = BatcherConfig {
+        max_batch_size: 4,
+        max_wait: Duration::from_millis(1),
+        workers: 1,
+    };
+    let batcher = Arc::new(Batcher::start(Arc::new(session), cfg));
+
+    std::thread::scope(|s| {
+        let submitters: Vec<_> = (0..4)
+            .map(|t| {
+                let b = Arc::clone(&batcher);
+                s.spawn(move || {
+                    let mut outcomes = Vec::new();
+                    for i in 0..25 {
+                        let x = Tensor::from_slice(&[t as f32, i as f32], [2]);
+                        outcomes.push((t, i, b.submit(x).wait()));
+                    }
+                    outcomes
+                })
+            })
+            .collect();
+        // shut down while the submitters are mid-flight: every handle must
+        // still resolve — served bitwise-correctly or rejected cleanly
+        std::thread::sleep(Duration::from_millis(5));
+        batcher.shutdown();
+        let mut served = 0usize;
+        let mut total = 0usize;
+        for handle in submitters {
+            for (t, i, outcome) in handle.join().unwrap() {
+                total += 1;
+                if let Ok(y) = outcome {
+                    served += 1;
+                    let x = Tensor::from_slice(&[t as f32, i as f32], [2]);
+                    assert_eq!(bits(&y.to_vec()), bits(&x.tanh().to_vec()));
+                }
+            }
+        }
+        assert_eq!(total, 100, "every submit must resolve, racing shutdown or not");
+        assert!(served > 0, "requests queued before shutdown must still be served");
+    });
+}
+
+#[test]
+fn concurrent_generate_submits_racing_shutdown_resolve_without_hanging() {
+    let model = Arc::new(small_lm(24, 24));
+    let cfg = ContinuousConfig { max_active: 3, page_tokens: 4, pool_pages: None };
+    let batcher = Arc::new(ContinuousBatcher::start(Arc::clone(&model), &cfg).unwrap());
+
+    std::thread::scope(|s| {
+        let submitters: Vec<_> = (0u64..3)
+            .map(|t| {
+                let b = Arc::clone(&batcher);
+                let m = Arc::clone(&model);
+                s.spawn(move || {
+                    let mut outcomes = 0usize;
+                    for i in 0u64..8 {
+                        let prompt = [t as i64, i as i64, 3];
+                        let opts = gen_opts(t * 31 + i, 3, Sampling::Greedy);
+                        if let Ok(served) = b.generate(&prompt, &opts) {
+                            assert_report_matches_solo(&m, &prompt, &opts, &served, "racing");
+                        }
+                        outcomes += 1;
+                    }
+                    outcomes
+                })
+            })
+            .collect();
+        std::thread::sleep(Duration::from_millis(10));
+        batcher.shutdown();
+        let total: usize = submitters.into_iter().map(|h| h.join().unwrap()).sum();
+        assert_eq!(total, 24, "every generate must resolve, racing shutdown or not");
+    });
 }
 
 // ---- session-level behavior ----------------------------------------------

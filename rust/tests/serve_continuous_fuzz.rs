@@ -1,0 +1,242 @@
+//! Schedule-fuzzing parity harness for the continuous batcher.
+//!
+//! Each case builds a random small LM, a random paged-KV/scheduler
+//! configuration (page size, slot count, a pool deliberately sized down
+//! to the backpressure regime), and a random request mix (prompt lengths,
+//! generation budgets including zero, greedy and top-k sampling, distinct
+//! sampling seeds), then serves the mix through [`ContinuousBatcher`]
+//! under a randomized arrival pattern. Every request's report must be
+//! **bit-identical** — token stream *and* the `[V]` logits each sampling
+//! step saw — to a solo [`generate()`] call with the same prompt and
+//! options, whatever the iteration batches looked like. Afterwards the
+//! pool must be fully drained (no leaked pages).
+//!
+//! Knobs (see docs/ARCHITECTURE.md, "Testing & fuzzing guide"):
+//!
+//! - `SERVE_FUZZ_CASES`: schedules to fuzz (default 25; CI's `fuzz` job
+//!   raises this to 200+).
+//! - `SERVE_FUZZ_SEED` (decimal or 0x-hex): pins case 0's generation
+//!   seed (later cases derive from it). Every failure panic prints the
+//!   *case* seed; re-running with that value as `SERVE_FUZZ_SEED` and
+//!   `SERVE_FUZZ_CASES=1` replays exactly the failing schedule.
+
+use std::sync::Arc;
+
+use flashlight::models::BertLike;
+use flashlight::serve::{generate, ContinuousBatcher, ContinuousConfig, GenerateOptions, Sampling};
+use flashlight::util::rng::Rng;
+
+fn env_usize(name: &str, default: usize) -> usize {
+    std::env::var(name).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+/// `SERVE_FUZZ_SEED`, if set (decimal or 0x-hex). A pinned seed is used
+/// *directly* as case 0's generation seed, so the seed printed by a
+/// failure panic replays that exact schedule as case 0.
+fn env_seed() -> Option<u64> {
+    match std::env::var("SERVE_FUZZ_SEED") {
+        Ok(v) => {
+            let v = v.trim();
+            let parsed = match v.strip_prefix("0x") {
+                Some(hex) => u64::from_str_radix(hex, 16).ok(),
+                None => v.parse().ok(),
+            };
+            Some(parsed.unwrap_or_else(|| panic!("unparseable SERVE_FUZZ_SEED: {v}")))
+        }
+        Err(_) => None,
+    }
+}
+
+/// One randomly drawn generation request.
+#[derive(Debug, Clone)]
+struct Req {
+    prompt: Vec<i64>,
+    opts: GenerateOptions,
+}
+
+fn gen_request(rng: &mut Rng, vocab: usize, max_len: usize, i: usize) -> Req {
+    let prompt_len = 1 + rng.below(10);
+    let budget = max_len - prompt_len;
+    // 0..=8 new tokens, zero included: a no-decode request must still be
+    // answered (with its prompt unchanged) without touching the pool
+    let max_new = rng.below(9.min(budget + 1));
+    let sampling = if rng.below(2) == 0 {
+        Sampling::Greedy
+    } else {
+        Sampling::TopK { k: 1 + rng.below(8), temperature: 0.5 + 0.25 * rng.below(5) as f64 }
+    };
+    Req {
+        prompt: (0..prompt_len).map(|_| rng.below(vocab) as i64).collect(),
+        opts: GenerateOptions {
+            max_new_tokens: max_new,
+            sampling,
+            // distinct per-request streams: request i must get stream i's
+            // draws no matter which iteration batches it rode in
+            seed: rng.next_u64() ^ i as u64,
+            use_cache: true,
+            record_logits: true,
+        },
+    }
+}
+
+fn run_fuzz(cases: usize, master_seed: u64, pinned: bool) {
+    let mut master = Rng::new(master_seed);
+    for case in 0..cases {
+        // a pinned (SERVE_FUZZ_SEED) value replays itself as case 0; the
+        // rest of the sweep derives from it as usual
+        let case_seed = if pinned && case == 0 { master_seed } else { master.next_u64() };
+        let mut rng = Rng::new(case_seed);
+
+        // random model geometry; weights pinned to the case seed
+        flashlight::util::rng::seed(case_seed ^ 0xF1A5_811F);
+        let vocab = 16 + rng.below(33);
+        let heads = [1, 2, 4][rng.below(3)];
+        let dim = heads * [4, 8][rng.below(2)];
+        let depth = 1 + rng.below(2);
+        let max_len = 20 + rng.below(12);
+        let model = Arc::new(BertLike::new(vocab, dim, heads, depth, max_len));
+
+        // random request mix
+        let n_requests = 2 + rng.below(6);
+        let requests: Vec<Req> =
+            (0..n_requests).map(|i| gen_request(&mut rng, vocab, max_len, i)).collect();
+
+        // random scheduler/pool shape. The pool is drawn between "exactly
+        // the largest single reservation" and "everyone at once", so many
+        // cases run in the backpressure regime where admission stalls.
+        let page_tokens = 1 + rng.below(8);
+        let max_active = 1 + rng.below(4);
+        let per_req: Vec<usize> = requests
+            .iter()
+            .map(|r| (r.prompt.len() + r.opts.max_new_tokens).div_ceil(page_tokens))
+            .collect();
+        let lo = per_req.iter().copied().max().unwrap_or(1).max(1);
+        let hi = per_req.iter().sum::<usize>().max(lo);
+        let pool_pages = lo + rng.below(hi - lo + 1);
+        let cfg = ContinuousConfig { max_active, page_tokens, pool_pages: Some(pool_pages) };
+
+        let ctx = |stage: &str, detail: String| {
+            format!(
+                "serve_continuous_fuzz case {case} (seed {case_seed:#x}): {stage}: {detail}\n\
+                 model: vocab={vocab} dim={dim} heads={heads} depth={depth} max_len={max_len}\n\
+                 cfg: page_tokens={page_tokens} max_active={max_active} pool_pages={pool_pages}\n\
+                 requests: {requests:?}\n\
+                 reproduce with SERVE_FUZZ_SEED={case_seed:#x} SERVE_FUZZ_CASES=1"
+            )
+        };
+
+        let batcher = ContinuousBatcher::start(Arc::clone(&model), &cfg)
+            .unwrap_or_else(|e| panic!("{}", ctx("start", e.to_string())));
+
+        // randomized arrival pattern: either everything up front, or in
+        // two waves with the second joining while the first is mid-decode
+        let wave_split =
+            if rng.below(2) == 0 { requests.len() } else { 1 + rng.below(requests.len()) };
+        let mut handles = Vec::with_capacity(requests.len());
+        for r in &requests[..wave_split] {
+            handles.push(batcher.submit(&r.prompt, &r.opts));
+        }
+        if wave_split < requests.len() {
+            // wait for one in-flight report before the second wave so the
+            // late arrivals genuinely join a drained-down batch
+            let first = handles.remove(0);
+            let served =
+                first.wait().unwrap_or_else(|e| panic!("{}", ctx("wave 1", e.to_string())));
+            check_parity(&model, &requests[0], &served, 0, &ctx);
+            for r in &requests[wave_split..] {
+                handles.push(batcher.submit(&r.prompt, &r.opts));
+            }
+            // handles[..] now corresponds to requests[1..]
+            for (k, handle) in handles.into_iter().enumerate() {
+                let served =
+                    handle.wait().unwrap_or_else(|e| panic!("{}", ctx("wait", e.to_string())));
+                check_parity(&model, &requests[k + 1], &served, k + 1, &ctx);
+            }
+        } else {
+            for (k, handle) in handles.into_iter().enumerate() {
+                let served =
+                    handle.wait().unwrap_or_else(|e| panic!("{}", ctx("wait", e.to_string())));
+                check_parity(&model, &requests[k], &served, k, &ctx);
+            }
+        }
+
+        let stats = batcher.stats();
+        assert!(
+            stats.completed == requests.len() as u64,
+            "{}",
+            ctx("stats", format!("completed {} of {}", stats.completed, requests.len()))
+        );
+        assert!(
+            stats.pool.leased_pages == 0,
+            "{}",
+            ctx("pool drain", format!("{} pages still leased", stats.pool.leased_pages))
+        );
+        assert!(
+            stats.pool.total_leases == stats.pool.total_releases,
+            "{}",
+            ctx(
+                "pool ledger",
+                format!(
+                    "{} leases vs {} releases",
+                    stats.pool.total_leases,
+                    stats.pool.total_releases
+                )
+            )
+        );
+        batcher.shutdown();
+    }
+    println!(
+        "serve_continuous_fuzz: {cases} schedules bit-identical (master seed {master_seed:#x})"
+    );
+}
+
+/// The parity oracle: a continuous-batched report must match a solo
+/// [`generate()`] call bit-for-bit — tokens and every step's logits.
+fn check_parity(
+    model: &BertLike,
+    req: &Req,
+    served: &flashlight::serve::GenerateReport,
+    k: usize,
+    ctx: &dyn Fn(&str, String) -> String,
+) {
+    let solo = generate(model, &req.prompt, &req.opts)
+        .unwrap_or_else(|e| panic!("{}", ctx("solo reference", e.to_string())));
+    assert!(
+        served.tokens == solo.tokens,
+        "{}",
+        ctx(
+            "token parity",
+            format!("request {k}: served {:?}, solo {:?}", served.tokens, solo.tokens)
+        )
+    );
+    assert!(
+        served.generated == solo.generated,
+        "{}",
+        ctx("generated count", format!("request {k}: {} vs {}", served.generated, solo.generated))
+    );
+    assert!(
+        served.step_logits.len() == solo.step_logits.len(),
+        "{}",
+        ctx(
+            "step count",
+            format!("request {k}: {} vs {}", served.step_logits.len(), solo.step_logits.len())
+        )
+    );
+    for (step, (a, b)) in served.step_logits.iter().zip(&solo.step_logits).enumerate() {
+        let same = a.len() == b.len() && a.iter().zip(b).all(|(x, y)| x.to_bits() == y.to_bits());
+        assert!(
+            same,
+            "{}",
+            ctx("logit parity", format!("request {k} step {step}: served {a:?}, solo {b:?}"))
+        );
+    }
+}
+
+/// The headline run: randomized schedules, every report bit-identical to
+/// solo decode, pool drained afterwards.
+#[test]
+fn continuous_schedules_are_bit_identical_to_solo_decode() {
+    let cases = env_usize("SERVE_FUZZ_CASES", 25);
+    let pinned = env_seed();
+    run_fuzz(cases, pinned.unwrap_or(0x0DCA_11ED), pinned.is_some());
+}
