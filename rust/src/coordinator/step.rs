@@ -257,8 +257,14 @@ pub fn compile_step_fn(
 
     let frozen = full_slots.frozen();
     let opts = CompileOptions { frozen_consts: frozen, ..Default::default() };
-    let full = compile(&trace_prog, &full_outputs, &opts)?;
-    let bwd = compile(&trace_prog, &bwd_outputs, &opts)?;
+    // name the sub-program in any verifier/compile failure: one training
+    // step compiles three programs from two traces
+    let in_program = |which: &str| {
+        let which = which.to_string();
+        move |e: Error| Error::msg(format!("compile_step: {which} program: {e}"))
+    };
+    let full = compile(&trace_prog, &full_outputs, &opts).map_err(in_program("forward+loss"))?;
+    let bwd = compile(&trace_prog, &bwd_outputs, &opts).map_err(in_program("backward"))?;
 
     // ---- trace 2: the optimizer update alone (data-parallel split) ------
     let tb2 = TraceBackend::over(default_backend());
@@ -301,7 +307,8 @@ pub fn compile_step_fn(
         (tracer.program(), slots, upd_outputs)
     };
     let upd_opts = CompileOptions { frozen_consts: upd_slots.frozen(), ..Default::default() };
-    let upd = compile(&upd_prog, &upd_outputs, &upd_opts)?;
+    let upd =
+        compile(&upd_prog, &upd_outputs, &upd_opts).map_err(in_program("optimizer update"))?;
 
     Ok(CompiledTrainStep {
         rule,

@@ -68,7 +68,8 @@ impl InferenceSession {
             let mut dims = vec![b];
             dims.extend_from_slice(example_dims);
             let example = Tensor::full(dims, 0.0, dtype);
-            let compiled = no_grad(|| trace_and_compile(&[example], |args| forward(&args[0])))?;
+            let compiled = no_grad(|| trace_and_compile(&[example], |args| forward(&args[0])))
+                .map_err(|e| Error::msg(format!("serve: compiling batch bucket {b}: {e}")))?;
             // probe once: the traced examples are still the program's
             // defaults, so a direct run validates the batch-major contract
             let probe = compiled.program().run(backend.as_ref())?;

@@ -17,8 +17,10 @@
 //! Bit-identity contract: the fused interpreter applies *exactly* the
 //! scalar f32 semantics of the CPU kernels (`kernels::map1`/`map2` with
 //! the same `std` float ops), and regions are gated on every participant
-//! being provably `F32` via `Graph::infer_dtypes`. The differential
-//! fuzzer holds this to bit-for-bit equality.
+//! being provably `F32` via the static verifier's signature inference
+//! ([`super::verify::infer_node_meta`] — the same engine that re-checks
+//! fusion legality after the fact). The differential fuzzer holds this
+//! to bit-for-bit equality.
 
 use std::collections::HashMap;
 
@@ -220,10 +222,13 @@ impl FusedKernel {
 /// list and the remapped output references.
 pub(crate) fn fuse(g: &Graph, report: &mut CompileReport) -> (Vec<CompiledInstr>, Vec<ValueRef>) {
     let n = g.nodes.len();
-    let dtypes = g.infer_dtypes();
+    // one inference engine: the verifier's per-op signature table (a node
+    // only fuses when it is *provably* f32, inputs included)
+    let metas = super::verify::infer_node_meta(g);
+    let meta_f32 = |i: usize| metas[i].as_ref().is_some_and(|m| m.dtype == DType::F32);
     let is_f32 = |r: &ValueRef| match r {
         ValueRef::Const(c) => g.consts[*c].dtype() == DType::F32,
-        ValueRef::Out(i) => dtypes[*i] == Some(DType::F32),
+        ValueRef::Out(i) => meta_f32(*i),
     };
     let fusible: Vec<bool> = g
         .nodes
@@ -231,7 +236,7 @@ pub(crate) fn fuse(g: &Graph, report: &mut CompileReport) -> (Vec<CompiledInstr>
         .enumerate()
         .map(|(i, node)| {
             fusible_arity(&node.op) == Some(node.inputs.len())
-                && dtypes[i] == Some(DType::F32)
+                && meta_f32(i)
                 && node.inputs.iter().all(is_f32)
         })
         .collect();

@@ -9,7 +9,11 @@
 //!
 //! The invariant — two values whose lifetimes overlap never share a slot
 //! — is checked by [`MemoryPlan::check_no_aliasing`] and exercised under
-//! instrumented execution in `rust/tests/graph_passes.rs`.
+//! instrumented execution in `rust/tests/graph_passes.rs`. The static
+//! verifier ([`super::verify`]) re-derives liveness independently from
+//! the instruction stream and cross-checks the whole plan — slot
+//! interference, free points vs last readers, output pinning, donation
+//! frontiers — flagging any divergence as a typed diagnostic.
 
 use super::super::trace::ValueRef;
 use super::CompiledInstr;

@@ -27,15 +27,27 @@
 //! packages everything as an executable [`CompiledProgram`] that runs on
 //! *any* [`TensorBackend`].
 //!
+//! The pipeline is guarded by the static [`verify`] pass built on the
+//! per-op [`signature`] table: every source trace is validated before
+//! optimization (fail-closed, typed [`Error::Verify`]), and under
+//! `FL_VERIFY=1` the full invariant set — SSA form, shape/dtype
+//! inference, effect preservation, fusion legality, memory-plan
+//! soundness — is re-checked after *every* pass with per-pass
+//! provenance. See `docs/ARCHITECTURE.md` ("Static verification").
+//!
 //! Correctness contract: on the reference CPU backend, an optimized
 //! program is **bit-identical** to replaying the unoptimized trace — the
 //! differential fuzzer in `rust/tests/graph_fuzz.rs` enforces this over
-//! hundreds of random programs, and `rust/tests/graph_passes.rs` pins
-//! down each pass individually.
+//! hundreds of random programs, `rust/tests/graph_passes.rs` pins down
+//! each pass individually, and `rust/tests/graph_verify.rs` mutation-
+//! tests the verifier itself (seeded miscompile classes must all be
+//! caught; clean fuzz programs must verify with zero diagnostics).
 
 pub mod fuse;
 pub mod memplan;
 pub mod passes;
+pub mod signature;
+pub mod verify;
 
 use std::sync::Arc;
 
@@ -48,6 +60,8 @@ use crate::util::error::{Error, Result};
 
 pub use fuse::{FusedArg, FusedKernel, FusedStep};
 pub use memplan::MemoryPlan;
+pub use signature::{SignatureError, SignatureErrorKind, ValueMeta};
+pub use verify::{verify_enabled, Diagnostic, DiagnosticKind, SourceSpec, VerifiedMeta};
 
 /// Process-wide capture serialization. [`BackendGuard::install`] swaps
 /// the *global* default backend, so two concurrent captures would record
@@ -174,99 +188,6 @@ impl Graph {
         m
     }
 
-    /// Best-effort compile-time dtype inference (`None` = unknown). Used
-    /// to gate fusion: a node only fuses when it is *provably* f32.
-    pub(crate) fn infer_dtypes(&self) -> Vec<Option<DType>> {
-        let mut out: Vec<Option<DType>> = vec![None; self.nodes.len()];
-        for i in 0..self.nodes.len() {
-            let dt = |r: &ValueRef, out: &[Option<DType>]| match r {
-                ValueRef::Const(c) => Some(self.consts[*c].dtype()),
-                ValueRef::Out(n) => out[*n],
-            };
-            let n = &self.nodes[i];
-            // malformed arities infer as unknown; the arity error itself
-            // surfaces at dispatch time
-            let arg = |k: usize| n.inputs.get(k).and_then(|r| dt(r, &out));
-            out[i] = match &n.op {
-                Op::Full { dtype, .. }
-                | Op::Arange { dtype, .. }
-                | Op::RandUniform { dtype, .. }
-                | Op::RandNormal { dtype, .. }
-                | Op::Astype { dtype } => Some(*dtype),
-                Op::FromHost { host, .. } => Some(host.dtype()),
-                // binary arithmetic: NumPy-style promotion
-                Op::Add
-                | Op::Sub
-                | Op::Mul
-                | Op::Div
-                | Op::Pow
-                | Op::Minimum
-                | Op::Maximum
-                | Op::Rem => match (arg(0), arg(1)) {
-                    (Some(a), Some(b)) => Some(a.promote(b)),
-                    _ => None,
-                },
-                // predicates always produce Bool
-                Op::Eq
-                | Op::Neq
-                | Op::Lt
-                | Op::Le
-                | Op::Gt
-                | Op::Ge
-                | Op::LogicalAnd
-                | Op::LogicalOr
-                | Op::LogicalNot
-                | Op::IsNan
-                | Op::Any { .. }
-                | Op::All { .. } => Some(DType::Bool),
-                // float unaries promote integers to f32
-                Op::Exp
-                | Op::Log
-                | Op::Log1p
-                | Op::Sin
-                | Op::Cos
-                | Op::Tanh
-                | Op::Sqrt
-                | Op::Rsqrt
-                | Op::Reciprocal
-                | Op::Floor
-                | Op::Ceil
-                | Op::Round
-                | Op::Erf => arg(0).map(|d| if d.is_float() { d } else { DType::F32 }),
-                // dtype-preserving unaries and data movement
-                Op::Neg
-                | Op::Abs
-                | Op::Sign
-                | Op::Clip { .. }
-                | Op::Reshape { .. }
-                | Op::Transpose { .. }
-                | Op::Slice { .. }
-                | Op::Pad { .. }
-                | Op::Tile { .. }
-                | Op::Flip { .. }
-                | Op::Copy => arg(0),
-                Op::Argmax { .. } | Op::Argmin { .. } => Some(DType::I64),
-                // reductions preserve their input dtype (reduce.rs)
-                Op::Sum { .. }
-                | Op::Prod { .. }
-                | Op::MaxReduce { .. }
-                | Op::MinReduce { .. }
-                | Op::Cumsum { .. } => arg(0),
-                // matmul floats both operands then promotes (matmul.rs)
-                Op::Matmul => match (arg(0), arg(1)) {
-                    (Some(a), Some(b)) => {
-                        let float = |d: DType| if d.is_float() { d } else { DType::F32 };
-                        Some(float(a).promote(float(b)))
-                    }
-                    _ => None,
-                },
-                // conv/pool, gather/scatter, where, concat, call_ext:
-                // stay conservative
-                _ => None,
-            };
-        }
-        out
-    }
 }
 
 /// Which passes run, and their knobs.
@@ -553,25 +474,42 @@ impl CompiledProgram {
         let mut def_bytes: Vec<usize> = vec![0; self.instrs.len()];
         for (j, instr) in self.instrs.iter().enumerate() {
             let out = {
-                let resolve = |r: &ValueRef| -> &Tensor {
+                // executor failures carry provenance: instruction index,
+                // op name, and the pass pipeline that produced the
+                // program, instead of a bare panic deep in a kernel
+                let resolve = |r: &ValueRef| -> Result<&Tensor> {
                     match r {
-                        ValueRef::Const(i) => match &ovr[*i] {
+                        ValueRef::Const(i) => Ok(match &ovr[*i] {
                             Some(t) => t,
                             None => &self.consts[*i],
-                        },
-                        ValueRef::Out(i) => {
-                            vals[*i].as_ref().expect("executor: value used after free")
-                        }
+                        }),
+                        ValueRef::Out(i) => vals[*i].as_ref().ok_or_else(|| {
+                            Error::Verify(format!(
+                                "executor: instr {j} `{}` reads value {i} after the plan \
+                                 freed it (pipeline: {})",
+                                instr.name(),
+                                self.report.summary()
+                            ))
+                        }),
                     }
+                };
+                let provenance = |e: Error| {
+                    Error::msg(format!(
+                        "instr {j} `{}`: {e} (pipeline: {})",
+                        instr.name(),
+                        self.report.summary()
+                    ))
                 };
                 match instr {
                     CompiledInstr::Op { op, inputs } => {
-                        let args: Vec<&Tensor> = inputs.iter().map(resolve).collect();
-                        backend.dispatch(op, &args)?
+                        let args: Vec<&Tensor> =
+                            inputs.iter().map(resolve).collect::<Result<_>>()?;
+                        backend.dispatch(op, &args).map_err(provenance)?
                     }
                     CompiledInstr::Fused(k) => {
-                        let args: Vec<&Tensor> = k.inputs.iter().map(resolve).collect();
-                        k.execute(backend, &args)?
+                        let args: Vec<&Tensor> =
+                            k.inputs.iter().map(resolve).collect::<Result<_>>()?;
+                        k.execute(backend, &args).map_err(provenance)?
                     }
                 }
             };
@@ -615,39 +553,73 @@ impl CompiledProgram {
         let outs: Vec<Tensor> = self
             .outputs
             .iter()
-            .map(|r| match r {
-                ValueRef::Const(i) => match &ovr[*i] {
+            .enumerate()
+            .map(|(k, r)| match r {
+                ValueRef::Const(i) => Ok(match &ovr[*i] {
                     Some(t) => t.clone(),
                     None => self.consts[*i].clone(),
-                },
-                ValueRef::Out(i) => vals[*i].clone().expect("executor: output freed"),
+                }),
+                ValueRef::Out(i) => vals[*i].clone().ok_or_else(|| {
+                    Error::Verify(format!(
+                        "executor: output {k} (value {i}, `{}`) was freed during execution \
+                         (pipeline: {})",
+                        self.instrs[*i].name(),
+                        self.report.summary()
+                    ))
+                }),
             })
-            .collect();
+            .collect::<Result<_>>()?;
         Ok((outs, stats))
     }
 }
 
 /// Compile a captured program into an optimized [`CompiledProgram`]
 /// producing `outputs`.
+///
+/// The source trace is *always* validated against the static signature
+/// table first (fail-closed: a malformed trace is a typed
+/// [`Error::Verify`], never a downstream panic). Under `FL_VERIFY=1`
+/// ([`verify::verify_enabled`]) the graph is additionally re-verified
+/// after every pass, attributing any broken invariant to the pass that
+/// broke it.
 pub fn compile(
     program: &TraceProgram,
     outputs: &[ValueRef],
     opts: &CompileOptions,
 ) -> Result<CompiledProgram> {
     let mut g = Graph::from_program(program, outputs)?;
+    // fail-closed trace boundary: snapshot the invariants every pass must
+    // preserve, rejecting source programs that fail signature validation
+    let spec = verify::source_spec(&g).map_err(|d| verify::to_error(&d))?;
+    let paranoid = verify::verify_enabled();
+    let check = |g: &Graph, pass: &'static str| -> Result<()> {
+        verify::verify(g, Some(&spec), pass).map(|_| ()).map_err(|d| verify::to_error(&d))
+    };
     let mut report = CompileReport::default();
     if opts.dce {
         passes::dce(&mut g, &mut report);
+        if paranoid {
+            check(&g, "dce")?;
+        }
     }
     if opts.fold {
         passes::fold(&mut g, opts, &mut report);
+        if paranoid {
+            check(&g, "fold")?;
+        }
     }
     if opts.cse {
         passes::cse(&mut g, &mut report);
+        if paranoid {
+            check(&g, "cse")?;
+        }
     }
     if opts.dce && (opts.fold || opts.cse) {
         // fold/cse leave orphaned defs behind; sweep them
         passes::dce(&mut g, &mut report);
+        if paranoid {
+            check(&g, "dce(cleanup)")?;
+        }
     }
     let (instrs, outputs) = if opts.fuse {
         fuse::fuse(&g, &mut report)
@@ -661,7 +633,13 @@ pub fn compile(
         )
     };
     let plan = MemoryPlan::build(&instrs, &outputs, g.consts.len());
-    Ok(CompiledProgram { consts: g.consts, instrs, outputs, plan, report })
+    let compiled = CompiledProgram { consts: g.consts, instrs, outputs, plan, report };
+    if paranoid {
+        let pass = if opts.fuse { "fuse+memplan" } else { "lower+memplan" };
+        verify::verify_program(&compiled, Some(&spec), pass)
+            .map_err(|d| verify::to_error(&d))?;
+    }
+    Ok(compiled)
 }
 
 /// A traced-and-compiled function: the `Tensor::compile`-style entry

@@ -12,6 +12,10 @@
 //!   byte-for-byte CPU result; on CPU execution this is indistinguishable
 //!   from running the op at execution time, which is what the
 //!   differential fuzzer checks.
+//! - **Every pass must preserve the static invariants.** Under
+//!   `FL_VERIFY=1` the [`super::verify`] pass re-checks SSA form, full
+//!   shape/dtype inference, and the effectful-op sequence after each pass
+//!   and attributes any violation to the pass that introduced it.
 
 use std::collections::HashMap;
 

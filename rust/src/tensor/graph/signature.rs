@@ -1,0 +1,684 @@
+//! The per-[`Op`] static signature table: arity, input constraints, and
+//! the output shape + dtype of every primitive as a *total function* of
+//! the input metadata.
+//!
+//! [`infer`] is the one inference engine of the compiler. It mirrors the
+//! reference CPU backend's semantics *exactly* — every rule below cites
+//! the kernel it transcribes — so a value the verifier types as
+//! `[2, 3] f32` is precisely what `cpu::*` will materialize at run time.
+//! The match over [`Op`] is exhaustive **with no wildcard arm**: adding a
+//! variant without a signature is a compile error, the same guarantee
+//! [`crate::tensor::op::execute`] gives for dispatch routing.
+//!
+//! Leniency contract: [`infer`] rejects exactly what the backend rejects
+//! (or panics on), and accepts everything it accepts. The backend is
+//! deliberately coercive about dtypes — integer operands promote, index
+//! tensors are cast via `to_vec_i64`, conv/pool inputs are forced to f32
+//! — so most constraints here are *shape* constraints; dtype constraints
+//! proper only appear at the fusion layer (see [`super::verify`]). Two
+//! deliberate asymmetries:
+//!
+//! - Reduction `axes` out of range are *ignored* by `cpu/reduce.rs`
+//!   (`axes.contains(&d)` over real dims), so they are accepted here too.
+//!   Single-axis ops (`argmax`/`argmin`/`cumsum`) index `dims[axis]`
+//!   directly and do get a range check.
+//! - `call_ext` is opaque by design (backend-defined semantics); its
+//!   output is unknowable statically and infers as `None`.
+
+use super::super::backend::{Conv2dParams, Pool2dParams};
+use super::super::dtype::DType;
+use super::super::op::Op;
+use super::super::shape::Shape;
+
+/// Statically known metadata of one SSA value.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ValueMeta {
+    /// The value's shape.
+    pub shape: Shape,
+    /// The value's dtype.
+    pub dtype: DType,
+}
+
+impl ValueMeta {
+    /// Convenience constructor.
+    pub fn new(shape: impl Into<Shape>, dtype: DType) -> ValueMeta {
+        ValueMeta { shape: shape.into(), dtype }
+    }
+}
+
+impl std::fmt::Display for ValueMeta {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{} {}", self.shape, self.dtype.name())
+    }
+}
+
+/// Which class of constraint a signature violation falls into. Mapped
+/// 1:1 onto the corresponding [`super::verify::DiagnosticKind`]s.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SignatureErrorKind {
+    /// Wrong tensor-input count for the op.
+    Arity,
+    /// An input dtype the op cannot accept.
+    DType,
+    /// Shapes that fail the op's shape rule (broadcast, rank, bounds…).
+    Shape,
+}
+
+/// A violated signature constraint.
+#[derive(Debug, Clone)]
+pub struct SignatureError {
+    /// Constraint class.
+    pub kind: SignatureErrorKind,
+    /// Human-readable description (op name included by the caller).
+    pub message: String,
+}
+
+impl SignatureError {
+    fn shape(message: impl Into<String>) -> SignatureError {
+        SignatureError { kind: SignatureErrorKind::Shape, message: message.into() }
+    }
+
+    fn arity(message: impl Into<String>) -> SignatureError {
+        SignatureError { kind: SignatureErrorKind::Arity, message: message.into() }
+    }
+}
+
+/// `cpu/mod.rs` float-unary rule: floats pass through, everything else
+/// promotes to f32.
+fn float_or_f32(d: DType) -> DType {
+    if d.is_float() {
+        d
+    } else {
+        DType::F32
+    }
+}
+
+/// NumPy broadcast of two metas' shapes, as `Shape::broadcast` (which the
+/// CPU binop kernels `expect` on).
+fn broadcast(op: &Op, a: &Shape, b: &Shape) -> Result<Shape, SignatureError> {
+    a.broadcast(b).map_err(|_| {
+        SignatureError::shape(format!("`{}`: cannot broadcast {a} with {b}", op.name()))
+    })
+}
+
+/// `cpu/conv.rs::out_dim`, with the usize-underflow panic and the
+/// zero-stride division surfaced as typed errors.
+fn conv_out_dim(
+    what: &str,
+    input: usize,
+    kernel: usize,
+    stride: usize,
+    pad: usize,
+) -> Result<usize, SignatureError> {
+    if stride == 0 {
+        return Err(SignatureError::shape(format!("{what}: stride must be positive")));
+    }
+    let padded = input + 2 * pad;
+    if padded < kernel {
+        return Err(SignatureError::shape(format!(
+            "{what}: window {kernel} exceeds padded extent {padded}"
+        )));
+    }
+    Ok((padded - kernel) / stride + 1)
+}
+
+/// Forward conv2d output shape for `x [N,Cin,H,W]` ⋆ `w [Cout,Cin,Kh,Kw]`
+/// (mirrors `cpu/conv.rs::conv2d`).
+fn conv2d_out(
+    x: &Shape,
+    w: &Shape,
+    p: &Conv2dParams,
+) -> Result<Shape, SignatureError> {
+    let (xd, wd) = (x.dims(), w.dims());
+    if xd.len() != 4 {
+        return Err(SignatureError::shape(format!("conv2d input must be NCHW, got {x}")));
+    }
+    if wd.len() != 4 {
+        return Err(SignatureError::shape(format!("conv2d weight must be OIHW, got {w}")));
+    }
+    if xd[1] != wd[1] {
+        return Err(SignatureError::shape(format!(
+            "conv2d channel mismatch: input {x} vs weight {w}"
+        )));
+    }
+    let oh = conv_out_dim("conv2d", xd[2], wd[2], p.stride.0, p.padding.0)?;
+    let ow = conv_out_dim("conv2d", xd[3], wd[3], p.stride.1, p.padding.1)?;
+    Ok(Shape::new(vec![xd[0], wd[0], oh, ow]))
+}
+
+/// Pool2d output shape for NCHW `x` (mirrors `cpu/pool.rs::pool2d`,
+/// which pools with zero padding).
+fn pool2d_out(x: &Shape, p: &Pool2dParams) -> Result<Shape, SignatureError> {
+    let xd = x.dims();
+    if xd.len() != 4 {
+        return Err(SignatureError::shape(format!("pool2d input must be NCHW, got {x}")));
+    }
+    let oh = conv_out_dim("pool2d", xd[2], p.kernel.0, p.stride.0, 0)?;
+    let ow = conv_out_dim("pool2d", xd[3], p.kernel.1, p.stride.1, 0)?;
+    Ok(Shape::new(vec![xd[0], xd[1], oh, ow]))
+}
+
+/// Matmul output metadata, transcribing `cpu/matmul.rs::plan` exactly:
+/// 1-D operands promote NumPy-style (`[k]` → `[1,k]` / `[k,1]`, the
+/// synthetic dim squeezed from the output), inner dims must agree, batch
+/// extents must match or broadcast from ≤ 1, and the output batch dims
+/// come from the higher-batch-rank operand (ties → lhs). Operands float
+/// before promoting, so the result dtype is always a float.
+fn matmul_out(a: &ValueMeta, b: &ValueMeta) -> Result<ValueMeta, SignatureError> {
+    let (ad, bd) = (a.shape.dims(), b.shape.dims());
+    if ad.is_empty() || bd.is_empty() {
+        return Err(SignatureError::shape(format!(
+            "matmul on scalar: {} x {}",
+            a.shape, b.shape
+        )));
+    }
+    let (ad2, squeeze_m): (Vec<usize>, bool) =
+        if ad.len() == 1 { (vec![1, ad[0]], true) } else { (ad.to_vec(), false) };
+    let (bd2, squeeze_n): (Vec<usize>, bool) =
+        if bd.len() == 1 { (vec![bd[0], 1], true) } else { (bd.to_vec(), false) };
+    let (m, ka) = (ad2[ad2.len() - 2], ad2[ad2.len() - 1]);
+    let (kb, n) = (bd2[bd2.len() - 2], bd2[bd2.len() - 1]);
+    if ka != kb {
+        return Err(SignatureError::shape(format!(
+            "matmul inner dims: {} x {}",
+            a.shape, b.shape
+        )));
+    }
+    let a_batch: usize = ad2[..ad2.len() - 2].iter().product();
+    let b_batch: usize = bd2[..bd2.len() - 2].iter().product();
+    if !(a_batch == b_batch || a_batch <= 1 || b_batch <= 1) {
+        return Err(SignatureError::shape(format!(
+            "matmul batch mismatch: {} x {}",
+            a.shape, b.shape
+        )));
+    }
+    let mut out_dims: Vec<usize> = if ad2.len() - 2 >= bd2.len() - 2 {
+        ad2[..ad2.len() - 2].to_vec()
+    } else {
+        bd2[..bd2.len() - 2].to_vec()
+    };
+    if !squeeze_m {
+        out_dims.push(m);
+    }
+    if !squeeze_n {
+        out_dims.push(n);
+    }
+    let dtype = float_or_f32(a.dtype).promote(float_or_f32(b.dtype));
+    Ok(ValueMeta::new(out_dims, dtype))
+}
+
+/// Infer the output metadata of `op` applied to inputs with metadata
+/// `inputs` (`None` = statically unknown, e.g. downstream of `call_ext`).
+///
+/// Returns:
+///
+/// - `Ok(Some(meta))` — inputs satisfy the signature; `meta` is exactly
+///   what the reference backend will produce.
+/// - `Ok(None)` — arity is valid but some needed input is opaque (or the
+///   op is `call_ext`): nothing can be proven either way.
+/// - `Err(e)` — the op *will* fail (or panic) at run time; `e` says how.
+///
+/// Arity is validated before any metadata is consulted, so a wrong input
+/// count is reported even on fully opaque operands.
+pub fn infer(
+    op: &Op,
+    inputs: &[Option<&ValueMeta>],
+) -> Result<Option<ValueMeta>, SignatureError> {
+    // arity first, mirroring `op::execute`'s run-time gate
+    match op.arity() {
+        Some(want) if inputs.len() != want => {
+            return Err(SignatureError::arity(format!(
+                "op `{}` expects {want} tensor input(s), got {}",
+                op.name(),
+                inputs.len()
+            )));
+        }
+        None if matches!(op, Op::Concat { .. }) && inputs.is_empty() => {
+            return Err(SignatureError::arity(
+                "op `concat` expects at least one tensor input".to_string(),
+            ));
+        }
+        _ => {}
+    }
+    // any opaque operand ⇒ the output is opaque too (arity already held)
+    let Some(m) = inputs.iter().copied().collect::<Option<Vec<&ValueMeta>>>() else {
+        return Ok(None);
+    };
+    // NOTE: exhaustive over every `Op` variant, deliberately without a
+    // wildcard arm — adding an op without a signature must not compile.
+    let out = match op {
+        // ---- creation: the payload is the signature -----------------------
+        Op::Full { shape, dtype, .. } => ValueMeta::new(shape.clone(), *dtype),
+        Op::Arange { n, dtype } => ValueMeta::new(vec![*n], *dtype),
+        Op::RandUniform { shape, dtype, .. } | Op::RandNormal { shape, dtype, .. } => {
+            ValueMeta::new(shape.clone(), *dtype)
+        }
+        Op::FromHost { host, shape } => {
+            if host.len() != shape.numel() {
+                return Err(SignatureError::shape(format!(
+                    "from_host: {} host element(s) for shape {shape}",
+                    host.len()
+                )));
+            }
+            ValueMeta::new(shape.clone(), host.dtype())
+        }
+
+        // ---- dtype-preserving unaries -------------------------------------
+        Op::Neg | Op::Abs | Op::Sign | Op::Clip { .. } => m[0].clone(),
+
+        // ---- float unaries: integers promote to f32 (`cpu/mod.rs`) --------
+        Op::Exp
+        | Op::Log
+        | Op::Log1p
+        | Op::Sin
+        | Op::Cos
+        | Op::Tanh
+        | Op::Sqrt
+        | Op::Rsqrt
+        | Op::Reciprocal
+        | Op::Floor
+        | Op::Ceil
+        | Op::Round
+        | Op::Erf => ValueMeta::new(m[0].shape.clone(), float_or_f32(m[0].dtype)),
+
+        // ---- predicate unaries --------------------------------------------
+        Op::LogicalNot | Op::IsNan => ValueMeta::new(m[0].shape.clone(), DType::Bool),
+
+        // ---- binary arithmetic: broadcast + NumPy promotion ---------------
+        Op::Add | Op::Sub | Op::Mul | Op::Div | Op::Pow | Op::Minimum | Op::Maximum | Op::Rem => {
+            ValueMeta {
+                shape: broadcast(op, &m[0].shape, &m[1].shape)?,
+                dtype: m[0].dtype.promote(m[1].dtype),
+            }
+        }
+
+        // ---- comparisons / logicals: broadcast, Bool result ---------------
+        Op::Eq
+        | Op::Neq
+        | Op::Lt
+        | Op::Le
+        | Op::Gt
+        | Op::Ge
+        | Op::LogicalAnd
+        | Op::LogicalOr => {
+            ValueMeta { shape: broadcast(op, &m[0].shape, &m[1].shape)?, dtype: DType::Bool }
+        }
+
+        // ---- multi-axis reductions (`cpu/reduce.rs` ignores out-of-range
+        // axes, so no range check here — see module docs) -------------------
+        Op::Sum { axes, keepdims }
+        | Op::Prod { axes, keepdims }
+        | Op::MaxReduce { axes, keepdims }
+        | Op::MinReduce { axes, keepdims } => {
+            ValueMeta::new(m[0].shape.reduce(axes, *keepdims), m[0].dtype)
+        }
+        Op::Any { axes, keepdims } | Op::All { axes, keepdims } => {
+            ValueMeta::new(m[0].shape.reduce(axes, *keepdims), DType::Bool)
+        }
+
+        // ---- single-axis reductions: the kernel indexes `dims[axis]` ------
+        Op::Argmax { axis, keepdims } | Op::Argmin { axis, keepdims } => {
+            if *axis >= m[0].shape.rank() {
+                return Err(SignatureError::shape(format!(
+                    "`{}`: axis {axis} out of range for {}",
+                    op.name(),
+                    m[0].shape
+                )));
+            }
+            ValueMeta::new(m[0].shape.reduce(&[*axis], *keepdims), DType::I64)
+        }
+        Op::Cumsum { axis } => {
+            if *axis >= m[0].shape.rank() {
+                return Err(SignatureError::shape(format!(
+                    "`cumsum`: axis {axis} out of range for {}",
+                    m[0].shape
+                )));
+            }
+            m[0].clone()
+        }
+
+        // ---- linear algebra -----------------------------------------------
+        Op::Matmul => matmul_out(m[0], m[1])?,
+
+        // ---- conv / pool: NCHW, always f32 out (`cpu/{conv,pool}.rs`) -----
+        Op::Conv2d(p) => ValueMeta::new(conv2d_out(&m[0].shape, &m[1].shape, p)?, DType::F32),
+        Op::Conv2dBwdInput { x_shape, params } => {
+            // inputs are (grad_y, w); grad_y must be the forward output
+            // shape the kernel slices by
+            let expect = conv2d_out(x_shape, &m[1].shape, params)?;
+            if m[0].shape != expect {
+                return Err(SignatureError::shape(format!(
+                    "conv2d_bwd_input: grad shape {} does not match forward output {expect}",
+                    m[0].shape
+                )));
+            }
+            ValueMeta::new(x_shape.clone(), DType::F32)
+        }
+        Op::Conv2dBwdFilter { w_shape, params } => {
+            // inputs are (grad_y, x)
+            let expect = conv2d_out(&m[1].shape, w_shape, params)?;
+            if m[0].shape != expect {
+                return Err(SignatureError::shape(format!(
+                    "conv2d_bwd_filter: grad shape {} does not match forward output {expect}",
+                    m[0].shape
+                )));
+            }
+            ValueMeta::new(w_shape.clone(), DType::F32)
+        }
+        Op::Pool2d(p) => ValueMeta::new(pool2d_out(&m[0].shape, p)?, DType::F32),
+        Op::Pool2dBwd(p) => {
+            // inputs are (grad_y, x)
+            let expect = pool2d_out(&m[1].shape, p)?;
+            if m[0].shape != expect {
+                return Err(SignatureError::shape(format!(
+                    "pool2d_bwd: grad shape {} does not match forward output {expect}",
+                    m[0].shape
+                )));
+            }
+            ValueMeta::new(m[1].shape.clone(), DType::F32)
+        }
+
+        // ---- data movement ------------------------------------------------
+        Op::Reshape { shape } => {
+            if shape.numel() != m[0].shape.numel() {
+                return Err(SignatureError::shape(format!(
+                    "reshape {} ({} elements) -> {shape} ({} elements)",
+                    m[0].shape,
+                    m[0].shape.numel(),
+                    shape.numel()
+                )));
+            }
+            ValueMeta::new(shape.clone(), m[0].dtype)
+        }
+        Op::Transpose { perm } => {
+            let dims = m[0].shape.dims();
+            let mut sorted = perm.clone();
+            sorted.sort_unstable();
+            if perm.len() != dims.len() || sorted.iter().enumerate().any(|(i, &p)| p != i) {
+                return Err(SignatureError::shape(format!(
+                    "transpose: {perm:?} is not a permutation of rank {}",
+                    dims.len()
+                )));
+            }
+            let out: Vec<usize> = perm.iter().map(|&p| dims[p]).collect();
+            ValueMeta::new(out, m[0].dtype)
+        }
+        Op::Slice { starts, ends } => {
+            let dims = m[0].shape.dims();
+            if starts.len() != dims.len() || ends.len() != dims.len() {
+                return Err(SignatureError::shape(format!(
+                    "slice: {} start(s) / {} end(s) for rank {}",
+                    starts.len(),
+                    ends.len(),
+                    dims.len()
+                )));
+            }
+            for d in 0..dims.len() {
+                if starts[d] > ends[d] || ends[d] > dims[d] {
+                    return Err(SignatureError::shape(format!(
+                        "slice dim {d}: [{}, {}) out of bounds for extent {}",
+                        starts[d], ends[d], dims[d]
+                    )));
+                }
+            }
+            let out: Vec<usize> = ends.iter().zip(starts).map(|(e, s)| e - s).collect();
+            ValueMeta::new(out, m[0].dtype)
+        }
+        Op::Concat { axis } => {
+            let first = m[0].shape.dims();
+            if *axis >= first.len() {
+                return Err(SignatureError::shape(format!(
+                    "concat: axis {axis} out of range for {}",
+                    m[0].shape
+                )));
+            }
+            let mut along = 0usize;
+            for (k, v) in m.iter().enumerate() {
+                let dims = v.shape.dims();
+                if dims.len() != first.len()
+                    || dims
+                        .iter()
+                        .enumerate()
+                        .any(|(d, &x)| d != *axis && x != first[d])
+                {
+                    return Err(SignatureError::shape(format!(
+                        "concat input {k}: {} incompatible with {} along axis {axis}",
+                        v.shape, m[0].shape
+                    )));
+                }
+                along += dims[*axis];
+            }
+            let mut out = first.to_vec();
+            out[*axis] = along;
+            let dtype = m.iter().fold(m[0].dtype, |d, v| d.promote(v.dtype));
+            ValueMeta::new(out, dtype)
+        }
+        Op::Pad { pads, .. } => {
+            let dims = m[0].shape.dims();
+            if pads.len() != dims.len() {
+                return Err(SignatureError::shape(format!(
+                    "pad: {} pad pair(s) for rank {}",
+                    pads.len(),
+                    dims.len()
+                )));
+            }
+            let out: Vec<usize> =
+                dims.iter().zip(pads).map(|(&d, &(b, a))| d + b + a).collect();
+            ValueMeta::new(out, m[0].dtype)
+        }
+        Op::Tile { reps } => {
+            let dims = m[0].shape.dims();
+            if reps.len() != dims.len() {
+                return Err(SignatureError::shape(format!(
+                    "tile: {} rep(s) for rank {}",
+                    reps.len(),
+                    dims.len()
+                )));
+            }
+            let out: Vec<usize> = dims.iter().zip(reps).map(|(&d, &r)| d * r).collect();
+            ValueMeta::new(out, m[0].dtype)
+        }
+        Op::Flip { axes } => {
+            let rank = m[0].shape.rank();
+            if let Some(&bad) = axes.iter().find(|&&a| a >= rank) {
+                return Err(SignatureError::shape(format!(
+                    "flip: axis {bad} out of range for {}",
+                    m[0].shape
+                )));
+            }
+            m[0].clone()
+        }
+        Op::IndexSelect { axis } => {
+            // inputs are (x, indices); index *values* are runtime-only and
+            // indices of any dtype/shape are accepted (cast + flattened)
+            let dims = m[0].shape.dims();
+            if *axis >= dims.len() {
+                return Err(SignatureError::shape(format!(
+                    "index_select: axis {axis} out of range for {}",
+                    m[0].shape
+                )));
+            }
+            let mut out = dims.to_vec();
+            out[*axis] = m[1].shape.numel();
+            ValueMeta::new(out, m[0].dtype)
+        }
+        Op::ScatterAdd => {
+            // inputs are (base, indices, src): src rows follow the index
+            // count, trailing extents must agree element-for-element
+            let (base, idx, src) = (m[0], m[1], m[2]);
+            let bd = base.shape.dims();
+            let sd = src.shape.dims();
+            if bd.is_empty() || sd.is_empty() {
+                return Err(SignatureError::shape(format!(
+                    "scatter_add: base {} and src {} must have rank >= 1",
+                    base.shape, src.shape
+                )));
+            }
+            if sd[0] != idx.shape.numel() {
+                return Err(SignatureError::shape(format!(
+                    "scatter_add: {} src row(s) for {} index(es)",
+                    sd[0],
+                    idx.shape.numel()
+                )));
+            }
+            if sd[1..].iter().product::<usize>() != bd[1..].iter().product::<usize>() {
+                return Err(SignatureError::shape(format!(
+                    "scatter_add: trailing dims mismatch ({} vs {})",
+                    src.shape, base.shape
+                )));
+            }
+            ValueMeta::new(base.shape.clone(), base.dtype.promote(src.dtype))
+        }
+        Op::WhereCond => {
+            // (cond, a, b): a⊙b broadcast first, then cond against that
+            let ab = broadcast(op, &m[1].shape, &m[2].shape)?;
+            ValueMeta {
+                shape: broadcast(op, &m[0].shape, &ab)?,
+                dtype: m[1].dtype.promote(m[2].dtype),
+            }
+        }
+        Op::Astype { dtype } => ValueMeta::new(m[0].shape.clone(), *dtype),
+        Op::Copy => m[0].clone(),
+
+        // ---- extension point: opaque by contract --------------------------
+        Op::CallExt { .. } => return Ok(None),
+    };
+    Ok(Some(out))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn meta(dims: &[usize], dtype: DType) -> ValueMeta {
+        ValueMeta::new(dims.to_vec(), dtype)
+    }
+
+    fn infer1(op: &Op, a: &ValueMeta) -> Result<Option<ValueMeta>, SignatureError> {
+        infer(op, &[Some(a)])
+    }
+
+    #[test]
+    fn binary_broadcasts_and_promotes() {
+        let a = meta(&[2, 1], DType::F32);
+        let b = meta(&[1, 3], DType::I64);
+        let out = infer(&Op::Add, &[Some(&a), Some(&b)]).unwrap().unwrap();
+        assert_eq!(out, meta(&[2, 3], DType::F32));
+        let bad = meta(&[4], DType::F32);
+        let err = infer(&Op::Add, &[Some(&a), Some(&bad)]).unwrap_err();
+        assert_eq!(err.kind, SignatureErrorKind::Shape);
+    }
+
+    #[test]
+    fn arity_checked_before_metadata() {
+        let err = infer(&Op::Add, &[None]).unwrap_err();
+        assert_eq!(err.kind, SignatureErrorKind::Arity);
+        // opaque operands with the right count: unknown, not an error
+        assert!(infer(&Op::Add, &[None, None]).unwrap().is_none());
+    }
+
+    #[test]
+    fn matmul_mirrors_the_kernel_plan() {
+        // [2,3] @ [3,4] -> [2,4]
+        let out = infer(
+            &Op::Matmul,
+            &[Some(&meta(&[2, 3], DType::F32)), Some(&meta(&[3, 4], DType::F32))],
+        )
+        .unwrap()
+        .unwrap();
+        assert_eq!(out, meta(&[2, 4], DType::F32));
+        // 1-D promotion squeezes: [3] @ [3,4] -> [4]
+        let out = infer(
+            &Op::Matmul,
+            &[Some(&meta(&[3], DType::I32)), Some(&meta(&[3, 4], DType::I64))],
+        )
+        .unwrap()
+        .unwrap();
+        assert_eq!(out, meta(&[4], DType::F32)); // ints float to f32
+        // inner-dim mismatch
+        let err = infer(
+            &Op::Matmul,
+            &[Some(&meta(&[2, 3], DType::F32)), Some(&meta(&[5, 4], DType::F32))],
+        )
+        .unwrap_err();
+        assert_eq!(err.kind, SignatureErrorKind::Shape);
+    }
+
+    #[test]
+    fn reductions_follow_reduce_rules() {
+        let x = meta(&[2, 3, 4], DType::I64);
+        let out =
+            infer1(&Op::Sum { axes: vec![1], keepdims: true }, &x).unwrap().unwrap();
+        assert_eq!(out, meta(&[2, 1, 4], DType::I64));
+        let out = infer1(&Op::Any { axes: vec![0, 2], keepdims: false }, &x)
+            .unwrap()
+            .unwrap();
+        assert_eq!(out, meta(&[3], DType::Bool));
+        // single-axis ops do range-check
+        let err = infer1(&Op::Argmax { axis: 3, keepdims: false }, &x).unwrap_err();
+        assert_eq!(err.kind, SignatureErrorKind::Shape);
+        assert!(infer1(&Op::Cumsum { axis: 2 }, &x).unwrap().is_some());
+    }
+
+    #[test]
+    fn data_movement_bounds_are_enforced() {
+        let x = meta(&[2, 3], DType::F32);
+        assert!(infer1(&Op::Transpose { perm: vec![1, 0] }, &x).is_ok());
+        assert!(infer1(&Op::Transpose { perm: vec![0, 0] }, &x).is_err());
+        assert!(infer1(&Op::Slice { starts: vec![0, 1], ends: vec![2, 3] }, &x).is_ok());
+        assert!(infer1(&Op::Slice { starts: vec![0, 1], ends: vec![2, 4] }, &x).is_err());
+        assert!(infer1(&Op::Reshape { shape: vec![6].into() }, &x).is_ok());
+        assert!(infer1(&Op::Reshape { shape: vec![7].into() }, &x).is_err());
+        let out = infer1(&Op::Pad { pads: vec![(1, 0), (0, 2)], value: 0.0 }, &x)
+            .unwrap()
+            .unwrap();
+        assert_eq!(out.shape.dims(), &[3, 5]);
+    }
+
+    #[test]
+    fn conv_pool_require_nchw() {
+        let p = Conv2dParams { stride: (1, 1), padding: (0, 0) };
+        let x = meta(&[1, 2, 5, 5], DType::F32);
+        let w = meta(&[3, 2, 3, 3], DType::F32);
+        let out = infer(&Op::Conv2d(p), &[Some(&x), Some(&w)]).unwrap().unwrap();
+        assert_eq!(out, meta(&[1, 3, 3, 3], DType::F32));
+        let bad_w = meta(&[3, 9, 3, 3], DType::F32); // channel mismatch
+        assert!(infer(&Op::Conv2d(p), &[Some(&x), Some(&bad_w)]).is_err());
+        let pp = Pool2dParams {
+            kind: crate::tensor::backend::PoolKind::Max,
+            kernel: (2, 2),
+            stride: (2, 2),
+        };
+        let out = infer1(&Op::Pool2d(pp), &x).unwrap().unwrap();
+        assert_eq!(out, meta(&[1, 2, 2, 2], DType::F32));
+        assert!(infer1(&Op::Pool2d(pp), &meta(&[5, 5], DType::F32)).is_err());
+    }
+
+    #[test]
+    fn gather_scatter_where() {
+        let x = meta(&[4, 3], DType::F32);
+        let idx = meta(&[2, 3], DType::I64); // any shape: flattened
+        let out =
+            infer(&Op::IndexSelect { axis: 0 }, &[Some(&x), Some(&idx)]).unwrap().unwrap();
+        assert_eq!(out, meta(&[6, 3], DType::F32));
+        let src = meta(&[6, 3], DType::F64);
+        let out = infer(&Op::ScatterAdd, &[Some(&x), Some(&idx), Some(&src)])
+            .unwrap()
+            .unwrap();
+        assert_eq!(out, meta(&[4, 3], DType::F64));
+        let bad_src = meta(&[6, 2], DType::F32);
+        assert!(infer(&Op::ScatterAdd, &[Some(&x), Some(&idx), Some(&bad_src)]).is_err());
+        let cond = meta(&[4, 3], DType::Bool);
+        let out = infer(&Op::WhereCond, &[Some(&cond), Some(&x), Some(&src)])
+            .unwrap()
+            .unwrap();
+        assert_eq!(out, meta(&[4, 3], DType::F64));
+    }
+
+    #[test]
+    fn call_ext_is_opaque() {
+        assert!(infer(&Op::CallExt { name: "x".into() }, &[]).unwrap().is_none());
+        let x = meta(&[2], DType::F32);
+        assert!(infer(&Op::CallExt { name: "x".into() }, &[Some(&x)]).unwrap().is_none());
+    }
+}

@@ -1,0 +1,877 @@
+//! The static graph verifier: whole-program well-formedness checking
+//! over the [`Op`] IR, run between every compiler pass.
+//!
+//! [`verify`] checks a [`Graph`] (and [`verify_program`] a compiled
+//! program) for:
+//!
+//! - **SSA well-formedness** — every reference resolves to an earlier
+//!   definition or a real constant (def-before-use doubles as an
+//!   acyclicity proof, since nodes are kept in topological order);
+//! - **signature validity** — full forward shape/dtype inference via the
+//!   per-op [`signature`] table: every node's operands must satisfy its
+//!   op's arity, dtype, and shape rules, and the inferred metadata flows
+//!   forward as the next node's input facts;
+//! - **effect preservation** — the ordered sequence of effectful ops
+//!   (`rand_*`, `call_ext`; see [`passes::effectful`]) must survive every
+//!   pass exactly, compared against a [`SourceSpec`] snapshot of the
+//!   pre-optimization trace;
+//! - **output stability** — each requested output's shape/dtype must
+//!   match what the source trace produced;
+//! - **fusion legality** — every [`FusedKernel`] step DAG re-checked:
+//!   steps drawn from the fusible ISA with the right arities, interior
+//!   references topological, inputs *provably* f32, interior shapes
+//!   broadcast-compatible;
+//! - **memory-plan soundness** — no two concurrently-live values share a
+//!   slot, nothing is freed before its last reader, outputs are never
+//!   freed, and donation frontiers never retire a constant that is still
+//!   read (or is itself a requested output).
+//!
+//! Failures come back as [`Diagnostic`]s carrying a typed
+//! [`DiagnosticKind`], the offending instruction index and op name, and
+//! the name of the pass after which the invariant first broke — so a
+//! miscompile reads as "`[after cse] ShapeMismatch at instr 3 `add`: …`"
+//! instead of a shape panic deep in the executor.
+//!
+//! Wiring: [`super::compile`] *always* validates the source trace
+//! (fail-closed boundary — a malformed trace is a typed
+//! [`Error::Verify`], not a downstream panic), and re-verifies after
+//! every pass when [`verify_enabled`] (`FL_VERIFY=1`; the fuzz CI jobs
+//! set it unconditionally). The verifier is itself mutation-tested:
+//! `rust/tests/graph_verify.rs` injects seeded miscompiles of every
+//! class above and requires a 100% kill rate with zero false positives
+//! on clean fuzz programs.
+
+use super::super::op::Op;
+use super::super::trace::ValueRef;
+use super::super::{DType, Shape, Tensor};
+use super::fuse::{fusible_arity, FusedArg, FusedKernel};
+use super::signature::{self, SignatureErrorKind, ValueMeta};
+use super::{passes, CompiledInstr, CompiledProgram, Graph};
+use crate::util::error::Error;
+
+/// What kind of invariant a [`Diagnostic`] reports broken.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DiagnosticKind {
+    /// A reference to a nonexistent constant or a not-yet-defined value
+    /// (forward/self reference — an SSA or acyclicity violation).
+    DanglingRef,
+    /// Wrong tensor-input count for an op.
+    Arity,
+    /// An input dtype the consuming op (or fused region) cannot accept.
+    DTypeMismatch,
+    /// Shapes violating an op's shape rule (broadcast, rank, bounds…).
+    ShapeMismatch,
+    /// The ordered effectful-op sequence diverged from the source trace.
+    EffectMismatch,
+    /// A fused region that the fused interpreter cannot soundly evaluate.
+    FusionIllegal,
+    /// Two concurrently-live values assigned the same buffer slot.
+    MemPlanAlias,
+    /// A value freed before its last reader executes.
+    MemPlanUseAfterFree,
+    /// A requested output freed (or not pinned) by the plan.
+    OutputFreed,
+    /// A donation frontier that retires a constant still in use, or one
+    /// that is itself a requested output.
+    DonationUnsafe,
+    /// A requested output whose shape/dtype diverged from the source
+    /// trace's.
+    OutputMismatch,
+    /// A memory plan whose structure doesn't match the program
+    /// (wrong vector lengths, out-of-range or duplicate entries).
+    MemPlanMalformed,
+}
+
+/// One verification failure, with provenance.
+#[derive(Debug, Clone)]
+pub struct Diagnostic {
+    /// The broken invariant.
+    pub kind: DiagnosticKind,
+    /// Offending instruction/node index, when the failure is localized.
+    pub instr: Option<usize>,
+    /// Display name of the offending op (`"fused"`, `"plan"`,
+    /// `"output"` for non-op failures).
+    pub op: &'static str,
+    /// The pass after which the invariant first failed (`"trace"` for
+    /// the source program itself).
+    pub pass: &'static str,
+    /// Human-readable description.
+    pub message: String,
+}
+
+impl std::fmt::Display for Diagnostic {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "[after {}] {:?}", self.pass, self.kind)?;
+        match self.instr {
+            Some(i) => write!(f, " at instr {i} `{}`", self.op)?,
+            None => write!(f, " ({})", self.op)?,
+        }
+        write!(f, ": {}", self.message)
+    }
+}
+
+/// The verifier's result on success: per-value and per-output static
+/// metadata (`None` = unknowable, e.g. downstream of `call_ext`).
+#[derive(Debug, Clone)]
+pub struct VerifiedMeta {
+    /// Inferred metadata per node/instruction, in definition order.
+    pub values: Vec<Option<ValueMeta>>,
+    /// Inferred metadata per requested output, in request order.
+    pub outputs: Vec<Option<ValueMeta>>,
+}
+
+/// What the source trace promised: the invariants every later pass must
+/// preserve. Snapshotted by [`source_spec`] before optimization.
+#[derive(Debug, Clone)]
+pub struct SourceSpec {
+    /// Effectful ops ([`passes::effectful`]) in trace order.
+    pub effects: Vec<Op>,
+    /// Shape/dtype of each requested output (`None` = unknown).
+    pub output_meta: Vec<Option<ValueMeta>>,
+}
+
+/// Whether per-pass verification is switched on (`FL_VERIFY=1`/`true`),
+/// read fresh on every call so tests can toggle it.
+pub fn verify_enabled() -> bool {
+    matches!(std::env::var("FL_VERIFY").ok().as_deref(), Some("1") | Some("true"))
+}
+
+/// Collapse a diagnostic list into the typed [`Error::Verify`] the
+/// compile entry points surface.
+pub fn to_error(diags: &[Diagnostic]) -> Error {
+    Error::Verify(diags.iter().map(|d| d.to_string()).collect::<Vec<_>>().join("; "))
+}
+
+fn const_metas(consts: &[Tensor]) -> Vec<ValueMeta> {
+    consts.iter().map(|t| ValueMeta::new(t.shape().clone(), t.dtype())).collect()
+}
+
+fn kind_of(k: SignatureErrorKind) -> DiagnosticKind {
+    match k {
+        SignatureErrorKind::Arity => DiagnosticKind::Arity,
+        SignatureErrorKind::DType => DiagnosticKind::DTypeMismatch,
+        SignatureErrorKind::Shape => DiagnosticKind::ShapeMismatch,
+    }
+}
+
+/// `Some(why)` if `r` does not resolve under `num_consts` constants and
+/// `limit` already-defined values.
+fn bad_ref(r: &ValueRef, num_consts: usize, limit: usize) -> Option<String> {
+    match r {
+        ValueRef::Const(c) if *c >= num_consts => {
+            Some(format!("const ref {c} out of range ({num_consts} const(s))"))
+        }
+        ValueRef::Out(j) if *j >= limit => {
+            Some(format!("forward/dangling ref to value {j} ({limit} defined so far)"))
+        }
+        _ => None,
+    }
+}
+
+/// Snapshot the invariants of a source trace — validating it in full
+/// first (the fail-closed boundary check: a trace that fails signature
+/// validation never enters the pass pipeline).
+pub fn source_spec(g: &Graph) -> Result<SourceSpec, Vec<Diagnostic>> {
+    let meta = verify(g, None, "trace")?;
+    Ok(SourceSpec {
+        effects: g
+            .nodes
+            .iter()
+            .filter(|n| passes::effectful(&n.op))
+            .map(|n| n.op.clone())
+            .collect(),
+        output_meta: meta.outputs,
+    })
+}
+
+/// Verify a [`Graph`] against the static invariants (and, when `spec` is
+/// given, against the source trace's promises). `pass` names the pass
+/// whose output this graph is, for diagnostic provenance.
+pub fn verify(
+    g: &Graph,
+    spec: Option<&SourceSpec>,
+    pass: &'static str,
+) -> Result<VerifiedMeta, Vec<Diagnostic>> {
+    let const_meta = const_metas(&g.consts);
+    let mut diags: Vec<Diagnostic> = Vec::new();
+    let mut values: Vec<Option<ValueMeta>> = Vec::with_capacity(g.nodes.len());
+    for (i, node) in g.nodes.iter().enumerate() {
+        let name = node.op.name();
+        let mut refs_ok = true;
+        for r in &node.inputs {
+            if let Some(why) = bad_ref(r, g.consts.len(), i) {
+                diags.push(Diagnostic {
+                    kind: DiagnosticKind::DanglingRef,
+                    instr: Some(i),
+                    op: name,
+                    pass,
+                    message: why,
+                });
+                refs_ok = false;
+            }
+        }
+        if !refs_ok {
+            values.push(None);
+            continue;
+        }
+        let meta = {
+            let inputs: Vec<Option<&ValueMeta>> = node
+                .inputs
+                .iter()
+                .map(|r| match r {
+                    ValueRef::Const(c) => Some(&const_meta[*c]),
+                    ValueRef::Out(j) => values[*j].as_ref(),
+                })
+                .collect();
+            match signature::infer(&node.op, &inputs) {
+                Ok(m) => m,
+                Err(e) => {
+                    diags.push(Diagnostic {
+                        kind: kind_of(e.kind),
+                        instr: Some(i),
+                        op: name,
+                        pass,
+                        message: e.message,
+                    });
+                    None
+                }
+            }
+        };
+        values.push(meta);
+    }
+    let outputs = check_output_refs(&g.outputs, g.consts.len(), &const_meta, &values, pass, &mut diags);
+    if let Some(spec) = spec {
+        let effects: Vec<(usize, &Op)> = g
+            .nodes
+            .iter()
+            .enumerate()
+            .filter(|(_, n)| passes::effectful(&n.op))
+            .map(|(i, n)| (i, &n.op))
+            .collect();
+        check_effects(&effects, spec, pass, &mut diags);
+        check_output_meta(&outputs, spec, pass, &mut diags);
+    }
+    if diags.is_empty() {
+        Ok(VerifiedMeta { values, outputs })
+    } else {
+        Err(diags)
+    }
+}
+
+/// Verify a [`CompiledProgram`]: everything [`verify`] checks, plus
+/// fusion legality for every [`FusedKernel`] and soundness of the
+/// attached memory plan.
+pub fn verify_program(
+    p: &CompiledProgram,
+    spec: Option<&SourceSpec>,
+    pass: &'static str,
+) -> Result<VerifiedMeta, Vec<Diagnostic>> {
+    let const_meta = const_metas(&p.consts);
+    let mut diags: Vec<Diagnostic> = Vec::new();
+    let mut values: Vec<Option<ValueMeta>> = Vec::with_capacity(p.instrs.len());
+    for (j, instr) in p.instrs.iter().enumerate() {
+        let name = instr.name();
+        let mut refs_ok = true;
+        for r in instr.inputs() {
+            if let Some(why) = bad_ref(r, p.consts.len(), j) {
+                diags.push(Diagnostic {
+                    kind: DiagnosticKind::DanglingRef,
+                    instr: Some(j),
+                    op: name,
+                    pass,
+                    message: why,
+                });
+                refs_ok = false;
+            }
+        }
+        if !refs_ok {
+            values.push(None);
+            continue;
+        }
+        let meta = match instr {
+            CompiledInstr::Op { op, inputs } => {
+                let im: Vec<Option<&ValueMeta>> = inputs
+                    .iter()
+                    .map(|r| match r {
+                        ValueRef::Const(c) => Some(&const_meta[*c]),
+                        ValueRef::Out(i) => values[*i].as_ref(),
+                    })
+                    .collect();
+                match signature::infer(op, &im) {
+                    Ok(m) => m,
+                    Err(e) => {
+                        diags.push(Diagnostic {
+                            kind: kind_of(e.kind),
+                            instr: Some(j),
+                            op: name,
+                            pass,
+                            message: e.message,
+                        });
+                        None
+                    }
+                }
+            }
+            CompiledInstr::Fused(k) => check_fused(k, j, &const_meta, &values, pass, &mut diags),
+        };
+        values.push(meta);
+    }
+    let outputs = check_output_refs(&p.outputs, p.consts.len(), &const_meta, &values, pass, &mut diags);
+    if let Some(spec) = spec {
+        let effects: Vec<(usize, &Op)> = p
+            .instrs
+            .iter()
+            .enumerate()
+            .filter_map(|(j, instr)| match instr {
+                CompiledInstr::Op { op, .. } if passes::effectful(op) => Some((j, op)),
+                _ => None,
+            })
+            .collect();
+        check_effects(&effects, spec, pass, &mut diags);
+        check_output_meta(&outputs, spec, pass, &mut diags);
+    }
+    check_plan(p, pass, &mut diags);
+    if diags.is_empty() {
+        Ok(VerifiedMeta { values, outputs })
+    } else {
+        Err(diags)
+    }
+}
+
+/// Lenient per-node inference for optimization heuristics (the fusion
+/// pass's provable-f32 gate): invalid nodes infer as unknown instead of
+/// failing — verification proper, not this, reports them.
+pub fn infer_node_meta(g: &Graph) -> Vec<Option<ValueMeta>> {
+    let const_meta = const_metas(&g.consts);
+    let mut values: Vec<Option<ValueMeta>> = Vec::with_capacity(g.nodes.len());
+    for (i, node) in g.nodes.iter().enumerate() {
+        let ok = node
+            .inputs
+            .iter()
+            .all(|r| bad_ref(r, g.consts.len(), i).is_none());
+        let meta = if ok {
+            let inputs: Vec<Option<&ValueMeta>> = node
+                .inputs
+                .iter()
+                .map(|r| match r {
+                    ValueRef::Const(c) => Some(&const_meta[*c]),
+                    ValueRef::Out(j) => values[*j].as_ref(),
+                })
+                .collect();
+            signature::infer(&node.op, &inputs).ok().flatten()
+        } else {
+            None
+        };
+        values.push(meta);
+    }
+    values
+}
+
+/// Resolve output references (flagging dangling ones) into output metas.
+fn check_output_refs(
+    outputs: &[ValueRef],
+    num_consts: usize,
+    const_meta: &[ValueMeta],
+    values: &[Option<ValueMeta>],
+    pass: &'static str,
+    diags: &mut Vec<Diagnostic>,
+) -> Vec<Option<ValueMeta>> {
+    outputs
+        .iter()
+        .enumerate()
+        .map(|(k, r)| match bad_ref(r, num_consts, values.len()) {
+            Some(why) => {
+                diags.push(Diagnostic {
+                    kind: DiagnosticKind::DanglingRef,
+                    instr: None,
+                    op: "output",
+                    pass,
+                    message: format!("output {k}: {why}"),
+                });
+                None
+            }
+            None => match r {
+                ValueRef::Const(c) => Some(const_meta[*c].clone()),
+                ValueRef::Out(i) => values[*i].clone(),
+            },
+        })
+        .collect()
+}
+
+/// The effectful-op sequence must match the source trace's exactly —
+/// same ops (payloads included), same order. Compared syntactically via
+/// the `Debug` form, like CSE's node keys.
+fn check_effects(
+    found: &[(usize, &Op)],
+    spec: &SourceSpec,
+    pass: &'static str,
+    diags: &mut Vec<Diagnostic>,
+) {
+    let want: Vec<String> = spec.effects.iter().map(|o| format!("{o:?}")).collect();
+    let got: Vec<String> = found.iter().map(|(_, o)| format!("{o:?}")).collect();
+    if want == got {
+        return;
+    }
+    let k = want.iter().zip(&got).take_while(|(a, b)| a == b).count();
+    let (instr, op, message) = if k < want.len() && k < got.len() {
+        (
+            Some(found[k].0),
+            found[k].1.name(),
+            format!("effect {k} is `{}`, source trace has `{}`", got[k], want[k]),
+        )
+    } else if k < want.len() {
+        (
+            None,
+            "effect",
+            format!(
+                "effect {k} `{}` from the source trace was dropped ({} of {} survive)",
+                want[k],
+                got.len(),
+                want.len()
+            ),
+        )
+    } else {
+        (
+            Some(found[k].0),
+            found[k].1.name(),
+            format!("extra effect {k} `{}` not present in the source trace", got[k]),
+        )
+    };
+    diags.push(Diagnostic { kind: DiagnosticKind::EffectMismatch, instr, op, pass, message });
+}
+
+/// Requested outputs must keep the shape/dtype the source trace produced
+/// (checked wherever both sides are statically known).
+fn check_output_meta(
+    outputs: &[Option<ValueMeta>],
+    spec: &SourceSpec,
+    pass: &'static str,
+    diags: &mut Vec<Diagnostic>,
+) {
+    if outputs.len() != spec.output_meta.len() {
+        diags.push(Diagnostic {
+            kind: DiagnosticKind::OutputMismatch,
+            instr: None,
+            op: "output",
+            pass,
+            message: format!(
+                "{} output(s), source trace promised {}",
+                outputs.len(),
+                spec.output_meta.len()
+            ),
+        });
+        return;
+    }
+    for (k, (got, want)) in outputs.iter().zip(&spec.output_meta).enumerate() {
+        if let (Some(got), Some(want)) = (got, want) {
+            if got != want {
+                diags.push(Diagnostic {
+                    kind: DiagnosticKind::OutputMismatch,
+                    instr: None,
+                    op: "output",
+                    pass,
+                    message: format!("output {k} is {got}, source trace promised {want}"),
+                });
+            }
+        }
+    }
+}
+
+/// Fusion legality: the step DAG must be evaluable by the fused
+/// interpreter with semantics identical to the unfused ops. Returns the
+/// kernel's output metadata when sound.
+fn check_fused(
+    k: &FusedKernel,
+    j: usize,
+    const_meta: &[ValueMeta],
+    values: &[Option<ValueMeta>],
+    pass: &'static str,
+    diags: &mut Vec<Diagnostic>,
+) -> Option<ValueMeta> {
+    let mut push = |kind: DiagnosticKind, message: String, diags: &mut Vec<Diagnostic>| {
+        diags.push(Diagnostic { kind, instr: Some(j), op: "fused", pass, message });
+    };
+    if k.steps.is_empty() {
+        push(DiagnosticKind::FusionIllegal, "kernel has no steps".to_string(), diags);
+        return None;
+    }
+    // inputs must be *provably* f32 — the fused interpreter evaluates in
+    // f32 unconditionally (caller already bounds-checked the refs)
+    let in_meta: Vec<Option<&ValueMeta>> = k
+        .inputs
+        .iter()
+        .map(|r| match r {
+            ValueRef::Const(c) => Some(&const_meta[*c]),
+            ValueRef::Out(i) => values[*i].as_ref(),
+        })
+        .collect();
+    let mut sound = true;
+    for (i, m) in in_meta.iter().enumerate() {
+        match m {
+            Some(m) if m.dtype != DType::F32 => {
+                push(
+                    DiagnosticKind::DTypeMismatch,
+                    format!(
+                        "kernel input {i} is {}, fused regions are f32-only",
+                        m.dtype.name()
+                    ),
+                    diags,
+                );
+                sound = false;
+            }
+            None => {
+                push(
+                    DiagnosticKind::FusionIllegal,
+                    format!("kernel input {i} is not provably f32 (metadata unknown)"),
+                    diags,
+                );
+                sound = false;
+            }
+            _ => {}
+        }
+    }
+    // step DAG: fusible ops only, right arities, topological references,
+    // broadcast-compatible interior shapes
+    let mut step_shapes: Vec<Option<Shape>> = Vec::with_capacity(k.steps.len());
+    for (s, step) in k.steps.iter().enumerate() {
+        match fusible_arity(&step.op) {
+            Some(a) if a == step.args.len() => {}
+            Some(a) => {
+                push(
+                    DiagnosticKind::FusionIllegal,
+                    format!(
+                        "step {s} `{}` has {} arg(s), needs {a}",
+                        step.op.name(),
+                        step.args.len()
+                    ),
+                    diags,
+                );
+                sound = false;
+                step_shapes.push(None);
+                continue;
+            }
+            None => {
+                push(
+                    DiagnosticKind::FusionIllegal,
+                    format!("step {s} `{}` is not a fusible element-wise op", step.op.name()),
+                    diags,
+                );
+                sound = false;
+                step_shapes.push(None);
+                continue;
+            }
+        }
+        let mut shape: Option<Shape> = None;
+        let mut step_ok = true;
+        for a in &step.args {
+            let arg_shape: Option<Shape> = match a {
+                FusedArg::Input(i) if *i < k.inputs.len() => {
+                    in_meta[*i].map(|m| m.shape.clone())
+                }
+                FusedArg::Input(i) => {
+                    push(
+                        DiagnosticKind::FusionIllegal,
+                        format!(
+                            "step {s}: input arg {i} out of range ({} input(s))",
+                            k.inputs.len()
+                        ),
+                        diags,
+                    );
+                    step_ok = false;
+                    None
+                }
+                FusedArg::Step(t) if *t < s => step_shapes[*t].clone(),
+                FusedArg::Step(t) => {
+                    push(
+                        DiagnosticKind::FusionIllegal,
+                        format!("step {s}: forward/self step ref {t}"),
+                        diags,
+                    );
+                    step_ok = false;
+                    None
+                }
+            };
+            shape = match (shape, arg_shape) {
+                (None, s2) => s2,
+                (s1, None) => s1,
+                (Some(s1), Some(s2)) => match s1.broadcast(&s2) {
+                    Ok(b) => Some(b),
+                    Err(_) => {
+                        push(
+                            DiagnosticKind::FusionIllegal,
+                            format!(
+                                "step {s} `{}`: cannot broadcast {s1} with {s2}",
+                                step.op.name()
+                            ),
+                            diags,
+                        );
+                        step_ok = false;
+                        None
+                    }
+                },
+            };
+        }
+        if !step_ok {
+            sound = false;
+        }
+        step_shapes.push(if step_ok { shape } else { None });
+    }
+    if !sound {
+        return None;
+    }
+    step_shapes
+        .last()
+        .cloned()
+        .flatten()
+        .map(|shape| ValueMeta::new(shape, DType::F32))
+}
+
+/// Memory-plan soundness: replay the plan's free/donate decisions against
+/// the program's actual read positions.
+fn check_plan(p: &CompiledProgram, pass: &'static str, diags: &mut Vec<Diagnostic>) {
+    let plan = &p.plan;
+    let n = p.instrs.len();
+    let nc = p.consts.len();
+    if plan.slot.len() != n
+        || plan.last_use.len() != n
+        || plan.dies_after.len() != n
+        || plan.is_output.len() != n
+        || plan.const_last_use.len() != nc
+    {
+        diags.push(Diagnostic {
+            kind: DiagnosticKind::MemPlanMalformed,
+            instr: None,
+            op: "plan",
+            pass,
+            message: format!(
+                "plan sized for {} instr(s) / {} const(s), program has {n} / {nc}",
+                plan.slot.len(),
+                plan.const_last_use.len()
+            ),
+        });
+        return; // indexing below would be unsafe
+    }
+    // actual last-read positions, from the instruction stream itself
+    let mut last_read: Vec<usize> = (0..n).collect();
+    let mut const_last_read: Vec<Option<usize>> = vec![None; nc];
+    for (j, instr) in p.instrs.iter().enumerate() {
+        for r in instr.inputs() {
+            match r {
+                ValueRef::Out(i) if *i < j => last_read[*i] = last_read[*i].max(j),
+                ValueRef::Const(c) if *c < nc => const_last_read[*c] = Some(j),
+                _ => {} // dangling refs already diagnosed
+            }
+        }
+    }
+    // where the plan frees each value
+    let mut freed_at: Vec<Option<usize>> = vec![None; n];
+    for (j, dead) in plan.dies_after.iter().enumerate() {
+        for &d in dead {
+            if d >= n {
+                diags.push(Diagnostic {
+                    kind: DiagnosticKind::MemPlanMalformed,
+                    instr: None,
+                    op: "plan",
+                    pass,
+                    message: format!("dies_after[{j}] frees unknown value {d}"),
+                });
+                continue;
+            }
+            if let Some(prev) = freed_at[d] {
+                diags.push(Diagnostic {
+                    kind: DiagnosticKind::MemPlanMalformed,
+                    instr: Some(d),
+                    op: p.instrs[d].name(),
+                    pass,
+                    message: format!("value {d} freed twice (after instr {prev} and {j})"),
+                });
+                continue;
+            }
+            freed_at[d] = Some(j);
+        }
+    }
+    // use-after-free: a freed value must have no later reader
+    for i in 0..n {
+        if let Some(j) = freed_at[i] {
+            if j < last_read[i] {
+                diags.push(Diagnostic {
+                    kind: DiagnosticKind::MemPlanUseAfterFree,
+                    instr: Some(i),
+                    op: p.instrs[i].name(),
+                    pass,
+                    message: format!(
+                        "value {i} freed after instr {j} but read by instr {}",
+                        last_read[i]
+                    ),
+                });
+            }
+        }
+    }
+    // outputs stay live to the end of the program
+    for (k, r) in p.outputs.iter().enumerate() {
+        if let ValueRef::Out(i) = r {
+            if *i >= n {
+                continue; // dangling, already diagnosed
+            }
+            if let Some(j) = freed_at[*i] {
+                diags.push(Diagnostic {
+                    kind: DiagnosticKind::OutputFreed,
+                    instr: Some(*i),
+                    op: p.instrs[*i].name(),
+                    pass,
+                    message: format!("output {k} (value {i}) is freed after instr {j}"),
+                });
+            } else if !plan.is_output[*i] {
+                diags.push(Diagnostic {
+                    kind: DiagnosticKind::OutputFreed,
+                    instr: Some(*i),
+                    op: p.instrs[*i].name(),
+                    pass,
+                    message: format!("output {k} (value {i}) is not pinned in the plan"),
+                });
+            }
+        }
+    }
+    // static interference: two values sharing a slot must not be live at
+    // once; a value is live from its definition until the plan frees it
+    // (to the end, if never freed)
+    let free_point = |i: usize| freed_at[i].unwrap_or(n);
+    for a in 0..n {
+        for b in (a + 1)..n {
+            if plan.slot[a] == plan.slot[b] && b <= free_point(a) {
+                diags.push(Diagnostic {
+                    kind: DiagnosticKind::MemPlanAlias,
+                    instr: Some(b),
+                    op: p.instrs[b].name(),
+                    pass,
+                    message: format!(
+                        "slot {} still holds value {a} (live through {}) when value {b} is \
+                         defined",
+                        plan.slot[a],
+                        free_point(a)
+                    ),
+                });
+            }
+        }
+    }
+    // donation frontiers: never retire a constant that is still read, or
+    // one the caller asked back as an output (the executor would return
+    // the stale baked-in tensor instead of the substituted one)
+    for c in 0..nc {
+        let Some(j) = plan.const_last_use[c] else { continue };
+        if j >= n {
+            diags.push(Diagnostic {
+                kind: DiagnosticKind::MemPlanMalformed,
+                instr: None,
+                op: "plan",
+                pass,
+                message: format!("const {c}: donation point {j} out of range ({n} instr(s))"),
+            });
+            continue;
+        }
+        if let Some(last) = const_last_read[c] {
+            if j < last {
+                diags.push(Diagnostic {
+                    kind: DiagnosticKind::DonationUnsafe,
+                    instr: None,
+                    op: "plan",
+                    pass,
+                    message: format!(
+                        "const {c} may be donated after instr {j} but is read by instr {last}"
+                    ),
+                });
+            }
+        }
+        if p.outputs.iter().any(|r| matches!(r, ValueRef::Const(i) if *i == c)) {
+            diags.push(Diagnostic {
+                kind: DiagnosticKind::DonationUnsafe,
+                instr: None,
+                op: "plan",
+                pass,
+                message: format!(
+                    "const {c} is a requested output but has a donation point (instr {j})"
+                ),
+            });
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::super::host::HostBuffer;
+    use super::super::super::trace::{TraceInstr, TraceProgram};
+    use super::*;
+
+    fn fh(data: &[f32], shape: &[usize]) -> Op {
+        Op::FromHost { host: HostBuffer::F32(data.to_vec()), shape: Shape::new(shape.to_vec()) }
+    }
+
+    fn graph(instrs: Vec<(Op, Vec<ValueRef>)>, outputs: &[ValueRef]) -> Graph {
+        let p = TraceProgram {
+            consts: Vec::new(),
+            instrs: instrs.into_iter().map(|(op, inputs)| TraceInstr { op, inputs }).collect(),
+        };
+        Graph {
+            consts: p.consts.clone(),
+            nodes: p
+                .instrs
+                .iter()
+                .map(|i| super::super::Node { op: i.op.clone(), inputs: i.inputs.clone() })
+                .collect(),
+            outputs: outputs.to_vec(),
+        }
+    }
+
+    #[test]
+    fn clean_graph_verifies_and_infers() {
+        let g = graph(
+            vec![
+                (fh(&[1.0, 2.0], &[2, 1]), vec![]),
+                (fh(&[1.0, 2.0, 3.0], &[1, 3]), vec![]),
+                (Op::Add, vec![ValueRef::Out(0), ValueRef::Out(1)]),
+            ],
+            &[ValueRef::Out(2)],
+        );
+        let meta = verify(&g, None, "trace").unwrap();
+        assert_eq!(
+            meta.outputs[0],
+            Some(ValueMeta::new(vec![2, 3], DType::F32))
+        );
+    }
+
+    #[test]
+    fn broken_broadcast_is_flagged_with_provenance() {
+        let g = graph(
+            vec![
+                (fh(&[1.0, 2.0], &[2]), vec![]),
+                (fh(&[1.0, 2.0, 3.0], &[3]), vec![]),
+                (Op::Add, vec![ValueRef::Out(0), ValueRef::Out(1)]),
+            ],
+            &[ValueRef::Out(2)],
+        );
+        let diags = verify(&g, None, "cse").unwrap_err();
+        assert_eq!(diags.len(), 1);
+        assert_eq!(diags[0].kind, DiagnosticKind::ShapeMismatch);
+        assert_eq!(diags[0].instr, Some(2));
+        assert_eq!(diags[0].pass, "cse");
+        assert!(diags[0].to_string().contains("[after cse]"), "{}", diags[0]);
+    }
+
+    #[test]
+    fn dropped_effect_is_flagged() {
+        let rand = Op::RandUniform {
+            shape: Shape::new(vec![2]),
+            lo: 0.0,
+            hi: 1.0,
+            dtype: DType::F32,
+        };
+        let src = graph(
+            vec![(rand.clone(), vec![]), (fh(&[1.0], &[1]), vec![])],
+            &[ValueRef::Out(1)],
+        );
+        let spec = source_spec(&src).unwrap();
+        assert_eq!(spec.effects.len(), 1);
+        let mutated = graph(vec![(fh(&[1.0], &[1]), vec![])], &[ValueRef::Out(0)]);
+        let diags = verify(&mutated, Some(&spec), "dce").unwrap_err();
+        assert!(diags.iter().any(|d| d.kind == DiagnosticKind::EffectMismatch), "{diags:?}");
+    }
+}

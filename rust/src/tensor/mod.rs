@@ -36,7 +36,10 @@ pub use backend::{
     TensorBackend,
 };
 pub use dtype::{DType, Element};
-pub use graph::{trace_and_compile, CompileOptions, CompileReport, CompiledFn, CompiledProgram};
+pub use graph::{
+    trace_and_compile, CompileOptions, CompileReport, CompiledFn, CompiledProgram, Diagnostic,
+    DiagnosticKind, SourceSpec, ValueMeta, VerifiedMeta,
+};
 pub use host::HostBuffer;
 pub use interpose::{InterposedBackend, Interposer};
 pub use op::Op;

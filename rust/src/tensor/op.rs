@@ -24,6 +24,11 @@
 //! - **Creation ops take zero tensor inputs.** Their payload (including
 //!   the full [`HostBuffer`] for `FromHost`) lives in the variant, which
 //!   is what makes captured programs self-contained.
+//! - **Every variant needs a static signature.** The graph verifier's
+//!   signature table ([`super::graph::signature::infer`]) matches
+//!   exhaustively over `Op` with no wildcard arm, exactly like
+//!   [`execute`]: adding a variant without declaring its arity, input
+//!   constraints, and output shape/dtype rule is a compile error.
 
 use super::backend::{Conv2dParams, Pool2dParams, TensorBackend};
 use super::dtype::DType;

@@ -31,6 +31,9 @@ pub enum Error {
     Config(String),
     /// PJRT / XLA runtime failure.
     Runtime(String),
+    /// Static graph verification failure (see `tensor::graph::verify`):
+    /// the joined diagnostics, each carrying kind / op / pass provenance.
+    Verify(String),
     /// I/O error.
     Io(std::io::Error),
     /// Anything else.
@@ -51,6 +54,7 @@ impl std::fmt::Display for Error {
             Error::Serde(m) => write!(f, "serialization error: {m}"),
             Error::Config(m) => write!(f, "config error: {m}"),
             Error::Runtime(m) => write!(f, "runtime error: {m}"),
+            Error::Verify(m) => write!(f, "graph verification failed: {m}"),
             Error::Io(e) => write!(f, "{e}"),
             Error::Msg(m) => f.write_str(m),
         }

@@ -4,6 +4,13 @@
 //! unoptimized trace, once through the full optimization pipeline — and
 //! every requested output must be **bit-identical**.
 //!
+//! The static verifier rides along as an oracle: every generated
+//! program's source graph must pass `verify::source_spec`, and every
+//! compiled program must verify with **zero diagnostics** against that
+//! spec — the false-positive half of the mutation-kill contract proven
+//! in `rust/tests/graph_verify.rs`. (CI additionally runs this suite
+//! with `FL_VERIFY=1`, re-verifying inside `compile` after every pass.)
+//!
 //! Knobs (see docs/ARCHITECTURE.md, "Testing & fuzzing guide"):
 //!
 //! - `GRAPH_FUZZ_CASES`: cases per configuration (default 500 for the
@@ -15,7 +22,7 @@
 //!   `GRAPH_FUZZ_CASES=1` replays exactly the failing program.
 
 use flashlight::tensor::cpu::CpuBackend;
-use flashlight::tensor::graph::{compile, CompileOptions};
+use flashlight::tensor::graph::{compile, verify, CompileOptions, Graph};
 use flashlight::tensor::trace::{TraceInstr, TraceProgram, ValueRef};
 use flashlight::tensor::{DType, HostBuffer, Op, Tensor};
 use flashlight::testutil::prop;
@@ -380,6 +387,16 @@ fn run_config(label: &str, opts: &CompileOptions, cases: usize, master_seed: u64
             .unwrap_or_else(|e| panic!("{}", ctx("reference replay", e.to_string())));
         let compiled = compile(&program, &outputs, opts)
             .unwrap_or_else(|e| panic!("{}", ctx("compile", e.to_string())));
+        // static-verifier oracle: a clean program must verify with zero
+        // diagnostics, source graph and compiled form alike
+        let g = Graph::from_program(&program, &outputs)
+            .unwrap_or_else(|e| panic!("{}", ctx("graph lift", e.to_string())));
+        let spec = verify::source_spec(&g).unwrap_or_else(|d| {
+            panic!("{}", ctx("source verify", format!("{} diagnostic(s): {d:?}", d.len())))
+        });
+        if let Err(d) = verify::verify_program(&compiled, Some(&spec), "pipeline") {
+            panic!("{}", ctx("verify oracle", format!("{} diagnostic(s): {d:?}", d.len())));
+        }
         let got = compiled
             .run(cpu.as_ref())
             .unwrap_or_else(|e| panic!("{}", ctx("optimized run", e.to_string())));

@@ -1,0 +1,821 @@
+//! Mutation testing for the static graph verifier.
+//!
+//! The verifier's contract has two halves, and this suite proves both:
+//!
+//! - **100% kill rate**: every seeded miscompile class below — operand
+//!   rewires, dropped/reordered effects, illegal fusion, memory-plan
+//!   corruption, output swaps — must be flagged by
+//!   [`verify::verify_program`] with the *expected* [`DiagnosticKind`],
+//!   for every generated program where the class applies. A mutant that
+//!   survives fails the test.
+//! - **Zero false positives**: clean programs (random traces compiled
+//!   under every pass configuration, `FL_VERIFY=1` so each pass is also
+//!   re-checked inside `compile`) must verify with zero diagnostics.
+//!
+//! Mutants are built by corrupting a *compiled* clean program the way a
+//! buggy pass would: instruction-level mutants rebuild the memory plan
+//! (the bug is in the dataflow, the plan honestly reflects it), while
+//! plan-level mutants corrupt the plan directly (the dataflow is fine,
+//! the planner lied). Hand-built minimal negatives pin the exact
+//! `(kind, instr)` each diagnostic reports.
+//!
+//! Knobs: `GRAPH_VERIFY_CASES` (cases per sweep, default 120; CI runs
+//! more), `GRAPH_VERIFY_SEED` (pin one case for replay).
+
+use std::collections::BTreeMap;
+
+use flashlight::tensor::graph::fuse::{FusedArg, FusedKernel};
+use flashlight::tensor::graph::memplan::MemoryPlan;
+use flashlight::tensor::graph::verify::{self, DiagnosticKind, SourceSpec, VerifiedMeta};
+use flashlight::tensor::graph::{
+    compile, CompileOptions, CompiledInstr, CompiledProgram, Graph, Node,
+};
+use flashlight::tensor::trace::{TraceInstr, TraceProgram, ValueRef};
+use flashlight::tensor::{DType, HostBuffer, Op, Shape, Tensor};
+use flashlight::util::rng::Rng;
+
+fn env_usize(name: &str, default: usize) -> usize {
+    std::env::var(name).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+// ---------------------------------------------------------------------------
+// program generator
+// ---------------------------------------------------------------------------
+
+fn from_host(rng: &mut Rng, dims: &[usize], salt: f32) -> Op {
+    let n: usize = dims.iter().product();
+    let data: Vec<f32> =
+        (0..n.max(1)).map(|k| salt + k as f32 * 0.25 + rng.below(16) as f32 * 0.01).collect();
+    Op::FromHost { host: HostBuffer::F32(data), shape: Shape::new(dims.to_vec()) }
+}
+
+fn broadcast(a: &[usize], b: &[usize]) -> Option<Vec<usize>> {
+    let r = a.len().max(b.len());
+    let mut out = vec![0usize; r];
+    for i in 0..r {
+        let x = if i < r - a.len() { 1 } else { a[i - (r - a.len())] };
+        let y = if i < r - b.len() { 1 } else { b[i - (r - b.len())] };
+        out[i] = match (x, y) {
+            (x, y) if x == y => x,
+            (1, y) => y,
+            (x, 1) => x,
+            _ => return None,
+        };
+    }
+    Some(out)
+}
+
+/// One random trace around a deterministic skeleton that guarantees
+/// every mutation class below is applicable: f32 seeds of
+/// broadcast-compatible shapes, a `[4]`-shaped outlier (incompatible
+/// with the `[2, 3]` family), a non-f32 value, one dead and one live
+/// effectful op, a fusible element-wise chain through a constant, and a
+/// fusion-breaking reduction before the outputs.
+fn gen_program(rng: &mut Rng) -> (TraceProgram, Vec<ValueRef>) {
+    let mut instrs: Vec<TraceInstr> = Vec::new();
+    let mut push = |instrs: &mut Vec<TraceInstr>, op: Op, inputs: Vec<ValueRef>| -> usize {
+        instrs.push(TraceInstr { op, inputs });
+        instrs.len() - 1
+    };
+    let a = push(&mut instrs, from_host(rng, &[2, 3], 1.0), vec![]);
+    let b = push(&mut instrs, from_host(rng, &[2, 3], 2.0), vec![]);
+    let q = push(&mut instrs, from_host(rng, &[4], 3.0), vec![]); // family outlier
+    let casted = push(&mut instrs, Op::Astype { dtype: DType::I64 }, vec![ValueRef::Out(a)]);
+    let _dead = push(
+        &mut instrs,
+        Op::RandUniform { shape: Shape::new(vec![2, 3]), lo: 0.0, hi: 1.0, dtype: DType::F32 },
+        vec![],
+    );
+    let live = push(
+        &mut instrs,
+        Op::RandUniform { shape: Shape::new(vec![2, 3]), lo: 1.0, hi: 2.0, dtype: DType::F32 },
+        vec![],
+    );
+    let s1 = push(&mut instrs, Op::Add, vec![ValueRef::Out(a), ValueRef::Out(b)]);
+    let s2 = push(&mut instrs, Op::Neg, vec![ValueRef::Out(s1)]);
+    let s3 = push(&mut instrs, Op::Add, vec![ValueRef::Out(s2), ValueRef::Const(0)]);
+    let s4 = push(&mut instrs, Op::Add, vec![ValueRef::Out(live), ValueRef::Out(s3)]);
+    // random tail over the broadcast-compatible f32 pool
+    let mut pool: Vec<(usize, Vec<usize>)> = vec![
+        (a, vec![2, 3]),
+        (b, vec![2, 3]),
+        (live, vec![2, 3]),
+        (s1, vec![2, 3]),
+        (s2, vec![2, 3]),
+        (s3, vec![2, 3]),
+        (s4, vec![2, 3]),
+    ];
+    for _ in 0..rng.below(6) {
+        match rng.below(3) {
+            0 => {
+                // binary over a broadcast-compatible pair (retry a few draws)
+                for _ in 0..10 {
+                    let (x, sx) = pool[rng.below(pool.len())].clone();
+                    let (y, sy) = pool[rng.below(pool.len())].clone();
+                    if let Some(sz) = broadcast(&sx, &sy) {
+                        let op = match rng.below(5) {
+                            0 => Op::Add,
+                            1 => Op::Sub,
+                            2 => Op::Mul,
+                            3 => Op::Maximum,
+                            _ => Op::Minimum,
+                        };
+                        let v =
+                            push(&mut instrs, op, vec![ValueRef::Out(x), ValueRef::Out(y)]);
+                        pool.push((v, sz));
+                        break;
+                    }
+                }
+            }
+            1 => {
+                let (x, sx) = pool[rng.below(pool.len())].clone();
+                let op = match rng.below(3) {
+                    0 => Op::Neg,
+                    1 => Op::Abs,
+                    _ => Op::Exp,
+                };
+                let v = push(&mut instrs, op, vec![ValueRef::Out(x)]);
+                pool.push((v, sx));
+            }
+            _ => {
+                let (x, sx) = pool[rng.below(pool.len())].clone();
+                let ax = rng.below(2);
+                let mut sz = sx.clone();
+                if ax < sz.len() {
+                    sz.remove(ax);
+                }
+                let v = push(
+                    &mut instrs,
+                    Op::Sum { axes: vec![ax], keepdims: false },
+                    vec![ValueRef::Out(x)],
+                );
+                pool.push((v, sz));
+            }
+        }
+    }
+    let red =
+        push(&mut instrs, Op::Sum { axes: vec![0], keepdims: false }, vec![ValueRef::Out(s4)]);
+    let qq = push(&mut instrs, Op::Abs, vec![ValueRef::Out(q)]);
+    let mut outputs = vec![ValueRef::Out(red), ValueRef::Out(qq), ValueRef::Out(casted)];
+    if rng.below(2) == 0 {
+        outputs.push(ValueRef::Out(pool[rng.below(pool.len())].0));
+    }
+    let consts = vec![Tensor::full(vec![2, 3], 0.5, DType::F32)];
+    (TraceProgram { consts, instrs }, outputs)
+}
+
+// ---------------------------------------------------------------------------
+// mutation machinery
+// ---------------------------------------------------------------------------
+
+fn inputs_mut(instr: &mut CompiledInstr) -> &mut Vec<ValueRef> {
+    match instr {
+        CompiledInstr::Op { inputs, .. } => inputs,
+        CompiledInstr::Fused(k) => &mut k.inputs,
+    }
+}
+
+/// Rebuild the plan after an instruction-level mutation: the miscompile
+/// is in the dataflow and the plan honestly reflects it.
+fn rebuild(p: &mut CompiledProgram) {
+    p.plan = MemoryPlan::build(&p.instrs, &p.outputs, p.consts.len());
+}
+
+/// Actual last-read positions (values, constants) from the instruction
+/// stream — what a sound plan must respect.
+fn last_reads(p: &CompiledProgram) -> (Vec<usize>, Vec<Option<usize>>) {
+    let n = p.instrs.len();
+    let mut lr: Vec<usize> = (0..n).collect();
+    let mut clr: Vec<Option<usize>> = vec![None; p.consts.len()];
+    for (j, instr) in p.instrs.iter().enumerate() {
+        for r in instr.inputs() {
+            match r {
+                ValueRef::Out(i) if *i < j => lr[*i] = lr[*i].max(j),
+                ValueRef::Const(c) if *c < p.consts.len() => clr[*c] = Some(j),
+                _ => {}
+            }
+        }
+    }
+    (lr, clr)
+}
+
+fn ref_shape(r: &ValueRef, p: &CompiledProgram, meta: &VerifiedMeta) -> Option<Vec<usize>> {
+    match r {
+        ValueRef::Const(c) => Some(p.consts[*c].dims().to_vec()),
+        ValueRef::Out(i) => meta.values[*i].as_ref().map(|m| m.shape.dims().to_vec()),
+    }
+}
+
+/// Replay the verifier's left-fold broadcast over a kernel's steps with
+/// the given input shapes: `true` if some step fails to broadcast.
+fn fused_fold_fails(k: &FusedKernel, in_shapes: &[Option<Vec<usize>>]) -> bool {
+    let mut steps: Vec<Option<Vec<usize>>> = Vec::with_capacity(k.steps.len());
+    for step in &k.steps {
+        let mut sh: Option<Vec<usize>> = None;
+        for a in &step.args {
+            let s = match a {
+                FusedArg::Input(i) => in_shapes[*i].clone(),
+                FusedArg::Step(t) => steps[*t].clone(),
+            };
+            sh = match (sh, s) {
+                (None, s) => s,
+                (s, None) => s,
+                (Some(x), Some(y)) => match broadcast(&x, &y) {
+                    Some(z) => Some(z),
+                    None => return true,
+                },
+            };
+        }
+        steps.push(sh);
+    }
+    false
+}
+
+/// Rewire a binary op's second operand to an earlier value whose shape
+/// cannot broadcast with the first operand's.
+fn m_rewire_broadcast(p: &CompiledProgram, meta: &VerifiedMeta) -> Option<CompiledProgram> {
+    for (j, instr) in p.instrs.iter().enumerate() {
+        let CompiledInstr::Op { op, inputs } = instr else { continue };
+        if !matches!(op, Op::Add | Op::Sub | Op::Mul | Op::Div | Op::Minimum | Op::Maximum) {
+            continue;
+        }
+        let Some(s0) = ref_shape(&inputs[0], p, meta) else { continue };
+        for i in 0..j {
+            let Some(m) = meta.values[i].as_ref() else { continue };
+            if broadcast(&s0, m.shape.dims()).is_none() {
+                let mut q = p.clone();
+                if let CompiledInstr::Op { inputs, .. } = &mut q.instrs[j] {
+                    inputs[1] = ValueRef::Out(i);
+                }
+                rebuild(&mut q);
+                return Some(q);
+            }
+        }
+    }
+    None
+}
+
+/// Delete a dead effectful op (no readers, not an output) the way an
+/// effect-blind DCE would, remapping every later reference.
+fn m_drop_effect(p: &CompiledProgram) -> Option<CompiledProgram> {
+    'cand: for j in 0..p.instrs.len() {
+        let CompiledInstr::Op { op, .. } = &p.instrs[j] else { continue };
+        if !matches!(op, Op::RandUniform { .. }) {
+            continue;
+        }
+        for instr in &p.instrs {
+            if instr.inputs().iter().any(|r| matches!(r, ValueRef::Out(i) if *i == j)) {
+                continue 'cand;
+            }
+        }
+        if p.outputs.iter().any(|r| matches!(r, ValueRef::Out(i) if *i == j)) {
+            continue;
+        }
+        let mut q = p.clone();
+        q.instrs.remove(j);
+        let remap = |r: &mut ValueRef| {
+            if let ValueRef::Out(i) = r {
+                if *i > j {
+                    *i -= 1;
+                }
+            }
+        };
+        for instr in &mut q.instrs {
+            for r in inputs_mut(instr).iter_mut() {
+                remap(r);
+            }
+        }
+        for r in &mut q.outputs {
+            remap(r);
+        }
+        rebuild(&mut q);
+        return Some(q);
+    }
+    None
+}
+
+/// Perturb an effectful op's payload (a miscompile CSE-style key reuse
+/// could produce): same op kind, different distribution.
+fn m_swap_effect_payload(p: &CompiledProgram) -> Option<CompiledProgram> {
+    for j in 0..p.instrs.len() {
+        if matches!(&p.instrs[j], CompiledInstr::Op { op: Op::RandUniform { .. }, .. }) {
+            let mut q = p.clone();
+            if let CompiledInstr::Op { op: Op::RandUniform { lo, hi, .. }, .. } =
+                &mut q.instrs[j]
+            {
+                *lo -= 1.0;
+                *hi += 1.0;
+            }
+            rebuild(&mut q);
+            return Some(q);
+        }
+    }
+    None
+}
+
+/// Rewire a fused kernel's input to an earlier non-f32 value.
+fn m_fused_nonf32(p: &CompiledProgram, meta: &VerifiedMeta) -> Option<CompiledProgram> {
+    for (j, instr) in p.instrs.iter().enumerate() {
+        let CompiledInstr::Fused(k) = instr else { continue };
+        if k.inputs.is_empty() {
+            continue;
+        }
+        for i in 0..j {
+            let Some(m) = meta.values[i].as_ref() else { continue };
+            if m.dtype != DType::F32 {
+                let mut q = p.clone();
+                if let CompiledInstr::Fused(k) = &mut q.instrs[j] {
+                    k.inputs[0] = ValueRef::Out(i);
+                }
+                rebuild(&mut q);
+                return Some(q);
+            }
+        }
+    }
+    None
+}
+
+/// Rewire a fused kernel's input to an earlier f32 value whose shape
+/// provably breaks the kernel's interior broadcast fold.
+fn m_fused_broadcast(p: &CompiledProgram, meta: &VerifiedMeta) -> Option<CompiledProgram> {
+    for (j, instr) in p.instrs.iter().enumerate() {
+        let CompiledInstr::Fused(k) = instr else { continue };
+        let shapes: Vec<Option<Vec<usize>>> =
+            k.inputs.iter().map(|r| ref_shape(r, p, meta)).collect();
+        for t in 0..k.inputs.len() {
+            for i in 0..j {
+                let Some(m) = meta.values[i].as_ref() else { continue };
+                if m.dtype != DType::F32 {
+                    continue;
+                }
+                let mut sh = shapes.clone();
+                sh[t] = Some(m.shape.dims().to_vec());
+                if fused_fold_fails(k, &sh) {
+                    let mut q = p.clone();
+                    if let CompiledInstr::Fused(k) = &mut q.instrs[j] {
+                        k.inputs[t] = ValueRef::Out(i);
+                    }
+                    rebuild(&mut q);
+                    return Some(q);
+                }
+            }
+        }
+    }
+    None
+}
+
+/// Assign a later value the slot of a value that is live to the end.
+fn m_alias_slot(p: &CompiledProgram) -> Option<CompiledProgram> {
+    let n = p.instrs.len();
+    for a in 0..n {
+        if !p.plan.is_output.get(a).copied().unwrap_or(false) {
+            continue;
+        }
+        for b in a + 1..n {
+            if p.plan.slot[b] != p.plan.slot[a] {
+                let mut q = p.clone();
+                q.plan.slot[b] = p.plan.slot[a];
+                return Some(q);
+            }
+        }
+    }
+    None
+}
+
+/// Rewire output 0 to an existing value with different static metadata.
+fn m_output_swap(p: &CompiledProgram, meta: &VerifiedMeta) -> Option<CompiledProgram> {
+    let want = meta.outputs.first().cloned().flatten()?;
+    for i in 0..p.instrs.len() {
+        if let Some(m) = meta.values[i].as_ref() {
+            if *m != want {
+                let mut q = p.clone();
+                q.outputs[0] = ValueRef::Out(i);
+                rebuild(&mut q);
+                return Some(q);
+            }
+        }
+    }
+    None
+}
+
+/// Move a constant's donation frontier before its last actual read.
+fn m_donate_early(p: &CompiledProgram) -> Option<CompiledProgram> {
+    let (_, clr) = last_reads(p);
+    for (c, r) in clr.iter().enumerate() {
+        if let Some(r) = r {
+            if *r >= 1 {
+                let mut q = p.clone();
+                q.plan.const_last_use[c] = Some(r - 1);
+                return Some(q);
+            }
+        }
+    }
+    None
+}
+
+/// Free a still-read value right after its definition.
+fn m_free_early(p: &CompiledProgram) -> Option<CompiledProgram> {
+    let (lr, _) = last_reads(p);
+    for i in 0..p.instrs.len() {
+        if p.plan.is_output[i] || lr[i] <= i {
+            continue;
+        }
+        let mut q = p.clone();
+        for dead in q.plan.dies_after.iter_mut() {
+            dead.retain(|&x| x != i);
+        }
+        q.plan.dies_after[i].push(i);
+        return Some(q);
+    }
+    None
+}
+
+/// Free a requested output at the end of the program.
+fn m_free_output(p: &CompiledProgram) -> Option<CompiledProgram> {
+    let n = p.instrs.len();
+    for r in &p.outputs {
+        if let ValueRef::Out(i) = r {
+            let mut q = p.clone();
+            q.plan.dies_after[n - 1].push(*i);
+            return Some(q);
+        }
+    }
+    None
+}
+
+/// Point an instruction at its own (not-yet-defined) value.
+fn m_dangling(p: &CompiledProgram) -> Option<CompiledProgram> {
+    for j in 0..p.instrs.len() {
+        if let CompiledInstr::Op { inputs, .. } = &p.instrs[j] {
+            if inputs.is_empty() {
+                continue;
+            }
+            let mut q = p.clone();
+            if let CompiledInstr::Op { inputs, .. } = &mut q.instrs[j] {
+                inputs[0] = ValueRef::Out(j);
+            }
+            rebuild(&mut q);
+            return Some(q);
+        }
+    }
+    None
+}
+
+/// Hand a fixed-arity op an extra (valid) operand.
+fn m_extra_arity(p: &CompiledProgram) -> Option<CompiledProgram> {
+    for j in 1..p.instrs.len() {
+        let CompiledInstr::Op { op, .. } = &p.instrs[j] else { continue };
+        if op.arity().is_none() {
+            continue;
+        }
+        let mut q = p.clone();
+        if let CompiledInstr::Op { inputs, .. } = &mut q.instrs[j] {
+            inputs.push(ValueRef::Out(0));
+        }
+        rebuild(&mut q);
+        return Some(q);
+    }
+    None
+}
+
+/// Structurally corrupt the plan (wrong vector length).
+fn m_malformed_plan(p: &CompiledProgram) -> Option<CompiledProgram> {
+    if p.plan.slot.is_empty() {
+        return None;
+    }
+    let mut q = p.clone();
+    q.plan.slot.pop();
+    Some(q)
+}
+
+fn assert_killed(
+    case: usize,
+    seed: u64,
+    class: &str,
+    p: &CompiledProgram,
+    spec: &SourceSpec,
+    expect: DiagnosticKind,
+) {
+    match verify::verify_program(p, Some(spec), "mutant") {
+        Ok(_) => panic!(
+            "case {case} (seed {seed:#x}): `{class}` miscompile SURVIVED verification \
+             (replay: GRAPH_VERIFY_SEED={seed:#x})"
+        ),
+        Err(diags) => assert!(
+            diags.iter().any(|d| d.kind == expect),
+            "case {case} (seed {seed:#x}): `{class}` was flagged, but never as {expect:?}: \
+             {diags:?}"
+        ),
+    }
+}
+
+fn spec_for(program: &TraceProgram, outputs: &[ValueRef]) -> SourceSpec {
+    let g = Graph::from_program(program, outputs).expect("generated program lifts");
+    verify::source_spec(&g)
+        .unwrap_or_else(|d| panic!("clean trace failed source verification: {d:?}"))
+}
+
+// ---------------------------------------------------------------------------
+// the sweeps
+// ---------------------------------------------------------------------------
+
+/// Every mutation class, applied to every generated program where it is
+/// applicable, must be flagged with the expected diagnostic kind — and
+/// every class must have fired at least once across the sweep.
+#[test]
+fn seeded_miscompiles_are_all_killed() {
+    std::env::set_var("FL_VERIFY", "1");
+    let cases = env_usize("GRAPH_VERIFY_CASES", 120);
+    // a pinned seed replays itself as case 0; the rest of the sweep
+    // derives from it as usual
+    let pinned: Option<u64> = std::env::var("GRAPH_VERIFY_SEED").ok().and_then(|v| {
+        let v = v.trim();
+        v.strip_prefix("0x")
+            .map(|h| u64::from_str_radix(h, 16).ok())
+            .unwrap_or_else(|| v.parse().ok())
+    });
+    let mut master = Rng::new(pinned.unwrap_or(0x5EED_F00D));
+    let mut applied: BTreeMap<&'static str, usize> = BTreeMap::new();
+    for case in 0..cases {
+        let seed = match pinned {
+            Some(s) if case == 0 => s,
+            _ => master.next_u64(),
+        };
+        let mut rng = Rng::new(seed);
+        let (program, outputs) = gen_program(&mut rng);
+        let spec = spec_for(&program, &outputs);
+        // fold off so the generator's skeleton survives into both
+        // compiled forms; the clean sweep below covers fold
+        let nofuse = CompileOptions { fold: false, fuse: false, ..Default::default() };
+        let fused = CompileOptions { fold: false, ..Default::default() };
+        let p_op = compile(&program, &outputs, &nofuse)
+            .unwrap_or_else(|e| panic!("case {case} (seed {seed:#x}): compile(nofuse): {e}"));
+        let p_fz = compile(&program, &outputs, &fused)
+            .unwrap_or_else(|e| panic!("case {case} (seed {seed:#x}): compile(fuse): {e}"));
+        let meta_op = verify::verify_program(&p_op, Some(&spec), "clean")
+            .unwrap_or_else(|d| panic!("case {case} (seed {seed:#x}): clean nofuse: {d:?}"));
+        let meta_fz = verify::verify_program(&p_fz, Some(&spec), "clean")
+            .unwrap_or_else(|d| panic!("case {case} (seed {seed:#x}): clean fused: {d:?}"));
+
+        use DiagnosticKind::*;
+        let classes: Vec<(&'static str, Option<CompiledProgram>, DiagnosticKind)> = vec![
+            ("rewire-broadcast", m_rewire_broadcast(&p_op, &meta_op), ShapeMismatch),
+            ("drop-effect", m_drop_effect(&p_op), EffectMismatch),
+            ("swap-effect-payload", m_swap_effect_payload(&p_op), EffectMismatch),
+            ("fused-nonf32-input", m_fused_nonf32(&p_fz, &meta_fz), DTypeMismatch),
+            ("fused-broken-broadcast", m_fused_broadcast(&p_fz, &meta_fz), FusionIllegal),
+            ("alias-live-slot", m_alias_slot(&p_fz), MemPlanAlias),
+            ("output-swap", m_output_swap(&p_op, &meta_op), OutputMismatch),
+            ("donate-early", m_donate_early(&p_fz), DonationUnsafe),
+            ("free-early", m_free_early(&p_fz), MemPlanUseAfterFree),
+            ("free-output", m_free_output(&p_fz), OutputFreed),
+            ("dangling-self-ref", m_dangling(&p_op), DanglingRef),
+            ("extra-operand", m_extra_arity(&p_op), Arity),
+            ("truncated-plan", m_malformed_plan(&p_fz), MemPlanMalformed),
+        ];
+        for (name, mutant, expect) in classes {
+            if let Some(m) = mutant {
+                assert_killed(case, seed, name, &m, &spec, expect);
+                *applied.entry(name).or_insert(0) += 1;
+            }
+        }
+    }
+    // the skeleton makes every class applicable in every case; if one
+    // never fired, the sweep silently lost coverage
+    for name in [
+        "rewire-broadcast",
+        "drop-effect",
+        "swap-effect-payload",
+        "fused-nonf32-input",
+        "fused-broken-broadcast",
+        "alias-live-slot",
+        "output-swap",
+        "donate-early",
+        "free-early",
+        "free-output",
+        "dangling-self-ref",
+        "extra-operand",
+        "truncated-plan",
+    ] {
+        assert!(
+            applied.get(name).copied().unwrap_or(0) > 0,
+            "mutation class `{name}` never applied — coverage lost ({applied:?})"
+        );
+    }
+}
+
+/// Clean programs compiled under every pass configuration verify with
+/// zero diagnostics — and `FL_VERIFY=1` means `compile` itself already
+/// re-verified after every pass.
+#[test]
+fn clean_programs_verify_with_zero_diagnostics() {
+    std::env::set_var("FL_VERIFY", "1");
+    let cases = env_usize("GRAPH_VERIFY_CASES", 120);
+    let configs: Vec<(&str, CompileOptions)> = vec![
+        ("full", CompileOptions::default()),
+        ("none", CompileOptions::none()),
+        ("dce", CompileOptions::only("dce")),
+        ("fold", CompileOptions::only("fold")),
+        ("cse", CompileOptions::only("cse")),
+        ("fuse", CompileOptions::only("fuse")),
+    ];
+    let mut master = Rng::new(0x7E57_CA5E_5EED);
+    for case in 0..cases {
+        let seed = master.next_u64();
+        let mut rng = Rng::new(seed);
+        let (program, outputs) = gen_program(&mut rng);
+        let spec = spec_for(&program, &outputs);
+        for (label, opts) in &configs {
+            let p = compile(&program, &outputs, opts).unwrap_or_else(|e| {
+                panic!("case {case} (seed {seed:#x}) config `{label}`: compile: {e}")
+            });
+            if let Err(d) = verify::verify_program(&p, Some(&spec), "clean") {
+                panic!(
+                    "case {case} (seed {seed:#x}) config `{label}`: FALSE POSITIVE \
+                     ({} diagnostic(s)): {d:?}",
+                    d.len()
+                );
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// hand-built minimal negatives: exact (kind, instr) per diagnostic
+// ---------------------------------------------------------------------------
+
+fn fh(data: &[f32], dims: &[usize]) -> Op {
+    Op::FromHost { host: HostBuffer::F32(data.to_vec()), shape: Shape::new(dims.to_vec()) }
+}
+
+fn graph_of(instrs: Vec<(Op, Vec<ValueRef>)>, outputs: &[ValueRef]) -> Graph {
+    Graph {
+        consts: Vec::new(),
+        nodes: instrs.into_iter().map(|(op, inputs)| Node { op, inputs }).collect(),
+        outputs: outputs.to_vec(),
+    }
+}
+
+#[test]
+fn hand_built_graph_negatives_pin_kind_and_instr() {
+    std::env::set_var("FL_VERIFY", "1");
+    // self-reference: SSA violation at the exact node
+    let g = graph_of(
+        vec![(fh(&[1.0], &[1]), vec![]), (Op::Neg, vec![ValueRef::Out(1)])],
+        &[ValueRef::Out(1)],
+    );
+    let d = verify::verify(&g, None, "t").unwrap_err();
+    assert_eq!((d[0].kind, d[0].instr), (DiagnosticKind::DanglingRef, Some(1)), "{d:?}");
+
+    // wrong operand count
+    let g = graph_of(
+        vec![(fh(&[1.0], &[1]), vec![]), (Op::Neg, vec![ValueRef::Out(0), ValueRef::Out(0)])],
+        &[ValueRef::Out(1)],
+    );
+    let d = verify::verify(&g, None, "t").unwrap_err();
+    assert_eq!((d[0].kind, d[0].instr), (DiagnosticKind::Arity, Some(1)), "{d:?}");
+
+    // broadcast-incompatible binary
+    let g = graph_of(
+        vec![
+            (fh(&[1.0, 2.0], &[2]), vec![]),
+            (fh(&[1.0, 2.0, 3.0], &[3]), vec![]),
+            (Op::Mul, vec![ValueRef::Out(0), ValueRef::Out(1)]),
+        ],
+        &[ValueRef::Out(2)],
+    );
+    let d = verify::verify(&g, None, "t").unwrap_err();
+    assert_eq!((d[0].kind, d[0].instr), (DiagnosticKind::ShapeMismatch, Some(2)), "{d:?}");
+
+    // effect payload divergence at the exact surviving instruction
+    let rand = |lo: f64| Op::RandUniform {
+        shape: Shape::new(vec![2]),
+        lo,
+        hi: lo + 1.0,
+        dtype: DType::F32,
+    };
+    let src = graph_of(vec![(rand(0.0), vec![]), (rand(5.0), vec![])], &[ValueRef::Out(1)]);
+    let spec = verify::source_spec(&src).unwrap();
+    let swapped =
+        graph_of(vec![(rand(5.0), vec![]), (rand(0.0), vec![])], &[ValueRef::Out(1)]);
+    let d = verify::verify(&swapped, Some(&spec), "t").unwrap_err();
+    assert_eq!((d[0].kind, d[0].instr), (DiagnosticKind::EffectMismatch, Some(0)), "{d:?}");
+
+    // output dtype drifted from the source trace's promise
+    let src = graph_of(vec![(fh(&[1.0, 2.0], &[2]), vec![])], &[ValueRef::Out(0)]);
+    let spec = verify::source_spec(&src).unwrap();
+    let drifted = graph_of(
+        vec![
+            (fh(&[1.0, 2.0], &[2]), vec![]),
+            (Op::Astype { dtype: DType::I64 }, vec![ValueRef::Out(0)]),
+        ],
+        &[ValueRef::Out(1)],
+    );
+    let d = verify::verify(&drifted, Some(&spec), "t").unwrap_err();
+    assert_eq!((d[0].kind, d[0].instr), (DiagnosticKind::OutputMismatch, None), "{d:?}");
+}
+
+#[test]
+fn hand_built_program_negatives_pin_kind() {
+    std::env::set_var("FL_VERIFY", "1");
+    // a: fh [2,3]; b: fh [2,3]; fused { (a + const) + b, neg } — one
+    // kernel over two traced values and one constant
+    let program = TraceProgram {
+        consts: vec![Tensor::full(vec![2, 3], 1.0, DType::F32)],
+        instrs: vec![
+            TraceInstr { op: fh(&[1.0; 6], &[2, 3]), inputs: vec![] },
+            TraceInstr { op: fh(&[2.0; 6], &[2, 3]), inputs: vec![] },
+            TraceInstr { op: Op::Add, inputs: vec![ValueRef::Out(0), ValueRef::Const(0)] },
+            TraceInstr { op: Op::Add, inputs: vec![ValueRef::Out(2), ValueRef::Out(1)] },
+            TraceInstr { op: Op::Neg, inputs: vec![ValueRef::Out(3)] },
+        ],
+    };
+    let outputs = vec![ValueRef::Out(4)];
+    let spec = spec_for(&program, &outputs);
+    let opts = CompileOptions { fold: false, ..Default::default() };
+    let p = compile(&program, &outputs, &opts).unwrap();
+    verify::verify_program(&p, Some(&spec), "clean").expect("base program is clean");
+    let j = p
+        .instrs
+        .iter()
+        .position(|i| matches!(i, CompiledInstr::Fused(_)))
+        .expect("the element-wise chain fused into a kernel");
+    let kernel_value_input = {
+        let CompiledInstr::Fused(k) = &p.instrs[j] else { unreachable!() };
+        *k.inputs
+            .iter()
+            .find_map(|r| match r {
+                ValueRef::Out(i) => Some(i),
+                ValueRef::Const(_) => None,
+            })
+            .expect("kernel reads a traced value")
+    };
+    let n = p.instrs.len();
+
+    // forward step reference inside the kernel
+    let mut q = p.clone();
+    if let CompiledInstr::Fused(k) = &mut q.instrs[j] {
+        k.steps[1].args[0] = FusedArg::Step(usize::MAX);
+    }
+    let d = verify::verify_program(&q, Some(&spec), "t").unwrap_err();
+    assert!(
+        d.iter().any(|x| x.kind == DiagnosticKind::FusionIllegal && x.instr == Some(j)),
+        "{d:?}"
+    );
+
+    // a kernel input that is no longer f32
+    let mut q = p.clone();
+    q.instrs[kernel_value_input] = CompiledInstr::Op {
+        op: Op::Full { shape: Shape::new(vec![2, 3]), value: 0.0, dtype: DType::I64 },
+        inputs: vec![],
+    };
+    let d = verify::verify_program(&q, Some(&spec), "t").unwrap_err();
+    assert!(
+        d.iter().any(|x| x.kind == DiagnosticKind::DTypeMismatch && x.instr == Some(j)),
+        "{d:?}"
+    );
+
+    // the kernel output takes the slot of a value it still reads
+    let mut q = p.clone();
+    q.plan.slot[j] = q.plan.slot[kernel_value_input];
+    let d = verify::verify_program(&q, Some(&spec), "t").unwrap_err();
+    assert!(
+        d.iter().any(|x| x.kind == DiagnosticKind::MemPlanAlias && x.instr == Some(j)),
+        "{d:?}"
+    );
+
+    // a kernel input freed before the kernel runs
+    let mut q = p.clone();
+    for dead in q.plan.dies_after.iter_mut() {
+        dead.retain(|&x| x != kernel_value_input);
+    }
+    q.plan.dies_after[kernel_value_input].push(kernel_value_input);
+    let d = verify::verify_program(&q, Some(&spec), "t").unwrap_err();
+    assert!(
+        d.iter().any(|x| {
+            x.kind == DiagnosticKind::MemPlanUseAfterFree && x.instr == Some(kernel_value_input)
+        }),
+        "{d:?}"
+    );
+
+    // the requested output freed at the end of the program
+    let mut q = p.clone();
+    q.plan.dies_after[n - 1].push(j);
+    let d = verify::verify_program(&q, Some(&spec), "t").unwrap_err();
+    assert!(
+        d.iter().any(|x| x.kind == DiagnosticKind::OutputFreed && x.instr == Some(j)),
+        "{d:?}"
+    );
+
+    // the constant donated before the kernel reads it
+    let mut q = p.clone();
+    q.plan.const_last_use[0] = Some(j - 1);
+    let d = verify::verify_program(&q, Some(&spec), "t").unwrap_err();
+    assert!(d.iter().any(|x| x.kind == DiagnosticKind::DonationUnsafe), "{d:?}");
+
+    // a free list pointing at a value that does not exist
+    let mut q = p.clone();
+    q.plan.dies_after[0].push(usize::MAX);
+    let d = verify::verify_program(&q, Some(&spec), "t").unwrap_err();
+    assert!(d.iter().any(|x| x.kind == DiagnosticKind::MemPlanMalformed), "{d:?}");
+}

@@ -80,6 +80,11 @@ fn gen_request(rng: &mut Rng, vocab: usize, max_len: usize, i: usize) -> Req {
 }
 
 fn run_fuzz(cases: usize, master_seed: u64, pinned: bool) {
+    // every compile in the sweep (prefill buckets, decode step, solo
+    // replays) re-runs the static verifier after each optimization pass:
+    // a serving-path miscompile surfaces as a typed diagnostic here, not
+    // as a parity mismatch three layers later
+    std::env::set_var("FL_VERIFY", "1");
     let mut master = Rng::new(master_seed);
     for case in 0..cases {
         // a pinned (SERVE_FUZZ_SEED) value replays itself as case 0; the
