@@ -4,11 +4,14 @@
 //! overhead, and the graph compiler's fused-vs-eager element-wise chain
 //! (with op/buffer counts per optimization pass).
 //!
-//! Besides the human-readable report, the run writes a machine-readable
-//! `BENCH_PR3.json` at the repo root
+//! Besides the human-readable report, the run writes machine-readable
+//! JSON at the repo root
 //! (`[{"op", "ns_per_iter", "backend", ...extras}, ...]`), replacing any
-//! previous run's file; the perf trajectory accumulates across PRs via
-//! version control, one snapshot per PR.
+//! previous run's files; the perf trajectory accumulates across PRs via
+//! version control, one snapshot per PR: `BENCH_PR3.json` (the original
+//! hot-path set) and `BENCH_PR8.json` (fused-kernel execution engines:
+//! interpreted walk vs blockwise vs eager, with an in-run bit-identity
+//! check — CI's regression guard reads this file).
 //!
 //! Run: `cargo bench --bench perf_micro`
 
@@ -134,6 +137,106 @@ fn main() {
     graph_compiler_bench(&mut records);
 
     write_bench_json("BENCH_PR3.json", &records);
+
+    let mut pr8: Vec<Record> = Vec::new();
+    fused_exec_bench(&mut pr8);
+    write_bench_json("BENCH_PR8.json", &pr8);
+}
+
+/// Fused-kernel execution engines head to head (the PR-8 acceptance
+/// metric): the blockwise engine must beat the per-element interpreted
+/// walk on the fused element-wise chain, target ≥2× elements/s. Also
+/// asserts the two engines agree bit-for-bit on this input before timing.
+fn fused_exec_bench(records: &mut Vec<Record>) {
+    use flashlight::tensor::cpu::CpuBackend;
+    use flashlight::tensor::graph::{compile, CompileOptions, CompiledInstr};
+    use flashlight::tensor::{BackendGuard, TraceBackend};
+
+    println!("\n-- fused-kernel execution: interpreted vs blockwise vs eager (1M f32, 6 ops) --");
+    let n = 1 << 20;
+    let a = Tensor::rand([n], -2.0, 2.0);
+    let b = Tensor::rand([n], 0.1, 2.0);
+    let chain = |x: &Tensor, y: &Tensor| x.add(y).mul(x).tanh().sub(y).abs().sqrt();
+
+    // capture + compile the chain with frozen consts, then pull out the
+    // single fused kernel the pipeline produced
+    let tracer = TraceBackend::over_cpu_default();
+    let root = {
+        let _g = BackendGuard::install(tracer.clone());
+        let out = chain(&a, &b);
+        tracer.interposer().value_ref_of(&out).expect("chain result not traced")
+    };
+    let raw = tracer.interposer().program();
+    let frozen = CompileOptions {
+        frozen_consts: [&a, &b]
+            .iter()
+            .map(|t| tracer.interposer().const_index_of(t).expect("operand not in const pool"))
+            .collect(),
+        ..Default::default()
+    };
+    let opt = compile(&raw, &[root], &frozen).expect("pipeline failed");
+    let kernel = opt
+        .instrs
+        .iter()
+        .find_map(|i| match i {
+            CompiledInstr::Fused(k) => Some(k),
+            _ => None,
+        })
+        .expect("chain must fuse into one kernel");
+    let args: Vec<&Tensor> = kernel
+        .inputs
+        .iter()
+        .map(|r| match r {
+            flashlight::tensor::ValueRef::Const(c) => &opt.consts[*c],
+            other => panic!("chain kernel input should be a const, got {other:?}"),
+        })
+        .collect();
+    let cpu = CpuBackend::shared();
+
+    // bit-identity sanity before timing anything
+    let blk = kernel.execute_blockwise(cpu.as_ref(), &args).unwrap().to_vec();
+    let interp = kernel.execute_interpreted(cpu.as_ref(), &args).unwrap().to_vec();
+    assert_eq!(blk.len(), interp.len());
+    for i in 0..blk.len() {
+        assert_eq!(blk[i].to_bits(), interp[i].to_bits(), "engine mismatch at element {i}");
+    }
+
+    let eager_t = Samples::collect(1, 5, || {
+        std::hint::black_box(chain(&a, &b).to_vec());
+    });
+    let interp_t = Samples::collect(1, 5, || {
+        std::hint::black_box(kernel.execute_interpreted(cpu.as_ref(), &args).unwrap().to_vec());
+    });
+    let block_t = Samples::collect(1, 5, || {
+        std::hint::black_box(kernel.execute_blockwise(cpu.as_ref(), &args).unwrap().to_vec());
+    });
+
+    let eps = |secs: f64| n as f64 / secs;
+    println!(
+        "  eager {:.2} ms | interpreted {:.2} ms | blockwise {:.2} ms",
+        eager_t.median() * 1e3,
+        interp_t.median() * 1e3,
+        block_t.median() * 1e3
+    );
+    println!(
+        "  blockwise: {:.1} Melem/s ({:.2}x vs interpreted, {:.2}x vs eager)",
+        eps(block_t.median()) / 1e6,
+        interp_t.median() / block_t.median(),
+        eager_t.median() / block_t.median()
+    );
+
+    let mut rec = Record::new("fused_chain6_1m_eager", eager_t.median() * 1e9, "cpu");
+    rec.extras.push(("elements_per_s", eps(eager_t.median())));
+    records.push(rec);
+    let mut rec = Record::new("fused_chain6_1m_interp", interp_t.median() * 1e9, "fused-interp");
+    rec.extras.push(("elements_per_s", eps(interp_t.median())));
+    records.push(rec);
+    let mut rec =
+        Record::new("fused_chain6_1m_blockwise", block_t.median() * 1e9, "fused-blockwise");
+    rec.extras.push(("elements_per_s", eps(block_t.median())));
+    rec.extras.push(("speedup_vs_interp", interp_t.median() / block_t.median()));
+    rec.extras.push(("speedup_vs_eager", eager_t.median() / block_t.median()));
+    records.push(rec);
 }
 
 /// Fused-vs-eager element-wise chain through the graph compiler, with

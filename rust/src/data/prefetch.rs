@@ -4,12 +4,33 @@
 //! `PrefetchDataset` keeps a sliding window of in-flight samples computed
 //! by a worker pool, so expensive transforms (augmentation, featurization)
 //! overlap with training compute.
+//!
+//! A panic inside `Dataset::get` on a worker is caught and surfaced as a
+//! typed error naming the failed sample (via [`PrefetchIter::try_next`];
+//! the plain [`Iterator`] re-panics with the same label). The pool
+//! survives the failure, so iteration can continue past a bad sample.
 
 use std::collections::HashMap;
 use std::sync::mpsc;
 use std::sync::Arc;
 
 use super::{Dataset, Sample};
+use crate::util::error::{Error, Result};
+
+/// What a worker sends back per sample: the sample, or the panic message
+/// from the inner dataset's `get`.
+type WorkerItem = std::result::Result<Sample, String>;
+
+/// Best-effort extraction of a panic payload's message.
+fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
 
 /// Sequential-access prefetcher: wraps an inner dataset and computes up to
 /// `ahead` samples in advance on `workers` threads.
@@ -31,7 +52,7 @@ impl PrefetchDataset {
         let n = self.inner.len();
         let (task_tx, task_rx) = mpsc::channel::<usize>();
         let task_rx = Arc::new(std::sync::Mutex::new(task_rx));
-        let (done_tx, done_rx) = mpsc::channel::<(usize, Sample)>();
+        let (done_tx, done_rx) = mpsc::channel::<(usize, WorkerItem)>();
         let mut handles = Vec::new();
         for _ in 0..self.workers {
             let rx = task_rx.clone();
@@ -42,7 +63,14 @@ impl PrefetchDataset {
                     let idx = { rx.lock().unwrap().recv() };
                     match idx {
                         Ok(i) => {
-                            if tx.send((i, ds.get(i))).is_err() {
+                            // a panicking transform must not kill the
+                            // worker (or surface as an opaque channel
+                            // disconnect): catch it and ship the message
+                            let sample = std::panic::catch_unwind(
+                                std::panic::AssertUnwindSafe(|| ds.get(i)),
+                            )
+                            .map_err(|p| panic_message(p.as_ref()));
+                            if tx.send((i, sample)).is_err() {
                                 break;
                             }
                         }
@@ -85,32 +113,59 @@ pub struct PrefetchIter {
     next: usize,
     submitted: usize,
     task_tx: Option<mpsc::Sender<usize>>,
-    done_rx: mpsc::Receiver<(usize, Sample)>,
-    ready: HashMap<usize, Sample>,
+    done_rx: mpsc::Receiver<(usize, WorkerItem)>,
+    ready: HashMap<usize, WorkerItem>,
     handles: Vec<std::thread::JoinHandle<()>>,
 }
 
-impl Iterator for PrefetchIter {
-    type Item = Sample;
-
-    fn next(&mut self) -> Option<Sample> {
+impl PrefetchIter {
+    /// Like [`Iterator::next`], but a worker panic comes back as a typed
+    /// error naming the failed sample index and the original panic
+    /// message. The pool stays alive, so calling again continues with the
+    /// next sample.
+    pub fn try_next(&mut self) -> Option<Result<Sample>> {
         if self.next >= self.n {
             return None;
         }
         // drain completions until the in-order sample arrives
         while !self.ready.contains_key(&self.next) {
-            let (i, s) = self.done_rx.recv().expect("prefetch worker died");
-            self.ready.insert(i, s);
+            match self.done_rx.recv() {
+                Ok((i, s)) => {
+                    self.ready.insert(i, s);
+                }
+                Err(_) => {
+                    let i = self.next;
+                    self.next += 1;
+                    return Some(Err(Error::msg(format!(
+                        "prefetch: worker pool disconnected before sample {i} was produced"
+                    ))));
+                }
+            }
         }
-        let out = self.ready.remove(&self.next).unwrap();
+        let idx = self.next;
+        let item = self.ready.remove(&idx).unwrap();
         self.next += 1;
+        // keep the pipeline full even when this sample failed
         if self.submitted < self.n {
             if let Some(tx) = &self.task_tx {
                 tx.send(self.submitted).ok();
                 self.submitted += 1;
             }
         }
-        Some(out)
+        Some(item.map_err(|cause| {
+            Error::msg(format!("prefetch: worker panicked computing sample {idx}: {cause}"))
+        }))
+    }
+}
+
+impl Iterator for PrefetchIter {
+    type Item = Sample;
+
+    /// Panics with a labeled message (sample index + original cause) if a
+    /// worker panicked; use [`PrefetchIter::try_next`] to handle the
+    /// failure as a typed error instead.
+    fn next(&mut self) -> Option<Sample> {
+        self.try_next().map(|r| r.unwrap_or_else(|e| panic!("{e}")))
     }
 }
 
@@ -175,5 +230,49 @@ mod tests {
         let mut it = pf.iter();
         let _ = it.next();
         drop(it); // must not hang or panic
+    }
+
+    /// A dataset whose transform panics on one specific sample.
+    fn bomb_dataset(n: usize, bad: f32) -> PrefetchDataset {
+        let x = Tensor::arange(n, DType::F32).reshape(&[n as isize, 1]);
+        let bomb = TransformDataset::new(Arc::new(TensorDataset::new(vec![x])), move |s| {
+            if s[0].to_vec()[0] == bad {
+                panic!("augmentation exploded");
+            }
+            s
+        });
+        PrefetchDataset::new(Arc::new(bomb), 2, 4)
+    }
+
+    #[test]
+    fn worker_panic_surfaces_a_labeled_error_and_pool_survives() {
+        let pf = bomb_dataset(8, 3.0);
+        let mut it = pf.iter();
+        for i in 0..3 {
+            let s = it.try_next().unwrap().unwrap();
+            assert_eq!(s[0].to_vec()[0], i as f32);
+        }
+        let err = it.try_next().unwrap().unwrap_err().to_string();
+        assert!(err.contains("sample 3"), "error must name the sample index: {err}");
+        assert!(err.contains("augmentation exploded"), "error must carry the cause: {err}");
+        // the pool survived the panic: the remaining samples still arrive
+        // in order
+        let mut rest = Vec::new();
+        while let Some(r) = it.try_next() {
+            rest.push(r.unwrap()[0].to_vec()[0]);
+        }
+        assert_eq!(rest, vec![4.0, 5.0, 6.0, 7.0]);
+    }
+
+    #[test]
+    fn iterator_panic_is_labeled() {
+        let pf = bomb_dataset(6, 2.0);
+        let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            for _ in pf.iter() {}
+        }))
+        .unwrap_err();
+        let msg = panic_message(caught.as_ref());
+        assert!(msg.contains("sample 2"), "panic must name the sample: {msg}");
+        assert!(msg.contains("augmentation exploded"), "panic must carry the cause: {msg}");
     }
 }

@@ -99,27 +99,45 @@ where
         return out;
     }
 
-    // general case: strided odometer walk (serial; rare in practice)
+    // general case: strided odometer walk, parallelized by seeding each
+    // chunk's odometer from its base linear index (the same base-seeded
+    // scheme as the blockwise fused-kernel engine in `graph/fuse_exec`);
+    // every element is independent, so the split cannot change any value
+    if n == 0 {
+        // a zero dim makes some row-major strides 0; the base-index
+        // decomposition below would divide by them
+        return out;
+    }
     let sa = ash.broadcast_strides(out_shape).expect("map2 lhs not broadcastable");
     let sb = bsh.broadcast_strides(out_shape).expect("map2 rhs not broadcastable");
-    let dims = out_shape.dims();
+    let dims = out_shape.dims().to_vec();
     let rank = dims.len();
-    let mut idx = vec![0usize; rank];
-    let (mut oa, mut ob) = (0usize, 0usize);
-    for slot in out.as_mut_slice().iter_mut() {
-        *slot = f(a[oa], b[ob]);
-        for d in (0..rank).rev() {
-            idx[d] += 1;
-            oa += sa[d];
-            ob += sb[d];
-            if idx[d] < dims[d] {
-                break;
-            }
-            idx[d] = 0;
-            oa -= sa[d] * dims[d];
-            ob -= sb[d] * dims[d];
+    let rs = out_shape.strides();
+    parallel_fill(out.as_mut_slice(), PAR_THRESHOLD, |base, chunk| {
+        let mut idx = vec![0usize; rank];
+        let (mut oa, mut ob) = (0usize, 0usize);
+        let mut rem = base;
+        for d in 0..rank {
+            idx[d] = rem / rs[d];
+            rem %= rs[d];
+            oa += idx[d] * sa[d];
+            ob += idx[d] * sb[d];
         }
-    }
+        for slot in chunk.iter_mut() {
+            *slot = f(a[oa], b[ob]);
+            for d in (0..rank).rev() {
+                idx[d] += 1;
+                oa += sa[d];
+                ob += sb[d];
+                if idx[d] < dims[d] {
+                    break;
+                }
+                idx[d] = 0;
+                oa -= sa[d] * dims[d];
+                ob -= sb[d] * dims[d];
+            }
+        }
+    });
     out
 }
 
@@ -217,6 +235,86 @@ mod tests {
         let o = a.broadcast(&b).unwrap();
         let out = map2(&[2.0f32, 3.0], &a, &[1.0, 10.0, 100.0], &b, &o, |x, y| x * y);
         assert_eq!(out.as_slice(), &[2., 20., 200., 3., 30., 300.]);
+    }
+
+    /// Division-based reference for the broadcast zip: compute each
+    /// output element's input offsets independently from its linear index
+    /// (no odometer), so it shares no code path with `map2`'s walk.
+    fn naive_map2<T: Copy, U>(
+        a: &[T],
+        ash: &Shape,
+        b: &[T],
+        bsh: &Shape,
+        out_shape: &Shape,
+        f: impl Fn(T, T) -> U,
+    ) -> Vec<U> {
+        let sa = ash.broadcast_strides(out_shape).unwrap();
+        let sb = bsh.broadcast_strides(out_shape).unwrap();
+        let rs = out_shape.strides();
+        (0..out_shape.numel())
+            .map(|lin| {
+                let (mut oa, mut ob) = (0usize, 0usize);
+                let mut rem = lin;
+                for d in 0..out_shape.rank() {
+                    let i = rem / rs[d];
+                    rem %= rs[d];
+                    oa += i * sa[d];
+                    ob += i * sb[d];
+                }
+                f(a[oa], b[ob])
+            })
+            .collect()
+    }
+
+    #[test]
+    fn map2_middle_axis_broadcast_matches_naive_bitwise() {
+        // [2,1,3] op [2,4,3]: neither side equals the output and the lhs
+        // is not a suffix -> the general strided path
+        let ash = Shape::new(vec![2, 1, 3]);
+        let bsh = Shape::new(vec![2, 4, 3]);
+        let o = ash.broadcast(&bsh).unwrap();
+        assert_eq!(o.dims(), &[2, 4, 3]);
+        let a: Vec<f32> = (0..6).map(|i| (i as f32) * 0.31 - 0.9).collect();
+        let b: Vec<f32> = (0..24).map(|i| (i as f32) * -0.17 + 1.1).collect();
+        let f = |x: f32, y: f32| x * y + y;
+        let got = map2(&a, &ash, &b, &bsh, &o, f);
+        let want = naive_map2(&a, &ash, &b, &bsh, &o, f);
+        for (g, w) in got.as_slice().iter().zip(&want) {
+            assert_eq!(g.to_bits(), w.to_bits());
+        }
+    }
+
+    #[test]
+    fn map2_general_broadcast_i64() {
+        // same path, integer dtype: [3,1] op [1,4]
+        let ash = Shape::new(vec![3, 1]);
+        let bsh = Shape::new(vec![1, 4]);
+        let o = ash.broadcast(&bsh).unwrap();
+        let a = vec![10i64, 20, 30];
+        let b = vec![1i64, 2, 3, 4];
+        let got = map2(&a, &ash, &b, &bsh, &o, |x, y| x + y);
+        let want = naive_map2(&a, &ash, &b, &bsh, &o, |x, y| x + y);
+        assert_eq!(got.as_slice(), &want[..]);
+    }
+
+    #[test]
+    fn map2_general_broadcast_rank4_crosses_parallel_threshold() {
+        // [2,1,8,64] op [2,33,8,64] -> 33792 elements (> PAR_THRESHOLD):
+        // the parallel split with base-seeded odometers must be
+        // bit-identical to the serial division-based reference
+        let ash = Shape::new(vec![2, 1, 8, 64]);
+        let bsh = Shape::new(vec![2, 33, 8, 64]);
+        let o = ash.broadcast(&bsh).unwrap();
+        assert!(o.numel() > PAR_THRESHOLD);
+        let a: Vec<f32> = (0..ash.numel()).map(|i| ((i * 37) % 101) as f32 * 0.13 - 2.0).collect();
+        let b: Vec<f32> = (0..bsh.numel()).map(|i| ((i * 53) % 97) as f32 * 0.07 - 1.0).collect();
+        let f = |x: f32, y: f32| (x - y) * 0.5 + x * y;
+        let got = map2(&a, &ash, &b, &bsh, &o, f);
+        let want = naive_map2(&a, &ash, &b, &bsh, &o, f);
+        assert_eq!(got.len(), want.len());
+        for (i, (g, w)) in got.as_slice().iter().zip(&want).enumerate() {
+            assert_eq!(g.to_bits(), w.to_bits(), "elem {i}");
+        }
     }
 
     #[test]

@@ -14,21 +14,32 @@
 //!   output) materializes exactly once as its own region root and enters
 //!   the consumers as a plain input.
 //!
-//! Bit-identity contract: the fused interpreter applies *exactly* the
+//! Bit-identity contract: both execution engines apply *exactly* the
 //! scalar f32 semantics of the CPU kernels (`kernels::map1`/`map2` with
 //! the same `std` float ops), and regions are gated on every participant
 //! being provably `F32` via the static verifier's signature inference
 //! ([`super::verify::infer_node_meta`] — the same engine that re-checks
 //! fusion legality after the fact). The differential fuzzer holds this
 //! to bit-for-bit equality.
+//!
+//! Execution itself lives in [`super::fuse_exec`]: kernels are lowered
+//! once into a blockwise [`FusedPlan`] (input access classes + liveness-
+//! reused block buffers) — at compile time here in [`fuse`], since the
+//! verifier's inference knows every input shape statically — and run as
+//! autovectorizable straight-line loops. The original per-element
+//! interpretive walk is kept behind `FL_FUSE_INTERP=1` as the
+//! differential baseline.
 
 use std::collections::HashMap;
+use std::sync::{Arc, Mutex, MutexGuard};
 
+use super::super::cpu;
 use super::super::host::HostBuffer;
 use super::super::op::Op;
 use super::super::shape::Shape;
 use super::super::trace::ValueRef;
 use super::super::{DType, Tensor, TensorBackend};
+use super::fuse_exec::{self, FusedPlan};
 use super::{CompileReport, CompiledInstr, Graph, PassReport};
 use crate::util::error::{Error, Result};
 
@@ -108,21 +119,133 @@ pub struct FusedStep {
 
 /// A fused element-wise region: external inputs plus a topologically
 /// ordered step DAG. The last step is the region's output.
-#[derive(Debug, Clone)]
+///
+/// Carries a cached blockwise [`FusedPlan`] (see [`super::fuse_exec`]),
+/// lowered at compile time by the [`fuse`] pass and rebuilt lazily if the
+/// kernel executes under different input shapes. Mutating the public
+/// fields directly (as the verifier's mutation tests do) leaves any
+/// cached plan stale — such a kernel must be re-verified, not executed.
 pub struct FusedKernel {
     /// External operand sources (deduplicated, first-use order).
     pub inputs: Vec<ValueRef>,
     /// The step DAG in evaluation order.
     pub steps: Vec<FusedStep>,
+    /// Cached execution plan for the most recent input shapes.
+    plan: Mutex<Option<Arc<FusedPlan>>>,
+}
+
+/// Lock the plan cache, shrugging off poisoning (the cache holds no
+/// invariant a panicked writer could have broken halfway: it is a single
+/// `Option` swap).
+fn plan_lock(m: &Mutex<Option<Arc<FusedPlan>>>) -> MutexGuard<'_, Option<Arc<FusedPlan>>> {
+    m.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+impl Clone for FusedKernel {
+    fn clone(&self) -> Self {
+        FusedKernel {
+            inputs: self.inputs.clone(),
+            steps: self.steps.clone(),
+            plan: Mutex::new(plan_lock(&self.plan).clone()),
+        }
+    }
+}
+
+impl std::fmt::Debug for FusedKernel {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("FusedKernel")
+            .field("inputs", &self.inputs)
+            .field("steps", &self.steps)
+            .finish()
+    }
 }
 
 impl FusedKernel {
+    /// Build a kernel with an empty plan cache (lowered on [`prepare`] or
+    /// first execution).
+    ///
+    /// [`prepare`]: FusedKernel::prepare
+    pub fn new(inputs: Vec<ValueRef>, steps: Vec<FusedStep>) -> FusedKernel {
+        FusedKernel { inputs, steps, plan: Mutex::new(None) }
+    }
+
+    /// Lower and cache the blockwise plan for the given input shapes (one
+    /// per entry of `self.inputs`). Called by the [`fuse`] pass at compile
+    /// time; execution under different shapes re-lowers transparently.
+    pub fn prepare(&self, in_shapes: &[Shape]) -> Result<()> {
+        if in_shapes.len() != self.inputs.len() {
+            return Err(Error::msg(format!(
+                "fused kernel expects {} inputs, got {} shapes",
+                self.inputs.len(),
+                in_shapes.len()
+            )));
+        }
+        let plan = Arc::new(FusedPlan::build(&self.steps, in_shapes)?);
+        *plan_lock(&self.plan) = Some(plan);
+        Ok(())
+    }
+
+    /// The cached plan if it matches these shapes, else a fresh lowering
+    /// (cached for the next call).
+    fn plan_for(&self, in_shapes: &[Shape]) -> Result<Arc<FusedPlan>> {
+        if let Some(p) = plan_lock(&self.plan).as_ref() {
+            if p.matches(in_shapes, self.steps.len()) {
+                return Ok(p.clone());
+            }
+        }
+        let plan = Arc::new(FusedPlan::build(&self.steps, in_shapes)?);
+        *plan_lock(&self.plan) = Some(plan.clone());
+        Ok(plan)
+    }
+
     /// Evaluate the region in a single pass. Inputs must broadcast to a
     /// common shape; per output element, every step is computed exactly
     /// once, in f32, with the CPU backend's scalar semantics. The result
     /// materializes through `backend.from_host`.
+    ///
+    /// Runs the blockwise engine by default; `FL_FUSE_INTERP=1` forces
+    /// the per-element interpreted walk (bit-identical by contract — see
+    /// [`super::fuse_exec`]).
     pub fn execute(&self, backend: &dyn TensorBackend, inputs: &[&Tensor]) -> Result<Tensor> {
-        debug_assert_eq!(inputs.len(), self.inputs.len());
+        if fuse_exec::interpreter_forced() {
+            self.execute_interpreted(backend, inputs)
+        } else {
+            self.execute_blockwise(backend, inputs)
+        }
+    }
+
+    /// Evaluate with the blockwise engine (the default path).
+    pub fn execute_blockwise(
+        &self,
+        backend: &dyn TensorBackend,
+        inputs: &[&Tensor],
+    ) -> Result<Tensor> {
+        self.execute_with(backend, inputs, fuse_exec::run_blockwise)
+    }
+
+    /// Evaluate with the per-element interpreted walk (differential
+    /// baseline).
+    pub fn execute_interpreted(
+        &self,
+        backend: &dyn TensorBackend,
+        inputs: &[&Tensor],
+    ) -> Result<Tensor> {
+        self.execute_with(backend, inputs, fuse_exec::run_interpreted)
+    }
+
+    fn execute_with(
+        &self,
+        backend: &dyn TensorBackend,
+        inputs: &[&Tensor],
+        run: fn(&[FusedStep], &FusedPlan, &[&[f32]], &mut [f32]),
+    ) -> Result<Tensor> {
+        if inputs.len() != self.inputs.len() {
+            return Err(Error::msg(format!(
+                "fused kernel expects {} inputs, got {}",
+                self.inputs.len(),
+                inputs.len()
+            )));
+        }
         for t in inputs {
             if t.dtype() != DType::F32 {
                 return Err(Error::msg(format!(
@@ -131,87 +254,25 @@ impl FusedKernel {
                 )));
             }
         }
-        let bufs: Vec<Vec<f32>> = inputs.iter().map(|t| t.to_vec()).collect();
         let in_shapes: Vec<Shape> = inputs.iter().map(|t| t.shape().clone()).collect();
-        // resolve step shapes by the same broadcast rules the eager
-        // backend applies, so the kernel's output shape matches exactly
-        let mut step_shapes: Vec<Shape> = Vec::with_capacity(self.steps.len());
-        for step in &self.steps {
-            let shape_of = |a: &FusedArg| match a {
-                FusedArg::Input(i) => in_shapes[*i].clone(),
-                FusedArg::Step(s) => step_shapes[*s].clone(),
-            };
-            let mut shape = shape_of(&step.args[0]);
-            for a in &step.args[1..] {
-                shape = shape.broadcast(&shape_of(a))?;
-            }
-            step_shapes.push(shape);
-        }
-        let out_shape = step_shapes.last().expect("empty fused kernel").clone();
+        let plan = self.plan_for(&in_shapes)?;
+        let out_shape = plan.out_shape().clone();
         let n = out_shape.numel();
-        let strides: Vec<Vec<usize>> = in_shapes
-            .iter()
-            .map(|s| s.broadcast_strides(&out_shape))
-            .collect::<Result<_>>()?;
         if n == 0 {
             return Ok(backend.from_host(HostBuffer::F32(Vec::new()), out_shape));
         }
-        let dims = out_shape.dims().to_vec();
-        let rank = dims.len();
-        let row_strides = out_shape.strides();
+        // borrow input storage in place — zero-copy when the tensors are
+        // already CPU-resident (foreign backends convert through host)
+        let cpus: Vec<cpu::CpuTensor> = inputs.iter().map(|t| cpu::cpu(t)).collect();
+        let mut bufs: Vec<&[f32]> = Vec::with_capacity(cpus.len());
+        for c in &cpus {
+            match &*c.storage {
+                cpu::Storage::F32(v) => bufs.push(v.as_slice()),
+                _ => return Err(Error::msg("fused kernel input storage is not f32")),
+            }
+        }
         let mut out = vec![0f32; n];
-        // one fused pass, parallelized like the eager kernels; each chunk
-        // seeds its odometer from its base linear index (parallel split
-        // cannot change any value: every element is independent)
-        crate::util::parallel::parallel_fill(
-            &mut out,
-            crate::util::parallel::PAR_THRESHOLD,
-            |base, chunk| {
-                let mut idx = vec![0usize; rank];
-                let mut rem = base;
-                for d in 0..rank {
-                    idx[d] = rem / row_strides[d];
-                    rem %= row_strides[d];
-                }
-                let mut offs: Vec<usize> = strides
-                    .iter()
-                    .map(|st| st.iter().zip(&idx).map(|(s, i)| s * i).sum())
-                    .collect();
-                let mut vals = vec![0f32; self.steps.len()];
-                for slot in chunk.iter_mut() {
-                    for (s, step) in self.steps.iter().enumerate() {
-                        let read = |a: &FusedArg, vals: &[f32]| match a {
-                            FusedArg::Input(i) => bufs[*i][offs[*i]],
-                            FusedArg::Step(j) => vals[*j],
-                        };
-                        vals[s] = if step.args.len() == 1 {
-                            apply1(&step.op, read(&step.args[0], &vals))
-                        } else {
-                            apply2(
-                                &step.op,
-                                read(&step.args[0], &vals),
-                                read(&step.args[1], &vals),
-                            )
-                        };
-                    }
-                    *slot = *vals.last().unwrap();
-                    // odometer: advance every input offset in lockstep
-                    for d in (0..rank).rev() {
-                        idx[d] += 1;
-                        for (k, st) in strides.iter().enumerate() {
-                            offs[k] += st[d];
-                        }
-                        if idx[d] < dims[d] {
-                            break;
-                        }
-                        idx[d] = 0;
-                        for (k, st) in strides.iter().enumerate() {
-                            offs[k] -= st[d] * dims[d];
-                        }
-                    }
-                }
-            },
-        );
+        run(&self.steps, &plan, &bufs, &mut out);
         Ok(backend.from_host(HostBuffer::F32(out), out_shape))
     }
 }
@@ -280,6 +341,7 @@ pub(crate) fn fuse(g: &Graph, report: &mut CompileReport) -> (Vec<CompiledInstr>
     // keeps its relative order. old node index -> new instr index
     let root_of = |r: usize| region_members[r][0]; // reverse order: first pushed = root (max index)
     let mut new_index: Vec<Option<usize>> = vec![None; n];
+    let mut old_of_new: Vec<usize> = Vec::new(); // new instr index -> old node index
     let mut instrs: Vec<CompiledInstr> = Vec::new();
     let mut fused_ops = 0usize;
     for i in 0..n {
@@ -324,13 +386,34 @@ pub(crate) fn fuse(g: &Graph, report: &mut CompileReport) -> (Vec<CompiledInstr>
                     steps.push(FusedStep { op: g.nodes[m].op.clone(), args });
                 }
                 fused_ops += steps.len();
+                let kernel = FusedKernel::new(inputs, steps);
+                // lower the blockwise plan now, at compile time: the
+                // verifier's inference knows every input's shape
+                // statically (consts carry theirs). A missing meta or a
+                // lowering error just defers to first-execute, where any
+                // genuine shape error resurfaces as a typed Error.
+                let in_shapes: Option<Vec<Shape>> = kernel
+                    .inputs
+                    .iter()
+                    .map(|r| match r {
+                        ValueRef::Const(c) => Some(g.consts[*c].shape().clone()),
+                        ValueRef::Out(j) => {
+                            metas[old_of_new[*j]].as_ref().map(|m| m.shape.clone())
+                        }
+                    })
+                    .collect();
+                if let Some(shapes) = in_shapes {
+                    kernel.prepare(&shapes).ok();
+                }
                 new_index[i] = Some(instrs.len());
-                instrs.push(CompiledInstr::Fused(FusedKernel { inputs, steps }));
+                old_of_new.push(i);
+                instrs.push(CompiledInstr::Fused(kernel));
             }
             None => {
                 let inputs: Vec<ValueRef> =
                     g.nodes[i].inputs.iter().map(|r| remap(r, &new_index)).collect();
                 new_index[i] = Some(instrs.len());
+                old_of_new.push(i);
                 instrs.push(CompiledInstr::Op { op: g.nodes[i].op.clone(), inputs });
             }
         }
@@ -360,24 +443,15 @@ mod tests {
     #[test]
     fn kernel_evaluates_diamond_once_per_element() {
         // e = exp(x); out = (e + y) * (e - y): e is one shared step
-        let kernel = FusedKernel {
-            inputs: vec![ValueRef::Const(0), ValueRef::Const(1)],
-            steps: vec![
+        let kernel = FusedKernel::new(
+            vec![ValueRef::Const(0), ValueRef::Const(1)],
+            vec![
                 FusedStep { op: Op::Exp, args: vec![FusedArg::Input(0)] },
-                FusedStep {
-                    op: Op::Add,
-                    args: vec![FusedArg::Step(0), FusedArg::Input(1)],
-                },
-                FusedStep {
-                    op: Op::Sub,
-                    args: vec![FusedArg::Step(0), FusedArg::Input(1)],
-                },
-                FusedStep {
-                    op: Op::Mul,
-                    args: vec![FusedArg::Step(1), FusedArg::Step(2)],
-                },
+                FusedStep { op: Op::Add, args: vec![FusedArg::Step(0), FusedArg::Input(1)] },
+                FusedStep { op: Op::Sub, args: vec![FusedArg::Step(0), FusedArg::Input(1)] },
+                FusedStep { op: Op::Mul, args: vec![FusedArg::Step(1), FusedArg::Step(2)] },
             ],
-        };
+        );
         let cpu = CpuBackend::shared();
         let x = Tensor::from_slice(&[0.0f32, 1.0], [2]);
         let y = Tensor::from_slice(&[0.5f32, 2.0], [2]);
@@ -392,13 +466,10 @@ mod tests {
     #[test]
     fn kernel_broadcasts_like_the_eager_backend() {
         // [2,1] + [1,3] inside the region -> [2,3]
-        let kernel = FusedKernel {
-            inputs: vec![ValueRef::Const(0), ValueRef::Const(1)],
-            steps: vec![FusedStep {
-                op: Op::Add,
-                args: vec![FusedArg::Input(0), FusedArg::Input(1)],
-            }],
-        };
+        let kernel = FusedKernel::new(
+            vec![ValueRef::Const(0), ValueRef::Const(1)],
+            vec![FusedStep { op: Op::Add, args: vec![FusedArg::Input(0), FusedArg::Input(1)] }],
+        );
         let cpu = CpuBackend::shared();
         let a = Tensor::from_slice(&[1.0f32, 2.0], [2, 1]);
         let b = Tensor::from_slice(&[10.0f32, 20.0, 30.0], [1, 3]);
@@ -410,12 +481,77 @@ mod tests {
 
     #[test]
     fn non_f32_inputs_are_rejected() {
-        let kernel = FusedKernel {
-            inputs: vec![ValueRef::Const(0)],
-            steps: vec![FusedStep { op: Op::Neg, args: vec![FusedArg::Input(0)] }],
-        };
+        let kernel = FusedKernel::new(
+            vec![ValueRef::Const(0)],
+            vec![FusedStep { op: Op::Neg, args: vec![FusedArg::Input(0)] }],
+        );
         let cpu = CpuBackend::shared();
         let x = Tensor::from_slice(&[1i64, 2], [2]);
         assert!(kernel.execute(cpu.as_ref(), &[&x]).is_err());
+    }
+
+    #[test]
+    fn mismatched_input_count_is_a_typed_error() {
+        // release builds used to misindex here: the arity check was a
+        // debug_assert that compiled away
+        let kernel = FusedKernel::new(
+            vec![ValueRef::Const(0), ValueRef::Const(1)],
+            vec![FusedStep { op: Op::Add, args: vec![FusedArg::Input(0), FusedArg::Input(1)] }],
+        );
+        let cpu = CpuBackend::shared();
+        let x = Tensor::from_slice(&[1.0f32], [1]);
+        let err = kernel.execute(cpu.as_ref(), &[&x]).unwrap_err();
+        assert!(err.to_string().contains("expects 2 inputs, got 1"), "{err}");
+    }
+
+    #[test]
+    fn empty_kernel_is_a_typed_error_not_a_panic() {
+        let kernel = FusedKernel::new(vec![ValueRef::Const(0)], vec![]);
+        let cpu = CpuBackend::shared();
+        let x = Tensor::from_slice(&[1.0f32], [1]);
+        let err = kernel.execute(cpu.as_ref(), &[&x]).unwrap_err();
+        assert!(err.to_string().contains("no steps"), "{err}");
+    }
+
+    #[test]
+    fn both_engines_agree_bitwise_and_replan_on_shape_change() {
+        // diamond with a broadcast input, run blockwise and interpreted,
+        // then again under different shapes (the cached plan must rebuild)
+        let kernel = FusedKernel::new(
+            vec![ValueRef::Const(0), ValueRef::Const(1)],
+            vec![
+                FusedStep { op: Op::Exp, args: vec![FusedArg::Input(0)] },
+                FusedStep { op: Op::Add, args: vec![FusedArg::Step(0), FusedArg::Input(1)] },
+                FusedStep { op: Op::Mul, args: vec![FusedArg::Step(1), FusedArg::Step(0)] },
+            ],
+        );
+        let cpu = CpuBackend::shared();
+        for dims in [vec![2usize, 3], vec![4, 1, 5]] {
+            let n: usize = dims.iter().product();
+            let data: Vec<f32> = (0..n).map(|i| (i as f32) * 0.37 - 1.0).collect();
+            let x = Tensor::from_slice(&data, &dims[..]);
+            let y = Tensor::from_slice(&[0.25f32], [1]);
+            let blk = kernel.execute_blockwise(cpu.as_ref(), &[&x, &y]).unwrap();
+            let interp = kernel.execute_interpreted(cpu.as_ref(), &[&x, &y]).unwrap();
+            assert_eq!(blk.dims(), interp.dims());
+            let (bb, ib) = (blk.to_vec(), interp.to_vec());
+            for i in 0..bb.len() {
+                assert_eq!(bb[i].to_bits(), ib[i].to_bits(), "elem {i} under {dims:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn cloned_kernels_share_the_lowered_plan() {
+        let kernel = FusedKernel::new(
+            vec![ValueRef::Const(0)],
+            vec![FusedStep { op: Op::Neg, args: vec![FusedArg::Input(0)] }],
+        );
+        kernel.prepare(&[Shape::new(vec![3])]).unwrap();
+        let clone = kernel.clone();
+        let cpu = CpuBackend::shared();
+        let x = Tensor::from_slice(&[1.0f32, -2.0, 3.0], [3]);
+        let out = clone.execute(cpu.as_ref(), &[&x]).unwrap();
+        assert_eq!(out.to_vec(), vec![-1.0, 2.0, -3.0]);
     }
 }

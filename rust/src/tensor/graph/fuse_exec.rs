@@ -1,0 +1,889 @@
+//! Blockwise execution engine for [`FusedKernel`] step DAGs.
+//!
+//! The fusion pass produces step DAGs; this module decides how fast they
+//! run. The original executor walked the DAG *per element* — a closure
+//! dispatch per step per element, with every input addressed through a
+//! broadcast-strided odometer even when it was plain contiguous data.
+//! That interpretive overhead is exactly the "fewer ops vs fast ops" gap
+//! the Flashlight paper closes with JIT kernel generation.
+//!
+//! The blockwise engine lowers each kernel **once** into a [`FusedPlan`]
+//! (at compile time when shapes are statically known, lazily on first
+//! call otherwise) and then evaluates in fixed-size lane blocks of
+//! [`BLOCK`] f32s:
+//!
+//! - every external input is classified by access pattern against the
+//!   kernel's output shape — the same taxonomy as the CPU backend's
+//!   `map2` fast paths (`cpu/kernels.rs`): [`Gather::Contig`] (read the
+//!   block straight out of the source buffer), [`Gather::Splat`] (scalar,
+//!   one broadcast block built per call), [`Gather::Suffix`] (trailing-
+//!   dims broadcast, a wrapping `memcpy` with period = the input's
+//!   length), and [`Gather::Strided`] (general broadcast, the only case
+//!   that still walks an odometer — and only to gather, once per block,
+//!   not once per step);
+//! - each step then runs as a straight-line `for` loop over plain
+//!   `&[f32]` slices with the `match` on the op hoisted *outside* the
+//!   loop ([`run1`]/[`run2`]), which rustc autovectorizes;
+//! - step outputs land in per-step block buffers whose slots are reused
+//!   via step liveness (a chain of 40 ops needs 2 slots, not 40);
+//! - the block loop threads over [`crate::util::parallel`] chunks like
+//!   the eager kernels, each chunk seeding its gathers from its absolute
+//!   base index, so the parallel split cannot change any value.
+//!
+//! **Bit-identity holds by construction**: every output element is
+//! independent, and the per-op loop bodies use the exact `std` float
+//! operations of [`apply1`]/[`apply2`] (the CPU backend's scalar
+//! semantics) — the loops only hoist the op dispatch, never change the
+//! arithmetic. `tests` below pin the two engines and the eager CPU ops
+//! to `to_bits` equality, and the `graph_fuzz` differential fuzzer holds
+//! the default path to the same contract at scale. The interpreted
+//! engine is kept behind `FL_FUSE_INTERP=1` for differential testing.
+
+use std::sync::OnceLock;
+
+use super::super::op::Op;
+use super::super::shape::Shape;
+use super::fuse::{apply1, apply2, FusedArg, FusedStep};
+use crate::util::error::{Error, Result};
+use crate::util::parallel;
+
+/// Lane-block size in f32 elements. Big enough that per-block plan
+/// overhead amortizes to nothing, small enough that one input block plus
+/// all live step buffers stay in L1.
+pub const BLOCK: usize = 256;
+
+/// How one external input is read against the kernel's output shape.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Gather {
+    /// Same element count as the output: the block is a direct slice of
+    /// the source buffer (no copy at all).
+    Contig,
+    /// Single element broadcast everywhere: one splat block per call.
+    Splat,
+    /// Trailing-dims broadcast (`[n,d] op [d]`): element `i` reads source
+    /// `i % period`, gathered as a wrapping segment copy.
+    Suffix {
+        /// The input's element count (= product of the covered trailing
+        /// output dims).
+        period: usize,
+    },
+    /// General broadcast: odometer walk over the input's broadcast
+    /// strides, once per block.
+    Strided,
+}
+
+/// A fused kernel lowered for blockwise execution: input access classes,
+/// gather scratch assignment, and liveness-reused step buffer slots.
+/// Built once per (kernel, input shapes) by [`FusedPlan::build`].
+#[derive(Debug, Clone)]
+pub struct FusedPlan {
+    pub(crate) in_shapes: Vec<Shape>,
+    out_shape: Shape,
+    /// Output dims / row-major strides (odometer seeding).
+    dims: Vec<usize>,
+    rstrides: Vec<usize>,
+    /// Per input: broadcast strides against the output shape (used by the
+    /// strided gather and the interpreted engine).
+    strides: Vec<Vec<usize>>,
+    pub(crate) gathers: Vec<Gather>,
+    /// Per input: gather scratch-block index (`Suffix`/`Strided` only).
+    scratch_slot: Vec<Option<usize>>,
+    num_scratch: usize,
+    /// Per step: block-buffer slot, liveness-reused. The last step has no
+    /// slot — it writes the output chunk directly.
+    pub(crate) step_slot: Vec<Option<usize>>,
+    pub(crate) num_slots: usize,
+}
+
+impl FusedPlan {
+    /// Lower a step DAG for the given input shapes. Validates what
+    /// execution relies on — at least one step, in-range argument
+    /// references (topological for steps), arity matching the fusible
+    /// ISA, and every input broadcastable to the output shape — so the
+    /// engines themselves are straight-line code.
+    pub fn build(steps: &[FusedStep], in_shapes: &[Shape]) -> Result<FusedPlan> {
+        if steps.is_empty() {
+            return Err(Error::msg("fused kernel has no steps"));
+        }
+        for (s, step) in steps.iter().enumerate() {
+            if super::fuse::fusible_arity(&step.op) != Some(step.args.len()) {
+                return Err(Error::msg(format!(
+                    "fused step {s}: op {:?} with {} args is outside the fusible ISA",
+                    step.op,
+                    step.args.len()
+                )));
+            }
+            for a in &step.args {
+                match a {
+                    FusedArg::Input(i) if *i >= in_shapes.len() => {
+                        return Err(Error::msg(format!(
+                            "fused step {s}: input ref {i} out of range ({} inputs)",
+                            in_shapes.len()
+                        )))
+                    }
+                    FusedArg::Step(t) if *t >= s => {
+                        return Err(Error::msg(format!(
+                            "fused step {s}: non-topological step ref {t}"
+                        )))
+                    }
+                    _ => {}
+                }
+            }
+        }
+        // output shape: the same broadcast fold the eager backend applies
+        let mut step_shapes: Vec<Shape> = Vec::with_capacity(steps.len());
+        for step in steps {
+            let shape_of = |a: &FusedArg| match a {
+                FusedArg::Input(i) => in_shapes[*i].clone(),
+                FusedArg::Step(t) => step_shapes[*t].clone(),
+            };
+            let mut shape = shape_of(&step.args[0]);
+            for a in &step.args[1..] {
+                shape = shape.broadcast(&shape_of(a))?;
+            }
+            step_shapes.push(shape);
+        }
+        let out_shape = step_shapes.last().unwrap().clone();
+        let dims = out_shape.dims().to_vec();
+        let rstrides = out_shape.strides();
+        let out_numel = out_shape.numel();
+
+        // classify every input against the output shape (map2's taxonomy)
+        let mut strides = Vec::with_capacity(in_shapes.len());
+        let mut gathers = Vec::with_capacity(in_shapes.len());
+        for sh in in_shapes {
+            let bs = sh.broadcast_strides(&out_shape)?;
+            gathers.push(classify(&bs, &rstrides, &dims, sh.numel(), out_numel));
+            strides.push(bs);
+        }
+        let mut scratch_slot = vec![None; in_shapes.len()];
+        let mut num_scratch = 0usize;
+        for (i, g) in gathers.iter().enumerate() {
+            if matches!(g, Gather::Suffix { .. } | Gather::Strided) {
+                scratch_slot[i] = Some(num_scratch);
+                num_scratch += 1;
+            }
+        }
+
+        // step liveness -> block-buffer slots. A step's slot is allocated
+        // *before* the slots of values dying at that step are freed, so a
+        // destination never aliases one of its own arguments.
+        let nsteps = steps.len();
+        let mut last_use: Vec<usize> = (0..nsteps).collect();
+        for (s, step) in steps.iter().enumerate() {
+            for a in &step.args {
+                if let FusedArg::Step(t) = a {
+                    last_use[*t] = s; // s > t: checked topological above
+                }
+            }
+        }
+        let mut step_slot: Vec<Option<usize>> = vec![None; nsteps];
+        let mut free: Vec<usize> = Vec::new();
+        let mut num_slots = 0usize;
+        for s in 0..nsteps {
+            if s + 1 < nsteps {
+                step_slot[s] = Some(free.pop().unwrap_or_else(|| {
+                    num_slots += 1;
+                    num_slots - 1
+                }));
+            }
+            for t in 0..=s {
+                if last_use[t] == s {
+                    if let Some(k) = step_slot[t] {
+                        free.push(k);
+                    }
+                }
+            }
+        }
+
+        Ok(FusedPlan {
+            in_shapes: in_shapes.to_vec(),
+            out_shape,
+            dims,
+            rstrides,
+            strides,
+            gathers,
+            scratch_slot,
+            num_scratch,
+            step_slot,
+            num_slots,
+        })
+    }
+
+    /// The kernel's output shape under this plan's input shapes.
+    pub fn out_shape(&self) -> &Shape {
+        &self.out_shape
+    }
+
+    /// Does this plan apply to a call with these shapes and step count?
+    pub(crate) fn matches(&self, in_shapes: &[Shape], nsteps: usize) -> bool {
+        self.step_slot.len() == nsteps && self.in_shapes == in_shapes
+    }
+}
+
+/// Pick the gather class from an input's broadcast strides `bs` against
+/// the output's row-major strides `rs` / dims. Mirrors the `map2` fast
+/// paths: equal numel ⇒ identical dims ⇒ contiguous; a zero-stride prefix
+/// followed by the output's own trailing strides ⇒ pure suffix broadcast.
+fn classify(
+    bs: &[usize],
+    rs: &[usize],
+    dims: &[usize],
+    in_numel: usize,
+    out_numel: usize,
+) -> Gather {
+    if in_numel == 1 {
+        return Gather::Splat;
+    }
+    if in_numel == out_numel {
+        return Gather::Contig;
+    }
+    let k = bs.iter().position(|&s| s != 0).unwrap_or(bs.len());
+    // size-1 dims carry stride 0 but contribute nothing to the offset
+    if bs[k..].iter().zip(&rs[k..]).zip(&dims[k..]).all(|((&b, &r), &d)| b == r || d == 1) {
+        let period: usize = dims[k..].iter().product();
+        if period == in_numel {
+            return Gather::Suffix { period };
+        }
+    }
+    Gather::Strided
+}
+
+/// Is the interpreted engine forced via `FL_FUSE_INTERP=1`? (Kept for
+/// differential testing; the blockwise engine is the default path.)
+pub fn interpreter_forced() -> bool {
+    static FORCED: OnceLock<bool> = OnceLock::new();
+    *FORCED.get_or_init(|| {
+        std::env::var("FL_FUSE_INTERP").is_ok_and(|v| !v.is_empty() && v != "0")
+    })
+}
+
+/// Wrapping segment copy for a suffix-broadcast input: output element
+/// `base + i` reads `buf[(base + i) % period]`.
+fn gather_suffix(buf: &[f32], period: usize, base: usize, out: &mut [f32]) {
+    let mut src = base % period;
+    let mut filled = 0usize;
+    while filled < out.len() {
+        let take = (period - src).min(out.len() - filled);
+        out[filled..filled + take].copy_from_slice(&buf[src..src + take]);
+        filled += take;
+        src += take;
+        if src == period {
+            src = 0;
+        }
+    }
+}
+
+/// Odometer gather for a general strided input, seeded from the absolute
+/// base index by decomposing against the output's row-major strides.
+/// `idx` is caller-provided scratch of length `dims.len()`.
+fn gather_strided(
+    buf: &[f32],
+    strides: &[usize],
+    dims: &[usize],
+    rstrides: &[usize],
+    base: usize,
+    idx: &mut [usize],
+    out: &mut [f32],
+) {
+    let rank = dims.len();
+    let mut off = 0usize;
+    let mut rem = base;
+    for d in 0..rank {
+        idx[d] = rem / rstrides[d];
+        rem %= rstrides[d];
+        off += idx[d] * strides[d];
+    }
+    for slot in out.iter_mut() {
+        *slot = buf[off];
+        for d in (0..rank).rev() {
+            idx[d] += 1;
+            off += strides[d];
+            if idx[d] < dims[d] {
+                break;
+            }
+            idx[d] = 0;
+            off -= strides[d] * dims[d];
+        }
+    }
+}
+
+/// Straight-line unary loop, op dispatch hoisted out. The loop bodies are
+/// the exact `std` float operations of [`apply1`] — only the `match`
+/// moves, never the arithmetic (the bit-identity contract; pinned to
+/// `apply1` on edge values by `tests::block_loops_mirror_scalar_semantics`).
+fn run1(op: &Op, a: &[f32], out: &mut [f32]) {
+    match op {
+        Op::Neg => {
+            for (o, &x) in out.iter_mut().zip(a) {
+                *o = -x;
+            }
+        }
+        Op::Abs => {
+            for (o, &x) in out.iter_mut().zip(a) {
+                *o = x.abs();
+            }
+        }
+        Op::Sign => {
+            for (o, &x) in out.iter_mut().zip(a) {
+                *o = if x > 0.0 {
+                    1.0
+                } else if x < 0.0 {
+                    -1.0
+                } else {
+                    0.0
+                };
+            }
+        }
+        Op::Exp => {
+            for (o, &x) in out.iter_mut().zip(a) {
+                *o = x.exp();
+            }
+        }
+        Op::Log => {
+            for (o, &x) in out.iter_mut().zip(a) {
+                *o = x.ln();
+            }
+        }
+        Op::Tanh => {
+            for (o, &x) in out.iter_mut().zip(a) {
+                *o = x.tanh();
+            }
+        }
+        Op::Sqrt => {
+            for (o, &x) in out.iter_mut().zip(a) {
+                *o = x.sqrt();
+            }
+        }
+        Op::Clip { lo, hi } => {
+            let (lo, hi) = (*lo as f32, *hi as f32);
+            for (o, &x) in out.iter_mut().zip(a) {
+                *o = x.clamp(lo, hi);
+            }
+        }
+        _ => unreachable!("not a fusible unary op: {op:?}"),
+    }
+}
+
+/// Straight-line binary loop, op dispatch hoisted out (see [`run1`]).
+fn run2(op: &Op, a: &[f32], b: &[f32], out: &mut [f32]) {
+    match op {
+        Op::Add => {
+            for ((o, &x), &y) in out.iter_mut().zip(a).zip(b) {
+                *o = x + y;
+            }
+        }
+        Op::Sub => {
+            for ((o, &x), &y) in out.iter_mut().zip(a).zip(b) {
+                *o = x - y;
+            }
+        }
+        Op::Mul => {
+            for ((o, &x), &y) in out.iter_mut().zip(a).zip(b) {
+                *o = x * y;
+            }
+        }
+        Op::Div => {
+            for ((o, &x), &y) in out.iter_mut().zip(a).zip(b) {
+                *o = x / y;
+            }
+        }
+        Op::Minimum => {
+            for ((o, &x), &y) in out.iter_mut().zip(a).zip(b) {
+                *o = x.min(y);
+            }
+        }
+        Op::Maximum => {
+            for ((o, &x), &y) in out.iter_mut().zip(a).zip(b) {
+                *o = x.max(y);
+            }
+        }
+        _ => unreachable!("not a fusible binary op: {op:?}"),
+    }
+}
+
+/// The blockwise engine: gather each input's block once, run each step as
+/// one loop, threaded over chunk boundaries aligned to [`BLOCK`].
+pub(crate) fn run_blockwise(
+    steps: &[FusedStep],
+    plan: &FusedPlan,
+    bufs: &[&[f32]],
+    out: &mut [f32],
+) {
+    // scalar splat blocks are shared read-only across threads
+    let splats: Vec<Option<Vec<f32>>> = plan
+        .gathers
+        .iter()
+        .enumerate()
+        .map(|(i, g)| matches!(g, Gather::Splat).then(|| vec![bufs[i][0]; BLOCK]))
+        .collect();
+    let rank = plan.dims.len();
+    parallel::parallel_fill_aligned(out, parallel::PAR_THRESHOLD, BLOCK, |chunk_base, chunk| {
+        let mut scratch: Vec<Vec<f32>> = vec![vec![0f32; BLOCK]; plan.num_scratch];
+        let mut slots: Vec<Vec<f32>> = vec![vec![0f32; BLOCK]; plan.num_slots];
+        let mut odo = vec![0usize; rank];
+        let mut pos = 0usize;
+        while pos < chunk.len() {
+            let len = BLOCK.min(chunk.len() - pos);
+            let base = chunk_base + pos;
+            for (i, g) in plan.gathers.iter().enumerate() {
+                match g {
+                    Gather::Contig | Gather::Splat => {}
+                    Gather::Suffix { period } => {
+                        let blk = &mut scratch[plan.scratch_slot[i].unwrap()];
+                        gather_suffix(bufs[i], *period, base, &mut blk[..len]);
+                    }
+                    Gather::Strided => {
+                        let blk = &mut scratch[plan.scratch_slot[i].unwrap()];
+                        gather_strided(
+                            bufs[i],
+                            &plan.strides[i],
+                            &plan.dims,
+                            &plan.rstrides,
+                            base,
+                            &mut odo,
+                            &mut blk[..len],
+                        );
+                    }
+                }
+            }
+            for (s, step) in steps.iter().enumerate() {
+                // take the destination out of `slots` so the argument
+                // resolver can borrow the rest immutably; the plan
+                // guarantees the destination never aliases an argument
+                let mut taken: Option<Vec<f32>> =
+                    plan.step_slot[s].map(|k| std::mem::take(&mut slots[k]));
+                {
+                    let arg = |a: &FusedArg| -> &[f32] {
+                        match a {
+                            FusedArg::Input(i) => match &plan.gathers[*i] {
+                                Gather::Contig => &bufs[*i][base..base + len],
+                                Gather::Splat => &splats[*i].as_ref().unwrap()[..len],
+                                _ => &scratch[plan.scratch_slot[*i].unwrap()][..len],
+                            },
+                            FusedArg::Step(t) => &slots[plan.step_slot[*t].unwrap()][..len],
+                        }
+                    };
+                    let dst: &mut [f32] = match &mut taken {
+                        Some(v) => &mut v[..len],
+                        None => &mut chunk[pos..pos + len],
+                    };
+                    if step.args.len() == 1 {
+                        run1(&step.op, arg(&step.args[0]), dst);
+                    } else {
+                        run2(&step.op, arg(&step.args[0]), arg(&step.args[1]), dst);
+                    }
+                }
+                if let (Some(k), Some(v)) = (plan.step_slot[s], taken) {
+                    slots[k] = v;
+                }
+            }
+            pos += len;
+        }
+    });
+}
+
+/// The original per-element interpretive walk (differential baseline,
+/// forced via `FL_FUSE_INTERP=1`): every step dispatched through
+/// [`apply1`]/[`apply2`] per element, every input addressed through its
+/// broadcast-strided odometer.
+pub(crate) fn run_interpreted(
+    steps: &[FusedStep],
+    plan: &FusedPlan,
+    bufs: &[&[f32]],
+    out: &mut [f32],
+) {
+    let rank = plan.dims.len();
+    parallel::parallel_fill(out, parallel::PAR_THRESHOLD, |base, chunk| {
+        let mut idx = vec![0usize; rank];
+        let mut rem = base;
+        for d in 0..rank {
+            idx[d] = rem / plan.rstrides[d];
+            rem %= plan.rstrides[d];
+        }
+        let mut offs: Vec<usize> = plan
+            .strides
+            .iter()
+            .map(|st| st.iter().zip(&idx).map(|(s, i)| s * i).sum())
+            .collect();
+        let mut vals = vec![0f32; steps.len()];
+        for slot in chunk.iter_mut() {
+            for (s, step) in steps.iter().enumerate() {
+                let read = |a: &FusedArg, vals: &[f32]| match a {
+                    FusedArg::Input(i) => bufs[*i][offs[*i]],
+                    FusedArg::Step(j) => vals[*j],
+                };
+                vals[s] = if step.args.len() == 1 {
+                    apply1(&step.op, read(&step.args[0], &vals))
+                } else {
+                    apply2(&step.op, read(&step.args[0], &vals), read(&step.args[1], &vals))
+                };
+            }
+            *slot = *vals.last().unwrap();
+            for d in (0..rank).rev() {
+                idx[d] += 1;
+                for (k, st) in plan.strides.iter().enumerate() {
+                    offs[k] += st[d];
+                }
+                if idx[d] < plan.dims[d] {
+                    break;
+                }
+                idx[d] = 0;
+                for (k, st) in plan.strides.iter().enumerate() {
+                    offs[k] -= st[d] * plan.dims[d];
+                }
+            }
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::fuse::FusedKernel;
+    use super::*;
+    use crate::tensor::cpu::CpuBackend;
+    use crate::tensor::trace::ValueRef;
+    use crate::tensor::Tensor;
+    use crate::util::rng::Rng;
+
+    fn shape(dims: &[usize]) -> Shape {
+        Shape::new(dims.to_vec())
+    }
+
+    fn plan_of(steps: Vec<FusedStep>, in_shapes: &[Shape]) -> FusedPlan {
+        FusedPlan::build(&steps, in_shapes).unwrap()
+    }
+
+    fn one_step_add(nin: usize) -> Vec<FusedStep> {
+        assert_eq!(nin, 2);
+        vec![FusedStep { op: Op::Add, args: vec![FusedArg::Input(0), FusedArg::Input(1)] }]
+    }
+
+    #[test]
+    fn classification_matches_the_map2_taxonomy() {
+        // contiguous same-shape
+        let p = plan_of(one_step_add(2), &[shape(&[4, 3]), shape(&[4, 3])]);
+        assert_eq!(p.gathers, vec![Gather::Contig, Gather::Contig]);
+        // scalar splat
+        let p = plan_of(one_step_add(2), &[shape(&[4, 3]), shape(&[1])]);
+        assert_eq!(p.gathers[1], Gather::Splat);
+        // suffix broadcast (bias-add), including a leading explicit 1-dim
+        let p = plan_of(one_step_add(2), &[shape(&[4, 3]), shape(&[3])]);
+        assert_eq!(p.gathers[1], Gather::Suffix { period: 3 });
+        let p = plan_of(one_step_add(2), &[shape(&[5, 2, 3]), shape(&[1, 2, 3])]);
+        assert_eq!(p.gathers[1], Gather::Suffix { period: 6 });
+        // interior 1-dim inside the suffix block is still a pure modulo
+        let p = plan_of(one_step_add(2), &[shape(&[5, 4, 1, 3]), shape(&[4, 1, 3])]);
+        assert_eq!(p.gathers[1], Gather::Suffix { period: 12 });
+        // middle-axis broadcast: genuinely strided
+        let p = plan_of(one_step_add(2), &[shape(&[2, 4, 3]), shape(&[2, 1, 3])]);
+        assert_eq!(p.gathers[1], Gather::Strided);
+    }
+
+    #[test]
+    fn plan_rejects_malformed_kernels() {
+        // no steps
+        assert!(FusedPlan::build(&[], &[shape(&[2])]).is_err());
+        // out-of-range input ref
+        let bad = vec![FusedStep { op: Op::Neg, args: vec![FusedArg::Input(3)] }];
+        assert!(FusedPlan::build(&bad, &[shape(&[2])]).is_err());
+        // non-topological step ref
+        let bad = vec![FusedStep { op: Op::Neg, args: vec![FusedArg::Step(0)] }];
+        assert!(FusedPlan::build(&bad, &[shape(&[2])]).is_err());
+        // wrong arity for the op
+        let bad = vec![FusedStep { op: Op::Add, args: vec![FusedArg::Input(0)] }];
+        assert!(FusedPlan::build(&bad, &[shape(&[2])]).is_err());
+        // op outside the fusible ISA
+        let bad = vec![FusedStep { op: Op::Matmul, args: vec![FusedArg::Input(0)] }];
+        assert!(FusedPlan::build(&bad, &[shape(&[2])]).is_err());
+    }
+
+    #[test]
+    fn chains_reuse_two_slots() {
+        // a pure chain: each value dies at the next step, so however long
+        // the chain, two block buffers alternate (last step writes out)
+        let mut steps = vec![FusedStep { op: Op::Abs, args: vec![FusedArg::Input(0)] }];
+        for s in 1..8 {
+            steps.push(FusedStep { op: Op::Sqrt, args: vec![FusedArg::Step(s - 1)] });
+        }
+        let p = plan_of(steps, &[shape(&[10])]);
+        assert_eq!(p.num_slots, 2);
+        assert_eq!(p.step_slot[7], None, "last step writes the output directly");
+    }
+
+    #[test]
+    fn destination_slot_never_aliases_an_argument_slot() {
+        let mut rng = Rng::new(0xA11A5);
+        for _ in 0..200 {
+            let nsteps = 2 + rng.below(8);
+            let mut steps = vec![FusedStep { op: Op::Abs, args: vec![FusedArg::Input(0)] }];
+            for s in 1..nsteps {
+                let a0 = FusedArg::Step(rng.below(s));
+                let args = if rng.below(2) == 0 {
+                    vec![a0]
+                } else {
+                    vec![a0, FusedArg::Step(rng.below(s))]
+                };
+                let op = if args.len() == 1 { Op::Sqrt } else { Op::Add };
+                steps.push(FusedStep { op, args });
+            }
+            let p = FusedPlan::build(&steps, &[shape(&[4])]).unwrap();
+            for (s, step) in steps.iter().enumerate() {
+                for a in &step.args {
+                    if let FusedArg::Step(t) = a {
+                        assert!(p.step_slot[*t].is_some(), "consumed step {t} must hold a slot");
+                        if let (Some(d), Some(src)) = (p.step_slot[s], p.step_slot[*t]) {
+                            assert_ne!(d, src, "step {s} dest aliases arg {t}");
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn suffix_gather_wraps_across_block_boundaries() {
+        let buf: Vec<f32> = (0..7).map(|i| i as f32).collect();
+        let mut out = vec![0f32; 300];
+        gather_suffix(&buf, 7, 250, &mut out);
+        for (i, v) in out.iter().enumerate() {
+            assert_eq!(*v, ((250 + i) % 7) as f32);
+        }
+    }
+
+    #[test]
+    fn strided_gather_matches_division_indexing() {
+        // [2,1,3] read against out [2,4,3]
+        let ash = shape(&[2, 1, 3]);
+        let osh = shape(&[2, 4, 3]);
+        let buf: Vec<f32> = (0..6).map(|i| i as f32 * 1.5).collect();
+        let bs = ash.broadcast_strides(&osh).unwrap();
+        let rs = osh.strides();
+        let dims = osh.dims().to_vec();
+        for base in [0usize, 5, 17, 23] {
+            let len = (osh.numel() - base).min(9);
+            let mut out = vec![0f32; len];
+            let mut idx = vec![0usize; 3];
+            gather_strided(&buf, &bs, &dims, &rs, base, &mut idx, &mut out);
+            for (i, v) in out.iter().enumerate() {
+                let lin = base + i;
+                let mut off = 0;
+                let mut rem = lin;
+                for d in 0..3 {
+                    off += (rem / rs[d]) * bs[d];
+                    rem %= rs[d];
+                }
+                assert_eq!(v.to_bits(), buf[off].to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn block_loops_mirror_scalar_semantics_on_edge_values() {
+        let edge = [
+            f32::NAN,
+            0.0,
+            -0.0,
+            f32::INFINITY,
+            f32::NEG_INFINITY,
+            1.5,
+            -1.5,
+            f32::MIN_POSITIVE,
+            -2.0,
+            0.25,
+        ];
+        let unary = [
+            Op::Neg,
+            Op::Abs,
+            Op::Sign,
+            Op::Exp,
+            Op::Log,
+            Op::Tanh,
+            Op::Sqrt,
+            Op::Clip { lo: -1.0, hi: 0.5 },
+        ];
+        for op in &unary {
+            let mut out = vec![0f32; edge.len()];
+            run1(op, &edge, &mut out);
+            for (i, &x) in edge.iter().enumerate() {
+                assert_eq!(out[i].to_bits(), apply1(op, x).to_bits(), "{op:?} on {x}");
+            }
+        }
+        let binary = [Op::Add, Op::Sub, Op::Mul, Op::Div, Op::Minimum, Op::Maximum];
+        for op in &binary {
+            for &y in &edge {
+                let b = vec![y; edge.len()];
+                let mut out = vec![0f32; edge.len()];
+                run2(op, &edge, &b, &mut out);
+                for (i, &x) in edge.iter().enumerate() {
+                    assert_eq!(
+                        out[i].to_bits(),
+                        apply2(op, x, y).to_bits(),
+                        "{op:?} on ({x}, {y})"
+                    );
+                }
+            }
+        }
+    }
+
+    /// Evaluate the step DAG with one eager CPU dispatch per step — the
+    /// strongest oracle: the engines must match what the unfused program
+    /// would have computed, bit for bit.
+    fn eager_reference(kernel: &FusedKernel, inputs: &[&Tensor]) -> Tensor {
+        let cpu = CpuBackend::shared();
+        let mut vals: Vec<Tensor> = Vec::new();
+        for step in &kernel.steps {
+            let t = {
+                let args: Vec<&Tensor> = step
+                    .args
+                    .iter()
+                    .map(|a| match a {
+                        FusedArg::Input(i) => inputs[*i],
+                        FusedArg::Step(s) => &vals[*s],
+                    })
+                    .collect();
+                cpu.dispatch(&step.op, &args).unwrap()
+            };
+            vals.push(t);
+        }
+        vals.pop().unwrap()
+    }
+
+    fn random_kernel(rng: &mut Rng, nin: usize) -> FusedKernel {
+        let unary = [
+            Op::Neg,
+            Op::Abs,
+            Op::Sign,
+            Op::Exp,
+            Op::Log,
+            Op::Tanh,
+            Op::Sqrt,
+            Op::Clip { lo: -0.75, hi: 1.25 },
+        ];
+        let binary = [Op::Add, Op::Sub, Op::Mul, Op::Div, Op::Minimum, Op::Maximum];
+        let nsteps = 1 + rng.below(7);
+        let mut steps: Vec<FusedStep> = Vec::new();
+        for s in 0..nsteps {
+            // chain arg0 through the previous step so every step (and
+            // input 0's full shape) reaches the root; extra args pick
+            // random earlier steps or inputs, creating diamonds
+            let a0 = if s == 0 {
+                FusedArg::Input(0)
+            } else {
+                FusedArg::Step(s - 1)
+            };
+            if rng.below(3) == 0 {
+                let op = unary[rng.below(unary.len())].clone();
+                steps.push(FusedStep { op, args: vec![a0] });
+            } else {
+                let op = binary[rng.below(binary.len())].clone();
+                let a1 = if s > 0 && rng.below(3) == 0 {
+                    FusedArg::Step(rng.below(s))
+                } else {
+                    FusedArg::Input(rng.below(nin))
+                };
+                steps.push(FusedStep { op, args: vec![a0, a1] });
+            }
+        }
+        let inputs = (0..nin).map(ValueRef::Const).collect();
+        FusedKernel::new(inputs, steps)
+    }
+
+    #[test]
+    fn blockwise_matches_interpreted_and_eager_on_random_dags() {
+        let cpu = CpuBackend::shared();
+        let mut rng = Rng::new(0xB10C_F00D);
+        for case in 0..150 {
+            let base = crate::testutil::prop::random_shape(&mut rng, 4, 5);
+            let nin = 1 + rng.below(3);
+            let mut shapes: Vec<Vec<usize>> = vec![base.clone()];
+            for _ in 1..nin {
+                shapes.push(crate::testutil::prop::broadcastable_shape(&mut rng, &base));
+            }
+            let tensors: Vec<Tensor> = shapes
+                .iter()
+                .map(|s| {
+                    let n: usize = s.iter().product();
+                    let data = crate::testutil::prop::random_vec(&mut rng, n, 2.0);
+                    Tensor::from_slice(&data, &s[..])
+                })
+                .collect();
+            let inputs: Vec<&Tensor> = tensors.iter().collect();
+            let kernel = random_kernel(&mut rng, nin);
+            let blk = kernel.execute_blockwise(cpu.as_ref(), &inputs).unwrap();
+            let interp = kernel.execute_interpreted(cpu.as_ref(), &inputs).unwrap();
+            let eager = eager_reference(&kernel, &inputs);
+            let (bb, ib, eb) = (blk.to_vec(), interp.to_vec(), eager.to_vec());
+            assert_eq!(blk.dims(), eager.dims(), "case {case}: shape");
+            for i in 0..bb.len() {
+                assert_eq!(
+                    bb[i].to_bits(),
+                    ib[i].to_bits(),
+                    "case {case}, elem {i}: blockwise vs interpreted"
+                );
+                assert_eq!(
+                    bb[i].to_bits(),
+                    eb[i].to_bits(),
+                    "case {case}, elem {i}: blockwise vs eager"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn large_outputs_cross_the_parallel_threshold_bit_identically() {
+        // [33, 1024] output (33792 > PAR_THRESHOLD) with one contiguous,
+        // one suffix, one scalar and one strided input
+        let cpu = CpuBackend::shared();
+        let mut rng = Rng::new(0x51AB);
+        let mk = |dims: &[usize], rng: &mut Rng| {
+            let n: usize = dims.iter().product();
+            let data = crate::testutil::prop::random_vec(rng, n, 2.0);
+            Tensor::from_slice(&data, dims)
+        };
+        let a = mk(&[33, 1024], &mut rng);
+        let b = mk(&[1024], &mut rng);
+        let c = mk(&[1], &mut rng);
+        let d = mk(&[33, 1], &mut rng);
+        let kernel = FusedKernel::new(
+            (0..4).map(ValueRef::Const).collect(),
+            vec![
+                FusedStep { op: Op::Mul, args: vec![FusedArg::Input(0), FusedArg::Input(1)] },
+                FusedStep { op: Op::Add, args: vec![FusedArg::Step(0), FusedArg::Input(2)] },
+                FusedStep { op: Op::Maximum, args: vec![FusedArg::Step(1), FusedArg::Input(3)] },
+                FusedStep { op: Op::Tanh, args: vec![FusedArg::Step(2)] },
+            ],
+        );
+        let inputs = [&a, &b, &c, &d];
+        let blk = kernel.execute_blockwise(cpu.as_ref(), &inputs).unwrap();
+        let interp = kernel.execute_interpreted(cpu.as_ref(), &inputs).unwrap();
+        let eager = eager_reference(&kernel, &inputs);
+        assert_eq!(blk.dims(), &[33, 1024]);
+        let (bb, ib, eb) = (blk.to_vec(), interp.to_vec(), eager.to_vec());
+        for i in 0..bb.len() {
+            assert_eq!(bb[i].to_bits(), ib[i].to_bits(), "elem {i} vs interpreted");
+            assert_eq!(bb[i].to_bits(), eb[i].to_bits(), "elem {i} vs eager");
+        }
+    }
+
+    #[test]
+    fn rank0_and_zero_sized_outputs_work() {
+        let cpu = CpuBackend::shared();
+        let kernel = FusedKernel::new(
+            vec![ValueRef::Const(0), ValueRef::Const(1)],
+            one_step_add(2),
+        );
+        // rank-0 scalars
+        let x = Tensor::from_slice(&[2.0f32], shape(&[]));
+        let y = Tensor::from_slice(&[3.0f32], shape(&[]));
+        let out = kernel.execute_blockwise(cpu.as_ref(), &[&x, &y]).unwrap();
+        assert_eq!(out.to_vec(), vec![5.0]);
+        assert_eq!(out.dims(), &[] as &[usize]);
+        // zero-sized
+        let x = Tensor::zeros([0, 3]);
+        let y = Tensor::zeros([0, 3]);
+        let out = kernel.execute_blockwise(cpu.as_ref(), &[&x, &y]).unwrap();
+        assert_eq!(out.dims(), &[0, 3]);
+        assert!(out.to_vec().is_empty());
+    }
+}

@@ -44,6 +44,7 @@
 //! caught; clean fuzz programs must verify with zero diagnostics).
 
 pub mod fuse;
+pub mod fuse_exec;
 pub mod memplan;
 pub mod passes;
 pub mod signature;
@@ -59,6 +60,7 @@ use crate::memory::telemetry::AllocEvent;
 use crate::util::error::{Error, Result};
 
 pub use fuse::{FusedArg, FusedKernel, FusedStep};
+pub use fuse_exec::FusedPlan;
 pub use memplan::MemoryPlan;
 pub use signature::{SignatureError, SignatureErrorKind, ValueMeta};
 pub use verify::{verify_enabled, Diagnostic, DiagnosticKind, SourceSpec, VerifiedMeta};

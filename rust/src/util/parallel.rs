@@ -82,6 +82,39 @@ pub fn parallel_fill<T: Send>(out: &mut [T], min_serial: usize, f: impl Fn(usize
     });
 }
 
+/// Like [`parallel_fill`], but each thread's chunk length is rounded up
+/// to a multiple of `align` (except the tail), so fixed-size inner blocks
+/// never straddle a thread boundary. Used by the blockwise fused-kernel
+/// engine to keep every block but the last one full-width.
+pub fn parallel_fill_aligned<T: Send>(
+    out: &mut [T],
+    min_serial: usize,
+    align: usize,
+    f: impl Fn(usize, &mut [T]) + Sync,
+) {
+    let n = out.len();
+    let threads = num_threads();
+    if threads <= 1 || n <= min_serial {
+        f(0, out);
+        return;
+    }
+    let align = align.max(1);
+    let per = n.div_ceil(threads).div_ceil(align) * align;
+    std::thread::scope(|s| {
+        let mut rest = out;
+        let mut base = 0usize;
+        while !rest.is_empty() {
+            let take = per.min(rest.len());
+            let (head, tail) = rest.split_at_mut(take);
+            let f = &f;
+            let b = base;
+            s.spawn(move || f(b, head));
+            rest = tail;
+            base += take;
+        }
+    });
+}
+
 /// Map `0..n` to a `Vec<R>` in parallel, preserving order.
 pub fn parallel_map<R: Send + Default + Clone>(
     n: usize,
@@ -127,6 +160,26 @@ mod tests {
         });
         for (i, x) in v.iter().enumerate() {
             assert_eq!(*x, i);
+        }
+    }
+
+    #[test]
+    fn aligned_fill_writes_every_slot_on_aligned_boundaries() {
+        for n in [1usize, 7, 256, 50_000, 50_001] {
+            let mut v = vec![0usize; n];
+            let bases = std::sync::Mutex::new(Vec::new());
+            parallel_fill_aligned(&mut v, 0, 256, |base, chunk| {
+                bases.lock().unwrap().push(base);
+                for (i, x) in chunk.iter_mut().enumerate() {
+                    *x = base + i;
+                }
+            });
+            for (i, x) in v.iter().enumerate() {
+                assert_eq!(*x, i, "n={n}");
+            }
+            for b in bases.into_inner().unwrap() {
+                assert_eq!(b % 256, 0, "chunk base must be block-aligned (n={n})");
+            }
         }
     }
 
