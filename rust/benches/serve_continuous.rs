@@ -174,6 +174,7 @@ fn main() {
         max_active: BATCH,
         page_tokens: PAGE_TOKENS,
         pool_pages: Some(pool_pages),
+        ..Default::default()
     };
     let batcher = ContinuousBatcher::start(Arc::clone(&model), &cfg).unwrap();
     let t0 = Instant::now();

@@ -1,0 +1,264 @@
+//! Bucket-compiled decode iterations + chunked-prefill interference
+//! snapshot -> BENCH_PR9.json.
+//!
+//! Two measurements, matching the PR's acceptance criteria:
+//!
+//! - **decode iteration latency vs batch size**: the continuous batcher's
+//!   `[B, 1]` decode step through the pre-compiled segment programs
+//!   ([`CompiledDecodeStep`]) vs the eager
+//!   [`BertLike::logits_decode_batch`], over identical token streams and
+//!   caches — asserted bitwise-identical in the same run, so the speedup
+//!   is measured on provably the same computation;
+//! - **prefill interference p99**: short requests decoding through the
+//!   [`ContinuousBatcher`] while one very long prompt is admitted
+//!   mid-flight, with whole-prompt prefill vs Sarathi-style chunked
+//!   prefill (`prefill_chunk`) — chunking bounds how long a pass can
+//!   stall the cohabiting decodes, which shows up as a lower short-request
+//!   p99. Token streams are asserted identical across the two modes.
+//!
+//! Run: `cargo bench --bench serve_decode`
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use flashlight::autograd::no_grad;
+use flashlight::memory::KvPagePool;
+use flashlight::models::BertLike;
+use flashlight::nn::PagedKvCache;
+use flashlight::serve::{
+    CompiledDecodeStep, ContinuousBatcher, ContinuousConfig, GenerateOptions, Sampling,
+};
+use flashlight::testutil::{write_bench_json, BenchRecord};
+use flashlight::Tensor;
+
+// ---- part 1: compiled vs eager decode iterations ---------------------------
+
+const VOCAB: usize = 64;
+const PREFILL: usize = 16;
+const STEPS: usize = 24;
+const REPS: usize = 3;
+const BATCHES: [usize; 4] = [1, 2, 4, 8];
+
+fn bits(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+/// Fresh per-request caches, each prefilled with `PREFILL` tokens.
+fn fresh_caches(model: &BertLike, b: usize) -> Vec<PagedKvCache> {
+    let page_tokens = 8;
+    let pages = b * (PREFILL + STEPS).div_ceil(page_tokens);
+    let pool = KvPagePool::new(model.kv_pool_config(page_tokens, pages));
+    (0..b)
+        .map(|r| {
+            let mut cache = PagedKvCache::new(Arc::clone(&pool));
+            cache.reserve(PREFILL + STEPS).expect("bench pool sized exactly");
+            let prompt: Vec<i64> =
+                (0..PREFILL).map(|j| ((r * 13 + j * 5) % VOCAB) as i64).collect();
+            let ids = Tensor::from_slice(&prompt, [1, PREFILL]);
+            no_grad(|| model.logits_paged(&ids, &mut cache));
+            cache
+        })
+        .collect()
+}
+
+/// The fixed token fed to row `r` at step `t` — identical for both modes,
+/// so the bitwise comparison runs over the exact same schedule.
+fn token_at(r: usize, t: usize) -> i64 {
+    ((r * 7 + t * 3) % VOCAB) as i64
+}
+
+/// One timed rep of `STEPS` decode iterations at batch `b`. Returns the
+/// decode-only elapsed seconds plus (when `record`) each step's logit bits.
+fn decode_rep(
+    model: &BertLike,
+    step: Option<&CompiledDecodeStep>,
+    b: usize,
+    record: bool,
+) -> (f64, Vec<Vec<u32>>) {
+    let mut caches = fresh_caches(model, b);
+    let mut trace = Vec::new();
+    let t0 = Instant::now();
+    for t in 0..STEPS {
+        let tokens: Vec<i64> = (0..b).map(|r| token_at(r, t)).collect();
+        let mut refs: Vec<&mut PagedKvCache> = caches.iter_mut().collect();
+        let logits = match step {
+            Some(s) => no_grad(|| s.step(model, &tokens, &mut refs))
+                .expect("compiled step")
+                .expect("every bench batch size has a bucket"),
+            None => {
+                let ids = Tensor::from_slice(&tokens, [b, 1]);
+                no_grad(|| model.logits_decode_batch(&ids, &mut refs)).tensor()
+            }
+        };
+        if record {
+            trace.push(bits(&logits.to_vec()));
+        }
+    }
+    (t0.elapsed().as_secs_f64(), trace)
+}
+
+fn bench_decode_iterations(records: &mut Vec<BenchRecord>) {
+    flashlight::util::rng::seed(42);
+    let model = BertLike::new(VOCAB, 64, 4, 2, PREFILL + STEPS + 8);
+    let step = CompiledDecodeStep::compile(&model, &BATCHES).expect("decode buckets compile");
+    for &b in &BATCHES {
+        // parity first: the two modes must be bit-identical step by step
+        let (_, eager_trace) = decode_rep(&model, None, b, true);
+        let (_, compiled_trace) = decode_rep(&model, Some(&step), b, true);
+        assert_eq!(eager_trace, compiled_trace, "compiled decode diverged from eager at b={b}");
+
+        let mut eager_best = f64::INFINITY;
+        let mut compiled_best = f64::INFINITY;
+        for _ in 0..REPS {
+            eager_best = eager_best.min(decode_rep(&model, None, b, false).0);
+            compiled_best = compiled_best.min(decode_rep(&model, Some(&step), b, false).0);
+        }
+        let eager_ns = eager_best * 1e9 / STEPS as f64;
+        let compiled_ns = compiled_best * 1e9 / STEPS as f64;
+        let mut row = BenchRecord::new(
+            match b {
+                1 => "serve_decode_iter_b1_eager",
+                2 => "serve_decode_iter_b2_eager",
+                4 => "serve_decode_iter_b4_eager",
+                _ => "serve_decode_iter_b8_eager",
+            },
+            eager_ns,
+            "cpu",
+        );
+        row.extras.push(("batch", b as f64));
+        row.extras.push(("steps", STEPS as f64));
+        records.push(row);
+        let mut row = BenchRecord::new(
+            match b {
+                1 => "serve_decode_iter_b1_compiled",
+                2 => "serve_decode_iter_b2_compiled",
+                4 => "serve_decode_iter_b4_compiled",
+                _ => "serve_decode_iter_b8_compiled",
+            },
+            compiled_ns,
+            "cpu",
+        );
+        row.extras.push(("batch", b as f64));
+        row.extras.push(("steps", STEPS as f64));
+        row.extras.push(("speedup_vs_eager", eager_ns / compiled_ns));
+        records.push(row);
+        println!(
+            "decode iter b={b}: eager {:.1}us, compiled {:.1}us ({:.2}x)",
+            eager_ns / 1e3,
+            compiled_ns / 1e3,
+            eager_ns / compiled_ns
+        );
+    }
+}
+
+// ---- part 2: chunked-prefill interference ----------------------------------
+
+const SHORTS: usize = 12;
+const SHORT_PROMPT: usize = 8;
+const SHORT_NEW: usize = 4;
+const LONG_PROMPT: usize = 384;
+const CHUNK: usize = 32;
+
+fn p99(latencies: &[f64]) -> f64 {
+    let mut sorted = latencies.to_vec();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let idx = ((sorted.len() as f64) * 0.99).ceil() as usize;
+    sorted[idx.clamp(1, sorted.len()) - 1]
+}
+
+/// Serve `SHORTS` short decodes while one `LONG_PROMPT`-token admission
+/// lands mid-flight. Returns the shorts' p99 latency (seconds) and every
+/// request's token stream (shorts in submit order, then the long one) —
+/// the streams must not depend on the prefill policy.
+fn interference(model: &Arc<BertLike>, prefill_chunk: Option<usize>) -> (f64, Vec<Vec<i64>>) {
+    let cfg = ContinuousConfig {
+        max_active: 4,
+        page_tokens: 16,
+        pool_pages: None,
+        decode_buckets: None,
+        prefill_chunk,
+    };
+    let batcher = Arc::new(ContinuousBatcher::start(Arc::clone(model), &cfg).unwrap());
+    std::thread::scope(|s| {
+        let shorts: Vec<_> = (0..SHORTS)
+            .map(|i| {
+                let b = Arc::clone(&batcher);
+                s.spawn(move || {
+                    std::thread::sleep(Duration::from_millis(2 * i as u64));
+                    let prompt: Vec<i64> =
+                        (0..SHORT_PROMPT).map(|j| ((i * 13 + j * 5) % VOCAB) as i64).collect();
+                    let opts = GenerateOptions {
+                        max_new_tokens: SHORT_NEW,
+                        sampling: Sampling::Greedy,
+                        seed: 0,
+                        ..Default::default()
+                    };
+                    let t0 = Instant::now();
+                    let report = b.generate(&prompt, &opts).unwrap();
+                    (t0.elapsed().as_secs_f64(), report.tokens)
+                })
+            })
+            .collect();
+        let long = {
+            let b = Arc::clone(&batcher);
+            s.spawn(move || {
+                // land after decode traffic is flowing, before it drains
+                std::thread::sleep(Duration::from_millis(3));
+                let prompt: Vec<i64> =
+                    (0..LONG_PROMPT).map(|j| (j * 11 % VOCAB) as i64).collect();
+                let opts = GenerateOptions {
+                    max_new_tokens: SHORT_NEW,
+                    sampling: Sampling::Greedy,
+                    seed: 0,
+                    ..Default::default()
+                };
+                b.generate(&prompt, &opts).unwrap().tokens
+            })
+        };
+        let mut latencies = Vec::with_capacity(SHORTS);
+        let mut streams = Vec::with_capacity(SHORTS + 1);
+        for h in shorts {
+            let (lat, tokens) = h.join().unwrap();
+            latencies.push(lat);
+            streams.push(tokens);
+        }
+        streams.push(long.join().unwrap());
+        batcher.shutdown();
+        (p99(&latencies), streams)
+    })
+}
+
+fn bench_prefill_interference(records: &mut Vec<BenchRecord>) {
+    flashlight::util::rng::seed(42);
+    let model = Arc::new(BertLike::new(VOCAB, 64, 4, 2, LONG_PROMPT + 32));
+    let (whole_p99, whole_streams) = interference(&model, None);
+    let (chunked_p99, chunked_streams) = interference(&model, Some(CHUNK));
+    assert_eq!(
+        whole_streams, chunked_streams,
+        "chunked prefill must not change any request's token stream"
+    );
+    let mut row = BenchRecord::new("serve_prefill_interference_unchunked", whole_p99 * 1e9, "cpu");
+    row.extras.push(("latency_p99_us", whole_p99 * 1e6));
+    row.extras.push(("short_requests", SHORTS as f64));
+    row.extras.push(("long_prompt_tokens", LONG_PROMPT as f64));
+    records.push(row);
+    let mut row =
+        BenchRecord::new("serve_prefill_interference_chunked32", chunked_p99 * 1e9, "cpu");
+    row.extras.push(("latency_p99_us", chunked_p99 * 1e6));
+    row.extras.push(("prefill_chunk", CHUNK as f64));
+    row.extras.push(("p99_vs_unchunked", chunked_p99 / whole_p99));
+    records.push(row);
+    println!(
+        "prefill interference: whole-prompt p99 {:.1}ms, chunked({CHUNK}) p99 {:.1}ms ({:.2}x)",
+        whole_p99 * 1e3,
+        chunked_p99 * 1e3,
+        chunked_p99 / whole_p99
+    );
+}
+
+fn main() {
+    let mut records = Vec::new();
+    bench_decode_iterations(&mut records);
+    bench_prefill_interference(&mut records);
+    write_bench_json("BENCH_PR9.json", &records);
+}

@@ -95,20 +95,100 @@ impl BertLike {
     /// `i` is bit-identical to stepping that request alone — the
     /// correctness contract of the continuous batcher, fuzzed in
     /// `rust/tests/serve_continuous_fuzz.rs`.
+    /// The step is expressed over the same *segment* methods
+    /// ([`Self::decode_seg_embed`] / [`Self::decode_seg_mid`] /
+    /// [`Self::decode_seg_head`]) that [`crate::serve::CompiledDecodeStep`]
+    /// traces per batch-size bucket, with the per-request attention cores
+    /// ([`Self::decode_attention_core`]) running between segments in both
+    /// paths — so the compiled and eager decode iterations execute the
+    /// same op stream on the same values, and their bitwise parity is
+    /// structural.
     pub fn logits_decode_batch(&self, ids: &Tensor, caches: &mut [&mut PagedKvCache]) -> Variable {
         let dims = ids.dims().to_vec();
         assert_eq!(dims.len(), 2, "ids want [B, L]");
         assert_eq!(dims[1], 1, "decode steps one token per request");
         assert_eq!(dims[0], caches.len(), "one paged cache per batch row");
-        let offsets: Vec<usize> = caches.iter().map(|c| c.len()).collect();
-        let mut h = self.pos.forward_at_each(&self.tok.lookup(ids), &offsets);
-        for (i, layer) in self.layers.iter().enumerate() {
-            h = layer.forward_decode_batch(&h, caches, i);
+        assert!(!self.layers.is_empty(), "decode needs at least one transformer layer");
+        let offsets: Vec<i64> = caches.iter().map(|c| c.len() as i64).collect();
+        let max_len = self.max_len();
+        for &o in &offsets {
+            assert!((o as usize) < max_len, "position {o} exceeds max_len {max_len}");
+        }
+        let positions = Tensor::from_slice(&offsets, [caches.len()]);
+        let mut seg = self.decode_seg_embed(ids, &positions);
+        let depth = self.layers.len();
+        let mut logits = None;
+        for layer in 0..depth {
+            let ctx = self.decode_attention_core(layer, &seg[1], &seg[2], &seg[3], caches);
+            if layer + 1 < depth {
+                seg = self.decode_seg_mid(layer, &seg[0], &ctx);
+            } else {
+                logits = Some(self.decode_seg_head(layer, &seg[0], &ctx));
+            }
         }
         for c in caches.iter_mut() {
             c.advance(1);
         }
-        self.head.forward(&self.ln_f.forward(&h))
+        Variable::constant(logits.expect("at least one layer"))
+    }
+
+    /// First decode segment: token embedding, per-row positional add
+    /// (`positions` is i64 `[B]`), and layer 0's pre-attention half.
+    /// Returns `[hidden [B,1,D], q, k, v [B*H,1,hd]]` — the fixed
+    /// four-tensor segment interface shared with
+    /// [`Self::decode_seg_mid`]. Pure tensor math over `ids`/`positions`:
+    /// this is what `serve::CompiledDecodeStep` traces as its entry
+    /// program, with both arguments substitutable so neither token values
+    /// nor sequence depths ever force a re-trace.
+    pub fn decode_seg_embed(&self, ids: &Tensor, positions: &Tensor) -> Vec<Tensor> {
+        let b = ids.dims()[0];
+        let x = self.tok.lookup(ids);
+        let h = self.pos.forward_at_positions(&x, positions);
+        let (q, k, v) = self.layers[0].decode_attn_in(&h, b);
+        vec![h.tensor(), q.tensor(), k.tensor(), v.tensor()]
+    }
+
+    /// Middle decode segment: layer `layer`'s post-attention half
+    /// (output projection, residuals, MLP) over its attention contexts
+    /// `ctx` `[B*H,1,hd]`, then layer `layer + 1`'s pre-attention half.
+    /// Same four-tensor interface as [`Self::decode_seg_embed`].
+    pub fn decode_seg_mid(&self, layer: usize, h: &Tensor, ctx: &Tensor) -> Vec<Tensor> {
+        let b = h.dims()[0];
+        let x = self.layers[layer].decode_attn_out(
+            &Variable::constant(h.clone()),
+            &Variable::constant(ctx.clone()),
+            b,
+        );
+        let (q, k, v) = self.layers[layer + 1].decode_attn_in(&x, b);
+        vec![x.tensor(), q.tensor(), k.tensor(), v.tensor()]
+    }
+
+    /// Final decode segment: the last layer's post-attention half, final
+    /// layer norm, and the LM head — `[B,1,V]` logits.
+    pub fn decode_seg_head(&self, layer: usize, h: &Tensor, ctx: &Tensor) -> Tensor {
+        let b = h.dims()[0];
+        let x = self.layers[layer].decode_attn_out(
+            &Variable::constant(h.clone()),
+            &Variable::constant(ctx.clone()),
+            b,
+        );
+        self.head.forward(&self.ln_f.forward(&x)).tensor()
+    }
+
+    /// The per-request attention cores between two decode segments:
+    /// page writes, past gathers, and SDPA at each request's own length
+    /// (see [`crate::nn::MultiheadAttention`]'s `decode_cores`). Always
+    /// eager — KV lengths and page tables never appear inside a traced
+    /// segment.
+    pub fn decode_attention_core(
+        &self,
+        layer: usize,
+        q: &Tensor,
+        k: &Tensor,
+        v: &Tensor,
+        caches: &mut [&mut PagedKvCache],
+    ) -> Tensor {
+        self.layers[layer].attn.decode_cores(q, k, v, caches, layer)
     }
 
     /// Pool geometry matching this model for a given page size and

@@ -429,11 +429,46 @@ impl MultiheadAttention {
         let (b, l_new) = (dims[0], dims[1]);
         assert_eq!(l_new, 1, "iteration-level decode steps one token per sequence");
         assert_eq!(b, caches.len(), "one KV cache per batch row");
+        let (q, k, v) = self.decode_qkv(input, b);
+        let ctx = self.decode_cores(&q.tensor(), &k.tensor(), &v.tensor(), caches, layer);
+        self.decode_out(&Variable::constant(ctx), b)
+    }
+
+    /// The row-independent half of a batched decode step that *precedes*
+    /// attention: Q/K/V projections plus head split over `[B, 1, D]`,
+    /// yielding `[B*H, 1, hd]` each. Pure tensor math — this is one of
+    /// the pieces `serve::CompiledDecodeStep` traces per batch-size
+    /// bucket, and the eager [`Self::forward_decode_batch`] runs the
+    /// exact same ops through it, which is what keeps the compiled and
+    /// eager decode paths bitwise identical by construction.
+    pub(crate) fn decode_qkv(&self, input: &Variable, b: usize) -> (Variable, Variable, Variable) {
+        let q = self.split_heads(&self.wq.forward(input), b, 1);
+        let k = self.split_heads(&self.wk.forward(input), b, 1);
+        let v = self.split_heads(&self.wv.forward(input), b, 1);
+        (q, k, v)
+    }
+
+    /// The per-request attention cores of a batched decode step: for each
+    /// row, append this step's K/V to that request's pages, gather its
+    /// full past, and run the SDPA core at its own past length. KV
+    /// lengths and page tables live only here — never inside a traced
+    /// program — so varying them can never force a re-trace. Returns the
+    /// concatenated contexts `[B*H, 1, hd]`.
+    pub(crate) fn decode_cores(
+        &self,
+        q: &Tensor,
+        k: &Tensor,
+        v: &Tensor,
+        caches: &mut [&mut PagedKvCache],
+        layer: usize,
+    ) -> Tensor {
+        assert!(self.causal, "KV-cached attention requires causal masking");
         let h = self.heads;
-        let q = self.split_heads(&self.wq.forward(input), b, 1).tensor();
-        let k = self.split_heads(&self.wk.forward(input), b, 1).tensor();
-        let v = self.split_heads(&self.wv.forward(input), b, 1).tensor();
-        let mut ctx_rows: Vec<Tensor> = Vec::with_capacity(b);
+        // `>=`, not `==`: a compiled decode step padded up to its bucket
+        // size has more Q rows than live caches; the pad rows never reach
+        // an attention core.
+        assert!(q.dims()[0] >= caches.len() * h, "decode cores: fewer Q rows than KV caches");
+        let mut ctx_rows: Vec<Tensor> = Vec::with_capacity(caches.len());
         for (i, cache) in caches.iter_mut().enumerate() {
             let past = cache.len();
             let qi = q.narrow(0, i * h, h);
@@ -451,8 +486,15 @@ impl MultiheadAttention {
             ctx_rows.push(ctx.tensor());
         }
         let refs: Vec<&Tensor> = ctx_rows.iter().collect();
-        let ctx = Variable::constant(Tensor::concat(&refs, 0));
-        self.wo.forward(&self.merge_heads(&ctx, b, 1))
+        Tensor::concat(&refs, 0)
+    }
+
+    /// The row-independent half of a batched decode step that *follows*
+    /// attention: head merge plus output projection over the concatenated
+    /// contexts. Counterpart of [`Self::decode_qkv`]; also traced by
+    /// `serve::CompiledDecodeStep`.
+    pub(crate) fn decode_out(&self, ctx: &Variable, b: usize) -> Variable {
+        self.wo.forward(&self.merge_heads(ctx, b, 1))
     }
 }
 

@@ -55,15 +55,26 @@ impl PositionalEmbedding {
     /// [`Self::forward_at`] with `offset = offsets[i]` would feed it, so
     /// the batched add is bit-identical per row.
     pub fn forward_at_each(&self, input: &Variable, offsets: &[usize]) -> Variable {
-        let dims = input.dims();
-        assert_eq!(dims.len(), 3, "positional embedding wants [B, L, D]");
-        assert_eq!(dims[1], 1, "per-row offsets step one position per row");
-        assert_eq!(dims[0], offsets.len(), "one offset per batch row");
         for &o in offsets {
             assert!(o < self.max_len, "position {o} exceeds max_len {}", self.max_len);
         }
         let idx: Vec<i64> = offsets.iter().map(|&o| o as i64).collect();
-        let rows = ops::index_select0(&self.weight, &Tensor::from_slice(&idx, [idx.len()]));
+        self.forward_at_positions(input, &Tensor::from_slice(&idx, [idx.len()]))
+    }
+
+    /// [`Self::forward_at_each`] with the positions already materialized
+    /// as an `i64` `[B]` tensor. This is the traceable form: the position
+    /// tensor is a substitutable parameter of a compiled decode step, so
+    /// requests advancing through their sequences never change the traced
+    /// program. Positions are *not* range-checked here (a trace sees only
+    /// example values); the eager wrapper and the scheduler's admission
+    /// bounds (`prompt + max_new <= max_len`) keep them in range.
+    pub fn forward_at_positions(&self, input: &Variable, positions: &Tensor) -> Variable {
+        let dims = input.dims();
+        assert_eq!(dims.len(), 3, "positional embedding wants [B, L, D]");
+        assert_eq!(dims[1], 1, "per-row offsets step one position per row");
+        assert_eq!(positions.dims(), &[dims[0]][..], "one position per batch row");
+        let rows = ops::index_select0(&self.weight, positions);
         let pos = ops::reshape(&rows, &[dims[0] as isize, 1, dims[2] as isize]);
         ops::add(input, &pos)
     }
@@ -147,7 +158,26 @@ impl TransformerEncoderLayer {
         caches: &mut [&mut PagedKvCache],
         layer: usize,
     ) -> Variable {
-        let a = self.attn.forward_decode_batch(&self.ln1.forward(input), caches, layer);
+        let b = input.dims()[0];
+        let (q, k, v) = self.decode_attn_in(input, b);
+        let ctx = self.attn.decode_cores(&q.tensor(), &k.tensor(), &v.tensor(), caches, layer);
+        self.decode_attn_out(input, &Variable::constant(ctx), b)
+    }
+
+    /// Row-independent prefix of this layer's decode step: pre-norm plus
+    /// Q/K/V projection/split. Traced by `serve::CompiledDecodeStep` and
+    /// run verbatim by the eager [`Self::forward_decode_batch`] — shared
+    /// code is what makes compiled-vs-eager parity structural rather than
+    /// coincidental.
+    pub(crate) fn decode_attn_in(&self, x: &Variable, b: usize) -> (Variable, Variable, Variable) {
+        self.attn.decode_qkv(&self.ln1.forward(x), b)
+    }
+
+    /// Row-independent suffix of this layer's decode step: output
+    /// projection of the attention contexts, attention residual, MLP, MLP
+    /// residual. Counterpart of [`Self::decode_attn_in`].
+    pub(crate) fn decode_attn_out(&self, input: &Variable, ctx: &Variable, b: usize) -> Variable {
+        let a = self.attn.decode_out(ctx, b);
         let x = ops::add(input, &self.drop.forward(&a));
         let h = self.fc2.forward(&ops::gelu(&self.fc1.forward(&self.ln2.forward(&x))));
         ops::add(&x, &self.drop.forward(&h))

@@ -1,0 +1,283 @@
+//! Bucket-compiled continuous-batching decode iterations.
+//!
+//! The continuous batcher's inner loop — one `[B, 1]` token step for `B`
+//! cohabiting requests — is the hottest forward in the serving stack,
+//! and until this module it ran eagerly while everything around it
+//! (training steps, bucketed scoring forwards) went through the graph
+//! compiler. The blocker was shape dynamism in the *middle* of the step:
+//! every request sits at its own KV length with its own page table, so a
+//! monolithic trace would either bake lengths in (re-trace every
+//! iteration) or pad the KV gather (changing reduction widths and
+//! breaking the bitwise-parity contract).
+//!
+//! The resolution is to compile the step as *segments* around the
+//! attention cores. Per batch-size bucket `B`, [`CompiledDecodeStep`]
+//! traces `depth + 1` multi-output programs over the same methods the
+//! eager [`BertLike::logits_decode_batch`] runs:
+//!
+//! - **embed segment** `(ids [B,1] i64, positions [B] i64) → (h, q, k, v)`:
+//!   token + positional embedding and layer 0's pre-attention half;
+//! - **mid segment** per layer `(h, ctx) → (h', q', k', v')`: one layer's
+//!   post-attention half (output projection, residuals, MLP) plus the
+//!   next layer's pre-attention half;
+//! - **head segment** `(h, ctx) → logits [B,1,V]`: the last layer's
+//!   post-attention half, final norm, and LM head.
+//!
+//! Between segments the per-request attention cores (page write, past
+//! gather, SDPA at each request's own length) run eagerly, exactly as
+//! the eager path runs them. KV lengths and page tables therefore never
+//! appear inside a traced program — only `ids` and `positions` are
+//! substitutable inputs — so requests advancing through their sequences
+//! never force a re-trace, and compiled-vs-eager bitwise parity is
+//! structural: both paths execute the same op stream on the same values
+//! (the compiler's passes are bit-preserving, which the graph fuzzer and
+//! `rust/tests/serve.rs` pin).
+//!
+//! A batch smaller than its bucket is padded with token 0 at position 0;
+//! pad rows get no attention core (they have no cache) — their contexts
+//! are zero blocks — and their logits rows are sliced off. Row
+//! independence of every traced op makes pad rows inert. A batch larger
+//! than every bucket returns `None` (an observable *compile miss*) and
+//! the caller falls back to the eager path.
+
+use std::sync::Arc;
+
+use crate::autograd::no_grad;
+use crate::models::BertLike;
+use crate::nn::PagedKvCache;
+use crate::tensor::graph::{trace_and_compile_many, CompiledFn, CompiledInstr, CompiledProgram};
+use crate::tensor::{DType, Op, Tensor, TensorBackend, ValueRef};
+use crate::util::error::{Error, Result};
+
+use super::session::quiesced_default_backend;
+
+/// One bucket: the `depth + 1` compiled segment programs for a fixed
+/// batch size.
+struct DecodeBucket {
+    size: usize,
+    /// `[embed, mid(0), …, mid(depth-2), head]`.
+    segs: Vec<CompiledFn>,
+}
+
+/// The continuous batcher's decode iteration, traced and compiled once
+/// per batch-size bucket at startup (see the module docs for the segment
+/// layout). Steady-state serving re-traces nothing: every iteration
+/// whose batch fits a bucket runs the cached programs with fresh
+/// `ids`/`positions`, and the per-request attention cores run eagerly
+/// between segments.
+pub struct CompiledDecodeStep {
+    /// Ascending by batch size; a batch routes to the smallest bucket
+    /// that fits.
+    buckets: Vec<DecodeBucket>,
+    backend: Arc<dyn TensorBackend>,
+    heads: usize,
+    head_dim: usize,
+    vocab: usize,
+}
+
+/// Reject a compiled segment whose *outputs* depend on an RNG op. A
+/// model traced in train mode (live dropout) would replay the trace-time
+/// random stream on every call — silently wrong serving. Ops that are
+/// captured but never reach an output (e.g. tensor work from another
+/// thread caught by the process-global trace backend) are retained by
+/// the compiler as effectful but harmless, so only reachable RNG is an
+/// error.
+fn check_rng_free(program: &CompiledProgram, what: &str) -> Result<()> {
+    let mut needed = vec![false; program.instrs.len()];
+    let mut stack: Vec<usize> = program
+        .outputs
+        .iter()
+        .filter_map(|r| match r {
+            ValueRef::Out(i) => Some(*i),
+            ValueRef::Const(_) => None,
+        })
+        .collect();
+    while let Some(i) = stack.pop() {
+        if needed[i] {
+            continue;
+        }
+        needed[i] = true;
+        for r in program.instrs[i].inputs() {
+            if let ValueRef::Out(j) = r {
+                stack.push(*j);
+            }
+        }
+    }
+    for (i, instr) in program.instrs.iter().enumerate() {
+        if !needed[i] {
+            continue;
+        }
+        if let CompiledInstr::Op { op, .. } = instr {
+            if matches!(op, Op::RandUniform { .. } | Op::RandNormal { .. }) {
+                return Err(Error::msg(format!(
+                    "serve: decode segment `{what}` traced an RNG op ({}); compile the decode \
+                     step only for eval-mode models (dropout off)",
+                    op.name()
+                )));
+            }
+        }
+    }
+    Ok(())
+}
+
+impl CompiledDecodeStep {
+    /// Trace and compile the decode step of `model` for every batch size
+    /// in `bucket_sizes`. Tracing installs the capture backend
+    /// process-globally (the same caveat as
+    /// [`super::InferenceSession::compile`]): compile on a quiescent
+    /// process, before serving threads start — the batcher does this on
+    /// the caller's thread inside `ContinuousBatcher::start`, which is
+    /// what makes startup the warmup.
+    pub fn compile(model: &BertLike, bucket_sizes: &[usize]) -> Result<CompiledDecodeStep> {
+        let mut sizes: Vec<usize> = bucket_sizes.to_vec();
+        sizes.sort_unstable();
+        sizes.dedup();
+        if sizes.is_empty() || sizes[0] == 0 {
+            return Err(Error::msg("serve: decode buckets must be non-empty and positive"));
+        }
+        let depth = model.depth();
+        if depth == 0 {
+            return Err(Error::msg("serve: decode compilation needs at least one layer"));
+        }
+        let (heads, head_dim, dim, vocab) =
+            (model.heads(), model.head_dim(), model.dim(), model.vocab());
+        let backend = quiesced_default_backend();
+        let mut buckets = Vec::with_capacity(sizes.len());
+        for &b in &sizes {
+            let mut segs = Vec::with_capacity(depth + 1);
+            let seg = no_grad(|| {
+                let ex =
+                    [Tensor::full([b, 1], 0.0, DType::I64), Tensor::full([b], 0.0, DType::I64)];
+                trace_and_compile_many(&ex, |a| model.decode_seg_embed(&a[0], &a[1]))
+            })
+            .map_err(|e| Error::msg(format!("serve: decode bucket {b} embed segment: {e}")))?;
+            segs.push(seg);
+            for layer in 0..depth {
+                let last = layer + 1 == depth;
+                let seg = no_grad(|| {
+                    let ex = [Tensor::zeros([b, 1, dim]), Tensor::zeros([b * heads, 1, head_dim])];
+                    if last {
+                        trace_and_compile_many(&ex, |a| {
+                            vec![model.decode_seg_head(layer, &a[0], &a[1])]
+                        })
+                    } else {
+                        trace_and_compile_many(&ex, |a| model.decode_seg_mid(layer, &a[0], &a[1]))
+                    }
+                })
+                .map_err(|e| {
+                    Error::msg(format!("serve: decode bucket {b} layer {layer} segment: {e}"))
+                })?;
+                segs.push(seg);
+            }
+            // validate each segment once: no reachable RNG, and a probe
+            // run (the traced examples are still the programs' defaults)
+            // confirming the segment interface shapes
+            for (i, seg) in segs.iter().enumerate() {
+                let what = seg_name(i, depth);
+                check_rng_free(seg.program(), &format!("bucket {b} {what}"))?;
+                let probe = seg.program().run(backend.as_ref())?;
+                let expect: Vec<Vec<usize>> = if i == depth {
+                    vec![vec![b, 1, vocab]]
+                } else {
+                    vec![
+                        vec![b, 1, dim],
+                        vec![b * heads, 1, head_dim],
+                        vec![b * heads, 1, head_dim],
+                        vec![b * heads, 1, head_dim],
+                    ]
+                };
+                if probe.len() != expect.len()
+                    || probe.iter().zip(&expect).any(|(t, e)| t.dims() != e.as_slice())
+                {
+                    return Err(Error::msg(format!(
+                        "serve: decode bucket {b} {what} produced unexpected output shapes \
+                         {:?} (want {expect:?})",
+                        probe.iter().map(|t| t.dims().to_vec()).collect::<Vec<_>>()
+                    )));
+                }
+            }
+            buckets.push(DecodeBucket { size: b, segs });
+        }
+        Ok(CompiledDecodeStep { buckets, backend, heads, head_dim, vocab })
+    }
+
+    /// The compiled batch sizes, ascending.
+    pub fn bucket_sizes(&self) -> Vec<usize> {
+        self.buckets.iter().map(|b| b.size).collect()
+    }
+
+    /// Total compiled segment programs (`buckets × (depth + 1)`) — fixed
+    /// at construction, which is how telemetry proves zero steady-state
+    /// re-tracing.
+    pub fn program_count(&self) -> usize {
+        self.buckets.iter().map(|b| b.segs.len()).sum()
+    }
+
+    /// One compiled decode iteration: step each request in `caches` by
+    /// its token in `tokens` (row `i` of both belongs to the same
+    /// request), returning `[B, 1, V]` logits bit-identical to
+    /// [`BertLike::logits_decode_batch`] over the same rows — or
+    /// `Ok(None)` if no bucket fits (the caller's eager-fallback /
+    /// `compile_misses` path).
+    ///
+    /// Caches advance only after every segment succeeded, and this
+    /// step's K/V page writes are bitwise identical to the ones the
+    /// eager path would make, so an `Err` mid-step leaves the caches
+    /// safe for an eager retry of the same iteration.
+    pub fn step(
+        &self,
+        model: &BertLike,
+        tokens: &[i64],
+        caches: &mut [&mut PagedKvCache],
+    ) -> Result<Option<Tensor>> {
+        let n = caches.len();
+        assert_eq!(tokens.len(), n, "one token per KV cache");
+        if n == 0 {
+            return Ok(None);
+        }
+        let Some(bucket) = self.buckets.iter().find(|bk| bk.size >= n) else {
+            return Ok(None);
+        };
+        let bsize = bucket.size;
+        let depth = bucket.segs.len() - 1;
+        let mut ids = tokens.to_vec();
+        ids.resize(bsize, 0);
+        let mut positions: Vec<i64> = caches.iter().map(|c| c.len() as i64).collect();
+        positions.resize(bsize, 0);
+        let ids = Tensor::from_slice(&ids, [bsize, 1]);
+        let positions = Tensor::from_slice(&positions, [bsize]);
+        let be = self.backend.as_ref();
+        let (mut seg, _) = bucket.segs[0].call_owned_many(be, vec![ids, positions], true)?;
+        for layer in 0..depth {
+            let v = seg.pop().expect("segment interface: 4 outputs");
+            let k = seg.pop().expect("segment interface: 4 outputs");
+            let q = seg.pop().expect("segment interface: 4 outputs");
+            let h = seg.pop().expect("segment interface: 4 outputs");
+            let ctx_live = model.decode_attention_core(layer, &q, &k, &v, caches);
+            let ctx = if bsize > n {
+                let pad = Tensor::zeros([(bsize - n) * self.heads, 1, self.head_dim]);
+                Tensor::concat(&[&ctx_live, &pad], 0)
+            } else {
+                ctx_live
+            };
+            let (next, _) = bucket.segs[layer + 1].call_owned_many(be, vec![h, ctx], true)?;
+            seg = next;
+        }
+        let logits = seg.pop().expect("head segment: 1 output");
+        debug_assert_eq!(logits.dims(), &[bsize, 1, self.vocab][..]);
+        for c in caches.iter_mut() {
+            c.advance(1);
+        }
+        Ok(Some(if bsize > n { logits.narrow(0, 0, n) } else { logits }))
+    }
+}
+
+fn seg_name(i: usize, depth: usize) -> String {
+    if i == 0 {
+        "embed segment".to_string()
+    } else if i == depth {
+        "head segment".to_string()
+    } else {
+        format!("mid segment {}", i - 1)
+    }
+}

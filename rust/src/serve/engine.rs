@@ -23,8 +23,9 @@ pub struct EngineConfig {
     pub max_wait: Duration,
     /// Worker threads.
     pub workers: usize,
-    /// Continuous-decode policy (slots, KV page size, pool capacity);
-    /// only used by [`Engine::start_lm`] engines.
+    /// Continuous-decode policy (slots, KV page size, pool capacity,
+    /// decode buckets, prefill chunking); only used by
+    /// [`Engine::start_lm`] engines.
     pub decode: ContinuousConfig,
 }
 
@@ -78,7 +79,10 @@ impl Engine {
     /// Deploy a transformer LM: compiles `model.logits` over `[b, seq_len]`
     /// token windows for every batch bucket (scoring traffic), and starts
     /// the continuous scheduler for [`Engine::generate`] /
-    /// [`Engine::submit_generate`] requests.
+    /// [`Engine::submit_generate`] requests. Starting the scheduler also
+    /// pre-compiles the decode-iteration buckets
+    /// ([`super::CompiledDecodeStep`]) — engine startup is the warmup, so
+    /// the first generation request never pays a trace+compile.
     pub fn start_lm(
         model: Arc<BertLike>,
         seq_len: usize,

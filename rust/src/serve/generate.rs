@@ -79,8 +79,14 @@ pub struct GenerateReport {
     /// context).
     pub generated: usize,
     /// Seconds spent in the prefill pass (0 for the uncached path, which
-    /// has no separate prefill).
+    /// has no separate prefill). Under the continuous scheduler's chunked
+    /// prefill this sums every chunk's forward time.
     pub prefill_secs: f64,
+    /// Prefill forward passes this request ran: 1 for a whole-prompt
+    /// prefill (the solo cached path and unchunked admissions), the chunk
+    /// count for a chunked admission, 0 when no prefill ran (the uncached
+    /// path, or `max_new_tokens == 0` under the scheduler).
+    pub prefill_chunks: usize,
     /// Seconds spent decoding.
     pub decode_secs: f64,
     /// Generated tokens per decode second.
@@ -155,6 +161,7 @@ pub fn generate(
     Ok(GenerateReport {
         generated,
         prefill_secs,
+        prefill_chunks: if opts.use_cache { 1 } else { 0 },
         decode_secs,
         tokens_per_sec: if decode_secs > 0.0 { generated as f64 / decode_secs } else { 0.0 },
         tokens,

@@ -23,23 +23,32 @@
 //!   full-context recompute.
 //! - [`ContinuousBatcher`] schedules decode at **iteration** granularity
 //!   (the Orca design): the batch is re-formed every token, new requests
-//!   join mid-flight right after their prefill, finished ones retire
-//!   immediately, and each request's KV cache lives in fixed-size pages
-//!   leased from a shared [`crate::memory::KvPagePool`] (admission
-//!   backpressures on pool exhaustion instead of panicking). Contract:
-//!   every request is bit-identical to its solo decode — fuzzed over
-//!   randomized schedules by `rust/tests/serve_continuous_fuzz.rs`.
+//!   join mid-flight right after their prefill (whole or Sarathi-style
+//!   chunked, one chunk per pass), finished ones retire immediately, and
+//!   each request's KV cache lives in fixed-size pages leased from a
+//!   shared [`crate::memory::KvPagePool`] (admission backpressures on
+//!   pool exhaustion instead of panicking). Contract: every request is
+//!   bit-identical to its solo decode — fuzzed over randomized schedules
+//!   by `rust/tests/serve_continuous_fuzz.rs`.
+//! - [`CompiledDecodeStep`] compiles the batcher's per-token decode
+//!   iteration once per batch-size bucket at startup (segments around
+//!   the eager per-request attention cores, so KV lengths never enter a
+//!   trace) — the hot serving loop runs compiled with zero steady-state
+//!   re-tracing, bit-identical to the eager step, with an eager fallback
+//!   counted as `compile_misses` telemetry.
 //! - [`Engine`] ties them together: per-request latency percentiles
 //!   ([`crate::meter::PercentileMeter`]), goodput and occupancy
 //!   telemetry, and graceful worker shutdown (safe to race submits).
 
 pub mod batcher;
+pub mod decode;
 pub mod engine;
 pub mod generate;
 pub mod scheduler;
 pub mod session;
 
 pub use batcher::{Batcher, BatcherConfig, BatcherStats, ResponseHandle};
+pub use decode::CompiledDecodeStep;
 pub use engine::{Engine, EngineConfig, EngineStats};
 pub use generate::{generate, GenerateOptions, GenerateReport, Sampling};
 pub use scheduler::{ContinuousBatcher, ContinuousConfig, ContinuousStats, GenHandle};

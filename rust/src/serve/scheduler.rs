@@ -7,17 +7,26 @@
 //! [`ContinuousBatcher`] schedules at *iteration* granularity instead:
 //!
 //! 1. **Intake** — drain newly submitted requests into a FIFO queue.
-//! 2. **Admission** — while a decode slot is free, pop the queue head,
-//!    reserve its worst-case KV pages (prompt + max new tokens) from the
-//!    shared [`KvPagePool`], and run its prefill solo (`[1, L]` — the
-//!    exact computation a solo decode would run). If the pool cannot
-//!    serve the reservation, the head *waits* (backpressure) until a
-//!    retirement frees pages — admission is FIFO, so a starved request
-//!    cannot be overtaken forever.
-//! 3. **Iteration** — step every active sequence one token with a single
-//!    batched forward ([`BertLike::logits_decode_batch`]), sample each
-//!    row on its own per-request RNG stream, and **retire** finished
-//!    sequences immediately — their pages return to the pool the moment
+//! 2. **Admission** — while a decode slot is free, pop the queue head
+//!    and reserve its worst-case KV pages (prompt + max new tokens) from
+//!    the shared [`KvPagePool`]. Short prompts prefill inline, solo
+//!    (`[1, L]` — the exact computation a solo decode would run); with
+//!    [`ContinuousConfig::prefill_chunk`] set, longer prompts enter a
+//!    *prefilling* state instead and run one fixed-size chunk per
+//!    scheduling pass (Sarathi-style chunked prefill), so a huge
+//!    admission no longer stalls every in-flight decode for a full
+//!    prefill pass. If the pool cannot serve the reservation, the head
+//!    *waits* (backpressure) until a retirement frees pages — admission
+//!    is FIFO, so a starved request cannot be overtaken forever.
+//! 3. **Iteration** — step every active sequence one token. The batched
+//!    forward runs through [`super::CompiledDecodeStep`] when the batch
+//!    size fits a pre-compiled bucket (the default; buckets compile once
+//!    at [`ContinuousBatcher::start`], so steady state re-traces
+//!    nothing), and falls back to the eager
+//!    [`BertLike::logits_decode_batch`] otherwise — an observable
+//!    *compile miss*. Both paths are bitwise identical. Each row samples
+//!    on its own per-request RNG stream, and finished sequences
+//!    **retire** immediately — their pages return to the pool the moment
 //!    the cache drops, and the freed slot admits the next queued request
 //!    on the very next iteration.
 //!
@@ -46,6 +55,7 @@ use crate::tensor::Tensor;
 use crate::util::error::{Error, Result};
 use crate::util::rng::Rng;
 
+use super::decode::CompiledDecodeStep;
 use super::generate::{last_position_logits, sample, GenerateOptions, GenerateReport, Sampling};
 
 /// Continuous-scheduler knobs.
@@ -60,11 +70,31 @@ pub struct ContinuousConfig {
     /// worst-case (model `max_len`) sequences; smaller values trade
     /// admission backpressure for memory.
     pub pool_pages: Option<usize>,
+    /// Batch-size buckets to pre-compile the decode iteration for at
+    /// startup. `None` picks powers of two up to `max_active` plus
+    /// `max_active` itself — with that set every feasible batch size
+    /// fits a bucket, so steady state never misses. `Some(vec![])`
+    /// disables compiled decode entirely (every iteration runs eagerly
+    /// and counts as a miss).
+    pub decode_buckets: Option<Vec<usize>>,
+    /// Sarathi-style chunked prefill: prompts longer than this many
+    /// tokens prefill in chunks of this size, one chunk per scheduling
+    /// pass, interleaved with decode iterations. `None` prefills every
+    /// prompt whole in one pass. Chunk boundaries cannot change any bits
+    /// (the incremental-vs-recompute contract the KV cache already
+    /// pins), only scheduling latency.
+    pub prefill_chunk: Option<usize>,
 }
 
 impl Default for ContinuousConfig {
     fn default() -> Self {
-        ContinuousConfig { max_active: 8, page_tokens: 16, pool_pages: None }
+        ContinuousConfig {
+            max_active: 8,
+            page_tokens: 16,
+            pool_pages: None,
+            decode_buckets: None,
+            prefill_chunk: None,
+        }
     }
 }
 
@@ -79,8 +109,24 @@ pub struct ContinuousStats {
     pub generated_tokens: u64,
     /// Batched decode iterations run.
     pub iterations: u64,
-    /// Prefill passes run (== admissions).
+    /// Admissions that ran a prefill (every admission does).
     pub prefills: u64,
+    /// Prefill forward passes run. Equal to `prefills` without chunking;
+    /// with chunking each admission contributes one pass per chunk.
+    pub prefill_chunks: u64,
+    /// Admissions whose prefill was split into more than one chunk.
+    pub chunked_admissions: u64,
+    /// Decode iterations served by a pre-compiled bucket program.
+    pub compiled_iterations: u64,
+    /// Decode iterations that fell back to the eager path (no bucket
+    /// fits, a compiled step failed, or compiled decode is disabled).
+    /// `compiled_iterations + compile_misses == iterations`, always.
+    pub compile_misses: u64,
+    /// Compiled decode segment programs, fixed at startup
+    /// (`buckets × (depth + 1)`; zero when compiled decode is disabled).
+    /// Constant across the batcher's lifetime — the observable form of
+    /// the zero-steady-state-re-tracing guarantee.
+    pub decode_compiles: u64,
     /// Admissions deferred because the pool could not serve the
     /// reservation (each deferral counts once per scheduling pass).
     pub backpressure_stalls: u64,
@@ -137,6 +183,10 @@ struct SchedulerMetrics {
     generated: AtomicU64,
     iterations: AtomicU64,
     prefills: AtomicU64,
+    prefill_chunks: AtomicU64,
+    chunked_admissions: AtomicU64,
+    compiled_iters: AtomicU64,
+    compile_misses: AtomicU64,
     stalls: AtomicU64,
     busy_nanos: AtomicU64,
     latency_us: Mutex<PercentileMeter>,
@@ -160,16 +210,46 @@ struct ActiveSeq {
     resp: Sender<Result<GenerateReport>>,
     enqueued: Instant,
     prefill_secs: f64,
+    prefill_chunks: usize,
     decode_started: Instant,
+}
+
+/// An admitted sequence whose prompt is still prefilling, one chunk per
+/// scheduling pass. Pages are already reserved (same worst-case
+/// reservation as an inline admission), so chunking never changes the
+/// backpressure schedule — only when the prefill compute happens.
+struct PrefillingSeq {
+    prompt: Vec<i64>,
+    /// Prompt positions already written into the cache.
+    filled: usize,
+    chunk: usize,
+    cache: PagedKvCache,
+    opts: GenerateOptions,
+    resp: Sender<Result<GenerateReport>>,
+    enqueued: Instant,
+    /// Prefill seconds summed across the chunks run so far.
+    prefill_secs: f64,
+    prefill_chunks: usize,
 }
 
 enum Admitted {
     /// Prefilled and sampling; joins the decode batch next iteration.
     Running(Box<ActiveSeq>),
+    /// Admitted with pages reserved; prefilling chunk by chunk.
+    Prefilling(Box<PrefillingSeq>),
     /// Finished at admission (`max_new_tokens == 1` needs no decode step).
     Done,
     /// The pool cannot serve the reservation yet; retry after retirements.
     Wait(GenRequest),
+}
+
+/// Outcome of one prefill chunk.
+enum Prefilled {
+    /// More prompt remains; run another chunk next pass.
+    Still(Box<PrefillingSeq>),
+    /// Prompt fully prefilled, last position's logits captured; the
+    /// caller samples its first token and it joins the decode batch.
+    Ready(Box<ActiveSeq>),
 }
 
 /// The continuous batcher: one scheduler thread owning the decode loop,
@@ -186,10 +266,17 @@ pub struct ContinuousBatcher {
     metrics: Arc<SchedulerMetrics>,
     pool: Arc<KvPagePool>,
     model: Arc<BertLike>,
+    /// Compiled decode segment programs (fixed at startup; see
+    /// [`ContinuousStats::decode_compiles`]).
+    decode_compiles: u64,
 }
 
 impl ContinuousBatcher {
-    /// Start the scheduler thread for `model`.
+    /// Start the scheduler thread for `model`. Decode buckets compile
+    /// here, on the caller's thread, *before* the scheduler spawns —
+    /// startup is the warmup, so the first live request never pays a
+    /// trace+compile. (Tracing installs the capture backend
+    /// process-globally; start batchers on a quiescent process.)
     pub fn start(model: Arc<BertLike>, cfg: &ContinuousConfig) -> Result<ContinuousBatcher> {
         if cfg.max_active == 0 {
             return Err(Error::msg("serve: continuous batching needs at least one decode slot"));
@@ -197,9 +284,29 @@ impl ContinuousBatcher {
         if cfg.page_tokens == 0 {
             return Err(Error::msg("serve: KV pages must hold at least one position"));
         }
+        if cfg.prefill_chunk == Some(0) {
+            return Err(Error::msg("serve: prefill chunks must hold at least one token"));
+        }
         if model.depth() == 0 {
             return Err(Error::msg("serve: the model has no transformer layers to cache"));
         }
+        let bucket_sizes: Vec<usize> = match &cfg.decode_buckets {
+            Some(sizes) => sizes.clone(),
+            None => {
+                // powers of two below max_active, plus max_active: every
+                // batch size the scheduler can form fits some bucket
+                let mut sizes: Vec<usize> =
+                    (0..).map(|i| 1usize << i).take_while(|&b| b < cfg.max_active).collect();
+                sizes.push(cfg.max_active);
+                sizes
+            }
+        };
+        let compiled: Option<Arc<CompiledDecodeStep>> = if bucket_sizes.is_empty() {
+            None
+        } else {
+            Some(Arc::new(CompiledDecodeStep::compile(&model, &bucket_sizes)?))
+        };
+        let decode_compiles = compiled.as_ref().map_or(0, |c| c.program_count() as u64);
         let per_seq = model.max_len().div_ceil(cfg.page_tokens);
         let pages = cfg.pool_pages.unwrap_or(cfg.max_active * per_seq).max(1);
         let pool = KvPagePool::new(model.kv_pool_config(cfg.page_tokens, pages));
@@ -209,10 +316,14 @@ impl ContinuousBatcher {
             let model = Arc::clone(&model);
             let pool = Arc::clone(&pool);
             let metrics = Arc::clone(&metrics);
-            let max_active = cfg.max_active;
+            let knobs = SchedulerKnobs {
+                max_active: cfg.max_active,
+                prefill_chunk: cfg.prefill_chunk,
+                compiled,
+            };
             std::thread::Builder::new()
                 .name("serve-continuous".into())
-                .spawn(move || scheduler_loop(&rx, &model, &pool, max_active, &metrics))
+                .spawn(move || scheduler_loop(&rx, &model, &pool, &knobs, &metrics))
                 .map_err(|e| Error::msg(format!("serve: failed to spawn scheduler: {e}")))?
         };
         Ok(ContinuousBatcher {
@@ -221,6 +332,7 @@ impl ContinuousBatcher {
             metrics,
             pool,
             model,
+            decode_compiles,
         })
     }
 
@@ -244,6 +356,7 @@ impl ContinuousBatcher {
                 tokens: prompt.to_vec(),
                 generated: 0,
                 prefill_secs: 0.0,
+                prefill_chunks: 0,
                 decode_secs: 0.0,
                 tokens_per_sec: 0.0,
                 step_logits: Vec::new(),
@@ -317,6 +430,11 @@ impl ContinuousBatcher {
             generated_tokens: generated,
             iterations: m.iterations.load(Ordering::Relaxed),
             prefills: m.prefills.load(Ordering::Relaxed),
+            prefill_chunks: m.prefill_chunks.load(Ordering::Relaxed),
+            chunked_admissions: m.chunked_admissions.load(Ordering::Relaxed),
+            compiled_iterations: m.compiled_iters.load(Ordering::Relaxed),
+            compile_misses: m.compile_misses.load(Ordering::Relaxed),
+            decode_compiles: self.decode_compiles,
             backpressure_stalls: m.stalls.load(Ordering::Relaxed),
             busy_secs: busy,
             goodput_tps: if busy > 0.0 { generated as f64 / busy } else { 0.0 },
@@ -353,19 +471,27 @@ impl Drop for ContinuousBatcher {
     }
 }
 
+/// The per-thread scheduler configuration `start()` hands the loop.
+struct SchedulerKnobs {
+    max_active: usize,
+    prefill_chunk: Option<usize>,
+    compiled: Option<Arc<CompiledDecodeStep>>,
+}
+
 fn scheduler_loop(
     rx: &Receiver<GenRequest>,
     model: &BertLike,
     pool: &Arc<KvPagePool>,
-    max_active: usize,
+    knobs: &SchedulerKnobs,
     metrics: &SchedulerMetrics,
 ) {
     let mut pending: VecDeque<GenRequest> = VecDeque::new();
     let mut active: Vec<ActiveSeq> = Vec::new();
+    let mut prefilling: Vec<Box<PrefillingSeq>> = Vec::new();
     let mut disconnected = false;
     loop {
         // 1) intake: block only when idle, otherwise drain without waiting
-        if active.is_empty() && pending.is_empty() {
+        if active.is_empty() && prefilling.is_empty() && pending.is_empty() {
             if disconnected {
                 break;
             }
@@ -385,15 +511,19 @@ fn scheduler_loop(
                 }
             }
         }
-        // 2) admission: FIFO; stop at the first head the pool can't serve
-        while active.len() < max_active {
+        // 2) admission: FIFO; stop at the first head the pool can't
+        // serve. Prefilling sequences hold decode slots — they will join
+        // the batch, and slot-bounding them bounds chunked-prefill work
+        // per pass.
+        while active.len() + prefilling.len() < knobs.max_active {
             let Some(req) = pending.pop_front() else { break };
-            match admit(model, pool, req, metrics) {
+            match admit(model, pool, req, metrics, knobs.prefill_chunk) {
                 Admitted::Running(seq) => active.push(*seq),
+                Admitted::Prefilling(seq) => prefilling.push(seq),
                 Admitted::Done => {}
                 Admitted::Wait(req) => {
                     metrics.stalls.fetch_add(1, Ordering::Relaxed);
-                    if active.is_empty() {
+                    if active.is_empty() && prefilling.is_empty() {
                         // every page is free yet the reservation failed —
                         // unreachable when submit() validated capacity,
                         // but fail loudly rather than livelock
@@ -409,11 +539,31 @@ fn scheduler_loop(
                 }
             }
         }
+        // 2b) chunked prefill: advance each prefilling sequence one
+        // chunk, interleaved with the decode iteration below so a long
+        // prompt never monopolizes a pass
+        if !prefilling.is_empty() {
+            let mut still = Vec::with_capacity(prefilling.len());
+            for p in prefilling.drain(..) {
+                match prefill_chunk_step(model, p, metrics) {
+                    Prefilled::Still(p) => still.push(p),
+                    Prefilled::Ready(mut seq) => {
+                        step_seq(&mut seq);
+                        if seq.generated >= seq.max_new {
+                            retire(*seq, metrics);
+                        } else {
+                            active.push(*seq);
+                        }
+                    }
+                }
+            }
+            prefilling = still;
+        }
         if active.is_empty() {
             continue;
         }
         // 3) one iteration: step every active sequence one token
-        set_occupancy(metrics, active.len() as f64);
+        set_occupancy(metrics, (active.len() + prefilling.len()) as f64);
         metrics
             .batch_fill
             .lock()
@@ -422,11 +572,26 @@ fn scheduler_loop(
         let t0 = Instant::now();
         let last_tokens: Vec<i64> =
             active.iter().map(|s| *s.tokens.last().expect("nonempty prompt")).collect();
-        let ids = Tensor::from_slice(&last_tokens, [active.len(), 1]);
         let logits = {
             let mut caches: Vec<&mut PagedKvCache> =
                 active.iter_mut().map(|s| &mut s.cache).collect();
-            no_grad(|| model.logits_decode_batch(&ids, &mut caches)).tensor()
+            // compiled first; any miss (no bucket, a failed step, or
+            // compiled decode disabled) falls back to the bit-identical
+            // eager path — the iteration always completes
+            let compiled_out: Option<Tensor> = knobs.compiled.as_ref().and_then(|cs| {
+                no_grad(|| cs.step(model, &last_tokens, &mut caches)).ok().flatten()
+            });
+            match compiled_out {
+                Some(t) => {
+                    metrics.compiled_iters.fetch_add(1, Ordering::Relaxed);
+                    t
+                }
+                None => {
+                    metrics.compile_misses.fetch_add(1, Ordering::Relaxed);
+                    let ids = Tensor::from_slice(&last_tokens, [active.len(), 1]);
+                    no_grad(|| model.logits_decode_batch(&ids, &mut caches)).tensor()
+                }
+            }
         };
         metrics.busy_nanos.fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
         let v = logits.dim(2);
@@ -452,18 +617,38 @@ fn scheduler_loop(
 /// Reserve pages, prefill, and sample the first token — the admission
 /// path. Mirrors `generate()`'s cached branch exactly: prefill produces
 /// the last position's logits, the first sample draws from them, and a
-/// forward only runs for tokens after the first.
+/// forward only runs for tokens after the first. Prompts longer than
+/// `prefill_chunk` defer their prefill to [`prefill_chunk_step`] instead
+/// (pages stay reserved either way).
 fn admit(
     model: &BertLike,
     pool: &Arc<KvPagePool>,
     req: GenRequest,
     metrics: &SchedulerMetrics,
+    prefill_chunk: Option<usize>,
 ) -> Admitted {
     let mut cache = PagedKvCache::new(Arc::clone(pool));
     if cache.reserve(req.prompt.len() + req.opts.max_new_tokens).is_err() {
         return Admitted::Wait(req);
     }
     metrics.prefills.fetch_add(1, Ordering::Relaxed);
+    if let Some(chunk) = prefill_chunk {
+        if req.prompt.len() > chunk {
+            metrics.chunked_admissions.fetch_add(1, Ordering::Relaxed);
+            return Admitted::Prefilling(Box::new(PrefillingSeq {
+                prompt: req.prompt,
+                filled: 0,
+                chunk,
+                cache,
+                opts: req.opts,
+                resp: req.resp,
+                enqueued: req.enqueued,
+                prefill_secs: 0.0,
+                prefill_chunks: 0,
+            }));
+        }
+    }
+    metrics.prefill_chunks.fetch_add(1, Ordering::Relaxed);
     let t0 = Instant::now();
     let ids = Tensor::from_slice(&req.prompt, [1, req.prompt.len()]);
     let logits = no_grad(|| model.logits_paged(&ids, &mut cache)).tensor();
@@ -483,6 +668,7 @@ fn admit(
         resp: req.resp,
         enqueued: req.enqueued,
         prefill_secs,
+        prefill_chunks: 1,
         decode_started: Instant::now(),
     });
     step_seq(&mut seq);
@@ -492,6 +678,49 @@ fn admit(
     } else {
         Admitted::Running(seq)
     }
+}
+
+/// Run one prefill chunk for a [`PrefillingSeq`]: forward the next
+/// `chunk` prompt tokens (fewer on the final chunk) against the
+/// request's paged cache — the same `[1, L]` incremental forward a solo
+/// `generate()` would run, so chunk boundaries change no bits (each
+/// position's causal-bias row and gathered past are identical however
+/// the prompt is split). The final chunk's logits end at the prompt's
+/// last position, exactly what a whole-prompt prefill returns.
+fn prefill_chunk_step(
+    model: &BertLike,
+    mut p: Box<PrefillingSeq>,
+    metrics: &SchedulerMetrics,
+) -> Prefilled {
+    let take = p.chunk.min(p.prompt.len() - p.filled);
+    metrics.prefill_chunks.fetch_add(1, Ordering::Relaxed);
+    let t0 = Instant::now();
+    let ids = Tensor::from_slice(&p.prompt[p.filled..p.filled + take], [1, take]);
+    let logits = no_grad(|| model.logits_paged(&ids, &mut p.cache)).tensor();
+    p.prefill_secs += t0.elapsed().as_secs_f64();
+    metrics.busy_nanos.fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+    p.prefill_chunks += 1;
+    p.filled += take;
+    if p.filled < p.prompt.len() {
+        return Prefilled::Still(p);
+    }
+    let last = last_position_logits(&logits);
+    Prefilled::Ready(Box::new(ActiveSeq {
+        tokens: p.prompt,
+        cache: p.cache,
+        rng: Rng::new(p.opts.seed),
+        sampling: p.opts.sampling.clone(),
+        max_new: p.opts.max_new_tokens,
+        generated: 0,
+        record: p.opts.record_logits,
+        step_logits: Vec::new(),
+        last,
+        resp: p.resp,
+        enqueued: p.enqueued,
+        prefill_secs: p.prefill_secs,
+        prefill_chunks: p.prefill_chunks,
+        decode_started: Instant::now(),
+    }))
 }
 
 /// Sample the next token from `seq.last` — the same `sample()` a solo
@@ -519,6 +748,7 @@ fn retire(seq: ActiveSeq, metrics: &SchedulerMetrics) {
     let report = GenerateReport {
         generated: seq.generated,
         prefill_secs: seq.prefill_secs,
+        prefill_chunks: seq.prefill_chunks,
         decode_secs,
         tokens_per_sec: if decode_secs > 0.0 { seq.generated as f64 / decode_secs } else { 0.0 },
         tokens: seq.tokens,

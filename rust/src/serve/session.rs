@@ -16,6 +16,19 @@ use crate::tensor::graph::{trace_and_compile, CompiledFn};
 use crate::tensor::{default_backend, DType, Tensor, TensorBackend};
 use crate::util::error::{Error, Result};
 
+/// Snapshot the process-default backend while no trace capture is in
+/// flight: a concurrent `trace_and_compile`/`compile_step` on another
+/// thread has a `TraceBackend` installed as the process-global default,
+/// and pinning *that* as a session's serving backend would corrupt the
+/// other thread's capture on every later request. Taking (and releasing)
+/// the trace lock around the read rules that out. Shared by
+/// [`InferenceSession::compile`] and
+/// [`crate::serve::CompiledDecodeStep::compile`].
+pub(crate) fn quiesced_default_backend() -> Arc<dyn TensorBackend> {
+    let _quiesced = crate::tensor::graph::trace_lock();
+    default_backend()
+}
+
 /// A model forward compiled for a fixed set of batch-size buckets.
 ///
 /// Construction traces the forward once per bucket (in inference mode:
@@ -52,16 +65,9 @@ impl InferenceSession {
         if sizes.is_empty() || sizes[0] == 0 {
             return Err(Error::msg("serve: batch buckets must be non-empty and positive"));
         }
-        // snapshot the serving backend while no capture is in flight: a
-        // concurrent `trace_and_compile`/`compile_step` on another thread
-        // has a TraceBackend installed as the process-global default, and
-        // pinning *that* as this session's backend would corrupt the other
-        // thread's capture on every later request (the lock is taken and
-        // released here; each bucket compile below re-acquires it)
-        let backend = {
-            let _quiesced = crate::tensor::graph::trace_lock();
-            default_backend()
-        };
+        // the lock inside is taken and released before the bucket loop;
+        // each bucket compile below re-acquires it for its own capture
+        let backend = quiesced_default_backend();
         let mut buckets = Vec::with_capacity(sizes.len());
         let mut out_rest: Option<Vec<usize>> = None;
         for &b in &sizes {

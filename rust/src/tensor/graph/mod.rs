@@ -654,6 +654,10 @@ pub struct CompiledFn {
     params: Vec<Option<usize>>,
     arg_shapes: Vec<Shape>,
     arg_dtypes: Vec<DType>,
+    /// How many tensors the traced function returned (1 for
+    /// [`trace_and_compile`], the closure's `Vec` length for
+    /// [`trace_and_compile_many`]).
+    n_outputs: usize,
 }
 
 /// Trace `f` over the example inputs and compile the captured program
@@ -674,18 +678,44 @@ pub fn trace_and_compile(
     examples: &[Tensor],
     f: impl FnOnce(&[Tensor]) -> Tensor,
 ) -> Result<CompiledFn> {
+    trace_and_compile_many(examples, |args| vec![f(args)])
+}
+
+/// Multi-output form of [`trace_and_compile`]: `f` returns a `Vec` of
+/// result tensors and the compiled program produces all of them in one
+/// execution (shared subexpressions are computed once). Call through
+/// [`CompiledFn::call_many`] / [`CompiledFn::call_owned_many`]. A result
+/// tensor that *is* one of the examples (the function passed an argument
+/// through untouched) compiles to a direct parameter reference rather
+/// than an error. Same caveats as [`trace_and_compile`] otherwise.
+pub fn trace_and_compile_many(
+    examples: &[Tensor],
+    f: impl FnOnce(&[Tensor]) -> Vec<Tensor>,
+) -> Result<CompiledFn> {
     let _lock = trace_lock();
     let be = TraceBackend::over_cpu_default();
-    let (root, params, program) = {
+    let (roots, params, program) = {
         let _guard = BackendGuard::install(be.clone());
-        let out = f(examples);
+        let outs = f(examples);
+        if outs.is_empty() {
+            return Err(Error::msg("trace_and_compile_many: the function returned no outputs"));
+        }
         let tracer = be.interposer();
-        let root = tracer.value_ref_of(&out).ok_or_else(|| {
-            Error::msg("trace_and_compile: the function's result was not produced by the trace")
-        })?;
+        let mut roots = Vec::with_capacity(outs.len());
+        for (i, out) in outs.iter().enumerate() {
+            let root = tracer
+                .value_ref_of(out)
+                .or_else(|| tracer.const_index_of(out).map(ValueRef::Const))
+                .ok_or_else(|| {
+                    Error::msg(format!(
+                        "trace_and_compile_many: output {i} was not produced by the trace"
+                    ))
+                })?;
+            roots.push(root);
+        }
         let params: Vec<Option<usize>> =
             examples.iter().map(|e| tracer.const_index_of(e)).collect();
-        (root, params, tracer.program())
+        (roots, params, tracer.program())
     };
     for (i, p) in params.iter().enumerate() {
         if p.is_some() && params[..i].contains(p) {
@@ -699,12 +729,14 @@ pub fn trace_and_compile(
         frozen_consts: params.iter().flatten().copied().collect(),
         ..Default::default()
     };
-    let program = compile(&program, &[root], &opts)?;
+    let n_outputs = roots.len();
+    let program = compile(&program, &roots, &opts)?;
     Ok(CompiledFn {
         program,
         params,
         arg_shapes: examples.iter().map(|e| e.shape().clone()).collect(),
         arg_dtypes: examples.iter().map(|e| e.dtype()).collect(),
+        n_outputs,
     })
 }
 
@@ -734,9 +766,28 @@ impl CompiledFn {
         Ok(())
     }
 
+    fn check_single(&self) -> Result<()> {
+        if self.n_outputs != 1 {
+            return Err(Error::msg(format!(
+                "compiled fn has {} outputs; use call_many/call_owned_many",
+                self.n_outputs
+            )));
+        }
+        Ok(())
+    }
+
     /// Run the compiled program on `backend` with fresh arguments
     /// (shapes/dtypes must match the trace-time examples).
     pub fn call(&self, backend: &dyn TensorBackend, args: &[&Tensor]) -> Result<Tensor> {
+        self.check_single()?;
+        self.call_many(backend, args).map(|mut outs| outs.remove(0))
+    }
+
+    /// Run the compiled program and return *all* traced outputs, in the
+    /// order the traced function returned them. This is the call path for
+    /// [`trace_and_compile_many`] functions (single-output fns work too —
+    /// the vec has one element).
+    pub fn call_many(&self, backend: &dyn TensorBackend, args: &[&Tensor]) -> Result<Vec<Tensor>> {
         self.check_arity(args.len())?;
         for (i, a) in args.iter().enumerate() {
             self.check_arg(i, a)?;
@@ -747,8 +798,8 @@ impl CompiledFn {
             .zip(args)
             .filter_map(|(p, a)| p.map(|i| (i, *a)))
             .collect();
-        let (mut outs, _) = self.program.exec(backend, &overrides, false)?;
-        Ok(outs.remove(0))
+        let (outs, _) = self.program.exec(backend, &overrides, false)?;
+        Ok(outs)
     }
 
     /// Like [`CompiledFn::call`], but the arguments are passed by value
@@ -765,6 +816,19 @@ impl CompiledFn {
         args: Vec<Tensor>,
         donate: bool,
     ) -> Result<(Tensor, ExecStats)> {
+        self.check_single()?;
+        self.call_owned_many(backend, args, donate).map(|(mut outs, stats)| (outs.remove(0), stats))
+    }
+
+    /// Multi-output form of [`CompiledFn::call_owned`]: arguments are
+    /// passed by value (and optionally donated), all traced outputs are
+    /// returned.
+    pub fn call_owned_many(
+        &self,
+        backend: &dyn TensorBackend,
+        args: Vec<Tensor>,
+        donate: bool,
+    ) -> Result<(Vec<Tensor>, ExecStats)> {
         self.check_arity(args.len())?;
         for (i, a) in args.iter().enumerate() {
             self.check_arg(i, a)?;
@@ -779,8 +843,12 @@ impl CompiledFn {
                 }
             }
         }
-        let (mut outs, stats) = self.program.run_owned(backend, overrides, &don, false)?;
-        Ok((outs.remove(0), stats))
+        self.program.run_owned(backend, overrides, &don, false)
+    }
+
+    /// How many outputs the traced function returned.
+    pub fn n_outputs(&self) -> usize {
+        self.n_outputs
     }
 
     /// Convenience: run on the reference CPU backend.

@@ -37,8 +37,8 @@ pub use backend::{
 };
 pub use dtype::{DType, Element};
 pub use graph::{
-    trace_and_compile, CompileOptions, CompileReport, CompiledFn, CompiledProgram, Diagnostic,
-    DiagnosticKind, SourceSpec, ValueMeta, VerifiedMeta,
+    trace_and_compile, trace_and_compile_many, CompileOptions, CompileReport, CompiledFn,
+    CompiledProgram, Diagnostic, DiagnosticKind, SourceSpec, ValueMeta, VerifiedMeta,
 };
 pub use host::HostBuffer;
 pub use interpose::{InterposedBackend, Interposer};

@@ -21,10 +21,13 @@
 use std::sync::Arc;
 use std::time::Duration;
 
+use flashlight::autograd::no_grad;
+use flashlight::memory::KvPagePool;
 use flashlight::models::BertLike;
+use flashlight::nn::PagedKvCache;
 use flashlight::serve::{
-    generate, ContinuousBatcher, ContinuousConfig, Engine, EngineConfig, GenerateOptions,
-    InferenceSession, Sampling,
+    generate, CompiledDecodeStep, ContinuousBatcher, ContinuousConfig, Engine, EngineConfig,
+    GenerateOptions, InferenceSession, Sampling,
 };
 use flashlight::tensor::{DType, Tensor};
 use flashlight::util::error::Error;
@@ -41,6 +44,21 @@ fn random_ids(rng: &mut Rng, n: usize, vocab: usize) -> Vec<i64> {
 
 fn bits(v: &[f32]) -> Vec<u32> {
     v.iter().map(|x| x.to_bits()).collect()
+}
+
+/// Shorthand for struct-update spreads on [`ContinuousConfig`] literals.
+fn def() -> ContinuousConfig {
+    ContinuousConfig::default()
+}
+
+fn argmax(v: &[f32]) -> i64 {
+    let mut best = 0usize;
+    for (i, &x) in v.iter().enumerate() {
+        if x > v[best] {
+            best = i;
+        }
+    }
+    best as i64
 }
 
 // ---- contract 1: KV-cached decode ≡ full recompute ------------------------
@@ -313,7 +331,7 @@ fn assert_report_matches_solo(
 #[test]
 fn continuous_batched_generation_bit_identical_to_solo() {
     let model = Arc::new(small_lm(48, 64));
-    let cfg = ContinuousConfig { max_active: 4, page_tokens: 4, pool_pages: None };
+    let cfg = ContinuousConfig { max_active: 4, page_tokens: 4, pool_pages: None, ..def() };
     let batcher = ContinuousBatcher::start(Arc::clone(&model), &cfg).unwrap();
 
     let mut rng = Rng::new(41);
@@ -342,8 +360,14 @@ fn continuous_batched_generation_bit_identical_to_solo() {
     assert_eq!(stats.submitted, 6);
     assert_eq!(stats.completed, 6);
     assert_eq!(stats.prefills, 6);
+    assert_eq!(stats.prefill_chunks, 6, "no chunking: one prefill pass per admission");
+    assert_eq!(stats.chunked_admissions, 0);
     assert_eq!(stats.generated_tokens, (0..6).map(|i| 4 + i as u64).sum::<u64>());
     assert!(stats.iterations > 0);
+    // the default (auto) buckets cover every feasible batch size, so the
+    // whole run decodes through the pre-compiled programs
+    assert_eq!(stats.compile_misses, 0, "auto buckets must cover every batch size");
+    assert_eq!(stats.compiled_iterations, stats.iterations);
     assert!(stats.mean_iteration_batch >= 1.0);
     assert!(stats.occupancy_peak >= 1.0);
     assert_eq!(stats.pool.leased_pages, 0, "retired requests must return every KV page");
@@ -357,7 +381,7 @@ fn backpressured_admission_stalls_then_serves_every_request_bitwise() {
     // 6-token prompt + 10 new = 16 positions = 4 pages of 4 tokens; the
     // pool holds exactly one request's reservation, so admission of the
     // queue's head must stall until the running request retires
-    let cfg = ContinuousConfig { max_active: 4, page_tokens: 4, pool_pages: Some(4) };
+    let cfg = ContinuousConfig { max_active: 4, page_tokens: 4, pool_pages: Some(4), ..def() };
     let batcher = ContinuousBatcher::start(Arc::clone(&model), &cfg).unwrap();
 
     let mut rng = Rng::new(7);
@@ -383,7 +407,7 @@ fn backpressured_admission_stalls_then_serves_every_request_bitwise() {
 #[test]
 fn continuous_submit_validates_and_answers_zero_token_requests() {
     let model = Arc::new(small_lm(24, 20));
-    let cfg = ContinuousConfig { max_active: 2, page_tokens: 4, pool_pages: Some(3) };
+    let cfg = ContinuousConfig { max_active: 2, page_tokens: 4, pool_pages: Some(3), ..def() };
     let batcher = ContinuousBatcher::start(Arc::clone(&model), &cfg).unwrap();
 
     // empty prompts, context overflow, and bad sampling knobs fail fast
@@ -408,6 +432,7 @@ fn continuous_submit_validates_and_answers_zero_token_requests() {
     let r = batcher.generate(&[5, 6, 7], &none).unwrap();
     assert_eq!(r.tokens, vec![5, 6, 7]);
     assert_eq!(r.generated, 0);
+    assert_eq!(r.prefill_chunks, 0, "a zero-token request never runs a prefill");
 
     // and a servable request afterwards still goes through
     let ok = gen_opts(0, 4, Sampling::Greedy);
@@ -423,7 +448,7 @@ fn engine_generate_matches_solo_and_reports_decode_stats() {
         max_batch_size: 2,
         max_wait: Duration::from_millis(5),
         workers: 1,
-        decode: ContinuousConfig { max_active: 2, page_tokens: 4, pool_pages: None },
+        decode: ContinuousConfig { max_active: 2, page_tokens: 4, pool_pages: None, ..def() },
     };
     let engine = Engine::start_lm(Arc::clone(&model), 8, &[1], &cfg).unwrap();
     let opts = gen_opts(3, 6, Sampling::Greedy);
@@ -517,7 +542,7 @@ fn concurrent_submits_racing_shutdown_resolve_without_hanging() {
 #[test]
 fn concurrent_generate_submits_racing_shutdown_resolve_without_hanging() {
     let model = Arc::new(small_lm(24, 24));
-    let cfg = ContinuousConfig { max_active: 3, page_tokens: 4, pool_pages: None };
+    let cfg = ContinuousConfig { max_active: 3, page_tokens: 4, pool_pages: None, ..def() };
     let batcher = Arc::new(ContinuousBatcher::start(Arc::clone(&model), &cfg).unwrap());
 
     std::thread::scope(|s| {
@@ -606,4 +631,224 @@ fn steady_state_serving_does_not_retrace() {
         assert_eq!(bits(&y.to_vec()), bits(&x.tanh().to_vec()));
     }
     assert_eq!(traces.load(Ordering::SeqCst), 2, "serving must not re-trace");
+}
+
+// ---- bucket-compiled decode iterations + chunked prefill -------------------
+
+/// Prefill `prompt` into a fresh cache on `pool` (reserving room for
+/// `max_new` decode steps) — one per-request stream for the decode-step
+/// parity tests below.
+fn prefilled_cache(
+    model: &BertLike,
+    pool: &Arc<KvPagePool>,
+    prompt: &[i64],
+    max_new: usize,
+) -> PagedKvCache {
+    let mut cache = PagedKvCache::new(Arc::clone(pool));
+    cache.reserve(prompt.len() + max_new).expect("test pool sized for the request");
+    let ids = Tensor::from_slice(prompt, [1, prompt.len()]);
+    no_grad(|| model.logits_paged(&ids, &mut cache));
+    cache
+}
+
+#[test]
+fn compiled_decode_step_bit_identical_to_eager_exact_and_padded() {
+    let model = small_lm(32, 48);
+    // one step with an exact-fit bucket, one that must pad 3 rows into 4
+    let exact = CompiledDecodeStep::compile(&model, &[3]).unwrap();
+    let padded = CompiledDecodeStep::compile(&model, &[4]).unwrap();
+    assert_eq!(exact.bucket_sizes(), vec![3]);
+    assert_eq!(exact.program_count(), model.depth() + 1, "depth+1 segments per bucket");
+
+    // three cache sets fed identical tokens: eager reference, exact
+    // bucket, padded bucket — all three must stay bitwise locked
+    let pools: Vec<Arc<KvPagePool>> =
+        (0..3).map(|_| KvPagePool::new(model.kv_pool_config(4, 24))).collect();
+    let mut rng = Rng::new(17);
+    let prompts: Vec<Vec<i64>> = (0..3).map(|r| random_ids(&mut rng, 3 + r, 32)).collect();
+    let mut sets: Vec<Vec<PagedKvCache>> = pools
+        .iter()
+        .map(|pool| prompts.iter().map(|p| prefilled_cache(&model, pool, p, 6)).collect())
+        .collect();
+    let mut tokens: Vec<i64> = prompts.iter().map(|p| p[0]).collect();
+
+    for t in 0..5 {
+        let ids = Tensor::from_slice(&tokens, [3, 1]);
+        let [eager_set, exact_set, padded_set] = &mut sets[..] else { unreachable!() };
+        let mut refs: Vec<&mut PagedKvCache> = eager_set.iter_mut().collect();
+        let want = no_grad(|| model.logits_decode_batch(&ids, &mut refs)).tensor();
+        let mut refs: Vec<&mut PagedKvCache> = exact_set.iter_mut().collect();
+        let got_exact = no_grad(|| exact.step(&model, &tokens, &mut refs))
+            .unwrap()
+            .expect("batch 3 fits the 3-bucket");
+        let mut refs: Vec<&mut PagedKvCache> = padded_set.iter_mut().collect();
+        let got_padded = no_grad(|| padded.step(&model, &tokens, &mut refs))
+            .unwrap()
+            .expect("batch 3 fits the 4-bucket");
+        assert_eq!(got_exact.dims(), want.dims());
+        assert_eq!(got_padded.dims(), want.dims(), "pad rows must be sliced off");
+        let want_bits = bits(&want.to_vec());
+        assert_eq!(bits(&got_exact.to_vec()), want_bits, "exact bucket diverged at step {t}");
+        assert_eq!(bits(&got_padded.to_vec()), want_bits, "padded bucket diverged at step {t}");
+        // feed the (identical) greedy tokens back so the streams extend
+        let v = model.vocab();
+        let flat = want.to_vec();
+        for r in 0..3 {
+            tokens[r] = argmax(&flat[r * v..(r + 1) * v]);
+        }
+    }
+    for set in &sets[1..] {
+        for (c, e) in set.iter().zip(&sets[0]) {
+            assert_eq!(c.len(), e.len(), "compiled steps must advance caches like eager");
+        }
+    }
+}
+
+#[test]
+fn compiled_decode_step_misses_oversized_batches_without_touching_caches() {
+    let model = small_lm(24, 32);
+    let step = CompiledDecodeStep::compile(&model, &[1, 2]).unwrap();
+    assert_eq!(step.bucket_sizes(), vec![1, 2]);
+    let pool = KvPagePool::new(model.kv_pool_config(4, 24));
+    let mut caches: Vec<PagedKvCache> =
+        (0..3).map(|r| prefilled_cache(&model, &pool, &[r as i64 + 1, 2], 4)).collect();
+    let lens: Vec<usize> = caches.iter().map(|c| c.len()).collect();
+    let mut refs: Vec<&mut PagedKvCache> = caches.iter_mut().collect();
+    let out = no_grad(|| step.step(&model, &[5, 6, 7], &mut refs)).unwrap();
+    assert!(out.is_none(), "batch 3 exceeds every bucket: an observable compile miss");
+    for (c, l) in refs.iter().zip(&lens) {
+        assert_eq!(c.len(), *l, "a miss must leave the caches untouched for the eager retry");
+    }
+    // a batch that does fit still routes and advances
+    let mut refs: Vec<&mut PagedKvCache> = caches.iter_mut().take(2).collect();
+    let out = no_grad(|| step.step(&model, &[5, 6], &mut refs)).unwrap().expect("2 fits");
+    assert_eq!(out.dims(), &[2, 1, model.vocab()][..]);
+    assert_eq!(caches[0].len(), lens[0] + 1);
+    assert_eq!(caches[2].len(), lens[2], "rows outside the batch must not advance");
+    // degenerate bucket lists are rejected up front
+    assert!(CompiledDecodeStep::compile(&model, &[]).is_err());
+    assert!(CompiledDecodeStep::compile(&model, &[0]).is_err());
+}
+
+#[test]
+fn chunked_prefill_stays_bitwise_and_counts_chunks() {
+    let model = Arc::new(small_lm(48, 64));
+    let cfg = ContinuousConfig {
+        max_active: 3,
+        page_tokens: 4,
+        pool_pages: None,
+        prefill_chunk: Some(3),
+        ..def()
+    };
+    let batcher = ContinuousBatcher::start(Arc::clone(&model), &cfg).unwrap();
+    let mut rng = Rng::new(23);
+    // prompt lengths straddling the chunk size: 7, 10, and 5 split
+    let lens = [2usize, 7, 3, 10, 5];
+    let requests: Vec<(Vec<i64>, GenerateOptions)> = lens
+        .iter()
+        .enumerate()
+        .map(|(i, &n)| {
+            let prompt = random_ids(&mut rng, n, 48);
+            let sampling = if i % 2 == 0 {
+                Sampling::Greedy
+            } else {
+                Sampling::TopK { k: 5, temperature: 0.9 }
+            };
+            (prompt, gen_opts(300 + i as u64, 3 + i, sampling))
+        })
+        .collect();
+    let handles: Vec<_> = requests.iter().map(|(p, o)| batcher.submit(p, o)).collect();
+    for ((prompt, opts), handle) in requests.iter().zip(handles) {
+        let served = handle.wait().unwrap();
+        assert_report_matches_solo(&model, prompt, opts, &served, "chunked-prefill");
+        assert_eq!(
+            served.prefill_chunks,
+            prompt.len().div_ceil(3),
+            "prefill pass count for a {}-token prompt at chunk 3",
+            prompt.len()
+        );
+    }
+    let stats = batcher.stats();
+    assert_eq!(stats.prefills, 5, "every admission runs a prefill, chunked or not");
+    assert_eq!(stats.chunked_admissions, 3, "prompts of 7, 10, and 5 tokens split at chunk 3");
+    assert_eq!(stats.prefill_chunks, 1 + 3 + 1 + 4 + 2);
+    assert_eq!(stats.compiled_iterations + stats.compile_misses, stats.iterations);
+    assert_eq!(stats.pool.leased_pages, 0);
+    batcher.shutdown();
+}
+
+#[test]
+fn compiled_decode_telemetry_proves_zero_steady_state_retracing() {
+    let model = Arc::new(small_lm(32, 48));
+    // auto buckets for max_active 4 are {1, 2, 4}: every feasible batch
+    // size fits one, so the run can never miss
+    let cfg = ContinuousConfig { max_active: 4, page_tokens: 4, pool_pages: None, ..def() };
+    let batcher = ContinuousBatcher::start(Arc::clone(&model), &cfg).unwrap();
+    let segs = (model.depth() + 1) as u64;
+    let compiles = batcher.stats().decode_compiles;
+    assert_eq!(compiles, 3 * segs, "buckets {{1,2,4}} x (depth+1) segment programs");
+    let opts = gen_opts(5, 6, Sampling::Greedy);
+    let handles: Vec<_> = (0..6).map(|i| batcher.submit(&[1 + i as i64, 2, 3], &opts)).collect();
+    for h in handles {
+        h.wait().unwrap();
+    }
+    let stats = batcher.stats();
+    assert!(stats.iterations > 0);
+    assert_eq!(stats.compile_misses, 0, "auto buckets must cover every batch size");
+    assert_eq!(stats.compiled_iterations, stats.iterations);
+    assert_eq!(stats.decode_compiles, compiles, "steady state must not compile anything new");
+    batcher.shutdown();
+
+    // disabling compiled decode turns every iteration into a counted
+    // miss — and the eager fallback keeps the same bits
+    let cfg = ContinuousConfig { decode_buckets: Some(vec![]), ..cfg };
+    let batcher = ContinuousBatcher::start(Arc::clone(&model), &cfg).unwrap();
+    let served = batcher.generate(&[4, 2, 7], &opts).unwrap();
+    assert_report_matches_solo(&model, &[4, 2, 7], &opts, &served, "eager-only");
+    let stats = batcher.stats();
+    assert_eq!(stats.decode_compiles, 0);
+    assert_eq!(stats.compiled_iterations, 0);
+    assert!(stats.iterations > 0);
+    assert_eq!(stats.compile_misses, stats.iterations);
+    batcher.shutdown();
+}
+
+#[test]
+fn narrow_buckets_count_misses_and_still_serve_bitwise() {
+    let model = Arc::new(small_lm(32, 48));
+    let cfg = ContinuousConfig {
+        max_active: 4,
+        page_tokens: 4,
+        pool_pages: None,
+        decode_buckets: Some(vec![1]),
+        ..def()
+    };
+    let batcher = ContinuousBatcher::start(Arc::clone(&model), &cfg).unwrap();
+    assert_eq!(batcher.stats().decode_compiles, (model.depth() + 1) as u64);
+    // budgets 4/8/12/16: retirements stagger, so the tail drains down to
+    // solo (bucket-sized) iterations while the shared middle misses
+    let requests: Vec<(Vec<i64>, GenerateOptions)> = (0..4)
+        .map(|i| (vec![3 + i as i64, 1, 4], gen_opts(40 + i as u64, 4 + 4 * i, Sampling::Greedy)))
+        .collect();
+    let handles: Vec<_> = requests.iter().map(|(p, o)| batcher.submit(p, o)).collect();
+    for ((prompt, opts), handle) in requests.iter().zip(handles) {
+        let served = handle.wait().unwrap();
+        assert_report_matches_solo(&model, prompt, opts, &served, "narrow-buckets");
+    }
+    let stats = batcher.stats();
+    assert_eq!(stats.compiled_iterations + stats.compile_misses, stats.iterations);
+    assert!(stats.compiled_iterations > 0, "the drained tail decodes solo through the 1-bucket");
+    assert!(stats.compile_misses > 0, "shared iterations exceed the only bucket");
+    batcher.shutdown();
+}
+
+#[test]
+fn solo_generate_reports_prefill_chunks() {
+    let model = small_lm(24, 24);
+    let cached = generate(&model, &[1, 2, 3], &gen_opts(1, 3, Sampling::Greedy)).unwrap();
+    assert_eq!(cached.prefill_chunks, 1, "one whole-prompt prefill pass");
+    let uncached = GenerateOptions { use_cache: false, ..gen_opts(1, 3, Sampling::Greedy) };
+    let r = generate(&model, &[1, 2, 3], &uncached).unwrap();
+    assert_eq!(r.prefill_chunks, 0, "the uncached path has no prefill");
+    assert_eq!(r.tokens, cached.tokens, "cached and uncached streams agree");
 }

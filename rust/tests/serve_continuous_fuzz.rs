@@ -2,14 +2,19 @@
 //!
 //! Each case builds a random small LM, a random paged-KV/scheduler
 //! configuration (page size, slot count, a pool deliberately sized down
-//! to the backpressure regime), and a random request mix (prompt lengths,
-//! generation budgets including zero, greedy and top-k sampling, distinct
-//! sampling seeds), then serves the mix through [`ContinuousBatcher`]
-//! under a randomized arrival pattern. Every request's report must be
-//! **bit-identical** — token stream *and* the `[V]` logits each sampling
-//! step saw — to a solo [`generate()`] call with the same prompt and
-//! options, whatever the iteration batches looked like. Afterwards the
-//! pool must be fully drained (no leaked pages).
+//! to the backpressure regime, random decode-compilation buckets —
+//! auto, disabled, or a deliberately narrow set that forces eager
+//! fallbacks — and a random Sarathi prefill chunk size), and a random
+//! request mix (prompt lengths including long prompts that split into
+//! many chunks, generation budgets including zero, greedy and top-k
+//! sampling, distinct sampling seeds), then serves the mix through
+//! [`ContinuousBatcher`] under a randomized arrival pattern. Every
+//! request's report must be **bit-identical** — token stream *and* the
+//! `[V]` logits each sampling step saw — to a solo [`generate()`] call
+//! with the same prompt and options, whatever the iteration batches
+//! looked like and whether each iteration ran compiled or eager.
+//! Afterwards the pool must be fully drained (no leaked pages) and the
+//! compile/chunk telemetry must balance.
 //!
 //! Knobs (see docs/ARCHITECTURE.md, "Testing & fuzzing guide"):
 //!
@@ -55,7 +60,13 @@ struct Req {
 }
 
 fn gen_request(rng: &mut Rng, vocab: usize, max_len: usize, i: usize) -> Req {
-    let prompt_len = 1 + rng.below(10);
+    // mostly short prompts, but 1-in-4 long (up to max_len - 9, leaving
+    // decode budget): long admissions are what chunked prefill splits
+    let prompt_len = if rng.below(4) == 0 {
+        1 + rng.below(max_len - 9)
+    } else {
+        1 + rng.below(10)
+    };
     let budget = max_len - prompt_len;
     // 0..=8 new tokens, zero included: a no-decode request must still be
     // answered (with its prompt unchanged) without touching the pool
@@ -118,13 +129,29 @@ fn run_fuzz(cases: usize, master_seed: u64, pinned: bool) {
         let lo = per_req.iter().copied().max().unwrap_or(1).max(1);
         let hi = per_req.iter().sum::<usize>().max(lo);
         let pool_pages = lo + rng.below(hi - lo + 1);
-        let cfg = ContinuousConfig { max_active, page_tokens, pool_pages: Some(pool_pages) };
+        // decode-compilation buckets: auto (every batch size fits),
+        // disabled (all-eager), or one deliberately narrow bucket that
+        // forces a random mix of compiled iterations and eager fallbacks
+        let decode_buckets = match rng.below(3) {
+            0 => None,
+            1 => Some(Vec::new()),
+            _ => Some(vec![1 + rng.below(max_active)]),
+        };
+        let prefill_chunk = if rng.below(3) == 0 { None } else { Some(1 + rng.below(6)) };
+        let cfg = ContinuousConfig {
+            max_active,
+            page_tokens,
+            pool_pages: Some(pool_pages),
+            decode_buckets: decode_buckets.clone(),
+            prefill_chunk,
+        };
 
         let ctx = |stage: &str, detail: String| {
             format!(
                 "serve_continuous_fuzz case {case} (seed {case_seed:#x}): {stage}: {detail}\n\
                  model: vocab={vocab} dim={dim} heads={heads} depth={depth} max_len={max_len}\n\
-                 cfg: page_tokens={page_tokens} max_active={max_active} pool_pages={pool_pages}\n\
+                 cfg: page_tokens={page_tokens} max_active={max_active} pool_pages={pool_pages} \
+                 decode_buckets={decode_buckets:?} prefill_chunk={prefill_chunk:?}\n\
                  requests: {requests:?}\n\
                  reproduce with SERVE_FUZZ_SEED={case_seed:#x} SERVE_FUZZ_CASES=1"
             )
@@ -188,6 +215,50 @@ fn run_fuzz(cases: usize, master_seed: u64, pinned: bool) {
                 )
             )
         );
+        // compile telemetry must balance: every iteration was exactly one
+        // of compiled / eager-fallback, and the auto bucket set (None)
+        // covers every feasible batch size so it can never miss
+        assert!(
+            stats.compiled_iterations + stats.compile_misses == stats.iterations,
+            "{}",
+            ctx(
+                "compile ledger",
+                format!(
+                    "{} compiled + {} misses != {} iterations",
+                    stats.compiled_iterations, stats.compile_misses, stats.iterations
+                )
+            )
+        );
+        if decode_buckets.is_none() {
+            assert!(
+                stats.compile_misses == 0,
+                "{}",
+                ctx("auto buckets", format!("{} compile misses", stats.compile_misses))
+            );
+        }
+        // chunk accounting: at least one prefill pass per admission, and
+        // with chunking off the two counters coincide
+        assert!(
+            stats.prefill_chunks >= stats.prefills,
+            "{}",
+            ctx(
+                "chunk ledger",
+                format!("{} chunks < {} prefills", stats.prefill_chunks, stats.prefills)
+            )
+        );
+        if prefill_chunk.is_none() {
+            assert!(
+                stats.prefill_chunks == stats.prefills && stats.chunked_admissions == 0,
+                "{}",
+                ctx(
+                    "unchunked prefill",
+                    format!(
+                        "{} chunks / {} prefills / {} chunked admissions",
+                        stats.prefill_chunks, stats.prefills, stats.chunked_admissions
+                    )
+                )
+            );
+        }
         batcher.shutdown();
     }
     println!(
