@@ -120,7 +120,12 @@ fn main() {
         max_batch_size: 8,
         max_wait: Duration::from_millis(2),
         workers: 2,
-        decode: ContinuousConfig { max_active: 4, page_tokens: 8, pool_pages: None },
+        decode: ContinuousConfig {
+            max_active: 4,
+            page_tokens: 8,
+            pool_pages: None,
+            ..Default::default()
+        },
     };
     let engine = Engine::start_lm(Arc::clone(&served), SEQ, &[1, 8], &cfg)
         .expect("engine compile failed");
@@ -174,14 +179,15 @@ fn main() {
         println!("continuous {i}: {:?}", &rep.tokens[p.len()..]);
     }
     let stats = engine.stats();
+    let decode = stats.decode.as_ref().expect("LM engines always have a decoder");
     println!(
         "decode pool: {} iterations (mean batch {:.2}), goodput {:.1} tok/s, \
          {} stalls, peak {} pages",
-        stats.decode.iterations,
-        stats.decode.mean_iteration_batch,
+        decode.iterations,
+        decode.mean_iteration_batch,
         stats.decode_tokens_per_sec,
-        stats.decode.backpressure_stalls,
-        stats.decode.pool.peak_leased_pages
+        decode.backpressure_stalls,
+        decode.pool.peak_leased_pages
     );
     engine.shutdown();
     println!("{} served. generate_text OK", Module::name(served.as_ref()));

@@ -1,0 +1,113 @@
+//! Observability demo: serve a small LM with tracing on, then export the
+//! whole capture — compiler passes, per-instruction execution samples,
+//! prefill chunks, decode iterations, allocator events, and per-request
+//! timelines — as Chrome trace-event JSON (`trace.json`), plus a metrics
+//! dump from the process-wide registry.
+//!
+//! Run: `cargo run --release --example trace_serving`
+//! then open `trace.json` in Perfetto (https://ui.perfetto.dev) or
+//! `chrome://tracing`.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use flashlight::memory::{self, DefaultMemoryManager, TelemetryMemoryManager};
+use flashlight::models::BertLike;
+use flashlight::obs;
+use flashlight::serve::{ContinuousConfig, Engine, EngineConfig, GenerateOptions, Sampling};
+use flashlight::tensor::Tensor;
+
+const VOCAB: usize = 64;
+const SEQ: usize = 16;
+
+fn main() {
+    flashlight::util::rng::seed(7);
+
+    // everything below records; FL_TRACE=1 would do the same without code
+    obs::set_enabled(true);
+    // time individual compiled-program instructions on every 4th run
+    // (default: every 16th) — visible as nested spans under "exec.run"
+    obs::set_exec_sample_every(4);
+    // bridge allocator traffic onto the same timeline as "mem.alloc" /
+    // "mem.free" instants
+    let telemetry = Arc::new(TelemetryMemoryManager::new(Arc::new(DefaultMemoryManager::new())));
+    let prev_mgr = memory::install(telemetry.clone());
+
+    // deploy a small LM: the bucket compiles (spans "compile",
+    // "serve.session.compile_bucket", "serve.decode.compile_bucket") all
+    // land in the trace because recording is already on
+    let model = Arc::new(BertLike::new(VOCAB, 64, 4, 2, 64));
+    let cfg = EngineConfig {
+        max_batch_size: 4,
+        max_wait: Duration::from_millis(2),
+        workers: 2,
+        decode: ContinuousConfig {
+            max_active: 4,
+            page_tokens: 8,
+            pool_pages: None,
+            // a long prompt below splits into 6-token prefill chunks
+            prefill_chunk: Some(6),
+            ..Default::default()
+        },
+    };
+    let engine =
+        Engine::start_lm(Arc::clone(&model), SEQ, &[1, 4], &cfg).expect("engine compile failed");
+
+    // scoring traffic through the dynamic batcher ("serve.batch" spans +
+    // collector-published request timelines)
+    let score_handles: Vec<_> = (0..6)
+        .map(|i| {
+            let ids: Vec<i64> = (0..SEQ).map(|j| ((i * 13 + j * 5) % VOCAB) as i64).collect();
+            engine.submit(Tensor::from_slice(&ids, [SEQ]))
+        })
+        .collect();
+    for h in score_handles {
+        h.wait().expect("scoring failed");
+    }
+
+    // generation traffic through the continuous scheduler: overlapping
+    // requests of different lengths, so the trace shows prefill chunks
+    // interleaved with multi-row decode iterations
+    let gen_handles: Vec<_> = (0..4u64)
+        .map(|i| {
+            let prompt: Vec<i64> =
+                (0..4 + 3 * i as usize).map(|j| ((j * 11 + i as usize) % VOCAB) as i64).collect();
+            let opts = GenerateOptions {
+                max_new_tokens: 6 + 2 * i as usize,
+                sampling: Sampling::TopK { k: 4, temperature: 0.9 },
+                seed: i,
+                ..Default::default()
+            };
+            engine.submit_generate(&prompt, &opts).expect("submit failed")
+        })
+        .collect();
+    for (i, h) in gen_handles.into_iter().enumerate() {
+        let report = h.wait().expect("generation failed");
+        let tl = report.timeline.as_ref().expect("tracing is on: every report has a timeline");
+        let samples = tl.events.iter().filter(|e| e.what == "sample").count();
+        let compiled = tl.events.iter().filter(|e| e.what == "sample" && e.compiled).count();
+        let chunks = tl.events.iter().filter(|e| e.what == "prefill_chunk").count();
+        println!(
+            "request {i}: {} tokens in {samples} samples ({compiled} compiled-iteration), \
+             {chunks} prefill chunk(s)",
+            report.generated
+        );
+        assert_eq!(samples, report.generated, "timeline ledger");
+    }
+    let stats = engine.stats(); // publishes serve.* into the registry
+    let decode = stats.decode.as_ref().expect("LM engines always have a decoder");
+    println!(
+        "served {} scoring requests, {} generations ({} decode iterations)\n",
+        stats.batcher.requests, decode.completed, decode.iterations
+    );
+    engine.shutdown();
+
+    // one file, every layer: open it in Perfetto and the compile spans,
+    // executor samples, serve iterations, allocator instants, and async
+    // per-request timelines sit on one coherent clock
+    obs::export_chrome_trace("trace.json").expect("trace export failed");
+    println!("wrote trace.json ({} spans dropped by ring overflow)", obs::dropped_spans());
+    println!("\nmetrics registry:\n{}", obs::metrics_text());
+
+    memory::install(prev_mgr);
+}

@@ -1,0 +1,150 @@
+//! Observability overhead snapshot -> BENCH_PR10.json.
+//!
+//! The obs layer's contract is that *disabled* instrumentation costs one
+//! relaxed atomic load per checkpoint. Two measurements prove it on the
+//! serve-decode workload (the hottest instrumented loop in the repo):
+//!
+//! - **decode iteration latency, obs off vs on**: the compiled `[B, 1]`
+//!   decode step ([`CompiledDecodeStep`]) timed with recording disabled
+//!   and then enabled — the directly-observed overhead fraction;
+//! - **checkpoint microbench**: the cost of one disabled
+//!   [`flashlight::obs::span`] call (the per-checkpoint price every
+//!   instrumented site pays while recording is off), multiplied by a
+//!   generous bound on checkpoints per decode iteration and divided by
+//!   the iteration time. This `computed_disabled_overhead_frac` is the
+//!   value CI guards (< 1%): unlike the off-vs-on A/B, it cannot go
+//!   negative under scheduler noise, so the guard is deterministic.
+//!
+//! Run: `cargo bench --bench obs_overhead`
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use flashlight::autograd::no_grad;
+use flashlight::memory::KvPagePool;
+use flashlight::models::BertLike;
+use flashlight::nn::PagedKvCache;
+use flashlight::serve::CompiledDecodeStep;
+use flashlight::testutil::{write_bench_json, BenchRecord};
+use flashlight::Tensor;
+
+const VOCAB: usize = 64;
+const PREFILL: usize = 16;
+const STEPS: usize = 24;
+const REPS: usize = 5;
+const BATCH: usize = 4;
+/// Generous upper bound on obs checkpoints one decode iteration crosses
+/// (iteration span + per-segment executor checks + stats publication —
+/// counted by hand it is under 16; doubled for slack).
+const SPAN_SITES_PER_ITER: f64 = 32.0;
+const MICRO_CALLS: usize = 1_000_000;
+
+/// Fresh per-request caches, each prefilled with `PREFILL` tokens.
+fn fresh_caches(model: &BertLike) -> Vec<PagedKvCache> {
+    let page_tokens = 8;
+    let pages = BATCH * (PREFILL + STEPS).div_ceil(page_tokens);
+    let pool = KvPagePool::new(model.kv_pool_config(page_tokens, pages));
+    (0..BATCH)
+        .map(|r| {
+            let mut cache = PagedKvCache::new(Arc::clone(&pool));
+            cache.reserve(PREFILL + STEPS).expect("bench pool sized exactly");
+            let prompt: Vec<i64> =
+                (0..PREFILL).map(|j| ((r * 13 + j * 5) % VOCAB) as i64).collect();
+            let ids = Tensor::from_slice(&prompt, [1, PREFILL]);
+            no_grad(|| model.logits_paged(&ids, &mut cache));
+            cache
+        })
+        .collect()
+}
+
+/// One timed rep of `STEPS` compiled decode iterations; returns seconds.
+fn decode_rep(model: &BertLike, step: &CompiledDecodeStep) -> f64 {
+    let mut caches = fresh_caches(model);
+    let t0 = Instant::now();
+    for t in 0..STEPS {
+        let tokens: Vec<i64> = (0..BATCH).map(|r| ((r * 7 + t * 3) % VOCAB) as i64).collect();
+        let mut refs: Vec<&mut PagedKvCache> = caches.iter_mut().collect();
+        let logits = no_grad(|| step.step(model, &tokens, &mut refs))
+            .expect("compiled step")
+            .expect("bench batch size has a bucket");
+        std::hint::black_box(&logits);
+    }
+    t0.elapsed().as_secs_f64()
+}
+
+/// Best-of-`REPS` nanoseconds per decode iteration at the current obs
+/// switch setting.
+fn best_iter_ns(model: &BertLike, step: &CompiledDecodeStep) -> f64 {
+    let mut best = f64::INFINITY;
+    for _ in 0..REPS {
+        best = best.min(decode_rep(model, step));
+        // keep the rings bounded between enabled-mode reps
+        flashlight::obs::reset();
+    }
+    best * 1e9 / STEPS as f64
+}
+
+/// Nanoseconds per `span()` call at the current switch setting.
+fn span_ns() -> f64 {
+    let t0 = Instant::now();
+    for _ in 0..MICRO_CALLS {
+        let s = flashlight::obs::span("obs.bench.checkpoint");
+        std::hint::black_box(&s);
+    }
+    let ns = t0.elapsed().as_secs_f64() * 1e9 / MICRO_CALLS as f64;
+    flashlight::obs::reset();
+    ns
+}
+
+fn main() {
+    flashlight::util::rng::seed(42);
+    let model = BertLike::new(VOCAB, 64, 4, 2, PREFILL + STEPS + 8);
+    let step = CompiledDecodeStep::compile(&model, &[BATCH]).expect("decode bucket compiles");
+
+    // ---- serve-decode A/B: recording off vs on -----------------------------
+    flashlight::obs::set_enabled(false);
+    let disabled_ns = best_iter_ns(&model, &step);
+    flashlight::obs::set_enabled(true);
+    let enabled_ns = best_iter_ns(&model, &step);
+    flashlight::obs::set_enabled(false);
+    let overhead_frac = (enabled_ns - disabled_ns) / disabled_ns;
+
+    // ---- checkpoint microbench ---------------------------------------------
+    let disabled_span_ns = span_ns();
+    flashlight::obs::set_enabled(true);
+    let enabled_span_ns = span_ns();
+    flashlight::obs::set_enabled(false);
+    // the deterministic guard value: what SPAN_SITES_PER_ITER disabled
+    // checkpoints cost relative to one whole decode iteration
+    let computed_disabled_overhead_frac = disabled_span_ns * SPAN_SITES_PER_ITER / disabled_ns;
+
+    let mut records = Vec::new();
+    let mut row = BenchRecord::new("obs_decode_iter_disabled", disabled_ns, "cpu");
+    row.extras.push(("batch", BATCH as f64));
+    row.extras.push(("steps", STEPS as f64));
+    records.push(row);
+    let mut row = BenchRecord::new("obs_decode_iter_enabled", enabled_ns, "cpu");
+    row.extras.push(("batch", BATCH as f64));
+    row.extras.push(("overhead_frac", overhead_frac));
+    records.push(row);
+    let mut row = BenchRecord::new("obs_disabled_span", disabled_span_ns, "cpu");
+    row.extras.push(("span_sites_per_iter", SPAN_SITES_PER_ITER));
+    row.extras.push(("computed_disabled_overhead_frac", computed_disabled_overhead_frac));
+    records.push(row);
+    let mut row = BenchRecord::new("obs_enabled_span", enabled_span_ns, "cpu");
+    row.extras.push(("spans_per_sec", 1e9 / enabled_span_ns.max(1e-9)));
+    records.push(row);
+    write_bench_json("BENCH_PR10.json", &records);
+
+    println!(
+        "decode iter: disabled {:.1}us, enabled {:.1}us ({:+.2}% observed)",
+        disabled_ns / 1e3,
+        enabled_ns / 1e3,
+        overhead_frac * 100.0
+    );
+    println!(
+        "checkpoint: disabled {disabled_span_ns:.2}ns/span, enabled {enabled_span_ns:.1}ns/span; \
+         computed disabled overhead {:.4}% of an iteration (CI bound: 1%)",
+        computed_disabled_overhead_frac * 100.0
+    );
+}

@@ -171,6 +171,8 @@ pub fn compile_step_fn(
     // thread's open capture either. The data-parallel trainer additionally
     // brackets compilation with ring barriers to quiesce its replicas.
     let _trace_lock = crate::tensor::graph::trace_lock();
+    let mut step_span = crate::obs::span("compile_step");
+    step_span.attr_i64("params", n as i64);
 
     // pre-trace allocations on the *untraced* backend: these enter the
     // trace as external constants, i.e. substitutable per-step inputs
@@ -263,8 +265,14 @@ pub fn compile_step_fn(
         let which = which.to_string();
         move |e: Error| Error::msg(format!("compile_step: {which} program: {e}"))
     };
-    let full = compile(&trace_prog, &full_outputs, &opts).map_err(in_program("forward+loss"))?;
-    let bwd = compile(&trace_prog, &bwd_outputs, &opts).map_err(in_program("backward"))?;
+    let full = {
+        let _s = crate::obs::span("compile_step.forward_loss");
+        compile(&trace_prog, &full_outputs, &opts).map_err(in_program("forward+loss"))?
+    };
+    let bwd = {
+        let _s = crate::obs::span("compile_step.backward");
+        compile(&trace_prog, &bwd_outputs, &opts).map_err(in_program("backward"))?
+    };
 
     // ---- trace 2: the optimizer update alone (data-parallel split) ------
     let tb2 = TraceBackend::over(default_backend());
@@ -307,8 +315,10 @@ pub fn compile_step_fn(
         (tracer.program(), slots, upd_outputs)
     };
     let upd_opts = CompileOptions { frozen_consts: upd_slots.frozen(), ..Default::default() };
-    let upd =
-        compile(&upd_prog, &upd_outputs, &upd_opts).map_err(in_program("optimizer update"))?;
+    let upd = {
+        let _s = crate::obs::span("compile_step.update");
+        compile(&upd_prog, &upd_outputs, &upd_opts).map_err(in_program("optimizer update"))?
+    };
 
     Ok(CompiledTrainStep {
         rule,

@@ -36,6 +36,7 @@ pub mod memory;
 pub mod meter;
 pub mod models;
 pub mod nn;
+pub mod obs;
 pub mod optim;
 pub mod pkg;
 pub mod runtime;

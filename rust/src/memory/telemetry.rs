@@ -141,6 +141,14 @@ impl MemoryManagerAdapter for TelemetryMemoryManager {
                 id,
                 op: current_op(),
             });
+            // bridge allocator events onto the unified trace timeline
+            crate::obs::instant(
+                "mem.alloc",
+                &[
+                    ("bytes", crate::obs::AttrValue::I64(bytes as i64)),
+                    ("op", crate::obs::AttrValue::Str(current_op())),
+                ],
+            );
         }
         Ok(block)
     }
@@ -154,6 +162,13 @@ impl MemoryManagerAdapter for TelemetryMemoryManager {
                     id,
                     op: current_op(),
                 });
+                crate::obs::instant(
+                    "mem.free",
+                    &[
+                        ("id", crate::obs::AttrValue::I64(id as i64)),
+                        ("op", crate::obs::AttrValue::Str(current_op())),
+                    ],
+                );
             }
         }
         self.inner.unlock(block);

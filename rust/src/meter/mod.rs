@@ -475,6 +475,50 @@ mod tests {
     }
 
     #[test]
+    fn percentile_meter_reset_restores_the_seed() {
+        // reset() must restart the reservoir RNG, not just clear the
+        // samples: the same stream replayed after a reset has to report
+        // bit-identical quantiles, or latency dashboards drift per window
+        let stream = |m: &mut PercentileMeter| {
+            for i in 0..5_000 {
+                m.add((i * 13 % 997) as f64);
+            }
+            (m.p50(), m.p95(), m.p99())
+        };
+        let mut m = PercentileMeter::with_capacity(32);
+        let first = stream(&mut m);
+        m.reset();
+        assert_eq!(m.count(), 0, "reset empties the reservoir");
+        let replayed = stream(&mut m);
+        assert_eq!(first, replayed, "replayed stream after reset must match bit-for-bit");
+    }
+
+    #[test]
+    fn peak_meter_sub_saturates() {
+        let mut m = PeakValueMeter::new();
+        m.add(10);
+        m.sub(25); // over-release must clamp at zero, not wrap
+        assert_eq!(m.current(), 0);
+        assert_eq!(m.peak(), 10, "peak survives the over-release");
+        m.add(3);
+        assert_eq!(m.current(), 3, "the meter keeps working after saturating");
+        assert_eq!(m.peak(), 10);
+    }
+
+    #[test]
+    fn time_weighted_meter_zero_duration_stream() {
+        // a stream of only zero-length segments closes no time: the mean
+        // must stay at its empty-meter value, never divide by zero
+        let mut m = TimeWeightedMeter::new();
+        for level in [5.0, 2.0, 9.0] {
+            m.observe(level, 0.0);
+        }
+        assert_eq!(m.seconds(), 0.0);
+        assert_eq!(m.mean(), 0.0, "no closed time, no mean");
+        assert_eq!(m.peak(), 9.0, "peak still tracks instantaneous levels");
+    }
+
+    #[test]
     fn frame_error_counts() {
         let mut m = FrameErrorMeter::new();
         m.add(

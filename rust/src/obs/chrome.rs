@@ -1,0 +1,276 @@
+//! Chrome trace-event JSON export — open the output in Perfetto
+//! (<https://ui.perfetto.dev>) or `chrome://tracing`.
+//!
+//! Mapping (hand-rolled JSON; the crate is dependency-free):
+//!
+//! - [`SpanKind::Complete`] spans → complete events (`ph: "X"`) with
+//!   `ts`/`dur` in fractional microseconds, one track per obs thread id;
+//! - [`SpanKind::Instant`] marks → thread-scoped instant events
+//!   (`ph: "i"`, `s: "t"`) — allocator events land here;
+//! - request timelines ([`RequestTrace`]) → nested *async* events
+//!   (`ph: "b"`/`"e"`, `cat: "serve.request"`, `id` = request id): one
+//!   enclosing `request` pair from submission to retire, with each
+//!   timed timeline event as a nested pair and zero-duration events
+//!   (`retire`) as async instants (`ph: "n"`). Async events get their
+//!   own tracks in the viewer, so a request's life is readable even
+//!   though its iterations ran interleaved on the scheduler thread;
+//! - span attributes and timeline context (batch / bucket / compiled /
+//!   tokens) → `args`, visible on click.
+//!
+//! Export **drains** the recorder (rings and finished timelines), so a
+//! capture window is: enable → run → export. The drop counter is
+//! reported as `args.dropped` on the metadata event when non-zero —
+//! truncated captures identify themselves.
+
+use std::fmt::Write as _;
+
+use crate::util::error::Result;
+
+use super::span::{
+    dropped_spans, take_request_traces, take_spans, AttrValue, RequestTrace, SpanEvent, SpanKind,
+    TimelineEvent,
+};
+
+const PID: u64 = 1;
+
+fn escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => {
+                let _ = write!(out, "\\u{:04x}", c as u32);
+            }
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+fn us(ns: u64) -> f64 {
+    ns as f64 / 1_000.0
+}
+
+fn num(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v}")
+    } else {
+        "null".to_string()
+    }
+}
+
+fn attr_args(attrs: &[(&'static str, AttrValue)]) -> String {
+    let mut out = String::from("{");
+    for (i, (k, v)) in attrs.iter().enumerate() {
+        if i > 0 {
+            out.push_str(", ");
+        }
+        let _ = write!(out, "\"{}\": ", escape(k));
+        match v {
+            AttrValue::I64(n) => {
+                let _ = write!(out, "{n}");
+            }
+            AttrValue::F64(f) => out.push_str(&num(*f)),
+            AttrValue::Str(s) => {
+                let _ = write!(out, "\"{}\"", escape(s));
+            }
+        }
+    }
+    out.push('}');
+    out
+}
+
+fn push_span(out: &mut String, ev: &SpanEvent) {
+    match ev.kind {
+        SpanKind::Complete => {
+            let _ = write!(
+                out,
+                "{{\"name\": \"{}\", \"ph\": \"X\", \"ts\": {}, \"dur\": {}, \
+                 \"pid\": {PID}, \"tid\": {}, \"args\": {}}}",
+                escape(ev.name),
+                num(us(ev.start_ns)),
+                num(us(ev.dur_ns)),
+                ev.tid,
+                attr_args(&ev.attrs)
+            );
+        }
+        SpanKind::Instant => {
+            let _ = write!(
+                out,
+                "{{\"name\": \"{}\", \"ph\": \"i\", \"s\": \"t\", \"ts\": {}, \
+                 \"pid\": {PID}, \"tid\": {}, \"args\": {}}}",
+                escape(ev.name),
+                num(us(ev.start_ns)),
+                ev.tid,
+                attr_args(&ev.attrs)
+            );
+        }
+    }
+}
+
+fn timeline_args(ev: &TimelineEvent) -> String {
+    format!(
+        "{{\"batch\": {}, \"bucket\": {}, \"compiled\": {}, \"tokens\": {}}}",
+        ev.batch, ev.bucket, ev.compiled, ev.tokens
+    )
+}
+
+fn push_async(out: &mut String, trace: &RequestTrace, sep: &str) {
+    let id = trace.id;
+    let end_ns = trace
+        .events
+        .iter()
+        .map(|e| e.start_ns + e.dur_ns)
+        .max()
+        .unwrap_or(trace.submitted_ns);
+    let _ = write!(
+        out,
+        "{sep}{{\"name\": \"request\", \"cat\": \"serve.request\", \"ph\": \"b\", \
+         \"id\": {id}, \"ts\": {}, \"pid\": {PID}, \"tid\": 0}}",
+        num(us(trace.submitted_ns))
+    );
+    for ev in &trace.events {
+        if ev.dur_ns == 0 {
+            let _ = write!(
+                out,
+                "{sep}{{\"name\": \"{}\", \"cat\": \"serve.request\", \"ph\": \"n\", \
+                 \"id\": {id}, \"ts\": {}, \"pid\": {PID}, \"tid\": 0, \"args\": {}}}",
+                escape(ev.what),
+                num(us(ev.start_ns)),
+                timeline_args(ev)
+            );
+        } else {
+            let _ = write!(
+                out,
+                "{sep}{{\"name\": \"{}\", \"cat\": \"serve.request\", \"ph\": \"b\", \
+                 \"id\": {id}, \"ts\": {}, \"pid\": {PID}, \"tid\": 0, \"args\": {}}}",
+                escape(ev.what),
+                num(us(ev.start_ns)),
+                timeline_args(ev)
+            );
+            let _ = write!(
+                out,
+                "{sep}{{\"name\": \"{}\", \"cat\": \"serve.request\", \"ph\": \"e\", \
+                 \"id\": {id}, \"ts\": {}, \"pid\": {PID}, \"tid\": 0}}",
+                escape(ev.what),
+                num(us(ev.start_ns + ev.dur_ns))
+            );
+        }
+    }
+    let _ = write!(
+        out,
+        "{sep}{{\"name\": \"request\", \"cat\": \"serve.request\", \"ph\": \"e\", \
+         \"id\": {id}, \"ts\": {}, \"pid\": {PID}, \"tid\": 0}}",
+        num(us(end_ns))
+    );
+}
+
+/// Drain everything recorded so far (spans from every thread's ring plus
+/// finished request timelines) and render it as Chrome trace-event JSON.
+pub fn chrome_trace_json() -> String {
+    let spans = take_spans();
+    let traces = take_request_traces();
+    let dropped = dropped_spans();
+    let mut out = String::from("{\"traceEvents\": [\n");
+    let _ = write!(
+        out,
+        "{{\"name\": \"process_name\", \"ph\": \"M\", \"pid\": {PID}, \"tid\": 0, \
+         \"args\": {{\"name\": \"flashlight\", \"dropped\": {dropped}}}}}"
+    );
+    for ev in &spans {
+        out.push_str(",\n");
+        push_span(&mut out, ev);
+    }
+    for trace in &traces {
+        push_async(&mut out, trace, ",\n");
+    }
+    out.push_str("\n]}\n");
+    out
+}
+
+/// [`chrome_trace_json`] to a file. Load it via Perfetto's "Open trace
+/// file" or `chrome://tracing`.
+pub fn export_chrome_trace(path: impl AsRef<std::path::Path>) -> Result<()> {
+    std::fs::write(path, chrome_trace_json())?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::{instant, set_enabled, span, test_guard};
+
+    /// A structural JSON check with no serde in the tree: balanced
+    /// braces/brackets outside strings, and no trailing comma before a
+    /// closer.
+    fn assert_valid_jsonish(s: &str) {
+        let mut depth: i64 = 0;
+        let mut in_str = false;
+        let mut esc = false;
+        let mut last_significant = ' ';
+        for c in s.chars() {
+            if in_str {
+                if esc {
+                    esc = false;
+                } else if c == '\\' {
+                    esc = true;
+                } else if c == '"' {
+                    in_str = false;
+                }
+                continue;
+            }
+            match c {
+                '"' => in_str = true,
+                '{' | '[' => depth += 1,
+                '}' | ']' => {
+                    assert_ne!(last_significant, ',', "trailing comma before closer");
+                    depth -= 1;
+                    assert!(depth >= 0, "unbalanced closers");
+                }
+                _ => {}
+            }
+            if !c.is_whitespace() {
+                last_significant = c;
+            }
+        }
+        assert!(!in_str, "unterminated string");
+        assert_eq!(depth, 0, "unbalanced braces");
+    }
+
+    #[test]
+    fn export_covers_spans_instants_and_async_timelines() {
+        let _serial = test_guard();
+        let was = crate::obs::enabled();
+        set_enabled(true);
+        crate::obs::reset();
+        {
+            let mut s = span("obs.test.chrome.span");
+            s.attr_i64("n", 3);
+            s.attr_str("mode", "a\"b"); // exercises escaping
+        }
+        instant("obs.test.chrome.mark", &[("bytes", AttrValue::I64(128))]);
+        let mut t = crate::obs::RequestTrace::start().unwrap();
+        t.admitted();
+        let t0 = crate::obs::now_ns();
+        t.push("decode_iter", t0, 2, 4, true, 0);
+        t.push("sample", t0, 2, 4, true, 1);
+        let _report_copy = crate::obs::RequestTrace::finish(t);
+
+        let json = chrome_trace_json();
+        assert_valid_jsonish(&json);
+        assert!(json.contains("\"name\": \"obs.test.chrome.span\", \"ph\": \"X\""));
+        assert!(json.contains("a\\\"b"));
+        assert!(json.contains("\"name\": \"obs.test.chrome.mark\", \"ph\": \"i\""));
+        assert!(json.contains("\"cat\": \"serve.request\", \"ph\": \"b\""));
+        assert!(json.contains("\"name\": \"decode_iter\""));
+        assert!(json.contains("\"compiled\": true"));
+        // export drained the recorder
+        assert!(!chrome_trace_json().contains("obs.test.chrome.span"));
+        crate::obs::reset();
+        set_enabled(was);
+    }
+}

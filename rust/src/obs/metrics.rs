@@ -1,0 +1,359 @@
+//! The process-wide metrics registry: typed, named instruments with
+//! atomics on the hot path and one snapshot call for everything.
+//!
+//! Naming convention: dot-separated `<subsystem>.<object>.<measure>`
+//! (`serve.decode.compiled_iterations`, `exec.instrs`,
+//! `serve.pool.leased_pages`, `profile.op.matmul.calls`). Three kinds:
+//!
+//! - [`Counter`] — monotone `u64` (though `set` exists so the existing
+//!   stats structs can publish absolute snapshots of their own
+//!   per-instance counters);
+//! - [`Gauge`] — last-written `f64` (bit-packed in an `AtomicU64`);
+//! - [`Histogram`] — reservoir-sampled distribution backed by
+//!   [`crate::meter::PercentileMeter`], read out as p50/p95/p99.
+//!
+//! Handles are `Arc`-cloneable and cheap to cache; lookup by name takes
+//! the registry lock once, so hot paths should hold a handle (see
+//! `exec_counters`). Unlike spans, *publication* into the registry is
+//! not gated on [`crate::obs::enabled`] — the publishers (`stats()`
+//! methods, bench readouts) are off the hot path, and an always-on
+//! registry is what lets [`metrics_snapshot`] be the single source of
+//! truth for CI guards and benches.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, MutexGuard, OnceLock};
+
+use crate::meter::PercentileMeter;
+
+/// Monotone counter (with an absolute-`set` escape hatch for republished
+/// per-instance stats).
+#[derive(Clone)]
+pub struct Counter(Arc<AtomicU64>);
+
+impl Counter {
+    pub fn inc(&self) {
+        self.0.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Overwrite with an absolute value — for stats structs that already
+    /// count internally and publish snapshots here.
+    pub fn set(&self, n: u64) {
+        self.0.store(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Last-written value, `f64` bits packed into an `AtomicU64`.
+#[derive(Clone)]
+pub struct Gauge(Arc<AtomicU64>);
+
+impl Gauge {
+    pub fn set(&self, v: f64) {
+        self.0.store(v.to_bits(), Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> f64 {
+        f64::from_bits(self.0.load(Ordering::Relaxed))
+    }
+}
+
+/// Reservoir-sampled distribution; `observe` takes one short mutex.
+#[derive(Clone)]
+pub struct Histogram(Arc<Mutex<PercentileMeter>>);
+
+impl Histogram {
+    pub fn observe(&self, v: f64) {
+        lock(&self.0).add(v);
+    }
+
+    pub fn count(&self) -> u64 {
+        lock(&self.0).count()
+    }
+
+    pub fn quantile(&self, q: f64) -> f64 {
+        lock(&self.0).quantile(q)
+    }
+}
+
+#[derive(Clone)]
+enum Metric {
+    Counter(Counter),
+    Gauge(Gauge),
+    Histogram(Histogram),
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MetricKind {
+    Counter,
+    Gauge,
+    Histogram,
+}
+
+/// One registry entry as read out by [`metrics_snapshot`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct MetricSample {
+    pub name: &'static str,
+    pub kind: MetricKind,
+    /// Counter value, gauge value, or histogram observation count.
+    pub value: f64,
+    /// Histogram percentiles (zero for counters/gauges).
+    pub p50: f64,
+    pub p95: f64,
+    pub p99: f64,
+}
+
+fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+fn registry() -> &'static Mutex<HashMap<&'static str, Metric>> {
+    static REGISTRY: OnceLock<Mutex<HashMap<&'static str, Metric>>> = OnceLock::new();
+    REGISTRY.get_or_init(|| Mutex::new(HashMap::new()))
+}
+
+/// Intern `name` only when it is first registered — dynamic names (the
+/// profiler's per-op metrics) leak one short string per unique name,
+/// bounded by the metric-name universe.
+fn intern(name: &str) -> &'static str {
+    Box::leak(name.to_string().into_boxed_str())
+}
+
+macro_rules! get_or_register {
+    ($name:expr, $variant:ident, $make:expr) => {{
+        let mut reg = lock(registry());
+        match reg.get($name) {
+            Some(Metric::$variant(m)) => m.clone(),
+            Some(_) => panic!(
+                "obs: metric `{}` already registered with a different kind",
+                $name
+            ),
+            None => {
+                let m = $make;
+                reg.insert(intern($name), Metric::$variant(m.clone()));
+                m
+            }
+        }
+    }};
+}
+
+/// The counter named `name`, registering it on first use. Panics if the
+/// name is already registered as a different kind (a naming bug worth
+/// failing loudly on).
+pub fn counter(name: &str) -> Counter {
+    get_or_register!(name, Counter, Counter(Arc::new(AtomicU64::new(0))))
+}
+
+/// The gauge named `name`, registering it on first use.
+pub fn gauge(name: &str) -> Gauge {
+    get_or_register!(name, Gauge, Gauge(Arc::new(AtomicU64::new(0.0f64.to_bits()))))
+}
+
+/// The histogram named `name`, registering it on first use.
+pub fn histogram(name: &str) -> Histogram {
+    get_or_register!(name, Histogram, Histogram(Arc::new(Mutex::new(PercentileMeter::new()))))
+}
+
+/// Read out every registered metric, sorted by name — the single source
+/// of truth for counters previously scattered across stats structs.
+pub fn metrics_snapshot() -> Vec<MetricSample> {
+    let reg = lock(registry());
+    let mut out: Vec<MetricSample> = reg
+        .iter()
+        .map(|(name, metric)| match metric {
+            Metric::Counter(c) => MetricSample {
+                name,
+                kind: MetricKind::Counter,
+                value: c.get() as f64,
+                p50: 0.0,
+                p95: 0.0,
+                p99: 0.0,
+            },
+            Metric::Gauge(g) => MetricSample {
+                name,
+                kind: MetricKind::Gauge,
+                value: g.get(),
+                p50: 0.0,
+                p95: 0.0,
+                p99: 0.0,
+            },
+            Metric::Histogram(h) => {
+                let m = lock(&h.0);
+                MetricSample {
+                    name,
+                    kind: MetricKind::Histogram,
+                    value: m.count() as f64,
+                    p50: m.p50(),
+                    p95: m.p95(),
+                    p99: m.p99(),
+                }
+            }
+        })
+        .collect();
+    out.sort_by(|a, b| a.name.cmp(b.name));
+    out
+}
+
+fn fmt_f64(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v}")
+    } else {
+        "null".to_string()
+    }
+}
+
+/// The snapshot as a JSON array (hand-rolled: the crate is
+/// dependency-free), suitable for dashboards and CI guards.
+pub fn metrics_json() -> String {
+    let mut out = String::from("[");
+    for (i, s) in metrics_snapshot().iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        let kind = match s.kind {
+            MetricKind::Counter => "counter",
+            MetricKind::Gauge => "gauge",
+            MetricKind::Histogram => "histogram",
+        };
+        out.push_str(&format!(
+            "\n  {{\"name\": \"{}\", \"kind\": \"{}\", \"value\": {}",
+            s.name,
+            kind,
+            fmt_f64(s.value)
+        ));
+        if s.kind == MetricKind::Histogram {
+            out.push_str(&format!(
+                ", \"p50\": {}, \"p95\": {}, \"p99\": {}",
+                fmt_f64(s.p50),
+                fmt_f64(s.p95),
+                fmt_f64(s.p99)
+            ));
+        }
+        out.push('}');
+    }
+    out.push_str("\n]\n");
+    out
+}
+
+/// The snapshot as aligned human-readable text, one metric per line.
+pub fn metrics_text() -> String {
+    let snapshot = metrics_snapshot();
+    let width = snapshot.iter().map(|s| s.name.len()).max().unwrap_or(0);
+    let mut out = String::new();
+    for s in &snapshot {
+        match s.kind {
+            MetricKind::Counter => {
+                out.push_str(&format!("{:width$}  counter    {}\n", s.name, s.value as u64));
+            }
+            MetricKind::Gauge => {
+                out.push_str(&format!("{:width$}  gauge      {:.3}\n", s.name, s.value));
+            }
+            MetricKind::Histogram => {
+                out.push_str(&format!(
+                    "{:width$}  histogram  n={} p50={:.1} p95={:.1} p99={:.1}\n",
+                    s.name, s.value as u64, s.p50, s.p95, s.p99
+                ));
+            }
+        }
+    }
+    out
+}
+
+/// Drop every registered metric (handles already held keep working but
+/// are orphaned). Test isolation only.
+pub fn reset_metrics() {
+    lock(registry()).clear();
+}
+
+// ---- cached executor counters ----------------------------------------------
+
+/// Handles for the compiled-program executor, cached so the per-run
+/// publication cost is four atomic adds, not four registry lookups.
+pub(super) struct ExecCounters {
+    runs: Counter,
+    instrs: Counter,
+    ops: Counter,
+    donated_bytes: Counter,
+}
+
+impl ExecCounters {
+    pub(super) fn record(&self, instrs: u64, ops: u64, donated_bytes: u64) {
+        self.runs.inc();
+        self.instrs.add(instrs);
+        self.ops.add(ops);
+        self.donated_bytes.add(donated_bytes);
+    }
+}
+
+pub(super) fn exec_counters() -> &'static ExecCounters {
+    static EXEC: OnceLock<ExecCounters> = OnceLock::new();
+    EXEC.get_or_init(|| ExecCounters {
+        runs: counter("exec.runs"),
+        instrs: counter("exec.instrs"),
+        ops: counter("exec.ops"),
+        donated_bytes: counter("exec.donated_bytes"),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Metric names are process-global; tests use unique `obs.test.*`
+    // names and assert only on their own entries.
+
+    #[test]
+    fn instruments_register_once_and_read_back() {
+        let c = counter("obs.test.metrics.counter");
+        c.inc();
+        c.add(4);
+        assert_eq!(counter("obs.test.metrics.counter").get(), 5, "same instrument by name");
+        c.set(2);
+        assert_eq!(c.get(), 2);
+
+        let g = gauge("obs.test.metrics.gauge");
+        g.set(1.5);
+        assert_eq!(gauge("obs.test.metrics.gauge").get(), 1.5);
+
+        let h = histogram("obs.test.metrics.hist");
+        for i in 1..=100 {
+            h.observe(i as f64);
+        }
+        assert_eq!(h.count(), 100);
+        let p50 = h.quantile(0.5);
+        assert!((40.0..=60.0).contains(&p50), "p50 of 1..=100 near the middle, got {p50}");
+    }
+
+    #[test]
+    fn snapshot_is_sorted_and_typed() {
+        counter("obs.test.snap.b").inc();
+        gauge("obs.test.snap.a").set(3.0);
+        histogram("obs.test.snap.c").observe(7.0);
+        let snap = metrics_snapshot();
+        let mine: Vec<&MetricSample> =
+            snap.iter().filter(|s| s.name.starts_with("obs.test.snap.")).collect();
+        assert_eq!(
+            mine.iter().map(|s| s.name).collect::<Vec<_>>(),
+            vec!["obs.test.snap.a", "obs.test.snap.b", "obs.test.snap.c"],
+            "snapshot sorted by name"
+        );
+        assert_eq!(mine[0].kind, MetricKind::Gauge);
+        assert_eq!(mine[0].value, 3.0);
+        assert_eq!(mine[1].kind, MetricKind::Counter);
+        assert_eq!(mine[2].kind, MetricKind::Histogram);
+        assert_eq!(mine[2].value, 1.0, "histogram sample carries its count");
+        assert_eq!(mine[2].p50, 7.0);
+
+        let json = metrics_json();
+        assert!(json.contains("\"name\": \"obs.test.snap.b\", \"kind\": \"counter\""));
+        let text = metrics_text();
+        assert!(text.contains("obs.test.snap.a"));
+    }
+}

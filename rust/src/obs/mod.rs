@@ -1,0 +1,196 @@
+//! Unified observability: structured spans, a process-wide metrics
+//! registry, Chrome-trace export, and per-request serve timelines.
+//!
+//! The paper's thesis is that systems research needs frameworks whose
+//! internals are *inspectable*; this module is the cross-layer
+//! instrumentation substrate that makes the repo's spine — graph
+//! compiler, fused kernels, compiled train steps, continuous batching —
+//! answerable to questions like "where did this request's 40 ms go?".
+//! Three faces, one switch:
+//!
+//! - **Spans** ([`span`], [`SpanGuard`]): RAII-scoped, nestable timed
+//!   regions with `key=value` attributes, recorded into a fixed-capacity
+//!   *per-thread ring* (overflow increments an atomic drop counter —
+//!   truncation is never silent, see [`dropped_spans`]). A process-wide
+//!   collector drains every thread's ring for export.
+//!   [`export_chrome_trace`] writes the whole capture as Chrome
+//!   trace-event JSON, openable in Perfetto / `chrome://tracing`.
+//!   Instrumented out of the box: compiler passes and verify steps,
+//!   [`crate::tensor::graph::FusedPlan`] lowering, compiled-program
+//!   execution with sampled per-instruction timing (every
+//!   [`set_exec_sample_every`]-th run), `compile_step` program builds,
+//!   serve prefill chunks / decode iterations / bucket padding / eager
+//!   fallbacks, and allocator events bridged from
+//!   [`crate::memory::TelemetryMemoryManager`].
+//! - **Metrics** ([`counter`], [`gauge`], [`histogram`]): a global typed
+//!   registry with atomics on the hot path, names like
+//!   `serve.decode.compiled_iterations`. The existing stats structs
+//!   (`ContinuousStats`, `BatcherStats`, `EngineStats`, executor
+//!   aggregates, KV-pool occupancy, the op profiler) publish into it, so
+//!   [`metrics_snapshot`] / [`metrics_json`] / [`metrics_text`] are one
+//!   source of truth instead of five structs.
+//! - **Request timelines** ([`RequestTrace`]): every serve request
+//!   carries admit → backpressure stall → prefill chunks → per-token
+//!   decode steps (batch size, bucket, compiled vs eager) → retire,
+//!   surfaced on [`crate::serve::GenerateReport::timeline`] and exported
+//!   into the same Chrome trace as nested async spans.
+//!
+//! Everything is **disabled by default**. Enable with [`set_enabled`] or
+//! `FL_TRACE=1`; the disabled hot path is a single relaxed atomic load
+//! (`rust/benches/obs_overhead.rs` proves the serve-decode overhead is
+//! under 1%, enforced by CI). Metric registry *publication* (absolute
+//! `set`s inside `stats()` calls) is unconditional — it is off the hot
+//! path — while span/timeline *recording* is gated on the switch.
+
+mod chrome;
+mod metrics;
+mod span;
+
+pub use chrome::{chrome_trace_json, export_chrome_trace};
+pub use metrics::{
+    counter, gauge, histogram, metrics_json, metrics_snapshot, metrics_text, reset_metrics,
+    Counter, Gauge, Histogram, MetricKind, MetricSample,
+};
+pub use span::{
+    dropped_spans, instant, now_ns, reset, span, take_request_traces, take_spans, AttrValue,
+    RequestTrace, SpanEvent, SpanGuard, SpanKind, TimelineEvent,
+};
+
+use std::sync::atomic::{AtomicU64, AtomicU8, Ordering};
+
+const UNINIT: u8 = 0;
+const OFF: u8 = 1;
+const ON: u8 = 2;
+
+/// Tri-state so the first [`enabled`] call can consult `FL_TRACE` without
+/// putting a `Once` (two atomic ops) on the steady-state path.
+static STATE: AtomicU8 = AtomicU8::new(UNINIT);
+
+/// Whether observability recording is on. The steady-state cost of this
+/// call — i.e. the *entire* disabled-mode cost of every instrumentation
+/// point — is one relaxed atomic load.
+#[inline]
+pub fn enabled() -> bool {
+    match STATE.load(Ordering::Relaxed) {
+        ON => true,
+        OFF => false,
+        _ => init_from_env(),
+    }
+}
+
+/// First-call initialization from the environment: `FL_TRACE=1` (or
+/// `true`) enables recording, mirroring `FL_VERIFY`'s convention.
+#[cold]
+fn init_from_env() -> bool {
+    let on = matches!(std::env::var("FL_TRACE").ok().as_deref(), Some("1") | Some("true"));
+    // never clobber a concurrent set_enabled(): only fill in UNINIT
+    let _ = STATE.compare_exchange(
+        UNINIT,
+        if on { ON } else { OFF },
+        Ordering::Relaxed,
+        Ordering::Relaxed,
+    );
+    STATE.load(Ordering::Relaxed) == ON
+}
+
+/// Turn recording on or off at runtime (overrides `FL_TRACE`). Spans and
+/// timelines already recorded are kept; see [`reset`] to clear them.
+pub fn set_enabled(on: bool) {
+    STATE.store(if on { ON } else { OFF }, Ordering::Relaxed);
+}
+
+// ---- sampled per-instruction execution timing ------------------------------
+
+/// Default: time individual instructions on every 16th compiled-program
+/// execution (see [`set_exec_sample_every`]).
+pub const DEFAULT_EXEC_SAMPLE_EVERY: u64 = 16;
+
+static EXEC_SAMPLE_EVERY: AtomicU64 = AtomicU64::new(DEFAULT_EXEC_SAMPLE_EVERY);
+static EXEC_RUNS_SEEN: AtomicU64 = AtomicU64::new(0);
+
+/// Record per-instruction spans on every `n`-th compiled-program run
+/// (`n == 1` samples every run; `n == 0` is clamped to 1). Sampling
+/// bounds the enabled-mode overhead of instruction-level timing.
+pub fn set_exec_sample_every(n: u64) {
+    EXEC_SAMPLE_EVERY.store(n.max(1), Ordering::Relaxed);
+}
+
+/// Should the compiled-program execution starting now time each
+/// instruction? False whenever recording is disabled; otherwise true for
+/// every Nth run process-wide.
+pub fn exec_should_sample() -> bool {
+    if !enabled() {
+        return false;
+    }
+    let n = EXEC_SAMPLE_EVERY.load(Ordering::Relaxed).max(1);
+    EXEC_RUNS_SEEN.fetch_add(1, Ordering::Relaxed) % n == 0
+}
+
+/// Publish one compiled-program execution's aggregates into the metrics
+/// registry (`exec.runs`, `exec.instrs`, `exec.ops`,
+/// `exec.donated_bytes`). Called by the executor only when [`enabled`].
+pub fn record_exec(instrs: u64, ops: u64, donated_bytes: u64) {
+    metrics::exec_counters().record(instrs, ops, donated_bytes);
+}
+
+/// Serialize tests that flip the process-global switch (`cargo test`
+/// runs tests concurrently in one process). Poison-tolerant like every
+/// other lock in the crate.
+#[cfg(test)]
+pub(crate) fn test_guard() -> std::sync::MutexGuard<'static, ()> {
+    static LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+    LOCK.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Tests share one process: each takes the switch lock, snapshots and
+    // restores the switch, and asserts on its *own* spans by name.
+
+    #[test]
+    fn switch_round_trips_and_gates_spans() {
+        let _serial = test_guard();
+        let was = enabled();
+        set_enabled(false);
+        assert!(!enabled());
+        {
+            let _s = span("obs.test.disabled");
+        }
+        assert!(
+            !take_spans().iter().any(|e| e.name == "obs.test.disabled"),
+            "disabled span must not record"
+        );
+        set_enabled(true);
+        assert!(enabled());
+        {
+            let mut s = span("obs.test.enabled");
+            s.attr_i64("k", 7);
+        }
+        let spans = take_spans();
+        let ev = spans
+            .iter()
+            .find(|e| e.name == "obs.test.enabled")
+            .expect("enabled span must record");
+        assert!(ev.attrs.iter().any(|(k, v)| *k == "k" && matches!(v, AttrValue::I64(7))));
+        set_enabled(was);
+    }
+
+    #[test]
+    fn exec_sampling_is_gated_and_clamped() {
+        let _serial = test_guard();
+        let was = enabled();
+        set_enabled(true);
+        // n == 1 (and the n == 0 clamp) fire on every run — deterministic
+        // even though the run counter is process-global
+        set_exec_sample_every(1);
+        assert!((0..16).all(|_| exec_should_sample()));
+        set_exec_sample_every(0);
+        assert!(exec_should_sample(), "n == 0 clamps to sample-every-run");
+        set_exec_sample_every(DEFAULT_EXEC_SAMPLE_EVERY);
+        set_enabled(false);
+        assert!(!exec_should_sample(), "sampling is off while disabled");
+        set_enabled(was);
+    }
+}

@@ -1,0 +1,471 @@
+//! Structured spans: RAII-scoped timed regions recorded into per-thread
+//! rings, plus the per-request serve timeline ([`RequestTrace`]).
+//!
+//! Recording is lock-free-ish by construction: a finished span touches
+//! only its own thread's ring (one uncontended mutex lock — the global
+//! collector takes the same lock only while *draining*). The ring has a
+//! fixed capacity; overflow overwrites the oldest event and bumps a
+//! process-wide atomic drop counter ([`dropped_spans`]), so truncation is
+//! observable rather than silent. Timestamps are nanoseconds since a
+//! process-wide epoch ([`now_ns`]), which is what lets events from many
+//! threads land on one coherent Chrome-trace timeline.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, MutexGuard, OnceLock};
+use std::time::Instant;
+
+/// Finished spans kept per thread before the oldest is overwritten.
+const RING_CAPACITY: usize = 4096;
+/// Finished request timelines kept in the collector before new ones are
+/// counted as dropped instead of published.
+const TRACE_CAPACITY: usize = 4096;
+
+/// Spans overwritten by ring overflow plus request timelines dropped at
+/// the collector cap, process-wide, since the last [`reset`].
+static DROPPED: AtomicU64 = AtomicU64::new(0);
+static NEXT_TID: AtomicU64 = AtomicU64::new(0);
+static NEXT_REQUEST_ID: AtomicU64 = AtomicU64::new(1);
+
+fn epoch() -> Instant {
+    static EPOCH: OnceLock<Instant> = OnceLock::new();
+    *EPOCH.get_or_init(Instant::now)
+}
+
+/// Nanoseconds since the process-wide trace epoch (the first obs call).
+pub fn now_ns() -> u64 {
+    let e = epoch();
+    Instant::now().saturating_duration_since(e).as_nanos() as u64
+}
+
+/// A span attribute value. `Str` is `&'static str` on purpose: recording
+/// must not allocate per-attribute on the hot path.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum AttrValue {
+    I64(i64),
+    F64(f64),
+    Str(&'static str),
+}
+
+/// How a [`SpanEvent`] renders: a timed region or a point-in-time mark.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SpanKind {
+    /// Timed region (`ph: "X"` in Chrome trace-event terms).
+    Complete,
+    /// Zero-duration mark (`ph: "i"`).
+    Instant,
+}
+
+/// One finished span or instant, as drained by [`take_spans`].
+#[derive(Debug, Clone)]
+pub struct SpanEvent {
+    pub name: &'static str,
+    pub kind: SpanKind,
+    /// [`now_ns`] at span entry.
+    pub start_ns: u64,
+    /// Zero for [`SpanKind::Instant`].
+    pub dur_ns: u64,
+    /// Obs-assigned thread id (dense, in thread first-use order).
+    pub tid: u64,
+    pub attrs: Vec<(&'static str, AttrValue)>,
+}
+
+// ---- per-thread rings + process-wide collector -----------------------------
+
+struct Ring {
+    events: Vec<SpanEvent>,
+    /// Index of the oldest event once the ring is full (0 before that).
+    head: usize,
+}
+
+impl Ring {
+    fn push(&mut self, ev: SpanEvent) {
+        if self.events.len() < RING_CAPACITY {
+            self.events.push(ev);
+        } else {
+            self.events[self.head] = ev;
+            self.head = (self.head + 1) % RING_CAPACITY;
+            DROPPED.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    fn drain(&mut self) -> Vec<SpanEvent> {
+        let mut out = std::mem::take(&mut self.events);
+        out.rotate_left(self.head);
+        self.head = 0;
+        out
+    }
+}
+
+struct Collector {
+    /// Every thread's ring, registered on that thread's first recorded
+    /// event. Entries are kept for the process lifetime (bounded by
+    /// thread count) so a thread's spans survive its exit until drained.
+    rings: Mutex<Vec<(u64, Arc<Mutex<Ring>>)>>,
+    traces: Mutex<Vec<RequestTrace>>,
+}
+
+fn collector() -> &'static Collector {
+    static COLLECTOR: OnceLock<Collector> = OnceLock::new();
+    COLLECTOR.get_or_init(|| Collector {
+        rings: Mutex::new(Vec::new()),
+        traces: Mutex::new(Vec::new()),
+    })
+}
+
+fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+struct Local {
+    tid: u64,
+    ring: Arc<Mutex<Ring>>,
+}
+
+thread_local! {
+    static LOCAL: Local = {
+        let ring = Arc::new(Mutex::new(Ring { events: Vec::new(), head: 0 }));
+        let tid = NEXT_TID.fetch_add(1, Ordering::Relaxed);
+        lock(&collector().rings).push((tid, Arc::clone(&ring)));
+        Local { tid, ring }
+    };
+}
+
+fn record(mut ev: SpanEvent) {
+    LOCAL.with(|l| {
+        ev.tid = l.tid;
+        lock(&l.ring).push(ev);
+    });
+}
+
+// ---- the RAII span guard ---------------------------------------------------
+
+struct SpanInner {
+    name: &'static str,
+    start_ns: u64,
+    attrs: Vec<(&'static str, AttrValue)>,
+}
+
+/// RAII guard returned by [`span`]: records one [`SpanKind::Complete`]
+/// event on drop. When obs is disabled at entry the guard is inert (no
+/// clock read, no allocation, nothing recorded on drop).
+pub struct SpanGuard {
+    inner: Option<SpanInner>,
+}
+
+impl SpanGuard {
+    pub fn attr_i64(&mut self, key: &'static str, v: i64) {
+        if let Some(inner) = &mut self.inner {
+            inner.attrs.push((key, AttrValue::I64(v)));
+        }
+    }
+
+    pub fn attr_f64(&mut self, key: &'static str, v: f64) {
+        if let Some(inner) = &mut self.inner {
+            inner.attrs.push((key, AttrValue::F64(v)));
+        }
+    }
+
+    pub fn attr_str(&mut self, key: &'static str, v: &'static str) {
+        if let Some(inner) = &mut self.inner {
+            inner.attrs.push((key, AttrValue::Str(v)));
+        }
+    }
+}
+
+impl Drop for SpanGuard {
+    fn drop(&mut self) {
+        if let Some(inner) = self.inner.take() {
+            let end = now_ns();
+            record(SpanEvent {
+                name: inner.name,
+                kind: SpanKind::Complete,
+                start_ns: inner.start_ns,
+                dur_ns: end.saturating_sub(inner.start_ns),
+                tid: 0,
+                attrs: inner.attrs,
+            });
+        }
+    }
+}
+
+/// Open a timed span closing when the returned guard drops. Nest freely:
+/// overlap on the same thread renders as nesting in the Chrome trace.
+///
+/// ```
+/// let mut s = flashlight::obs::span("compile.pass.cse");
+/// s.attr_i64("instrs", 42);
+/// // … work …
+/// // drop records the span (if obs was enabled at entry)
+/// ```
+#[inline]
+pub fn span(name: &'static str) -> SpanGuard {
+    if !super::enabled() {
+        return SpanGuard { inner: None };
+    }
+    SpanGuard { inner: Some(SpanInner { name, start_ns: now_ns(), attrs: Vec::new() }) }
+}
+
+/// Record a zero-duration mark (e.g. an allocator event). No-op while
+/// disabled.
+#[inline]
+pub fn instant(name: &'static str, attrs: &[(&'static str, AttrValue)]) {
+    if !super::enabled() {
+        return;
+    }
+    record(SpanEvent {
+        name,
+        kind: SpanKind::Instant,
+        start_ns: now_ns(),
+        dur_ns: 0,
+        tid: 0,
+        attrs: attrs.to_vec(),
+    });
+}
+
+/// Drain every thread's ring, returning all finished spans sorted by
+/// start time. Draining resets the rings but not [`dropped_spans`].
+pub fn take_spans() -> Vec<SpanEvent> {
+    let rings = lock(&collector().rings);
+    let mut out = Vec::new();
+    for (_tid, ring) in rings.iter() {
+        out.extend(lock(ring).drain());
+    }
+    out.sort_by_key(|e| e.start_ns);
+    out
+}
+
+/// Spans overwritten by ring overflow (plus request timelines dropped at
+/// the collector cap) since the last [`reset`]. Non-zero means the
+/// capture window was too long for the ring — export more often.
+pub fn dropped_spans() -> u64 {
+    DROPPED.load(Ordering::Relaxed)
+}
+
+/// Drain and discard all recorded spans and request timelines and zero
+/// the drop counter. Useful between capture windows.
+pub fn reset() {
+    let _ = take_spans();
+    lock(&collector().traces).clear();
+    DROPPED.store(0, Ordering::Relaxed);
+}
+
+// ---- per-request serve timelines -------------------------------------------
+
+/// One step of a request's life in the serving stack. `what` is the
+/// event name (`"queued"`, `"backpressure_stall"`, `"prefill_chunk"`,
+/// `"decode_iter"`, `"sample"`, `"retire"`); the remaining fields carry
+/// whichever context that step has (zero otherwise).
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct TimelineEvent {
+    pub what: &'static str,
+    pub start_ns: u64,
+    pub dur_ns: u64,
+    /// Live rows in the decode batch / rows in the prefill pass.
+    pub batch: u32,
+    /// Compiled bucket size the iteration routed to (0 = none/eager).
+    pub bucket: u32,
+    /// Whether the iteration ran a compiled bucket (vs eager fallback).
+    pub compiled: bool,
+    /// Tokens processed by this event (prefill-chunk width, or 1 per
+    /// sampled token).
+    pub tokens: u32,
+}
+
+/// The life of one serve request: admit → backpressure stall → prefill
+/// chunks → per-token decode steps → retire. Carried through the
+/// batchers while obs is enabled, surfaced on
+/// [`crate::serve::GenerateReport::timeline`], and published to the
+/// collector at [`RequestTrace::finish`] for Chrome-trace export as
+/// nested async spans.
+///
+/// The telemetry-balance oracle (pinned by the serve fuzz harness): the
+/// number of `"sample"` events equals the report's generated-token
+/// count. The first sampled token comes from prefill logits (`batch ==
+/// 0`); every later one carries its decode iteration's batch / bucket /
+/// compiled flag.
+#[derive(Debug, Clone, Default)]
+pub struct RequestTrace {
+    /// Process-unique request id (also the Chrome async-span id).
+    pub id: u64,
+    /// [`now_ns`] at submission.
+    pub submitted_ns: u64,
+    pub events: Vec<TimelineEvent>,
+    stall_start_ns: Option<u64>,
+}
+
+impl RequestTrace {
+    /// Begin a timeline for a request submitted now — `None` while obs
+    /// is disabled, so the off path costs one atomic load and the
+    /// batchers' trace fields stay `Option<Box<_>>`-thin.
+    pub fn start() -> Option<Box<RequestTrace>> {
+        if !super::enabled() {
+            return None;
+        }
+        Some(Box::new(RequestTrace {
+            id: NEXT_REQUEST_ID.fetch_add(1, Ordering::Relaxed),
+            submitted_ns: now_ns(),
+            events: Vec::new(),
+            stall_start_ns: None,
+        }))
+    }
+
+    /// The request failed admission (no KV reservation / batch full) and
+    /// is waiting. First call wins; [`RequestTrace::admitted`] closes it.
+    pub fn mark_stalled(&mut self) {
+        if self.stall_start_ns.is_none() {
+            self.stall_start_ns = Some(now_ns());
+        }
+    }
+
+    /// The request was admitted: closes the `"queued"` interval (and the
+    /// `"backpressure_stall"` interval, if any stall was marked).
+    pub fn admitted(&mut self) {
+        let now = now_ns();
+        let queued_end = self.stall_start_ns.unwrap_or(now);
+        self.events.push(TimelineEvent {
+            what: "queued",
+            start_ns: self.submitted_ns,
+            dur_ns: queued_end.saturating_sub(self.submitted_ns),
+            ..Default::default()
+        });
+        if let Some(stall) = self.stall_start_ns.take() {
+            self.events.push(TimelineEvent {
+                what: "backpressure_stall",
+                start_ns: stall,
+                dur_ns: now.saturating_sub(stall),
+                ..Default::default()
+            });
+        }
+    }
+
+    /// Record an event that started at `start_ns` and ends now.
+    pub fn push(
+        &mut self,
+        what: &'static str,
+        start_ns: u64,
+        batch: u32,
+        bucket: u32,
+        compiled: bool,
+        tokens: u32,
+    ) {
+        self.events.push(TimelineEvent {
+            what,
+            start_ns,
+            dur_ns: now_ns().saturating_sub(start_ns),
+            batch,
+            bucket,
+            compiled,
+            tokens,
+        });
+    }
+
+    /// Close the timeline (appends a `"retire"` mark), publish a copy to
+    /// the process-wide collector for Chrome-trace export, and return it
+    /// for the request's `GenerateReport`.
+    pub fn finish(mut this: Box<RequestTrace>) -> RequestTrace {
+        this.events.push(TimelineEvent { what: "retire", start_ns: now_ns(), ..Default::default() });
+        let trace = *this;
+        let mut traces = lock(&collector().traces);
+        if traces.len() < TRACE_CAPACITY {
+            traces.push(trace.clone());
+        } else {
+            DROPPED.fetch_add(1, Ordering::Relaxed);
+        }
+        trace
+    }
+}
+
+/// Drain the finished request timelines published by
+/// [`RequestTrace::finish`], oldest first.
+pub fn take_request_traces() -> Vec<RequestTrace> {
+    std::mem::take(&mut *lock(&collector().traces))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::{set_enabled, test_guard};
+
+    #[test]
+    fn ring_overflow_keeps_newest_and_counts_drops() {
+        let _serial = test_guard();
+        let was = crate::obs::enabled();
+        set_enabled(true);
+        let _ = take_spans();
+        let dropped_before = dropped_spans();
+        for i in 0..(RING_CAPACITY + 8) {
+            instant("obs.test.flood", &[("i", AttrValue::I64(i as i64))]);
+        }
+        let mine: Vec<SpanEvent> =
+            take_spans().into_iter().filter(|e| e.name == "obs.test.flood").collect();
+        assert_eq!(mine.len(), RING_CAPACITY, "ring keeps exactly its capacity");
+        assert!(
+            dropped_spans() - dropped_before >= 8,
+            "overflow must be counted, never silent"
+        );
+        // the survivors are the *newest* events, still in record order
+        let first = match mine[0].attrs[0].1 {
+            AttrValue::I64(v) => v,
+            _ => unreachable!(),
+        };
+        assert_eq!(first, 8, "oldest events are the ones overwritten");
+        let last = match mine[RING_CAPACITY - 1].attrs[0].1 {
+            AttrValue::I64(v) => v,
+            _ => unreachable!(),
+        };
+        assert_eq!(last as usize, RING_CAPACITY + 7);
+        set_enabled(was);
+    }
+
+    #[test]
+    fn spans_nest_and_order_by_start() {
+        let _serial = test_guard();
+        let was = crate::obs::enabled();
+        set_enabled(true);
+        let _ = take_spans();
+        {
+            let _outer = span("obs.test.outer");
+            let _inner = span("obs.test.inner");
+        }
+        let spans: Vec<SpanEvent> =
+            take_spans().into_iter().filter(|e| e.name.starts_with("obs.test.")).collect();
+        assert_eq!(spans.len(), 2);
+        let outer = spans.iter().find(|e| e.name == "obs.test.outer").unwrap();
+        let inner = spans.iter().find(|e| e.name == "obs.test.inner").unwrap();
+        assert!(outer.start_ns <= inner.start_ns, "outer opened first");
+        assert!(
+            outer.start_ns + outer.dur_ns >= inner.start_ns + inner.dur_ns,
+            "inner closed within outer"
+        );
+        assert_eq!(outer.tid, inner.tid, "same thread");
+        set_enabled(was);
+    }
+
+    #[test]
+    fn request_trace_lifecycle_and_sample_balance() {
+        let _serial = test_guard();
+        let was = crate::obs::enabled();
+        set_enabled(false);
+        assert!(RequestTrace::start().is_none(), "disabled: no timeline allocated");
+        set_enabled(true);
+        let _ = take_request_traces();
+        let mut t = RequestTrace::start().expect("enabled: timeline starts");
+        t.mark_stalled();
+        t.mark_stalled(); // idempotent: first stall wins
+        t.admitted();
+        let t0 = now_ns();
+        t.push("prefill_chunk", t0, 1, 0, false, 8);
+        for i in 0..4u32 {
+            t.push("sample", now_ns(), if i == 0 { 0 } else { 2 }, 2, i != 0, 1);
+        }
+        let done = RequestTrace::finish(t);
+        assert_eq!(done.events.iter().filter(|e| e.what == "sample").count(), 4);
+        assert_eq!(done.events.iter().filter(|e| e.what == "queued").count(), 1);
+        assert_eq!(done.events.iter().filter(|e| e.what == "backpressure_stall").count(), 1);
+        assert_eq!(done.events.last().unwrap().what, "retire");
+        let published = take_request_traces();
+        let mine = published.iter().find(|p| p.id == done.id).expect("finish publishes a copy");
+        assert_eq!(mine.events.len(), done.events.len());
+        set_enabled(was);
+    }
+}

@@ -49,6 +49,11 @@ struct Request {
     input: Tensor,
     enqueued: Instant,
     resp: Sender<Result<Tensor>>,
+    /// Per-request timeline (queued → score_batch → retire), allocated
+    /// only while [`crate::obs`] is enabled. Scoring responses are bare
+    /// tensors, so the finished timeline is published to the obs
+    /// collector (Chrome-trace export) rather than returned.
+    trace: Option<Box<crate::obs::RequestTrace>>,
 }
 
 /// The caller's handle to an in-flight request.
@@ -144,7 +149,12 @@ impl Batcher {
             let _ = rtx.send(Err(e));
             return ResponseHandle { rx: rrx };
         }
-        let req = Request { input, enqueued: Instant::now(), resp: rtx };
+        let req = Request {
+            input,
+            enqueued: Instant::now(),
+            resp: rtx,
+            trace: crate::obs::RequestTrace::start(),
+        };
         // send while holding the read lock: cloning the sender out of the
         // lock would keep the channel connected past shutdown's take(),
         // and the workers' drain-then-exit recv loop would never return
@@ -162,19 +172,25 @@ impl Batcher {
         self.submit(input).wait()
     }
 
-    /// Telemetry snapshot.
+    /// Telemetry snapshot. Also publishes the snapshot into the
+    /// process-wide metrics registry ([`crate::obs::metrics_snapshot`])
+    /// under `serve.batcher.*`; with several batchers in one process the
+    /// most recent publisher wins there, while each instance's own
+    /// counters stay authoritative here.
     pub fn stats(&self) -> BatcherStats {
         let m = &self.metrics;
         let lat = m.latency_us.lock().unwrap_or_else(|p| p.into_inner());
         let fill = m.batch_fill.lock().unwrap_or_else(|p| p.into_inner());
-        BatcherStats {
+        let stats = BatcherStats {
             requests: m.requests.load(Ordering::Relaxed),
             batches: m.batches.load(Ordering::Relaxed),
             mean_batch_fill: fill.value(),
             latency_p50_us: lat.p50(),
             latency_p95_us: lat.p95(),
             latency_p99_us: lat.p99(),
-        }
+        };
+        publish_batcher(&stats);
+        stats
     }
 
     /// Graceful shutdown: stop accepting requests, serve everything
@@ -241,39 +257,73 @@ fn worker_loop(
 
 /// Stack the collected requests, run them as one padded batch, and fan
 /// the per-row outputs back to their callers.
-fn serve_batch(session: &InferenceSession, batch: Vec<Request>, metrics: &Metrics) {
-    let inputs: Vec<&Tensor> = batch.iter().map(|r| &r.input).collect();
-    let stacked = Tensor::stack(&inputs, 0);
+fn serve_batch(session: &InferenceSession, mut batch: Vec<Request>, metrics: &Metrics) {
+    let n = batch.len();
+    // batch pickup ends each request's "queued" interval
+    for req in batch.iter_mut() {
+        if let Some(t) = req.trace.as_deref_mut() {
+            t.admitted();
+        }
+    }
+    let run_start_ns = batch.iter().any(|r| r.trace.is_some()).then(crate::obs::now_ns);
+    let stacked = {
+        let inputs: Vec<&Tensor> = batch.iter().map(|r| &r.input).collect();
+        Tensor::stack(&inputs, 0)
+    };
     metrics.batches.fetch_add(1, Ordering::Relaxed);
     metrics
         .batch_fill
         .lock()
         .unwrap_or_else(|p| p.into_inner())
-        .add(batch.len() as f64);
-    match session.run_batch(stacked) {
+        .add(n as f64);
+    let mut batch_span = crate::obs::span("serve.batch");
+    batch_span.attr_i64("batch", n as i64);
+    let result = session.run_batch(stacked);
+    drop(batch_span);
+    match result {
         Ok(out) => {
             let rest: Vec<isize> = out.dims()[1..].iter().map(|&d| d as isize).collect();
-            for (i, req) in batch.iter().enumerate() {
+            for (i, req) in batch.iter_mut().enumerate() {
                 let row = out.narrow(0, i, 1).reshape(&rest);
-                record_done(metrics, req);
+                record_done(metrics, req, n as u32, run_start_ns);
                 let _ = req.resp.send(Ok(row));
             }
         }
         Err(e) => {
             let msg = format!("serve: batch execution failed: {e}");
-            for req in &batch {
-                record_done(metrics, req);
+            for req in batch.iter_mut() {
+                record_done(metrics, req, n as u32, run_start_ns);
                 let _ = req.resp.send(Err(Error::msg(msg.clone())));
             }
         }
     }
 }
 
-fn record_done(metrics: &Metrics, req: &Request) {
+fn record_done(metrics: &Metrics, req: &mut Request, batch: u32, run_start_ns: Option<u64>) {
     metrics.requests.fetch_add(1, Ordering::Relaxed);
     metrics
         .latency_us
         .lock()
         .unwrap_or_else(|p| p.into_inner())
         .add(req.enqueued.elapsed().as_secs_f64() * 1e6);
+    if let Some(mut t) = req.trace.take() {
+        if let Some(s) = run_start_ns {
+            t.push("score_batch", s, batch, 0, false, 0);
+        }
+        // scoring responses are bare tensors with nowhere to carry the
+        // timeline, so finish() publishes it to the collector for export
+        let _ = crate::obs::RequestTrace::finish(t);
+    }
+}
+
+/// Mirror a [`BatcherStats`] snapshot into the process-wide metrics
+/// registry as absolute values.
+fn publish_batcher(s: &BatcherStats) {
+    use crate::obs::{counter, gauge};
+    counter("serve.batcher.requests").set(s.requests);
+    counter("serve.batcher.batches").set(s.batches);
+    gauge("serve.batcher.mean_batch_fill").set(s.mean_batch_fill);
+    gauge("serve.batcher.latency_p50_us").set(s.latency_p50_us);
+    gauge("serve.batcher.latency_p95_us").set(s.latency_p95_us);
+    gauge("serve.batcher.latency_p99_us").set(s.latency_p99_us);
 }

@@ -144,6 +144,9 @@ impl CompiledDecodeStep {
         let backend = quiesced_default_backend();
         let mut buckets = Vec::with_capacity(sizes.len());
         for &b in &sizes {
+            let mut bucket_span = crate::obs::span("serve.decode.compile_bucket");
+            bucket_span.attr_i64("batch", b as i64);
+            bucket_span.attr_i64("segments", (depth + 1) as i64);
             let mut segs = Vec::with_capacity(depth + 1);
             let seg = no_grad(|| {
                 let ex =

@@ -48,7 +48,10 @@ pub struct EngineStats {
     pub batcher: BatcherStats,
     /// Continuous-scheduler counters: goodput, per-request latency
     /// percentiles, occupancy, pool accounting (decode traffic).
-    pub decode: ContinuousStats,
+    /// `None` when the engine was deployed without an LM decoder
+    /// ([`Engine::start`]) — distinct from a decoder that simply saw
+    /// zero traffic, which reports `Some` of an all-zero snapshot.
+    pub decode: Option<ContinuousStats>,
     /// Tokens produced by [`Engine::generate`] calls.
     pub generated_tokens: u64,
     /// Decode goodput (generated tokens per scheduler-busy second).
@@ -136,13 +139,15 @@ impl Engine {
         self.decoder()?.generate(prompt, opts)
     }
 
-    /// Telemetry snapshot.
+    /// Telemetry snapshot. [`EngineStats::decode`] is `None` iff no
+    /// decoder is configured — never conflated with an idle decoder's
+    /// zero counters.
     pub fn stats(&self) -> EngineStats {
-        let decode = self.decoder.as_ref().map(|d| d.stats()).unwrap_or_default();
+        let decode = self.decoder.as_ref().map(|d| d.stats());
         EngineStats {
             batcher: self.batcher.stats(),
-            generated_tokens: decode.generated_tokens,
-            decode_tokens_per_sec: decode.goodput_tps,
+            generated_tokens: decode.as_ref().map_or(0, |d| d.generated_tokens),
+            decode_tokens_per_sec: decode.as_ref().map_or(0.0, |d| d.goodput_tps),
             decode,
         }
     }

@@ -94,6 +94,11 @@ pub struct GenerateReport {
     /// Per-step pre-sampling logits (`[V]` per generated token), only
     /// when [`GenerateOptions::record_logits`] was set; empty otherwise.
     pub step_logits: Vec<Vec<f32>>,
+    /// The request's observability timeline (admit → stalls → prefill
+    /// chunks → per-token decode steps → retire), present when the
+    /// request ran under the continuous scheduler with [`crate::obs`]
+    /// enabled. `None` for solo generation and while obs is disabled.
+    pub timeline: Option<crate::obs::RequestTrace>,
 }
 
 /// Generate `opts.max_new_tokens` continuation tokens for `prompt`.
@@ -166,6 +171,7 @@ pub fn generate(
         tokens_per_sec: if decode_secs > 0.0 { generated as f64 / decode_secs } else { 0.0 },
         tokens,
         step_logits,
+        timeline: None,
     })
 }
 

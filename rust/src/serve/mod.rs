@@ -39,6 +39,16 @@
 //! - [`Engine`] ties them together: per-request latency percentiles
 //!   ([`crate::meter::PercentileMeter`]), goodput and occupancy
 //!   telemetry, and graceful worker shutdown (safe to race submits).
+//!
+//! The whole stack is instrumented through [`crate::obs`]: with
+//! `FL_TRACE=1` (or [`crate::obs::set_enabled`]) every request carries a
+//! [`crate::obs::RequestTrace`] timeline (admit → stalls → prefill
+//! chunks → per-token decode steps → retire, surfaced on
+//! [`GenerateReport::timeline`]), decode iterations and prefill chunks
+//! record spans, and both batchers' `stats()` snapshots publish into the
+//! process-wide metrics registry (`serve.*` names in
+//! [`crate::obs::metrics_snapshot`]). Disabled — the default — the whole
+//! layer costs one relaxed atomic load per checkpoint.
 
 pub mod batcher;
 pub mod decode;

@@ -55,6 +55,8 @@ use crate::tensor::Tensor;
 use crate::util::error::{Error, Result};
 use crate::util::rng::Rng;
 
+use crate::obs::RequestTrace;
+
 use super::decode::CompiledDecodeStep;
 use super::generate::{last_position_logits, sample, GenerateOptions, GenerateReport, Sampling};
 
@@ -158,6 +160,8 @@ struct GenRequest {
     opts: GenerateOptions,
     resp: Sender<Result<GenerateReport>>,
     enqueued: Instant,
+    /// Per-request timeline, allocated only while obs is enabled.
+    trace: Option<Box<RequestTrace>>,
 }
 
 /// The caller's handle to an in-flight generation.
@@ -212,6 +216,7 @@ struct ActiveSeq {
     prefill_secs: f64,
     prefill_chunks: usize,
     decode_started: Instant,
+    trace: Option<Box<RequestTrace>>,
 }
 
 /// An admitted sequence whose prompt is still prefilling, one chunk per
@@ -230,6 +235,7 @@ struct PrefillingSeq {
     /// Prefill seconds summed across the chunks run so far.
     prefill_secs: f64,
     prefill_chunks: usize,
+    trace: Option<Box<RequestTrace>>,
 }
 
 enum Admitted {
@@ -360,6 +366,7 @@ impl ContinuousBatcher {
                 decode_secs: 0.0,
                 tokens_per_sec: 0.0,
                 step_logits: Vec::new(),
+                timeline: None,
             }));
             return handle;
         }
@@ -368,6 +375,7 @@ impl ContinuousBatcher {
             opts: opts.clone(),
             resp: rtx,
             enqueued: Instant::now(),
+            trace: RequestTrace::start(),
         };
         // send while holding the read lock: a sender clone escaping the
         // lock would keep the channel connected after shutdown() took the
@@ -416,7 +424,11 @@ impl ContinuousBatcher {
         Ok(())
     }
 
-    /// Telemetry snapshot.
+    /// Telemetry snapshot. Also publishes the snapshot into the
+    /// process-wide [`crate::obs`] metrics registry (`serve.*` names), so
+    /// `obs::metrics_snapshot()` is one source of truth; with several
+    /// batchers alive the registry holds the most recent publisher's
+    /// values, while each instance's own snapshot stays exact.
     pub fn stats(&self) -> ContinuousStats {
         let m = &self.metrics;
         let lat = m.latency_us.lock().unwrap_or_else(|p| p.into_inner());
@@ -424,7 +436,7 @@ impl ContinuousBatcher {
         let occ = m.occupancy.lock().unwrap_or_else(|p| p.into_inner());
         let generated = m.generated.load(Ordering::Relaxed);
         let busy = m.busy_nanos.load(Ordering::Relaxed) as f64 / 1e9;
-        ContinuousStats {
+        let stats = ContinuousStats {
             submitted: m.submitted.load(Ordering::Relaxed),
             completed: m.completed.load(Ordering::Relaxed),
             generated_tokens: generated,
@@ -445,7 +457,9 @@ impl ContinuousBatcher {
             occupancy_mean: occ.mean(),
             occupancy_peak: occ.peak(),
             pool: self.pool.stats(),
-        }
+        };
+        publish_continuous(&stats);
+        stats
     }
 
     /// The shared KV page pool (its stats expose lease/release ledgers).
@@ -521,8 +535,11 @@ fn scheduler_loop(
                 Admitted::Running(seq) => active.push(*seq),
                 Admitted::Prefilling(seq) => prefilling.push(seq),
                 Admitted::Done => {}
-                Admitted::Wait(req) => {
+                Admitted::Wait(mut req) => {
                     metrics.stalls.fetch_add(1, Ordering::Relaxed);
+                    if let Some(t) = req.trace.as_deref_mut() {
+                        t.mark_stalled();
+                    }
                     if active.is_empty() && prefilling.is_empty() {
                         // every page is free yet the reservation failed —
                         // unreachable when submit() validated capacity,
@@ -548,7 +565,7 @@ fn scheduler_loop(
                 match prefill_chunk_step(model, p, metrics) {
                     Prefilled::Still(p) => still.push(p),
                     Prefilled::Ready(mut seq) => {
-                        step_seq(&mut seq);
+                        step_seq(&mut seq, 0, 0, false);
                         if seq.generated >= seq.max_new {
                             retire(*seq, metrics);
                         } else {
@@ -570,9 +587,25 @@ fn scheduler_loop(
             .unwrap_or_else(|p| p.into_inner())
             .add(active.len() as f64);
         let t0 = Instant::now();
+        // one enabled() check per iteration; the disabled path pays
+        // nothing else (no clock reads, no bucket lookup)
+        let tracing = crate::obs::enabled();
+        let batch = active.len();
+        let bucket: u32 = if tracing {
+            knobs
+                .compiled
+                .as_ref()
+                .and_then(|cs| cs.bucket_sizes().into_iter().find(|&b| b >= batch))
+                .unwrap_or(0) as u32
+        } else {
+            0
+        };
+        let mut iter_span = crate::obs::span("serve.decode.iter");
+        iter_span.attr_i64("batch", batch as i64);
+        iter_span.attr_i64("bucket", bucket as i64);
         let last_tokens: Vec<i64> =
             active.iter().map(|s| *s.tokens.last().expect("nonempty prompt")).collect();
-        let logits = {
+        let (logits, compiled_iter) = {
             let mut caches: Vec<&mut PagedKvCache> =
                 active.iter_mut().map(|s| &mut s.cache).collect();
             // compiled first; any miss (no bucket, a failed step, or
@@ -584,22 +617,24 @@ fn scheduler_loop(
             match compiled_out {
                 Some(t) => {
                     metrics.compiled_iters.fetch_add(1, Ordering::Relaxed);
-                    t
+                    (t, true)
                 }
                 None => {
                     metrics.compile_misses.fetch_add(1, Ordering::Relaxed);
                     let ids = Tensor::from_slice(&last_tokens, [active.len(), 1]);
-                    no_grad(|| model.logits_decode_batch(&ids, &mut caches)).tensor()
+                    (no_grad(|| model.logits_decode_batch(&ids, &mut caches)).tensor(), false)
                 }
             }
         };
+        iter_span.attr_str("mode", if compiled_iter { "compiled" } else { "eager" });
+        drop(iter_span);
         metrics.busy_nanos.fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
         let v = logits.dim(2);
         let flat = logits.to_vec();
         let mut i = 0;
         while i < active.len() {
             active[i].last = flat[i * v..(i + 1) * v].to_vec();
-            step_seq(&mut active[i]);
+            step_seq(&mut active[i], batch as u32, bucket, compiled_iter);
             if active[i].generated >= active[i].max_new {
                 // swap_remove: retirement is O(1) and batch order carries
                 // no meaning (every row is bitwise independent)
@@ -623,13 +658,16 @@ fn scheduler_loop(
 fn admit(
     model: &BertLike,
     pool: &Arc<KvPagePool>,
-    req: GenRequest,
+    mut req: GenRequest,
     metrics: &SchedulerMetrics,
     prefill_chunk: Option<usize>,
 ) -> Admitted {
     let mut cache = PagedKvCache::new(Arc::clone(pool));
     if cache.reserve(req.prompt.len() + req.opts.max_new_tokens).is_err() {
         return Admitted::Wait(req);
+    }
+    if let Some(t) = req.trace.as_deref_mut() {
+        t.admitted();
     }
     metrics.prefills.fetch_add(1, Ordering::Relaxed);
     if let Some(chunk) = prefill_chunk {
@@ -645,16 +683,24 @@ fn admit(
                 enqueued: req.enqueued,
                 prefill_secs: 0.0,
                 prefill_chunks: 0,
+                trace: req.trace,
             }));
         }
     }
     metrics.prefill_chunks.fetch_add(1, Ordering::Relaxed);
+    let start_ns = req.trace.as_ref().map(|_| crate::obs::now_ns());
+    let mut sp = crate::obs::span("serve.prefill_chunk");
+    sp.attr_i64("tokens", req.prompt.len() as i64);
     let t0 = Instant::now();
     let ids = Tensor::from_slice(&req.prompt, [1, req.prompt.len()]);
     let logits = no_grad(|| model.logits_paged(&ids, &mut cache)).tensor();
+    drop(sp);
     let last = last_position_logits(&logits);
     let prefill_secs = t0.elapsed().as_secs_f64();
     metrics.busy_nanos.fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+    if let (Some(t), Some(s)) = (req.trace.as_deref_mut(), start_ns) {
+        t.push("prefill_chunk", s, 1, 0, false, req.prompt.len() as u32);
+    }
     let mut seq = Box::new(ActiveSeq {
         tokens: req.prompt,
         cache,
@@ -670,8 +716,9 @@ fn admit(
         prefill_secs,
         prefill_chunks: 1,
         decode_started: Instant::now(),
+        trace: req.trace,
     });
-    step_seq(&mut seq);
+    step_seq(&mut seq, 0, 0, false);
     if seq.generated >= seq.max_new {
         retire(*seq, metrics);
         Admitted::Done
@@ -694,13 +741,21 @@ fn prefill_chunk_step(
 ) -> Prefilled {
     let take = p.chunk.min(p.prompt.len() - p.filled);
     metrics.prefill_chunks.fetch_add(1, Ordering::Relaxed);
+    let start_ns = p.trace.as_ref().map(|_| crate::obs::now_ns());
+    let mut sp = crate::obs::span("serve.prefill_chunk");
+    sp.attr_i64("tokens", take as i64);
+    sp.attr_i64("filled", p.filled as i64);
     let t0 = Instant::now();
     let ids = Tensor::from_slice(&p.prompt[p.filled..p.filled + take], [1, take]);
     let logits = no_grad(|| model.logits_paged(&ids, &mut p.cache)).tensor();
+    drop(sp);
     p.prefill_secs += t0.elapsed().as_secs_f64();
     metrics.busy_nanos.fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
     p.prefill_chunks += 1;
     p.filled += take;
+    if let (Some(t), Some(s)) = (p.trace.as_deref_mut(), start_ns) {
+        t.push("prefill_chunk", s, 1, 0, false, take as u32);
+    }
     if p.filled < p.prompt.len() {
         return Prefilled::Still(p);
     }
@@ -720,18 +775,27 @@ fn prefill_chunk_step(
         prefill_secs: p.prefill_secs,
         prefill_chunks: p.prefill_chunks,
         decode_started: Instant::now(),
+        trace: p.trace,
     }))
 }
 
 /// Sample the next token from `seq.last` — the same `sample()` a solo
-/// decode runs, on the request's own RNG stream.
-fn step_seq(seq: &mut ActiveSeq) {
+/// decode runs, on the request's own RNG stream. The timeline records
+/// one `"sample"` event per generated token (the telemetry-balance
+/// oracle): `batch == 0` marks the first token, drawn from prefill
+/// logits rather than a decode iteration; later tokens carry their
+/// iteration's batch / bucket / compiled context.
+fn step_seq(seq: &mut ActiveSeq, batch: u32, bucket: u32, compiled: bool) {
     if seq.record {
         seq.step_logits.push(seq.last.clone());
     }
     let next = sample(&seq.last, &seq.sampling, &mut seq.rng);
     seq.tokens.push(next);
     seq.generated += 1;
+    if let Some(t) = seq.trace.as_deref_mut() {
+        let now = crate::obs::now_ns();
+        t.push("sample", now, batch, bucket, compiled, 1);
+    }
 }
 
 /// Finish a sequence: build its report, answer the caller, account the
@@ -745,6 +809,9 @@ fn retire(seq: ActiveSeq, metrics: &SchedulerMetrics) {
         .lock()
         .unwrap_or_else(|p| p.into_inner())
         .add(seq.enqueued.elapsed().as_secs_f64() * 1e6);
+    // finish() publishes a copy to the collector for Chrome export; the
+    // original rides on the report
+    let timeline = seq.trace.map(RequestTrace::finish);
     let report = GenerateReport {
         generated: seq.generated,
         prefill_secs: seq.prefill_secs,
@@ -753,8 +820,37 @@ fn retire(seq: ActiveSeq, metrics: &SchedulerMetrics) {
         tokens_per_sec: if decode_secs > 0.0 { seq.generated as f64 / decode_secs } else { 0.0 },
         tokens: seq.tokens,
         step_logits: seq.step_logits,
+        timeline,
     };
     let _ = seq.resp.send(Ok(report));
+}
+
+/// Publish a [`ContinuousStats`] snapshot into the obs metrics registry.
+/// Counters are absolute `set`s (the scheduler already counts
+/// per-instance); gauges carry the derived rates and pool occupancy.
+fn publish_continuous(s: &ContinuousStats) {
+    use crate::obs::{counter, gauge};
+    counter("serve.requests.submitted").set(s.submitted);
+    counter("serve.requests.completed").set(s.completed);
+    counter("serve.decode.iterations").set(s.iterations);
+    counter("serve.decode.compiled_iterations").set(s.compiled_iterations);
+    counter("serve.decode.compile_misses").set(s.compile_misses);
+    counter("serve.decode.generated_tokens").set(s.generated_tokens);
+    counter("serve.decode.compiles").set(s.decode_compiles);
+    counter("serve.prefill.count").set(s.prefills);
+    counter("serve.prefill.chunks").set(s.prefill_chunks);
+    counter("serve.prefill.chunked_admissions").set(s.chunked_admissions);
+    counter("serve.backpressure_stalls").set(s.backpressure_stalls);
+    gauge("serve.decode.goodput_tps").set(s.goodput_tps);
+    gauge("serve.decode.mean_iteration_batch").set(s.mean_iteration_batch);
+    gauge("serve.decode.busy_secs").set(s.busy_secs);
+    gauge("serve.latency_p50_us").set(s.latency_p50_us);
+    gauge("serve.latency_p95_us").set(s.latency_p95_us);
+    gauge("serve.latency_p99_us").set(s.latency_p99_us);
+    gauge("serve.occupancy_mean").set(s.occupancy_mean);
+    gauge("serve.occupancy_peak").set(s.occupancy_peak);
+    gauge("serve.pool.leased_pages").set(s.pool.leased_pages as f64);
+    gauge("serve.pool.peak_leased_pages").set(s.pool.peak_leased_pages as f64);
 }
 
 fn set_occupancy(metrics: &SchedulerMetrics, level: f64) {

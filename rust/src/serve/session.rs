@@ -71,6 +71,8 @@ impl InferenceSession {
         let mut buckets = Vec::with_capacity(sizes.len());
         let mut out_rest: Option<Vec<usize>> = None;
         for &b in &sizes {
+            let mut bucket_span = crate::obs::span("serve.session.compile_bucket");
+            bucket_span.attr_i64("batch", b as i64);
             let mut dims = vec![b];
             dims.extend_from_slice(example_dims);
             let example = Tensor::full(dims, 0.0, dtype);
@@ -200,6 +202,10 @@ impl InferenceSession {
         })?;
         let (bucket, program) = &self.buckets[idx];
         let bucket = *bucket;
+        let mut run_span = crate::obs::span("serve.session.run_batch");
+        run_span.attr_i64("n", n as i64);
+        run_span.attr_i64("bucket", bucket as i64);
+        run_span.attr_i64("pad_rows", (bucket - n) as i64);
         let padded = if bucket > n {
             let mut pad_dims = vec![bucket - n];
             pad_dims.extend_from_slice(&self.example_dims);

@@ -180,6 +180,8 @@ impl FusedKernel {
                 in_shapes.len()
             )));
         }
+        let mut s = crate::obs::span("fuse.lower");
+        s.attr_i64("steps", self.steps.len() as i64);
         let plan = Arc::new(FusedPlan::build(&self.steps, in_shapes)?);
         *plan_lock(&self.plan) = Some(plan);
         Ok(())
@@ -193,6 +195,10 @@ impl FusedKernel {
                 return Ok(p.clone());
             }
         }
+        // a cache miss at execution time is a re-lowering worth seeing
+        let mut s = crate::obs::span("fuse.lower");
+        s.attr_i64("steps", self.steps.len() as i64);
+        s.attr_str("when", "execute");
         let plan = Arc::new(FusedPlan::build(&self.steps, in_shapes)?);
         *plan_lock(&self.plan) = Some(plan.clone());
         Ok(plan)

@@ -443,6 +443,17 @@ impl CompiledProgram {
         donate: &[usize],
         instrument: bool,
     ) -> Result<(Vec<Tensor>, ExecStats)> {
+        // per-instruction timing is sampled (every Nth run process-wide)
+        // so instruction-level visibility doesn't tax every execution
+        let sample = crate::obs::exec_should_sample();
+        let _run_span = if sample {
+            let mut s = crate::obs::span("exec.run");
+            s.attr_i64("instrs", self.instrs.len() as i64);
+            s.attr_i64("ops", self.primitive_op_count() as i64);
+            Some(s)
+        } else {
+            None
+        };
         let nc = self.consts.len();
         let mut ovr: Vec<Option<Tensor>> = vec![None; nc];
         let mut ovr_bytes: Vec<usize> = vec![0; nc];
@@ -475,6 +486,9 @@ impl CompiledProgram {
         let mut vals: Vec<Option<Tensor>> = vec![None; self.instrs.len()];
         let mut def_bytes: Vec<usize> = vec![0; self.instrs.len()];
         for (j, instr) in self.instrs.iter().enumerate() {
+            // sampled per-instruction spans, attributed via the PR 7
+            // provenance the executor already carries (index + op name)
+            let mut instr_span = if sample { Some(crate::obs::span(instr.name())) } else { None };
             let out = {
                 // executor failures carry provenance: instruction index,
                 // op name, and the pass pipeline that produced the
@@ -515,6 +529,10 @@ impl CompiledProgram {
                     }
                 }
             };
+            if let Some(mut s) = instr_span.take() {
+                s.attr_i64("instr", j as i64);
+                s.attr_i64("out_bytes", (out.numel() * out.dtype().size_of()) as i64);
+            }
             let bytes = out.numel() * out.dtype().size_of();
             def_bytes[j] = bytes;
             live.add(bytes);
@@ -552,6 +570,13 @@ impl CompiledProgram {
         }
         stats.planned_peak_bytes = live.peak();
         stats.naive_peak_bytes = naive_bytes;
+        if crate::obs::enabled() {
+            crate::obs::record_exec(
+                stats.executed_instrs as u64,
+                stats.executed_ops as u64,
+                stats.donated_bytes as u64,
+            );
+        }
         let outs: Vec<Tensor> = self
             .outputs
             .iter()
@@ -589,42 +614,61 @@ pub fn compile(
     outputs: &[ValueRef],
     opts: &CompileOptions,
 ) -> Result<CompiledProgram> {
+    let mut outer = crate::obs::span("compile");
     let mut g = Graph::from_program(program, outputs)?;
+    outer.attr_i64("nodes", g.nodes.len() as i64);
     // fail-closed trace boundary: snapshot the invariants every pass must
     // preserve, rejecting source programs that fail signature validation
     let spec = verify::source_spec(&g).map_err(|d| verify::to_error(&d))?;
     let paranoid = verify::verify_enabled();
     let check = |g: &Graph, pass: &'static str| -> Result<()> {
+        let mut s = crate::obs::span("compile.verify");
+        s.attr_str("pass", pass);
         verify::verify(g, Some(&spec), pass).map(|_| ()).map_err(|d| verify::to_error(&d))
     };
     let mut report = CompileReport::default();
     if opts.dce {
-        passes::dce(&mut g, &mut report);
+        {
+            let _s = crate::obs::span("compile.pass.dce");
+            passes::dce(&mut g, &mut report);
+        }
         if paranoid {
             check(&g, "dce")?;
         }
     }
     if opts.fold {
-        passes::fold(&mut g, opts, &mut report);
+        {
+            let _s = crate::obs::span("compile.pass.fold");
+            passes::fold(&mut g, opts, &mut report);
+        }
         if paranoid {
             check(&g, "fold")?;
         }
     }
     if opts.cse {
-        passes::cse(&mut g, &mut report);
+        {
+            let _s = crate::obs::span("compile.pass.cse");
+            passes::cse(&mut g, &mut report);
+        }
         if paranoid {
             check(&g, "cse")?;
         }
     }
     if opts.dce && (opts.fold || opts.cse) {
         // fold/cse leave orphaned defs behind; sweep them
-        passes::dce(&mut g, &mut report);
+        {
+            let _s = crate::obs::span("compile.pass.dce");
+            passes::dce(&mut g, &mut report);
+        }
         if paranoid {
             check(&g, "dce(cleanup)")?;
         }
     }
     let (instrs, outputs) = if opts.fuse {
-        fuse::fuse(&g, &mut report)
+        let mut s = crate::obs::span("compile.pass.fuse");
+        let fused = fuse::fuse(&g, &mut report);
+        s.attr_i64("instrs", fused.0.len() as i64);
+        fused
     } else {
         (
             g.nodes
@@ -634,10 +678,16 @@ pub fn compile(
             g.outputs.clone(),
         )
     };
-    let plan = MemoryPlan::build(&instrs, &outputs, g.consts.len());
+    let plan = {
+        let mut s = crate::obs::span("compile.memplan");
+        s.attr_i64("instrs", instrs.len() as i64);
+        MemoryPlan::build(&instrs, &outputs, g.consts.len())
+    };
     let compiled = CompiledProgram { consts: g.consts, instrs, outputs, plan, report };
     if paranoid {
         let pass = if opts.fuse { "fuse+memplan" } else { "lower+memplan" };
+        let mut s = crate::obs::span("compile.verify");
+        s.attr_str("pass", pass);
         verify::verify_program(&compiled, Some(&spec), pass)
             .map_err(|d| verify::to_error(&d))?;
     }

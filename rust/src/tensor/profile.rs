@@ -45,7 +45,12 @@ impl Profiler {
         Self::default()
     }
 
-    /// Per-op aggregates, heaviest (by total time) first.
+    /// Per-op aggregates, heaviest (by total time) first; ties (and NaN
+    /// totals, which sort last) break on op name so the ordering — and
+    /// every report built from it — is deterministic. Each snapshot also
+    /// publishes per-op call counts and total time into the process-wide
+    /// metrics registry (`profile.op.<name>.calls` /
+    /// `profile.op.<name>.total_ns`).
     pub fn snapshot(&self) -> Vec<OpStat> {
         let meters = self.meters.lock().unwrap();
         let mut stats: Vec<OpStat> = meters
@@ -57,7 +62,21 @@ impl Profiler {
                 total_ns: m.value() * m.count() as f64,
             })
             .collect();
-        stats.sort_by(|a, b| b.total_ns.partial_cmp(&a.total_ns).unwrap());
+        stats.sort_by(|a, b| {
+            let key = |s: &OpStat| {
+                // NaN (never produced by the meter, but cheap to rule
+                // out) orders after every finite total
+                if s.total_ns.is_nan() { f64::NEG_INFINITY } else { s.total_ns }
+            };
+            key(b)
+                .partial_cmp(&key(a))
+                .unwrap_or(std::cmp::Ordering::Equal)
+                .then_with(|| a.op.cmp(b.op))
+        });
+        for s in &stats {
+            crate::obs::counter(&format!("profile.op.{}.calls", s.op)).set(s.calls);
+            crate::obs::gauge(&format!("profile.op.{}.total_ns", s.op)).set(s.total_ns);
+        }
         stats
     }
 
@@ -164,6 +183,35 @@ mod tests {
             a.matmul(&a).gelu().to_vec()
         };
         assert_eq!(plain, profiled, "profiling must be observation-only");
+    }
+
+    #[test]
+    fn snapshot_ordering_is_deterministic() {
+        let p = Profiler::new();
+        // three ops with equal totals (one call of 100ns each) plus one
+        // clear winner: ties must break on name, every time. Synthetic op
+        // names keep the registry assertions isolated from other tests'
+        // profiler runs (metric names are process-global).
+        {
+            let mut meters = p.meters.lock().unwrap();
+            for op in ["ztie_mul", "ztie_add", "ztie_sub"] {
+                meters.entry(op).or_default().add(100.0);
+            }
+            meters.entry("ztie_matmul").or_default().add(5000.0);
+        }
+        let order: Vec<&str> = p.snapshot().iter().map(|s| s.op).collect();
+        assert_eq!(
+            order,
+            vec!["ztie_matmul", "ztie_add", "ztie_mul", "ztie_sub"],
+            "total desc, then name asc"
+        );
+        for _ in 0..10 {
+            let again: Vec<&str> = p.snapshot().iter().map(|s| s.op).collect();
+            assert_eq!(again, order, "snapshot ordering must be stable across calls");
+        }
+        // the snapshot published per-op counts into the metrics registry
+        assert_eq!(crate::obs::counter("profile.op.ztie_matmul.calls").get(), 1);
+        assert_eq!(crate::obs::gauge("profile.op.ztie_matmul.total_ns").get(), 5000.0);
     }
 
     #[test]

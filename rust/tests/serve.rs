@@ -459,11 +459,12 @@ fn engine_generate_matches_solo_and_reports_decode_stats() {
         assert_report_matches_solo(&model, &prompt, &opts, &served, "engine");
     }
     let stats = engine.stats();
-    assert_eq!(stats.decode.completed, 3);
+    let decode = stats.decode.expect("LM engines always have a decoder");
+    assert_eq!(decode.completed, 3);
     assert_eq!(stats.generated_tokens, 18);
     assert!(stats.decode_tokens_per_sec > 0.0);
-    assert!(stats.decode.latency_p99_us >= stats.decode.latency_p50_us);
-    assert_eq!(stats.decode.pool.leased_pages, 0);
+    assert!(decode.latency_p99_us >= decode.latency_p50_us);
+    assert_eq!(decode.pool.leased_pages, 0);
     engine.shutdown();
     // generation requests after shutdown fail cleanly instead of hanging
     assert!(engine.generate(&prompt, &opts).is_err());

@@ -306,6 +306,25 @@ fn check_parity(
             ctx("logit parity", format!("request {k} step {step}: served {a:?}, solo {b:?}"))
         );
     }
+    // telemetry-balance oracle: whenever the request carried an obs
+    // timeline (FL_TRACE=1 / the tracing fuzz test below), it must hold
+    // exactly one "sample" event per generated token and end in "retire"
+    if let Some(tl) = &served.timeline {
+        let samples = tl.events.iter().filter(|e| e.what == "sample").count();
+        assert!(
+            samples == served.generated,
+            "{}",
+            ctx(
+                "timeline ledger",
+                format!("request {k}: {samples} sample events vs {} generated", served.generated)
+            )
+        );
+        assert!(
+            tl.events.last().map(|e| e.what) == Some("retire"),
+            "{}",
+            ctx("timeline retire", format!("request {k}: last event {:?}", tl.events.last()))
+        );
+    }
 }
 
 /// The headline run: randomized schedules, every report bit-identical to
@@ -315,4 +334,17 @@ fn continuous_schedules_are_bit_identical_to_solo_decode() {
     let cases = env_usize("SERVE_FUZZ_CASES", 25);
     let pinned = env_seed();
     run_fuzz(cases, pinned.unwrap_or(0x0DCA_11ED), pinned.is_some());
+}
+
+/// Tracing mode: with the obs layer recording (as under `FL_TRACE=1`),
+/// every schedule must stay bit-identical to solo decode — observation
+/// may never perturb the bits — and every report now carries a timeline
+/// whose `"sample"` events balance the generated-token count
+/// (`check_parity` asserts the ledger whenever a timeline is present).
+#[test]
+fn tracing_preserves_parity_and_balances_timelines() {
+    let was = flashlight::obs::enabled();
+    flashlight::obs::set_enabled(true);
+    run_fuzz(env_usize("SERVE_FUZZ_TRACE_CASES", 5), 0x7AC3_11ED, false);
+    flashlight::obs::set_enabled(was);
 }
